@@ -1,0 +1,131 @@
+//! END-TO-END VALIDATION (DESIGN.md §7): the full FQ-Conv system on a
+//! real small workload, proving all layers compose.
+//!
+//! 1. synthesize a keyword-spotting dataset (audio -> MFCC front end),
+//! 2. run the paper's Table-4 gradual-quantization ladder
+//!    FP -> Q66 -> Q45 -> Q35 -> Q24 -> FQ24 with distillation, driving
+//!    the AOT-compiled JAX train steps through PJRT and logging the
+//!    loss/accuracy curve per stage,
+//! 3. hand the final ternary network to the native integer engine and
+//!    verify integer-vs-XLA agreement,
+//! 4. push it through the analog crossbar simulator at a Table-7 noise
+//!    point,
+//! 5. serve it through the router + dynamic batcher and report
+//!    latency/throughput.
+//!
+//! Results are recorded in EXPERIMENTS.md. Run (about 10-15 minutes with
+//! the default budget; set FQCONV_E2E_STEPS to shrink):
+//!     cargo run --release --example kws_end_to_end
+
+use fqconv::analog::{CrossbarKws, NoiseConfig};
+use fqconv::coordinator::{checkpoint, ParamSet, Pipeline, Schedule};
+use fqconv::data::{self, Dataset as _};
+use fqconv::infer::FqKwsNet;
+use fqconv::runtime::{Engine, Manifest};
+use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server};
+use fqconv::util::{Rng, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let total = Timer::start();
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let info = manifest.model("kws")?;
+    let frames = info.input_shape[1];
+
+    // --- 1+2. dataset + gradual quantization ladder -----------------------
+    let steps: usize = std::env::var("FQCONV_E2E_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
+    pipe.verbose = true;
+    pipe.eval_batches = 8;
+    let ckpt_dir = dir.join("ckpts");
+    pipe.ckpt_dir = Some(ckpt_dir.clone());
+    let mut sched = Schedule::table4_kws(steps, 0.01);
+    for st in sched.stages.iter_mut() {
+        if st.wbits == 2 && !st.fq {
+            st.steps = steps * 2; // ternary stage gets a longer budget
+        }
+        if st.fq {
+            st.steps = steps / 2; // FQ fine-tune (paper: short, low lr)
+        }
+    }
+    println!("{}", sched.render());
+    let report = pipe.run(&sched)?;
+    println!("\n=== Table-4-style ladder results ===\n{}", report.render_table());
+
+    // --- 3. integer engine hand-off ---------------------------------------
+    let fq_graph = info.fq.clone().expect("kws fq graph");
+    let ck = checkpoint::read(&ckpt_dir.join("kws_FQ24.ckpt"))?;
+    let params = ParamSet::from_checkpoint(&fq_graph, &ck)?;
+    let net = std::sync::Arc::new(FqKwsNet::from_params(&params, 1.0, 7.0, frames)?);
+    println!(
+        "integer engine: {} ternary layers, {:.2}M int-MACs/sample, mean weight sparsity {:.1}%",
+        net.layers.len(),
+        net.macs_per_sample() as f64 / 1e6,
+        net.layers.iter().map(|l| l.sparsity()).sum::<f64>() / net.layers.len() as f64 * 100.0
+    );
+    // integer accuracy over the validation set
+    let mut correct = 0;
+    let n_eval = 256;
+    let mut scratch = fqconv::infer::pipeline::Scratch::default();
+    for i in 0..n_eval {
+        let (x, y) = ds.sample(i as u64 % data::VAL_SIZE, None);
+        let logits = net.forward(&x, &mut scratch);
+        let pred =
+            logits.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap();
+        if pred as i32 == y {
+            correct += 1;
+        }
+    }
+    let int_acc = correct as f64 / n_eval as f64;
+    println!("integer-engine validation top-1: {:.2}%", int_acc * 100.0);
+
+    // --- 4. analog crossbar at a Table-7 noise point ------------------------
+    let xbar = CrossbarKws::new(&params, 1.0, 7.0, frames)?;
+    for noise in [
+        NoiseConfig::default(),
+        NoiseConfig { sigma_w: 10.0, sigma_a: 10.0, sigma_mac: 50.0 },
+    ] {
+        let acc = xbar.evaluate_noisy(ds.as_ref(), 128, noise, 3, 7);
+        println!("analog sim @ {:<26}: top-1 {:.2}%", noise.label(), acc * 100.0);
+    }
+
+    // --- 5. serving ---------------------------------------------------------
+    let workers = 2;
+    let factories = (0..workers)
+        .map(|_| ready(NativeBackend::new(net.clone(), info.input_shape.clone())))
+        .collect();
+    let server = Server::start_with(
+        factories,
+        info.input_shape.iter().product(),
+        BatchPolicy::new(16, 2000),
+    );
+    let n_req = 512;
+    let mut rng = Rng::new(99);
+    let t = Timer::start();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| {
+            let (x, _) = ds.sample(i as u64 % data::VAL_SIZE, Some(&mut rng));
+            server.submit(x)
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let dt = t.elapsed_s();
+    let stats = server.stats();
+    println!(
+        "\nserving: {n_req} requests in {dt:.3}s = {:.0} req/s, mean batch {:.1}",
+        n_req as f64 / dt,
+        stats.mean_batch
+    );
+    println!("latency: {}", stats.latency_summary);
+    server.shutdown();
+
+    println!("\nkws_end_to_end complete in {:.1}s", total.elapsed_s());
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Quickstart: the smallest useful tour of the fqconv API.
+//!
+//! 1. load the artifact manifest + PJRT engine,
+//! 2. train the KWS network full-precision for a handful of steps,
+//! 3. quantize it to ternary weights / 4-bit activations in one stage,
+//! 4. hand off to the fully-quantized form (§3.4) and run the native
+//!    integer engine on a validation sample.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once beforehand).
+
+use fqconv::coordinator::pipeline::calibrate_weight_scales;
+use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
+use fqconv::data::{self, Dataset};
+use fqconv::infer::{pipeline::Scratch, FqKwsNet};
+use fqconv::runtime::{hp, Engine, Manifest};
+use fqconv::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. runtime ------------------------------------------------------
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let info = manifest.model("kws")?;
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+
+    // --- 2. a few full-precision steps ------------------------------------
+    let mut trainer = Trainer::new(&engine, &manifest, "kws", Variant::Qat(""))?;
+    trainer.load_params(&checkpoint::read(&dir.join(&info.init_ckpt))?)?;
+    let mut rng = Rng::new(42);
+    let mut hpv = hp::defaults();
+    hpv[hp::LR] = 0.01;
+    println!("\n[fp] training 40 steps...");
+    for step in 0..40 {
+        let batch = ds.train_batch(info.batch, &mut rng);
+        hpv[hp::SEED] = step as f32;
+        let stats = trainer.step(&batch, None, &hpv)?;
+        if step % 10 == 0 {
+            println!("  step {step:>3}: loss={:.4} batch-acc={:.2}", stats.loss, stats.acc);
+        }
+    }
+
+    // --- 3. quantize: ternary weights, 4-bit activations ------------------
+    // bitwidth is a *runtime input* of the same artifact — no recompile.
+    // Snap the weight log-scales to the trained weight distribution first
+    // (TWN-style; without this a ternary grid centred on e^0=1 rounds the
+    // ~0.1-magnitude weights to zero — see EXPERIMENTS.md §Perf #3):
+    calibrate_weight_scales(&mut trainer.params, 1.0);
+    hpv[hp::NW] = 1.0; // 2-bit: n = 2^(2-1)-1 = 1 (ternary)
+    hpv[hp::NA] = 7.0; // 4-bit: n = 7
+    hpv[hp::LR] = 0.005;
+    println!("\n[q24] quantization-aware training, 40 steps...");
+    for step in 0..40 {
+        let batch = ds.train_batch(info.batch, &mut rng);
+        hpv[hp::SEED] = 100.0 + step as f32;
+        trainer.step(&batch, None, &hpv)?;
+    }
+    let mut eval_hp = hpv;
+    eval_hp[hp::LR] = 0.0;
+    let acc = trainer.evaluate(ds.as_ref(), &eval_hp, 4)?;
+    println!("  Q24 validation top-1: {:.2}%", acc * 100.0);
+
+    // --- 4. fully quantized deployment (§3.4) ------------------------------
+    let fq_graph = info.fq.clone().expect("kws has FQ graphs");
+    let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &trainer.params)?;
+    let net = FqKwsNet::from_params(&fq_params, 1.0, 7.0, info.input_shape[1])?;
+    println!(
+        "\n[deploy] integer engine: {} layers, all ternary: {}, {:.2}M int-MACs/sample",
+        net.layers.len(),
+        net.layers.iter().all(|l| l.is_ternary()),
+        net.macs_per_sample() as f64 / 1e6
+    );
+    let mut scratch = Scratch::default();
+    let mut correct = 0;
+    for id in 0..64u64 {
+        let (x, label) = ds.sample(id, None);
+        let logits = net.forward(&x, &mut scratch);
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred as i32 == label {
+            correct += 1;
+        }
+    }
+    println!("  integer-engine top-1 on 64 val samples: {:.1}%", correct as f64 / 64.0 * 100.0);
+    println!("  (the §3.4 hand-off expects an FQ fine-tune stage to recover the");
+    println!("   dropped BN shift — examples/kws_end_to_end.rs runs the full ladder)");
+    println!("\nquickstart OK — see examples/kws_end_to_end.rs for the full pipeline");
+    Ok(())
+}

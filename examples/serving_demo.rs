@@ -1,0 +1,102 @@
+//! Serving demo: the router + dynamic batcher under an open-loop load,
+//! comparing the native integer backend with the XLA deployment
+//! artifact backend, across batching policies.
+//!
+//! Run: `cargo run --release --example serving_demo`
+
+use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
+use fqconv::data::{self, Dataset};
+use fqconv::infer::FqKwsNet;
+use fqconv::runtime::{hp, Engine, Manifest};
+use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server, XlaBackend};
+use fqconv::util::{Rng, Timer};
+
+fn drive(server: &Server, ds: &dyn Dataset, n: usize, pace_us: u64) -> (f64, f64, f64) {
+    let mut rng = Rng::new(5);
+    let t = Timer::start();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let (x, _) = ds.sample(i as u64 % data::VAL_SIZE, Some(&mut rng));
+        rxs.push(server.submit(x));
+        if pace_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(pace_us));
+        }
+    }
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let dt = t.elapsed_s();
+    let stats = server.stats();
+    (n as f64 / dt, stats.p50_us, stats.p99_us)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu()?;
+    let info = manifest.model("kws")?;
+    let frames = info.input_shape[1];
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+
+    // deployment parameters (trained ckpt if present, else transformed init)
+    let fq_graph = info.fq.clone().expect("fq graph");
+    let ckpt = dir.join("ckpts/kws_FQ24.ckpt");
+    let params = if ckpt.exists() {
+        fqconv::coordinator::ParamSet::from_checkpoint(&fq_graph, &checkpoint::read(&ckpt)?)?
+    } else {
+        let mut src = Trainer::new(&engine, &manifest, "kws", Variant::Qat(""))?;
+        src.load_params(&checkpoint::read(&dir.join(&info.init_ckpt))?)?;
+        fq_transform::qat_to_fq(info, &fq_graph, &src.params)?
+    };
+    let net = std::sync::Arc::new(FqKwsNet::from_params(&params, 1.0, 7.0, frames)?);
+    let numel: usize = info.input_shape.iter().product();
+    let n_req = 384;
+
+    println!("== native integer backend: batching-policy sweep ==");
+    println!(
+        "{:<26} {:>10} {:>10} {:>10}",
+        "policy", "req/s", "p50(us)", "p99(us)"
+    );
+    for (mb, wait) in [(1, 0u64), (8, 1000), (16, 2000), (32, 4000)] {
+        let factories = (0..2)
+            .map(|_| ready(NativeBackend::new(net.clone(), info.input_shape.clone())))
+            .collect();
+        let server = Server::start_with(factories, numel, BatchPolicy::new(mb, wait.max(1)));
+        let (rps, p50, p99) = drive(&server, ds.as_ref(), n_req, 50);
+        println!(
+            "{:<26} {:>10.0} {:>10.0} {:>10.0}",
+            format!("max_batch={mb} wait={wait}us"),
+            rps,
+            p50,
+            p99
+        );
+        server.shutdown();
+    }
+
+    println!("\n== XLA deployment-artifact backend (fixed batch 32, Pallas kernel) ==");
+    let host_params: Vec<(Vec<usize>, Vec<f32>)> = params
+        .specs
+        .iter()
+        .zip(&params.values)
+        .map(|(s, v)| (s.shape.clone(), v.data().to_vec()))
+        .collect();
+    let mut hpv = hp::defaults();
+    hpv[hp::NW] = 1.0;
+    hpv[hp::NA] = 7.0;
+    let artifact = info.artifact_path(&dir, "fq_fwd")?;
+    let factories = vec![XlaBackend::factory(
+        artifact,
+        host_params,
+        hpv,
+        info.batch,
+        info.num_classes,
+        info.input_shape.clone(),
+    )];
+    let server = Server::start_with(factories, numel, BatchPolicy::new(info.batch, 3000));
+    let (rps, p50, p99) = drive(&server, ds.as_ref(), n_req, 50);
+    println!("req/s {rps:.0}   p50 {p50:.0}us   p99 {p99:.0}us");
+    server.shutdown();
+
+    println!("\nserving_demo complete");
+    Ok(())
+}

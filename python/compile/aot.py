@@ -1,0 +1,253 @@
+"""AOT pipeline: lower every train/forward graph to HLO text + manifest.
+
+Run once at build time (`make artifacts`); the Rust coordinator then
+loads ``artifacts/*.hlo.txt`` through PJRT and never touches Python.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts per model (each with runtime `hp` scalars, so ONE artifact
+serves the whole gradual-quantization ladder):
+    <m>_train          QAT train step (BN+ReLU network, Fig. 4A)
+    <m>_fwd            QAT eval forward (also the distillation teacher)
+    <m>_fq_train       FQ fine-tune step (BN-free, Fig. 4B; Table-7 noise)
+    <m>_fq_fwd         FQ eval forward
+    kws_fq_fwd additionally routes through the Pallas fused kernel — the
+    deployment artifact the serving layer runs.
+Baselines (Table 2): resnet8s/<dorefa|pact>_train+fwd under the identical
+harness.
+
+Also writes:
+    artifacts/<m>_init.ckpt   initial parameters (FQCK1)
+    artifacts/manifest.json   I/O signatures, spec lists, fq transform
+                              rules, param/MAC accounting
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ckpt as ckptlib
+from . import train as trainlib
+from .layers import HP, HP_LEN, init_params
+from .models import MODELS, ModelRecord
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(int(d) for d in shape), dtype)
+
+
+def _spec_list_json(specs):
+    return [{"name": s.name, "shape": list(s.shape)} for s in specs]
+
+
+# ---------------------------------------------------------------------------
+# Analytic MAC accounting (Table 5 / manifest)
+# ---------------------------------------------------------------------------
+
+
+def macs_for_model(rec: ModelRecord) -> int:
+    from .models import darknet as dk
+    from .models import kws as kwsm
+
+    if rec.kind == "kws":
+        cfg = rec.cfg
+        total, t = 0, cfg.frames
+        total += cfg.embed * cfg.n_mfcc * t  # 1x1 embedding
+        cin = cfg.embed
+        for d in kwsm.DILATIONS:
+            t -= 2 * d
+            total += cfg.filters * cin * 3 * t
+            cin = cfg.filters
+        total += cfg.filters * cfg.num_classes
+        return total
+    if rec.kind == "resnet":
+        cfg = rec.cfg
+        hw = cfg.image_hw
+        total = cfg.widths[0] * 3 * 9 * hw * hw
+        cin = cfg.widths[0]
+        for si, w in enumerate(cfg.widths):
+            for bi in range(cfg.n):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                hw_out = hw // stride
+                total += w * cin * 9 * hw_out * hw_out  # c1
+                total += w * w * 9 * hw_out * hw_out  # c2
+                if stride != 1 or cin != w:
+                    total += w * cin * 1 * hw_out * hw_out  # 1x1 down
+                cin, hw = w, hw_out
+        total += cfg.widths[-1] * cfg.num_classes
+        return total
+    if rec.kind == "darknet":
+        hw = rec.cfg.image_hw
+        total = 0
+        for entry in dk.LAYERS:
+            if entry == "pool":
+                hw //= 2
+                continue
+            _, cin, cout, k = entry
+            total += cout * cin * k * k * hw * hw
+        total += 128 * rec.cfg.num_classes
+        return total
+    raise ValueError(rec.kind)
+
+
+def weight_param_count(specs) -> int:
+    """Paper-style parameter count: conv/dense kernels + biases only."""
+    return int(
+        sum(
+            int(np.prod(s.shape))
+            for s in specs
+            if s.name.endswith(".w") or s.name.endswith(".b")
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_train(rec: ModelRecord, flavor: str, fq: bool, out_path: str):
+    step, tspecs, sspecs, n_opt = trainlib.make_train_step(rec, flavor, fq)
+    opt_shapes = trainlib.opt_init_shapes(rec, tspecs)
+    b = rec.batch
+    args = (
+        [_sds(s.shape) for s in tspecs]
+        + [_sds(s.shape) for s in sspecs]
+        + [_sds(shape) for shape in opt_shapes]
+        + [
+            _sds((b,) + rec.input_shape),
+            _sds((b,), jnp.int32),
+            _sds((b, rec.num_classes)),
+            _sds((HP_LEN,)),
+        ]
+    )
+    lowered = jax.jit(step).lower(*args)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return tspecs, sspecs, opt_shapes
+
+
+def lower_forward(rec: ModelRecord, flavor: str, fq: bool, deploy: bool, out_path: str):
+    fwd, tspecs, sspecs = trainlib.make_forward(rec, flavor, fq, deploy)
+    b = rec.batch
+    args = (
+        [_sds(s.shape) for s in tspecs]
+        + [_sds(s.shape) for s in sspecs]
+        + [_sds((b,) + rec.input_shape), _sds((HP_LEN,))]
+    )
+    lowered = jax.jit(fwd).lower(*args)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return tspecs, sspecs
+
+
+def build_model(rec: ModelRecord, outdir: str, skip_lowering: bool = False) -> dict:
+    entry = {
+        "kind": rec.kind,
+        "batch": rec.batch,
+        "input_shape": list(rec.input_shape),
+        "num_classes": rec.num_classes,
+        "opt_kind": rec.opt_kind,
+        "macs_per_sample": macs_for_model(rec),
+        "artifacts": {},
+    }
+
+    # --- QAT graphs -------------------------------------------------------
+    specs = rec.specs()
+    tspecs, sspecs = trainlib.split_specs(specs)
+    opt_shapes = trainlib.opt_init_shapes(rec, tspecs)
+    entry["qat"] = {
+        "trainable": _spec_list_json(tspecs),
+        "state": _spec_list_json(sspecs),
+        "opt": [list(s) for s in opt_shapes],
+        "param_count": weight_param_count(specs),
+    }
+    for flavor in rec.flavors:
+        suffix = "" if flavor == "lq" else f"_{flavor}"
+        tname = f"{rec.name}{suffix}_train.hlo.txt"
+        fname = f"{rec.name}{suffix}_fwd.hlo.txt"
+        if not skip_lowering:
+            print(f"  lowering {tname}", flush=True)
+            lower_train(rec, flavor, False, os.path.join(outdir, tname))
+            print(f"  lowering {fname}", flush=True)
+            lower_forward(rec, flavor, False, False, os.path.join(outdir, fname))
+        entry["artifacts"][f"train{suffix}"] = tname
+        entry["artifacts"][f"fwd{suffix}"] = fname
+
+    # --- FQ graphs (§3.4) -------------------------------------------------
+    if rec.fq_specs is not None:
+        fq_specs = rec.fq_specs()
+        ftspecs, fsspecs = trainlib.split_specs(fq_specs)
+        fq_opt = trainlib.opt_init_shapes(rec, ftspecs)
+        entry["fq"] = {
+            "trainable": _spec_list_json(ftspecs),
+            "state": _spec_list_json(fsspecs),
+            "opt": [list(s) for s in fq_opt],
+            "param_count": weight_param_count(fq_specs),
+        }
+        entry["fq_map"] = rec.fq_map()
+        tname, fname = f"{rec.name}_fq_train.hlo.txt", f"{rec.name}_fq_fwd.hlo.txt"
+        if not skip_lowering:
+            print(f"  lowering {tname}", flush=True)
+            lower_train(rec, "lq", True, os.path.join(outdir, tname))
+            print(f"  lowering {fname}", flush=True)
+            lower_forward(
+                rec, "lq", True, rec.fq_apply_deploy is not None, os.path.join(outdir, fname)
+            )
+        entry["artifacts"]["fq_train"] = tname
+        entry["artifacts"]["fq_fwd"] = fname
+        if rec.fq_apply_deploy is not None:
+            entry["artifacts"]["fq_fwd_deploy_kernel"] = "pallas"
+
+    # --- initial parameters ----------------------------------------------
+    ck = f"{rec.name}_init.ckpt"
+    if not skip_lowering:
+        import zlib
+
+        values = init_params(tspecs + sspecs, seed=zlib.crc32(rec.name.encode()) % (2**31))
+        ckptlib.write_ckpt(
+            os.path.join(outdir, ck), [(s.name, v) for s, v in zip(tspecs + sspecs, values)]
+        )
+    entry["init_ckpt"] = ck
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description="FQ-Conv AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", default="", help="comma-separated subset (default: all)")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    wanted = [m for m in args.models.split(",") if m] or list(MODELS)
+
+    manifest = {"version": 1, "hp_len": HP_LEN, "hp_layout": dict(HP), "models": {}}
+    for name in MODELS:
+        rec = MODELS[name]
+        print(f"[aot] {name}", flush=True)
+        manifest["models"][name] = build_model(rec, outdir, skip_lowering=name not in wanted)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {os.path.join(outdir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""FQCK1 checkpoint format — the interchange for parameters.
+
+Written by aot.py (initial parameters) and by the Rust coordinator
+(training checkpoints); read by both sides. Layout (little-endian):
+
+    magic   : 6 bytes  b"FQCK1\\n"
+    count   : u32      number of tensors
+    per tensor:
+        name_len : u16
+        name     : utf-8 bytes
+        ndim     : u8
+        dims     : u32 * ndim
+        data     : f32 * prod(dims)
+
+Tensor order is significant: it must match the manifest's spec order
+(trainable then state), which is how the coordinator feeds artifacts.
+"""
+
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+MAGIC = b"FQCK1\n"
+
+
+def write_ckpt(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr, dtype=np.float32)
+            shape = arr.shape  # capture BEFORE ascontiguousarray (it promotes 0-d to 1-d)
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", len(shape)))
+            for d in shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_ckpt(path: str) -> List[Tuple[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:6] == MAGIC, "bad FQCK magic"
+    off = 6
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out = []
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + nlen].decode("utf-8")
+        off += nlen
+        (ndim,) = struct.unpack_from("<B", data, off)
+        off += 1
+        dims = struct.unpack_from(f"<{ndim}I", data, off) if ndim else ()
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype="<f4", count=n, offset=off).reshape(dims)
+        off += 4 * n
+        out.append((name, arr.copy()))
+    return out

@@ -1,0 +1,74 @@
+"""FQ-Conv layers as im2col + the fused Pallas GEMM.
+
+The convolution itself is *data movement* (im2col patch extraction), which
+we leave to XLA where it fuses with neighbours; all O(MACs) work lands in
+:func:`compile.kernels.fq_matmul.fq_matmul_pallas`. This mirrors how the
+paper's analog target works: the unrolled patch vector is what the DACs
+drive onto the crossbar rows.
+
+Shapes follow PyTorch conventions (the paper's implementation):
+  conv1d: x (B, C, T),     w (K, C, F),      dilation d, no padding.
+  conv2d: x (B, C, H, W),  w (K, C, FH, FW), stride s, SAME/VALID padding.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .fq_matmul import fq_matmul_pallas
+
+
+def im2col_1d(x, f: int, dilation: int = 1):
+    """(B, C, T) -> (B*T_out, C*F) dilated patch matrix, channel-major."""
+    b, c, t = x.shape
+    t_out = t - dilation * (f - 1)
+    cols = jnp.stack(
+        [lax.slice_in_dim(x, i * dilation, i * dilation + t_out, axis=2) for i in range(f)],
+        axis=3,
+    )  # (B, C, T_out, F)
+    cols = cols.transpose(0, 2, 1, 3)  # (B, T_out, C, F)
+    return cols.reshape(b * t_out, c * f), t_out
+
+
+def fq_conv1d_pallas(x, w, scales, ba: float, bo: float, dilation: int = 1, quantize_out: bool = True):
+    """Fully quantized dilated 1-D convolution (the KWS network's layer).
+
+    Args:
+      x: (B, C, T) f32; w: (K, C, F) f32; scales: (6,) as in fq_matmul.
+    Returns (B, K, T_out) on the output quantization grid.
+    """
+    b = x.shape[0]
+    k, c, f = w.shape
+    cols, t_out = im2col_1d(x, f, dilation)
+    wmat = w.reshape(k, c * f).T  # (C*F, K)
+    out = fq_matmul_pallas(cols, wmat, scales, ba, bo, quantize_out)
+    return out.reshape(b, t_out, k).transpose(0, 2, 1)
+
+
+def im2col_2d(x, fh: int, fw: int, stride: int = 1, padding: str = "SAME"):
+    """(B, C, H, W) -> (B*H'*W', C*FH*FW) patch matrix via XLA's patch op."""
+    b = x.shape[0]
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(fh, fw),
+        window_strides=(stride, stride),
+        padding=padding,
+    )  # (B, C*FH*FW, H', W'), feature dim ordered (C, FH, FW)
+    _, cff, ho, wo = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(b * ho * wo, cff)
+    return cols, ho, wo
+
+
+def fq_conv2d_pallas(x, w, scales, ba: float, bo: float, stride: int = 1, padding: str = "SAME", quantize_out: bool = True):
+    """Fully quantized 2-D convolution (ResNet / DarkNet layers).
+
+    Args:
+      x: (B, C, H, W) f32; w: (K, C, FH, FW) f32; scales: (6,).
+    Returns (B, K, H', W') on the output quantization grid.
+    """
+    b = x.shape[0]
+    k, c, fh, fw = w.shape
+    cols, ho, wo = im2col_2d(x, fh, fw, stride, padding)
+    wmat = w.reshape(k, c * fh * fw).T
+    out = fq_matmul_pallas(cols, wmat, scales, ba, bo, quantize_out)
+    return out.reshape(b, ho, wo, k).transpose(0, 3, 1, 2)

@@ -1,0 +1,100 @@
+"""Pallas kernel for the FQ-Conv MAC hot-spot: quantize -> integer matmul ->
+requantize, fused into one VMEM round trip.
+
+This is the paper's Eq. (4) as a kernel:
+
+    w . a = (s^w s^a / n^w n^a) * sum_i w_i^int a_i^int
+
+followed by the next layer's input quantization ("the hardware-supported
+quantization ... puts the integer-valued sum into the correct
+integer-valued quantized bin"). On a digital accelerator the middle sum is
+an i8xi8->i32 systolic pass; on the paper's analog target it is Kirchhoff
+accumulation. Here the integer-valued operands are represented exactly in
+f32 (|codes| <= 127 and K <= a few thousand, so the i32 accumulator fits
+f32's 24-bit mantissa) so the MXU can run it as a bf16/f32 matmul — see
+DESIGN.md §Hardware-Adaptation for the GPU->TPU mapping rationale.
+
+Blocking: grid is (M/BM, N/BN) with the full K dimension resident per
+tile. Our conv-as-GEMM problems have K = C*F (<= ~1.3k across the model
+zoo), so A-tile + W-tile + O-tile fit VMEM comfortably:
+    BM*K + K*BN + BM*BN  f32  =  (128*1344 + 1344*128 + 128*128) * 4B
+                              ≈  1.4 MiB  « 16 MiB VMEM.
+BM = BN = 128 matches the MXU's 128x128 systolic tile.
+
+Correctness oracle: :func:`compile.kernels.ref.fq_matmul_ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _fq_matmul_kernel(ba: float, bo: float, quantize_out: bool):
+    def kernel(a_ref, w_ref, sc_ref, o_ref):
+        sa, sw, so = sc_ref[0], sc_ref[1], sc_ref[2]
+        na, nw, no = sc_ref[3], sc_ref[4], sc_ref[5]
+        # Integer codes (exact in f32): what the accelerator holds.
+        ai = jnp.round(jnp.clip(a_ref[...] / sa, ba, 1.0) * na)
+        wi = jnp.round(jnp.clip(w_ref[...] / sw, -1.0, 1.0) * nw)
+        # The integer MAC — the only O(M*N*K) work in the layer.
+        acc = jnp.dot(ai, wi, preferred_element_type=jnp.float32)
+        # Rescale out of the integer domain (Eq. 4 prefactor)...
+        y = acc * (sa * sw / (na * nw))
+        if quantize_out:
+            # ...and re-bin into the next layer's quantized input grid.
+            # In hardware this is the ADC/LUT; no float scale materializes.
+            o_ref[...] = so * (jnp.round(jnp.clip(y / so, bo, 1.0) * no) / no)
+        else:
+            o_ref[...] = y
+
+    return kernel
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm = pl.cdiv(m, bm) * bm - m
+    pn = pl.cdiv(n, bn) * bn - n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def fq_matmul_pallas(a, w, scales, ba: float, bo: float, quantize_out: bool = True):
+    """Quantized GEMM: Q_out( Q_a(a) @ Q_w(w) ).
+
+    Args:
+      a: (M, K) f32 activations (pre-quantization, real-valued).
+      w: (K, N) f32 weights (the full-precision shadow copy).
+      scales: (6,) f32 — [e^{s_a}, e^{s_w}, e^{s_o}, n_a, n_w, n_o]; all may
+        be traced (bitwidths are runtime inputs of the AOT artifacts).
+      ba: activation clip lower bound (0.0 after a quantized ReLU, -1.0 for
+        signed inputs such as MFCCs or images).
+      bo: output-quantizer lower bound (-1.0 for linear conv outputs, 0.0
+        when the output quantizer doubles as the ReLU — §3.4).
+      quantize_out: False for the final layer feeding global average
+        pooling, which the paper keeps in higher precision.
+
+    Returns (M, N) f32 on the output quantization grid.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    ap = _pad2(a, BM, k)  # pad M only; K stays resident
+    wp = _pad2(w, k, BN)
+    mp, np_ = ap.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _fq_matmul_kernel(ba, bo, quantize_out),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // BM, np_ // BN),
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((6,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        interpret=True,
+    )(ap, wp, scales)
+    return out[:m, :n]

@@ -1,0 +1,79 @@
+"""Pallas kernel for the learned quantizer (FQ-Conv Eqs. 1-2), forward path.
+
+Elementwise, so the TPU mapping is a straight VPU sweep: the input is
+flattened, padded to a multiple of the block, and streamed HBM->VMEM in
+``(BLOCK,)`` tiles. The scale/level scalars ride along as a tiny (4,)
+vector fetched once per tile (on real TPU this would live in SMEM; under
+``interpret=True`` the distinction is moot — see DESIGN.md
+§Hardware-Adaptation).
+
+Correctness oracle: :func:`compile.kernels.ref.learned_quantize_ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VMEM tile per grid step. 8 * 1024 f32 = 32 KiB in, 32 KiB out —
+# far below the ~16 MiB VMEM budget; elementwise kernels are bandwidth
+# bound so bigger tiles only amortize grid overhead.
+BLOCK = 8192
+
+
+def _quantize_kernel(b: float):
+    def kernel(x_ref, sc_ref, o_ref):
+        es = sc_ref[0]  # e^s, the learned scale (already exponentiated)
+        n = sc_ref[1]  # positive level count
+        u = x_ref[...] / es
+        o_ref[...] = es * (jnp.round(jnp.clip(u, b, 1.0) * n) / n)
+
+    return kernel
+
+
+def _quantize_int_kernel(b: float):
+    def kernel(x_ref, sc_ref, o_ref):
+        es = sc_ref[0]
+        n = sc_ref[1]
+        u = x_ref[...] / es
+        o_ref[...] = jnp.round(jnp.clip(u, b, 1.0) * n)
+
+    return kernel
+
+
+def _run_elementwise(kernel, x, es, n):
+    """Flatten/pad x, run the 1-D tiled kernel, restore the shape."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    padded = pl.cdiv(m, BLOCK) * BLOCK
+    flat = jnp.pad(flat, (0, padded - m))
+    sc = jnp.stack([jnp.asarray(es, jnp.float32), jnp.asarray(n, jnp.float32)])
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        grid=(padded // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(flat, sc)
+    return out[:m].reshape(shape)
+
+
+def learned_quantize_pallas(x, es, n, b: float):
+    """Q(x) = es * round(clip(x/es, b, 1) * n) / n as a Pallas kernel.
+
+    Args:
+      x: any-shape f32 tensor.
+      es: positive scale (e^s), scalar (traced ok).
+      n: positive level count, scalar (traced ok).
+      b: clip lower bound, python float constant (-1.0 or 0.0).
+    """
+    return _run_elementwise(_quantize_kernel(b), x, es, n)
+
+
+def quantize_int_pallas(x, es, n, b: float):
+    """Integer codes round(clip(x/es, b, 1) * n) — what the hardware stores."""
+    return _run_elementwise(_quantize_int_kernel(b), x, es, n)

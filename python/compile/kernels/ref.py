@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has an exact reference here, built from the
+module-level quantizer definitions in :mod:`compile.quant`. pytest (and
+hypothesis sweeps) assert allclose between kernel and oracle across
+shapes, bitwidths and bounds — this is the core correctness signal for
+Layer 1.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def learned_quantize_ref(x, es, n, b: float):
+    """Eq. (2) with es = e^s already exponentiated."""
+    return es * (jnp.round(jnp.clip(x / es, b, 1.0) * n) / n)
+
+
+def quantize_int_ref(x, es, n, b: float):
+    """Integer codes round(clip(x/es, b, 1) * n)."""
+    return jnp.round(jnp.clip(x / es, b, 1.0) * n)
+
+
+def fq_matmul_ref(a, w, scales, ba: float, bo: float, quantize_out: bool = True):
+    """Quantize -> integer matmul -> rescale -> requantize, unblocked."""
+    sa, sw, so, na, nw, no = (scales[i] for i in range(6))
+    ai = quantize_int_ref(a, sa, na, ba)
+    wi = quantize_int_ref(w, sw, nw, -1.0)
+    y = (ai @ wi) * (sa * sw / (na * nw))
+    if quantize_out:
+        return learned_quantize_ref(y, so, no, bo)
+    return y
+
+
+def fq_conv1d_ref(x, w, scales, ba: float, bo: float, dilation: int = 1, quantize_out: bool = True):
+    """Dilated valid conv1d through lax.conv + the same quantizers."""
+    sa, sw, so, na, nw, no = (scales[i] for i in range(6))
+    ai = quantize_int_ref(x, sa, na, ba)
+    wi = quantize_int_ref(w, sw, nw, -1.0)
+    y = lax.conv_general_dilated(
+        ai,
+        wi,
+        window_strides=(1,),
+        padding="VALID",
+        rhs_dilation=(dilation,),
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    ) * (sa * sw / (na * nw))
+    if quantize_out:
+        return learned_quantize_ref(y, so, no, bo)
+    return y
+
+
+def fq_conv2d_ref(x, w, scales, ba: float, bo: float, stride: int = 1, padding: str = "SAME", quantize_out: bool = True):
+    """2-D conv through lax.conv + the same quantizers."""
+    sa, sw, so, na, nw, no = (scales[i] for i in range(6))
+    ai = quantize_int_ref(x, sa, na, ba)
+    wi = quantize_int_ref(w, sw, nw, -1.0)
+    y = lax.conv_general_dilated(
+        ai,
+        wi,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ) * (sa * sw / (na * nw))
+    if quantize_out:
+        return learned_quantize_ref(y, so, no, bo)
+    return y

@@ -1,0 +1,345 @@
+"""QAT / FQ layer primitives and the parameter-spec mini-framework.
+
+No flax/haiku in this image, so models declare an explicit ordered list of
+:class:`Spec` entries (name, shape, initializer, trainable?) and apply
+functions receive a name->array dict. The same ordered spec list is
+written to ``artifacts/manifest.json`` so the Rust coordinator can
+allocate, checkpoint and transform parameters without Python.
+
+Two layer flavours, matching the paper's two training phases:
+
+* ``qconv*`` (Fig. 4A): conv with learned-quantized weights, float BN +
+  ReLU, then a learned activation quantizer — the gradual-quantization
+  (QAT) network.
+* ``fqconv*`` (Fig. 4B): the fully quantized layer — quantized input,
+  quantized weights, integer MAC, output quantizer doubling as the
+  nonlinearity (b=0 for ReLU-like, b=-1 for linear/BN-replacement). No BN,
+  no float nonlinearity. Optional Gaussian noise on weight codes,
+  activation codes and MAC results in %-of-LSB units (Table 7).
+
+Bitwidths enter as *traced scalars* (positive level counts ``nw``/``na``)
+so one AOT artifact serves the whole gradual-quantization ladder.
+"""
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .quant import learned_quantize
+
+BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Spec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # 'he' | 'zeros' | 'ones' | 'snorm:<std>' | 'const:<v>'
+    trainable: bool = True
+
+
+def init_value(spec: Spec, rng: np.random.Generator) -> np.ndarray:
+    if spec.init == "he":
+        fan_in = int(np.prod(spec.shape[1:])) if len(spec.shape) > 1 else spec.shape[0]
+        std = float(np.sqrt(2.0 / max(fan_in, 1)))
+        return rng.normal(0.0, std, spec.shape).astype(np.float32)
+    if spec.init == "zeros":
+        return np.zeros(spec.shape, np.float32)
+    if spec.init == "ones":
+        return np.ones(spec.shape, np.float32)
+    if spec.init.startswith("snorm:"):
+        std = float(spec.init.split(":")[1])
+        return rng.normal(0.0, std, spec.shape).astype(np.float32)
+    if spec.init.startswith("const:"):
+        v = float(spec.init.split(":")[1])
+        return np.full(spec.shape, v, np.float32)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs: List[Spec], seed: int) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return [init_value(s, rng) for s in specs]
+
+
+def to_dict(specs: List[Spec], values) -> Dict[str, jnp.ndarray]:
+    assert len(specs) == len(values), (len(specs), len(values))
+    return {s.name: v for s, v in zip(specs, values)}
+
+
+def from_dict(specs: List[Spec], d: Dict[str, jnp.ndarray]):
+    return [d[s.name] for s in specs]
+
+
+# ---------------------------------------------------------------------------
+# Hyper-parameter vector layout (the `hp` runtime input; see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+HP_LEN = 16
+HP = {
+    "lr": 0,
+    "weight_decay": 1,
+    "momentum": 2,
+    "distill_weight": 3,
+    "distill_temp": 4,
+    "nw": 5,  # positive weight levels 2^(nb-1)-1; 0 disables weight quant
+    "na": 6,  # positive activation levels; 0 disables activation quant
+    "sigma_w": 7,  # Table-7 noise, % of one LSB
+    "sigma_a": 8,
+    "sigma_mac": 9,
+    "seed": 10,
+    "bn_momentum": 11,
+}
+
+
+def hp_vec(**kw) -> np.ndarray:
+    v = np.zeros(HP_LEN, np.float32)
+    v[HP["momentum"]] = 0.9
+    v[HP["bn_momentum"]] = 0.1
+    v[HP["distill_temp"]] = 4.0
+    for k, x in kw.items():
+        v[HP[k]] = x
+    return v
+
+
+def maybe_qw(w, s, nw):
+    """Quantize weights when nw > 0, pass through in full-precision stages.
+
+    The `nw == 0` branch keeps the FP0/FP1 ladder stages in the very same
+    artifact (bitwidth is a runtime input).
+    """
+    return jnp.where(nw > 0, learned_quantize(w, s, -1.0, jnp.maximum(nw, 1.0)), w)
+
+
+def maybe_qa(a, s, na, b: float):
+    return jnp.where(na > 0, learned_quantize(a, s, b, jnp.maximum(na, 1.0)), a)
+
+
+# ---------------------------------------------------------------------------
+# Noise (Table 7): Gaussian, sigma in % of one LSB, stop-gradient.
+# ---------------------------------------------------------------------------
+
+
+def lsb_noise(key, x, sigma_pct, lsb):
+    """x + N(0, sigma_pct/100 * lsb).
+
+    The RNG is gated behind `lax.cond` so the clean path (sigma == 0 —
+    every run except Table-7 noise training) skips the threefry kernels
+    entirely. This was §Perf iteration 1: ungated, the FQ train step ran
+    ~30x slower than the QAT step purely from per-layer noise sampling.
+    """
+
+    def noisy(operand):
+        x_, sigma_, lsb_ = operand
+        eps = jax.random.normal(key, x_.shape, x_.dtype)
+        return x_ + lax.stop_gradient(eps * (sigma_ / 100.0) * lsb_)
+
+    def clean(operand):
+        return operand[0]
+
+    return lax.cond(sigma_pct > 0.0, noisy, clean, (x, sigma_pct, lsb))
+
+
+# ---------------------------------------------------------------------------
+# Batch norm (training: batch stats + running update; eval: running stats)
+# ---------------------------------------------------------------------------
+
+
+def batch_norm(x, gamma, beta, rmean, rvar, train: bool, bn_mom, axes):
+    """BN over `axes`; returns (y, new_rmean, new_rvar)."""
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_rmean = (1.0 - bn_mom) * rmean + bn_mom * mean
+        new_rvar = (1.0 - bn_mom) * rvar + bn_mom * var
+    else:
+        mean, var = rmean, rvar
+        new_rmean, new_rvar = rmean, rvar
+    shape = [1] * x.ndim
+    shape[1] = x.shape[1]  # channels-first everywhere
+    xn = (x - mean.reshape(shape)) / jnp.sqrt(var.reshape(shape) + BN_EPS)
+    return gamma.reshape(shape) * xn + beta.reshape(shape), new_rmean, new_rvar
+
+
+# ---------------------------------------------------------------------------
+# Spec builders for the composite blocks
+# ---------------------------------------------------------------------------
+
+
+def conv2d_block_specs(name, cin, cout, k=3, with_bn=True, s_init=0.0):
+    specs = [Spec(f"{name}.w", (cout, cin, k, k), "he")]
+    if with_bn:
+        specs += [
+            Spec(f"{name}.bn.gamma", (cout,), "ones"),
+            Spec(f"{name}.bn.beta", (cout,), "zeros"),
+            Spec(f"{name}.bn.mean", (cout,), "zeros", trainable=False),
+            Spec(f"{name}.bn.var", (cout,), "ones", trainable=False),
+        ]
+    specs += [
+        Spec(f"{name}.sw", (), f"const:{s_init}"),  # weight log-scale
+        Spec(f"{name}.sa", (), f"const:{s_init}"),  # output/activation log-scale
+    ]
+    return specs
+
+
+def conv1d_block_specs(name, cin, cout, k=3, with_bn=True, s_init=0.0):
+    specs = [Spec(f"{name}.w", (cout, cin, k), "he")]
+    if with_bn:
+        specs += [
+            Spec(f"{name}.bn.gamma", (cout,), "ones"),
+            Spec(f"{name}.bn.beta", (cout,), "zeros"),
+            Spec(f"{name}.bn.mean", (cout,), "zeros", trainable=False),
+            Spec(f"{name}.bn.var", (cout,), "ones", trainable=False),
+        ]
+    specs += [
+        Spec(f"{name}.sw", (), f"const:{s_init}"),
+        Spec(f"{name}.sa", (), f"const:{s_init}"),
+    ]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# QAT blocks (phase 1: quantized conv + float BN + ReLU + act quantizer)
+# ---------------------------------------------------------------------------
+
+
+def _conv2d(x, w, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+
+
+def _conv1d(x, w, dilation=1):
+    return lax.conv_general_dilated(
+        x, w, (1,), "VALID", rhs_dilation=(dilation,), dimension_numbers=("NCH", "OIH", "NCH")
+    )
+
+
+def qconv2d(p, name, x, hp, train: bool, stride=1, relu=True, quant_act=True):
+    """Fig. 4A block: conv(Q(w)) -> BN -> [ReLU] -> [Q_act]. Returns (y, updates)."""
+    nw, na, bn_mom = hp[HP["nw"]], hp[HP["na"]], hp[HP["bn_momentum"]]
+    w = maybe_qw(p[f"{name}.w"], p[f"{name}.sw"], nw)
+    y = _conv2d(x, w, stride)
+    axes = (0, 2, 3)
+    y, nm, nv = batch_norm(
+        y, p[f"{name}.bn.gamma"], p[f"{name}.bn.beta"], p[f"{name}.bn.mean"],
+        p[f"{name}.bn.var"], train, bn_mom, axes,
+    )
+    if relu:
+        y = jax.nn.relu(y)
+    if quant_act:
+        y = maybe_qa(y, p[f"{name}.sa"], na, 0.0 if relu else -1.0)
+    return y, {f"{name}.bn.mean": nm, f"{name}.bn.var": nv}
+
+
+def qconv1d(p, name, x, hp, train: bool, dilation=1, relu=True, quant_act=True):
+    nw, na, bn_mom = hp[HP["nw"]], hp[HP["na"]], hp[HP["bn_momentum"]]
+    w = maybe_qw(p[f"{name}.w"], p[f"{name}.sw"], nw)
+    y = _conv1d(x, w, dilation)
+    axes = (0, 2)
+    y, nm, nv = batch_norm(
+        y, p[f"{name}.bn.gamma"], p[f"{name}.bn.beta"], p[f"{name}.bn.mean"],
+        p[f"{name}.bn.var"], train, bn_mom, axes,
+    )
+    if relu:
+        y = jax.nn.relu(y)
+    if quant_act:
+        y = maybe_qa(y, p[f"{name}.sa"], na, 0.0 if relu else -1.0)
+    return y, {f"{name}.bn.mean": nm, f"{name}.bn.var": nv}
+
+
+# ---------------------------------------------------------------------------
+# FQ blocks (phase 2: fully quantized — §3.4, Fig. 4B)
+# ---------------------------------------------------------------------------
+
+
+def _fq_noise_keys(hp, layer_idx: int):
+    seed = hp[HP["seed"]].astype(jnp.int32)
+    key = jax.random.fold_in(jax.random.key(seed), layer_idx)
+    return jax.random.split(key, 3)
+
+
+def fqconv_generic(p, name, x, hp, conv_fn, b_out: float, layer_idx: int, quantize_out=True):
+    """Shared FQ math for 1-D/2-D convs.
+
+    x arrives already on the previous layer's output grid. We re-quantize
+    it with THIS layer's input scale == previous output scale, so in the
+    clean case the quantizer is a no-op on-grid pass-through; under
+    activation noise it is where the DAC noise enters.
+    """
+    nw = jnp.maximum(hp[HP["nw"]], 1.0)
+    na = jnp.maximum(hp[HP["na"]], 1.0)
+    sw, sa = p[f"{name}.sw"], p[f"{name}.sa"]
+    esw, esa = jnp.exp(sw), jnp.exp(sa)
+    kw, ka, km = _fq_noise_keys(hp, layer_idx)
+
+    # Weight codes + memory-cell noise (sigma_w % of one weight LSB).
+    wq = learned_quantize(p[f"{name}.w"], sw, -1.0, nw)
+    wq = lsb_noise(kw, wq, hp[HP["sigma_w"]], esw / nw)
+    # Activation (DAC) noise on the incoming quantized activations.
+    xn = lsb_noise(ka, x, hp[HP["sigma_a"]], esa / na)
+    y = conv_fn(xn, wq)
+    # MAC (ADC) noise, in % of the *output* quantizer's LSB.
+    so = p[f"{name}.so"]
+    eso = jnp.exp(so)
+    no = na  # output grid = next layer's input grid
+    y = lsb_noise(km, y, hp[HP["sigma_mac"]], eso / no)
+    if quantize_out:
+        y = learned_quantize(y, so, b_out, no)
+    return y
+
+
+def fqconv2d_specs(name, cin, cout, k=3, s_init=0.0):
+    return [
+        Spec(f"{name}.w", (cout, cin, k, k), "he"),
+        Spec(f"{name}.sw", (), f"const:{s_init}"),
+        Spec(f"{name}.sa", (), f"const:{s_init}"),
+        Spec(f"{name}.so", (), f"const:{s_init}"),
+    ]
+
+
+def fqconv1d_specs(name, cin, cout, k=3, s_init=0.0):
+    return [
+        Spec(f"{name}.w", (cout, cin, k), "he"),
+        Spec(f"{name}.sw", (), f"const:{s_init}"),
+        Spec(f"{name}.sa", (), f"const:{s_init}"),
+        Spec(f"{name}.so", (), f"const:{s_init}"),
+    ]
+
+
+def fqconv2d(p, name, x, hp, layer_idx, stride=1, b_out=0.0, quantize_out=True):
+    return fqconv_generic(
+        p, name, x, hp, lambda a, w: _conv2d(a, w, stride), b_out, layer_idx, quantize_out
+    )
+
+
+def fqconv1d(p, name, x, hp, layer_idx, dilation=1, b_out=0.0, quantize_out=True):
+    return fqconv_generic(
+        p, name, x, hp, lambda a, w: _conv1d(a, w, dilation), b_out, layer_idx, quantize_out
+    )
+
+
+# ---------------------------------------------------------------------------
+# Heads / misc
+# ---------------------------------------------------------------------------
+
+
+def dense_specs(name, cin, cout):
+    return [Spec(f"{name}.w", (cin, cout), "he"), Spec(f"{name}.b", (cout,), "zeros")]
+
+
+def dense(p, name, x):
+    return x @ p[f"{name}.w"] + p[f"{name}.b"]
+
+
+def global_avg_pool(x):
+    """(B, C, *spatial) -> (B, C); the paper keeps this in higher precision."""
+    return jnp.mean(x, axis=tuple(range(2, x.ndim)))

@@ -1,0 +1,95 @@
+"""Model registry: one uniform record per named configuration.
+
+The registry is the single source of truth consumed by train.py (step
+factories), aot.py (artifact plan + manifest) and the tests.
+"""
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+from . import darknet, kws, resnet
+
+
+@dataclass
+class ModelRecord:
+    name: str
+    kind: str
+    cfg: Any
+    specs: Callable  # QAT spec list
+    apply: Callable  # QAT forward (cfg, p, x, hp, train, flavor) -> (logits, updates)
+    input_shape: tuple  # per-sample, without batch
+    num_classes: int
+    batch: int
+    opt_kind: str  # 'sgd' | 'adam'
+    flavors: tuple = ("lq",)
+    fq_specs: Optional[Callable] = None
+    fq_apply: Optional[Callable] = None  # differentiable (jnp) FQ forward
+    fq_apply_deploy: Optional[Callable] = None  # deployment forward (Pallas)
+    fq_map: Optional[Callable] = None
+
+
+def _resnet_record(name: str, flavors=("lq",)) -> ModelRecord:
+    cfg = resnet.CONFIGS[name]
+    return ModelRecord(
+        name=name,
+        kind="resnet",
+        cfg=cfg,
+        specs=lambda: resnet.specs(cfg),
+        apply=lambda p, x, hp, train, flavor="lq": resnet.apply(cfg, p, x, hp, train, flavor),
+        input_shape=(3, cfg.image_hw, cfg.image_hw),
+        num_classes=cfg.num_classes,
+        batch=cfg.batch,
+        opt_kind="sgd",
+        flavors=flavors,
+        fq_specs=(lambda: resnet.fq_specs(cfg)) if cfg.quant_first else None,
+        fq_apply=(
+            (lambda p, x, hp, train=False: (resnet.fq_apply(cfg, p, x, hp), {}))
+            if cfg.quant_first
+            else None
+        ),
+        fq_map=(lambda: resnet.fq_map(cfg)) if cfg.quant_first else None,
+    )
+
+
+def _kws_record() -> ModelRecord:
+    cfg = kws.CONFIGS["kws"]
+    return ModelRecord(
+        name="kws",
+        kind="kws",
+        cfg=cfg,
+        specs=lambda: kws.specs(cfg),
+        apply=lambda p, x, hp, train, flavor="lq": kws.apply(cfg, p, x, hp, train, flavor),
+        input_shape=(cfg.n_mfcc, cfg.frames),
+        num_classes=cfg.num_classes,
+        batch=cfg.batch,
+        opt_kind="adam",
+        fq_specs=lambda: kws.fq_specs(cfg),
+        fq_apply=lambda p, x, hp, train=False: kws.fq_apply(cfg, p, x, hp, train),
+        fq_apply_deploy=lambda p, x, hp: kws.fq_apply_pallas(cfg, p, x, hp),
+        fq_map=lambda: kws.fq_map(cfg),
+    )
+
+
+def _darknet_record() -> ModelRecord:
+    cfg = darknet.CONFIGS["darknet_tiny"]
+    return ModelRecord(
+        name="darknet_tiny",
+        kind="darknet",
+        cfg=cfg,
+        specs=lambda: darknet.specs(cfg),
+        apply=lambda p, x, hp, train, flavor="lq": darknet.apply(cfg, p, x, hp, train, flavor),
+        input_shape=(3, cfg.image_hw, cfg.image_hw),
+        num_classes=cfg.num_classes,
+        batch=cfg.batch,
+        opt_kind="sgd",
+    )
+
+
+MODELS = {
+    "resnet20": _resnet_record("resnet20", flavors=("lq", "dorefa", "pact")),
+    "resnet8s": _resnet_record("resnet8s", flavors=("lq", "dorefa", "pact")),
+    "resnet32": _resnet_record("resnet32"),
+    "resnet14s": _resnet_record("resnet14s"),
+    "darknet_tiny": _darknet_record(),
+    "kws": _kws_record(),
+}

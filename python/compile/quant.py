@@ -1,0 +1,161 @@
+"""Learned quantization (FQ-Conv Eqs. 1-2) and baseline quantizers.
+
+This is the paper's core numeric contribution:
+
+    quantize(x) = round(clip(x, b, 1) * n) / n                       (1)
+    Q(x)        = e^s * quantize(x / e^s)                            (2)
+
+where ``b`` is -1 for weights / linear conv outputs / network inputs and 0
+for quantized ReLUs, ``n = 2^(nb-1) - 1`` is the number of positive levels
+for an ``nb``-bit code, and ``s`` is a learnable log-scale (one per layer
+per tensor role).
+
+Backward pass (straight-through estimator, STE):
+
+  * w.r.t. ``x``: pass the gradient through inside the clip range,
+    zero outside (the scale still receives gradient for clipped values,
+    which is the property the paper highlights vs. PACT).
+  * w.r.t. ``s``: with u = x / e^s and STE on round,
+        dQ/ds = e^s * (q(u) - u)         for b <= u <= 1
+        dQ/ds = e^s * 1                  for u > 1
+        dQ/ds = e^s * b                  for u < b
+    (the LSQ-style gradient; reduces to the quantization error inside the
+    range and to the clip boundary outside).
+
+Baselines implemented under the identical training harness for Table 2:
+DoReFa (Zhou et al.) and PACT (Choi et al.).
+
+Everything here is pure jnp and differentiable; the Pallas kernels in
+``kernels/`` implement the same forward math for the AOT inference path
+and are tested against :mod:`kernels.ref`, which reuses these definitions.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def n_levels(nbits: int) -> int:
+    """Number of positive quantization levels for an ``nbits`` code.
+
+    ``n = 2^(nb-1) - 1``: e.g. 2-bit (ternary) -> 1, 3-bit -> 3, 8-bit -> 127.
+    """
+    return 2 ** (nbits - 1) - 1
+
+
+def quantize_unit(x, b, n):
+    """Eq. (1): uniform quantization onto the [b, 1] grid with n positive levels.
+
+    ``n`` may be a traced scalar (bitwidth is a runtime input of the AOT
+    artifacts, so one artifact serves the whole gradual-quantization ladder).
+    """
+    return jnp.round(jnp.clip(x, b, 1.0) * n) / n
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def learned_quantize(x, s, b, n):
+    """Eq. (2): Q(x) = e^s * quantize(x / e^s) with the STE backward above.
+
+    Args:
+      x: tensor to quantize (weights or activations, any shape).
+      s: scalar log-scale (learnable).
+      b: clip lower bound, -1.0 or 0.0 (python constant — selects the
+         hard-tanh-like vs ReLU-like nonlinearity).
+      n: positive level count (scalar, may be traced).
+    """
+    es = jnp.exp(s)
+    return es * quantize_unit(x / es, b, n)
+
+
+def _lq_fwd(x, s, b, n):
+    es = jnp.exp(s)
+    u = x / es
+    q = quantize_unit(u, b, n)
+    return es * q, (u, q, es)
+
+
+def _lq_bwd(b, res, g):
+    u, q, es = res
+    inside = jnp.logical_and(u >= b, u <= 1.0)
+    gx = jnp.where(inside, g, 0.0)
+    # dQ/ds piecewise (see module docstring); chain rule through s -> e^s
+    # is already folded in because we differentiate w.r.t. s directly.
+    dq_ds = jnp.where(inside, q - u, jnp.where(u > 1.0, 1.0, b))
+    gs = jnp.sum(g * es * dq_ds)
+    return gx, gs, None
+
+
+learned_quantize.defvjp(_lq_fwd, _lq_bwd)
+
+
+def lq_int(x, s, b, n):
+    """Integer codes of Eq. (2): round(clip(x/e^s, b, 1) * n).
+
+    These are the values an accelerator would hold in SRAM / as
+    conductances: signed integers in [b*n, n]. Forward-only (used by the
+    FQ inference artifacts and the analog-noise model).
+    """
+    es = jnp.exp(s)
+    return jnp.round(jnp.clip(x / es, b, 1.0) * n)
+
+
+# ---------------------------------------------------------------------------
+# Baseline quantizers (Table 2), trained under the same harness.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def _ste_round(x):
+    return jnp.round(x)
+
+
+_ste_round.defvjp(lambda x: (jnp.round(x), None), lambda _, g: (g,))
+
+
+def quantize_k(x, k_levels):
+    """DoReFa's quantize_k over [0, 1] with ``k_levels`` intervals (STE)."""
+    return _ste_round(x * k_levels) / k_levels
+
+
+def dorefa_weights(w, k):
+    """DoReFa weight quantizer: tanh-normalize to [0,1], quantize, re-center.
+
+    ``k`` = 2^nb - 1 quantization intervals; may be traced.
+    """
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-8) + 0.5
+    return 2.0 * quantize_k(t, k) - 1.0
+
+
+def dorefa_activations(a, k):
+    """DoReFa activation quantizer: clip to [0,1] then uniform quantize."""
+    return quantize_k(jnp.clip(a, 0.0, 1.0), k)
+
+
+@jax.custom_vjp
+def pact_activations(a, alpha, k):
+    """PACT: y = clip(a, 0, alpha) quantized to k uniform intervals.
+
+    alpha is learnable; grad w.r.t. a is zero in the clipped region (the
+    behaviour our learned quantizer improves on), grad w.r.t. alpha is 1
+    in the clipped region (Choi et al. 2018). ``k`` (= 2^nb - 1) may be a
+    traced runtime scalar and carries no gradient.
+    """
+    y = jnp.clip(a, 0.0, alpha)
+    return jnp.round(y / alpha * k) / k * alpha
+
+
+def _pact_fwd(a, alpha, k):
+    return pact_activations(a, alpha, k), (a, alpha)
+
+
+def _pact_bwd(res, g):
+    a, alpha = res
+    inside = jnp.logical_and(a >= 0.0, a <= alpha)
+    ga = jnp.where(inside, g, 0.0)
+    galpha = jnp.sum(jnp.where(a > alpha, g, 0.0))
+    return ga, galpha, jnp.zeros(())
+
+
+pact_activations.defvjp(_pact_fwd, _pact_bwd)

@@ -1,0 +1,181 @@
+"""Loss, optimizers and the train-step / forward factories.
+
+A train step is a pure function over a *flat positional list* of arrays —
+the exact order written to artifacts/manifest.json and replayed by the
+Rust coordinator:
+
+    inputs : trainable[0..T) , state[0..S) , opt[0..O) , x , y , teacher , hp
+    outputs: trainable'[0..T), state'[0..S), opt'[0..O), loss, acc
+
+* `state` carries BN running statistics (updated functionally in train
+  mode, read-only in eval).
+* `teacher` is the teacher network's logits for this batch — the
+  distillation signal is *supplied by the coordinator*, which runs the
+  teacher's forward artifact itself (§3.3 as L3 orchestration).
+* `hp` is the 16-float hyper-parameter vector (layers.HP): lr, bitwidth
+  level counts, noise sigmas, distillation weight/temperature, seed...
+  All schedule decisions therefore live in Rust; the XLA graph is static.
+
+Loss (Hinton distillation): (1-λ)·CE(student, y) + λ·T²·KL(teacher_T ‖ student_T).
+Optimizers: SGD + Nesterov momentum (ResNets/DarkNet, as in the paper) and
+Adam (KWS net, as in the paper). Weight decay applies to conv/dense
+weights only — never to BN parameters or quantizer scales.
+"""
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .layers import HP, Spec, to_dict
+
+
+def softmax_ce(logits, labels_onehot):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))
+
+
+def distillation_loss(student_logits, teacher_logits, labels_onehot, lam, temp):
+    """(1-λ)·CE + λ·T²·KL(softmax(teacher/T) ‖ softmax(student/T))."""
+    ce = softmax_ce(student_logits, labels_onehot)
+    t_prob = jax.nn.softmax(teacher_logits / temp, axis=-1)
+    s_logp = jax.nn.log_softmax(student_logits / temp, axis=-1)
+    t_logp = jax.nn.log_softmax(teacher_logits / temp, axis=-1)
+    kl = jnp.mean(jnp.sum(t_prob * (t_logp - s_logp), axis=-1))
+    return (1.0 - lam) * ce + lam * (temp**2) * kl
+
+
+def _decay_mask(spec: Spec) -> bool:
+    """Weight decay on conv/dense kernels only."""
+    return spec.name.endswith(".w")
+
+
+# ---------------------------------------------------------------------------
+# Optimizers over flat lists
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(trainable_specs: List[Spec]):
+    return [s.shape for s in trainable_specs]  # momentum buffers, zeros
+
+
+def sgd_update(specs, params, grads, opt, hp):
+    """Nesterov momentum + decoupled weight decay. opt = [momentum...]."""
+    lr, mom, wd = hp[HP["lr"]], hp[HP["momentum"]], hp[HP["weight_decay"]]
+    new_p, new_m = [], []
+    for spec, p, g, m in zip(specs, params, grads, opt):
+        if _decay_mask(spec):
+            g = g + wd * p
+        m2 = mom * m + g
+        step = mom * m2 + g  # nesterov
+        new_p.append(p - lr * step)
+        new_m.append(m2)
+    return new_p, new_m
+
+
+def adam_init(trainable_specs: List[Spec]):
+    return [s.shape for s in trainable_specs] + [s.shape for s in trainable_specs] + [(1,)]
+
+
+def adam_update(specs, params, grads, opt, hp, b1=0.9, b2=0.999, eps=1e-8):
+    """Adam with decoupled weight decay. opt = [m...] + [v...] + [step]."""
+    n = len(params)
+    ms, vs, step = opt[:n], opt[n : 2 * n], opt[2 * n]
+    lr, wd = hp[HP["lr"]], hp[HP["weight_decay"]]
+    t = step[0] + 1.0
+    new_p, new_m, new_v = [], [], []
+    for spec, p, g, m, v in zip(specs, params, grads, ms, vs):
+        if _decay_mask(spec):
+            g = g + wd * p
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / (1 - b1**t)
+        vhat = v2 / (1 - b2**t)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, new_m + new_v + [step + 1.0]
+
+
+def opt_init_shapes(rec, trainable_specs):
+    return sgd_init(trainable_specs) if rec.opt_kind == "sgd" else adam_init(trainable_specs)
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+
+def split_specs(specs: List[Spec]):
+    trainable = [s for s in specs if s.trainable]
+    state = [s for s in specs if not s.trainable]
+    return trainable, state
+
+
+def make_train_step(rec, flavor: str = "lq", fq: bool = False):
+    """Build step(*flat_args) for the given model record.
+
+    Returns (step_fn, trainable_specs, state_specs, n_opt_tensors).
+    """
+    specs = rec.fq_specs() if fq else rec.specs()
+    apply_fn = rec.fq_apply if fq else rec.apply
+    tspecs, sspecs = split_specs(specs)
+    T, S = len(tspecs), len(sspecs)
+    n_opt = len(opt_init_shapes(rec, tspecs))
+    ncls = rec.num_classes
+
+    def step(*args):
+        trainable = list(args[:T])
+        state = list(args[T : T + S])
+        opt = list(args[T + S : T + S + n_opt])
+        x, y, teacher, hp = args[T + S + n_opt :]
+        y1h = jax.nn.one_hot(y, ncls)
+
+        def loss_fn(trainable_):
+            p = to_dict(tspecs, trainable_)
+            p.update(to_dict(sspecs, state))
+            logits, updates = apply_fn(p, x, hp, True, flavor) if not fq else apply_fn(p, x, hp, True)
+            loss = distillation_loss(
+                logits, teacher, y1h, hp[HP["distill_weight"]], hp[HP["distill_temp"]]
+            )
+            return loss, (logits, updates)
+
+        (loss, (logits, updates)), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+        if rec.opt_kind == "sgd":
+            new_t, new_o = sgd_update(tspecs, trainable, grads, opt, hp)
+        else:
+            new_t, new_o = adam_update(tspecs, trainable, grads, opt, hp)
+        new_s = [updates.get(s.name, old) for s, old in zip(sspecs, state)]
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return tuple(new_t) + tuple(new_s) + tuple(new_o) + (loss, acc)
+
+    return step, tspecs, sspecs, n_opt
+
+
+def make_forward(rec, flavor: str = "lq", fq: bool = False, deploy: bool = False):
+    """Build fwd(*flat_args) -> logits (eval mode, running BN stats)."""
+    specs = rec.fq_specs() if fq else rec.specs()
+    tspecs, sspecs = split_specs(specs)
+    T, S = len(tspecs), len(sspecs)
+
+    def fwd(*args):
+        trainable = list(args[:T])
+        state = list(args[T : T + S])
+        x, hp = args[T + S :]
+        p = to_dict(tspecs, trainable)
+        p.update(to_dict(sspecs, state))
+        if fq:
+            if deploy:
+                logits = rec.fq_apply_deploy(p, x, hp)
+            else:
+                logits, _ = rec.fq_apply(p, x, hp, False)
+        else:
+            logits, _ = rec.apply(p, x, hp, False, flavor)
+        # anchor every parameter into the output: jax.jit DCEs unused
+        # arguments at lowering, which would silently shrink the artifact's
+        # input signature vs the manifest (e.g. `input.s` in non-quant-first
+        # ResNets). Numerically a no-op.
+        anchor = sum(jnp.sum(t) * 0.0 for t in trainable + state)
+        return logits + anchor
+
+    return fwd, tspecs, sspecs

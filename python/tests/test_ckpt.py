@@ -1,0 +1,51 @@
+"""FQCK1 checkpoint format tests (shared with the Rust coordinator)."""
+
+import numpy as np
+import pytest
+
+from compile import ckpt
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.ckpt")
+    tensors = [
+        ("a.w", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("a.s", np.float32(0.5)),
+        ("b.bn.mean", np.zeros(7, np.float32)),
+    ]
+    ckpt.write_ckpt(path, tensors)
+    out = ckpt.read_ckpt(path)
+    assert [n for n, _ in out] == ["a.w", "a.s", "b.bn.mean"]
+    np.testing.assert_array_equal(out[0][1], tensors[0][1])
+
+
+def test_scalar_shape_preserved(tmp_path):
+    """0-d tensors must stay 0-d (np.ascontiguousarray promotes to 1-d —
+    the bug that broke the Rust loader once)."""
+    path = str(tmp_path / "s.ckpt")
+    ckpt.write_ckpt(path, [("s", np.zeros((), np.float32))])
+    (name, arr), = ckpt.read_ckpt(path)
+    assert name == "s"
+    assert arr.shape == ()
+
+
+def test_magic_checked(tmp_path):
+    path = tmp_path / "bad.ckpt"
+    path.write_bytes(b"NOTCK1\x00\x00\x00\x00")
+    with pytest.raises(AssertionError):
+        ckpt.read_ckpt(str(path))
+
+
+def test_float64_coerced(tmp_path):
+    path = str(tmp_path / "f64.ckpt")
+    ckpt.write_ckpt(path, [("x", np.ones(3, np.float64))])
+    (_, arr), = ckpt.read_ckpt(path)
+    assert arr.dtype == np.float32
+
+
+def test_order_significant(tmp_path):
+    path = str(tmp_path / "o.ckpt")
+    names = [f"t{i}" for i in range(20)]
+    ckpt.write_ckpt(path, [(n, np.full(2, i, np.float32)) for i, n in enumerate(names)])
+    out = ckpt.read_ckpt(path)
+    assert [n for n, _ in out] == names

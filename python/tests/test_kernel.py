@@ -1,0 +1,192 @@
+"""Kernel-vs-oracle: the CORE Layer-1 correctness signal.
+
+Hypothesis sweeps shapes, bitwidths, scales and bounds; every Pallas
+kernel (interpret=True) must agree with its pure-jnp reference to f32
+tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fq_conv import fq_conv1d_pallas, fq_conv2d_pallas, im2col_1d
+from compile.kernels.fq_matmul import fq_matmul_pallas
+from compile.kernels.quantize import learned_quantize_pallas, quantize_int_pallas
+
+RNG = np.random.default_rng(1234)
+
+
+def _arr(*shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+def _scales(sa=0.9, sw=0.4, so=1.2, na=7.0, nw=1.0, no=15.0):
+    return jnp.asarray([sa, sw, so, na, nw, no], jnp.float32)
+
+
+bits = st.sampled_from([2, 3, 4, 5, 8])
+bounds = st.sampled_from([-1.0, 0.0])
+small = st.integers(min_value=1, max_value=40)
+
+
+class TestQuantizeKernel:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=300),
+        nb=bits,
+        b=bounds,
+        es=st.floats(min_value=0.05, max_value=8.0),
+    )
+    def test_matches_ref(self, m, nb, b, es):
+        x = _arr(m)
+        n = float(2 ** (nb - 1) - 1)
+        got = learned_quantize_pallas(x, es, n, b)
+        want = ref.learned_quantize_ref(x, es, n, b)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_multidim(self):
+        x = _arr(3, 5, 17)
+        got = learned_quantize_pallas(x, 0.7, 7.0, -1.0)
+        want = ref.learned_quantize_ref(x, 0.7, 7.0, -1.0)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_exactly_block_sized(self):
+        from compile.kernels.quantize import BLOCK
+
+        x = _arr(BLOCK)
+        np.testing.assert_allclose(
+            learned_quantize_pallas(x, 1.0, 3.0, 0.0),
+            ref.learned_quantize_ref(x, 1.0, 3.0, 0.0),
+            atol=1e-6,
+        )
+
+    def test_int_codes_match(self):
+        x = _arr(777)
+        got = quantize_int_pallas(x, 0.5, 7.0, -1.0)
+        want = ref.quantize_int_ref(x, 0.5, 7.0, -1.0)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+        codes = np.asarray(got)
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-6)
+
+
+class TestFqMatmulKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(m=small, k=small, n=small, ba=bounds, bo=bounds)
+    def test_matches_ref(self, m, k, n, ba, bo):
+        a, w = _arr(m, k), _arr(k, n, scale=0.5)
+        sc = _scales()
+        got = fq_matmul_pallas(a, w, sc, ba, bo)
+        want = ref.fq_matmul_ref(a, w, sc, ba, bo)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(nba=bits, nbw=bits, nbo=bits)
+    def test_bitwidth_sweep(self, nba, nbw, nbo):
+        lv = lambda nb: float(2 ** (nb - 1) - 1)
+        sc = _scales(na=lv(nba), nw=lv(nbw), no=lv(nbo))
+        a, w = _arr(50, 30), _arr(30, 20, scale=0.5)
+        got = fq_matmul_pallas(a, w, sc, 0.0, -1.0)
+        want = ref.fq_matmul_ref(a, w, sc, 0.0, -1.0)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_bigger_than_one_block(self):
+        a, w = _arr(300, 64), _arr(64, 200, scale=0.3)
+        sc = _scales()
+        np.testing.assert_allclose(
+            fq_matmul_pallas(a, w, sc, -1.0, 0.0),
+            ref.fq_matmul_ref(a, w, sc, -1.0, 0.0),
+            atol=1e-5,
+        )
+
+    def test_no_output_quantization(self):
+        a, w = _arr(17, 11), _arr(11, 9)
+        sc = _scales()
+        got = fq_matmul_pallas(a, w, sc, -1.0, 0.0, quantize_out=False)
+        want = ref.fq_matmul_ref(a, w, sc, -1.0, 0.0, quantize_out=False)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_output_on_grid(self):
+        a, w = _arr(30, 20), _arr(20, 10)
+        sc = _scales(so=2.0, no=7.0)
+        out = np.asarray(fq_matmul_pallas(a, w, sc, -1.0, -1.0))
+        codes = out / 2.0 * 7.0
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+    def test_ternary_weights_integer_macs(self):
+        """With nw=1 the weight codes are {-1,0,1}: adds only (Eq. 4)."""
+        a, w = _arr(20, 15), _arr(15, 8)
+        sc = _scales(nw=1.0)
+        wi = np.asarray(ref.quantize_int_ref(w, sc[1], sc[4], -1.0))
+        assert set(np.unique(wi)) <= {-1.0, 0.0, 1.0}
+        np.testing.assert_allclose(
+            fq_matmul_pallas(a, w, sc, -1.0, 0.0),
+            ref.fq_matmul_ref(a, w, sc, -1.0, 0.0),
+            atol=1e-5,
+        )
+
+
+class TestIm2col:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        c=st.integers(1, 8),
+        f=st.integers(1, 5),
+        d=st.integers(1, 4),
+        extra=st.integers(0, 20),
+    )
+    def test_shape_and_content(self, b, c, f, d, extra):
+        t = d * (f - 1) + 1 + extra
+        x = _arr(b, c, t)
+        cols, t_out = im2col_1d(x, f, d)
+        assert t_out == t - d * (f - 1)
+        assert cols.shape == (b * t_out, c * f)
+        # spot-check one patch
+        got = np.asarray(cols)[0].reshape(c, f)
+        want = np.asarray(x)[0, :, : d * f : d]
+        np.testing.assert_allclose(got, want)
+
+
+class TestFqConvKernels:
+    @settings(max_examples=15, deadline=None)
+    @given(d=st.integers(1, 8), ba=bounds, bo=bounds)
+    def test_conv1d_matches_ref(self, d, ba, bo):
+        x = _arr(2, 6, 70)
+        w = _arr(5, 6, 3, scale=0.4)
+        sc = _scales()
+        got = fq_conv1d_pallas(x, w, sc, ba, bo, dilation=d)
+        want = ref.fq_conv1d_ref(x, w, sc, ba, bo, dilation=d)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        stride=st.sampled_from([1, 2]),
+        padding=st.sampled_from(["SAME", "VALID"]),
+        c=st.integers(1, 8),
+        k=st.integers(1, 8),
+    )
+    def test_conv2d_matches_ref(self, stride, padding, c, k):
+        x = _arr(2, c, 10, 10)
+        w = _arr(k, c, 3, 3, scale=0.4)
+        sc = _scales()
+        got = fq_conv2d_pallas(x, w, sc, -1.0, 0.0, stride=stride, padding=padding)
+        want = ref.fq_conv2d_ref(x, w, sc, -1.0, 0.0, stride=stride, padding=padding)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_conv2d_1x1(self):
+        """1x1 convs quantize too (residual downsampling paths, §4.1)."""
+        x = _arr(2, 8, 8, 8)
+        w = _arr(16, 8, 1, 1, scale=0.4)
+        sc = _scales()
+        got = fq_conv2d_pallas(x, w, sc, 0.0, -1.0, stride=2)
+        want = ref.fq_conv2d_ref(x, w, sc, 0.0, -1.0, stride=2)
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_conv1d_final_layer_unquantized_output(self):
+        x = _arr(2, 6, 20)
+        w = _arr(5, 6, 3, scale=0.4)
+        sc = _scales()
+        got = fq_conv1d_pallas(x, w, sc, 0.0, -1.0, quantize_out=False)
+        want = ref.fq_conv1d_ref(x, w, sc, 0.0, -1.0, quantize_out=False)
+        np.testing.assert_allclose(got, want, atol=1e-5)

@@ -1,0 +1,153 @@
+"""Model-zoo tests: shapes, spec/apply consistency, QAT vs FQ flavours."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train as trainlib
+from compile.layers import HP_LEN, hp_vec, init_params, to_dict
+from compile.models import MODELS
+
+
+def _forward(rec, fq=False, flavor="lq", nw=1.0, na=7.0, train=False):
+    specs = rec.fq_specs() if fq else rec.specs()
+    tspecs, sspecs = trainlib.split_specs(specs)
+    vals = [jnp.asarray(v) for v in init_params(tspecs + sspecs, 0)]
+    p = to_dict(tspecs + sspecs, vals)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(rec.batch,) + rec.input_shape).astype(np.float32))
+    hp = jnp.asarray(hp_vec(nw=nw, na=na, seed=1.0))
+    if fq:
+        logits, updates = rec.fq_apply(p, x, hp, train)
+    else:
+        logits, updates = rec.apply(p, x, hp, train, flavor)
+    return logits, updates
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+class TestForwardShapes:
+    def test_qat_logits_shape(self, name):
+        rec = MODELS[name]
+        logits, _ = _forward(rec)
+        assert logits.shape == (rec.batch, rec.num_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_train_mode_updates_bn(self, name):
+        rec = MODELS[name]
+        _, updates = _forward(rec, train=True)
+        # every model with BN state reports updates in train mode
+        _, sspecs = trainlib.split_specs(rec.specs())
+        assert set(updates.keys()) == {s.name for s in sspecs}
+
+    def test_eval_mode_no_bn_update_effect(self, name):
+        rec = MODELS[name]
+        a, _ = _forward(rec, train=False)
+        b, _ = _forward(rec, train=False)
+        np.testing.assert_allclose(a, b)
+
+
+class TestFqFlavours:
+    @pytest.mark.parametrize("name", ["kws", "resnet32", "resnet14s"])
+    def test_fq_logits_shape(self, name):
+        rec = MODELS[name]
+        logits, _ = _forward(rec, fq=True)
+        assert logits.shape == (rec.batch, rec.num_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_models_without_fq(self):
+        assert MODELS["resnet20"].fq_specs is None
+        assert MODELS["darknet_tiny"].fq_specs is None
+
+    def test_fq_map_references_exist(self):
+        for name in ["kws", "resnet32", "resnet14s"]:
+            rec = MODELS[name]
+            qat_names = {s.name for s in rec.specs()}
+            fq_names = {s.name for s in rec.fq_specs()}
+            for rule in rec.fq_map():
+                assert f"{rule['qat']}.w" in qat_names, rule
+                assert f"{rule['fq']}.w" in fq_names, rule
+                assert rule["pred_scale"] in qat_names, rule
+
+    def test_kws_pallas_deploy_matches_jnp_fq(self):
+        """The Pallas deployment forward equals the clean jnp FQ forward."""
+        rec = MODELS["kws"]
+        specs = rec.fq_specs()
+        tspecs, sspecs = trainlib.split_specs(specs)
+        vals = [jnp.asarray(v) for v in init_params(tspecs + sspecs, 3)]
+        p = to_dict(tspecs + sspecs, vals)
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(rec.batch,) + rec.input_shape).astype(np.float32))
+        hp = jnp.asarray(hp_vec(nw=1.0, na=7.0))
+        jnp_logits, _ = rec.fq_apply(p, x, hp, False)
+        pallas_logits = rec.fq_apply_deploy(p, x, hp)
+        np.testing.assert_allclose(jnp_logits, pallas_logits, atol=2e-4)
+
+
+class TestBaselineFlavours:
+    @pytest.mark.parametrize("flavor", ["dorefa", "pact"])
+    def test_resnet_baseline_forward(self, flavor):
+        rec = MODELS["resnet8s"]
+        logits, _ = _forward(rec, flavor=flavor, nw=3.0, na=3.0)
+        assert logits.shape == (rec.batch, rec.num_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_flavors_differ_numerically(self):
+        rec = MODELS["resnet8s"]
+        a, _ = _forward(rec, flavor="lq", nw=1.0, na=3.0)
+        b, _ = _forward(rec, flavor="dorefa", nw=1.0, na=3.0)
+        assert float(jnp.abs(a - b).sum()) > 1e-3
+
+
+class TestBitwidthSemantics:
+    def test_fp_mode_when_levels_zero(self):
+        """nw=na=0 must bypass quantization entirely (FP ladder stages)."""
+        rec = MODELS["resnet8s"]
+        a, _ = _forward(rec, nw=0.0, na=0.0)
+        b, _ = _forward(rec, nw=0.0, na=0.0)
+        np.testing.assert_allclose(a, b)
+        c, _ = _forward(rec, nw=1.0, na=1.0)
+        assert float(jnp.abs(a - c).sum()) > 1e-3
+
+    def test_kws_macs_match_paper_scale(self):
+        from compile.aot import macs_for_model
+
+        macs = macs_for_model(MODELS["kws"])
+        assert 2e6 < macs < 5e6  # paper: 3.5M
+
+    def test_kws_params_match_paper_scale(self):
+        from compile.aot import weight_param_count
+
+        n = weight_param_count(MODELS["kws"].specs())
+        assert 3e4 < n < 8e4  # paper: 50K
+
+
+class TestNoiseHooks:
+    def test_fq_noise_changes_output(self):
+        rec = MODELS["kws"]
+        specs = rec.fq_specs()
+        tspecs, sspecs = trainlib.split_specs(specs)
+        vals = [jnp.asarray(v) for v in init_params(tspecs + sspecs, 0)]
+        p = to_dict(tspecs + sspecs, vals)
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(rec.batch,) + rec.input_shape).astype(np.float32))
+        clean = rec.fq_apply(p, x, jnp.asarray(hp_vec(nw=1.0, na=7.0, seed=5.0)), False)[0]
+        noisy = rec.fq_apply(
+            p,
+            x,
+            jnp.asarray(hp_vec(nw=1.0, na=7.0, seed=5.0, sigma_w=30.0, sigma_a=30.0, sigma_mac=150.0)),
+            False,
+        )[0]
+        assert float(jnp.abs(clean - noisy).sum()) > 1e-3
+
+    def test_noise_seed_determinism(self):
+        rec = MODELS["kws"]
+        specs = rec.fq_specs()
+        tspecs, sspecs = trainlib.split_specs(specs)
+        vals = [jnp.asarray(v) for v in init_params(tspecs + sspecs, 0)]
+        p = to_dict(tspecs + sspecs, vals)
+        x = jnp.zeros((rec.batch,) + rec.input_shape, jnp.float32)
+        hp = jnp.asarray(hp_vec(nw=1.0, na=7.0, seed=9.0, sigma_w=20.0))
+        a = rec.fq_apply(p, x, hp, False)[0]
+        b = rec.fq_apply(p, x, hp, False)[0]
+        np.testing.assert_allclose(a, b)

@@ -1,0 +1,158 @@
+"""Unit tests for the learned quantizer (Eqs. 1-2) and its STE gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quant
+
+
+class TestNLevels:
+    def test_ternary(self):
+        assert quant.n_levels(2) == 1
+
+    def test_values(self):
+        assert [quant.n_levels(b) for b in (3, 4, 5, 8)] == [3, 7, 15, 127]
+
+
+class TestQuantizeUnit:
+    def test_on_grid(self):
+        x = jnp.linspace(-2, 2, 101)
+        q = quant.quantize_unit(x, -1.0, 7)
+        codes = np.asarray(q) * 7
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-6)
+
+    def test_clip_range(self):
+        x = jnp.asarray([-5.0, 5.0])
+        q = quant.quantize_unit(x, -1.0, 7)
+        np.testing.assert_allclose(q, [-1.0, 1.0])
+
+    def test_relu_bound(self):
+        x = jnp.asarray([-0.5, 0.5])
+        q = quant.quantize_unit(x, 0.0, 3)
+        assert q[0] == 0.0 and q[1] > 0.0
+
+    def test_ternary_values(self):
+        x = jnp.linspace(-2, 2, 41)
+        q = quant.quantize_unit(x, -1.0, 1)
+        assert set(np.unique(np.asarray(q))) <= {-1.0, 0.0, 1.0}
+
+    def test_idempotent(self):
+        x = jnp.linspace(-1.5, 1.5, 77)
+        q1 = quant.quantize_unit(x, -1.0, 15)
+        q2 = quant.quantize_unit(q1, -1.0, 15)
+        np.testing.assert_allclose(q1, q2, atol=1e-7)
+
+    def test_monotone(self):
+        x = jnp.linspace(-2, 2, 201)
+        q = np.asarray(quant.quantize_unit(x, -1.0, 7))
+        assert (np.diff(q) >= -1e-7).all()
+
+
+class TestLearnedQuantize:
+    def test_scale_invariance(self):
+        """Q(x; s) == e^s * Q0(x / e^s) by construction."""
+        x = jnp.linspace(-3, 3, 64)
+        s = 0.7
+        got = quant.learned_quantize(x, jnp.asarray(s), -1.0, 7)
+        want = np.exp(s) * np.asarray(quant.quantize_unit(x / np.exp(s), -1.0, 7))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_max_error_half_lsb(self):
+        """Inside the clip range, |Q(x) - x| <= LSB/2."""
+        s = 0.3
+        es = np.exp(s)
+        x = jnp.asarray(np.linspace(-es, es, 509), jnp.float32)
+        q = quant.learned_quantize(x, jnp.asarray(s, jnp.float32), -1.0, 15)
+        lsb = es / 15
+        assert np.max(np.abs(np.asarray(q) - np.asarray(x))) <= lsb / 2 + 1e-6
+
+    def test_grad_x_inside(self):
+        g = jax.grad(lambda x: quant.learned_quantize(x, jnp.asarray(0.0), -1.0, 7).sum())(
+            jnp.asarray([0.3, -0.6])
+        )
+        np.testing.assert_allclose(g, [1.0, 1.0])
+
+    def test_grad_x_clipped_is_zero(self):
+        g = jax.grad(lambda x: quant.learned_quantize(x, jnp.asarray(0.0), -1.0, 7).sum())(
+            jnp.asarray([3.0, -3.0])
+        )
+        np.testing.assert_allclose(g, [0.0, 0.0])
+
+    def test_grad_s_nonzero_when_clipped(self):
+        """The paper's key property vs PACT: clipped values still move s."""
+        g = jax.grad(
+            lambda s: quant.learned_quantize(jnp.asarray([4.0]), s, -1.0, 7).sum()
+        )(jnp.asarray(0.0))
+        assert abs(float(g)) > 0.1
+
+    def test_grad_s_boundary_values(self):
+        # u > 1: dQ/ds = e^s * 1 ; u < b: dQ/ds = e^s * b
+        for x, expect in ((4.0, 1.0), (-4.0, -1.0)):
+            g = jax.grad(
+                lambda s: quant.learned_quantize(jnp.asarray([x]), s, -1.0, 7).sum()
+            )(jnp.asarray(0.5))
+            np.testing.assert_allclose(float(g), np.exp(0.5) * expect, rtol=1e-5)
+
+    def test_grad_s_inside_is_quant_error(self):
+        x = jnp.asarray([0.37])
+        s = jnp.asarray(0.0)
+        g = jax.grad(lambda s_: quant.learned_quantize(x, s_, -1.0, 7).sum())(s)
+        q = float(quant.quantize_unit(x, -1.0, 7)[0])
+        np.testing.assert_allclose(float(g), q - 0.37, atol=1e-6)
+
+    def test_traced_n(self):
+        """Bitwidth must be usable as a traced runtime scalar."""
+        f = jax.jit(lambda x, n: quant.learned_quantize(x, jnp.asarray(0.0), -1.0, n))
+        x = jnp.linspace(-1, 1, 11)
+        for nb in (2, 3, 5, 8):
+            n = jnp.asarray(float(quant.n_levels(nb)))
+            np.testing.assert_allclose(
+                f(x, n), quant.learned_quantize(x, jnp.asarray(0.0), -1.0, float(n)), atol=1e-7
+            )
+
+    def test_lq_int_range(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=1000), jnp.float32)
+        for nb, b in ((2, -1.0), (4, 0.0), (8, -1.0)):
+            n = quant.n_levels(nb)
+            codes = np.asarray(quant.lq_int(x, jnp.asarray(0.2), b, n))
+            assert codes.min() >= b * n - 1e-6 and codes.max() <= n + 1e-6
+            np.testing.assert_allclose(codes, np.round(codes), atol=1e-6)
+
+
+class TestBaselines:
+    def test_dorefa_weights_range(self):
+        w = jnp.asarray(np.random.default_rng(1).normal(size=500), jnp.float32)
+        for nb in (2, 3, 4):
+            k = 2**nb - 1
+            q = np.asarray(quant.dorefa_weights(w, float(k)))
+            assert q.min() >= -1 - 1e-6 and q.max() <= 1 + 1e-6
+            lv = (q + 1) / 2 * k
+            np.testing.assert_allclose(lv, np.round(lv), atol=1e-4)
+
+    def test_dorefa_act_grid(self):
+        a = jnp.linspace(-1, 2, 301)
+        q = np.asarray(quant.dorefa_activations(a, 7.0))
+        assert q.min() == 0.0 and q.max() == 1.0
+        np.testing.assert_allclose(q * 7, np.round(q * 7), atol=1e-5)
+
+    def test_pact_forward(self):
+        a = jnp.asarray([-1.0, 0.5, 2.0, 10.0])
+        q = np.asarray(quant.pact_activations(a, jnp.asarray(2.0), 15.0))
+        assert q[0] == 0.0 and q[3] == 2.0
+        np.testing.assert_allclose(q * 15 / 2.0, np.round(q * 15 / 2.0), atol=1e-5)
+
+    def test_pact_grad_alpha(self):
+        g = jax.grad(
+            lambda al: quant.pact_activations(jnp.asarray([5.0, 0.1]), al, 15.0).sum()
+        )(jnp.asarray(2.0))
+        # only the clipped element contributes, with gradient ~1
+        np.testing.assert_allclose(float(g), 1.0, atol=0.1)
+
+    def test_pact_grad_a_zero_when_clipped(self):
+        """PACT's zero-gradient-when-clipped — the contrast with ours."""
+        g = jax.grad(
+            lambda a: quant.pact_activations(a, jnp.asarray(1.0), 15.0).sum()
+        )(jnp.asarray([5.0]))
+        np.testing.assert_allclose(g, [0.0])

@@ -1,0 +1,150 @@
+"""Train-step factory tests: loss math, optimizers, distillation, and
+the flat positional calling convention the Rust coordinator replays."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train as T
+from compile.layers import HP, HP_LEN, Spec, hp_vec, init_params
+from compile.models import MODELS
+
+
+def _run_steps(name, steps=4, fq=False, flavor="lq", **hp_kw):
+    rec = MODELS[name]
+    step, tspecs, sspecs, n_opt = T.make_train_step(rec, flavor, fq)
+    tr = [jnp.asarray(v) for v in init_params(tspecs, 1)]
+    st = [jnp.asarray(v) for v in init_params(sspecs, 1)]
+    opt = [jnp.zeros(s, jnp.float32) for s in T.opt_init_shapes(rec, tspecs)]
+    rng = np.random.default_rng(0)
+    b = rec.batch
+    x = jnp.asarray(rng.normal(size=(b,) + rec.input_shape).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, rec.num_classes, b).astype(np.int32))
+    teacher = jnp.zeros((b, rec.num_classes), jnp.float32)
+    hp = jnp.asarray(hp_vec(lr=0.01, seed=1.0, **hp_kw))
+    jstep = jax.jit(step)
+    losses = []
+    for _ in range(steps):
+        out = jstep(*tr, *st, *opt, x, y, teacher, hp)
+        Tn, Sn = len(tr), len(st)
+        tr = list(out[:Tn])
+        st = list(out[Tn : Tn + Sn])
+        opt = list(out[Tn + Sn : Tn + Sn + n_opt])
+        losses.append(float(out[-2]))
+    return losses, tr, st, opt
+
+
+class TestLosses:
+    def test_softmax_ce_matches_manual(self):
+        logits = jnp.asarray([[2.0, 0.0, -1.0]])
+        y1h = jnp.asarray([[1.0, 0.0, 0.0]])
+        want = -float(jax.nn.log_softmax(logits)[0, 0])
+        got = float(T.softmax_ce(logits, y1h))
+        assert abs(got - want) < 1e-6
+
+    def test_distillation_reduces_to_ce_at_lambda0(self):
+        logits = jnp.asarray([[1.0, -0.5, 0.2]])
+        teacher = jnp.asarray([[5.0, 0.0, 0.0]])
+        y1h = jnp.asarray([[0.0, 1.0, 0.0]])
+        ce = float(T.softmax_ce(logits, y1h))
+        d = float(T.distillation_loss(logits, teacher, y1h, 0.0, 4.0))
+        assert abs(ce - d) < 1e-6
+
+    def test_distillation_kl_zero_for_identical(self):
+        logits = jnp.asarray([[1.0, -0.5, 0.2]])
+        y1h = jnp.asarray([[0.0, 1.0, 0.0]])
+        d0 = float(T.distillation_loss(logits, logits, y1h, 1.0, 4.0))
+        assert abs(d0) < 1e-5  # pure KL term, teacher == student
+
+    def test_teacher_pulls_student(self):
+        """Gradient with teacher differs from gradient without."""
+        logits_fn = lambda w: w * jnp.asarray([[1.0, 2.0, 3.0]])
+        y1h = jnp.asarray([[1.0, 0.0, 0.0]])
+        teacher = jnp.asarray([[0.0, 10.0, 0.0]])
+        g0 = jax.grad(lambda w: T.distillation_loss(logits_fn(w), teacher, y1h, 0.0, 2.0))(1.0)
+        g1 = jax.grad(lambda w: T.distillation_loss(logits_fn(w), teacher, y1h, 0.9, 2.0))(1.0)
+        assert abs(float(g0) - float(g1)) > 1e-4
+
+
+class TestOptimizers:
+    def _toy_specs(self):
+        return [Spec("a.w", (2,), "zeros"), Spec("a.s", (), "zeros")]
+
+    def test_sgd_momentum_accumulates(self):
+        specs = self._toy_specs()
+        p = [jnp.zeros(2), jnp.zeros(())]
+        g = [jnp.ones(2), jnp.ones(())]
+        opt = [jnp.zeros(2), jnp.zeros(())]
+        hp = jnp.asarray(hp_vec(lr=0.1))
+        p1, opt1 = T.sgd_update(specs, p, g, opt, hp)
+        p2, opt2 = T.sgd_update(specs, p1, g, opt1, hp)
+        # nesterov: first step moves by lr*(mom*g + g) = 0.1*1.9
+        np.testing.assert_allclose(p1[0], -0.19 * np.ones(2), rtol=1e-5)
+        # momentum builds: second step moves further than first
+        step1 = float(jnp.abs(p1[0][0]))
+        step2 = float(jnp.abs(p2[0][0] - p1[0][0]))
+        assert step2 > step1
+
+    def test_weight_decay_only_on_weights(self):
+        specs = self._toy_specs()
+        p = [jnp.ones(2), jnp.ones(())]
+        g = [jnp.zeros(2), jnp.zeros(())]
+        opt = [jnp.zeros(2), jnp.zeros(())]
+        hp = jnp.asarray(hp_vec(lr=0.1, weight_decay=0.5))
+        p1, _ = T.sgd_update(specs, p, g, opt, hp)
+        assert float(p1[0][0]) < 1.0  # .w decayed
+        assert float(p1[1]) == 1.0  # scale untouched
+
+    def test_adam_moves_params(self):
+        specs = self._toy_specs()
+        p = [jnp.zeros(2), jnp.zeros(())]
+        g = [jnp.ones(2), jnp.ones(())]
+        opt = [jnp.zeros(2), jnp.zeros(()), jnp.zeros(2), jnp.zeros(()), jnp.zeros((1,))]
+        hp = jnp.asarray(hp_vec(lr=0.01))
+        p1, opt1 = T.adam_update(specs, p, g, opt, hp)
+        assert float(jnp.abs(p1[0]).sum()) > 0
+        assert float(opt1[-1][0]) == 1.0  # step counter advanced
+
+    def test_opt_shapes_match_kind(self):
+        rec_sgd = MODELS["resnet8s"]
+        rec_adam = MODELS["kws"]
+        ts_sgd, _ = T.split_specs(rec_sgd.specs())
+        ts_adam, _ = T.split_specs(rec_adam.specs())
+        assert len(T.opt_init_shapes(rec_sgd, ts_sgd)) == len(ts_sgd)
+        assert len(T.opt_init_shapes(rec_adam, ts_adam)) == 2 * len(ts_adam) + 1
+
+
+class TestTrainSteps:
+    def test_loss_decreases_kws(self):
+        losses, *_ = _run_steps("kws", steps=6)
+        assert losses[-1] < losses[0], losses
+
+    def test_loss_decreases_quantized(self):
+        losses, *_ = _run_steps("resnet8s", steps=6, nw=7.0, na=7.0)
+        assert losses[-1] < losses[0], losses
+
+    def test_fq_step_runs(self):
+        losses, *_ = _run_steps("kws", steps=2, fq=True, nw=1.0, na=7.0)
+        assert all(np.isfinite(losses))
+
+    def test_bn_state_updates_in_training(self):
+        rec = MODELS["resnet8s"]
+        _, _, st, _ = _run_steps("resnet8s", steps=2)
+        _, sspecs = T.split_specs(rec.specs())
+        means = [v for s, v in zip(sspecs, st) if s.name.endswith(".bn.mean")]
+        assert any(float(jnp.abs(m).sum()) > 0 for m in means)
+
+    def test_quantizer_scales_receive_gradient(self):
+        rec = MODELS["resnet8s"]
+        _, tr, _, _ = _run_steps("resnet8s", steps=3, nw=3.0, na=3.0)
+        tspecs, _ = T.split_specs(rec.specs())
+        scales = [v for s, v in zip(tspecs, tr) if s.name.endswith(".sa")]
+        moved = sum(1 for v in scales if abs(float(v)) > 1e-7)
+        assert moved > len(scales) // 2, "most act scales should have moved"
+
+    def test_noise_aware_training_stays_finite(self):
+        losses, *_ = _run_steps(
+            "kws", steps=3, fq=True, nw=1.0, na=7.0, sigma_w=20.0, sigma_a=20.0, sigma_mac=100.0
+        )
+        assert all(np.isfinite(losses))

@@ -1,0 +1,26 @@
+//! Shared bench-target bootstrap (included via #[path] in each bench).
+
+use fqconv::config::Budget;
+use fqconv::exp::Ctx;
+use fqconv::runtime::{Engine, Manifest};
+
+/// Budget for table regenerators: FQCONV_BENCH_BUDGET=smoke|quick|full
+/// (default quick — the fast, shape-preserving version of each table).
+pub fn bench_budget() -> Budget {
+    match std::env::var("FQCONV_BENCH_BUDGET").as_deref() {
+        Ok("smoke") => Budget::smoke(),
+        Ok("full") => Budget::full(),
+        _ => Budget::quick(),
+    }
+}
+
+pub fn setup() -> (Manifest, Engine) {
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest — run `make artifacts`");
+    let engine = Engine::cpu().expect("PJRT engine");
+    (manifest, engine)
+}
+
+pub fn ctx<'a>(engine: &'a Engine, manifest: &'a Manifest) -> Ctx<'a> {
+    Ctx::new(engine, manifest, bench_budget())
+}

@@ -1,0 +1,35 @@
+//! Perf: the MFCC front end (FFT -> mel -> DCT -> deltas) and the
+//! synthetic audio generator — the serving path's preprocessing cost.
+#[path = "common.rs"]
+mod common;
+
+use fqconv::bench::{banner, bench};
+use fqconv::data::dsp::{Mfcc, MfccConfig};
+use fqconv::data::kws::{KwsConfig, KwsDataset};
+use fqconv::data::Dataset;
+use fqconv::util::Rng;
+
+fn main() {
+    banner("perf_dsp — MFCC front end");
+    let mfcc = Mfcc::new(MfccConfig::default());
+    let n = mfcc.samples_for_frames(80);
+    let mut rng = Rng::new(2);
+    let mut sig = vec![0f32; n];
+    rng.fill_gaussian(&mut sig, 0.3);
+
+    let s = bench("MFCC 13-coeff (80 frames)", 5, 200, || {
+        std::hint::black_box(mfcc.compute(&sig));
+    });
+    println!("{}", s.report());
+    let s = bench("MFCC+deltas 39-dim (80 frames)", 5, 200, || {
+        std::hint::black_box(mfcc.compute_with_deltas(&sig));
+    });
+    println!("{}", s.report());
+    println!("    = {:.0} clips/s/core", 1.0 / s.median_s);
+
+    let ds = KwsDataset::new(KwsConfig::default());
+    let s = bench("full sample gen (waveform+aug+MFCC)", 5, 100, || {
+        std::hint::black_box(ds.sample(12345, Some(&mut rng)));
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,65 @@
+//! Perf: integer inference engine — i8 GEMM vs ternary add-only path,
+//! full-network throughput, LUT re-binning cost. Feeds EXPERIMENTS.md
+//! §Perf (L3 targets: ternary path faster than dense i8; >= 1 GMAC/s/core).
+#[path = "common.rs"]
+mod common;
+
+use fqconv::bench::{banner, bench, BenchStats};
+use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
+use fqconv::data::{self, Dataset};
+use fqconv::infer::gemm::{gemm_i8, transpose, TernaryMatrix};
+use fqconv::infer::pipeline::Scratch;
+use fqconv::infer::FqKwsNet;
+use fqconv::util::Rng;
+
+fn report(s: &BenchStats, items: f64, unit: &str) {
+    println!("{}   {:>10.2} {unit}", s.report(), s.throughput(items) / 1e9);
+}
+
+fn main() {
+    banner("perf_infer — integer engine hot paths");
+    let mut rng = Rng::new(7);
+    // GEMM shapes modeled on the KWS layers: (T_out, C*F) x (C*F, 45)
+    for &(m, k, n) in &[(78usize, 300usize, 45usize), (64, 135, 45), (256, 512, 64)] {
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(15) as i32 - 7) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (rng.below(3) as i32 - 1) as i8).collect();
+        let bt = transpose(k, n, &b);
+        let tern = TernaryMatrix::from_dense(k, n, &b);
+        let mut c = vec![0i32; m * n];
+        let macs = (m * k * n) as f64;
+        let s = bench(&format!("dense i8 GEMM {m}x{k}x{n}"), 3, 30, || {
+            gemm_i8(m, k, n, &a, &bt, &mut c);
+            std::hint::black_box(&c);
+        });
+        report(&s, macs, "GMAC/s");
+        let s = bench(&format!("ternary GEMM {m}x{k}x{n} (sparsity {:.0}%)", tern.sparsity * 100.0), 3, 30, || {
+            tern.gemm(m, &a, &mut c);
+            std::hint::black_box(&c);
+        });
+        report(&s, macs, "GMAC/s");
+    }
+
+    // full network forward
+    let (manifest, engine) = common::setup();
+    let info = manifest.model("kws").unwrap();
+    let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+    t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
+    let fq_graph = info.fq.clone().unwrap();
+    let params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let (x, _) = ds.sample(0, None);
+    for (nw, label) in [(1.0f32, "ternary (W2)"), (7.0, "dense (W4)")] {
+        let net = FqKwsNet::from_params(&params, nw, 7.0, info.input_shape[1]).unwrap();
+        let macs = net.macs_per_sample() as f64;
+        let mut scratch = Scratch::default();
+        let s = bench(&format!("KWS net forward, {label}"), 5, 50, || {
+            std::hint::black_box(net.forward(&x, &mut scratch));
+        });
+        report(&s, macs, "GMAC/s");
+        println!(
+            "    = {:.0} samples/s/core ({:.2}M int-MACs/sample)",
+            1.0 / s.median_s,
+            macs / 1e6
+        );
+    }
+}

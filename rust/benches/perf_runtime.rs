@@ -1,0 +1,51 @@
+//! Perf: PJRT runtime — train-step latency, forward latency, host-copy
+//! overhead (literal build + fetch vs pure execute). Feeds EXPERIMENTS.md
+//! §Perf (L3 target: non-XLA driver overhead < 10% of step time).
+#[path = "common.rs"]
+mod common;
+
+use fqconv::bench::{banner, bench};
+use fqconv::coordinator::{checkpoint, Trainer, Variant};
+use fqconv::data::{self, Dataset as _};
+use fqconv::runtime::{hp, lit_f32, lit_to_vec_f32};
+use fqconv::util::Rng;
+
+fn main() {
+    banner("perf_runtime — PJRT execute + host-copy overhead");
+    let (manifest, engine) = common::setup();
+    for model in ["kws", "resnet8s"] {
+        let info = manifest.model(model).unwrap();
+        let mut t = Trainer::new(&engine, &manifest, model, Variant::Qat("")).unwrap();
+        t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
+        let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+        let mut rng = Rng::new(3);
+        let batch = ds.train_batch(info.batch, &mut rng);
+        let mut hpv = hp::defaults();
+        hpv[hp::LR] = 0.005;
+        hpv[hp::NW] = 1.0;
+        hpv[hp::NA] = 7.0;
+        let s = bench(&format!("{model} train step (full, incl. literals)"), 3, 20, || {
+            std::hint::black_box(t.step(&batch, None, &hpv).unwrap());
+        });
+        println!("{}", s.report());
+        println!(
+            "    = {:.1} samples/s (batch {})",
+            info.batch as f64 / s.median_s,
+            info.batch
+        );
+        let s = bench(&format!("{model} eval forward (batch)"), 3, 30, || {
+            std::hint::black_box(t.forward(&batch.x, &hpv).unwrap());
+        });
+        println!("{}", s.report());
+        // literal-building overhead alone (the host-copy part of a step)
+        let numel: usize = info.input_shape.iter().product();
+        let data = vec![0.5f32; info.batch * numel];
+        let mut shape = vec![info.batch];
+        shape.extend(&info.input_shape);
+        let s = bench(&format!("{model} literal build+read roundtrip"), 5, 100, || {
+            let l = lit_f32(&shape, &data);
+            std::hint::black_box(lit_to_vec_f32(&l).unwrap());
+        });
+        println!("{}", s.report());
+    }
+}

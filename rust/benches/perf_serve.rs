@@ -1,0 +1,84 @@
+//! Perf: serving layer — throughput/latency across batching policies and
+//! worker counts under open-loop load. Feeds EXPERIMENTS.md §Perf
+//! (target: p99 < 5 ms at the default policy on the KWS net).
+#[path = "common.rs"]
+mod common;
+
+use fqconv::bench::banner;
+use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
+use fqconv::data::{self, Dataset as _};
+use fqconv::infer::FqKwsNet;
+use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server};
+use fqconv::util::{Rng, Timer};
+
+fn main() {
+    banner("perf_serve — router + dynamic batcher");
+    let (manifest, engine) = common::setup();
+    let info = manifest.model("kws").unwrap();
+    let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+    t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
+    let fq_graph = info.fq.clone().unwrap();
+    let params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
+    let net = std::sync::Arc::new(
+        FqKwsNet::from_params(&params, 1.0, 7.0, info.input_shape[1]).unwrap(),
+    );
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let numel: usize = info.input_shape.iter().product();
+    // pre-generate request features (exclude datagen from the measurement)
+    let mut rng = Rng::new(1);
+    let feats: Vec<Vec<f32>> =
+        (0..512).map(|i| ds.sample(i as u64 % 512, Some(&mut rng)).0).collect();
+
+    // NOTE: the sweep below is an *unpaced* open loop — it measures
+    // saturation throughput; latency there is queueing-dominated. The
+    // paced run afterwards measures service latency at ~60% utilization,
+    // which is what the p99 target applies to.
+    println!(
+        "{:<34} {:>9} {:>9} {:>9} {:>9}",
+        "config", "req/s", "p50(us)", "p99(us)", "meanB"
+    );
+    for workers in [1usize, 2, 4] {
+        for (mb, wait) in [(1usize, 1u64), (16, 2000), (32, 4000)] {
+            let factories = (0..workers)
+                .map(|_| ready(NativeBackend::new(net.clone(), info.input_shape.clone())))
+                .collect();
+            let server = Server::start_with(factories, numel, BatchPolicy::new(mb, wait));
+            let timer = Timer::start();
+            let rxs: Vec<_> = feats.iter().map(|f| server.submit(f.clone())).collect();
+            for rx in rxs {
+                rx.recv().unwrap();
+            }
+            let dt = timer.elapsed_s();
+            let stats = server.stats();
+            println!(
+                "{:<34} {:>9.0} {:>9.0} {:>9.0} {:>9.1}",
+                format!("w={workers} max_batch={mb} wait={wait}us"),
+                feats.len() as f64 / dt,
+                stats.p50_us,
+                stats.p99_us,
+                stats.mean_batch
+            );
+            server.shutdown();
+        }
+    }
+
+    // paced run: ~1000 req/s offered vs ~1800 req/s capacity
+    let factories = (0..1)
+        .map(|_| ready(NativeBackend::new(net.clone(), info.input_shape.clone())))
+        .collect();
+    let server = Server::start_with(factories, numel, BatchPolicy::new(8, 1000));
+    let mut rxs = Vec::new();
+    for f in feats.iter() {
+        rxs.push(server.submit(f.clone()));
+        std::thread::sleep(std::time::Duration::from_micros(1000));
+    }
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let stats = server.stats();
+    println!(
+        "paced 1000 req/s (60% util):        p50 {:.0}us  p99 {:.0}us  meanB {:.1}",
+        stats.p50_us, stats.p99_us, stats.mean_batch
+    );
+    server.shutdown();
+}

@@ -1,0 +1,12 @@
+//! Table 1 regenerator: gradual quantization of a CIFAR-10-like ResNet,
+//! GQ vs no-GQ. Expected shape: accuracies track FP down to ~3 bits and
+//! the no-GQ column collapses at ternary (the paper's 79.9-point gap).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let (manifest, engine) = common::setup();
+    let ctx = common::ctx(&engine, &manifest);
+    fqconv::bench::banner("Table 1 — GQ ladder (resnet8s, synthetic CIFAR-10-like)");
+    fqconv::exp::table1(&ctx, "resnet8s").expect("table1");
+}

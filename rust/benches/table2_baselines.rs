@@ -1,0 +1,12 @@
+//! Table 2 regenerator: our learned quantizer vs DoReFa vs PACT at
+//! W2/A2 and W3/A3 under the identical training harness. Expected shape:
+//! ours has the smallest degradation vs its own FP baseline.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let (manifest, engine) = common::setup();
+    let ctx = common::ctx(&engine, &manifest);
+    fqconv::bench::banner("Table 2 — quantizer comparison (resnet8s)");
+    fqconv::exp::table2(&ctx, "resnet8s").expect("table2");
+}

@@ -1,0 +1,12 @@
+//! Table 3 regenerator: the DarkNet ladder on the ImageNet-64 stand-in.
+//! Expected shape: top-1/top-5 flat down the ladder until a moderate
+//! ternary drop (paper: 2.4/1.3 points).
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let (manifest, engine) = common::setup();
+    let ctx = common::ctx(&engine, &manifest);
+    fqconv::bench::banner("Table 3 — DarkNet-tiny ladder (synthetic ImageNet-64-like)");
+    fqconv::exp::table3(&ctx).expect("table3");
+}

@@ -1,0 +1,12 @@
+//! Table 4 regenerator: the KWS gradual-quantization sequence including
+//! the FQ24 BN-free fine-tune. Expected shape: quantized stages stay
+//! within ~1 point of FP; FQ24 within ~1 point of Q24.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let (manifest, engine) = common::setup();
+    let ctx = common::ctx(&engine, &manifest);
+    fqconv::bench::banner("Table 4 — KWS GQ sequence (synthetic speech commands)");
+    fqconv::exp::table4(&ctx).expect("table4");
+}

@@ -1,0 +1,16 @@
+//! Table 5 regenerator: KWS model comparison. Literature rows are quoted
+//! from the paper; our rows use manifest accounting + accuracies measured
+//! by a quick ladder run. Expected shape: our models are 10-100x smaller
+//! in size and mults at competitive accuracy.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let (manifest, engine) = common::setup();
+    let ctx = common::ctx(&engine, &manifest);
+    fqconv::bench::banner("Table 5 — KWS model comparison");
+    let report = fqconv::exp::table4(&ctx).expect("ladder for accuracies");
+    let q35 = report.stage("Q35").map(|s| s.val_acc).unwrap_or(0.0);
+    let fq24 = report.stage("FQ24").map(|s| s.val_acc).unwrap_or(0.0);
+    fqconv::exp::table5(&ctx, q35, fq24).expect("table5");
+}

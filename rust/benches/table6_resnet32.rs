@@ -1,0 +1,13 @@
+//! Table 6 regenerator: CIFAR-100-like ladder on the slim ResNet stand-in
+//! (resnet14s; run `fqconv exp table6 --model resnet32 --budget full` for
+//! the full-size version). Expected shape: graceful degradation down the
+//! ladder; FQ25 ~= Q25.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let (manifest, engine) = common::setup();
+    let ctx = common::ctx(&engine, &manifest);
+    fqconv::bench::banner("Table 6 — ResNet ladder (synthetic CIFAR-100-like)");
+    fqconv::exp::table6(&ctx, "resnet14s").expect("table6");
+}

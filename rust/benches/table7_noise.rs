@@ -1,0 +1,15 @@
+//! Table 7 regenerator: noise on weights/activations/MACs for the
+//! ternary networks, with and without noise-aware training. KWS column
+//! runs on the analog crossbar simulator; the CIFAR column through the
+//! noisy FQ forward artifact. Expected shape: σ<=5% harmless, large σ
+//! degrades, noise training recovers most of the gap.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    let (manifest, engine) = common::setup();
+    let ctx = common::ctx(&engine, &manifest);
+    fqconv::bench::banner("Table 7 — noise resilience (ternary networks)");
+    fqconv::exp::table7_kws(&ctx, false).expect("table7 kws");
+    fqconv::exp::table7_cifar(&ctx, "resnet14s", false).expect("table7 cifar");
+}

@@ -1,0 +1,224 @@
+//! Analog compute-in-memory crossbar simulator (Table 7).
+//!
+//! Models the paper's analog accelerator target: weights stored as
+//! conductances in a crossbar array (noisy memory cells), activations
+//! driven by DACs (noisy), analog Kirchhoff accumulation (effectively
+//! infinite precision — "comes at no additional cost"), and ADC
+//! re-binning into the next layer's quantized input grid (noisy ADC).
+//!
+//! Noise model exactly as §4.4: zero-mean Gaussian with σ expressed in
+//! **percent of one LSB** of the corresponding quantizer —
+//!   * σ_w   on weight codes (memory-cell noise; 1 LSB = 1 code step),
+//!   * σ_a   on activation codes (DAC noise),
+//!   * σ_MAC on the analog sum, in % of the *output* quantizer's LSB
+//!     (ADC input-referred noise).
+//!
+//! The simulator reuses the integer KWS pipeline's structure but computes
+//! in f64 code-space so the Gaussian perturbations are exact, then bins
+//! through the same two-step (Q_out -> next-input) mapping as the
+//! deployed kernel. With all σ = 0 it reduces to the integer engine.
+
+use anyhow::Result;
+
+use crate::coordinator::ParamSet;
+use crate::infer::pipeline::{FqKwsNet, Scratch};
+use crate::quant::learned_quantize;
+use crate::util::Rng;
+
+/// Table-7 noise configuration (percent of LSB).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NoiseConfig {
+    pub sigma_w: f32,
+    pub sigma_a: f32,
+    pub sigma_mac: f32,
+}
+
+impl NoiseConfig {
+    pub fn silent(&self) -> bool {
+        self.sigma_w == 0.0 && self.sigma_a == 0.0 && self.sigma_mac == 0.0
+    }
+
+    /// The paper's five Table-7 operating points.
+    pub fn table7_points() -> Vec<NoiseConfig> {
+        [
+            (1.0, 1.0, 5.0),
+            (5.0, 5.0, 25.0),
+            (10.0, 10.0, 50.0),
+            (20.0, 20.0, 100.0),
+            (30.0, 30.0, 150.0),
+        ]
+        .iter()
+        .map(|&(w, a, m)| NoiseConfig { sigma_w: w, sigma_a: a, sigma_mac: m })
+        .collect()
+    }
+
+    pub fn label(&self) -> String {
+        format!("sw={}% sa={}% smac={}%", self.sigma_w, self.sigma_a, self.sigma_mac)
+    }
+}
+
+/// Crossbar-array simulation of the KWS FQ network.
+pub struct CrossbarKws {
+    net: FqKwsNet,
+    /// float weight codes per layer (conductance programming targets),
+    /// layout (kdim, c_out)
+    wcodes: Vec<Vec<f32>>,
+}
+
+impl CrossbarKws {
+    pub fn new(params: &ParamSet, nw: f32, na: f32, frames: usize) -> Result<Self> {
+        let net = FqKwsNet::from_params(params, nw, na, frames)?;
+        let mut wcodes = Vec::new();
+        for (i, l) in net.layers.iter().enumerate() {
+            let w = params.get(&format!("conv{i}.w")).unwrap();
+            let kdim = l.c_in * l.ksize;
+            let mut codes = vec![0f32; kdim * l.c_out];
+            for ko in 0..l.c_out {
+                for ci in 0..l.c_in {
+                    for f in 0..l.ksize {
+                        codes[(ci * l.ksize + f) * l.c_out + ko] =
+                            l.qw.int_code(w.data()[(ko * l.c_in + ci) * l.ksize + f]) as f32;
+                    }
+                }
+            }
+            wcodes.push(codes);
+        }
+        Ok(CrossbarKws { net, wcodes })
+    }
+
+    pub fn net(&self) -> &FqKwsNet {
+        &self.net
+    }
+
+    /// One noisy inference of a single sample.
+    pub fn forward_noisy(&self, x: &[f32], noise: NoiseConfig, rng: &mut Rng) -> Vec<f32> {
+        if noise.silent() {
+            let mut s = Scratch::default();
+            return self.net.forward(x, &mut s);
+        }
+        let net = &self.net;
+        let t_in = net.frames;
+        // --- digital front end: embedding + input quantization -----------
+        let (dim, n_mfcc, ew, scale, shift, es) = net.embed_view();
+        let qa0 = net.layers[0].qa;
+        let mut codes = vec![0f64; dim * t_in];
+        for k in 0..dim {
+            for t in 0..t_in {
+                let mut acc = 0f32;
+                for c in 0..n_mfcc {
+                    acc += ew[k * n_mfcc + c] * x[c * t_in + t];
+                }
+                let bn = acc * scale[k] + shift[k];
+                let q = learned_quantize(bn, es, net.na, -1.0);
+                codes[k * t_in + t] = qa0.int_code(q) as f64;
+            }
+        }
+        // --- analog crossbar layers ---------------------------------------
+        let mut t_cur = t_in;
+        for (li, l) in net.layers.iter().enumerate() {
+            let t_out = l.t_out(t_cur);
+            // DAC noise on activation codes
+            let acts: Vec<f64> = codes
+                .iter()
+                .map(|&c| c + rng.gaussian() * (noise.sigma_a as f64 / 100.0))
+                .collect();
+            // memory-cell noise on conductances (per inference draw)
+            let wnoisy: Vec<f64> = self.wcodes[li]
+                .iter()
+                .map(|&c| c as f64 + rng.gaussian() * (noise.sigma_w as f64 / 100.0))
+                .collect();
+            let fpre = (l.qa.es as f64 / l.qa.n as f64) * (l.qw.es as f64 / l.qw.n as f64);
+            let (mid_q, next_q) = net.layer_grids(li);
+            let mac_lsb = mid_q.es as f64 / mid_q.n as f64;
+            let mut next_codes = vec![0f64; l.c_out * t_out];
+            for t in 0..t_out {
+                for ko in 0..l.c_out {
+                    // Kirchhoff accumulation: full analog precision
+                    let mut acc = 0f64;
+                    for ci in 0..l.c_in {
+                        for f in 0..l.ksize {
+                            acc += acts[ci * t_cur + t + f * l.dilation]
+                                * wnoisy[(ci * l.ksize + f) * l.c_out + ko];
+                        }
+                    }
+                    let mut y = acc * fpre;
+                    // ADC input-referred noise
+                    y += rng.gaussian() * (noise.sigma_mac as f64 / 100.0) * mac_lsb;
+                    // ADC binning: same two-step as the digital kernel
+                    let q1 = learned_quantize(y as f32, mid_q.es, mid_q.n, mid_q.b);
+                    let code = match next_q {
+                        Some(nq) => nq.int_code(q1),
+                        None => mid_q.int_code(q1),
+                    };
+                    next_codes[ko * t_out + t] = code as f64;
+                }
+            }
+            codes = next_codes;
+            t_cur = t_out;
+        }
+        // --- digital back end: GAP + head ----------------------------------
+        let last = net.layers.last().unwrap();
+        let dq = last.lut.out;
+        let mut pooled = vec![0f32; net.filters];
+        for (k, p) in pooled.iter_mut().enumerate() {
+            let sum: f64 = (0..t_cur).map(|t| codes[k * t_cur + t]).sum();
+            *p = dq.dequantize(sum.round() as i32) / t_cur as f32;
+        }
+        net.head_logits(&pooled)
+    }
+
+    /// Accuracy over `n` validation samples at a noise point, averaged
+    /// over `reps` independent noise draws (paper: 10 test repetitions).
+    pub fn evaluate_noisy(
+        &self,
+        ds: &dyn crate::data::Dataset,
+        n: usize,
+        noise: NoiseConfig,
+        reps: usize,
+        seed: u64,
+    ) -> f64 {
+        let mut total_acc = 0.0;
+        for rep in 0..reps {
+            let mut rng = Rng::new(seed ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut correct = 0usize;
+            for i in 0..n {
+                let (x, y) = ds.sample(i as u64 % crate::data::VAL_SIZE, None);
+                let logits = self.forward_noisy(&x, noise, &mut rng);
+                let pred = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i as i32)
+                    .unwrap();
+                if pred == y {
+                    correct += 1;
+                }
+            }
+            total_acc += correct as f64 / n as f64;
+        }
+        total_acc / reps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_points_match_paper() {
+        let pts = NoiseConfig::table7_points();
+        assert_eq!(pts.len(), 5);
+        assert_eq!(pts[0], NoiseConfig { sigma_w: 1.0, sigma_a: 1.0, sigma_mac: 5.0 });
+        assert_eq!(pts[4], NoiseConfig { sigma_w: 30.0, sigma_a: 30.0, sigma_mac: 150.0 });
+        // MAC sigma = 5x the w/a sigma at every point
+        for p in &pts {
+            assert!((p.sigma_mac - 5.0 * p.sigma_w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn silent_detection() {
+        assert!(NoiseConfig::default().silent());
+        assert!(!NoiseConfig { sigma_w: 1.0, ..Default::default() }.silent());
+    }
+}

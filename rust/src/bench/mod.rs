@@ -1,0 +1,115 @@
+//! Micro-benchmark harness (no criterion in the offline image).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call into
+//! this module: warmup, timed iterations, robust statistics (median /
+//! mean / min / p95), and throughput helpers. Output format is stable so
+//! EXPERIMENTS.md §Perf can quote it directly.
+
+use crate::util::Timer;
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} iters={:<5} mean={:>10} median={:>10} min={:>10} p95={:>10}",
+            self.name,
+            self.iters,
+            fmt_t(self.mean_s),
+            fmt_t(self.median_s),
+            fmt_t(self.min_s),
+            fmt_t(self.p95_s),
+        )
+    }
+
+    /// Items-per-second at the median (e.g. MACs, samples, requests).
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median_s
+    }
+}
+
+fn fmt_t(s: f64) -> String {
+    crate::util::timer::fmt_duration(s)
+}
+
+/// Time `f` for `iters` iterations after `warmup` calls.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_s());
+    }
+    times.sort_by(|a, b| a.total_cmp(b));
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        median_s: times[times.len() / 2],
+        min_s: times[0],
+        p95_s: times[((times.len() as f64 * 0.95) as usize).min(times.len() - 1)],
+    }
+}
+
+/// Adaptive variant: runs until `min_time_s` of measurement or `max_iters`.
+pub fn bench_for(name: &str, min_time_s: f64, max_iters: usize, mut f: impl FnMut()) -> BenchStats {
+    // warmup once
+    f();
+    let mut times = Vec::new();
+    let total = Timer::start();
+    while total.elapsed_s() < min_time_s && times.len() < max_iters {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_s());
+    }
+    times.sort_by(|a, b| a.total_cmp(b));
+    let n = times.len().max(1);
+    let mean = times.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: mean,
+        median_s: times.get(times.len() / 2).copied().unwrap_or(0.0),
+        min_s: times.first().copied().unwrap_or(0.0),
+        p95_s: times.get((times.len() as f64 * 0.95) as usize).copied().unwrap_or(0.0),
+    }
+}
+
+/// Standard table/bench header so all bench outputs look alike.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let s = bench("noop", 2, 10, || n += 1);
+        assert_eq!(s.iters, 10);
+        assert_eq!(n, 12);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.p95_s);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let s = bench("spin", 0, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.throughput(1000.0) > 0.0);
+    }
+}

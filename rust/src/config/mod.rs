@@ -1,0 +1,242 @@
+//! Experiment configuration: a TOML-subset parser (sections, scalar
+//! keys, inline comments) + typed experiment config with defaults and
+//! file/CLI overrides. No serde/toml crates in the offline image.
+//!
+//! Grammar supported:
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"      # strings, numbers, booleans
+//! steps = 200
+//! lr = 0.01
+//! verbose = true
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value ("" = top-level section).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Apply a `section.key=value` override string (CLI `--set`).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let (path, val) = spec.split_once('=').context("override must be sec.key=value")?;
+        let (section, key) = match path.trim().split_once('.') {
+            Some((s, k)) => (s.to_string(), k.to_string()),
+            None => (String::new(), path.trim().to_string()),
+        };
+        let val = parse_value(val.trim())?;
+        self.sections.entry(section).or_default().insert(key, val);
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("unterminated string {s:?}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        return Ok(Value::Num(n));
+    }
+    // bare word = string (convenient for model names)
+    if !s.is_empty() && s.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+        return Ok(Value::Str(s.to_string()));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Experiment budget presets: benches use `quick`, the CLI defaults to `full`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Budget {
+    pub steps_per_stage: usize,
+    pub eval_batches: usize,
+    pub noise_reps: usize,
+    pub noise_samples: usize,
+}
+
+impl Budget {
+    pub fn quick() -> Self {
+        Budget { steps_per_stage: 120, eval_batches: 8, noise_reps: 3, noise_samples: 96 }
+    }
+
+    pub fn full() -> Self {
+        Budget { steps_per_stage: 600, eval_batches: 16, noise_reps: 10, noise_samples: 256 }
+    }
+
+    pub fn smoke() -> Self {
+        Budget { steps_per_stage: 8, eval_batches: 2, noise_reps: 1, noise_samples: 16 }
+    }
+
+    pub fn from_config(cfg: &Config, section: &str, base: Budget) -> Self {
+        Budget {
+            steps_per_stage: cfg.usize_or(section, "steps_per_stage", base.steps_per_stage),
+            eval_batches: cfg.usize_or(section, "eval_batches", base.eval_batches),
+            noise_reps: cfg.usize_or(section, "noise_reps", base.noise_reps),
+            noise_samples: cfg.usize_or(section, "noise_samples", base.noise_samples),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            "top = 1\n[exp]\nmodel = \"kws\"  # the model\nsteps = 200\nlr = 0.01\nverbose = true\nname = resnet8s\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.f64_or("", "top", 0.0), 1.0);
+        assert_eq!(cfg.str_or("exp", "model", "?"), "kws");
+        assert_eq!(cfg.usize_or("exp", "steps", 0), 200);
+        assert!((cfg.f64_or("exp", "lr", 0.0) - 0.01).abs() < 1e-12);
+        assert!(cfg.bool_or("exp", "verbose", false));
+        assert_eq!(cfg.str_or("exp", "name", "?"), "resnet8s");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut cfg = Config::parse("[exp]\nsteps = 10\n").unwrap();
+        cfg.set_override("exp.steps=99").unwrap();
+        assert_eq!(cfg.usize_or("exp", "steps", 0), 99);
+        cfg.set_override("toplevel=5").unwrap();
+        assert_eq!(cfg.usize_or("", "toplevel", 0), 5);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("x = \"open\n").is_err());
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let cfg = Config::parse("x = \"a#b\" # real comment\n").unwrap();
+        assert_eq!(cfg.str_or("", "x", "?"), "a#b");
+    }
+
+    #[test]
+    fn budgets() {
+        assert!(Budget::quick().steps_per_stage < Budget::full().steps_per_stage);
+        let cfg = Config::parse("[budget]\nsteps_per_stage = 42\n").unwrap();
+        let b = Budget::from_config(&cfg, "budget", Budget::quick());
+        assert_eq!(b.steps_per_stage, 42);
+        assert_eq!(b.eval_batches, Budget::quick().eval_batches);
+    }
+}

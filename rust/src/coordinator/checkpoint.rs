@@ -1,0 +1,147 @@
+//! FQCK1 checkpoint format — mirror of python/compile/ckpt.py.
+//!
+//! Layout (little-endian):
+//!   magic "FQCK1\n" | u32 count | per tensor:
+//!   u16 name_len | name | u8 ndim | u32*ndim dims | f32*numel data
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::TensorF;
+
+pub const MAGIC: &[u8; 6] = b"FQCK1\n";
+
+/// An ordered set of named tensors (order matters: it is spec order).
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub tensors: Vec<(String, TensorF)>,
+    index: BTreeMap<String, usize>,
+}
+
+impl Checkpoint {
+    pub fn new(tensors: Vec<(String, TensorF)>) -> Self {
+        let index = tensors.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
+        Checkpoint { tensors, index }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TensorF> {
+        self.index.get(name).map(|&i| &self.tensors[i].1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+pub fn read(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse(&buf).with_context(|| format!("parsing checkpoint {}", path.display()))
+}
+
+pub fn parse(buf: &[u8]) -> Result<Checkpoint> {
+    if buf.len() < 10 || &buf[..6] != MAGIC {
+        bail!("bad FQCK magic");
+    }
+    let mut off = 6;
+    let count = u32::from_le_bytes(buf[off..off + 4].try_into()?) as usize;
+    off += 4;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        if off + 2 > buf.len() {
+            bail!("truncated checkpoint (name len)");
+        }
+        let nlen = u16::from_le_bytes(buf[off..off + 2].try_into()?) as usize;
+        off += 2;
+        let name = std::str::from_utf8(&buf[off..off + nlen])?.to_string();
+        off += nlen;
+        let ndim = buf[off] as usize;
+        off += 1;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u32::from_le_bytes(buf[off..off + 4].try_into()?) as usize);
+            off += 4;
+        }
+        let numel: usize = dims.iter().product();
+        let need = numel * 4;
+        if off + need > buf.len() {
+            bail!("truncated checkpoint (tensor {name} data)");
+        }
+        let mut data = vec![0f32; numel];
+        for (i, chunk) in buf[off..off + need].chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into()?);
+        }
+        off += need;
+        tensors.push((name, TensorF::from_vec(&dims, data)));
+    }
+    Ok(Checkpoint::new(tensors))
+}
+
+pub fn write(path: &Path, ck: &Checkpoint) -> Result<()> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(ck.tensors.len() as u32).to_le_bytes());
+    for (name, t) in &ck.tensors {
+        let nb = name.as_bytes();
+        out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        out.extend_from_slice(nb);
+        out.push(t.ndim() as u8);
+        for &d in t.shape() {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint::new(vec![
+            ("a.w".into(), TensorF::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.])),
+            ("a.s".into(), TensorF::scalar(-0.5)),
+        ]);
+        let dir = std::env::temp_dir().join("fqck_test");
+        let path = dir.join("t.ckpt");
+        write(&path, &ck).unwrap();
+        let ck2 = read(&path).unwrap();
+        assert_eq!(ck2.len(), 2);
+        assert_eq!(ck2.get("a.w").unwrap().data(), ck.get("a.w").unwrap().data());
+        assert_eq!(ck2.get("a.s").unwrap().shape(), &[] as &[usize]);
+        assert_eq!(ck2.tensors[0].0, "a.w"); // order preserved
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"NOTCK1\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let ck = Checkpoint::new(vec![("x".into(), TensorF::from_vec(&[4], vec![0.; 4]))]);
+        let dir = std::env::temp_dir().join("fqck_test2");
+        let path = dir.join("t.ckpt");
+        write(&path, &ck).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(parse(&bytes[..bytes.len() - 3]).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! §3.4: transform a trained QAT network (conv + BN + ReLU + quantizers)
+//! into its fully-quantized twin (FQ-Conv, no BN, quantizer-as-ReLU).
+//!
+//! Per fq_map rule (emitted by the python model definitions):
+//!   * fold inference-mode BN into the conv weights per output channel,
+//!     `w'[k,..] = w[k,..] * gamma[k] / sqrt(var[k] + eps)`. The shift beta' is dropped — the paper finds it "doesn't contribute
+//!     much to overall accuracy if we train the network to adapt", which
+//!     is exactly what the FQ fine-tune stage does.
+//!   * output quantizer scale `so` <- the QAT activation scale `sa`
+//!     (the quantizer that used to sit after BN+ReLU);
+//!   * input scale `sa` <- the predecessor's activation scale (the grid
+//!     the incoming activations already live on);
+//!   * weight scale `sw` <- QAT `sw`, shifted by the log-ratio of
+//!     max-|w| after/before folding so the folded weights still span the
+//!     quantizer range (the per-layer part of "absorb the BN scale into
+//!     the quantization scale"; the per-channel remainder is what the
+//!     fine-tune absorbs).
+//!
+//! Every parameter whose name exists identically in both graphs (embed
+//! layer, heads, `.sadd` scales, `input.s`) is copied verbatim first.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{GraphSpec, ModelInfo};
+
+use super::params::ParamSet;
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// Build FQ parameters from trained QAT parameters.
+pub fn qat_to_fq(info: &ModelInfo, fq_graph: &GraphSpec, qat: &ParamSet) -> Result<ParamSet> {
+    let mut fq = ParamSet::zeros(fq_graph);
+
+    // 1. verbatim copies for shared names
+    for i in 0..fq.specs.len() {
+        let name = fq.specs[i].name.clone();
+        if let Some(src) = qat.get(&name) {
+            if src.shape() == fq.specs[i].shape.as_slice() {
+                fq.values[i] = src.clone();
+            }
+        }
+    }
+
+    // 2. per-rule BN folding + scale wiring
+    for rule in &info.fq_map {
+        let wname_q = format!("{}.w", rule.qat);
+        let w = qat.get(&wname_q).with_context(|| format!("qat missing {wname_q}"))?;
+        let mut wv = w.clone();
+        if rule.bn {
+            let gamma = qat
+                .get(&format!("{}.bn.gamma", rule.qat))
+                .with_context(|| format!("qat missing {}.bn.gamma", rule.qat))?;
+            let var = qat
+                .get(&format!("{}.bn.var", rule.qat))
+                .with_context(|| format!("qat missing {}.bn.var", rule.qat))?;
+            let cout = wv.shape()[0];
+            let per = wv.len() / cout;
+            let data = wv.data_mut();
+            for k in 0..cout {
+                let g = gamma.data()[k] / (var.data()[k] + BN_EPS).sqrt();
+                for v in &mut data[k * per..(k + 1) * per] {
+                    *v *= g;
+                }
+            }
+        }
+        // weight scale shift: keep folded weights spanning the clip range
+        let sw_q = qat.scalar(&format!("{}.sw", rule.qat))?;
+        let before = w.max_abs().max(1e-8);
+        let after = wv.max_abs().max(1e-8);
+        let sw_fq = sw_q + (after / before).ln();
+
+        let wname_f = format!("{}.w", rule.fq);
+        *fq.get_mut(&wname_f).with_context(|| format!("fq missing {wname_f}"))? = wv;
+        fq.set_scalar(&format!("{}.sw", rule.fq), sw_fq)?;
+        // output grid = the QAT block's activation quantizer
+        let sa_q = qat.scalar(&format!("{}.sa", rule.qat))?;
+        fq.set_scalar(&format!("{}.so", rule.fq), sa_q)?;
+        // input grid = predecessor's output quantizer
+        let pred = qat.scalar(&rule.pred_scale)?;
+        fq.set_scalar(&format!("{}.sa", rule.fq), pred)?;
+    }
+    Ok(fq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{FqRule, TensorSpec};
+    use crate::tensor::TensorF;
+
+    fn toy() -> (ModelInfo, GraphSpec, ParamSet) {
+        let qat_graph = GraphSpec {
+            trainable: vec![
+                TensorSpec { name: "input.s".into(), shape: vec![] },
+                TensorSpec { name: "c.w".into(), shape: vec![2, 1, 1, 1] },
+                TensorSpec { name: "c.bn.gamma".into(), shape: vec![2] },
+                TensorSpec { name: "c.bn.beta".into(), shape: vec![2] },
+                TensorSpec { name: "c.sw".into(), shape: vec![] },
+                TensorSpec { name: "c.sa".into(), shape: vec![] },
+            ],
+            state: vec![
+                TensorSpec { name: "c.bn.mean".into(), shape: vec![2] },
+                TensorSpec { name: "c.bn.var".into(), shape: vec![2] },
+            ],
+            opt: vec![],
+            param_count: 2,
+        };
+        let fq_graph = GraphSpec {
+            trainable: vec![
+                TensorSpec { name: "input.s".into(), shape: vec![] },
+                TensorSpec { name: "c.w".into(), shape: vec![2, 1, 1, 1] },
+                TensorSpec { name: "c.sw".into(), shape: vec![] },
+                TensorSpec { name: "c.sa".into(), shape: vec![] },
+                TensorSpec { name: "c.so".into(), shape: vec![] },
+            ],
+            state: vec![],
+            opt: vec![],
+            param_count: 2,
+        };
+        let mut qat = ParamSet::zeros(&qat_graph);
+        *qat.get_mut("c.w").unwrap() = TensorF::from_vec(&[2, 1, 1, 1], vec![1.0, -2.0]);
+        *qat.get_mut("c.bn.gamma").unwrap() = TensorF::from_vec(&[2], vec![2.0, 0.5]);
+        *qat.get_mut("c.bn.var").unwrap() = TensorF::from_vec(&[2], vec![1.0, 1.0]);
+        qat.set_scalar("input.s", -0.3).unwrap();
+        qat.set_scalar("c.sw", 0.1).unwrap();
+        qat.set_scalar("c.sa", 0.7).unwrap();
+        let info = ModelInfo {
+            name: "toy".into(),
+            kind: "resnet".into(),
+            batch: 1,
+            input_shape: vec![1, 1, 1],
+            num_classes: 2,
+            opt_kind: "sgd".into(),
+            macs_per_sample: 0,
+            qat: qat_graph,
+            fq: Some(fq_graph.clone()),
+            fq_map: vec![FqRule {
+                fq: "c".into(),
+                qat: "c".into(),
+                pred_scale: "input.s".into(),
+                bn: true,
+            }],
+            artifacts: Default::default(),
+            init_ckpt: String::new(),
+        };
+        (info, fq_graph, qat)
+    }
+
+    #[test]
+    fn folds_bn_per_channel() {
+        let (info, fq_graph, qat) = toy();
+        let fq = qat_to_fq(&info, &fq_graph, &qat).unwrap();
+        let w = fq.get("c.w").unwrap().data();
+        // gamma/sqrt(var+eps) = [2.0, 0.5] (var=1, eps tiny)
+        assert!((w[0] - 2.0).abs() < 1e-3, "w0={}", w[0]);
+        assert!((w[1] + 1.0).abs() < 1e-3, "w1={}", w[1]);
+    }
+
+    #[test]
+    fn wires_scales() {
+        let (info, fq_graph, qat) = toy();
+        let fq = qat_to_fq(&info, &fq_graph, &qat).unwrap();
+        assert_eq!(fq.scalar("c.so").unwrap(), 0.7); // <- qat c.sa
+        assert_eq!(fq.scalar("c.sa").unwrap(), -0.3); // <- input.s
+        assert_eq!(fq.scalar("input.s").unwrap(), -0.3); // verbatim copy
+        // sw shifted by ln(maxabs_after / maxabs_before) = ln(2/2)=0 => ~0.1
+        // before fold max|w|=2, after fold max|w'|=2 => unchanged
+        assert!((fq.scalar("c.sw").unwrap() - 0.1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn missing_rule_tensor_errors() {
+        let (mut info, fq_graph, qat) = toy();
+        info.fq_map[0].qat = "nope".into();
+        assert!(qat_to_fq(&info, &fq_graph, &qat).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Layer-3 coordination: the paper's training pipeline as a system.
+//!
+//! * [`checkpoint`]   — FQCK1 checkpoint store (shared format with aot.py)
+//! * [`params`]       — named parameter sets bound to manifest specs
+//! * [`trainer`]      — drives one model's AOT train/forward artifacts
+//! * [`schedule`]     — gradual-quantization stage ladders (Tables 1/4/6)
+//! * [`pipeline`]     — runs a schedule end-to-end: stage init chaining,
+//!                      teacher promotion, distillation orchestration
+//! * [`fq_transform`] — §3.4 BN-folding QAT->FQ parameter transform
+
+pub mod checkpoint;
+pub mod fq_transform;
+pub mod params;
+pub mod pipeline;
+pub mod schedule;
+pub mod trainer;
+
+pub use params::ParamSet;
+pub use pipeline::{Pipeline, PipelineReport, StageResult};
+pub use schedule::{Schedule, Stage, TeacherPolicy};
+pub use trainer::{StepStats, Trainer, Variant};

@@ -1,0 +1,162 @@
+//! Named parameter sets bound to manifest tensor specs.
+//!
+//! A [`ParamSet`] is the coordinator's host-side view of one graph
+//! family's `trainable + state` tensors, in exactly the positional order
+//! the lowered artifact expects.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{GraphSpec, TensorSpec};
+use crate::tensor::TensorF;
+use crate::util::Rng;
+
+use super::checkpoint::Checkpoint;
+
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub specs: Vec<TensorSpec>,
+    pub values: Vec<TensorF>,
+    /// number of leading trainable tensors (rest is state)
+    pub n_trainable: usize,
+}
+
+impl ParamSet {
+    /// Allocate zeros matching a graph spec (trainable then state).
+    pub fn zeros(graph: &GraphSpec) -> Self {
+        let specs: Vec<TensorSpec> = graph.all_specs().cloned().collect();
+        let values = specs.iter().map(|s| TensorF::zeros(&s.shape)).collect();
+        ParamSet { specs, values, n_trainable: graph.trainable.len() }
+    }
+
+    /// Load from a checkpoint; every spec must be present with the right shape.
+    pub fn from_checkpoint(graph: &GraphSpec, ck: &Checkpoint) -> Result<Self> {
+        let mut ps = Self::zeros(graph);
+        for (i, spec) in ps.specs.iter().enumerate() {
+            match ck.get(&spec.name) {
+                Some(t) if t.shape() == spec.shape.as_slice() => ps.values[i] = t.clone(),
+                Some(t) => bail!(
+                    "checkpoint tensor {} shape {:?} != spec {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                ),
+                None => bail!("checkpoint missing tensor {}", spec.name),
+            }
+        }
+        Ok(ps)
+    }
+
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        Checkpoint::new(
+            self.specs.iter().zip(&self.values).map(|(s, v)| (s.name.clone(), v.clone())).collect(),
+        )
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TensorF> {
+        self.index_of(name).map(|i| &self.values[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut TensorF> {
+        self.index_of(name).map(move |i| &mut self.values[i])
+    }
+
+    /// Scalar parameter value (quantizer log-scales etc.).
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        match self.get(name) {
+            Some(t) if t.len() == 1 => Ok(t.data()[0]),
+            Some(t) => bail!("{name} is not scalar ({:?})", t.shape()),
+            None => bail!("no parameter {name}"),
+        }
+    }
+
+    pub fn set_scalar(&mut self, name: &str, v: f32) -> Result<()> {
+        match self.get_mut(name) {
+            Some(t) if t.len() == 1 => {
+                t.data_mut()[0] = v;
+                Ok(())
+            }
+            Some(_) => bail!("{name} is not scalar"),
+            None => bail!("no parameter {name}"),
+        }
+    }
+
+    /// Total element count (all tensors).
+    pub fn numel(&self) -> usize {
+        self.values.iter().map(|t| t.len()).sum()
+    }
+
+    /// Random He-style re-initialization (used by tests and ablations).
+    pub fn randomize(&mut self, rng: &mut Rng) {
+        for (spec, t) in self.specs.iter().zip(self.values.iter_mut()) {
+            if spec.name.ends_with(".w") {
+                let fan_in: usize = spec.shape.iter().skip(1).product::<usize>().max(1);
+                let std = (2.0 / fan_in as f32).sqrt();
+                rng.fill_gaussian(t.data_mut(), std);
+            } else if spec.name.contains(".bn.var") {
+                t.data_mut().fill(1.0);
+            } else if spec.name.contains(".bn.gamma") {
+                t.data_mut().fill(1.0);
+            } else {
+                t.data_mut().fill(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::GraphSpec;
+
+    fn toy_graph() -> GraphSpec {
+        GraphSpec {
+            trainable: vec![
+                TensorSpec { name: "a.w".into(), shape: vec![4, 3] },
+                TensorSpec { name: "a.s".into(), shape: vec![] },
+            ],
+            state: vec![TensorSpec { name: "a.bn.mean".into(), shape: vec![4] }],
+            opt: vec![vec![4, 3], vec![]],
+            param_count: 12,
+        }
+    }
+
+    #[test]
+    fn zeros_layout() {
+        let ps = ParamSet::zeros(&toy_graph());
+        assert_eq!(ps.specs.len(), 3);
+        assert_eq!(ps.n_trainable, 2);
+        assert_eq!(ps.numel(), 12 + 1 + 4);
+    }
+
+    #[test]
+    fn scalar_access() {
+        let mut ps = ParamSet::zeros(&toy_graph());
+        ps.set_scalar("a.s", -0.7).unwrap();
+        assert_eq!(ps.scalar("a.s").unwrap(), -0.7);
+        assert!(ps.scalar("a.w").is_err());
+        assert!(ps.scalar("nope").is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut ps = ParamSet::zeros(&toy_graph());
+        ps.get_mut("a.w").unwrap().data_mut()[5] = 3.5;
+        let ck = ps.to_checkpoint();
+        let ps2 = ParamSet::from_checkpoint(&toy_graph(), &ck).unwrap();
+        assert_eq!(ps2.get("a.w").unwrap().data()[5], 3.5);
+    }
+
+    #[test]
+    fn from_checkpoint_rejects_shape_mismatch() {
+        let ck = Checkpoint::new(vec![
+            ("a.w".into(), TensorF::zeros(&[4, 2])),
+            ("a.s".into(), TensorF::scalar(0.0)),
+            ("a.bn.mean".into(), TensorF::zeros(&[4])),
+        ]);
+        assert!(ParamSet::from_checkpoint(&toy_graph(), &ck).is_err());
+    }
+}

@@ -1,0 +1,321 @@
+//! Pipeline: runs a gradual-quantization [`Schedule`] end to end.
+//!
+//! For each stage the pipeline (a) initializes from the named earlier
+//! stage's parameters (or the shipped init checkpoint), (b) resolves the
+//! distillation teacher per the schedule's [`TeacherPolicy`] and computes
+//! teacher logits batch-by-batch through the teacher's forward artifact,
+//! (c) drives the stage's train artifact, (d) evaluates on the held-out
+//! ids and records the stage result, and (e) optionally persists an FQCK
+//! checkpoint per stage.
+//!
+//! This file IS the paper's §3.2+§3.3 as a system: bitwidth laddering,
+//! teacher promotion ("each time we obtained a more accurate network ...
+//! it became the teacher"), and the §3.4 QAT->FQ hand-off.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::data::Dataset;
+use crate::runtime::{hp, Engine, Manifest};
+use crate::util::{Rng, Timer};
+
+use super::checkpoint;
+use super::fq_transform;
+use super::params::ParamSet;
+use super::schedule::{Schedule, Stage, TeacherPolicy};
+use super::trainer::{Trainer, Variant};
+
+#[derive(Clone, Debug)]
+pub struct StageResult {
+    pub name: String,
+    pub wbits: u32,
+    pub abits: u32,
+    pub fq: bool,
+    pub val_acc: f64,
+    pub val_topk: f64,
+    pub final_loss: f32,
+    pub steps: usize,
+    pub seconds: f64,
+    pub teacher: Option<String>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PipelineReport {
+    pub model: String,
+    pub stages: Vec<StageResult>,
+}
+
+impl PipelineReport {
+    pub fn stage(&self, name: &str) -> Option<&StageResult> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+
+    pub fn render_table(&self) -> String {
+        let mut out = format!(
+            "{:<7} {:>6} {:>6} {:>4} {:>9} {:>9} {:>8} {:>8}\n",
+            "stage", "w-bits", "a-bits", "fq", "val-top1", "val-topk", "loss", "teacher"
+        );
+        for s in &self.stages {
+            out.push_str(&format!(
+                "{:<7} {:>6} {:>6} {:>4} {:>8.2}% {:>8.2}% {:>8.4} {:>8}\n",
+                s.name,
+                if s.wbits == 0 { "fp".into() } else { s.wbits.to_string() },
+                if s.abits == 0 { "fp".into() } else { s.abits.to_string() },
+                if s.fq { "yes" } else { "no" },
+                s.val_acc * 100.0,
+                s.val_topk * 100.0,
+                s.final_loss,
+                s.teacher.as_deref().unwrap_or("-"),
+            ));
+        }
+        out
+    }
+}
+
+/// Stored per completed stage: parameters + the hp fields needed to run
+/// its forward pass as a teacher.
+struct StageArtifact {
+    params: ParamSet,
+    variant: Variant,
+    nw: f32,
+    na: f32,
+    acc: f64,
+}
+
+/// Snap every `<layer>.sw` to a robust data-driven scale for the given
+/// positive level count `n` (see call site above):
+///
+///   es = min( max|w| , 1.4 * n * mean|w| )
+///
+/// For ternary (n=1) this is the classic TWN threshold (the quantizer's
+/// decision boundary lands at ~0.7 mean|w|); for wider codes it converges
+/// to max|w|. The min() guards against per-channel dispersion: after BN
+/// folding, max|w| can sit 100x above the typical weight (tiny running
+/// variances in early layers), and a max-based ternary scale would round
+/// almost every weight to zero — a dead network that the b=0 quantized
+/// ReLU cannot recover by gradient (both x and s gradients vanish below
+/// the clip). Diagnosed on the Table-4 FQ24 stage; see EXPERIMENTS.md.
+pub fn calibrate_weight_scales(params: &mut ParamSet, n: f32) {
+    let n = n.max(1.0);
+    let names: Vec<String> = params
+        .specs
+        .iter()
+        .filter_map(|s| s.name.strip_suffix(".sw").map(|p| p.to_string()))
+        .collect();
+    for prefix in names {
+        if let Some(w) = params.get(&format!("{prefix}.w")) {
+            let max = w.max_abs();
+            let mean_abs = w.data().iter().map(|v| v.abs()).sum::<f32>() / w.len().max(1) as f32;
+            let es = max.min(1.4 * n * mean_abs).max(1e-4);
+            let _ = params.set_scalar(&format!("{prefix}.sw"), es.ln());
+        }
+    }
+}
+
+pub struct Pipeline<'a> {
+    pub engine: &'a Engine,
+    pub manifest: &'a Manifest,
+    pub dataset: &'a dyn Dataset,
+    /// flavor for QAT stages ("" = our learned quantizer; "dorefa"/"pact")
+    pub flavor: &'static str,
+    pub seed: u64,
+    /// validation batches per evaluation
+    pub eval_batches: usize,
+    pub topk: usize,
+    /// distillation weight when a teacher is present
+    pub distill_weight: f32,
+    pub weight_decay: f32,
+    /// write per-stage checkpoints here if set
+    pub ckpt_dir: Option<PathBuf>,
+    /// per-step log callback (stage, step, loss, acc)
+    pub verbose: bool,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(engine: &'a Engine, manifest: &'a Manifest, dataset: &'a dyn Dataset) -> Self {
+        Pipeline {
+            engine,
+            manifest,
+            dataset,
+            flavor: "",
+            seed: 17,
+            eval_batches: 8,
+            topk: 5,
+            distill_weight: 0.6,
+            weight_decay: 5e-4,
+            ckpt_dir: None,
+            verbose: false,
+        }
+    }
+
+    fn base_hp(&self, stage: &Stage) -> [f32; hp::LEN] {
+        let mut v = hp::defaults();
+        v[hp::LR] = stage.lr;
+        v[hp::WEIGHT_DECAY] = self.weight_decay;
+        v[hp::NW] = stage.n_levels_w();
+        v[hp::NA] = stage.n_levels_a();
+        v
+    }
+
+    /// Run the whole schedule. Returns the report; final stage parameters
+    /// are persisted to ckpt_dir (if set) as `<model>_<stage>.ckpt`.
+    pub fn run(&self, schedule: &Schedule) -> Result<PipelineReport> {
+        schedule.validate()?;
+        let mut rng = Rng::new(self.seed);
+        let mut report = PipelineReport { model: schedule.model.clone(), ..Default::default() };
+        let mut store: BTreeMap<String, StageArtifact> = BTreeMap::new();
+        // one QAT trainer reused across stages; FQ trainer created lazily
+        let mut qat = Trainer::new(self.engine, self.manifest, &schedule.model, Variant::Qat(self.flavor))?;
+        let mut fq: Option<Trainer> = None;
+        // teacher forward runs through a dedicated QAT trainer so the
+        // student's parameters are untouched
+        let mut teacher_rt =
+            Trainer::new(self.engine, self.manifest, &schedule.model, Variant::Qat(self.flavor))?;
+        let init_ck = checkpoint::read(&self.manifest.dir.join(&qat.info.init_ckpt))?;
+
+        for stage in &schedule.stages {
+            let timer = Timer::start();
+            let variant = if stage.fq { Variant::Fq } else { Variant::Qat(self.flavor) };
+            // --- (a) initialize --------------------------------------------------
+            if stage.fq {
+                if fq.is_none() {
+                    fq = Some(Trainer::new(self.engine, self.manifest, &schedule.model, Variant::Fq)?);
+                }
+                let t = fq.as_mut().unwrap();
+                let src = &store
+                    .get(stage.init_from.as_ref().unwrap())
+                    .context("fq init stage missing")?
+                    .params;
+                let fq_params =
+                    fq_transform::qat_to_fq(&t.info, &t.graph, src).context("qat->fq transform")?;
+                t.set_params(fq_params);
+            } else {
+                match &stage.init_from {
+                    Some(src) => {
+                        let a = store.get(src).context("init stage missing")?;
+                        qat.set_params(a.params.clone());
+                    }
+                    None => qat.load_params(&init_ck)?,
+                }
+            }
+
+            // weight-scale calibration: on entering a quantized stage, snap
+            // each layer's weight log-scale to ln(max|w|) so the clip range
+            // matches the trained weight distribution. Without this, e^s=1
+            // vs |w|~0.1 rounds every ternary code to zero — the "too wide
+            // initial quantization range collapses all values onto a single
+            // quantized value" failure mode the paper calls out in §3.2.
+            if stage.wbits > 0 {
+                let t: &mut Trainer = if stage.fq { fq.as_mut().unwrap() } else { &mut qat };
+                calibrate_weight_scales(&mut t.params, stage.n_levels_w());
+            }
+
+            // --- (b) resolve teacher ---------------------------------------------
+            let teacher_name = match (schedule.policy, &stage.teacher) {
+                (TeacherPolicy::PromoteBest, Some(_)) | (TeacherPolicy::PromoteBest, None) => {
+                    // most accurate completed stage so far (if any)
+                    store
+                        .iter()
+                        .filter(|(_, a)| matches!(a.variant, Variant::Qat(_)))
+                        .max_by(|a, b| a.1.acc.total_cmp(&b.1.acc))
+                        .map(|(n, _)| n.clone())
+                        .or_else(|| stage.teacher.clone())
+                }
+                (TeacherPolicy::Declared, t) => t.clone(),
+            };
+            let teacher = teacher_name.as_ref().and_then(|n| store.get(n));
+            let mut teacher_hp = hp::defaults();
+            if let Some(t) = teacher {
+                teacher_rt.set_params(t.params.clone());
+                teacher_hp[hp::NW] = t.nw;
+                teacher_hp[hp::NA] = t.na;
+            }
+
+            // --- (c) train ---------------------------------------------------------
+            let mut hpv = self.base_hp(stage);
+            hpv[hp::DISTILL_WEIGHT] = if teacher.is_some() { self.distill_weight } else { 0.0 };
+            let t: &mut Trainer = if stage.fq { fq.as_mut().unwrap() } else { &mut qat };
+            let mut last_loss = f32::NAN;
+            for step in 0..stage.steps {
+                let batch = self.dataset.train_batch(t.info.batch, &mut rng);
+                let tlogits = match teacher {
+                    Some(_) => Some(teacher_rt.forward(&batch.x, &teacher_hp)?),
+                    None => None,
+                };
+                hpv[hp::SEED] = (self.seed as u32 ^ (step as u32 * 2654435761)) as f32;
+                let stats = t.step(&batch, tlogits.as_ref(), &hpv)?;
+                last_loss = stats.loss;
+                if self.verbose && (step % 20 == 0 || step + 1 == stage.steps) {
+                    eprintln!(
+                        "[{}] {} step {:>4}/{} loss={:.4} acc={:.3}",
+                        schedule.model, stage.name, step, stage.steps, stats.loss, stats.acc
+                    );
+                }
+            }
+
+            // --- (d) evaluate --------------------------------------------------------
+            let mut eval_hp = self.base_hp(stage);
+            eval_hp[hp::DISTILL_WEIGHT] = 0.0;
+            let (top1, topk) =
+                t.evaluate_topk(self.dataset, &eval_hp, self.eval_batches, self.topk)?;
+            let result = StageResult {
+                name: stage.name.clone(),
+                wbits: stage.wbits,
+                abits: stage.abits,
+                fq: stage.fq,
+                val_acc: top1,
+                val_topk: topk,
+                final_loss: last_loss,
+                steps: stage.steps,
+                seconds: timer.elapsed_s(),
+                teacher: teacher_name.clone(),
+            };
+            if self.verbose {
+                eprintln!(
+                    "[{}] {} done: top1={:.2}% topk={:.2}% ({:.1}s)",
+                    schedule.model,
+                    stage.name,
+                    top1 * 100.0,
+                    topk * 100.0,
+                    result.seconds
+                );
+            }
+
+            // --- (e) store + persist ---------------------------------------------------
+            if let Some(dir) = &self.ckpt_dir {
+                let path = dir.join(format!("{}_{}.ckpt", schedule.model, stage.name));
+                checkpoint::write(&path, &t.params.to_checkpoint())?;
+            }
+            store.insert(
+                stage.name.clone(),
+                StageArtifact {
+                    params: t.params.clone(),
+                    variant,
+                    nw: stage.n_levels_w(),
+                    na: stage.n_levels_a(),
+                    acc: top1,
+                },
+            );
+            report.stages.push(result);
+        }
+        Ok(report)
+    }
+
+    /// Final parameters of a stage re-run (convenience for examples/benches:
+    /// run the schedule and return the last stage's parameters too).
+    pub fn run_returning_params(
+        &self,
+        schedule: &Schedule,
+    ) -> Result<(PipelineReport, ParamSet)> {
+        // re-run with checkpointing into a temp dir if none configured
+        let report = self.run(schedule)?;
+        let last = schedule.stages.last().context("empty schedule")?;
+        let dir = self.ckpt_dir.clone().context("run_returning_params needs ckpt_dir")?;
+        let ck = checkpoint::read(&dir.join(format!("{}_{}.ckpt", schedule.model, last.name)))?;
+        let info = self.manifest.model(&schedule.model)?;
+        let graph = if last.fq { info.fq.clone().context("fq graph")? } else { info.qat.clone() };
+        Ok((report, ParamSet::from_checkpoint(&graph, &ck)?))
+    }
+}

@@ -1,0 +1,365 @@
+//! Gradual-quantization schedules (§3.2): the stage ladders of
+//! Tables 1, 4 and 6 as data, plus validation and the Fig.-1 renderer.
+//!
+//! A stage names its initializing network and its teacher by *stage
+//! name* — exactly how the paper's tables specify them ("Init. net",
+//! "Trainer net"). `Schedule::validate` checks the reference DAG is
+//! legal (references resolve to strictly earlier stages; bitwidths only
+//! decrease along init chains; FQ stages initialize from a same-bitwidth
+//! QAT stage).
+
+use anyhow::{bail, Result};
+
+/// One training stage of the ladder.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    pub name: String,
+    /// weight bits; 0 = full precision
+    pub wbits: u32,
+    /// activation bits; 0 = full precision
+    pub abits: u32,
+    /// stage whose final parameters initialize this one (None = random init)
+    pub init_from: Option<String>,
+    /// distillation teacher stage (None = no distillation)
+    pub teacher: Option<String>,
+    /// fully-quantized fine-tune stage (BN removed, §3.4)
+    pub fq: bool,
+    pub steps: usize,
+    pub lr: f32,
+}
+
+impl Stage {
+    pub fn new(name: &str, wbits: u32, abits: u32) -> Self {
+        Stage {
+            name: name.into(),
+            wbits,
+            abits,
+            init_from: None,
+            teacher: None,
+            fq: false,
+            steps: 200,
+            lr: 0.01,
+        }
+    }
+
+    pub fn from(mut self, init: &str) -> Self {
+        self.init_from = Some(init.into());
+        self
+    }
+
+    pub fn taught_by(mut self, teacher: &str) -> Self {
+        self.teacher = Some(teacher.into());
+        self
+    }
+
+    pub fn fq(mut self) -> Self {
+        self.fq = true;
+        self
+    }
+
+    pub fn steps(mut self, n: usize) -> Self {
+        self.steps = n;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    /// Positive level count for the hp vector (0 disables quantization).
+    pub fn n_levels_w(&self) -> f32 {
+        if self.wbits == 0 { 0.0 } else { ((1u32 << (self.wbits - 1)) - 1) as f32 }
+    }
+
+    pub fn n_levels_a(&self) -> f32 {
+        if self.abits == 0 { 0.0 } else { ((1u32 << (self.abits - 1)) - 1) as f32 }
+    }
+
+    fn bits_label(&self) -> String {
+        let b = |v: u32| if v == 0 { "fp".to_string() } else { v.to_string() };
+        format!("W{}/A{}", b(self.wbits), b(self.abits))
+    }
+}
+
+/// How the pipeline picks teachers when a stage doesn't name one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TeacherPolicy {
+    /// use exactly what each stage declares
+    Declared,
+    /// paper §4.2: "each time we obtained a more accurate network ...
+    /// the more accurate network became the teacher"
+    PromoteBest,
+}
+
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub model: String,
+    pub stages: Vec<Stage>,
+    pub policy: TeacherPolicy,
+}
+
+impl Schedule {
+    pub fn new(model: &str, stages: Vec<Stage>, policy: TeacherPolicy) -> Result<Self> {
+        let s = Schedule { model: model.into(), stages, policy };
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn stage(&self, name: &str) -> Option<&Stage> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+
+    /// DAG legality + monotone-bitwidth checks.
+    pub fn validate(&self) -> Result<()> {
+        for (i, st) in self.stages.iter().enumerate() {
+            if self.stages.iter().take(i).any(|p| p.name == st.name) {
+                bail!("duplicate stage name {}", st.name);
+            }
+            for (what, r) in [("init_from", &st.init_from), ("teacher", &st.teacher)] {
+                if let Some(name) = r {
+                    let pos = self.stages.iter().position(|p| &p.name == name);
+                    match pos {
+                        None => bail!("stage {}: {what} references unknown stage {name}", st.name),
+                        Some(p) if p >= i => {
+                            bail!("stage {}: {what} must reference an earlier stage", st.name)
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            if let Some(init) = &st.init_from {
+                let p = self.stage(init).unwrap();
+                // bitwidth must not increase along the init chain
+                // (fp = 0 means "unconstrained"; fp can follow quantized, Table 1 FP1)
+                let dec = |prev: u32, cur: u32| cur == 0 || prev == 0 || cur <= prev;
+                if !dec(p.wbits, st.wbits) || !dec(p.abits, st.abits) {
+                    bail!(
+                        "stage {}: bitwidth increases from init {} ({} -> {})",
+                        st.name,
+                        init,
+                        p.bits_label(),
+                        st.bits_label()
+                    );
+                }
+                if st.fq && !(p.wbits == st.wbits && p.abits == st.abits) {
+                    bail!("FQ stage {} must init from same-bitwidth QAT stage", st.name);
+                }
+            } else if st.fq {
+                bail!("FQ stage {} needs an init_from (trained QAT parameters)", st.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// ASCII rendering of the ladder — the Fig.-1 regenerator.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Gradual quantization schedule — model {} ({:?})\n",
+            self.model, self.policy
+        ));
+        for st in &self.stages {
+            let init = st.init_from.as_deref().unwrap_or("random");
+            let teach = st.teacher.as_deref().unwrap_or("-");
+            out.push_str(&format!(
+                "  {:<6} [{}{}]  init<-{:<6} teacher<-{:<6} steps={} lr={}\n",
+                st.name,
+                st.bits_label(),
+                if st.fq { ", FQ" } else { "" },
+                init,
+                teach,
+                st.steps,
+                st.lr,
+            ));
+        }
+        // chain arrows
+        out.push_str("  chain: ");
+        for (i, st) in self.stages.iter().enumerate() {
+            if i > 0 {
+                out.push_str(" -> ");
+            }
+            out.push_str(&st.name);
+        }
+        out.push('\n');
+        out
+    }
+
+    // -----------------------------------------------------------------------
+    // Paper ladders (steps/lr scaled per workload by the callers)
+    // -----------------------------------------------------------------------
+
+    /// Table 1: ResNet-20 on CIFAR-10. FP0 -> Q88 -> FP1 -> Q66..Q22,
+    /// each quantized stage initialized from the previous, taught by FP1.
+    pub fn table1(model: &str, steps: usize, lr: f32) -> Schedule {
+        let s = |n: &str, w, a| Stage::new(n, w, a).steps(steps).lr(lr);
+        Schedule::new(
+            model,
+            vec![
+                s("FP0", 0, 0),
+                s("Q88", 8, 8).from("FP0").taught_by("FP0"),
+                s("FP1", 0, 0).from("Q88").taught_by("Q88"),
+                s("Q66", 6, 6).from("Q88").taught_by("FP1"),
+                s("Q55", 5, 5).from("Q66").taught_by("FP1"),
+                s("Q44", 4, 4).from("Q55").taught_by("FP1"),
+                s("Q33", 3, 3).from("Q44").taught_by("FP1"),
+                s("Q22", 2, 2).from("Q33").taught_by("FP1"),
+            ],
+            TeacherPolicy::Declared,
+        )
+        .expect("table1 schedule valid")
+    }
+
+    /// The no-GQ ablation of Table 1: FP0 -> Qkk directly (teacher FP0).
+    pub fn table1_no_gq(model: &str, wbits: u32, abits: u32, steps: usize, lr: f32) -> Schedule {
+        let name = format!("Q{wbits}{abits}");
+        Schedule::new(
+            model,
+            vec![
+                Stage::new("FP0", 0, 0).steps(steps).lr(lr),
+                Stage::new(&name, wbits, abits).from("FP0").taught_by("FP0").steps(steps).lr(lr),
+            ],
+            TeacherPolicy::Declared,
+        )
+        .expect("no-gq schedule valid")
+    }
+
+    /// Table 4: the KWS ladder FP -> Q66 -> Q45 -> Q35 -> Q24 -> FQ24.
+    pub fn table4_kws(steps: usize, lr: f32) -> Schedule {
+        let s = |n: &str, w, a| Stage::new(n, w, a).steps(steps).lr(lr);
+        // FQ fine-tune: removing BN drops the per-channel shift, which the
+        // retrain has to absorb (§3.4) — it gets a longer, slightly hotter
+        // schedule than the paper's epoch-rich setting would need.
+        Schedule::new(
+            "kws",
+            vec![
+                s("FP", 0, 0),
+                s("Q66", 6, 6).from("FP").taught_by("FP"),
+                s("Q45", 4, 5).from("Q66").taught_by("Q66"),
+                s("Q35", 3, 5).from("Q45").taught_by("Q45"),
+                s("Q24", 2, 4).from("Q35").taught_by("Q45"),
+                s("FQ24", 2, 4).from("Q24").taught_by("Q45").fq().lr(lr * 0.2).steps(steps * 2),
+            ],
+            TeacherPolicy::PromoteBest,
+        )
+        .expect("table4 schedule valid")
+    }
+
+    /// Table 6: ResNet-32 on CIFAR-100 ladder incl. the FQ25 fine-tune.
+    pub fn table6(model: &str, steps: usize, lr: f32) -> Schedule {
+        let s = |n: &str, w, a| Stage::new(n, w, a).steps(steps).lr(lr);
+        Schedule::new(
+            model,
+            vec![
+                s("FP0", 0, 0).lr(lr * 10.0),
+                s("Q88", 8, 8).from("FP0").taught_by("FP0"),
+                s("FP1", 0, 0).from("Q88").taught_by("Q88"),
+                s("Q66", 6, 6).from("Q88").taught_by("FP1"),
+                s("Q55", 5, 5).from("Q66").taught_by("FP1"),
+                s("Q45", 4, 5).from("Q55").taught_by("FP1"),
+                s("Q35", 3, 5).from("Q45").taught_by("FP1"),
+                s("Q25", 2, 5).from("Q35").taught_by("FP1"),
+                s("FQ25", 2, 5).from("Q25").taught_by("FP1").fq(),
+            ],
+            TeacherPolicy::Declared,
+        )
+        .expect("table6 schedule valid")
+    }
+
+    /// Table 3: the DarkNet ladder Q88 -> ... -> Q25 (teacher = FP stage;
+    /// the paper used a ResNet-50 teacher + label refinery, see DESIGN.md §4).
+    pub fn table3_darknet(steps: usize, lr: f32) -> Schedule {
+        let s = |n: &str, w, a| Stage::new(n, w, a).steps(steps).lr(lr);
+        Schedule::new(
+            "darknet_tiny",
+            vec![
+                s("FP0", 0, 0),
+                s("Q88", 8, 8).from("FP0").taught_by("FP0"),
+                s("Q77", 7, 7).from("Q88").taught_by("FP0"),
+                s("Q66", 6, 6).from("Q77").taught_by("FP0"),
+                s("Q55", 5, 5).from("Q66").taught_by("FP0"),
+                s("Q45", 4, 5).from("Q55").taught_by("FP0"),
+                s("Q35", 3, 5).from("Q45").taught_by("FP0"),
+                s("Q25", 2, 5).from("Q35").taught_by("FP0"),
+            ],
+            TeacherPolicy::Declared,
+        )
+        .expect("table3 schedule valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ladders_validate() {
+        Schedule::table1("resnet20", 10, 0.01);
+        Schedule::table4_kws(10, 0.01);
+        Schedule::table6("resnet32", 10, 0.001);
+        Schedule::table3_darknet(10, 0.01);
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let r = Schedule::new(
+            "m",
+            vec![Stage::new("A", 0, 0).from("B"), Stage::new("B", 8, 8)],
+            TeacherPolicy::Declared,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bitwidth_increase() {
+        let r = Schedule::new(
+            "m",
+            vec![Stage::new("Q22", 2, 2), Stage::new("Q88", 8, 8).from("Q22")],
+            TeacherPolicy::Declared,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let r = Schedule::new(
+            "m",
+            vec![Stage::new("A", 0, 0), Stage::new("A", 8, 8)],
+            TeacherPolicy::Declared,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_fq_without_init() {
+        let r = Schedule::new("m", vec![Stage::new("FQ", 2, 4).fq()], TeacherPolicy::Declared);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_fq_bitwidth_change() {
+        let r = Schedule::new(
+            "m",
+            vec![Stage::new("Q24", 2, 4), Stage::new("FQ22", 2, 2).from("Q24").fq()],
+            TeacherPolicy::Declared,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn levels() {
+        let s = Stage::new("Q24", 2, 4);
+        assert_eq!(s.n_levels_w(), 1.0);
+        assert_eq!(s.n_levels_a(), 7.0);
+        assert_eq!(Stage::new("FP", 0, 0).n_levels_w(), 0.0);
+    }
+
+    #[test]
+    fn render_mentions_all_stages() {
+        let s = Schedule::table4_kws(10, 0.01);
+        let r = s.render();
+        for st in &s.stages {
+            assert!(r.contains(&st.name));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Trainer: drives one model's AOT train/forward artifacts through PJRT.
+//!
+//! The trainer owns host-side parameters ([`ParamSet`]) and optimizer
+//! slots, converts them to literals per call, and replays the artifact's
+//! positional calling convention (trainable, state, opt, x, y, teacher,
+//! hp — see python/compile/train.py). Bitwidths/noise/lr all travel in
+//! the `hp` vector, so a single [`Trainer`] serves every stage of the
+//! gradual-quantization ladder.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Batch;
+use crate::metrics;
+use crate::runtime::{hp, lit_f32, lit_i32, lit_scalar_f32, lit_to_vec_f32, Engine, Executable, GraphSpec, Manifest, ModelInfo};
+use crate::tensor::TensorF;
+
+use super::params::ParamSet;
+
+/// Which lowered graph family a trainer drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// QAT graphs (Fig. 4A) with a quantizer flavor: "" (ours), "dorefa", "pact".
+    Qat(&'static str),
+    /// Fully quantized graphs (Fig. 4B, §3.4).
+    Fq,
+}
+
+impl Variant {
+    pub fn train_key(&self) -> String {
+        match self {
+            Variant::Qat("") => "train".into(),
+            Variant::Qat(f) => format!("train_{f}"),
+            Variant::Fq => "fq_train".into(),
+        }
+    }
+
+    pub fn fwd_key(&self) -> String {
+        match self {
+            Variant::Qat("") => "fwd".into(),
+            Variant::Qat(f) => format!("fwd_{f}"),
+            Variant::Fq => "fq_fwd".into(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+pub struct Trainer {
+    pub info: ModelInfo,
+    pub graph: GraphSpec,
+    pub variant: Variant,
+    pub params: ParamSet,
+    opt: Vec<TensorF>,
+    exe_train: Executable,
+    exe_fwd: Executable,
+    /// cumulative steps taken (diagnostics)
+    pub steps: usize,
+}
+
+impl Trainer {
+    pub fn new(
+        engine: &Engine,
+        manifest: &Manifest,
+        model: &str,
+        variant: Variant,
+    ) -> Result<Self> {
+        let info = manifest.model(model)?.clone();
+        let graph = match variant {
+            Variant::Qat(_) => info.qat.clone(),
+            Variant::Fq => match &info.fq {
+                Some(g) => g.clone(),
+                None => bail!("model {model} has no FQ graphs"),
+            },
+        };
+        let exe_train = engine
+            .load(&info.artifact_path(&manifest.dir, &variant.train_key())?)
+            .context("loading train artifact")?;
+        let exe_fwd = engine
+            .load(&info.artifact_path(&manifest.dir, &variant.fwd_key())?)
+            .context("loading fwd artifact")?;
+        let params = ParamSet::zeros(&graph);
+        let opt = graph.opt.iter().map(|s| TensorF::zeros(s)).collect();
+        Ok(Trainer { info, graph, variant, params, opt, exe_train, exe_fwd, steps: 0 })
+    }
+
+    /// Load parameters (trainable+state) from a checkpoint; resets optimizer.
+    pub fn load_params(&mut self, ck: &super::checkpoint::Checkpoint) -> Result<()> {
+        self.params = ParamSet::from_checkpoint(&self.graph, ck)?;
+        self.reset_opt();
+        Ok(())
+    }
+
+    pub fn set_params(&mut self, ps: ParamSet) {
+        assert_eq!(ps.specs.len(), self.params.specs.len());
+        self.params = ps;
+        self.reset_opt();
+    }
+
+    pub fn reset_opt(&mut self) {
+        self.opt = self.graph.opt.iter().map(|s| TensorF::zeros(s)).collect();
+    }
+
+    fn param_literals(&self) -> Vec<xla::Literal> {
+        self.params
+            .specs
+            .iter()
+            .zip(&self.params.values)
+            .map(|(s, v)| lit_f32(&s.shape, v.data()))
+            .collect()
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> (xla::Literal, xla::Literal) {
+        (lit_f32(batch.x.shape(), batch.x.data()), lit_i32(&[batch.y.len()], &batch.y))
+    }
+
+    /// One optimization step. `teacher` logits (B, C) or None (=> zeros;
+    /// pair with hp[DISTILL_WEIGHT]=0).
+    pub fn step(&mut self, batch: &Batch, teacher: Option<&TensorF>, hpv: &[f32]) -> Result<StepStats> {
+        anyhow::ensure!(hpv.len() == hp::LEN, "hp length");
+        anyhow::ensure!(batch.y.len() == self.info.batch, "batch size mismatch");
+        let mut inputs = self.param_literals();
+        for (shape, t) in self.graph.opt.iter().zip(&self.opt) {
+            inputs.push(lit_f32(shape, t.data()));
+        }
+        let (xl, yl) = self.batch_literals(batch);
+        inputs.push(xl);
+        inputs.push(yl);
+        let tshape = [self.info.batch, self.info.num_classes];
+        match teacher {
+            Some(t) => {
+                anyhow::ensure!(t.shape() == tshape, "teacher logits shape");
+                inputs.push(lit_f32(&tshape, t.data()));
+            }
+            None => inputs.push(lit_f32(&tshape, &vec![0.0; tshape[0] * tshape[1]])),
+        }
+        inputs.push(lit_f32(&[hp::LEN], hpv));
+
+        let outs = self.exe_train.run(&inputs)?;
+        let t_n = self.params.specs.len();
+        let o_n = self.opt.len();
+        anyhow::ensure!(outs.len() == t_n + o_n + 2, "unexpected output arity {}", outs.len());
+        for (i, spec) in self.params.specs.iter().enumerate() {
+            self.params.values[i] =
+                TensorF::from_vec(&spec.shape, lit_to_vec_f32(&outs[i])?);
+        }
+        for (i, shape) in self.graph.opt.iter().enumerate() {
+            self.opt[i] = TensorF::from_vec(shape, lit_to_vec_f32(&outs[t_n + i])?);
+        }
+        self.steps += 1;
+        Ok(StepStats {
+            loss: lit_scalar_f32(&outs[t_n + o_n])?,
+            acc: lit_scalar_f32(&outs[t_n + o_n + 1])?,
+        })
+    }
+
+    /// Eval-mode forward logits for a batch (B must equal artifact batch).
+    pub fn forward(&self, x: &TensorF, hpv: &[f32]) -> Result<TensorF> {
+        let mut inputs = self.param_literals();
+        inputs.push(lit_f32(x.shape(), x.data()));
+        inputs.push(lit_f32(&[hp::LEN], hpv));
+        let outs = self.exe_fwd.run(&inputs)?;
+        let logits = lit_to_vec_f32(&outs[0])?;
+        Ok(TensorF::from_vec(&[self.info.batch, self.info.num_classes], logits))
+    }
+
+    /// Top-1 accuracy over `batches` deterministic validation batches.
+    pub fn evaluate(&self, ds: &dyn crate::data::Dataset, hpv: &[f32], batches: usize) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..batches {
+            let batch = ds.val_batch((bi * self.info.batch) as u64, self.info.batch);
+            let logits = self.forward(&batch.x, hpv)?;
+            correct += (metrics::accuracy(&logits, &batch.y) * batch.y.len() as f64).round() as usize;
+            total += batch.y.len();
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Top-1 and top-k accuracy over validation batches.
+    pub fn evaluate_topk(
+        &self,
+        ds: &dyn crate::data::Dataset,
+        hpv: &[f32],
+        batches: usize,
+        k: usize,
+    ) -> Result<(f64, f64)> {
+        let (mut top1, mut topk) = (0.0, 0.0);
+        for bi in 0..batches {
+            let batch = ds.val_batch((bi * self.info.batch) as u64, self.info.batch);
+            let logits = self.forward(&batch.x, hpv)?;
+            top1 += metrics::accuracy(&logits, &batch.y);
+            topk += metrics::topk_accuracy(&logits, &batch.y, k);
+        }
+        Ok((top1 / batches.max(1) as f64, topk / batches.max(1) as f64))
+    }
+}

@@ -1,0 +1,130 @@
+//! Training-time augmentation primitives (paper recipes).
+
+use crate::util::Rng;
+
+/// Colored-ish background noise: white noise through a one-pole lowpass
+/// whose coefficient varies per draw (models the dataset's mixed noise
+/// types: white / pink-ish / hum-ish).
+pub fn background_noise(n: usize, rng: &mut Rng, level: f32) -> Vec<f32> {
+    let alpha = rng.range(0.0, 0.9);
+    let mut out = vec![0.0f32; n];
+    let mut prev = 0.0f32;
+    for v in out.iter_mut() {
+        let white = rng.gaussian_f32(0.0, 1.0);
+        prev = alpha * prev + (1.0 - alpha) * white;
+        *v = level * prev;
+    }
+    // occasionally add mains-hum style tone
+    if rng.chance(0.3) {
+        let f = rng.range(40.0, 80.0);
+        for (i, v) in out.iter_mut().enumerate() {
+            *v += 0.3 * level * (2.0 * std::f32::consts::PI * f * i as f32 / 4000.0).sin();
+        }
+    }
+    out
+}
+
+/// Shift a waveform by `shift` samples (positive = delay), zero-filled.
+pub fn time_shift(wave: &mut [f32], shift: i64) {
+    let n = wave.len() as i64;
+    if shift == 0 || shift.abs() >= n {
+        if shift.abs() >= n {
+            wave.fill(0.0);
+        }
+        return;
+    }
+    if shift > 0 {
+        wave.copy_within(0..(n - shift) as usize, shift as usize);
+        wave[..shift as usize].fill(0.0);
+    } else {
+        let s = (-shift) as usize;
+        wave.copy_within(s.., 0);
+        let start = wave.len() - s;
+        wave[start..].fill(0.0);
+    }
+}
+
+/// Random crop of a CHW image zero-padded by `pad` on each side
+/// (the CIFAR recipe), plus optional horizontal flip.
+pub fn crop_flip_chw(
+    img: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    pad: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let dy = rng.below(2 * pad + 1) as i64 - pad as i64;
+    let dx = rng.below(2 * pad + 1) as i64 - pad as i64;
+    let flip = rng.chance(0.5);
+    let mut out = vec![0.0f32; c * h * w];
+    for ch in 0..c {
+        for y in 0..h {
+            let sy = y as i64 + dy;
+            if sy < 0 || sy >= h as i64 {
+                continue;
+            }
+            for x in 0..w {
+                let sx0 = if flip { w - 1 - x } else { x } as i64 + dx;
+                if sx0 < 0 || sx0 >= w as i64 {
+                    continue;
+                }
+                out[ch * h * w + y * w + x] = img[ch * h * w + sy as usize * w + sx0 as usize];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shift_positive_delays() {
+        let mut w = vec![1.0, 2.0, 3.0, 4.0];
+        time_shift(&mut w, 2);
+        assert_eq!(w, vec![0.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn shift_negative_advances() {
+        let mut w = vec![1.0, 2.0, 3.0, 4.0];
+        time_shift(&mut w, -1);
+        assert_eq!(w, vec![2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn shift_too_far_zeroes() {
+        let mut w = vec![1.0, 2.0];
+        time_shift(&mut w, 5);
+        assert_eq!(w, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn crop_identity_when_no_jitter() {
+        // pad=0 + no flip path can only shift by 0
+        let img: Vec<f32> = (0..2 * 3 * 3).map(|i| i as f32).collect();
+        let mut rng = Rng::new(0);
+        // run until we hit the no-flip draw
+        for _ in 0..10 {
+            let out = crop_flip_chw(&img, 2, 3, 3, 0, &mut rng);
+            let flipped: Vec<f32> = (0..2 * 3 * 3)
+                .map(|i| {
+                    let (ch, y, x) = (i / 9, (i % 9) / 3, i % 3);
+                    img[ch * 9 + y * 3 + (2 - x)]
+                })
+                .collect();
+            assert!(out == img || out == flipped);
+        }
+    }
+
+    #[test]
+    fn noise_level_scales_rms() {
+        let mut rng = Rng::new(9);
+        let quiet = background_noise(4000, &mut rng, 0.01);
+        let loud = background_noise(4000, &mut rng, 0.1);
+        let rms = |v: &[f32]| (v.iter().map(|&x| x * x).sum::<f32>() / v.len() as f32).sqrt();
+        assert!(rms(&loud) > 3.0 * rms(&quiet));
+    }
+}

@@ -1,0 +1,327 @@
+//! DSP substrate for the KWS front end — from scratch, no crates.
+//!
+//! Implements the paper's preprocessing: "39-dimensional Mel-Frequency
+//! Cepstrum Coefficients (13 MFCCs and their first- and second-order
+//! deltas) constructed using 20ms sliding window, shifted by 10ms".
+//!
+//! Pipeline per frame: Hann window -> radix-2 FFT -> power spectrum ->
+//! mel filterbank -> log -> DCT-II (13 coeffs); then Δ and ΔΔ over frames
+//! with the standard 2-tap regression kernel.
+
+use std::f32::consts::PI;
+
+/// In-place iterative radix-2 Cooley-Tukey FFT. `re`/`im` length must be a
+/// power of two.
+pub fn fft(re: &mut [f32], im: &mut [f32]) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f32;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let (mut cr, mut ci) = (1.0f32, 0.0f32);
+            for k in 0..len / 2 {
+                let a = start + k;
+                let b = a + len / 2;
+                let tr = re[b] * cr - im[b] * ci;
+                let ti = re[b] * ci + im[b] * cr;
+                re[b] = re[a] - tr;
+                im[b] = im[a] - ti;
+                re[a] += tr;
+                im[a] += ti;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Hann window of length n.
+pub fn hann(n: usize) -> Vec<f32> {
+    (0..n).map(|i| 0.5 - 0.5 * (2.0 * PI * i as f32 / n as f32).cos()).collect()
+}
+
+fn hz_to_mel(hz: f32) -> f32 {
+    2595.0 * (1.0 + hz / 700.0).log10()
+}
+
+fn mel_to_hz(mel: f32) -> f32 {
+    700.0 * (10f32.powf(mel / 2595.0) - 1.0)
+}
+
+/// Triangular mel filterbank: `n_filters` x (nfft/2+1) weights.
+pub fn mel_filterbank(n_filters: usize, nfft: usize, sample_rate: f32) -> Vec<Vec<f32>> {
+    let nyquist = sample_rate / 2.0;
+    let mel_max = hz_to_mel(nyquist);
+    let mel_pts: Vec<f32> =
+        (0..n_filters + 2).map(|i| mel_to_hz(mel_max * i as f32 / (n_filters + 1) as f32)).collect();
+    let bin_of = |hz: f32| (hz / nyquist * (nfft as f32 / 2.0)).floor() as usize;
+    let bins: Vec<usize> = mel_pts.iter().map(|&hz| bin_of(hz).min(nfft / 2)).collect();
+    let mut bank = vec![vec![0.0f32; nfft / 2 + 1]; n_filters];
+    for f in 0..n_filters {
+        let (lo, mid, hi) = (bins[f], bins[f + 1], bins[f + 2]);
+        for b in lo..mid.max(lo + 1) {
+            bank[f][b] = (b - lo) as f32 / (mid - lo).max(1) as f32;
+        }
+        for b in mid..hi.max(mid + 1) {
+            if b <= nfft / 2 {
+                bank[f][b] = 1.0 - (b - mid) as f32 / (hi - mid).max(1) as f32;
+            }
+        }
+    }
+    bank
+}
+
+/// DCT-II matrix (orthonormal), `n_out` x `n_in`.
+pub fn dct_matrix(n_out: usize, n_in: usize) -> Vec<Vec<f32>> {
+    let mut m = vec![vec![0.0f32; n_in]; n_out];
+    for (k, row) in m.iter_mut().enumerate() {
+        let norm = if k == 0 { (1.0 / n_in as f32).sqrt() } else { (2.0 / n_in as f32).sqrt() };
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = norm * (PI / n_in as f32 * (i as f32 + 0.5) * k as f32).cos();
+        }
+    }
+    m
+}
+
+/// MFCC extractor configuration.
+#[derive(Clone, Debug)]
+pub struct MfccConfig {
+    pub sample_rate: f32,
+    pub win: usize,
+    pub hop: usize,
+    pub nfft: usize,
+    pub n_mels: usize,
+    pub n_mfcc: usize,
+}
+
+impl Default for MfccConfig {
+    /// Paper settings at 4 kHz: 20 ms window (80 samples), 10 ms hop (40).
+    fn default() -> Self {
+        MfccConfig { sample_rate: 4000.0, win: 80, hop: 40, nfft: 128, n_mels: 20, n_mfcc: 13 }
+    }
+}
+
+/// Precomputed MFCC pipeline.
+pub struct Mfcc {
+    pub cfg: MfccConfig,
+    window: Vec<f32>,
+    bank: Vec<Vec<f32>>,
+    dct: Vec<Vec<f32>>,
+}
+
+impl Mfcc {
+    pub fn new(cfg: MfccConfig) -> Self {
+        assert!(cfg.nfft >= cfg.win);
+        Mfcc {
+            window: hann(cfg.win),
+            bank: mel_filterbank(cfg.n_mels, cfg.nfft, cfg.sample_rate),
+            dct: dct_matrix(cfg.n_mfcc, cfg.n_mels),
+            cfg,
+        }
+    }
+
+    /// Number of frames for a signal of `n` samples.
+    pub fn frames_for(&self, n: usize) -> usize {
+        if n < self.cfg.win {
+            0
+        } else {
+            (n - self.cfg.win) / self.cfg.hop + 1
+        }
+    }
+
+    /// Samples required to produce exactly `frames` frames.
+    pub fn samples_for_frames(&self, frames: usize) -> usize {
+        (frames - 1) * self.cfg.hop + self.cfg.win
+    }
+
+    /// MFCC matrix, row-major (n_mfcc, frames).
+    pub fn compute(&self, signal: &[f32]) -> Vec<f32> {
+        let frames = self.frames_for(signal.len());
+        let nfft = self.cfg.nfft;
+        let half = nfft / 2 + 1;
+        let mut out = vec![0.0f32; self.cfg.n_mfcc * frames];
+        let mut re = vec![0.0f32; nfft];
+        let mut im = vec![0.0f32; nfft];
+        let mut power = vec![0.0f32; half];
+        let mut mels = vec![0.0f32; self.cfg.n_mels];
+        for t in 0..frames {
+            let start = t * self.cfg.hop;
+            re[..self.cfg.win]
+                .iter_mut()
+                .zip(&signal[start..start + self.cfg.win])
+                .zip(&self.window)
+                .for_each(|((r, &s), &w)| *r = s * w);
+            re[self.cfg.win..].fill(0.0);
+            im.fill(0.0);
+            fft(&mut re, &mut im);
+            for b in 0..half {
+                power[b] = re[b] * re[b] + im[b] * im[b];
+            }
+            for (f, filt) in self.bank.iter().enumerate() {
+                let e: f32 = filt.iter().zip(&power).map(|(&w, &p)| w * p).sum();
+                mels[f] = (e + 1e-10).ln();
+            }
+            for (k, row) in self.dct.iter().enumerate() {
+                out[k * frames + t] = row.iter().zip(&mels).map(|(&d, &m)| d * m).sum();
+            }
+        }
+        out
+    }
+
+    /// Full 39-dim features: MFCC + Δ + ΔΔ, shape (3*n_mfcc, frames).
+    pub fn compute_with_deltas(&self, signal: &[f32]) -> Vec<f32> {
+        let frames = self.frames_for(signal.len());
+        let c = self.cfg.n_mfcc;
+        let base = self.compute(signal);
+        let d1 = deltas(&base, c, frames);
+        let d2 = deltas(&d1, c, frames);
+        let mut out = Vec::with_capacity(3 * c * frames);
+        out.extend_from_slice(&base);
+        out.extend_from_slice(&d1);
+        out.extend_from_slice(&d2);
+        out
+    }
+}
+
+/// Standard delta features: d[t] = Σ_{k=1..2} k (x[t+k]-x[t-k]) / (2 Σ k²),
+/// with edge clamping. Input/output row-major (coeffs, frames).
+pub fn deltas(x: &[f32], coeffs: usize, frames: usize) -> Vec<f32> {
+    let denom = 2.0 * (1.0 + 4.0); // 2 * sum(k^2)
+    let mut out = vec![0.0f32; coeffs * frames];
+    let get = |c: usize, t: i64| {
+        let t = t.clamp(0, frames as i64 - 1) as usize;
+        x[c * frames + t]
+    };
+    for c in 0..coeffs {
+        for t in 0..frames {
+            let ti = t as i64;
+            let mut acc = 0.0;
+            for k in 1..=2i64 {
+                acc += k as f32 * (get(c, ti + k) - get(c, ti - k));
+            }
+            out[c * frames + t] = acc / denom;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_impulse_is_flat() {
+        let mut re = vec![0.0; 16];
+        let mut im = vec![0.0; 16];
+        re[0] = 1.0;
+        fft(&mut re, &mut im);
+        for i in 0..16 {
+            assert!((re[i] - 1.0).abs() < 1e-5 && im[i].abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fft_single_tone_peaks_at_bin() {
+        let n = 128;
+        let k = 10;
+        let mut re: Vec<f32> =
+            (0..n).map(|i| (2.0 * PI * k as f32 * i as f32 / n as f32).cos()).collect();
+        let mut im = vec![0.0; n];
+        fft(&mut re, &mut im);
+        let mags: Vec<f32> =
+            re.iter().zip(&im).map(|(&r, &i)| (r * r + i * i).sqrt()).collect();
+        let peak = mags.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        assert!(peak == k || peak == n - k, "peak at {peak}");
+        assert!((mags[k] - n as f32 / 2.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn fft_parseval() {
+        let n = 64;
+        let sig: Vec<f32> = (0..n).map(|i| ((i * 37 % 11) as f32 - 5.0) / 5.0).collect();
+        let mut re = sig.clone();
+        let mut im = vec![0.0; n];
+        fft(&mut re, &mut im);
+        let time_e: f32 = sig.iter().map(|&v| v * v).sum();
+        let freq_e: f32 = re.iter().zip(&im).map(|(&r, &i)| r * r + i * i).sum::<f32>() / n as f32;
+        assert!((time_e - freq_e).abs() / time_e < 1e-4);
+    }
+
+    #[test]
+    fn mel_bank_covers_spectrum() {
+        let bank = mel_filterbank(20, 128, 4000.0);
+        assert_eq!(bank.len(), 20);
+        // every filter has some mass; interior bins covered by some filter
+        for (i, f) in bank.iter().enumerate() {
+            assert!(f.iter().sum::<f32>() > 0.0, "filter {i} empty");
+        }
+    }
+
+    #[test]
+    fn dct_orthonormal_rows() {
+        let m = dct_matrix(13, 20);
+        for a in 0..13 {
+            for b in 0..13 {
+                let dot: f32 = m[a].iter().zip(&m[b]).map(|(&x, &y)| x * y).sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-5, "rows {a},{b} dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn mfcc_shapes() {
+        let m = Mfcc::new(MfccConfig::default());
+        let n = m.samples_for_frames(80);
+        let sig = vec![0.01f32; n];
+        assert_eq!(m.frames_for(n), 80);
+        let out = m.compute_with_deltas(&sig);
+        assert_eq!(out.len(), 39 * 80);
+    }
+
+    #[test]
+    fn mfcc_distinguishes_tones() {
+        let m = Mfcc::new(MfccConfig::default());
+        let n = m.samples_for_frames(40);
+        let tone = |f: f32| -> Vec<f32> {
+            (0..n).map(|i| (2.0 * PI * f * i as f32 / 4000.0).sin()).collect()
+        };
+        let a = m.compute(&tone(300.0));
+        let b = m.compute(&tone(1200.0));
+        let dist: f32 = a.iter().zip(&b).map(|(&x, &y)| (x - y).powi(2)).sum::<f32>().sqrt();
+        assert!(dist > 1.0, "tones not separated: {dist}");
+    }
+
+    #[test]
+    fn deltas_of_constant_are_zero() {
+        let x = vec![3.0f32; 13 * 10];
+        let d = deltas(&x, 13, 10);
+        assert!(d.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn deltas_of_ramp_are_constant_slope() {
+        let frames = 12;
+        let x: Vec<f32> = (0..frames).map(|t| 2.0 * t as f32).collect();
+        let d = deltas(&x, 1, frames);
+        // interior frames: slope 2
+        for t in 2..frames - 2 {
+            assert!((d[t] - 2.0).abs() < 1e-5, "t={t} d={}", d[t]);
+        }
+    }
+}

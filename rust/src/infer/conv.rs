@@ -1,0 +1,233 @@
+//! Quantized dilated 1-D convolution over integer codes.
+//!
+//! One layer = im2col (i8 patch matrix) -> integer GEMM (ternary add-only
+//! path when the weights are W2) -> threshold-LUT re-binning straight
+//! onto the next layer's input grid. Matches the deployed Pallas kernel's
+//! two-step binning bit-for-bit (see quant::lut).
+
+use crate::quant::{QParams, RequantLut};
+
+use super::gemm::{self, TernaryMatrix};
+
+/// Weight storage: dense i8 (transposed for GEMM) or ternary sparse.
+pub enum WeightKind {
+    Dense { bt: Vec<i8> }, // (K_out, C*F)
+    Ternary(TernaryMatrix),
+}
+
+pub struct QuantConv1d {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub ksize: usize,
+    pub dilation: usize,
+    pub weights: WeightKind,
+    pub lut: RequantLut,
+    /// this layer's input quantizer (diagnostics / analog sim)
+    pub qa: QParams,
+    pub qw: QParams,
+    /// this layer's own output quantizer (Q_so, the quantized ReLU)
+    pub mid: QParams,
+    /// the next layer's input quantizer, if any
+    pub next: Option<QParams>,
+}
+
+impl QuantConv1d {
+    /// Build from float weights + quantizers.
+    ///
+    /// * `w` — float weights (c_out, c_in, ksize), the FQ shadow copy.
+    /// * `qa`/`qw` — input-activation and weight quantizers.
+    /// * `mid` — this layer's output quantizer (Q_so, b=0: the quantized
+    ///   ReLU).
+    /// * `next` — the next layer's input quantizer, or None for the last
+    ///   layer (then codes are emitted on the `mid` grid).
+    pub fn new(
+        w: &[f32],
+        c_out: usize,
+        c_in: usize,
+        ksize: usize,
+        dilation: usize,
+        qa: QParams,
+        qw: QParams,
+        mid: QParams,
+        next: Option<QParams>,
+    ) -> Self {
+        assert_eq!(w.len(), c_out * c_in * ksize);
+        let kdim = c_in * ksize;
+        // integer weight codes, laid out (kdim, c_out) then transposed
+        let mut b = vec![0i8; kdim * c_out];
+        for ko in 0..c_out {
+            for ci in 0..c_in {
+                for f in 0..ksize {
+                    let code = qw.int_code(w[(ko * c_in + ci) * ksize + f]);
+                    debug_assert!((-127..=127).contains(&code));
+                    b[(ci * ksize + f) * c_out + ko] = code as i8;
+                }
+            }
+        }
+        let ternary = qw.n == 1.0;
+        let weights = if ternary {
+            WeightKind::Ternary(TernaryMatrix::from_dense(kdim, c_out, &b))
+        } else {
+            WeightKind::Dense { bt: gemm::transpose(kdim, c_out, &b) }
+        };
+        // accumulator bound: |acc| <= kdim * max|a-code| * max|w-code|
+        let amax = qa.n.abs().max(qa.b.abs() * qa.n) as i64;
+        let bound = kdim as i64 * amax * qw.n as i64 + 1;
+        let f = (qa.es * qw.es) / (qa.n * qw.n);
+        let lut = match next {
+            Some(nx) => RequantLut::build_composed(f, mid, nx, -bound, bound),
+            None => RequantLut::build(f, mid, -bound, bound),
+        };
+        QuantConv1d { c_in, c_out, ksize, dilation, weights, lut, qa, qw, mid, next }
+    }
+
+    pub fn t_out(&self, t_in: usize) -> usize {
+        t_in - self.dilation * (self.ksize - 1)
+    }
+
+    /// im2col: codes (c_in, T) -> patch matrix (T_out, c_in*ksize).
+    pub fn im2col(&self, x: &[i8], t_in: usize, out: &mut Vec<i8>) {
+        let t_out = self.t_out(t_in);
+        out.clear();
+        out.reserve(t_out * self.c_in * self.ksize);
+        for t in 0..t_out {
+            for c in 0..self.c_in {
+                for f in 0..self.ksize {
+                    out.push(x[c * t_in + t + f * self.dilation]);
+                }
+            }
+        }
+    }
+
+    /// Forward one sample: input codes (c_in, T) -> output codes
+    /// (c_out, T_out) on the next layer's grid. `scratch` buffers are
+    /// reused across layers/calls to keep the hot path allocation-free.
+    pub fn forward(
+        &self,
+        x: &[i8],
+        t_in: usize,
+        cols: &mut Vec<i8>,
+        acc: &mut Vec<i32>,
+        out: &mut Vec<i8>,
+    ) {
+        let t_out = self.t_out(t_in);
+        self.im2col(x, t_in, cols);
+        acc.clear();
+        acc.resize(t_out * self.c_out, 0);
+        match &self.weights {
+            WeightKind::Ternary(t) => t.gemm(t_out, cols, acc),
+            WeightKind::Dense { bt } => {
+                gemm::gemm_i8(t_out, self.c_in * self.ksize, self.c_out, cols, bt, acc)
+            }
+        }
+        // re-bin, transposing (T_out, c_out) -> (c_out, T_out)
+        out.clear();
+        out.resize(self.c_out * t_out, 0);
+        for t in 0..t_out {
+            for k in 0..self.c_out {
+                out[k * t_out + t] = self.lut.apply(acc[t * self.c_out + k] as i64) as i8;
+            }
+        }
+    }
+
+    pub fn is_ternary(&self) -> bool {
+        matches!(self.weights, WeightKind::Ternary(_))
+    }
+
+    /// Ternary weight sparsity (0 if dense).
+    pub fn sparsity(&self) -> f64 {
+        match &self.weights {
+            WeightKind::Ternary(t) => t.sparsity,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_int;
+    use crate::util::Rng;
+
+    /// float reference of the whole layer (quantize -> conv -> requant chain)
+    fn float_ref(
+        layer: &QuantConv1d,
+        w: &[f32],
+        xcodes: &[i8],
+        t_in: usize,
+        next: Option<QParams>,
+        mid: QParams,
+    ) -> Vec<i8> {
+        let t_out = layer.t_out(t_in);
+        let mut out = vec![0i8; layer.c_out * t_out];
+        for ko in 0..layer.c_out {
+            for t in 0..t_out {
+                let mut acc = 0f64;
+                for ci in 0..layer.c_in {
+                    for f in 0..layer.ksize {
+                        let a = xcodes[ci * t_in + t + f * layer.dilation] as f64
+                            * (layer.qa.es as f64 / layer.qa.n as f64);
+                        let wq = quantize_int(
+                            w[(ko * layer.c_in + ci) * layer.ksize + f],
+                            layer.qw.es,
+                            layer.qw.n,
+                            -1.0,
+                        ) as f64
+                            * (layer.qw.es as f64 / layer.qw.n as f64);
+                        acc += a * wq;
+                    }
+                }
+                let y = mid.quantize(acc as f32);
+                let code = match next {
+                    Some(nx) => nx.int_code(y),
+                    None => mid.int_code(y),
+                };
+                out[ko * t_out + t] = code as i8;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_float_reference() {
+        let mut rng = Rng::new(11);
+        let (c_in, c_out, ksize, t_in, dil) = (6, 5, 3, 30, 2);
+        let w: Vec<f32> = (0..c_out * c_in * ksize).map(|_| rng.gaussian_f32(0.0, 0.5)).collect();
+        let qa = QParams::new(0.9, 7.0, 0.0);
+        let qw = QParams::new(0.5, 1.0, -1.0);
+        let mid = QParams::new(1.1, 7.0, 0.0);
+        let next = Some(QParams::new(1.05, 7.0, 0.0));
+        let layer = QuantConv1d::new(&w, c_out, c_in, ksize, dil, qa, qw, mid, next);
+        assert!(layer.is_ternary());
+        let x: Vec<i8> = (0..c_in * t_in).map(|_| rng.below(8) as i8).collect();
+        let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
+        layer.forward(&x, t_in, &mut cols, &mut acc, &mut out);
+        let want = float_ref(&layer, &w, &x, t_in, next, mid);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn dense_path_matches_too() {
+        let mut rng = Rng::new(13);
+        let (c_in, c_out, ksize, t_in, dil) = (4, 3, 3, 20, 1);
+        let w: Vec<f32> = (0..c_out * c_in * ksize).map(|_| rng.gaussian_f32(0.0, 0.5)).collect();
+        let qa = QParams::new(1.0, 7.0, 0.0);
+        let qw = QParams::new(0.6, 7.0, -1.0); // 4-bit weights -> dense path
+        let mid = QParams::new(1.0, 7.0, 0.0);
+        let layer = QuantConv1d::new(&w, c_out, c_in, ksize, dil, qa, qw, mid, None);
+        assert!(!layer.is_ternary());
+        let x: Vec<i8> = (0..c_in * t_in).map(|_| rng.below(8) as i8).collect();
+        let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
+        layer.forward(&x, t_in, &mut cols, &mut acc, &mut out);
+        let want = float_ref(&layer, &w, &x, t_in, None, mid);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn output_length() {
+        let w = vec![0.0f32; 2 * 2 * 3];
+        let q = QParams::new(1.0, 1.0, -1.0);
+        let layer = QuantConv1d::new(&w, 2, 2, 3, 4, q, q, q, None);
+        assert_eq!(layer.t_out(20), 12);
+    }
+}

@@ -1,0 +1,180 @@
+//! Integer GEMM kernels: i8 x i8 -> i32, with a ternary add-only path.
+//!
+//! Layouts: A is (M, K) row-major activations, B is (K, N) row-major
+//! weights, C is (M, N) i32 accumulators. K is the reduction dim.
+//!
+//! The scalar kernel is written to autovectorize: the inner loop is a
+//! dense dot over K with i32 widening; the blocked variant tiles (M, N)
+//! for L1/L2 locality. The ternary path stores B as per-column sparse
+//! +/- index lists, replacing multiplies with adds/subs — on W2 networks
+//! (the paper's target) this is the deployment kernel.
+
+/// Reference: straightforward triple loop (used by tests as oracle).
+pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for p in 0..k {
+                acc += a[i * k + p] as i32 * b[p * n + j] as i32;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Blocked i8 GEMM. B is pre-transposed to (N, K) ("bt") so the inner
+/// loop is a contiguous dot product over K for both operands.
+pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], bt: &[i8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    const MB: usize = 32;
+    const NB: usize = 32;
+    for i0 in (0..m).step_by(MB) {
+        let i1 = (i0 + MB).min(m);
+        for j0 in (0..n).step_by(NB) {
+            let j1 = (j0 + NB).min(n);
+            for i in i0..i1 {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    let brow = &bt[j * k..(j + 1) * k];
+                    let mut acc = 0i32;
+                    // contiguous dot; autovectorizes to pmaddubsw-ish code
+                    for p in 0..k {
+                        acc += arow[p] as i32 * brow[p] as i32;
+                    }
+                    crow[j] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Transpose (K, N) -> (N, K).
+pub fn transpose(k: usize, n: usize, b: &[i8]) -> Vec<i8> {
+    let mut bt = vec![0i8; n * k];
+    for p in 0..k {
+        for j in 0..n {
+            bt[j * k + p] = b[p * n + j];
+        }
+    }
+    bt
+}
+
+/// Ternary weight matrix in sparse +/- form: per output column, the list
+/// of K-indices with +1 and with -1 (zeros skipped entirely).
+#[derive(Clone, Debug)]
+pub struct TernaryMatrix {
+    pub k: usize,
+    pub n: usize,
+    plus: Vec<Vec<u32>>,
+    minus: Vec<Vec<u32>>,
+    /// fraction of zero weights (sparsity exploited by the kernel)
+    pub sparsity: f64,
+}
+
+impl TernaryMatrix {
+    /// Build from a dense (K, N) matrix with entries in {-1, 0, +1}.
+    pub fn from_dense(k: usize, n: usize, b: &[i8]) -> Self {
+        assert_eq!(b.len(), k * n);
+        let mut plus = vec![Vec::new(); n];
+        let mut minus = vec![Vec::new(); n];
+        let mut zeros = 0usize;
+        for p in 0..k {
+            for j in 0..n {
+                match b[p * n + j] {
+                    1 => plus[j].push(p as u32),
+                    -1 => minus[j].push(p as u32),
+                    0 => zeros += 1,
+                    v => panic!("non-ternary weight {v}"),
+                }
+            }
+        }
+        TernaryMatrix { k, n, plus, minus, sparsity: zeros as f64 / (k * n) as f64 }
+    }
+
+    /// C = A @ B with adds/subs only (A: (M, K) i8, C: (M, N) i32).
+    pub fn gemm(&self, m: usize, a: &[i8], c: &mut [i32]) {
+        assert_eq!(a.len(), m * self.k);
+        assert_eq!(c.len(), m * self.n);
+        for i in 0..m {
+            let arow = &a[i * self.k..(i + 1) * self.k];
+            let crow = &mut c[i * self.n..(i + 1) * self.n];
+            for j in 0..self.n {
+                let mut acc = 0i32;
+                for &p in &self.plus[j] {
+                    acc += arow[p as usize] as i32;
+                }
+                for &p in &self.minus[j] {
+                    acc -= arow[p as usize] as i32;
+                }
+                crow[j] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_i8(rng: &mut Rng, len: usize, lo: i32, hi: i32) -> Vec<i8> {
+        (0..len).map(|_| (lo + rng.below((hi - lo + 1) as usize) as i32) as i8).collect()
+    }
+
+    #[test]
+    fn blocked_matches_ref() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (33, 40, 65), (128, 300, 45)] {
+            let a = rand_i8(&mut rng, m * k, -127, 127);
+            let b = rand_i8(&mut rng, k * n, -127, 127);
+            let mut want = vec![0i32; m * n];
+            gemm_ref(m, k, n, &a, &b, &mut want);
+            let bt = transpose(k, n, &b);
+            let mut got = vec![0i32; m * n];
+            gemm_i8(m, k, n, &a, &bt, &mut got);
+            assert_eq!(got, want, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn ternary_matches_ref() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(4, 9, 5), (40, 135, 45)] {
+            let a = rand_i8(&mut rng, m * k, -7, 7);
+            let b = rand_i8(&mut rng, k * n, -1, 1);
+            let mut want = vec![0i32; m * n];
+            gemm_ref(m, k, n, &a, &b, &mut want);
+            let t = TernaryMatrix::from_dense(k, n, &b);
+            let mut got = vec![0i32; m * n];
+            t.gemm(m, &a, &mut got);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn ternary_sparsity_counted() {
+        let b = vec![0i8, 1, -1, 0, 0, 1]; // (3,2): 3 zeros of 6
+        let t = TernaryMatrix::from_dense(3, 2, &b);
+        assert!((t.sparsity - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-ternary")]
+    fn ternary_rejects_wide_weights() {
+        TernaryMatrix::from_dense(1, 1, &[3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let b: Vec<i8> = (0..12).map(|v| v as i8).collect();
+        let bt = transpose(3, 4, &b);
+        assert_eq!(bt[0 * 3 + 0], b[0 * 4 + 0]);
+        assert_eq!(bt[2 * 3 + 1], b[1 * 4 + 2]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Integer FQ-Conv inference engine — the paper's deployment story,
+//! implemented natively (no XLA on this path).
+//!
+//! Weights and activations live as integer codes (i8), convolutions
+//! accumulate in i32 (Eq. 4), and layer-to-layer re-binning goes through
+//! the threshold LUT ([`crate::quant::RequantLut`]) so **no float scale
+//! ever materializes on the hot path**. Ternary weights (W2) take an
+//! add/subtract-only path — the paper's "only additions, no
+//! multiplications" claim, measurable in `benches/perf_infer.rs`.
+//!
+//! * [`gemm`]     — i8 x i8 -> i32 blocked GEMM + ternary fast path
+//! * [`conv`]     — quantized dilated conv1d via im2col over the GEMM
+//! * [`pipeline`] — the full KWS network as an integer pipeline, built
+//!   directly from a trained FQ [`ParamSet`](crate::coordinator::ParamSet);
+//!   agreement with the XLA deployment artifact is pinned by
+//!   rust/tests/engine_vs_artifact.rs.
+
+pub mod conv;
+pub mod gemm;
+pub mod pipeline;
+
+pub use conv::QuantConv1d;
+pub use pipeline::FqKwsNet;

@@ -1,0 +1,215 @@
+//! The full KWS network as a native integer pipeline.
+//!
+//! Mirrors `compile.models.kws.fq_apply_pallas` exactly: full-precision
+//! 1x1 embedding + inference-mode BN + learned input quantizer, seven
+//! integer FQ-Conv layers with LUT re-binning, higher-precision global
+//! average pooling, dense head. Built straight from a trained FQ
+//! [`ParamSet`] + the manifest — no XLA on this path.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ParamSet;
+use crate::quant::{learned_quantize, QParams};
+use crate::tensor::TensorF;
+
+use super::conv::QuantConv1d;
+
+/// KWS dilation schedule — must match compile/models/kws.py DILATIONS.
+pub const DILATIONS: [usize; 7] = [1, 1, 2, 4, 8, 8, 8];
+
+pub const BN_EPS: f32 = 1e-5;
+
+struct Embed {
+    w: Vec<f32>, // (embed, n_mfcc)
+    scale: Vec<f32>,
+    shift: Vec<f32>,
+    /// e^{embed.sa}: the learned input quantizer of the QCNN
+    es: f32,
+    n_mfcc: usize,
+    dim: usize,
+}
+
+pub struct FqKwsNet {
+    embed: Embed,
+    pub layers: Vec<QuantConv1d>,
+    head_w: Vec<f32>, // (filters, classes)
+    head_b: Vec<f32>,
+    pub na: f32,
+    pub filters: usize,
+    pub classes: usize,
+    pub frames: usize,
+}
+
+/// Reusable per-thread scratch buffers (hot path is allocation-free).
+#[derive(Default)]
+pub struct Scratch {
+    cols: Vec<i8>,
+    acc: Vec<i32>,
+    a: Vec<i8>,
+    b: Vec<i8>,
+    embed_real: Vec<f32>,
+}
+
+impl FqKwsNet {
+    /// Build from trained FQ parameters (nw/na are the stage's level counts).
+    pub fn from_params(params: &ParamSet, nw: f32, na: f32, frames: usize) -> Result<Self> {
+        let get = |n: &str| params.get(n).with_context(|| format!("missing param {n}"));
+        let ew = get("embed.w")?;
+        let (dim, n_mfcc) = (ew.shape()[0], ew.shape()[1]);
+        let gamma = get("embed.bn.gamma")?.data();
+        let beta = get("embed.bn.beta")?.data();
+        let mean = get("embed.bn.mean")?.data();
+        let var = get("embed.bn.var")?.data();
+        // fold eval-mode BN into per-channel scale+shift
+        let scale: Vec<f32> =
+            (0..dim).map(|k| gamma[k] / (var[k] + BN_EPS).sqrt()).collect();
+        let shift: Vec<f32> = (0..dim).map(|k| beta[k] - scale[k] * mean[k]).collect();
+        let embed = Embed {
+            w: ew.data().to_vec(),
+            scale,
+            shift,
+            es: params.scalar("embed.sa")?.exp(),
+            n_mfcc,
+            dim,
+        };
+
+        let n_layers = DILATIONS.len();
+        // per-layer quantizers; layer 0 sees the signed embedding grid
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let w = get(&format!("conv{i}.w"))?;
+            let (c_out, c_in, ksize) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+            let ba = if i == 0 { -1.0 } else { 0.0 };
+            let qa = QParams::new(params.scalar(&format!("conv{i}.sa"))?.exp(), na, ba);
+            let qw = QParams::new(params.scalar(&format!("conv{i}.sw"))?.exp(), nw, -1.0);
+            let mid = QParams::new(params.scalar(&format!("conv{i}.so"))?.exp(), na, 0.0);
+            let next = if i + 1 < n_layers {
+                Some(QParams::new(params.scalar(&format!("conv{}.sa", i + 1))?.exp(), na, 0.0))
+            } else {
+                None
+            };
+            layers.push(QuantConv1d::new(
+                w.data(),
+                c_out,
+                c_in,
+                ksize,
+                DILATIONS[i],
+                qa,
+                qw,
+                mid,
+                next,
+            ));
+        }
+        let head_w = get("head.w")?.data().to_vec();
+        let head_b = get("head.b")?.data().to_vec();
+        let filters = layers.last().unwrap().c_out;
+        let classes = head_b.len();
+        Ok(FqKwsNet { embed, layers, head_w, head_b, na, filters, classes, frames })
+    }
+
+    pub fn out_frames(&self) -> usize {
+        let mut t = self.frames;
+        for l in &self.layers {
+            t = l.t_out(t);
+        }
+        t
+    }
+
+    /// Forward one sample: MFCC features (n_mfcc, frames) -> logits.
+    pub fn forward(&self, x: &[f32], s: &mut Scratch) -> Vec<f32> {
+        let t_in = self.frames;
+        let e = &self.embed;
+        debug_assert_eq!(x.len(), e.n_mfcc * t_in);
+        // --- FP embedding + BN + learned input quantization -> codes ----
+        let qa0 = &self.layers[0].qa;
+        s.a.clear();
+        s.a.resize(e.dim * t_in, 0);
+        s.embed_real.clear();
+        for k in 0..e.dim {
+            let wrow = &e.w[k * e.n_mfcc..(k + 1) * e.n_mfcc];
+            for t in 0..t_in {
+                let mut acc = 0f32;
+                for c in 0..e.n_mfcc {
+                    acc += wrow[c] * x[c * t_in + t];
+                }
+                let bn = acc * e.scale[k] + e.shift[k];
+                // two-step: Q_{embed.sa}(b=-1) then conv0's input bin
+                let q = learned_quantize(bn, e.es, self.na, -1.0);
+                s.a[k * t_in + t] = qa0.int_code(q) as i8;
+            }
+        }
+        // --- integer QCNN ------------------------------------------------
+        let mut t_cur = t_in;
+        let mut cur_in_a = true;
+        for l in &self.layers {
+            {
+                let (input, output) =
+                    if cur_in_a { (&s.a, &mut s.b) } else { (&s.b, &mut s.a) };
+                l.forward(input, t_cur, &mut s.cols, &mut s.acc, output);
+            }
+            t_cur = l.t_out(t_cur);
+            cur_in_a = !cur_in_a;
+        }
+        let codes = if cur_in_a { &s.a } else { &s.b };
+        // --- higher-precision GAP + head ---------------------------------
+        let last = self.layers.last().unwrap();
+        let dq = last.lut.out; // final grid
+        let mut pooled = vec![0f32; self.filters];
+        for (k, p) in pooled.iter_mut().enumerate() {
+            let mut sum = 0i64;
+            for t in 0..t_cur {
+                sum += codes[k * t_cur + t] as i64;
+            }
+            *p = dq.dequantize(sum as i32) / t_cur as f32;
+        }
+        self.head_logits(&pooled)
+    }
+
+    /// Forward a batch (B, n_mfcc, frames) -> logits tensor (B, classes).
+    pub fn forward_batch(&self, x: &TensorF) -> TensorF {
+        let b = x.shape()[0];
+        let per = self.embed.n_mfcc * self.frames;
+        let mut s = Scratch::default();
+        let mut out = Vec::with_capacity(b * self.classes);
+        for i in 0..b {
+            out.extend(self.forward(&x.data()[i * per..(i + 1) * per], &mut s));
+        }
+        TensorF::from_vec(&[b, self.classes], out)
+    }
+
+    /// Embedding internals for the analog simulator:
+    /// (dim, n_mfcc, w, bn_scale, bn_shift, e^{embed.sa}).
+    pub fn embed_view(&self) -> (usize, usize, &[f32], &[f32], &[f32], f32) {
+        let e = &self.embed;
+        (e.dim, e.n_mfcc, &e.w, &e.scale, &e.shift, e.es)
+    }
+
+    /// (mid, next) quantizer grids of layer `li`.
+    pub fn layer_grids(&self, li: usize) -> (crate::quant::QParams, Option<crate::quant::QParams>) {
+        let l = &self.layers[li];
+        (l.mid, l.next)
+    }
+
+    /// Dense head on pooled features.
+    pub fn head_logits(&self, pooled: &[f32]) -> Vec<f32> {
+        let mut logits = self.head_b.clone();
+        for k in 0..self.filters {
+            let w = &self.head_w[k * self.classes..(k + 1) * self.classes];
+            for (j, l) in logits.iter_mut().enumerate() {
+                *l += pooled[k] * w[j];
+            }
+        }
+        logits
+    }
+
+    /// Total integer MACs per sample (for the perf accounting).
+    pub fn macs_per_sample(&self) -> u64 {
+        let mut t = self.frames;
+        let mut total = 0u64;
+        for l in &self.layers {
+            t = l.t_out(t);
+            total += (l.c_out * l.c_in * l.ksize * t) as u64;
+        }
+        total
+    }
+}

@@ -1,0 +1,65 @@
+//! # fqconv — FQ-Conv: Fully Quantized Convolution, reproduced
+//!
+//! Rust Layer-3 coordinator for the FQ-Conv system (Verhoef et al., 2019):
+//! a quantization-aware-training orchestrator (gradual quantization +
+//! distillation + checkpointing) driving AOT-compiled JAX/XLA train steps
+//! through PJRT, plus a from-scratch integer inference engine, an analog
+//! crossbar-array simulator, synthetic data substrates (keyword-spotting
+//! audio with a full MFCC front end, CIFAR-like images), and a serving
+//! layer (request router + dynamic batcher).
+//!
+//! Python/JAX runs only at build time (`make artifacts`); everything in
+//! this crate is runtime-self-contained given `artifacts/`.
+//!
+//! Module map (see DESIGN.md for the full system inventory):
+//!
+//! * [`util`]        — PRNGs, JSON, thread pool, timers, property testing
+//! * [`tensor`]      — minimal strided ndarray (f32 / i32 / i8)
+//! * [`quant`]       — the paper's quantizer (Eqs. 1-2) + integer LUT re-binning
+//! * [`config`]      — TOML-subset experiment configuration
+//! * [`runtime`]     — PJRT client wrapper: load + execute `artifacts/*.hlo.txt`
+//! * [`data`]        — synthetic KWS audio + DSP front end, image generators
+//! * [`models`]      — architecture descriptors, accounting, Fig. 2/4 printers
+//! * [`coordinator`] — gradual-quantization scheduler, trainer, checkpoints,
+//!                     BN-folding FQ transform (§3.4)
+//! * [`infer`]       — integer FQ-Conv engine (i8 GEMM, ternary fast path)
+//! * [`analog`]      — crossbar simulator with w/a/MAC noise (Table 7)
+//! * [`serve`]       — router + dynamic batcher over the deployment artifact
+//! * [`metrics`]     — accuracy, confusion, latency histograms
+//! * [`bench`]       — micro-benchmark harness used by `cargo bench` targets
+
+pub mod analog;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod infer;
+pub mod metrics;
+pub mod models;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+
+/// Repository-relative default artifact directory.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$FQCONV_ARTIFACTS` or ./artifacts,
+/// walking up from the current directory (tests run from target dirs).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("FQCONV_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! fqconv — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   arch <model> [--fq]                         Fig. 2/4 architecture printer
+//!   plan --model <m> [--steps N]                Fig. 1 GQ schedule renderer
+//!   exp <table1..table7|all> [--budget B] ...   regenerate a paper table
+//!   train --model <m> [--steps N] [--verbose]   run the model's GQ ladder
+//!   serve [--requests N] [--workers W]          serving demo + latency stats
+//!   selftest                                    quick wiring check
+//!
+//! Budgets: --budget smoke|quick|full (default quick for exp, full for train).
+
+use anyhow::{bail, Context, Result};
+
+use fqconv::config::Budget;
+use fqconv::coordinator::{checkpoint, ParamSet, Pipeline, Schedule};
+use fqconv::data;
+use fqconv::exp::{self, Ctx};
+use fqconv::infer::FqKwsNet;
+use fqconv::runtime::{Engine, Manifest};
+use fqconv::serve::{BatchPolicy, NativeBackend, Server};
+use fqconv::util::cli::Args;
+use fqconv::util::{Rng, Timer};
+
+const USAGE: &str = "usage: fqconv <arch|plan|exp|train|serve|selftest> [options]
+  arch <model> [--fq]
+  plan --model <model> [--steps N]
+  exp <table1|table2|table3|table4|table5|table6|table7|all> [--budget smoke|quick|full] [--model M] [--verbose]
+  train --model <model> [--steps N] [--ckpt-dir DIR] [--verbose]
+  serve [--requests N] [--workers W] [--max-batch B] [--max-wait-us U]
+  selftest";
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.command.as_str() {
+        "arch" => cmd_arch(&args),
+        "plan" => cmd_plan(&args),
+        "exp" => cmd_exp(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(),
+        _ => {
+            eprintln!("{USAGE}");
+            bail!("unknown command {:?}", args.command);
+        }
+    }
+}
+
+fn load_manifest() -> Result<Manifest> {
+    let dir = fqconv::artifacts_dir();
+    Manifest::load(&dir).with_context(|| {
+        format!("loading manifest from {} (run `make artifacts` first?)", dir.display())
+    })
+}
+
+fn budget_from(args: &Args, default: Budget) -> Budget {
+    match args.str_or("budget", "").as_str() {
+        "smoke" => Budget::smoke(),
+        "quick" => Budget::quick(),
+        "full" => Budget::full(),
+        "" => default,
+        other => {
+            eprintln!("unknown budget {other:?}, using quick");
+            Budget::quick()
+        }
+    }
+}
+
+fn cmd_arch(args: &Args) -> Result<()> {
+    let model = args.positional.first().map(|s| s.as_str()).unwrap_or("kws");
+    let manifest = load_manifest()?;
+    let info = manifest.model(model)?;
+    println!("{}", fqconv::models::render_architecture(info, args.has("fq")));
+    if args.has("fq") {
+        println!("{}", exp::fig3_note());
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "kws");
+    let steps = args.usize_or("steps", 600);
+    println!("{}", exp::fig1_plan(&model, steps));
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let manifest = load_manifest()?;
+    let engine = Engine::cpu()?;
+    let budget = budget_from(args, Budget::quick());
+    let mut ctx = Ctx::new(&engine, &manifest, budget);
+    ctx.verbose = args.has("verbose");
+    ctx.seed = args.u64_or("seed", 17);
+    let t = Timer::start();
+    match which {
+        "table1" => {
+            exp::table1(&ctx, &args.str_or("model", "resnet8s"))?;
+        }
+        "table2" => {
+            exp::table2(&ctx, &args.str_or("model", "resnet8s"))?;
+        }
+        "table3" => {
+            exp::table3(&ctx)?;
+        }
+        "table4" => {
+            exp::table4(&ctx)?;
+        }
+        "table5" => {
+            // measure accuracies through the KWS ladder, then print
+            let report = exp::table4(&ctx)?;
+            let q35 = report.stage("Q35").map(|s| s.val_acc).unwrap_or(0.0);
+            let fq24 = report.stage("FQ24").map(|s| s.val_acc).unwrap_or(0.0);
+            exp::table5(&ctx, q35, fq24)?;
+        }
+        "table6" => {
+            exp::table6(&ctx, &args.str_or("model", "resnet14s"))?;
+        }
+        "table7" => {
+            exp::table7_kws(&ctx, false)?;
+            exp::table7_cifar(&ctx, &args.str_or("model", "resnet14s"), false)?;
+        }
+        "all" => {
+            exp::table1(&ctx, "resnet8s")?;
+            exp::table2(&ctx, "resnet8s")?;
+            exp::table3(&ctx)?;
+            let report = exp::table4(&ctx)?;
+            let q35 = report.stage("Q35").map(|s| s.val_acc).unwrap_or(0.0);
+            let fq24 = report.stage("FQ24").map(|s| s.val_acc).unwrap_or(0.0);
+            exp::table5(&ctx, q35, fq24)?;
+            exp::table6(&ctx, "resnet14s")?;
+            exp::table7_kws(&ctx, false)?;
+            exp::table7_cifar(&ctx, "resnet14s", false)?;
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    eprintln!("[exp {which}] total {:.1}s", t.elapsed_s());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "kws");
+    let manifest = load_manifest()?;
+    let engine = Engine::cpu()?;
+    let info = manifest.model(&model)?;
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
+    pipe.verbose = args.has("verbose");
+    pipe.seed = args.u64_or("seed", 17);
+    let default_ckpts = manifest.dir.join("ckpts");
+    pipe.ckpt_dir =
+        Some(args.str_or("ckpt-dir", default_ckpts.to_str().unwrap_or("ckpts")).into());
+    let steps = args.usize_or("steps", Budget::full().steps_per_stage);
+    let sched = match info.kind.as_str() {
+        "kws" => Schedule::table4_kws(steps, 0.01),
+        "darknet" => Schedule::table3_darknet(steps, 0.02),
+        _ if info.fq.is_some() => Schedule::table6(&model, steps, 0.002),
+        _ => Schedule::table1(&model, steps, 0.02),
+    };
+    println!("{}", sched.render());
+    let report = pipe.run(&sched)?;
+    println!("{}", report.render_table());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let manifest = load_manifest()?;
+    let info = manifest.model("kws")?;
+    let frames = info.input_shape[1];
+    // deploy parameters: trained FQ checkpoint if available, else the
+    // BN-folded init (structure demo)
+    let fq_graph = info.fq.clone().context("kws fq graph")?;
+    let ckpt = manifest.dir.join("ckpts/kws_FQ24.ckpt");
+    let params = if ckpt.exists() {
+        ParamSet::from_checkpoint(&fq_graph, &checkpoint::read(&ckpt)?)?
+    } else {
+        eprintln!("note: no trained checkpoint at {}; serving untrained weights", ckpt.display());
+        let engine = Engine::cpu()?;
+        let mut src = fqconv::coordinator::Trainer::new(
+            &engine,
+            &manifest,
+            "kws",
+            fqconv::coordinator::Variant::Qat(""),
+        )?;
+        src.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt))?)?;
+        fqconv::coordinator::fq_transform::qat_to_fq(info, &fq_graph, &src.params)?
+    };
+    let net = std::sync::Arc::new(FqKwsNet::from_params(&params, 1.0, 7.0, frames)?);
+    let workers = args.usize_or("workers", 2);
+    let policy =
+        BatchPolicy::new(args.usize_or("max-batch", 16), args.u64_or("max-wait-us", 2000));
+    let sample_numel: usize = info.input_shape.iter().product();
+    let factories: Vec<fqconv::serve::BackendFactory> = (0..workers)
+        .map(|_| fqconv::serve::ready(NativeBackend::new(net.clone(), info.input_shape.clone())))
+        .collect();
+    let server = Server::start_with(factories, sample_numel, policy);
+
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let n = args.usize_or("requests", 256);
+    let mut rng = Rng::new(7);
+    let t = Timer::start();
+    let mut correct = 0usize;
+    let mut pending = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let (x, y) = ds.sample(i as u64 % data::VAL_SIZE, Some(&mut rng));
+        labels.push(y);
+        pending.push(server.submit(x));
+    }
+    for (rx, y) in pending.into_iter().zip(labels) {
+        let resp = rx.recv().expect("response");
+        if resp.class as i32 == y {
+            correct += 1;
+        }
+    }
+    let dt = t.elapsed_s();
+    let stats = server.stats();
+    println!("served {n} requests in {dt:.3}s = {:.0} req/s", n as f64 / dt);
+    println!(
+        "accuracy {:.2}%  mean batch {:.1}",
+        correct as f64 / n as f64 * 100.0,
+        stats.mean_batch
+    );
+    println!("latency: {}", stats.latency_summary);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    let manifest = load_manifest()?;
+    println!("manifest: {} models", manifest.models.len());
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let info = manifest.model("kws")?;
+    let exe = engine.load(&info.artifact_path(&manifest.dir, "fwd")?)?;
+    println!("compiled {}", exe.name());
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let b = ds.val_batch(0, 4);
+    println!("dataset ok: batch {:?}", b.x.shape());
+    println!("selftest OK");
+    Ok(())
+}

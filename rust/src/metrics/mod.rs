@@ -1,0 +1,162 @@
+//! Metrics: classification accuracy/confusion + latency histograms.
+
+use crate::tensor::TensorF;
+
+/// Top-1 accuracy of logits (B, C) against labels.
+pub fn accuracy(logits: &TensorF, labels: &[i32]) -> f64 {
+    let preds = logits.argmax_rows();
+    let correct =
+        preds.iter().zip(labels).filter(|(&p, &y)| p as i32 == y).count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Top-k accuracy (paper reports top-5 for the 100-class experiments).
+pub fn topk_accuracy(logits: &TensorF, labels: &[i32], k: usize) -> f64 {
+    let b = logits.shape()[0];
+    let mut correct = 0usize;
+    for r in 0..b {
+        let row = logits.row(r);
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        idx.sort_by(|&a, &bb| row[bb].total_cmp(&row[a]));
+        if idx.iter().take(k).any(|&i| i as i32 == labels[r]) {
+            correct += 1;
+        }
+    }
+    correct as f64 / b.max(1) as f64
+}
+
+/// Running confusion matrix.
+#[derive(Clone, Debug)]
+pub struct Confusion {
+    pub n: usize,
+    counts: Vec<u64>,
+}
+
+impl Confusion {
+    pub fn new(n: usize) -> Self {
+        Confusion { n, counts: vec![0; n * n] }
+    }
+
+    pub fn add(&mut self, truth: i32, pred: usize) {
+        if (truth as usize) < self.n && pred < self.n {
+            self.counts[truth as usize * self.n + pred] += 1;
+        }
+    }
+
+    pub fn add_batch(&mut self, logits: &TensorF, labels: &[i32]) {
+        for (p, &y) in logits.argmax_rows().into_iter().zip(labels) {
+            self.add(y, p);
+        }
+    }
+
+    pub fn count(&self, truth: usize, pred: usize) -> u64 {
+        self.counts[truth * self.n + pred]
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total: u64 = self.counts.iter().sum();
+        let diag: u64 = (0..self.n).map(|i| self.count(i, i)).sum();
+        diag as f64 / total.max(1) as f64
+    }
+
+    /// Per-class recall.
+    pub fn recall(&self, class: usize) -> f64 {
+        let row: u64 = (0..self.n).map(|p| self.count(class, p)).sum();
+        self.count(class, class) as f64 / row.max(1) as f64
+    }
+}
+
+/// Fixed-bucket latency histogram (microsecond samples, log-ish buckets).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    samples: Vec<f64>,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist { samples: Vec::new() }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.samples.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us max={:.0}us",
+            self.count(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.percentile(100.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = TensorF::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+        assert!((accuracy(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_contains_label() {
+        let logits = TensorF::from_vec(&[1, 4], vec![0.1, 0.5, 0.4, 0.0]);
+        assert_eq!(topk_accuracy(&logits, &[2], 1), 0.0);
+        assert_eq!(topk_accuracy(&logits, &[2], 2), 1.0);
+    }
+
+    #[test]
+    fn confusion_diag() {
+        let mut c = Confusion::new(3);
+        c.add(0, 0);
+        c.add(1, 2);
+        c.add(1, 1);
+        assert_eq!(c.count(1, 2), 1);
+        assert!((c.accuracy() - 2.0 / 3.0).abs() < 1e-9);
+        assert!((c.recall(1) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut h = LatencyHist::new();
+        for i in 1..=100 {
+            h.record_us(i as f64);
+        }
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+}

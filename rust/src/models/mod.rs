@@ -1,0 +1,251 @@
+//! Model descriptors: architecture rendering (Figs. 2-4), parameter/MAC
+//! accounting and the Table-5 model-comparison rows.
+//!
+//! The source of truth for shapes is `artifacts/manifest.json`; this
+//! module derives presentation and accounting views from it.
+
+use crate::runtime::ModelInfo;
+
+/// KWS dilation schedule (mirror of compile/models/kws.py).
+pub const KWS_DILATIONS: [usize; 7] = [1, 1, 2, 4, 8, 8, 8];
+
+/// Bytes needed to store a model's weights at `wbits` weight bits
+/// (the paper's "Size (Byte)" column: params * bits / 8).
+pub fn model_size_bytes(param_count: usize, wbits: u32) -> f64 {
+    param_count as f64 * wbits as f64 / 8.0
+}
+
+/// One row of Table 5.
+#[derive(Clone, Debug)]
+pub struct ModelRow {
+    pub name: String,
+    pub acc_pct: f64,
+    pub params: f64,
+    pub size_bytes: f64,
+    pub mults: f64,
+    pub ours: bool,
+}
+
+/// Literature keyword-spotting models quoted by Table 5
+/// (Sainath & Parada 2015; Tang & Lin 2018).
+pub fn table5_literature_rows() -> Vec<ModelRow> {
+    let r = |name: &str, acc: f64, params: f64, size: f64, mults: f64| ModelRow {
+        name: name.into(),
+        acc_pct: acc,
+        params,
+        size_bytes: size,
+        mults,
+        ours: false,
+    };
+    vec![
+        r("trad-fpool13", 90.5, 1.37e6, 5.48e6, 125e6),
+        r("tpool2", 91.7, 1.09e6, 4.36e6, 103e6),
+        r("one-stride1", 77.9, 954e3, 3.82e6, 5.76e6),
+        r("res15", 95.8, 238e3, 952e3, 894e6),
+        r("res15-narrow", 94.0, 42.6e3, 170e3, 160e6),
+    ]
+}
+
+/// Our Table-5 rows, from the manifest + a measured accuracy.
+pub fn table5_our_rows(info: &ModelInfo, acc_q35: f64, acc_fq24: f64) -> Vec<ModelRow> {
+    let params = info.qat.param_count as f64;
+    let macs = info.macs_per_sample as f64;
+    vec![
+        ModelRow {
+            name: "Q35 (ours)".into(),
+            acc_pct: acc_q35 * 100.0,
+            params,
+            size_bytes: model_size_bytes(info.qat.param_count, 3),
+            mults: macs,
+            ours: true,
+        },
+        ModelRow {
+            name: "FQ24 (ours)".into(),
+            acc_pct: acc_fq24 * 100.0,
+            params,
+            size_bytes: model_size_bytes(info.fq.as_ref().map(|g| g.param_count).unwrap_or(info.qat.param_count), 2),
+            mults: macs,
+            ours: true,
+        },
+    ]
+}
+
+fn human(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}K", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+pub fn render_table5(rows: &[ModelRow]) -> String {
+    let mut out = format!(
+        "{:<16} {:>10} {:>10} {:>12} {:>10}\n",
+        "Model", "Test acc.", "# params", "Size (Byte)", "Mult."
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>9.2}% {:>10} {:>12} {:>10}{}\n",
+            r.name,
+            r.acc_pct,
+            human(r.params),
+            human(r.size_bytes),
+            human(r.mults),
+            if r.ours { "   <- this work" } else { "" },
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Architecture printers (Figs. 2-4)
+// ---------------------------------------------------------------------------
+
+/// Fig. 2 (KWS) / Fig. 4 (ResNet) style architecture summary.
+/// `fq = true` renders the §3.4 fully-quantized variant (Fig. 3/4B).
+pub fn render_architecture(info: &ModelInfo, fq: bool) -> String {
+    match info.kind.as_str() {
+        "kws" => render_kws(info, fq),
+        "resnet" => render_resnet(info, fq),
+        "darknet" => render_darknet(info),
+        other => format!("(no architecture printer for kind {other})"),
+    }
+}
+
+fn block_line(out: &mut String, depth: usize, text: &str) {
+    out.push_str(&"  ".repeat(depth));
+    out.push_str(text);
+    out.push('\n');
+}
+
+fn render_kws(info: &ModelInfo, fq: bool) -> String {
+    let mut out = String::new();
+    let t0 = info.input_shape[1];
+    out.push_str(&format!(
+        "KWS network ({}) — input MFCC ({} coeffs x {} frames)\n",
+        if fq { "fully quantized, Fig. 4B style" } else { "QAT, Fig. 4A style" },
+        info.input_shape[0],
+        t0
+    ));
+    block_line(&mut out, 1, "FC embed 39 -> 100 (full precision)  + BN + Q_in(b=-1)");
+    let mut t = t0;
+    let mut rf = 1usize;
+    for (i, d) in KWS_DILATIONS.iter().enumerate() {
+        t -= 2 * d;
+        rf += 2 * d;
+        let tail = if fq {
+            "-> integer MAC -> Q_ReLU(b=0)   [no BN, no float ReLU]"
+        } else {
+            "-> BN -> ReLU -> Q_act"
+        };
+        block_line(
+            &mut out,
+            1,
+            &format!("FQ-Conv1d#{i} 45f k=3 d={d:<2} T:{t:<3} RF:{rf:<3} {tail}"),
+        );
+    }
+    block_line(&mut out, 1, "GlobalAvgPool (higher precision) -> FC -> softmax(12)");
+    out.push_str(&format!(
+        "params: {} ({:.1}K)   MACs/sample: {:.2}M\n",
+        info.qat.param_count,
+        info.qat.param_count as f64 / 1e3,
+        info.macs_per_sample as f64 / 1e6
+    ));
+    out
+}
+
+fn render_resnet(info: &ModelInfo, fq: bool) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} ({}) — input {}x{}x{} ({} classes)\n",
+        info.name,
+        if fq {
+            "fully quantized, Fig. 4B: Q_in -> FQ-Conv blocks, no BN"
+        } else {
+            "QAT, Fig. 4A: conv(Q(w)) -> BN -> ReLU -> Q_act"
+        },
+        info.input_shape[0],
+        info.input_shape[1],
+        info.input_shape[2],
+        info.num_classes
+    ));
+    // reconstruct stage structure from the spec names
+    let mut blocks: Vec<String> = Vec::new();
+    for spec in &info.qat.trainable {
+        if let Some(stripped) = spec.name.strip_suffix(".c1.w") {
+            blocks.push(stripped.to_string());
+        }
+    }
+    block_line(&mut out, 1, "conv1 3x3 + BN + ReLU + Q_act");
+    for b in &blocks {
+        let down = info.qat.trainable.iter().any(|s| s.name == format!("{b}.down.w"));
+        let tail = if fq { "FQ residual block" } else { "residual block" };
+        block_line(
+            &mut out,
+            1,
+            &format!("{b}: {tail}{}", if down { " (1x1 downsample, quantized)" } else { "" }),
+        );
+    }
+    block_line(&mut out, 1, "GlobalAvgPool -> FC -> softmax (full precision)");
+    out.push_str(&format!(
+        "params: {:.2}K   MACs/sample: {:.2}M\n",
+        info.qat.param_count as f64 / 1e3,
+        info.macs_per_sample as f64 / 1e6
+    ));
+    out
+}
+
+fn render_darknet(info: &ModelInfo) -> String {
+    let mut out = format!(
+        "{} — DarkNet-19 block pattern (3x3 + maxpool + 1x1 squeeze), {} classes\n",
+        info.name, info.num_classes
+    );
+    for spec in &info.qat.trainable {
+        if let Some(name) = spec.name.strip_suffix(".w") {
+            if spec.shape.len() == 4 {
+                block_line(
+                    &mut out,
+                    1,
+                    &format!(
+                        "{name}: conv {}x{} {} -> {}",
+                        spec.shape[2], spec.shape[3], spec.shape[1], spec.shape[0]
+                    ),
+                );
+            }
+        }
+    }
+    out.push_str(&format!(
+        "params: {:.2}K   MACs/sample: {:.2}M\n",
+        info.qat.param_count as f64 / 1e3,
+        info.macs_per_sample as f64 / 1e6
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_bytes_matches_paper() {
+        // Table 5: 50K params -> Q35 (3 bit) 18.75KB, FQ24 (2 bit) 12.5KB
+        assert!((model_size_bytes(50_000, 3) - 18_750.0).abs() < 1.0);
+        assert!((model_size_bytes(50_000, 2) - 12_500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn literature_rows_present() {
+        let rows = table5_literature_rows();
+        assert_eq!(rows.len(), 5);
+        assert!(rows.iter().any(|r| r.name == "res15-narrow"));
+    }
+
+    #[test]
+    fn human_formatting() {
+        assert_eq!(human(1_370_000.0), "1.37M");
+        assert_eq!(human(42_600.0), "42.6K");
+        assert_eq!(human(12.0), "12");
+    }
+}

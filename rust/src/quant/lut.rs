@@ -1,0 +1,170 @@
+//! Integer re-binning LUT: the paper's "hardware-supported quantization".
+//!
+//! Eq. (4) leaves the conv output as an integer accumulator `acc` with an
+//! implicit scale f = (s^a s^w)/(n^a n^w). The next layer wants integer
+//! codes on its own input grid. The float path computes
+//!
+//! ```text
+//! code = round(clip(acc * f / s^o, b, 1) * n^o)
+//! ```
+//!
+//! The paper observes this scale "is not needed for active computation as
+//! long as the hardware-supported quantization ... puts the integer-valued
+//! sum into the correct integer-valued quantized bin". We implement that
+//! hardware bin mapper as a threshold table: since `code(acc)` is
+//! monotone non-decreasing in `acc`, the mapping is fully described by at
+//! most (range of codes) threshold integers. Thresholds are found by
+//! binary search against the *f32 reference formula*, so the LUT agrees
+//! with the XLA artifact bit-for-bit for every in-range accumulator —
+//! including ties-to-even edge cases (verified by property test).
+
+use super::QParams;
+
+/// Threshold-table requantizer: integer accumulator -> integer output code.
+#[derive(Clone, Debug)]
+pub struct RequantLut {
+    /// thresholds[k] = smallest acc whose code is codes_min + k + 1
+    thresholds: Vec<i64>,
+    code_min: i32,
+    code_max: i32,
+    pub acc_min: i64,
+    pub acc_max: i64,
+    /// the float path it reproduces (kept for tests / fallback)
+    pub f: f32,
+    pub out: QParams,
+}
+
+impl RequantLut {
+    /// Reference (float-path) code for an accumulator value.
+    #[inline]
+    pub fn reference_code(acc: i64, f: f32, out: &QParams) -> i32 {
+        out.int_code(acc as f32 * f)
+    }
+
+    /// Build for accumulators in [acc_min, acc_max].
+    ///
+    /// `f` is the Eq. (4) prefactor (s^a s^w)/(n^a n^w) and `out` the next
+    /// layer's input quantizer. Requires f > 0 (scales are e^s > 0).
+    pub fn build(f: f32, out: QParams, acc_min: i64, acc_max: i64) -> Self {
+        Self::build_eval(|acc| Self::reference_code(acc, f, &out), f, out, acc_min, acc_max)
+    }
+
+    /// Reference code for the *composed* two-step re-binning the deployed
+    /// kernel performs: acc -> Q_mid (this layer's output quantizer) ->
+    /// integer code on the *next* layer's input grid. Double rounding is
+    /// intentional — it is what the XLA artifact computes.
+    #[inline]
+    pub fn reference_code_composed(acc: i64, f: f32, mid: &QParams, next: &QParams) -> i32 {
+        let y = mid.quantize(acc as f32 * f);
+        next.int_code(y)
+    }
+
+    /// Build the composed LUT (see [`Self::reference_code_composed`]).
+    pub fn build_composed(
+        f: f32,
+        mid: QParams,
+        next: QParams,
+        acc_min: i64,
+        acc_max: i64,
+    ) -> Self {
+        Self::build_eval(
+            |acc| Self::reference_code_composed(acc, f, &mid, &next),
+            f,
+            next,
+            acc_min,
+            acc_max,
+        )
+    }
+
+    fn build_eval(
+        eval: impl Fn(i64) -> i32,
+        f: f32,
+        out: QParams,
+        acc_min: i64,
+        acc_max: i64,
+    ) -> Self {
+        assert!(f > 0.0);
+        assert!(acc_min <= acc_max);
+        let (code_min, code_max) = out.code_range();
+        let mut thresholds = Vec::with_capacity((code_max - code_min) as usize);
+        for target in code_min + 1..=code_max {
+            // smallest acc in [acc_min, acc_max+1] with code(acc) >= target
+            let (mut lo, mut hi) = (acc_min, acc_max + 1);
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                if eval(mid) >= target {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            thresholds.push(lo);
+        }
+        RequantLut { thresholds, code_min, code_max, acc_min, acc_max, f, out }
+    }
+
+    /// Map an accumulator to its output code. O(log levels).
+    #[inline]
+    pub fn apply(&self, acc: i64) -> i32 {
+        debug_assert!(acc >= self.acc_min && acc <= self.acc_max, "acc {acc} out of LUT range");
+        // partition_point: number of thresholds <= acc
+        let k = self.thresholds.partition_point(|&t| t <= acc);
+        self.code_min + k as i32
+    }
+
+    pub fn code_range(&self) -> (i32, i32) {
+        (self.code_min, self.code_max)
+    }
+
+    pub fn num_thresholds(&self) -> usize {
+        self.thresholds.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_exact(f: f32, out: QParams, lo: i64, hi: i64) {
+        let lut = RequantLut::build(f, out, lo, hi);
+        for acc in lo..=hi {
+            assert_eq!(
+                lut.apply(acc),
+                RequantLut::reference_code(acc, f, &out),
+                "acc={acc} f={f} out={out:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_over_small_range() {
+        check_exact(0.01, QParams::new(1.0, 7.0, 0.0), -500, 500);
+    }
+
+    #[test]
+    fn exact_signed_output() {
+        check_exact(0.003, QParams::new(0.7, 15.0, -1.0), -2000, 2000);
+    }
+
+    #[test]
+    fn exact_ternary_input_grid() {
+        // ternary weights, 4-bit acts: f = (sa*sw)/(na*nw) with nw=1
+        let f = (0.9 * 0.4) / (7.0 * 1.0);
+        check_exact(f, QParams::new(1.2, 7.0, 0.0), -300, 300);
+    }
+
+    #[test]
+    fn saturates_at_bounds() {
+        let out = QParams::new(1.0, 3.0, 0.0);
+        let lut = RequantLut::build(0.1, out, -100, 100);
+        assert_eq!(lut.apply(-100), 0);
+        assert_eq!(lut.apply(100), 3);
+    }
+
+    #[test]
+    fn threshold_count_bounded_by_levels() {
+        let out = QParams::new(1.0, 7.0, -1.0);
+        let lut = RequantLut::build(0.05, out, -1000, 1000);
+        assert_eq!(lut.num_thresholds(), 14); // codes -7..=7 -> 14 boundaries
+    }
+}

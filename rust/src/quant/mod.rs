@@ -1,0 +1,158 @@
+//! The paper's quantizer (Eqs. 1-2) on the Rust side, plus the integer
+//! re-binning LUT used by the inference engine.
+//!
+//! Numerics MUST match the JAX side bit-for-bit on the forward path:
+//! `jnp.round` rounds half-to-even, so we use `f32::round_ties_even`.
+//! Property tests in rust/tests/properties.rs and the artifact-agreement
+//! test in rust/tests/engine_vs_artifact.rs pin this down.
+
+pub mod lut;
+
+pub use lut::RequantLut;
+
+/// Positive level count for an `nbits` code: n = 2^(nb-1) - 1.
+pub fn n_levels(nbits: u32) -> i32 {
+    (1i32 << (nbits - 1)) - 1
+}
+
+/// Eq. (1): round(clip(x, b, 1) * n) / n.
+#[inline]
+pub fn quantize_unit(x: f32, b: f32, n: f32) -> f32 {
+    (x.clamp(b, 1.0) * n).round_ties_even() / n
+}
+
+/// Eq. (2): Q(x) = es * quantize(x / es) with es = e^s pre-exponentiated.
+#[inline]
+pub fn learned_quantize(x: f32, es: f32, n: f32, b: f32) -> f32 {
+    es * quantize_unit(x / es, b, n)
+}
+
+/// Integer code: round(clip(x/es, b, 1) * n) in [b*n, n].
+#[inline]
+pub fn quantize_int(x: f32, es: f32, n: f32, b: f32) -> i32 {
+    ((x / es).clamp(b, 1.0) * n).round_ties_even() as i32
+}
+
+/// Quantize a slice to integer codes (i8 is enough for nb <= 8: |code| <= 127).
+pub fn quantize_int8_slice(xs: &[f32], es: f32, n: f32, b: f32) -> Vec<i8> {
+    xs.iter().map(|&x| quantize_int(x, es, n, b) as i8).collect()
+}
+
+/// Dequantize an integer code back to the real line: x = es * code / n.
+#[inline]
+pub fn dequantize(code: i32, es: f32, n: f32) -> f32 {
+    es * code as f32 / n
+}
+
+/// Per-tensor quantization parameters for one role (weights/acts/output).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    /// e^s, the learned scale (always positive).
+    pub es: f32,
+    /// positive level count n = 2^(nb-1)-1.
+    pub n: f32,
+    /// clip lower bound: -1.0 (signed / hard-tanh-like) or 0.0 (ReLU-like).
+    pub b: f32,
+}
+
+impl QParams {
+    pub fn new(es: f32, n: f32, b: f32) -> Self {
+        assert!(es > 0.0, "scale must be positive (es = e^s)");
+        assert!(n >= 1.0);
+        QParams { es, n, b }
+    }
+
+    pub fn from_log_scale(s: f32, nbits: u32, b: f32) -> Self {
+        QParams::new(s.exp(), n_levels(nbits) as f32, b)
+    }
+
+    /// One least-significant-bit step in real units (the Table-7 noise unit).
+    pub fn lsb(&self) -> f32 {
+        self.es / self.n
+    }
+
+    pub fn quantize(&self, x: f32) -> f32 {
+        learned_quantize(x, self.es, self.n, self.b)
+    }
+
+    pub fn int_code(&self, x: f32) -> i32 {
+        quantize_int(x, self.es, self.n, self.b)
+    }
+
+    pub fn dequantize(&self, code: i32) -> f32 {
+        dequantize(code, self.es, self.n)
+    }
+
+    /// Smallest / largest representable integer code.
+    pub fn code_range(&self) -> (i32, i32) {
+        ((self.b * self.n).round_ties_even() as i32, self.n as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_levels_match_paper() {
+        assert_eq!(n_levels(2), 1); // ternary
+        assert_eq!(n_levels(3), 3);
+        assert_eq!(n_levels(4), 7);
+        assert_eq!(n_levels(5), 15);
+        assert_eq!(n_levels(8), 127);
+    }
+
+    #[test]
+    fn round_half_to_even_matches_jnp() {
+        // jnp.round(0.5) == 0, jnp.round(1.5) == 2
+        assert_eq!(quantize_unit(0.5 / 1.0, -1.0, 1.0), 0.0);
+        assert_eq!(quantize_unit(1.5, -1.0, 1.0), 1.0); // clipped then rounded
+        assert_eq!((0.5f32).round_ties_even(), 0.0);
+        assert_eq!((1.5f32).round_ties_even(), 2.0);
+        assert_eq!((2.5f32).round_ties_even(), 2.0);
+    }
+
+    #[test]
+    fn ternary_codes() {
+        let q = QParams::new(1.0, 1.0, -1.0);
+        assert_eq!(q.int_code(0.7), 1);
+        assert_eq!(q.int_code(0.2), 0);
+        assert_eq!(q.int_code(-0.9), -1);
+        assert_eq!(q.code_range(), (-1, 1));
+    }
+
+    #[test]
+    fn relu_bound_codes() {
+        let q = QParams::new(2.0, 7.0, 0.0);
+        assert_eq!(q.int_code(-5.0), 0);
+        assert_eq!(q.int_code(5.0), 7);
+        assert_eq!(q.code_range(), (0, 7));
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let q = QParams::new(0.8, 15.0, -1.0);
+        for i in -15..=15 {
+            let x = q.dequantize(i);
+            assert_eq!(q.int_code(x), i, "code {i}");
+            assert!((q.quantize(x) - x).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn max_error_half_lsb_inside_range() {
+        let q = QParams::new(1.3, 7.0, -1.0);
+        let mut x = -1.3f32;
+        while x < 1.3 {
+            let err = (q.quantize(x) - x).abs();
+            assert!(err <= q.lsb() / 2.0 + 1e-6, "x={x} err={err}");
+            x += 0.013;
+        }
+    }
+
+    #[test]
+    fn int8_slice() {
+        let v = quantize_int8_slice(&[0.9, -0.9, 0.1], 1.0, 1.0, -1.0);
+        assert_eq!(v, vec![1, -1, 0]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! python/compile/aot.py) into typed model/graph descriptors.
+//!
+//! The manifest is the contract between build-time Python and the runtime
+//! coordinator: tensor order here IS the positional argument order of the
+//! lowered computations.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered graph family's parameter signature.
+#[derive(Clone, Debug, Default)]
+pub struct GraphSpec {
+    pub trainable: Vec<TensorSpec>,
+    pub state: Vec<TensorSpec>,
+    /// optimizer slot shapes (SGD: momentum per trainable; Adam: m+v+step)
+    pub opt: Vec<Vec<usize>>,
+    pub param_count: usize,
+}
+
+impl GraphSpec {
+    pub fn n_inputs_train(&self) -> usize {
+        self.trainable.len() + self.state.len() + self.opt.len() + 4 // x, y, teacher, hp
+    }
+
+    pub fn all_specs(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.trainable.iter().chain(self.state.iter())
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.all_specs().position(|s| s.name == name)
+    }
+}
+
+/// QAT -> FQ parameter transform rule (§3.4; see coordinator::fq_transform).
+#[derive(Clone, Debug)]
+pub struct FqRule {
+    pub fq: String,
+    pub qat: String,
+    pub pred_scale: String,
+    pub bn: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub opt_kind: String,
+    pub macs_per_sample: u64,
+    pub qat: GraphSpec,
+    pub fq: Option<GraphSpec>,
+    pub fq_map: Vec<FqRule>,
+    pub artifacts: BTreeMap<String, String>,
+    pub init_ckpt: String,
+}
+
+impl ModelInfo {
+    pub fn artifact_path(&self, dir: &Path, key: &str) -> Result<PathBuf> {
+        match self.artifacts.get(key) {
+            Some(f) => Ok(dir.join(f)),
+            None => bail!("model {} has no artifact {key:?}", self.name),
+        }
+    }
+
+    /// Per-sample input element count.
+    pub fn input_numel(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub hp_len: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn parse_specs(j: &Json) -> Vec<TensorSpec> {
+    j.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|t| TensorSpec {
+            name: t.req("name").as_str().unwrap_or_default().to_string(),
+            shape: t.req("shape").usizes(),
+        })
+        .collect()
+}
+
+fn parse_graph(j: &Json) -> GraphSpec {
+    GraphSpec {
+        trainable: parse_specs(j.req("trainable")),
+        state: parse_specs(j.req("state")),
+        opt: j.req("opt").as_arr().unwrap_or(&[]).iter().map(|s| s.usizes()).collect(),
+        param_count: j.req("param_count").as_usize().unwrap_or(0),
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::verify_hp(&j)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").as_obj().context("manifest.models")? {
+            let fq = m.get("fq").map(parse_graph);
+            let fq_map = m
+                .get("fq_map")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|r| FqRule {
+                    fq: r.req("fq").as_str().unwrap_or_default().to_string(),
+                    qat: r.req("qat").as_str().unwrap_or_default().to_string(),
+                    pred_scale: r.req("pred_scale").as_str().unwrap_or_default().to_string(),
+                    bn: r.req("bn").as_bool().unwrap_or(false),
+                })
+                .collect();
+            let artifacts = m
+                .req("artifacts")
+                .as_obj()
+                .context("artifacts")?
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    kind: m.req("kind").as_str().unwrap_or_default().to_string(),
+                    batch: m.req("batch").as_usize().context("batch")?,
+                    input_shape: m.req("input_shape").usizes(),
+                    num_classes: m.req("num_classes").as_usize().context("num_classes")?,
+                    opt_kind: m.req("opt_kind").as_str().unwrap_or_default().to_string(),
+                    macs_per_sample: m.req("macs_per_sample").as_f64().unwrap_or(0.0) as u64,
+                    qat: parse_graph(m.req("qat")),
+                    fq,
+                    fq_map,
+                    artifacts,
+                    init_ckpt: m.req("init_ckpt").as_str().unwrap_or_default().to_string(),
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            hp_len: j.req("hp_len").as_usize().context("hp_len")?,
+            models,
+        })
+    }
+
+    /// The Rust hp constants must agree with the python layout.
+    fn verify_hp(j: &Json) -> Result<()> {
+        use super::hp;
+        let layout = j.req("hp_layout");
+        let expect = [
+            ("lr", hp::LR),
+            ("weight_decay", hp::WEIGHT_DECAY),
+            ("momentum", hp::MOMENTUM),
+            ("distill_weight", hp::DISTILL_WEIGHT),
+            ("distill_temp", hp::DISTILL_TEMP),
+            ("nw", hp::NW),
+            ("na", hp::NA),
+            ("sigma_w", hp::SIGMA_W),
+            ("sigma_a", hp::SIGMA_A),
+            ("sigma_mac", hp::SIGMA_MAC),
+            ("seed", hp::SEED),
+            ("bn_momentum", hp::BN_MOMENTUM),
+        ];
+        for (key, idx) in expect {
+            let got = layout.req(key).as_usize();
+            if got != Some(idx) {
+                bail!("hp layout mismatch for {key}: manifest={got:?} rust={idx}");
+            }
+        }
+        if j.req("hp_len").as_usize() != Some(hp::LEN) {
+            bail!("hp_len mismatch");
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).with_context(|| format!("unknown model {name:?}"))
+    }
+}

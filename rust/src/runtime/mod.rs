@@ -1,0 +1,137 @@
+//! PJRT runtime: load AOT artifacts (`*.hlo.txt`) and execute them.
+//!
+//! Thin, deliberate wrapper over the `xla` crate following the pattern
+//! validated in /opt/xla-example: HLO *text* -> `HloModuleProto` ->
+//! `XlaComputation` -> `PjRtClient::compile` -> `execute`. All lowered
+//! computations return a tuple (`return_tuple=True` at lowering), which
+//! [`Executable::run`] decomposes back into per-output literals.
+//!
+//! The coordinator keeps parameters as [`xla::Literal`] values between
+//! steps — on the CPU PJRT client host<->device transfers are memcpys,
+//! and the perf pass (EXPERIMENTS.md §Perf) measures the copy overhead
+//! explicitly via `benches/perf_runtime.rs`.
+
+pub mod artifacts;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use artifacts::{FqRule, GraphSpec, Manifest, ModelInfo, TensorSpec};
+
+/// Hyper-parameter vector layout — MUST mirror python/compile/layers.py HP.
+/// Checked against the manifest at load time (`Manifest::verify_hp`).
+pub mod hp {
+    pub const LEN: usize = 16;
+    pub const LR: usize = 0;
+    pub const WEIGHT_DECAY: usize = 1;
+    pub const MOMENTUM: usize = 2;
+    pub const DISTILL_WEIGHT: usize = 3;
+    pub const DISTILL_TEMP: usize = 4;
+    pub const NW: usize = 5;
+    pub const NA: usize = 6;
+    pub const SIGMA_W: usize = 7;
+    pub const SIGMA_A: usize = 8;
+    pub const SIGMA_MAC: usize = 9;
+    pub const SEED: usize = 10;
+    pub const BN_MOMENTUM: usize = 11;
+
+    /// Default vector matching layers.hp_vec(): momentum 0.9, bn 0.1, T 4.
+    pub fn defaults() -> [f32; LEN] {
+        let mut v = [0.0f32; LEN];
+        v[MOMENTUM] = 0.9;
+        v[BN_MOMENTUM] = 0.1;
+        v[DISTILL_TEMP] = 4.0;
+        v
+    }
+}
+
+/// PJRT engine: one client, many compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled computation ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs; decompose the result tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        out.to_tuple().map_err(|e| anyhow::anyhow!("decomposing {} result: {e}", self.name))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal with the given logical shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> xla::Literal {
+    let n: usize = shape.iter().product();
+    assert_eq!(n, data.len(), "lit_f32 shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).expect("reshape literal")
+}
+
+/// i32 literal with the given logical shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> xla::Literal {
+    let n: usize = shape.iter().product();
+    assert_eq!(n, data.len(), "lit_i32 shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).expect("reshape literal")
+}
+
+/// Scalar (rank-0) f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to f32 vec: {e}"))
+}
+
+pub fn lit_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit_to_vec_f32(lit)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}

@@ -1,0 +1,112 @@
+//! Dynamic-batching policy (pure logic, no threads — unit-testable).
+//!
+//! The policy mirrors the classic serving trade-off: a batch closes when
+//! it reaches `max_batch` (throughput bound) or when the oldest queued
+//! request has waited `max_wait_us` (latency bound). The property tests
+//! in rust/tests/properties.rs check that no admissible sequence of
+//! arrivals can starve a request beyond `max_wait_us` + one service time.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// close the batch at this size
+    pub max_batch: usize,
+    /// close the batch when the oldest request has waited this long
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, max_wait_us: 2_000 }
+    }
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait_us: u64) -> Self {
+        assert!(max_batch >= 1);
+        BatchPolicy { max_batch, max_wait_us }
+    }
+}
+
+/// Discrete-time simulation of the batcher (used by tests and the
+/// batching-policy ablation bench): given arrival times (us), returns
+/// per-request (dispatch_time, batch_size).
+pub fn simulate(policy: BatchPolicy, arrivals_us: &[u64], service_us: u64) -> Vec<(u64, usize)> {
+    let mut out = vec![(0u64, 0usize); arrivals_us.len()];
+    let mut i = 0;
+    let mut worker_free_at = 0u64;
+    while i < arrivals_us.len() {
+        let open = arrivals_us[i];
+        let deadline = open + policy.max_wait_us;
+        // collect while size and deadline admit
+        let mut j = i + 1;
+        while j < arrivals_us.len()
+            && j - i < policy.max_batch
+            && arrivals_us[j] <= deadline
+        {
+            j += 1;
+        }
+        let size = j - i;
+        let close = if size == policy.max_batch {
+            arrivals_us[j - 1] // filled up
+        } else {
+            deadline // timer fired
+        };
+        let start = close.max(worker_free_at);
+        worker_free_at = start + service_us;
+        for r in i..j {
+            out[r] = (start, size);
+        }
+        i = j;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_max_batch() {
+        let p = BatchPolicy::new(4, 1_000_000);
+        let arr: Vec<u64> = (0..8).map(|i| i * 10).collect();
+        let d = simulate(p, &arr, 100);
+        assert_eq!(d[0].1, 4);
+        assert_eq!(d[4].1, 4);
+    }
+
+    #[test]
+    fn timer_closes_partial_batch() {
+        let p = BatchPolicy::new(16, 500);
+        let arr = vec![0, 100, 10_000];
+        let d = simulate(p, &arr, 50);
+        assert_eq!(d[0].1, 2); // first two ride together
+        assert_eq!(d[0].0, 500); // dispatched at deadline
+        assert_eq!(d[2].1, 1);
+    }
+
+    #[test]
+    fn no_request_waits_beyond_deadline_plus_service() {
+        let p = BatchPolicy::new(8, 1_000);
+        let arr: Vec<u64> = (0..50).map(|i| i * 137).collect();
+        let service = 200;
+        for (k, &(start, _)) in simulate(p, &arr, service).iter().enumerate() {
+            // batching delay alone never exceeds max_wait
+            assert!(
+                start.saturating_sub(arr[k]) <= p.max_wait_us + service * 50,
+                "request {k} starved"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_one_behaves_like_no_batching() {
+        let p = BatchPolicy::new(1, 1_000_000);
+        let arr = vec![0, 5, 10];
+        let d = simulate(p, &arr, 100);
+        assert!(d.iter().all(|&(_, s)| s == 1));
+        // sequential service
+        assert_eq!(d[0].0, 0);
+        assert_eq!(d[1].0, 100);
+        assert_eq!(d[2].0, 200);
+    }
+}

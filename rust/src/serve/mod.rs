@@ -1,0 +1,381 @@
+//! Serving layer: request router + dynamic batcher over the deployed
+//! FQ network — the edge-inference story the paper motivates.
+//!
+//! Architecture (vLLM-router-like, scaled to the edge):
+//!
+//! ```text
+//!  clients --> [ingress queue] --> batcher thread --(batches)--> worker pool
+//!                                   (max_batch / max_wait_us)       |
+//!  clients <---------------- per-request response channels <--------+
+//! ```
+//!
+//! * [`batcher`] — pure batch-assembly policy (unit-testable, no threads)
+//! * [`Server`]  — threads + channels glue; workers own backend replicas
+//!
+//! Backends: the native integer engine ([`NativeBackend`], per-sample,
+//! batch-size-free) or the XLA deployment artifact ([`XlaBackend`],
+//! fixed-batch with padding). Both are measured in `benches/perf_serve.rs`.
+
+pub mod batcher;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use std::path::PathBuf;
+
+use crate::infer::pipeline::{FqKwsNet, Scratch};
+use crate::metrics::LatencyHist;
+use crate::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Executable};
+use crate::tensor::TensorF;
+
+pub use batcher::BatchPolicy;
+
+/// A classification request: one feature tensor (flattened sample).
+pub struct Request {
+    pub id: u64,
+    pub features: Vec<f32>,
+    submitted: Instant,
+    reply: Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub class: usize,
+    pub latency_us: f64,
+    /// size of the batch this request rode in (observability)
+    pub batch_size: usize,
+}
+
+/// Inference backend executed by a worker.
+pub trait Backend {
+    /// (B, sample_numel) -> (B, classes)
+    fn infer(&mut self, x: &TensorF) -> Result<TensorF>;
+    fn sample_shape(&self) -> Vec<usize>;
+}
+
+/// Native integer engine backend (batch-size agnostic).
+pub struct NativeBackend {
+    pub net: Arc<FqKwsNet>,
+    scratch: Scratch,
+    shape: Vec<usize>,
+}
+
+impl NativeBackend {
+    pub fn new(net: Arc<FqKwsNet>, shape: Vec<usize>) -> Self {
+        NativeBackend { net, scratch: Scratch::default(), shape }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn infer(&mut self, x: &TensorF) -> Result<TensorF> {
+        let b = x.shape()[0];
+        let per: usize = self.shape.iter().product();
+        let mut out = Vec::with_capacity(b * self.net.classes);
+        for i in 0..b {
+            out.extend(self.net.forward(&x.data()[i * per..(i + 1) * per], &mut self.scratch));
+        }
+        Ok(TensorF::from_vec(&[b, self.net.classes], out))
+    }
+
+    fn sample_shape(&self) -> Vec<usize> {
+        self.shape.clone()
+    }
+}
+
+/// XLA deployment-artifact backend (fixed batch; pads partial batches).
+///
+/// NOTE: the `xla` crate's PJRT handles are not `Send` (Rc-based), so an
+/// `XlaBackend` must be constructed *inside* its worker thread — use
+/// [`XlaBackend::factory`] with [`Server::start`], which builds one
+/// engine + compiled executable per worker.
+pub struct XlaBackend {
+    _engine: Engine,
+    exe: Executable,
+    params: Vec<(Vec<usize>, Vec<f32>)>,
+    pub hp: [f32; hp::LEN],
+    pub batch: usize,
+    pub classes: usize,
+    shape: Vec<usize>,
+}
+
+impl XlaBackend {
+    /// Build in-thread from an artifact path + host-side parameters.
+    pub fn load(
+        artifact: &PathBuf,
+        params: Vec<(Vec<usize>, Vec<f32>)>,
+        hpv: [f32; hp::LEN],
+        batch: usize,
+        classes: usize,
+        shape: Vec<usize>,
+    ) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        let exe = engine.load(artifact)?;
+        Ok(XlaBackend { _engine: engine, exe, params, hp: hpv, batch, classes, shape })
+    }
+
+    /// A `Send` factory for [`Server::start`].
+    pub fn factory(
+        artifact: PathBuf,
+        params: Vec<(Vec<usize>, Vec<f32>)>,
+        hpv: [f32; hp::LEN],
+        batch: usize,
+        classes: usize,
+        shape: Vec<usize>,
+    ) -> BackendFactory {
+        Box::new(move || {
+            Box::new(
+                XlaBackend::load(&artifact, params, hpv, batch, classes, shape)
+                    .expect("building XLA backend"),
+            ) as Box<dyn Backend>
+        })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn infer(&mut self, x: &TensorF) -> Result<TensorF> {
+        let b = x.shape()[0];
+        let per: usize = self.shape.iter().product();
+        anyhow::ensure!(b <= self.batch, "batch {b} exceeds artifact batch {}", self.batch);
+        let mut padded = x.data().to_vec();
+        padded.resize(self.batch * per, 0.0);
+        let mut shape = vec![self.batch];
+        shape.extend(&self.shape);
+        let mut inputs: Vec<xla::Literal> =
+            self.params.iter().map(|(s, d)| lit_f32(s, d)).collect();
+        inputs.push(lit_f32(&shape, &padded));
+        inputs.push(lit_f32(&[hp::LEN], &self.hp));
+        let outs = self.exe.run(&inputs)?;
+        let logits = lit_to_vec_f32(&outs[0])?;
+        Ok(TensorF::from_vec(&[b, self.classes], logits[..b * self.classes].to_vec()))
+    }
+
+    fn sample_shape(&self) -> Vec<usize> {
+        self.shape.clone()
+    }
+}
+
+/// Backend constructor executed inside the worker thread (required for
+/// non-Send backends like [`XlaBackend`]).
+pub type BackendFactory = Box<dyn FnOnce() -> Box<dyn Backend> + Send>;
+
+/// Wrap an already-Send backend in a factory.
+pub fn ready<B: Backend + Send + 'static>(b: B) -> BackendFactory {
+    Box::new(move || Box::new(b) as Box<dyn Backend>)
+}
+
+/// Server statistics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency_summary: String,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+pub struct Server {
+    ingress: Sender<Request>,
+    next_id: AtomicU64,
+    served: Arc<AtomicUsize>,
+    batches: Arc<AtomicUsize>,
+    hist: Arc<Mutex<LatencyHist>>,
+    sample_numel: usize,
+    workers: Vec<thread::JoinHandle<()>>,
+    batcher: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start a server over backend factories (one worker thread per
+    /// factory; each factory runs inside its thread so non-Send backends
+    /// like XLA executables work).
+    pub fn start_with(
+        factories: Vec<BackendFactory>,
+        sample_numel: usize,
+        policy: BatchPolicy,
+    ) -> Self {
+        assert!(!factories.is_empty());
+        let (ingress_tx, ingress_rx) = mpsc::channel::<Request>();
+        let served = Arc::new(AtomicUsize::new(0));
+        let batches = Arc::new(AtomicUsize::new(0));
+        let hist = Arc::new(Mutex::new(LatencyHist::new()));
+
+        // worker pool: each worker builds + owns a backend replica
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for (wi, factory) in factories.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Vec<Request>>();
+            worker_txs.push(tx);
+            let served = Arc::clone(&served);
+            let batches = Arc::clone(&batches);
+            let hist = Arc::clone(&hist);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("fqconv-worker-{wi}"))
+                    .spawn(move || {
+                        let mut backend = factory();
+                        while let Ok(reqs) = rx.recv() {
+                            let b = reqs.len();
+                            let mut flat = Vec::with_capacity(b * sample_numel);
+                            for r in &reqs {
+                                flat.extend_from_slice(&r.features);
+                            }
+                            let x = TensorF::from_vec(&[b, sample_numel], flat);
+                            match backend.infer(&x) {
+                                Ok(logits) => {
+                                    // count the batch BEFORE replying: stats()
+                                    // may be read the instant the last response
+                                    // lands
+                                    batches.fetch_add(1, Ordering::Relaxed);
+                                    let preds = logits.argmax_rows();
+                                    let classes = logits.shape()[1];
+                                    for (i, r) in reqs.into_iter().enumerate() {
+                                        let lat = r.submitted.elapsed().as_secs_f64() * 1e6;
+                                        hist.lock().unwrap().record_us(lat);
+                                        served.fetch_add(1, Ordering::Relaxed);
+                                        let _ = r.reply.send(Response {
+                                            id: r.id,
+                                            logits: logits.data()
+                                                [i * classes..(i + 1) * classes]
+                                                .to_vec(),
+                                            class: preds[i],
+                                            latency_us: lat,
+                                            batch_size: b,
+                                        });
+                                    }
+                                }
+                                Err(e) => {
+                                    log::error!("backend error: {e:#}");
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        // batcher thread: assemble batches per policy, round-robin dispatch
+        let batcher = {
+            let policy = policy;
+            thread::Builder::new()
+                .name("fqconv-batcher".into())
+                .spawn(move || batcher_loop(ingress_rx, worker_txs, policy))
+                .expect("spawn batcher")
+        };
+
+        Server {
+            ingress: ingress_tx,
+            next_id: AtomicU64::new(0),
+            served,
+            batches,
+            hist,
+            sample_numel,
+            workers,
+            batcher: Some(batcher),
+        }
+    }
+
+    /// Submit a request; returns the response channel.
+    pub fn submit(&self, features: Vec<f32>) -> Receiver<Response> {
+        assert_eq!(features.len(), self.sample_numel, "bad feature length");
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            features,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        self.ingress.send(req).expect("server closed");
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn infer(&self, features: Vec<f32>) -> Response {
+        self.submit(features).recv().expect("worker dropped")
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let hist = self.hist.lock().unwrap();
+        let served = self.served.load(Ordering::Relaxed) as u64;
+        let batches = self.batches.load(Ordering::Relaxed) as u64;
+        ServerStats {
+            served,
+            batches,
+            mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
+            latency_summary: hist.summary(),
+            p50_us: hist.percentile(50.0),
+            p99_us: hist.percentile(99.0),
+        }
+    }
+
+    /// Graceful shutdown: drain, then join threads.
+    pub fn shutdown(mut self) {
+        drop(std::mem::replace(&mut self.ingress, mpsc::channel().0));
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batcher_loop(rx: Receiver<Request>, workers: Vec<Sender<Vec<Request>>>, policy: BatchPolicy) {
+    let mut next_worker = 0usize;
+    let mut pending: Vec<Request> = Vec::new();
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let timeout = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => Duration::from_secs(3600),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                if pending.is_empty() {
+                    deadline = Some(Instant::now() + Duration::from_micros(policy.max_wait_us));
+                }
+                pending.push(req);
+                if pending.len() >= policy.max_batch {
+                    dispatch(&mut pending, &workers, &mut next_worker);
+                    deadline = None;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    dispatch(&mut pending, &workers, &mut next_worker);
+                }
+                deadline = None;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    dispatch(&mut pending, &workers, &mut next_worker);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn dispatch(pending: &mut Vec<Request>, workers: &[Sender<Vec<Request>>], next: &mut usize) {
+    let mut batch = std::mem::take(pending);
+    if batch.is_empty() {
+        return;
+    }
+    // round-robin; SendError hands the batch back so we can try the next
+    // worker if one has died
+    for _ in 0..workers.len() {
+        let w = *next % workers.len();
+        *next += 1;
+        match workers[w].send(batch) {
+            Ok(()) => return,
+            Err(e) => batch = e.0,
+        }
+    }
+}

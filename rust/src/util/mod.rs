@@ -1,0 +1,12 @@
+//! Infrastructure substrates built from scratch (the offline image ships
+//! no rand/serde/rayon/criterion — see DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,97 @@
+//! Tiny property-based testing helper (no proptest crate offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! from `gen`; on failure it performs a bounded re-sampling "shrink-lite"
+//! pass (retry with fresh, smaller inputs from the generator's low end)
+//! and panics with the seed so the case is replayable.
+
+use super::rng::Rng;
+
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> Gen<'a> {
+    /// Size hint in [0,1]: early cases are small, later cases larger.
+    pub fn sized_usize(&mut self, size: f64, max: usize) -> usize {
+        let cap = ((max as f64) * size).ceil().max(1.0) as usize;
+        1 + self.rng.below(cap)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    pub fn vec_gaussian(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_gaussian(&mut v, std);
+        v
+    }
+
+    pub fn choice<'b, T>(&mut self, opts: &'b [T]) -> &'b T {
+        &opts[self.rng.below(opts.len())]
+    }
+}
+
+/// Run a property over `cases` random inputs. `make` builds an input from
+/// (Gen, size); `prop` returns Err(description) on violation.
+pub fn check<T: std::fmt::Debug, M, P>(name: &str, cases: usize, mut make: M, mut prop: P)
+where
+    M: FnMut(&mut Gen, f64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let seed = 0xF0CC_u64 ^ name.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let size = (case + 1) as f64 / cases as f64;
+        let input = make(&mut Gen { rng: &mut rng }, size);
+        if let Err(why) = prop(&input) {
+            // shrink-lite: retry small inputs to find a minimal-ish witness
+            let mut witness = format!("{input:?}");
+            let mut why_min = why.clone();
+            let mut shrink_rng = Rng::new(seed ^ 0xDEAD);
+            for _ in 0..50 {
+                let small = make(&mut Gen { rng: &mut shrink_rng }, 0.05);
+                if let Err(w2) = prop(&small) {
+                    witness = format!("{small:?}");
+                    why_min = w2;
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, case {case}): {why_min}\n  witness: {witness}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |g, s| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            let _ = s;
+            (a, b)
+        }, |&(a, b)| {
+            if (a + b - (b + a)).abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics() {
+        check("always-fails", 5, |g, _| g.f32_in(0.0, 1.0), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,131 @@
+//! Fixed-size thread pool substrate (no rayon/tokio in the offline image).
+//!
+//! Used by the serving worker pool and the data-parallel parts of the
+//! integer inference engine. Jobs are `FnOnce` closures; `scope_chunks`
+//! provides the fork-join pattern the GEMM tiler needs.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("fqconv-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+
+    /// Run `f(chunk_index)` for each of `n` chunks and wait for all.
+    pub fn scope_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return;
+        }
+        let f = Arc::new(f);
+        let remaining = Arc::new((Mutex::new(n), std::sync::Condvar::new()));
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let remaining = Arc::clone(&remaining);
+            self.execute(move || {
+                f(i);
+                let (lock, cv) = &*remaining;
+                let mut left = lock.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    cv.notify_all();
+                }
+            });
+        }
+        let (lock, cv) = &*remaining;
+        let mut left = lock.lock().unwrap();
+        while *left > 0 {
+            left = cv.wait(left).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Default worker count: physical parallelism minus one coordinator thread.
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_chunks_waits() {
+        let pool = ThreadPool::new(3);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        pool.scope_chunks(17, move |_| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn zero_chunks_ok() {
+        let pool = ThreadPool::new(2);
+        pool.scope_chunks(0, |_| panic!("should not run"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Coordinator integration: a miniature gradual-quantization pipeline
+//! runs end-to-end through real PJRT train steps, checkpoints persist
+//! and reload, distillation plumbs teacher logits, and the QAT->FQ
+//! hand-off produces a trainable FQ network.
+
+use fqconv::coordinator::{
+    checkpoint, Pipeline, Schedule, Stage, TeacherPolicy, Trainer, Variant,
+};
+use fqconv::data::{self, Dataset};
+use fqconv::runtime::{hp, Engine, Manifest};
+use fqconv::util::Rng;
+
+fn setup() -> (Manifest, Engine) {
+    let dir = fqconv::artifacts_dir();
+    (Manifest::load(&dir).expect("manifest"), Engine::cpu().expect("engine"))
+}
+
+#[test]
+fn training_reduces_loss() {
+    let (manifest, engine) = setup();
+    let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+    let info = manifest.model("kws").unwrap();
+    t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut rng = Rng::new(3);
+    let mut hpv = hp::defaults();
+    hpv[hp::LR] = 0.01; // fp stage
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 0..20 {
+        let batch = ds.train_batch(info.batch, &mut rng);
+        hpv[hp::SEED] = step as f32;
+        let stats = t.step(&batch, None, &hpv).unwrap();
+        assert!(stats.loss.is_finite(), "loss must stay finite");
+        if first.is_none() {
+            first = Some(stats.loss);
+        }
+        last = stats.loss;
+    }
+    assert!(
+        last < first.unwrap() * 0.9,
+        "20 steps should reduce loss materially: {} -> {last}",
+        first.unwrap()
+    );
+}
+
+#[test]
+fn mini_pipeline_with_fq_stage() {
+    let (manifest, engine) = setup();
+    let info = manifest.model("kws").unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
+    pipe.eval_batches = 2;
+    let tmp = std::env::temp_dir().join("fqconv_test_ckpts");
+    pipe.ckpt_dir = Some(tmp.clone());
+    let sched = Schedule::new(
+        "kws",
+        vec![
+            Stage::new("FP", 0, 0).steps(10).lr(0.01),
+            Stage::new("Q24", 2, 4).from("FP").taught_by("FP").steps(10).lr(0.005),
+            Stage::new("FQ24", 2, 4).from("Q24").taught_by("FP").fq().steps(5).lr(0.0005),
+        ],
+        TeacherPolicy::Declared,
+    )
+    .unwrap();
+    let report = pipe.run(&sched).unwrap();
+    assert_eq!(report.stages.len(), 3);
+    assert!(report.stages.iter().all(|s| s.val_acc.is_finite()));
+    assert!(report.stage("FQ24").unwrap().fq);
+    // distillation actually resolved a teacher for stage 2
+    assert_eq!(report.stage("Q24").unwrap().teacher.as_deref(), Some("FP"));
+    // checkpoints persisted per stage and reload cleanly
+    for stage in ["FP", "Q24", "FQ24"] {
+        let path = tmp.join(format!("kws_{stage}.ckpt"));
+        assert!(path.exists(), "missing checkpoint {}", path.display());
+        let ck = checkpoint::read(&path).unwrap();
+        assert!(ck.len() > 10);
+    }
+    // FQ checkpoint loads into the FQ graph
+    let fq_ck = checkpoint::read(&tmp.join("kws_FQ24.ckpt")).unwrap();
+    let fq_graph = info.fq.clone().unwrap();
+    let ps = fqconv::coordinator::ParamSet::from_checkpoint(&fq_graph, &fq_ck).unwrap();
+    assert_eq!(ps.specs.len(), fq_graph.trainable.len() + fq_graph.state.len());
+}
+
+#[test]
+fn teacher_promotion_policy_picks_best() {
+    // PromoteBest must select the highest-accuracy completed stage; we
+    // check the plumbing by observing the recorded teacher names.
+    let (manifest, engine) = setup();
+    let info = manifest.model("kws").unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
+    pipe.eval_batches = 2;
+    let sched = Schedule::new(
+        "kws",
+        vec![
+            Stage::new("FP", 0, 0).steps(12).lr(0.01),
+            Stage::new("Q88", 8, 8).from("FP").taught_by("FP").steps(6).lr(0.005),
+            Stage::new("Q44", 4, 4).from("Q88").taught_by("Q88").steps(6).lr(0.005),
+        ],
+        TeacherPolicy::PromoteBest,
+    )
+    .unwrap();
+    let report = pipe.run(&sched).unwrap();
+    // Q44's teacher must be whichever of FP/Q88 evaluated best
+    let fp = report.stage("FP").unwrap().val_acc;
+    let q88 = report.stage("Q88").unwrap().val_acc;
+    let expect = if q88 > fp { "Q88" } else { "FP" };
+    assert_eq!(report.stage("Q44").unwrap().teacher.as_deref(), Some(expect));
+}
+
+#[test]
+fn distillation_changes_training() {
+    // same seed, with vs without teacher: parameter trajectories differ
+    let (manifest, engine) = setup();
+    let info = manifest.model("kws").unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let init = checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap();
+
+    let run = |distill: bool| -> f32 {
+        let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+        t.load_params(&init).unwrap();
+        let mut teacher = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+        teacher.load_params(&init).unwrap();
+        let mut rng = Rng::new(5);
+        let mut hpv = hp::defaults();
+        hpv[hp::LR] = 0.01;
+        hpv[hp::DISTILL_WEIGHT] = if distill { 0.8 } else { 0.0 };
+        let mut loss = 0.0;
+        for step in 0..5 {
+            let batch = ds.train_batch(info.batch, &mut rng);
+            let tl = teacher.forward(&batch.x, &hp::defaults()).unwrap();
+            hpv[hp::SEED] = step as f32;
+            loss = t.step(&batch, Some(&tl), &hpv).unwrap().loss;
+        }
+        loss
+    };
+    let with = run(true);
+    let without = run(false);
+    assert!((with - without).abs() > 1e-6, "distillation weight must matter");
+}

@@ -1,0 +1,170 @@
+//! The CORE deployment-correctness signal: the native integer engine
+//! must agree with the XLA deployment artifact (`kws_fq_fwd`, Pallas
+//! fused kernel) on the same parameters and inputs.
+//!
+//! Tiny float-associativity differences in the FP embedding can flip a
+//! code at a bin boundary, so agreement is asserted as: logits close
+//! (atol) and argmax identical on (nearly) all samples.
+
+use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
+use fqconv::data::{self, Dataset as _};
+use fqconv::infer::FqKwsNet;
+use fqconv::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Manifest};
+use fqconv::tensor::TensorF;
+use fqconv::util::Rng;
+
+#[test]
+fn integer_engine_matches_xla_artifact() {
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let engine = Engine::cpu().expect("engine");
+    let info = manifest.model("kws").unwrap();
+
+    // get realistic FQ parameters: briefly train QAT, then transform
+    let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+    t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut rng = Rng::new(9);
+    let mut hpv = hp::defaults();
+    hpv[hp::LR] = 0.005;
+    hpv[hp::NW] = 1.0;
+    hpv[hp::NA] = 7.0;
+    for step in 0..12 {
+        let batch = ds.train_batch(info.batch, &mut rng);
+        hpv[hp::SEED] = step as f32;
+        t.step(&batch, None, &hpv).unwrap();
+    }
+    let fq_graph = info.fq.clone().unwrap();
+    let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
+
+    // native integer engine
+    let net = FqKwsNet::from_params(&fq_params, 1.0, 7.0, info.input_shape[1]).unwrap();
+
+    // XLA deployment artifact on the same params
+    let exe = engine.load(&info.artifact_path(&manifest.dir, "fq_fwd").unwrap()).unwrap();
+    let batch = ds.val_batch(0, info.batch);
+    let mut inputs = Vec::new();
+    for (spec, v) in fq_params.specs.iter().zip(&fq_params.values) {
+        inputs.push(lit_f32(&spec.shape, v.data()));
+    }
+    inputs.push(lit_f32(batch.x.shape(), batch.x.data()));
+    let mut fhp = hp::defaults();
+    fhp[hp::NW] = 1.0;
+    fhp[hp::NA] = 7.0;
+    inputs.push(lit_f32(&[hp::LEN], &fhp));
+    let outs = exe.run(&inputs).unwrap();
+    let xla_logits =
+        TensorF::from_vec(&[info.batch, info.num_classes], lit_to_vec_f32(&outs[0]).unwrap());
+
+    let native_logits = net.forward_batch(&batch.x);
+
+    // max logit deviation + argmax agreement
+    let mut max_dev = 0f32;
+    for (a, b) in xla_logits.data().iter().zip(native_logits.data()) {
+        max_dev = max_dev.max((a - b).abs());
+    }
+    let agree = xla_logits
+        .argmax_rows()
+        .iter()
+        .zip(native_logits.argmax_rows())
+        .filter(|(&a, b)| a == *b)
+        .count();
+    assert!(
+        max_dev < 0.05,
+        "native vs XLA logits deviate too much: {max_dev} (codes drifting?)"
+    );
+    assert!(
+        agree >= info.batch - 1,
+        "argmax disagreement on {} of {} samples",
+        info.batch - agree,
+        info.batch
+    );
+}
+
+#[test]
+fn ternary_layers_use_addonly_path() {
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let engine = Engine::cpu().expect("engine");
+    let info = manifest.model("kws").unwrap();
+    let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+    t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
+    let fq_graph = info.fq.clone().unwrap();
+    let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
+    // nw=1 (ternary) -> every conv layer takes the TernaryMatrix path
+    let net = FqKwsNet::from_params(&fq_params, 1.0, 7.0, info.input_shape[1]).unwrap();
+    assert!(net.layers.iter().all(|l| l.is_ternary()));
+    // nw=7 (4-bit) -> dense path
+    let net4 = FqKwsNet::from_params(&fq_params, 7.0, 7.0, info.input_shape[1]).unwrap();
+    assert!(net4.layers.iter().all(|l| !l.is_ternary()));
+}
+
+#[test]
+fn analog_sim_with_zero_noise_matches_engine() {
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let engine = Engine::cpu().expect("engine");
+    let info = manifest.model("kws").unwrap();
+    let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+    t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
+    let fq_graph = info.fq.clone().unwrap();
+    let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
+
+    let xbar =
+        fqconv::analog::CrossbarKws::new(&fq_params, 1.0, 7.0, info.input_shape[1]).unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut rng = Rng::new(1);
+    let mut s = fqconv::infer::pipeline::Scratch::default();
+    for id in 0..8u64 {
+        let (x, _) = ds.sample(id, None);
+        let clean = xbar.forward_noisy(&x, fqconv::analog::NoiseConfig::default(), &mut rng);
+        let eng = xbar.net().forward(&x, &mut s);
+        for (a, b) in clean.iter().zip(&eng) {
+            assert!((a - b).abs() < 1e-6, "zero-noise sim must equal engine");
+        }
+    }
+}
+
+#[test]
+fn noise_degrades_monotonically_on_average() {
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let engine = Engine::cpu().expect("engine");
+    let info = manifest.model("kws").unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    // brief training so accuracy is meaningfully above chance
+    let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
+    t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
+    let mut rng = Rng::new(2);
+    let mut hpv = hp::defaults();
+    hpv[hp::LR] = 0.01;
+    hpv[hp::NW] = 1.0;
+    hpv[hp::NA] = 7.0;
+    for step in 0..30 {
+        let batch = ds.train_batch(info.batch, &mut rng);
+        hpv[hp::SEED] = step as f32;
+        t.step(&batch, None, &hpv).unwrap();
+    }
+    let fq_graph = info.fq.clone().unwrap();
+    let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
+    let xbar =
+        fqconv::analog::CrossbarKws::new(&fq_params, 1.0, 7.0, info.input_shape[1]).unwrap();
+    let acc_low = xbar.evaluate_noisy(
+        ds.as_ref(),
+        48,
+        fqconv::analog::NoiseConfig { sigma_w: 1.0, sigma_a: 1.0, sigma_mac: 5.0 },
+        2,
+        7,
+    );
+    let acc_high = xbar.evaluate_noisy(
+        ds.as_ref(),
+        48,
+        fqconv::analog::NoiseConfig { sigma_w: 60.0, sigma_a: 60.0, sigma_mac: 300.0 },
+        2,
+        7,
+    );
+    assert!(
+        acc_high <= acc_low + 0.05,
+        "extreme noise should not beat low noise: low={acc_low} high={acc_high}"
+    );
+}

@@ -1,0 +1,129 @@
+//! Whole-stack integration: the compact version of the e2e example —
+//! GQ pipeline on a ResNet, baselines, accounting, schedule rendering.
+
+use fqconv::config::Budget;
+use fqconv::coordinator::{Pipeline, Schedule, Stage, TeacherPolicy};
+use fqconv::data;
+use fqconv::exp;
+use fqconv::runtime::{Engine, Manifest};
+
+fn setup() -> (Manifest, Engine) {
+    let dir = fqconv::artifacts_dir();
+    (Manifest::load(&dir).expect("manifest"), Engine::cpu().expect("engine"))
+}
+
+#[test]
+fn resnet_mini_ladder_runs() {
+    let (manifest, engine) = setup();
+    let info = manifest.model("resnet8s").unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
+    pipe.eval_batches = 2;
+    let sched = Schedule::new(
+        "resnet8s",
+        vec![
+            Stage::new("FP0", 0, 0).steps(12).lr(0.02),
+            Stage::new("Q44", 4, 4).from("FP0").taught_by("FP0").steps(8).lr(0.01),
+        ],
+        TeacherPolicy::Declared,
+    )
+    .unwrap();
+    let report = pipe.run(&sched).unwrap();
+    assert_eq!(report.stages.len(), 2);
+    for s in &report.stages {
+        assert!(s.val_acc.is_finite() && s.val_acc >= 0.0 && s.val_acc <= 1.0);
+        assert!(s.final_loss.is_finite());
+    }
+}
+
+#[test]
+fn baseline_flavors_train() {
+    let (manifest, engine) = setup();
+    let info = manifest.model("resnet8s").unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    for flavor in ["dorefa", "pact"] {
+        let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
+        pipe.eval_batches = 2;
+        pipe.flavor = if flavor == "dorefa" { "dorefa" } else { "pact" };
+        let sched = Schedule::new(
+            "resnet8s",
+            vec![
+                Stage::new("FP0", 0, 0).steps(6).lr(0.02),
+                Stage::new("Q33", 3, 3).from("FP0").taught_by("FP0").steps(6).lr(0.01),
+            ],
+            TeacherPolicy::Declared,
+        )
+        .unwrap();
+        let report = pipe.run(&sched).unwrap();
+        assert!(
+            report.stages.iter().all(|s| s.final_loss.is_finite()),
+            "{flavor} produced non-finite loss"
+        );
+    }
+}
+
+#[test]
+fn darknet_trains_one_stage() {
+    let (manifest, engine) = setup();
+    let info = manifest.model("darknet_tiny").unwrap();
+    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
+    pipe.eval_batches = 2;
+    pipe.topk = 5;
+    let sched = Schedule::new(
+        "darknet_tiny",
+        vec![Stage::new("FP0", 0, 0).steps(8).lr(0.02)],
+        TeacherPolicy::Declared,
+    )
+    .unwrap();
+    let report = pipe.run(&sched).unwrap();
+    let s = &report.stages[0];
+    assert!(s.val_topk >= s.val_acc, "top-5 must be >= top-1");
+}
+
+#[test]
+fn table5_accounting_matches_paper_scale() {
+    let (manifest, _) = setup();
+    let info = manifest.model("kws").unwrap();
+    // the paper reports ~50K params and ~3.5M MACs for the KWS net
+    assert!(
+        (30_000..80_000).contains(&info.qat.param_count),
+        "param count {} off paper scale",
+        info.qat.param_count
+    );
+    assert!(
+        (2_000_000..5_000_000).contains(&(info.macs_per_sample as usize)),
+        "MACs {} off paper scale",
+        info.macs_per_sample
+    );
+    let rows_lit = fqconv::models::table5_literature_rows();
+    let ours = fqconv::models::table5_our_rows(info, 0.95, 0.94);
+    // our model must be the smallest by size and fewest mults, as in Table 5
+    let min_lit_size = rows_lit.iter().map(|r| r.size_bytes).fold(f64::MAX, f64::min);
+    assert!(ours.iter().all(|r| r.size_bytes < min_lit_size));
+    let min_lit_mults = rows_lit.iter().map(|r| r.mults).fold(f64::MAX, f64::min);
+    assert!(ours.iter().all(|r| r.mults < min_lit_mults));
+}
+
+#[test]
+fn figure_renderers_produce_output() {
+    let (manifest, _) = setup();
+    for model in ["kws", "resnet32", "darknet_tiny"] {
+        let info = manifest.model(model).unwrap();
+        let a = fqconv::models::render_architecture(info, false);
+        assert!(a.len() > 100, "{model} arch render too small");
+        assert!(a.contains("params"));
+    }
+    let plan = exp::fig1_plan("kws", 600);
+    assert!(plan.contains("FQ24") && plan.contains("chain:"));
+    let plan6 = exp::fig1_plan("resnet14s", 100);
+    assert!(plan6.contains("FQ25"));
+}
+
+#[test]
+fn budgets_scale_sanely() {
+    let q = Budget::quick();
+    let f = Budget::full();
+    assert!(f.steps_per_stage > q.steps_per_stage);
+    assert!(f.noise_reps >= q.noise_reps);
+}

@@ -1,0 +1,279 @@
+//! Randomized property tests over the crate's core invariants
+//! (custom helper in util::proptest — no proptest crate offline).
+
+use fqconv::quant::{learned_quantize, n_levels, QParams, RequantLut};
+use fqconv::serve::batcher::{simulate, BatchPolicy};
+use fqconv::util::proptest::check;
+use fqconv::util::Rng;
+
+#[test]
+fn quantizer_idempotent() {
+    check(
+        "quantizer-idempotent",
+        200,
+        |g, _| {
+            let es = g.f32_in(0.05, 5.0);
+            let nb = *g.choice(&[2u32, 3, 4, 5, 8]);
+            let b = *g.choice(&[-1.0f32, 0.0]);
+            let x = g.f32_in(-10.0, 10.0);
+            (x, es, nb, b)
+        },
+        |&(x, es, nb, b)| {
+            let n = n_levels(nb) as f32;
+            let q1 = learned_quantize(x, es, n, b);
+            let q2 = learned_quantize(q1, es, n, b);
+            if (q1 - q2).abs() < 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("Q(Q(x)) != Q(x): {q1} vs {q2}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn quantizer_monotone_and_bounded() {
+    check(
+        "quantizer-monotone-bounded",
+        100,
+        |g, _| {
+            let es = g.f32_in(0.05, 5.0);
+            let nb = *g.choice(&[2u32, 3, 4, 8]);
+            let b = *g.choice(&[-1.0f32, 0.0]);
+            let xs = g.vec_gaussian(50, 3.0);
+            (xs, es, nb, b)
+        },
+        |(xs, es, nb, b)| {
+            let n = n_levels(*nb) as f32;
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, c| a.total_cmp(c));
+            let qs: Vec<f32> =
+                sorted.iter().map(|&x| learned_quantize(x, *es, n, *b)).collect();
+            for w in qs.windows(2) {
+                if w[1] < w[0] - 1e-6 {
+                    return Err(format!("not monotone: {} then {}", w[0], w[1]));
+                }
+            }
+            for &q in &qs {
+                if q < *b * *es - 1e-5 || q > *es + 1e-5 {
+                    return Err(format!("out of range: {q} (es={es}, b={b})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantizer_error_bounded_by_half_lsb_inside() {
+    check(
+        "quantizer-half-lsb",
+        150,
+        |g, _| {
+            let es = g.f32_in(0.1, 3.0);
+            let nb = *g.choice(&[3u32, 4, 5, 8]);
+            // x strictly inside the clip range
+            let x = g.f32_in(-0.99, 0.99);
+            (x, es, nb)
+        },
+        |&(x, es, nb)| {
+            let q = QParams::new(es, n_levels(nb) as f32, -1.0);
+            let err = (q.quantize(x * es) - x * es).abs();
+            if err <= q.lsb() / 2.0 + 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("err {err} > lsb/2 {}", q.lsb() / 2.0))
+            }
+        },
+    );
+}
+
+#[test]
+fn lut_agrees_with_float_reference_everywhere() {
+    check(
+        "lut-exact",
+        40,
+        |g, size| {
+            let f = g.f32_in(0.0005, 0.05);
+            let es = g.f32_in(0.2, 3.0);
+            let nb = *g.choice(&[2u32, 3, 4, 5]);
+            let b = *g.choice(&[-1.0f32, 0.0]);
+            let range = g.sized_usize(size, 3000) as i64 + 50;
+            (f, es, nb, b, range)
+        },
+        |&(f, es, nb, b, range)| {
+            let out = QParams::new(es, n_levels(nb) as f32, b);
+            let lut = RequantLut::build(f, out, -range, range);
+            // probe every accumulator value in range
+            for acc in -range..=range {
+                let want = RequantLut::reference_code(acc, f, &out);
+                let got = lut.apply(acc);
+                if got != want {
+                    return Err(format!("acc={acc}: lut={got} ref={want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn composed_lut_matches_double_rounding() {
+    check(
+        "lut-composed",
+        25,
+        |g, size| {
+            let f = g.f32_in(0.001, 0.05);
+            let es1 = g.f32_in(0.3, 2.0);
+            let es2 = g.f32_in(0.3, 2.0);
+            let n = n_levels(*g.choice(&[3u32, 4])) as f32;
+            let range = g.sized_usize(size, 2000) as i64 + 50;
+            (f, es1, es2, n, range)
+        },
+        |&(f, es1, es2, n, range)| {
+            let mid = QParams::new(es1, n, 0.0);
+            let next = QParams::new(es2, n, 0.0);
+            let lut = RequantLut::build_composed(f, mid, next, -range, range);
+            for acc in (-range..=range).step_by(7) {
+                let want = RequantLut::reference_code_composed(acc, f, &mid, &next);
+                if lut.apply(acc) != want {
+                    return Err(format!("acc={acc}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_never_starves() {
+    check(
+        "batcher-no-starvation",
+        60,
+        |g, size| {
+            let max_batch = 1 + g.rng.below(16);
+            let max_wait = 100 + g.rng.below(5000) as u64;
+            let n = g.sized_usize(size, 200);
+            let mut t = 0u64;
+            let arrivals: Vec<u64> = (0..n)
+                .map(|_| {
+                    t += g.rng.below(800) as u64;
+                    t
+                })
+                .collect();
+            let service = 50 + g.rng.below(500) as u64;
+            (BatchPolicy::new(max_batch, max_wait), arrivals, service)
+        },
+        |(policy, arrivals, service)| {
+            let res = simulate(*policy, arrivals, *service);
+            // worst admissible wait: own deadline + the backlog of every
+            // earlier batch's service time (single worker)
+            let n_batches = res.iter().map(|&(s, _)| s).collect::<std::collections::BTreeSet<_>>().len();
+            let worst = policy.max_wait_us + *service * n_batches as u64;
+            for (k, &(start, size)) in res.iter().enumerate() {
+                if size == 0 {
+                    return Err(format!("request {k} never dispatched"));
+                }
+                if size > policy.max_batch {
+                    return Err(format!("batch size {size} > max {}", policy.max_batch));
+                }
+                if start.saturating_sub(arrivals[k]) > worst {
+                    return Err(format!(
+                        "request {k} waited {} > {worst}",
+                        start - arrivals[k]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_random() {
+    use fqconv::coordinator::checkpoint::{parse, write, Checkpoint};
+    use fqconv::tensor::TensorF;
+    check(
+        "checkpoint-roundtrip",
+        30,
+        |g, size| {
+            let n_tensors = g.sized_usize(size, 12);
+            let mut tensors = Vec::new();
+            for i in 0..n_tensors {
+                let ndim = g.rng.below(4);
+                let shape: Vec<usize> = (0..ndim).map(|_| 1 + g.rng.below(6)).collect();
+                let numel: usize = shape.iter().product();
+                tensors.push((format!("t{i}.w"), TensorF::from_vec(&shape, g.vec_gaussian(numel, 2.0))));
+            }
+            tensors
+        },
+        |tensors| {
+            let ck = Checkpoint::new(tensors.clone());
+            let path = std::env::temp_dir().join(format!(
+                "fqconv_prop_{}.ckpt",
+                std::process::id()
+            ));
+            write(&path, &ck).map_err(|e| e.to_string())?;
+            let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+            let ck2 = parse(&bytes).map_err(|e| e.to_string())?;
+            if ck2.len() != ck.len() {
+                return Err("tensor count changed".into());
+            }
+            for (name, t) in tensors {
+                let t2 = ck2.get(name).ok_or_else(|| format!("lost {name}"))?;
+                if t2.shape() != t.shape() || t2.data() != t.data() {
+                    return Err(format!("tensor {name} corrupted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rust_quantizer_matches_paper_levels() {
+    // spot invariant: code count = 2n+1 for signed, n+1 for relu
+    check(
+        "code-count",
+        50,
+        |g, _| (*g.choice(&[2u32, 3, 4, 5, 8]), *g.choice(&[-1.0f32, 0.0])),
+        |&(nb, b)| {
+            let n = n_levels(nb) as f32;
+            let q = QParams::new(1.0, n, b);
+            let mut seen = std::collections::BTreeSet::new();
+            let mut x = -2.0f32;
+            while x <= 2.0 {
+                seen.insert(q.int_code(x));
+                x += 0.001;
+            }
+            let expect = if b < 0.0 { 2 * n as usize + 1 } else { n as usize + 1 };
+            if seen.len() == expect {
+                Ok(())
+            } else {
+                Err(format!("nb={nb} b={b}: {} codes, expected {expect}", seen.len()))
+            }
+        },
+    );
+}
+
+#[test]
+fn rng_streams_independent() {
+    check(
+        "rng-fork-independence",
+        20,
+        |g, _| g.rng.next_u64(),
+        |&seed| {
+            let mut base = Rng::new(seed);
+            let mut a = base.fork(1);
+            let mut b = base.fork(2);
+            let xs: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+            let ys: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+            let same = xs.iter().zip(&ys).filter(|(x, y)| x == y).count();
+            if same < 4 {
+                Ok(())
+            } else {
+                Err(format!("{same} collisions between forked streams"))
+            }
+        },
+    );
+}

@@ -1,0 +1,103 @@
+//! Runtime integration: load real artifacts through PJRT, execute, and
+//! check shapes/determinism of the results. Requires `make artifacts`.
+
+use fqconv::coordinator::checkpoint;
+use fqconv::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Manifest};
+
+fn setup() -> (Manifest, Engine) {
+    let dir = fqconv::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest (run `make artifacts`)");
+    let engine = Engine::cpu().expect("PJRT cpu client");
+    (manifest, engine)
+}
+
+fn forward_logits(manifest: &Manifest, engine: &Engine, model: &str, nw: f32, na: f32) -> Vec<f32> {
+    let info = manifest.model(model).unwrap();
+    let exe = engine.load(&info.artifact_path(&manifest.dir, "fwd").unwrap()).unwrap();
+    let ck = checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap();
+    let mut inputs = Vec::new();
+    for spec in info.qat.all_specs() {
+        let t = ck.get(&spec.name).unwrap_or_else(|| panic!("init missing {}", spec.name));
+        inputs.push(lit_f32(&spec.shape, t.data()));
+    }
+    let b = info.batch;
+    let numel: usize = info.input_shape.iter().product();
+    let x: Vec<f32> = (0..b * numel).map(|i| ((i % 97) as f32 - 48.0) / 48.0).collect();
+    let mut shape = vec![b];
+    shape.extend(&info.input_shape);
+    inputs.push(lit_f32(&shape, &x));
+    let mut hpv = hp::defaults();
+    hpv[hp::NW] = nw;
+    hpv[hp::NA] = na;
+    inputs.push(lit_f32(&[hp::LEN], &hpv));
+    let outs = exe.run(&inputs).unwrap();
+    lit_to_vec_f32(&outs[0]).unwrap()
+}
+
+#[test]
+fn manifest_has_all_models_and_artifacts() {
+    let (manifest, _) = setup();
+    for name in ["kws", "resnet20", "resnet8s", "resnet32", "resnet14s", "darknet_tiny"] {
+        let info = manifest.model(name).unwrap();
+        assert!(info.artifacts.contains_key("train"), "{name} missing train");
+        assert!(info.artifacts.contains_key("fwd"), "{name} missing fwd");
+        assert!(!info.qat.trainable.is_empty());
+        assert!(info.macs_per_sample > 0);
+        assert!(manifest.dir.join(&info.init_ckpt).exists(), "{name} init ckpt");
+    }
+    // FQ graphs where the paper defines them
+    assert!(manifest.model("kws").unwrap().fq.is_some());
+    assert!(manifest.model("resnet32").unwrap().fq.is_some());
+    assert!(manifest.model("resnet20").unwrap().fq.is_none());
+    // table-2 baselines
+    let r8 = manifest.model("resnet8s").unwrap();
+    assert!(r8.artifacts.contains_key("train_dorefa"));
+    assert!(r8.artifacts.contains_key("train_pact"));
+}
+
+#[test]
+fn kws_forward_executes_and_is_deterministic() {
+    let (manifest, engine) = setup();
+    let a = forward_logits(&manifest, &engine, "kws", 1.0, 7.0);
+    let b = forward_logits(&manifest, &engine, "kws", 1.0, 7.0);
+    assert_eq!(a.len(), 32 * 12);
+    assert!(a.iter().all(|v| v.is_finite()));
+    assert_eq!(a, b, "same inputs must give identical logits");
+}
+
+#[test]
+fn bitwidth_is_a_runtime_input() {
+    // one artifact, different hp -> different numerics (fp vs ternary)
+    let (manifest, engine) = setup();
+    let fp = forward_logits(&manifest, &engine, "resnet8s", 0.0, 0.0);
+    let tern = forward_logits(&manifest, &engine, "resnet8s", 1.0, 7.0);
+    assert_eq!(fp.len(), tern.len());
+    let diff: f32 = fp.iter().zip(&tern).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-3, "quantized forward should differ from fp forward");
+}
+
+#[test]
+fn fq_forward_artifact_runs() {
+    let (manifest, engine) = setup();
+    let info = manifest.model("kws").unwrap();
+    let exe = engine.load(&info.artifact_path(&manifest.dir, "fq_fwd").unwrap()).unwrap();
+    let fq = info.fq.as_ref().unwrap();
+    let mut inputs = Vec::new();
+    for spec in fq.all_specs() {
+        // zeros are fine: we only check execution + shape here
+        inputs.push(lit_f32(&spec.shape, &vec![0.01; spec.numel()]));
+    }
+    let b = info.batch;
+    let numel: usize = info.input_shape.iter().product();
+    let mut shape = vec![b];
+    shape.extend(&info.input_shape);
+    inputs.push(lit_f32(&shape, &vec![0.1; b * numel]));
+    let mut hpv = hp::defaults();
+    hpv[hp::NW] = 1.0;
+    hpv[hp::NA] = 7.0;
+    inputs.push(lit_f32(&[hp::LEN], &hpv));
+    let outs = exe.run(&inputs).unwrap();
+    let logits = lit_to_vec_f32(&outs[0]).unwrap();
+    assert_eq!(logits.len(), b * info.num_classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,135 @@
+//! Serving-layer behaviour: batching policy honored, all requests
+//! answered, latency recorded, graceful shutdown, multi-worker fan-out.
+//! Uses a synthetic backend (no XLA / no trained network needed).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use fqconv::serve::{ready, Backend, BatchPolicy, Server};
+use fqconv::tensor::TensorF;
+
+/// Deterministic toy backend: class = argmax-like hash of first feature.
+struct ToyBackend {
+    classes: usize,
+    calls: Arc<AtomicUsize>,
+    max_seen_batch: Arc<AtomicUsize>,
+    delay_us: u64,
+}
+
+impl Backend for ToyBackend {
+    fn infer(&mut self, x: &TensorF) -> anyhow::Result<TensorF> {
+        let b = x.shape()[0];
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        self.max_seen_batch.fetch_max(b, Ordering::SeqCst);
+        if self.delay_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.delay_us));
+        }
+        let per = x.shape()[1];
+        let mut out = vec![0f32; b * self.classes];
+        for i in 0..b {
+            let c = (x.data()[i * per].abs() as usize) % self.classes;
+            out[i * self.classes + c] = 1.0;
+        }
+        Ok(TensorF::from_vec(&[b, self.classes], out))
+    }
+
+    fn sample_shape(&self) -> Vec<usize> {
+        vec![4]
+    }
+}
+
+fn toy_server(
+    workers: usize,
+    policy: BatchPolicy,
+    delay_us: u64,
+) -> (Server, Arc<AtomicUsize>, Arc<AtomicUsize>) {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    let factories = (0..workers)
+        .map(|_| {
+            ready(ToyBackend {
+                classes: 5,
+                calls: Arc::clone(&calls),
+                max_seen_batch: Arc::clone(&maxb),
+                delay_us,
+            })
+        })
+        .collect();
+    (Server::start_with(factories, 4, policy), calls, maxb)
+}
+
+#[test]
+fn all_requests_answered_correctly() {
+    let (server, _, _) = toy_server(2, BatchPolicy::new(8, 500), 0);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..100u64 {
+        let f = vec![i as f32, 0.0, 0.0, 0.0];
+        expected.push((i as usize) % 5);
+        rxs.push(server.submit(f));
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.class, want);
+        assert_eq!(resp.logits.len(), 5);
+        assert!(resp.latency_us >= 0.0);
+        assert!(resp.batch_size >= 1);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.served, 100);
+    assert!(stats.batches <= 100);
+    server.shutdown();
+}
+
+#[test]
+fn batches_respect_max_batch() {
+    let (server, _, maxb) = toy_server(1, BatchPolicy::new(4, 50_000), 100);
+    let rxs: Vec<_> = (0..32).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert!(maxb.load(Ordering::SeqCst) <= 4, "batch exceeded policy");
+    server.shutdown();
+}
+
+#[test]
+fn timer_flushes_partial_batches() {
+    // a single request must not wait forever for a full batch
+    let (server, _, _) = toy_server(1, BatchPolicy::new(64, 1_000), 0);
+    let t = std::time::Instant::now();
+    let resp = server.infer(vec![1.0, 0.0, 0.0, 0.0]);
+    assert_eq!(resp.batch_size, 1);
+    assert!(
+        t.elapsed() < std::time::Duration::from_millis(500),
+        "partial batch stuck: {:?}",
+        t.elapsed()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn multiple_workers_share_load() {
+    let (server, calls, _) = toy_server(3, BatchPolicy::new(1, 100), 200);
+    let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    // with batch=1, every request is its own backend call
+    assert_eq!(calls.load(Ordering::SeqCst), 30);
+    let stats = server.stats();
+    assert!((stats.mean_batch - 1.0).abs() < 1e-9, "mean_batch={}", stats.mean_batch);
+    server.shutdown();
+}
+
+#[test]
+fn stats_percentiles_sane() {
+    let (server, _, _) = toy_server(2, BatchPolicy::default(), 300);
+    let rxs: Vec<_> = (0..50).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let stats = server.stats();
+    assert!(stats.p50_us > 0.0);
+    assert!(stats.p99_us >= stats.p50_us);
+    server.shutdown();
+}
