@@ -6,6 +6,7 @@ use fqconv::runtime::{Engine, Manifest};
 
 /// Budget for table regenerators: FQCONV_BENCH_BUDGET=smoke|quick|full
 /// (default quick — the fast, shape-preserving version of each table).
+#[allow(dead_code)]
 pub fn bench_budget() -> Budget {
     match std::env::var("FQCONV_BENCH_BUDGET").as_deref() {
         Ok("smoke") => Budget::smoke(),
@@ -14,13 +15,30 @@ pub fn bench_budget() -> Budget {
     }
 }
 
-pub fn setup() -> (Manifest, Engine) {
+/// `None` when the artifacts or the PJRT runtime are unavailable (e.g.
+/// offline builds against the vendored xla stub).
+#[allow(dead_code)]
+pub fn try_setup() -> Option<(Manifest, Engine)> {
     let dir = fqconv::artifacts_dir();
-    let manifest = Manifest::load(&dir).expect("manifest — run `make artifacts`");
-    let engine = Engine::cpu().expect("PJRT engine");
-    (manifest, engine)
+    let manifest = Manifest::load(&dir).ok()?;
+    let engine = Engine::cpu().ok()?;
+    Some((manifest, engine))
 }
 
+/// Like [`try_setup`] but exits the bench cleanly when unavailable —
+/// artifact-driven table regenerators cannot run without the runtime.
+#[allow(dead_code)]
+pub fn setup() -> (Manifest, Engine) {
+    match try_setup() {
+        Some(pair) => pair,
+        None => {
+            eprintln!("bench skipped: artifacts / PJRT runtime unavailable (run `make artifacts`)");
+            std::process::exit(0);
+        }
+    }
+}
+
+#[allow(dead_code)]
 pub fn ctx<'a>(engine: &'a Engine, manifest: &'a Manifest) -> Ctx<'a> {
     Ctx::new(engine, manifest, bench_budget())
 }

@@ -1,13 +1,20 @@
-//! Perf: integer inference engine — i8 GEMM vs ternary add-only path,
-//! full-network throughput, LUT re-binning cost. Feeds EXPERIMENTS.md
-//! §Perf (L3 targets: ternary path faster than dense i8; >= 1 GMAC/s/core).
+//! Perf: integer inference engine — i8 GEMM vs ternary add-only path
+//! (sequential vs row-block-parallel), full-network single-sample and
+//! batch throughput (sequential vs thread pool). Feeds EXPERIMENTS.md
+//! §Perf (L3 targets: ternary path faster than dense i8; >= 1 GMAC/s/core;
+//! pooled batch throughput >= 2x sequential on a multi-core host).
+//!
+//! The network sections run on a deterministic synthetic KWS net, so
+//! this bench works offline; when the trained artifacts + PJRT runtime
+//! are present a section on the real FQ parameters is appended.
 #[path = "common.rs"]
 mod common;
 
-use fqconv::bench::{banner, bench, BenchStats};
+use fqconv::bench::{banner, bench, bench_for, BenchStats};
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset};
-use fqconv::infer::gemm::{gemm_i8, transpose, TernaryMatrix};
+use fqconv::exec;
+use fqconv::infer::gemm::{gemm_i8, gemm_i8_mt, transpose, TernaryMatrix};
 use fqconv::infer::pipeline::Scratch;
 use fqconv::infer::FqKwsNet;
 use fqconv::util::Rng;
@@ -16,11 +23,11 @@ fn report(s: &BenchStats, items: f64, unit: &str) {
     println!("{}   {:>10.2} {unit}", s.report(), s.throughput(items) / 1e9);
 }
 
-fn main() {
-    banner("perf_infer — integer engine hot paths");
+fn gemm_section(threads: usize) {
     let mut rng = Rng::new(7);
-    // GEMM shapes modeled on the KWS layers: (T_out, C*F) x (C*F, 45)
-    for &(m, k, n) in &[(78usize, 300usize, 45usize), (64, 135, 45), (256, 512, 64)] {
+    // GEMM shapes modeled on the KWS layers: (T_out, C*F) x (C*F, 45),
+    // plus a larger patch matrix where row-block parallelism pays off
+    for &(m, k, n) in &[(78usize, 300usize, 45usize), (64, 135, 45), (1024, 512, 64)] {
         let a: Vec<i8> = (0..m * k).map(|_| (rng.below(15) as i32 - 7) as i8).collect();
         let b: Vec<i8> = (0..k * n).map(|_| (rng.below(3) as i32 - 1) as i8).collect();
         let bt = transpose(k, n, &b);
@@ -32,34 +39,87 @@ fn main() {
             std::hint::black_box(&c);
         });
         report(&s, macs, "GMAC/s");
-        let s = bench(&format!("ternary GEMM {m}x{k}x{n} (sparsity {:.0}%)", tern.sparsity * 100.0), 3, 30, || {
-            tern.gemm(m, &a, &mut c);
+        let s = bench(&format!("dense i8 GEMM {m}x{k}x{n} (mt x{threads})"), 3, 30, || {
+            gemm_i8_mt(m, k, n, &a, &bt, &mut c, threads);
+            std::hint::black_box(&c);
+        });
+        report(&s, macs, "GMAC/s");
+        let s = bench(
+            &format!("ternary GEMM {m}x{k}x{n} (sparsity {:.0}%)", tern.sparsity * 100.0),
+            3,
+            30,
+            || {
+                tern.gemm(m, &a, &mut c);
+                std::hint::black_box(&c);
+            },
+        );
+        report(&s, macs, "GMAC/s");
+        let s = bench(&format!("ternary GEMM {m}x{k}x{n} (mt x{threads})"), 3, 30, || {
+            tern.gemm_mt(m, &a, &mut c, threads);
             std::hint::black_box(&c);
         });
         report(&s, macs, "GMAC/s");
     }
+}
 
-    // full network forward
-    let (manifest, engine) = common::setup();
+fn net_section(net: &FqKwsNet, tag: &str, threads: usize) {
+    let ds = data::for_model("kws", &[39, net.frames], net.classes);
+    let (x, _) = ds.sample(0, None);
+    let macs = net.macs_per_sample() as f64;
+    let mut scratch = Scratch::default();
+    let s = bench(&format!("{tag} forward (1 sample)"), 5, 50, || {
+        std::hint::black_box(net.forward(&x, &mut scratch));
+    });
+    report(&s, macs, "GMAC/s");
+    println!(
+        "    = {:.0} samples/s/core ({:.2}M int-MACs/sample)",
+        1.0 / s.median_s,
+        macs / 1e6
+    );
+
+    // batch throughput: sequential loop vs the data-parallel pool —
+    // the headline number for the "2x over the sequential seed" target
+    let batch = ds.val_batch(0, 64);
+    let seq = bench_for(&format!("{tag} forward_batch(64) seq"), 0.5, 40, || {
+        std::hint::black_box(net.forward_batch_with(&batch.x, 1));
+    });
+    println!("{}", seq.report());
+    let par = bench_for(&format!("{tag} forward_batch(64) pool x{threads}"), 0.5, 40, || {
+        std::hint::black_box(net.forward_batch_with(&batch.x, threads));
+    });
+    println!("{}", par.report());
+    let speedup = seq.median_s / par.median_s.max(1e-12);
+    println!(
+        "    batch throughput: {:.0} -> {:.0} samples/s  ({speedup:.2}x speedup, {threads} threads)",
+        64.0 / seq.median_s,
+        64.0 / par.median_s
+    );
+}
+
+fn main() {
+    banner("perf_infer — integer engine hot paths");
+    let threads = exec::default_threads();
+    println!("(pool size {threads}; override with FQCONV_THREADS)\n");
+    gemm_section(threads);
+
+    // full network forward on a synthetic net — always available
+    for (nw, label) in [(1.0f32, "ternary (W2)"), (7.0, "dense (W4)")] {
+        let net = FqKwsNet::synthetic(nw, 7.0, 7).expect("synthetic net");
+        net_section(&net, &format!("synthetic KWS {label}"), threads);
+    }
+
+    // trained-artifact section (skipped offline)
+    let Some((manifest, engine)) = common::try_setup() else {
+        println!("\n(trained-artifact section skipped: artifacts / PJRT unavailable)");
+        return;
+    };
     let info = manifest.model("kws").unwrap();
     let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
     t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
     let fq_graph = info.fq.clone().unwrap();
     let params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
-    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
-    let (x, _) = ds.sample(0, None);
     for (nw, label) in [(1.0f32, "ternary (W2)"), (7.0, "dense (W4)")] {
         let net = FqKwsNet::from_params(&params, nw, 7.0, info.input_shape[1]).unwrap();
-        let macs = net.macs_per_sample() as f64;
-        let mut scratch = Scratch::default();
-        let s = bench(&format!("KWS net forward, {label}"), 5, 50, || {
-            std::hint::black_box(net.forward(&x, &mut scratch));
-        });
-        report(&s, macs, "GMAC/s");
-        println!(
-            "    = {:.0} samples/s/core ({:.2}M int-MACs/sample)",
-            1.0 / s.median_s,
-            macs / 1e6
-        );
+        net_section(&net, &format!("KWS net {label}"), threads);
     }
 }

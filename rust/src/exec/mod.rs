@@ -1,0 +1,142 @@
+//! Data-parallel execution substrate for the integer inference engine
+//! and the serving layer (no rayon in the offline image).
+//!
+//! Everything here is built on **scoped threads** (`std::thread::scope`),
+//! so workers may borrow non-`'static` data — the engine hands each
+//! worker a disjoint `&mut` window of the output buffer plus a shared
+//! `&` view of the inputs, and each worker owns its own scratch space
+//! for the duration of the call (per-thread scratch reuse across the
+//! items in its range).
+//!
+//! **Determinism contract:** every helper in this module partitions work
+//! into contiguous, disjoint ranges and each output element is computed
+//! by exactly one worker with exactly the same instruction sequence the
+//! sequential path uses. Results are therefore bit-identical for every
+//! thread count, including 1 — pinned by rust/tests/parallel.rs.
+//!
+//! Thread-count policy: callers pass an explicit `threads` budget;
+//! [`default_threads`] resolves the process-wide default
+//! (`FQCONV_THREADS` env var, else `available_parallelism`), and
+//! [`clamp_threads`] shrinks a budget so small problems never pay
+//! fork-join overhead.
+
+use std::ops::Range;
+
+/// Process-wide default worker count: `FQCONV_THREADS` if set (>= 1),
+/// else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    match std::env::var("FQCONV_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Split `0..n` into at most `parts` contiguous, balanced, disjoint
+/// ranges (earlier ranges get the remainder). Deterministic in (n, parts).
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Shrink a thread budget so each worker keeps at least
+/// `min_rows_per_thread` rows — below that, fork-join overhead dominates.
+pub fn clamp_threads(threads: usize, rows: usize, min_rows_per_thread: usize) -> usize {
+    threads.max(1).min((rows / min_rows_per_thread.max(1)).max(1))
+}
+
+/// Fork-join over the rows of a row-major `(rows, row_len)` output
+/// buffer: `out` is split into contiguous per-worker windows and
+/// `f(range, window)` runs once per worker with `window` covering exactly
+/// `range`'s rows. With one part (or one row) this degrades to a plain
+/// call on the current thread — no spawn.
+pub fn par_rows_mut<T, F>(out: &mut [T], rows: usize, row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    assert_eq!(out.len(), rows * row_len, "output buffer / row geometry mismatch");
+    let parts = partition(rows, threads);
+    if parts.len() <= 1 {
+        f(0..rows, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = out;
+        let n_parts = parts.len();
+        let mut iter = parts.into_iter();
+        for r in iter.by_ref().take(n_parts - 1) {
+            let tail = std::mem::take(&mut rest);
+            let (window, tail) = tail.split_at_mut((r.end - r.start) * row_len);
+            rest = tail;
+            s.spawn(move || f(r, window));
+        }
+        // the calling thread takes the final window instead of idling
+        // at the scope barrier: one fewer spawn per fork-join
+        let last = iter.next().expect("partition returned >= 2 parts");
+        f(last, rest);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_disjointly() {
+        for (n, parts) in [(0usize, 3usize), (1, 4), (7, 3), (64, 8), (10, 1), (5, 9)] {
+            let ranges = partition(n, parts);
+            assert!(ranges.len() <= parts.max(1));
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, n);
+            // balanced: lengths differ by at most 1
+            let lens: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced partition {lens:?}");
+        }
+    }
+
+    #[test]
+    fn clamp_keeps_rows_per_thread() {
+        assert_eq!(clamp_threads(8, 78, 16), 4);
+        assert_eq!(clamp_threads(8, 10, 16), 1);
+        assert_eq!(clamp_threads(0, 100, 16), 1);
+        assert_eq!(clamp_threads(2, 1000, 16), 2);
+    }
+
+    #[test]
+    fn par_rows_writes_every_row_once() {
+        let (rows, row_len) = (37, 5);
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut out = vec![0u32; rows * row_len];
+            par_rows_mut(&mut out, rows, row_len, threads, |range, window| {
+                for (i, row) in range.clone().zip(window.chunks_mut(row_len)) {
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v += (i * row_len + j) as u32 + 1;
+                    }
+                }
+            });
+            let want: Vec<u32> = (0..rows * row_len).map(|i| i as u32 + 1).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_rows_is_a_noop() {
+        let mut out: Vec<u8> = Vec::new();
+        par_rows_mut(&mut out, 0, 4, 4, |_, _| {});
+    }
+}

@@ -110,14 +110,29 @@ impl QuantConv1d {
         acc: &mut Vec<i32>,
         out: &mut Vec<i8>,
     ) {
+        self.forward_mt(x, t_in, cols, acc, out, 1);
+    }
+
+    /// [`QuantConv1d::forward`] with an intra-layer thread budget: the
+    /// GEMM over the (T_out, c_in*ksize) patch matrix is split into
+    /// row-blocks of T_out. Output is bit-identical at every `threads`.
+    pub fn forward_mt(
+        &self,
+        x: &[i8],
+        t_in: usize,
+        cols: &mut Vec<i8>,
+        acc: &mut Vec<i32>,
+        out: &mut Vec<i8>,
+        threads: usize,
+    ) {
         let t_out = self.t_out(t_in);
         self.im2col(x, t_in, cols);
         acc.clear();
         acc.resize(t_out * self.c_out, 0);
         match &self.weights {
-            WeightKind::Ternary(t) => t.gemm(t_out, cols, acc),
+            WeightKind::Ternary(t) => t.gemm_mt(t_out, cols, acc, threads),
             WeightKind::Dense { bt } => {
-                gemm::gemm_i8(t_out, self.c_in * self.ksize, self.c_out, cols, bt, acc)
+                gemm::gemm_i8_mt(t_out, self.c_in * self.ksize, self.c_out, cols, bt, acc, threads)
             }
         }
         // re-bin, transposing (T_out, c_out) -> (c_out, T_out)

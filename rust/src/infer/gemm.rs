@@ -8,6 +8,18 @@
 //! for L1/L2 locality. The ternary path stores B as per-column sparse
 //! +/- index lists, replacing multiplies with adds/subs — on W2 networks
 //! (the paper's target) this is the deployment kernel.
+//!
+//! Both kernels have `_mt` variants that split the M (row) dimension into
+//! contiguous blocks over [`crate::exec`] scoped threads. Every output
+//! element is computed by exactly one worker with the same instruction
+//! sequence as the sequential kernel, so results are bit-identical at
+//! every thread count (pinned by rust/tests/parallel.rs).
+
+use crate::exec;
+
+/// Below this many output rows per worker, fork-join overhead dominates
+/// and the `_mt` kernels fall back to the sequential path.
+const MIN_ROWS_PER_THREAD: usize = 16;
 
 /// Reference: straightforward triple loop (used by tests as oracle).
 pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
@@ -52,6 +64,29 @@ pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], bt: &[i8], c: &mut [i32])
             }
         }
     }
+}
+
+/// Row-block-parallel [`gemm_i8`]: splits M across up to `threads` scoped
+/// workers (bit-identical to the sequential kernel at any thread count).
+pub fn gemm_i8_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    bt: &[i8],
+    c: &mut [i32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    let threads = exec::clamp_threads(threads, m, MIN_ROWS_PER_THREAD);
+    if threads <= 1 {
+        return gemm_i8(m, k, n, a, bt, c);
+    }
+    exec::par_rows_mut(c, m, n, threads, |rows, window| {
+        gemm_i8(rows.end - rows.start, k, n, &a[rows.start * k..rows.end * k], bt, window);
+    });
 }
 
 /// Transpose (K, N) -> (N, K).
@@ -101,6 +136,27 @@ impl TernaryMatrix {
     pub fn gemm(&self, m: usize, a: &[i8], c: &mut [i32]) {
         assert_eq!(a.len(), m * self.k);
         assert_eq!(c.len(), m * self.n);
+        self.gemm_rows(a, c);
+    }
+
+    /// Row-block-parallel [`TernaryMatrix::gemm`] over up to `threads`
+    /// scoped workers (bit-identical at any thread count).
+    pub fn gemm_mt(&self, m: usize, a: &[i8], c: &mut [i32], threads: usize) {
+        assert_eq!(a.len(), m * self.k);
+        assert_eq!(c.len(), m * self.n);
+        let threads = exec::clamp_threads(threads, m, MIN_ROWS_PER_THREAD);
+        if threads <= 1 {
+            return self.gemm_rows(a, c);
+        }
+        exec::par_rows_mut(c, m, self.n, threads, |rows, window| {
+            self.gemm_rows(&a[rows.start * self.k..rows.end * self.k], window);
+        });
+    }
+
+    /// Kernel body over a contiguous row block (row count implied by
+    /// slice lengths, already validated by the callers).
+    fn gemm_rows(&self, a: &[i8], c: &mut [i32]) {
+        let m = c.len() / self.n.max(1);
         for i in 0..m {
             let arow = &a[i * self.k..(i + 1) * self.k];
             let crow = &mut c[i * self.n..(i + 1) * self.n];
@@ -154,6 +210,29 @@ mod tests {
             let mut got = vec![0i32; m * n];
             t.gemm(m, &a, &mut got);
             assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn mt_kernels_bit_identical_at_every_thread_count() {
+        let mut rng = Rng::new(5);
+        // row counts straddle the per-thread minimum so both the
+        // sequential fallback and the real fork-join path are exercised
+        for &(m, k, n) in &[(7usize, 12usize, 9usize), (64, 96, 45), (193, 64, 33)] {
+            let a = rand_i8(&mut rng, m * k, -7, 7);
+            let b = rand_i8(&mut rng, k * n, -1, 1);
+            let mut want = vec![0i32; m * n];
+            gemm_ref(m, k, n, &a, &b, &mut want);
+            let bt = transpose(k, n, &b);
+            let tern = TernaryMatrix::from_dense(k, n, &b);
+            for threads in [1usize, 2, 3, 8] {
+                let mut got = vec![0i32; m * n];
+                gemm_i8_mt(m, k, n, &a, &bt, &mut got, threads);
+                assert_eq!(got, want, "dense mt ({m},{k},{n}) threads={threads}");
+                let mut got = vec![0i32; m * n];
+                tern.gemm_mt(m, &a, &mut got, threads);
+                assert_eq!(got, want, "ternary mt ({m},{k},{n}) threads={threads}");
+            }
         }
     }
 

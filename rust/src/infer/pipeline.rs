@@ -9,8 +9,11 @@
 use anyhow::{Context, Result};
 
 use crate::coordinator::ParamSet;
+use crate::exec;
 use crate::quant::{learned_quantize, QParams};
+use crate::runtime::{GraphSpec, TensorSpec};
 use crate::tensor::TensorF;
+use crate::util::Rng;
 
 use super::conv::QuantConv1d;
 
@@ -41,13 +44,30 @@ pub struct FqKwsNet {
 }
 
 /// Reusable per-thread scratch buffers (hot path is allocation-free).
+/// Each worker of a data-parallel batch owns one of these.
 #[derive(Default)]
 pub struct Scratch {
     cols: Vec<i8>,
     acc: Vec<i32>,
     a: Vec<i8>,
     b: Vec<i8>,
-    embed_real: Vec<f32>,
+}
+
+/// Higher-precision global average pooling over final-grid codes
+/// (filters, t_cur): the sum runs in i64 so an arbitrarily long time
+/// axis cannot silently truncate (an i8-code sum overflows i32 once
+/// t_cur exceeds ~2^24 — see [`QParams::dequantize_i64`]).
+pub fn global_avg_pool(codes: &[i8], filters: usize, t_cur: usize, dq: &QParams) -> Vec<f32> {
+    debug_assert_eq!(codes.len(), filters * t_cur);
+    let mut pooled = vec![0f32; filters];
+    for (k, p) in pooled.iter_mut().enumerate() {
+        let mut sum = 0i64;
+        for t in 0..t_cur {
+            sum += codes[k * t_cur + t] as i64;
+        }
+        *p = dq.dequantize_i64(sum) / t_cur as f32;
+    }
+    pooled
 }
 
 impl FqKwsNet {
@@ -107,6 +127,49 @@ impl FqKwsNet {
         Ok(FqKwsNet { embed, layers, head_w, head_b, na, filters, classes, frames })
     }
 
+    /// Deterministic synthetic network + parameters — no artifacts or
+    /// XLA needed. Shapes match the KWS dataset (39 MFCC features x 80
+    /// frames, 12 classes) so `data::kws::KwsDataset` samples feed it
+    /// directly; used by offline tests and the perf benches.
+    pub fn synthetic(nw: f32, na: f32, seed: u64) -> Result<Self> {
+        let (n_mfcc, frames, dim, filters, classes) = (39usize, 80usize, 32usize, 32usize, 12usize);
+        let mut specs: Vec<TensorSpec> = Vec::new();
+        let mut spec = |name: &str, shape: Vec<usize>| {
+            specs.push(TensorSpec { name: name.to_string(), shape });
+        };
+        spec("embed.w", vec![dim, n_mfcc]);
+        for field in ["gamma", "beta", "mean", "var"] {
+            spec(&format!("embed.bn.{field}"), vec![dim]);
+        }
+        spec("embed.sa", vec![]);
+        for i in 0..DILATIONS.len() {
+            let c_in = if i == 0 { dim } else { filters };
+            spec(&format!("conv{i}.w"), vec![filters, c_in, 3]);
+            for role in ["sa", "sw", "so"] {
+                spec(&format!("conv{i}.{role}"), vec![]);
+            }
+        }
+        spec("head.w", vec![filters, classes]);
+        spec("head.b", vec![classes]);
+        let graph = GraphSpec {
+            trainable: specs,
+            state: Vec::new(),
+            opt: Vec::new(),
+            param_count: 0,
+        };
+        let mut params = ParamSet::zeros(&graph);
+        let mut rng = Rng::new(seed ^ 0x5EED_F0CC);
+        for (spec, v) in graph.trainable.iter().zip(params.values.iter_mut()) {
+            if spec.name.ends_with(".w") {
+                rng.fill_gaussian(v.data_mut(), 0.5);
+            } else if spec.name.ends_with(".bn.gamma") || spec.name.ends_with(".bn.var") {
+                v.data_mut().fill(1.0);
+            }
+            // bn.beta / bn.mean / head.b / log-scales stay 0 (=> es = 1)
+        }
+        FqKwsNet::from_params(&params, nw, na, frames)
+    }
+
     pub fn out_frames(&self) -> usize {
         let mut t = self.frames;
         for l in &self.layers {
@@ -117,6 +180,13 @@ impl FqKwsNet {
 
     /// Forward one sample: MFCC features (n_mfcc, frames) -> logits.
     pub fn forward(&self, x: &[f32], s: &mut Scratch) -> Vec<f32> {
+        self.forward_with(x, s, 1)
+    }
+
+    /// [`FqKwsNet::forward`] with an intra-layer thread budget for the
+    /// per-layer GEMMs (useful when serving single samples on an
+    /// otherwise idle machine). Bit-identical at every `threads`.
+    pub fn forward_with(&self, x: &[f32], s: &mut Scratch, threads: usize) -> Vec<f32> {
         let t_in = self.frames;
         let e = &self.embed;
         debug_assert_eq!(x.len(), e.n_mfcc * t_in);
@@ -124,7 +194,6 @@ impl FqKwsNet {
         let qa0 = &self.layers[0].qa;
         s.a.clear();
         s.a.resize(e.dim * t_in, 0);
-        s.embed_real.clear();
         for k in 0..e.dim {
             let wrow = &e.w[k * e.n_mfcc..(k + 1) * e.n_mfcc];
             for t in 0..t_in {
@@ -145,7 +214,7 @@ impl FqKwsNet {
             {
                 let (input, output) =
                     if cur_in_a { (&s.a, &mut s.b) } else { (&s.b, &mut s.a) };
-                l.forward(input, t_cur, &mut s.cols, &mut s.acc, output);
+                l.forward_mt(input, t_cur, &mut s.cols, &mut s.acc, output, threads);
             }
             t_cur = l.t_out(t_cur);
             cur_in_a = !cur_in_a;
@@ -154,25 +223,50 @@ impl FqKwsNet {
         // --- higher-precision GAP + head ---------------------------------
         let last = self.layers.last().unwrap();
         let dq = last.lut.out; // final grid
-        let mut pooled = vec![0f32; self.filters];
-        for (k, p) in pooled.iter_mut().enumerate() {
-            let mut sum = 0i64;
-            for t in 0..t_cur {
-                sum += codes[k * t_cur + t] as i64;
-            }
-            *p = dq.dequantize(sum as i32) / t_cur as f32;
-        }
+        let pooled = global_avg_pool(codes, self.filters, t_cur, &dq);
         self.head_logits(&pooled)
     }
 
-    /// Forward a batch (B, n_mfcc, frames) -> logits tensor (B, classes).
+    /// Forward a run of flattened samples into a pre-sized logits window
+    /// — the single shared batch loop behind [`FqKwsNet::forward_batch`]
+    /// and the serving backend (`serve::NativeBackend`).
+    pub fn forward_rows(&self, xs: &[f32], s: &mut Scratch, out: &mut [f32]) {
+        let per = self.embed.n_mfcc * self.frames;
+        assert_eq!(xs.len() % per.max(1), 0, "feature buffer not a whole number of samples");
+        assert_eq!(out.len(), xs.len() / per * self.classes, "logit buffer size");
+        for (xi, oi) in xs.chunks_exact(per).zip(out.chunks_exact_mut(self.classes)) {
+            let logits = self.forward(xi, s);
+            oi.copy_from_slice(&logits);
+        }
+    }
+
+    /// Forward a batch (B, n_mfcc, frames) -> logits tensor (B, classes),
+    /// data-parallel across samples over [`exec::default_threads`].
     pub fn forward_batch(&self, x: &TensorF) -> TensorF {
+        self.forward_batch_with(x, exec::default_threads())
+    }
+
+    /// [`FqKwsNet::forward_batch`] with an explicit pool size. Samples
+    /// are split into contiguous blocks, one scoped worker per block,
+    /// each with its own [`Scratch`] reused across its samples; a batch
+    /// of one instead spends the budget inside the layer GEMMs. Output
+    /// is bit-identical for every `threads` (rust/tests/parallel.rs).
+    pub fn forward_batch_with(&self, x: &TensorF, threads: usize) -> TensorF {
         let b = x.shape()[0];
         let per = self.embed.n_mfcc * self.frames;
-        let mut s = Scratch::default();
-        let mut out = Vec::with_capacity(b * self.classes);
-        for i in 0..b {
-            out.extend(self.forward(&x.data()[i * per..(i + 1) * per], &mut s));
+        let mut out = vec![0f32; b * self.classes];
+        let threads = threads.max(1);
+        if b == 1 {
+            let mut s = Scratch::default();
+            out.copy_from_slice(&self.forward_with(x.data(), &mut s, threads));
+        } else if threads == 1 {
+            let mut s = Scratch::default();
+            self.forward_rows(x.data(), &mut s, &mut out);
+        } else {
+            exec::par_rows_mut(&mut out, b, self.classes, threads, |rows, window| {
+                let mut s = Scratch::default();
+                self.forward_rows(&x.data()[rows.start * per..rows.end * per], &mut s, window);
+            });
         }
         TensorF::from_vec(&[b, self.classes], out)
     }

@@ -13,7 +13,9 @@
 //!
 //! Module map (see DESIGN.md for the full system inventory):
 //!
-//! * [`util`]        — PRNGs, JSON, thread pool, timers, property testing
+//! * [`util`]        — PRNGs, JSON, timers, property testing
+//! * [`exec`]        — scoped-thread data-parallel substrate (deterministic
+//!                     fork-join used by the engine and the serving layer)
 //! * [`tensor`]      — minimal strided ndarray (f32 / i32 / i8)
 //! * [`quant`]       — the paper's quantizer (Eqs. 1-2) + integer LUT re-binning
 //! * [`config`]      — TOML-subset experiment configuration
@@ -33,6 +35,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod exp;
 pub mod infer;
 pub mod metrics;

@@ -163,18 +163,22 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Deployment network for `fqconv serve`: trained FQ checkpoint, else
+/// the BN-folded init (needs PJRT to briefly build QAT params), else an
+/// error — `cmd_serve` falls back to the synthetic net on any failure.
+fn artifact_serve_net() -> Result<FqKwsNet> {
     let manifest = load_manifest()?;
     let info = manifest.model("kws")?;
     let frames = info.input_shape[1];
-    // deploy parameters: trained FQ checkpoint if available, else the
-    // BN-folded init (structure demo)
     let fq_graph = info.fq.clone().context("kws fq graph")?;
     let ckpt = manifest.dir.join("ckpts/kws_FQ24.ckpt");
     let params = if ckpt.exists() {
         ParamSet::from_checkpoint(&fq_graph, &checkpoint::read(&ckpt)?)?
     } else {
-        eprintln!("note: no trained checkpoint at {}; serving untrained weights", ckpt.display());
+        eprintln!(
+            "note: no trained checkpoint at {}; serving untrained weights",
+            ckpt.display()
+        );
         let engine = Engine::cpu()?;
         let mut src = fqconv::coordinator::Trainer::new(
             &engine,
@@ -185,17 +189,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         src.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt))?)?;
         fqconv::coordinator::fq_transform::qat_to_fq(info, &fq_graph, &src.params)?
     };
-    let net = std::sync::Arc::new(FqKwsNet::from_params(&params, 1.0, 7.0, frames)?);
+    FqKwsNet::from_params(&params, 1.0, 7.0, frames)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // deploy parameters: trained FQ checkpoint > BN-folded init >
+    // synthetic network (no artifacts / PJRT needed for the last)
+    let net = match artifact_serve_net() {
+        Ok(net) => std::sync::Arc::new(net),
+        Err(e) => {
+            eprintln!("note: {e:#}");
+            eprintln!("note: serving the synthetic KWS network instead");
+            std::sync::Arc::new(FqKwsNet::synthetic(1.0, 7.0, 7)?)
+        }
+    };
+    let input_shape = vec![39usize, net.frames];
     let workers = args.usize_or("workers", 2);
     let policy =
         BatchPolicy::new(args.usize_or("max-batch", 16), args.u64_or("max-wait-us", 2000));
-    let sample_numel: usize = info.input_shape.iter().product();
+    let sample_numel: usize = input_shape.iter().product();
     let factories: Vec<fqconv::serve::BackendFactory> = (0..workers)
-        .map(|_| fqconv::serve::ready(NativeBackend::new(net.clone(), info.input_shape.clone())))
+        .map(|_| fqconv::serve::ready(NativeBackend::new(net.clone(), input_shape.clone())))
         .collect();
     let server = Server::start_with(factories, sample_numel, policy);
 
-    let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
+    let ds = data::for_model("kws", &input_shape, net.classes);
     let n = args.usize_or("requests", 256);
     let mut rng = Rng::new(7);
     let t = Timer::start();
@@ -222,6 +240,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.mean_batch
     );
     println!("latency: {}", stats.latency_summary);
+    for w in &stats.workers {
+        println!(
+            "worker {}: batches={} served={} errors={} alive={}",
+            w.worker, w.batches, w.served, w.errors, w.alive
+        );
+    }
     server.shutdown();
     Ok(())
 }

@@ -83,6 +83,22 @@ impl QParams {
         dequantize(code, self.es, self.n)
     }
 
+    /// Dequantize a *wide* integer (e.g. a pooled sum of codes): for
+    /// values that fit an i32 this is bit-identical to [`Self::dequantize`];
+    /// beyond that it widens to f64 instead of silently truncating (the
+    /// old `sum as i32` bug in global average pooling).
+    pub fn dequantize_i64(&self, code: i64) -> f32 {
+        if let Ok(c) = i32::try_from(code) {
+            self.dequantize(c)
+        } else {
+            debug_assert!(
+                code.unsigned_abs() < (1u64 << 53),
+                "pooled sum {code} exceeds exact f64 integer range"
+            );
+            (self.es as f64 * code as f64 / self.n as f64) as f32
+        }
+    }
+
     /// Smallest / largest representable integer code.
     pub fn code_range(&self) -> (i32, i32) {
         ((self.b * self.n).round_ties_even() as i32, self.n as i32)
@@ -148,6 +164,23 @@ mod tests {
             assert!(err <= q.lsb() / 2.0 + 1e-6, "x={x} err={err}");
             x += 0.013;
         }
+    }
+
+    #[test]
+    fn dequantize_i64_widens_instead_of_truncating() {
+        let q = QParams::new(1.0, 7.0, 0.0);
+        // in-range: bit-identical to the i32 path
+        for c in [-123456i64, -1, 0, 1, 987654] {
+            assert_eq!(q.dequantize_i64(c), q.dequantize(c as i32));
+        }
+        // beyond i32: the old `as i32` cast would have wrapped
+        let big = i32::MAX as i64 + 12_345;
+        let got = q.dequantize_i64(big);
+        let want = (big as f64 / 7.0) as f32;
+        assert_eq!(got, want);
+        assert!(got > 0.0, "wrapped to negative: {got}");
+        let neg = -(i32::MAX as i64) - 99_999;
+        assert!(q.dequantize_i64(neg) < 0.0);
     }
 
     #[test]

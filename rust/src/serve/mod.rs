@@ -4,13 +4,30 @@
 //! Architecture (vLLM-router-like, scaled to the edge):
 //!
 //! ```text
-//!  clients --> [ingress queue] --> batcher thread --(batches)--> worker pool
-//!                                   (max_batch / max_wait_us)       |
+//!  clients --> [ingress queue] --> batcher thread --(batches)--> shared
+//!                                   (max_batch / max_wait_us)    work queue
+//!                                                                   |
+//!                                              idle workers PULL ---+
 //!  clients <---------------- per-request response channels <--------+
 //! ```
 //!
 //! * [`batcher`] — pure batch-assembly policy (unit-testable, no threads)
 //! * [`Server`]  — threads + channels glue; workers own backend replicas
+//!
+//! Scheduling is **pull-based**: the batcher pushes closed batches onto
+//! one shared queue and idle workers take from it. Unlike the previous
+//! push-based round-robin, a slow worker never head-of-line-blocks
+//! batches that another worker could serve, and a dead worker simply
+//! stops pulling. Error policy distinguishes poisoned *batches* from
+//! poisoned *backends*: a failed batch is re-queued at the back (other
+//! traffic proceeds first) with bounded attempts before it is dropped,
+//! and a worker retires only after [`MAX_WORKER_ERRORS`] *consecutive*
+//! failures (success resets the budget) — so one unservable batch
+//! cannot cascade-retire the whole pool. Per-worker counters surface in [`ServerStats::workers`]. When
+//! the *last* worker retires the queue is closed and drained (and
+//! further pushes are dropped) so waiting clients observe a disconnect
+//! instead of hanging — guaranteed even for panicking backends via a
+//! drop guard.
 //!
 //! Backends: the native integer engine ([`NativeBackend`], per-sample,
 //! batch-size-free) or the XLA deployment artifact ([`XlaBackend`],
@@ -18,9 +35,10 @@
 
 pub mod batcher;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -76,11 +94,11 @@ impl NativeBackend {
 impl Backend for NativeBackend {
     fn infer(&mut self, x: &TensorF) -> Result<TensorF> {
         let b = x.shape()[0];
-        let per: usize = self.shape.iter().product();
-        let mut out = Vec::with_capacity(b * self.net.classes);
-        for i in 0..b {
-            out.extend(self.net.forward(&x.data()[i * per..(i + 1) * per], &mut self.scratch));
-        }
+        let mut out = vec![0f32; b * self.net.classes];
+        // shared batch loop with FqKwsNet::forward_batch; worker-level
+        // parallelism comes from the pool, so each backend stays
+        // single-threaded over its own reusable scratch
+        self.net.forward_rows(x.data(), &mut self.scratch, &mut out);
         Ok(TensorF::from_vec(&[b, self.net.classes], out))
     }
 
@@ -93,7 +111,7 @@ impl Backend for NativeBackend {
 ///
 /// NOTE: the `xla` crate's PJRT handles are not `Send` (Rc-based), so an
 /// `XlaBackend` must be constructed *inside* its worker thread — use
-/// [`XlaBackend::factory`] with [`Server::start`], which builds one
+/// [`XlaBackend::factory`] with [`Server::start_with`], which builds one
 /// engine + compiled executable per worker.
 pub struct XlaBackend {
     _engine: Engine,
@@ -120,7 +138,7 @@ impl XlaBackend {
         Ok(XlaBackend { _engine: engine, exe, params, hp: hpv, batch, classes, shape })
     }
 
-    /// A `Send` factory for [`Server::start`].
+    /// A `Send` factory for [`Server::start_with`].
     pub fn factory(
         artifact: PathBuf,
         params: Vec<(Vec<usize>, Vec<f32>)>,
@@ -170,6 +188,108 @@ pub fn ready<B: Backend + Send + 'static>(b: B) -> BackendFactory {
     Box::new(move || Box::new(b) as Box<dyn Backend>)
 }
 
+// ---------------------------------------------------------------------------
+// Shared work queue
+// ---------------------------------------------------------------------------
+
+/// One closed batch travelling from the batcher to a worker.
+struct QueuedBatch {
+    reqs: Vec<Request>,
+    /// delivery attempts so far (bounds error-path re-queues)
+    attempts: usize,
+}
+
+struct QueueState {
+    q: VecDeque<QueuedBatch>,
+    closed: bool,
+}
+
+/// MPMC batch queue: the batcher pushes, idle workers pull.
+struct SharedQueue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl SharedQueue {
+    fn new() -> Arc<Self> {
+        Arc::new(SharedQueue {
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Push to the back. On a closed queue (all workers retired) the
+    /// batch is dropped instead — dropping its reply senders signals a
+    /// disconnect to waiting clients rather than queueing them forever.
+    fn push_back(&self, b: QueuedBatch) {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            drop(st);
+            drop(b);
+            return;
+        }
+        st.q.push_back(b);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    fn pop(&self) -> Option<QueuedBatch> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(b) = st.q.pop_front() {
+                return Some(b);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Close and return whatever was still queued (dropping the returned
+    /// batches drops their reply senders, unblocking waiting clients).
+    fn close_and_drain(&self) -> Vec<QueuedBatch> {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        let drained = st.q.drain(..).collect();
+        drop(st);
+        self.cv.notify_all();
+        drained
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Per-worker counters (lock-free; read by [`Server::stats`]).
+#[derive(Debug, Default)]
+struct WorkerSlot {
+    batches: AtomicU64,
+    served: AtomicU64,
+    errors: AtomicU64,
+    retired: AtomicBool,
+}
+
+/// Snapshot of one worker's counters.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub batches: u64,
+    pub served: u64,
+    pub errors: u64,
+    /// false once the worker retired (backend error) or shut down
+    pub alive: bool,
+}
+
 /// Server statistics snapshot.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
@@ -179,6 +299,8 @@ pub struct ServerStats {
     pub latency_summary: String,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// per-worker counters, indexed by worker id
+    pub workers: Vec<WorkerStats>,
 }
 
 pub struct Server {
@@ -187,6 +309,7 @@ pub struct Server {
     served: Arc<AtomicUsize>,
     batches: Arc<AtomicUsize>,
     hist: Arc<Mutex<LatencyHist>>,
+    slots: Arc<Vec<WorkerSlot>>,
     sample_numel: usize,
     workers: Vec<thread::JoinHandle<()>>,
     batcher: Option<thread::JoinHandle<()>>,
@@ -202,71 +325,55 @@ impl Server {
         policy: BatchPolicy,
     ) -> Self {
         assert!(!factories.is_empty());
+        let n_workers = factories.len();
         let (ingress_tx, ingress_rx) = mpsc::channel::<Request>();
         let served = Arc::new(AtomicUsize::new(0));
         let batches = Arc::new(AtomicUsize::new(0));
         let hist = Arc::new(Mutex::new(LatencyHist::new()));
+        let queue = SharedQueue::new();
+        let slots: Arc<Vec<WorkerSlot>> =
+            Arc::new((0..n_workers).map(|_| WorkerSlot::default()).collect());
+        let alive = Arc::new(AtomicUsize::new(n_workers));
+        // a batch that keeps failing is eventually dropped (clients see
+        // a disconnect, not a hang); the +1 guarantees a batch failed
+        // only by one soon-to-retire worker still reaches a healthy one
+        let max_attempts = n_workers + 1;
 
-        // worker pool: each worker builds + owns a backend replica
-        let mut worker_txs = Vec::new();
         let mut workers = Vec::new();
         for (wi, factory) in factories.into_iter().enumerate() {
-            let (tx, rx) = mpsc::channel::<Vec<Request>>();
-            worker_txs.push(tx);
+            let queue = Arc::clone(&queue);
             let served = Arc::clone(&served);
             let batches = Arc::clone(&batches);
             let hist = Arc::clone(&hist);
+            let slots = Arc::clone(&slots);
+            let alive = Arc::clone(&alive);
             workers.push(
                 thread::Builder::new()
                     .name(format!("fqconv-worker-{wi}"))
                     .spawn(move || {
-                        let mut backend = factory();
-                        while let Ok(reqs) = rx.recv() {
-                            let b = reqs.len();
-                            let mut flat = Vec::with_capacity(b * sample_numel);
-                            for r in &reqs {
-                                flat.extend_from_slice(&r.features);
-                            }
-                            let x = TensorF::from_vec(&[b, sample_numel], flat);
-                            match backend.infer(&x) {
-                                Ok(logits) => {
-                                    // count the batch BEFORE replying: stats()
-                                    // may be read the instant the last response
-                                    // lands
-                                    batches.fetch_add(1, Ordering::Relaxed);
-                                    let preds = logits.argmax_rows();
-                                    let classes = logits.shape()[1];
-                                    for (i, r) in reqs.into_iter().enumerate() {
-                                        let lat = r.submitted.elapsed().as_secs_f64() * 1e6;
-                                        hist.lock().unwrap().record_us(lat);
-                                        served.fetch_add(1, Ordering::Relaxed);
-                                        let _ = r.reply.send(Response {
-                                            id: r.id,
-                                            logits: logits.data()
-                                                [i * classes..(i + 1) * classes]
-                                                .to_vec(),
-                                            class: preds[i],
-                                            latency_us: lat,
-                                            batch_size: b,
-                                        });
-                                    }
-                                }
-                                Err(e) => {
-                                    log::error!("backend error: {e:#}");
-                                }
-                            }
-                        }
+                        worker_loop(
+                            wi,
+                            factory,
+                            sample_numel,
+                            &queue,
+                            &served,
+                            &batches,
+                            &hist,
+                            &slots[wi],
+                            &alive,
+                            max_attempts,
+                        );
                     })
                     .expect("spawn worker"),
             );
         }
 
-        // batcher thread: assemble batches per policy, round-robin dispatch
+        // batcher thread: assemble batches per policy, push to the queue
         let batcher = {
-            let policy = policy;
+            let queue = Arc::clone(&queue);
             thread::Builder::new()
                 .name("fqconv-batcher".into())
-                .spawn(move || batcher_loop(ingress_rx, worker_txs, policy))
+                .spawn(move || batcher_loop(ingress_rx, &queue, policy))
                 .expect("spawn batcher")
         };
 
@@ -276,6 +383,7 @@ impl Server {
             served,
             batches,
             hist,
+            slots,
             sample_numel,
             workers,
             batcher: Some(batcher),
@@ -305,6 +413,18 @@ impl Server {
         let hist = self.hist.lock().unwrap();
         let served = self.served.load(Ordering::Relaxed) as u64;
         let batches = self.batches.load(Ordering::Relaxed) as u64;
+        let workers = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| WorkerStats {
+                worker: i,
+                batches: s.batches.load(Ordering::Relaxed),
+                served: s.served.load(Ordering::Relaxed),
+                errors: s.errors.load(Ordering::Relaxed),
+                alive: !s.retired.load(Ordering::Relaxed),
+            })
+            .collect();
         ServerStats {
             served,
             batches,
@@ -312,6 +432,7 @@ impl Server {
             latency_summary: hist.summary(),
             p50_us: hist.percentile(50.0),
             p99_us: hist.percentile(99.0),
+            workers,
         }
     }
 
@@ -327,8 +448,112 @@ impl Server {
     }
 }
 
-fn batcher_loop(rx: Receiver<Request>, workers: Vec<Sender<Vec<Request>>>, policy: BatchPolicy) {
-    let mut next_worker = 0usize;
+/// A worker retires after this many **consecutive** backend errors —
+/// one error can be batch-attributed (bad payload), an unbroken run of
+/// them means the backend replica itself is poisoned. Any successful
+/// batch resets the count.
+pub const MAX_WORKER_ERRORS: u64 = 2;
+
+/// Runs the worker's retirement bookkeeping on *every* exit path —
+/// including a panicking backend — so the last worker out always
+/// closes the queue and unblocks waiting clients.
+struct RetireGuard<'a> {
+    slot: &'a WorkerSlot,
+    alive: &'a AtomicUsize,
+    queue: &'a SharedQueue,
+}
+
+impl Drop for RetireGuard<'_> {
+    fn drop(&mut self) {
+        self.slot.retired.store(true, Ordering::Relaxed);
+        if self.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last worker out: nothing can serve queued batches any more
+            drop(self.queue.close_and_drain());
+        }
+    }
+}
+
+/// One worker: pull batches from the shared queue until it closes.
+/// A backend error re-queues the batch at the back (bounded attempts,
+/// then dropped); the worker itself retires after [`MAX_WORKER_ERRORS`]
+/// consecutive failures and the shared queue lets the remaining workers
+/// absorb the load.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    wi: usize,
+    factory: BackendFactory,
+    sample_numel: usize,
+    queue: &SharedQueue,
+    served: &AtomicUsize,
+    batches: &AtomicUsize,
+    hist: &Mutex<LatencyHist>,
+    slot: &WorkerSlot,
+    alive: &AtomicUsize,
+    max_attempts: usize,
+) {
+    let _guard = RetireGuard { slot, alive, queue };
+    let mut backend = factory();
+    let mut my_errors = 0u64;
+    while let Some(mut qb) = queue.pop() {
+        let b = qb.reqs.len();
+        let mut flat = Vec::with_capacity(b * sample_numel);
+        for r in &qb.reqs {
+            flat.extend_from_slice(&r.features);
+        }
+        let x = TensorF::from_vec(&[b, sample_numel], flat);
+        match backend.infer(&x) {
+            Ok(logits) => {
+                my_errors = 0; // the error budget is for *consecutive* failures
+                // count the batch BEFORE replying: stats() may be read
+                // the instant the last response lands
+                batches.fetch_add(1, Ordering::Relaxed);
+                slot.batches.fetch_add(1, Ordering::Relaxed);
+                let preds = logits.argmax_rows();
+                let classes = logits.shape()[1];
+                for (i, r) in qb.reqs.into_iter().enumerate() {
+                    let lat = r.submitted.elapsed().as_secs_f64() * 1e6;
+                    hist.lock().unwrap().record_us(lat);
+                    served.fetch_add(1, Ordering::Relaxed);
+                    slot.served.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(Response {
+                        id: r.id,
+                        logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
+                        class: preds[i],
+                        latency_us: lat,
+                        batch_size: b,
+                    });
+                }
+            }
+            Err(e) => {
+                slot.errors.fetch_add(1, Ordering::Relaxed);
+                my_errors += 1;
+                qb.attempts += 1;
+                if qb.attempts < max_attempts {
+                    log::error!(
+                        "worker {wi} backend error (attempt {} of {max_attempts}): {e:#}",
+                        qb.attempts
+                    );
+                    queue.push_back(qb);
+                } else {
+                    // drop the batch — reply senders close and the
+                    // waiting clients observe a disconnect, not a hang
+                    log::error!(
+                        "worker {wi} backend error, dropping batch of {b} after \
+                         {max_attempts} attempts: {e:#}"
+                    );
+                }
+                if my_errors >= MAX_WORKER_ERRORS {
+                    log::error!("worker {wi} retiring after {my_errors} consecutive errors");
+                    break;
+                }
+            }
+        }
+    }
+    // RetireGuard's Drop marks the slot retired and closes the queue
+    // when this was the last worker — on panic unwinds too.
+}
+
+fn batcher_loop(rx: Receiver<Request>, queue: &SharedQueue, policy: BatchPolicy) {
     let mut pending: Vec<Request> = Vec::new();
     let mut deadline: Option<Instant> = None;
     loop {
@@ -343,39 +568,31 @@ fn batcher_loop(rx: Receiver<Request>, workers: Vec<Sender<Vec<Request>>>, polic
                 }
                 pending.push(req);
                 if pending.len() >= policy.max_batch {
-                    dispatch(&mut pending, &workers, &mut next_worker);
+                    dispatch(&mut pending, queue);
                     deadline = None;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if !pending.is_empty() {
-                    dispatch(&mut pending, &workers, &mut next_worker);
+                    dispatch(&mut pending, queue);
                 }
                 deadline = None;
             }
             Err(RecvTimeoutError::Disconnected) => {
                 if !pending.is_empty() {
-                    dispatch(&mut pending, &workers, &mut next_worker);
+                    dispatch(&mut pending, queue);
                 }
+                queue.close();
                 return;
             }
         }
     }
 }
 
-fn dispatch(pending: &mut Vec<Request>, workers: &[Sender<Vec<Request>>], next: &mut usize) {
-    let mut batch = std::mem::take(pending);
+fn dispatch(pending: &mut Vec<Request>, queue: &SharedQueue) {
+    let batch = std::mem::take(pending);
     if batch.is_empty() {
         return;
     }
-    // round-robin; SendError hands the batch back so we can try the next
-    // worker if one has died
-    for _ in 0..workers.len() {
-        let w = *next % workers.len();
-        *next += 1;
-        match workers[w].send(batch) {
-            Ok(()) => return,
-            Err(e) => batch = e.0,
-        }
-    }
+    queue.push_back(QueuedBatch { reqs: batch, attempts: 0 });
 }

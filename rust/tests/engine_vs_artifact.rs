@@ -9,15 +9,16 @@
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset as _};
 use fqconv::infer::FqKwsNet;
-use fqconv::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Manifest};
+use fqconv::runtime::{hp, lit_f32, lit_to_vec_f32};
 use fqconv::tensor::TensorF;
 use fqconv::util::Rng;
 
+mod common;
+use common::setup;
+
 #[test]
 fn integer_engine_matches_xla_artifact() {
-    let dir = fqconv::artifacts_dir();
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let engine = Engine::cpu().expect("engine");
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
 
     // get realistic FQ parameters: briefly train QAT, then transform
@@ -83,9 +84,7 @@ fn integer_engine_matches_xla_artifact() {
 
 #[test]
 fn ternary_layers_use_addonly_path() {
-    let dir = fqconv::artifacts_dir();
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let engine = Engine::cpu().expect("engine");
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
     t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
@@ -101,9 +100,7 @@ fn ternary_layers_use_addonly_path() {
 
 #[test]
 fn analog_sim_with_zero_noise_matches_engine() {
-    let dir = fqconv::artifacts_dir();
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let engine = Engine::cpu().expect("engine");
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let mut t = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
     t.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
@@ -127,9 +124,7 @@ fn analog_sim_with_zero_noise_matches_engine() {
 
 #[test]
 fn noise_degrades_monotonically_on_average() {
-    let dir = fqconv::artifacts_dir();
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let engine = Engine::cpu().expect("engine");
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     // brief training so accuracy is meaningfully above chance

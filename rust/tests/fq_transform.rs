@@ -6,17 +6,15 @@
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset};
 use fqconv::metrics;
-use fqconv::runtime::{hp, Engine, Manifest};
+use fqconv::runtime::hp;
 use fqconv::util::Rng;
 
-fn setup() -> (Manifest, Engine) {
-    let dir = fqconv::artifacts_dir();
-    (Manifest::load(&dir).expect("manifest"), Engine::cpu().expect("engine"))
-}
+mod common;
+use common::setup;
 
 #[test]
 fn identity_bn_transform_is_exact() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let mut qat = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
     qat.load_params(&checkpoint::read(&manifest.dir.join(&info.init_ckpt)).unwrap()).unwrap();
@@ -55,7 +53,7 @@ fn identity_bn_transform_is_exact() {
 
 #[test]
 fn transform_preserves_decisions_after_brief_training() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     let mut qat = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();
@@ -103,7 +101,7 @@ fn transform_preserves_decisions_after_brief_training() {
 
 #[test]
 fn fine_tune_recovers_accuracy() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     let mut qat = Trainer::new(&engine, &manifest, "kws", Variant::Qat("")).unwrap();

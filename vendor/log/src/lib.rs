@@ -1,0 +1,45 @@
+//! Minimal stand-in for the `log` facade: `error!`/`warn!` go to stderr,
+//! `info!`/`debug!`/`trace!` print only when `FQCONV_LOG` is set. No
+//! logger registration — this crate exists so library code can keep the
+//! standard `log::error!(...)` call sites.
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        eprintln!("[ERROR] {}", format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        eprintln!("[WARN ] {}", format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if std::env::var_os("FQCONV_LOG").is_some() {
+            eprintln!("[INFO ] {}", format!($($arg)*))
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if std::env::var_os("FQCONV_LOG").is_some() {
+            eprintln!("[DEBUG] {}", format!($($arg)*))
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        if std::env::var_os("FQCONV_LOG").is_some() {
+            eprintln!("[TRACE] {}", format!($($arg)*))
+        }
+    };
+}
