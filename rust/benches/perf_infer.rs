@@ -1,12 +1,18 @@
-//! Perf: integer inference engine — i8 GEMM vs ternary add-only path
-//! (sequential vs row-block-parallel), full-network single-sample and
-//! batch throughput (sequential vs thread pool). Feeds EXPERIMENTS.md
-//! §Perf (L3 targets: ternary path faster than dense i8; >= 1 GMAC/s/core;
-//! pooled batch throughput >= 2x sequential on a multi-core host).
+//! Perf: integer inference engine — packed-microkernel i8 GEMM vs the
+//! ternary add-only path (sequential vs row-block-parallel), full-network
+//! single-sample and batch throughput (sequential vs persistent pool vs
+//! the old scoped-spawn fork-join). Feeds EXPERIMENTS.md §Perf.
+//!
+//! Besides the human-readable table, the run emits a machine-readable
+//! `BENCH_infer.json` at the repository root (samples/sec, ns/sample,
+//! MACs/s, speedups vs sequential) so the perf trajectory is tracked
+//! across PRs.
 //!
 //! The network sections run on a deterministic synthetic KWS net, so
 //! this bench works offline; when the trained artifacts + PJRT runtime
 //! are present a section on the real FQ parameters is appended.
+//! `FQCONV_BENCH_SMOKE=1` shrinks every section to one short iteration
+//! (the CI bench-smoke job).
 #[path = "common.rs"]
 mod common;
 
@@ -14,103 +20,209 @@ use fqconv::bench::{banner, bench, bench_for, BenchStats};
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset};
 use fqconv::exec;
-use fqconv::infer::gemm::{gemm_i8, gemm_i8_mt, transpose, TernaryMatrix};
+use fqconv::infer::gemm::{gemm_i8, gemm_i8_mt, gemm_packed, transpose, PackedB, TernaryMatrix};
 use fqconv::infer::pipeline::Scratch;
 use fqconv::infer::FqKwsNet;
+use fqconv::tensor::TensorF;
+use fqconv::util::json::{num, obj, s, Json};
 use fqconv::util::Rng;
 
-fn report(s: &BenchStats, items: f64, unit: &str) {
-    println!("{}   {:>10.2} {unit}", s.report(), s.throughput(items) / 1e9);
+fn smoke() -> bool {
+    std::env::var("FQCONV_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
 }
 
-fn gemm_section(threads: usize) {
+fn report(st: &BenchStats, items: f64, unit: &str) {
+    println!("{}   {:>10.2} {unit}", st.report(), st.throughput(items) / 1e9);
+}
+
+fn gemm_section(threads: usize, iters: usize) -> Json {
     let mut rng = Rng::new(7);
+    let mut records = Vec::new();
     // GEMM shapes modeled on the KWS layers: (T_out, C*F) x (C*F, 45),
     // plus a larger patch matrix where row-block parallelism pays off
     for &(m, k, n) in &[(78usize, 300usize, 45usize), (64, 135, 45), (1024, 512, 64)] {
         let a: Vec<i8> = (0..m * k).map(|_| (rng.below(15) as i32 - 7) as i8).collect();
         let b: Vec<i8> = (0..k * n).map(|_| (rng.below(3) as i32 - 1) as i8).collect();
         let bt = transpose(k, n, &b);
+        let pb = PackedB::from_bt(k, n, &bt);
         let tern = TernaryMatrix::from_dense(k, n, &b);
         let mut c = vec![0i32; m * n];
         let macs = (m * k * n) as f64;
-        let s = bench(&format!("dense i8 GEMM {m}x{k}x{n}"), 3, 30, || {
+        let st = bench(&format!("dense i8 GEMM {m}x{k}x{n} (pack/call)"), 2, iters, || {
             gemm_i8(m, k, n, &a, &bt, &mut c);
             std::hint::black_box(&c);
         });
-        report(&s, macs, "GMAC/s");
-        let s = bench(&format!("dense i8 GEMM {m}x{k}x{n} (mt x{threads})"), 3, 30, || {
+        report(&st, macs, "GMAC/s");
+        let dense_packed = bench(&format!("dense i8 GEMM {m}x{k}x{n} (pre-packed)"), 2, iters, || {
+            gemm_packed(m, k, &a, &pb, &mut c);
+            std::hint::black_box(&c);
+        });
+        report(&dense_packed, macs, "GMAC/s");
+        let dense_mt = bench(&format!("dense i8 GEMM {m}x{k}x{n} (mt x{threads})"), 2, iters, || {
             gemm_i8_mt(m, k, n, &a, &bt, &mut c, threads);
             std::hint::black_box(&c);
         });
-        report(&s, macs, "GMAC/s");
-        let s = bench(
+        report(&dense_mt, macs, "GMAC/s");
+        let tern_seq = bench(
             &format!("ternary GEMM {m}x{k}x{n} (sparsity {:.0}%)", tern.sparsity * 100.0),
-            3,
-            30,
+            2,
+            iters,
             || {
                 tern.gemm(m, &a, &mut c);
                 std::hint::black_box(&c);
             },
         );
-        report(&s, macs, "GMAC/s");
-        let s = bench(&format!("ternary GEMM {m}x{k}x{n} (mt x{threads})"), 3, 30, || {
+        report(&tern_seq, macs, "GMAC/s");
+        let tern_mt = bench(&format!("ternary GEMM {m}x{k}x{n} (mt x{threads})"), 2, iters, || {
             tern.gemm_mt(m, &a, &mut c, threads);
             std::hint::black_box(&c);
         });
-        report(&s, macs, "GMAC/s");
+        report(&tern_mt, macs, "GMAC/s");
+        records.push(obj(vec![
+            ("m", num(m as f64)),
+            ("k", num(k as f64)),
+            ("n", num(n as f64)),
+            ("dense_packed_gmacs", num(dense_packed.throughput(macs) / 1e9)),
+            ("dense_mt_gmacs", num(dense_mt.throughput(macs) / 1e9)),
+            ("ternary_gmacs", num(tern_seq.throughput(macs) / 1e9)),
+            ("ternary_mt_gmacs", num(tern_mt.throughput(macs) / 1e9)),
+        ]));
     }
+    Json::Arr(records)
 }
 
-fn net_section(net: &FqKwsNet, tag: &str, threads: usize) {
+fn net_section(net: &FqKwsNet, tag: &str, threads: usize, iters: usize) -> Json {
     let ds = data::for_model("kws", &[39, net.frames], net.classes);
     let (x, _) = ds.sample(0, None);
     let macs = net.macs_per_sample() as f64;
     let mut scratch = Scratch::default();
-    let s = bench(&format!("{tag} forward (1 sample)"), 5, 50, || {
+    let st = bench(&format!("{tag} forward (1 sample)"), 3, iters, || {
         std::hint::black_box(net.forward(&x, &mut scratch));
     });
-    report(&s, macs, "GMAC/s");
+    report(&st, macs, "GMAC/s");
     println!(
         "    = {:.0} samples/s/core ({:.2}M int-MACs/sample)",
-        1.0 / s.median_s,
+        1.0 / st.median_s,
         macs / 1e6
     );
 
-    // batch throughput: sequential loop vs the data-parallel pool —
-    // the headline number for the "2x over the sequential seed" target
+    // batch throughput: sequential loop vs the persistent pool — the
+    // headline number for the "2x over the sequential seed" target
+    let time_budget = if smoke() { 0.05 } else { 0.5 };
     let batch = ds.val_batch(0, 64);
-    let seq = bench_for(&format!("{tag} forward_batch(64) seq"), 0.5, 40, || {
+    let seq = bench_for(&format!("{tag} forward_batch(64) seq"), time_budget, 40, || {
         std::hint::black_box(net.forward_batch_with(&batch.x, 1));
     });
     println!("{}", seq.report());
-    let par = bench_for(&format!("{tag} forward_batch(64) pool x{threads}"), 0.5, 40, || {
+    let par = bench_for(&format!("{tag} forward_batch(64) pool x{threads}"), time_budget, 40, || {
         std::hint::black_box(net.forward_batch_with(&batch.x, threads));
     });
     println!("{}", par.report());
     let speedup = seq.median_s / par.median_s.max(1e-12);
     println!(
-        "    batch throughput: {:.0} -> {:.0} samples/s  ({speedup:.2}x speedup, {threads} threads)",
+        "    batch throughput: {:.0} -> {:.0} samples/s  ({speedup:.2}x, {threads} threads)",
         64.0 / seq.median_s,
         64.0 / par.median_s
     );
+    obj(vec![
+        ("tag", s(tag)),
+        ("macs_per_sample", num(macs)),
+        ("samples_per_sec_1t", num(1.0 / st.median_s)),
+        ("ns_per_sample_1t", num(st.median_s * 1e9)),
+        ("macs_per_sec_1t", num(macs / st.median_s)),
+        ("batch64_seq_samples_per_sec", num(64.0 / seq.median_s)),
+        ("batch64_pool_samples_per_sec", num(64.0 / par.median_s)),
+        ("batch64_speedup_vs_sequential", num(speedup)),
+        ("pool_threads", num(threads as f64)),
+    ])
+}
+
+/// `forward_batch_with` semantics over the *old* scoped-spawn fork-join
+/// (one thread spawn per window per batch) — the baseline the
+/// persistent pool is measured against at small batch sizes.
+fn forward_batch_scoped(net: &FqKwsNet, x: &TensorF, threads: usize) -> TensorF {
+    let b = x.shape()[0];
+    let per: usize = x.data().len() / b;
+    let classes = net.classes;
+    let mut out = vec![0f32; b * classes];
+    if b == 1 || threads <= 1 {
+        let mut s = Scratch::default();
+        net.forward_rows(x.data(), &mut s, &mut out);
+    } else {
+        exec::par_rows_mut_scoped(&mut out, b, classes, threads, |rows, window| {
+            let mut s = Scratch::default();
+            net.forward_rows(&x.data()[rows.start * per..rows.end * per], &mut s, window);
+        });
+    }
+    TensorF::from_vec(&[b, classes], out)
+}
+
+fn small_batch_section(net: &FqKwsNet, threads: usize) -> Json {
+    println!("\n--- small-batch fork-join: persistent pool vs scoped spawn ---");
+    let ds = data::for_model("kws", &[39, net.frames], net.classes);
+    let time_budget = if smoke() { 0.03 } else { 0.3 };
+    let mut records = Vec::new();
+    for b in [1usize, 2, 4, 8] {
+        let batch = ds.val_batch(0, b);
+        let scoped_name = format!("batch({b}) scoped-spawn x{threads}");
+        let scoped = bench_for(&scoped_name, time_budget, 400, || {
+            std::hint::black_box(forward_batch_scoped(net, &batch.x, threads));
+        });
+        let pool_name = format!("batch({b}) persistent pool x{threads}");
+        let pool = bench_for(&pool_name, time_budget, 400, || {
+            std::hint::black_box(net.forward_batch_with(&batch.x, threads));
+        });
+        let ratio = scoped.median_s / pool.median_s.max(1e-12);
+        println!(
+            "batch {b}: scoped {:>10.0} samples/s | pool {:>10.0} samples/s | pool is {ratio:.2}x",
+            b as f64 / scoped.median_s,
+            b as f64 / pool.median_s
+        );
+        records.push(obj(vec![
+            ("batch", num(b as f64)),
+            ("scoped_samples_per_sec", num(b as f64 / scoped.median_s)),
+            ("pool_samples_per_sec", num(b as f64 / pool.median_s)),
+            ("pool_vs_scoped", num(ratio)),
+        ]));
+    }
+    Json::Arr(records)
 }
 
 fn main() {
     banner("perf_infer — integer engine hot paths");
     let threads = exec::default_threads();
+    let iters = if smoke() { 5 } else { 30 };
     println!("(pool size {threads}; override with FQCONV_THREADS)\n");
-    gemm_section(threads);
+    let gemm_json = gemm_section(threads, iters);
 
     // full network forward on a synthetic net — always available
+    let mut nets_json = Vec::new();
+    let mut small_batch_json = Json::Arr(Vec::new());
     for (nw, label) in [(1.0f32, "ternary (W2)"), (7.0, "dense (W4)")] {
         let net = FqKwsNet::synthetic(nw, 7.0, 7).expect("synthetic net");
-        net_section(&net, &format!("synthetic KWS {label}"), threads);
+        nets_json.push(net_section(&net, &format!("synthetic KWS {label}"), threads, iters));
+        if nw == 1.0 {
+            small_batch_json = small_batch_section(&net, threads);
+        }
+    }
+
+    let out = obj(vec![
+        ("bench", s("perf_infer")),
+        ("threads", num(threads as f64)),
+        ("smoke", Json::Bool(smoke())),
+        ("gemm", gemm_json),
+        ("nets", Json::Arr(nets_json)),
+        ("small_batch_pool_vs_scoped", small_batch_json),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_infer.json");
+    match std::fs::write(path, out.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 
     // trained-artifact section (skipped offline)
     let Some((manifest, engine)) = common::try_setup() else {
-        println!("\n(trained-artifact section skipped: artifacts / PJRT unavailable)");
+        println!("(trained-artifact section skipped: artifacts / PJRT unavailable)");
         return;
     };
     let info = manifest.model("kws").unwrap();
@@ -120,6 +232,6 @@ fn main() {
     let params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
     for (nw, label) in [(1.0f32, "ternary (W2)"), (7.0, "dense (W4)")] {
         let net = FqKwsNet::from_params(&params, nw, 7.0, info.input_shape[1]).unwrap();
-        net_section(&net, &format!("KWS net {label}"), threads);
+        net_section(&net, &format!("KWS net {label}"), threads, iters);
     }
 }

@@ -2,6 +2,11 @@
 //! worker counts under open-loop load, over the shared work queue. Feeds
 //! EXPERIMENTS.md §Perf (target: p99 < 5 ms at the default policy on the
 //! KWS net). Falls back to a synthetic network offline.
+//!
+//! Emits a machine-readable `BENCH_serve.json` at the repository root
+//! (req/s, p50/p99 latency, mean batch size per configuration) so the
+//! serving-perf trajectory is tracked across PRs.
+//! `FQCONV_BENCH_SMOKE=1` shrinks the load to one short iteration.
 #[path = "common.rs"]
 mod common;
 
@@ -10,7 +15,12 @@ use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset as _};
 use fqconv::infer::FqKwsNet;
 use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server};
+use fqconv::util::json::{num, obj, s, Json};
 use fqconv::util::{Rng, Timer};
+
+fn smoke() -> bool {
+    std::env::var("FQCONV_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
 
 fn main() {
     banner("perf_serve — router + dynamic batcher (shared work queue)");
@@ -37,9 +47,10 @@ fn main() {
     let ds = data::for_model("kws", &shape, net.classes);
     let numel: usize = shape.iter().product();
     // pre-generate request features (exclude datagen from the measurement)
+    let n_requests = if smoke() { 96 } else { 512 };
     let mut rng = Rng::new(1);
     let feats: Vec<Vec<f32>> =
-        (0..512).map(|i| ds.sample(i as u64 % 512, Some(&mut rng)).0).collect();
+        (0..n_requests).map(|i| ds.sample(i as u64 % 512, Some(&mut rng)).0).collect();
 
     // NOTE: the sweep below is an *unpaced* open loop — it measures
     // saturation throughput; latency there is queueing-dominated. The
@@ -49,6 +60,7 @@ fn main() {
         "{:<34} {:>9} {:>9} {:>9} {:>9}  {}",
         "config", "req/s", "p50(us)", "p99(us)", "meanB", "per-worker batches"
     );
+    let mut sweep_json = Vec::new();
     for workers in [1usize, 2, 4] {
         for (mb, wait) in [(1usize, 1u64), (16, 2000), (32, 4000)] {
             let factories = (0..workers)
@@ -63,15 +75,25 @@ fn main() {
             let dt = timer.elapsed_s();
             let stats = server.stats();
             let per_worker: Vec<u64> = stats.workers.iter().map(|w| w.batches).collect();
+            let rps = feats.len() as f64 / dt;
             println!(
                 "{:<34} {:>9.0} {:>9.0} {:>9.0} {:>9.1}  {:?}",
                 format!("w={workers} max_batch={mb} wait={wait}us"),
-                feats.len() as f64 / dt,
+                rps,
                 stats.p50_us,
                 stats.p99_us,
                 stats.mean_batch,
                 per_worker
             );
+            sweep_json.push(obj(vec![
+                ("workers", num(workers as f64)),
+                ("max_batch", num(mb as f64)),
+                ("max_wait_us", num(wait as f64)),
+                ("req_per_sec", num(rps)),
+                ("p50_us", num(stats.p50_us)),
+                ("p99_us", num(stats.p99_us)),
+                ("mean_batch", num(stats.mean_batch)),
+            ]));
             server.shutdown();
         }
     }
@@ -95,4 +117,24 @@ fn main() {
         stats.p50_us, stats.p99_us, stats.mean_batch
     );
     server.shutdown();
+
+    let out = obj(vec![
+        ("bench", s("perf_serve")),
+        ("smoke", Json::Bool(smoke())),
+        ("requests", num(n_requests as f64)),
+        ("sweep", Json::Arr(sweep_json)),
+        (
+            "paced_1000rps",
+            obj(vec![
+                ("p50_us", num(stats.p50_us)),
+                ("p99_us", num(stats.p99_us)),
+                ("mean_batch", num(stats.mean_batch)),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    match std::fs::write(path, out.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }

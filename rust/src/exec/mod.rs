@@ -1,12 +1,13 @@
 //! Data-parallel execution substrate for the integer inference engine
 //! and the serving layer (no rayon in the offline image).
 //!
-//! Everything here is built on **scoped threads** (`std::thread::scope`),
-//! so workers may borrow non-`'static` data — the engine hands each
-//! worker a disjoint `&mut` window of the output buffer plus a shared
-//! `&` view of the inputs, and each worker owns its own scratch space
-//! for the duration of the call (per-thread scratch reuse across the
-//! items in its range).
+//! Fork-join now runs over a **persistent worker pool** ([`Pool`]): a set
+//! of parked threads woken by a condvar per fork, instead of spawning
+//! scoped threads per call. At small batch sizes (the serving hot path)
+//! the per-call spawn cost dominated the actual kernel work; the pool
+//! amortizes it to a notify/park round-trip. The previous scoped-thread
+//! implementation is kept as [`par_rows_mut_scoped`] so benches can
+//! measure the pool against it.
 //!
 //! **Determinism contract:** every helper in this module partitions work
 //! into contiguous, disjoint ranges and each output element is computed
@@ -18,9 +19,21 @@
 //! [`default_threads`] resolves the process-wide default
 //! (`FQCONV_THREADS` env var, else `available_parallelism`), and
 //! [`clamp_threads`] shrinks a budget so small problems never pay
-//! fork-join overhead.
+//! fork-join overhead. The global pool is sized once from
+//! [`default_threads`] on first use; budgets above its width are clamped
+//! to it (outputs are bit-identical either way).
+//!
+//! Re-entrancy: a fork issued from inside a pool worker (or from the
+//! thread currently driving a fork) degrades to the sequential path on
+//! the calling thread — nested parallelism would deadlock a single
+//! shared pool, and the determinism contract makes the sequential
+//! fallback indistinguishable in output.
 
+use std::cell::Cell;
 use std::ops::Range;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
 
 /// Process-wide default worker count: `FQCONV_THREADS` if set (>= 1),
 /// else the machine's available parallelism.
@@ -53,12 +66,359 @@ pub fn clamp_threads(threads: usize, rows: usize, min_rows_per_thread: usize) ->
     threads.max(1).min((rows / min_rows_per_thread.max(1)).max(1))
 }
 
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Type-erased fork body: `f(part_index)` runs one contiguous part.
+type JobFn = dyn Fn(usize) + Sync;
+
+/// One published fork. The raw pointer is only dereferenced by workers
+/// whose part index participates in the fork, strictly between job
+/// publication and their `remaining` decrement — and [`Pool::run`] does
+/// not return (or unwind) until every participant has decremented, so
+/// the pointee outlives every dereference.
+struct Job {
+    f: *const JobFn,
+    parts: usize,
+    epoch: u64,
+}
+
+// SAFETY: the pointer is only shared under the lifetime discipline
+// documented on [`Job`]; the pointee is required to be `Sync`.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// bumped once per fork; workers track the last epoch they observed
+    epoch: u64,
+    job: Option<Job>,
+    /// worker parts (parts - 1; the caller runs part 0) not yet finished
+    remaining: usize,
+    /// a worker's part panicked during the current fork
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// workers park here waiting for a new epoch (or shutdown)
+    work_cv: Condvar,
+    /// the forking thread parks here waiting for `remaining == 0`
+    done_cv: Condvar,
+}
+
+thread_local! {
+    /// True on pool worker threads and on a thread currently driving a
+    /// fork — a nested fork from either must degrade to sequential.
+    static IN_POOL_FORK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Persistent fork-join worker pool: `workers` parked threads plus the
+/// calling thread, woken per [`Pool::run`] and parked again after.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    /// serializes concurrent forks from independent threads — the pool
+    /// has a single job slot by design (forks are short; queueing them
+    /// would only reorder identical work)
+    fork_lock: Mutex<()>,
+    workers: usize,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` parked worker threads. Total fork
+    /// concurrency is `workers + 1`: the forking thread runs part 0.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|wi| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("fqconv-pool-{wi}"))
+                    .spawn(move || worker_loop(wi, &shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { shared, fork_lock: Mutex::new(()), workers, handles }
+    }
+
+    /// The process-wide pool, sized once from [`default_threads`] on
+    /// first use (workers = default_threads - 1; the caller is the +1).
+    pub fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| Pool::new(default_threads().saturating_sub(1)))
+    }
+
+    /// Maximum concurrency of a fork (workers + the calling thread).
+    pub fn width(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Fork-join: run `f(0)..f(parts - 1)` concurrently (part 0 on the
+    /// calling thread) and return once all parts finished. `parts` must
+    /// not exceed [`Pool::width`]. Panics in any part propagate to the
+    /// caller after every part has completed — the pool itself survives.
+    pub fn run(&self, parts: usize, f: &JobFn) {
+        assert!(parts <= self.width(), "fork of {parts} parts on a width-{} pool", self.width());
+        if parts <= 1 {
+            f(0);
+            return;
+        }
+        if IN_POOL_FORK.with(|g| g.get()) {
+            // nested fork: run sequentially (bit-identical by contract)
+            for i in 0..parts {
+                f(i);
+            }
+            return;
+        }
+        let _fork = self.fork_lock.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            // SAFETY: widen the borrow to the 'static trait-object type
+            // stored in Job; `run` joins all participants before
+            // returning or unwinding, so no use outlives `f`.
+            let f_ptr: *const JobFn = unsafe {
+                std::mem::transmute::<&JobFn, *const JobFn>(f)
+            };
+            st.job = Some(Job { f: f_ptr, parts, epoch: st.epoch });
+            st.remaining = parts - 1;
+            st.panicked = false;
+        }
+        self.shared.work_cv.notify_all();
+
+        // Join-on-drop guard: even if the caller's own part panics, we
+        // must not unwind past the workers still reading our stack.
+        struct Join<'a>(&'a PoolShared);
+        impl Drop for Join<'_> {
+            fn drop(&mut self) {
+                let mut st = self.0.state.lock().unwrap();
+                while st.remaining > 0 {
+                    st = self.0.done_cv.wait(st).unwrap();
+                }
+                st.job = None;
+            }
+        }
+        let join = Join(&self.shared);
+        IN_POOL_FORK.with(|g| g.set(true));
+        let caller_result = panic::catch_unwind(AssertUnwindSafe(|| f(0)));
+        IN_POOL_FORK.with(|g| g.set(false));
+        drop(join); // waits for all worker parts
+        let worker_panicked = self.shared.state.lock().unwrap().panicked;
+        if let Err(payload) = caller_result {
+            panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("pool worker panicked during fork");
+        }
+    }
+
+    /// Fork-join over the rows of a row-major `(rows, row_len)` output
+    /// buffer — pool-backed equivalent of [`par_rows_mut_scoped`].
+    pub fn par_rows_mut<T, F>(
+        &self,
+        out: &mut [T],
+        rows: usize,
+        row_len: usize,
+        threads: usize,
+        f: F,
+    ) where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T]) + Sync,
+    {
+        assert_eq!(out.len(), rows * row_len, "output buffer / row geometry mismatch");
+        let parts = partition(rows, threads.min(self.width()));
+        if parts.len() <= 1 {
+            f(0..rows, out);
+            return;
+        }
+        let windows = split_windows(out, &parts, row_len);
+        let windows = &windows;
+        let f = &f;
+        let task = move |i: usize| {
+            let (range, w) = &windows[i];
+            // SAFETY: split_windows produced disjoint sub-slices of `out`
+            // and each part index is run exactly once per fork.
+            let slice = unsafe { std::slice::from_raw_parts_mut(w.0, w.1) };
+            f(range.clone(), slice);
+        };
+        self.run(parts.len(), &task);
+    }
+
+    /// Fork-join over two parallel row-major buffers sharing one row
+    /// partition: `f(range, a_window, b_window)` sees the same rows of
+    /// both. Lets a kernel fuse a second per-row pass (e.g. requantize
+    /// accumulators into output codes) without a second fork.
+    #[allow(clippy::too_many_arguments)]
+    pub fn par_rows_pair_mut<A, B, F>(
+        &self,
+        a: &mut [A],
+        b: &mut [B],
+        rows: usize,
+        a_row_len: usize,
+        b_row_len: usize,
+        threads: usize,
+        f: F,
+    ) where
+        A: Send,
+        B: Send,
+        F: Fn(Range<usize>, &mut [A], &mut [B]) + Sync,
+    {
+        assert_eq!(a.len(), rows * a_row_len, "buffer A / row geometry mismatch");
+        assert_eq!(b.len(), rows * b_row_len, "buffer B / row geometry mismatch");
+        let parts = partition(rows, threads.min(self.width()));
+        if parts.len() <= 1 {
+            f(0..rows, a, b);
+            return;
+        }
+        let wa = split_windows(a, &parts, a_row_len);
+        let wb = split_windows(b, &parts, b_row_len);
+        let (wa, wb) = (&wa, &wb);
+        let f = &f;
+        let task = move |i: usize| {
+            let (range, pa) = &wa[i];
+            let (_, pb) = &wb[i];
+            // SAFETY: disjoint windows, each part run exactly once.
+            let sa = unsafe { std::slice::from_raw_parts_mut(pa.0, pa.1) };
+            let sb = unsafe { std::slice::from_raw_parts_mut(pb.0, pb.1) };
+            f(range.clone(), sa, sb);
+        };
+        self.run(parts.len(), &task);
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw (ptr, len) for a disjoint `&mut` window handed across the fork.
+struct WindowPtr<T>(*mut T, usize);
+// SAFETY: each window is a disjoint sub-slice of one `&mut` buffer and
+// is accessed by exactly one part of the fork.
+unsafe impl<T: Send> Send for WindowPtr<T> {}
+unsafe impl<T: Send> Sync for WindowPtr<T> {}
+
+/// Split a row-major buffer into per-part windows matching `parts`.
+fn split_windows<T>(
+    buf: &mut [T],
+    parts: &[Range<usize>],
+    row_len: usize,
+) -> Vec<(Range<usize>, WindowPtr<T>)> {
+    let mut out = Vec::with_capacity(parts.len());
+    let mut rest = buf;
+    for r in parts {
+        let take = (r.end - r.start) * row_len;
+        let (w, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        rest = tail;
+        out.push((r.clone(), WindowPtr(w.as_mut_ptr(), w.len())));
+    }
+    out
+}
+
+fn worker_loop(wi: usize, shared: &PoolShared) {
+    IN_POOL_FORK.with(|g| g.set(true));
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                let fresh = match &st.job {
+                    Some(j) if j.epoch != seen_epoch => {
+                        Some(Job { f: j.f, parts: j.parts, epoch: j.epoch })
+                    }
+                    _ => None,
+                };
+                if let Some(j) = fresh {
+                    seen_epoch = j.epoch;
+                    break j;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let part = wi + 1;
+        if part >= job.parts {
+            // not a participant of this fork: never dereference the job
+            continue;
+        }
+        // SAFETY: participants dereference only between publication and
+        // their decrement below; Pool::run joins on that decrement.
+        let f = unsafe { &*job.f };
+        let ok = panic::catch_unwind(AssertUnwindSafe(|| f(part))).is_ok();
+        let mut st = shared.state.lock().unwrap();
+        if !ok {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Module-level fork-join entry points (global pool)
+// ---------------------------------------------------------------------------
+
 /// Fork-join over the rows of a row-major `(rows, row_len)` output
 /// buffer: `out` is split into contiguous per-worker windows and
 /// `f(range, window)` runs once per worker with `window` covering exactly
 /// `range`'s rows. With one part (or one row) this degrades to a plain
-/// call on the current thread — no spawn.
+/// call on the current thread. Backed by the persistent [`Pool::global`]
+/// — no thread spawn per call.
 pub fn par_rows_mut<T, F>(out: &mut [T], rows: usize, row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    Pool::global().par_rows_mut(out, rows, row_len, threads, f);
+}
+
+/// [`par_rows_mut`] over two parallel buffers sharing one row partition
+/// (see [`Pool::par_rows_pair_mut`]).
+#[allow(clippy::too_many_arguments)]
+pub fn par_rows_pair_mut<A, B, F>(
+    a: &mut [A],
+    b: &mut [B],
+    rows: usize,
+    a_row_len: usize,
+    b_row_len: usize,
+    threads: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(Range<usize>, &mut [A], &mut [B]) + Sync,
+{
+    Pool::global().par_rows_pair_mut(a, b, rows, a_row_len, b_row_len, threads, f);
+}
+
+/// The pre-pool scoped-thread implementation of [`par_rows_mut`], kept
+/// as the baseline the persistent pool is benchmarked against
+/// (rust/benches/perf_infer.rs) — it pays a thread spawn per window per
+/// call. Output is bit-identical to the pool path.
+pub fn par_rows_mut_scoped<T, F>(out: &mut [T], rows: usize, row_len: usize, threads: usize, f: F)
 where
     T: Send,
     F: Fn(Range<usize>, &mut [T]) + Sync,
@@ -117,20 +477,31 @@ mod tests {
         assert_eq!(clamp_threads(2, 1000, 16), 2);
     }
 
+    fn fill_rows(out: &mut [u32], rows: usize, row_len: usize, threads: usize, scoped: bool) {
+        let f = |range: Range<usize>, window: &mut [u32]| {
+            for (i, row) in range.clone().zip(window.chunks_mut(row_len)) {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v += (i * row_len + j) as u32 + 1;
+                }
+            }
+        };
+        if scoped {
+            par_rows_mut_scoped(out, rows, row_len, threads, f);
+        } else {
+            par_rows_mut(out, rows, row_len, threads, f);
+        }
+    }
+
     #[test]
     fn par_rows_writes_every_row_once() {
         let (rows, row_len) = (37, 5);
+        let want: Vec<u32> = (0..rows * row_len).map(|i| i as u32 + 1).collect();
         for threads in [1usize, 2, 3, 8, 64] {
-            let mut out = vec![0u32; rows * row_len];
-            par_rows_mut(&mut out, rows, row_len, threads, |range, window| {
-                for (i, row) in range.clone().zip(window.chunks_mut(row_len)) {
-                    for (j, v) in row.iter_mut().enumerate() {
-                        *v += (i * row_len + j) as u32 + 1;
-                    }
-                }
-            });
-            let want: Vec<u32> = (0..rows * row_len).map(|i| i as u32 + 1).collect();
-            assert_eq!(out, want, "threads={threads}");
+            for scoped in [false, true] {
+                let mut out = vec![0u32; rows * row_len];
+                fill_rows(&mut out, rows, row_len, threads, scoped);
+                assert_eq!(out, want, "threads={threads} scoped={scoped}");
+            }
         }
     }
 
@@ -138,5 +509,113 @@ mod tests {
     fn zero_rows_is_a_noop() {
         let mut out: Vec<u8> = Vec::new();
         par_rows_mut(&mut out, 0, 4, 4, |_, _| {});
+        par_rows_mut_scoped(&mut out, 0, 4, 4, |_, _| {});
+    }
+
+    #[test]
+    fn pool_reused_across_many_forks() {
+        let pool = Pool::new(3);
+        for round in 0..50 {
+            let (rows, row_len) = (13usize, 3usize);
+            let mut out = vec![0u64; rows * row_len];
+            pool.par_rows_mut(&mut out, rows, row_len, 4, |range, window| {
+                for (i, row) in range.clone().zip(window.chunks_mut(row_len)) {
+                    for v in row.iter_mut() {
+                        *v = (i as u64 + 1) * (round + 1);
+                    }
+                }
+            });
+            for i in 0..rows {
+                assert!(out[i * row_len..(i + 1) * row_len]
+                    .iter()
+                    .all(|&v| v == (i as u64 + 1) * (round + 1)));
+            }
+        }
+    }
+
+    #[test]
+    fn pair_windows_share_row_partition() {
+        let (rows, la, lb) = (9usize, 4usize, 2usize);
+        let mut a = vec![0i32; rows * la];
+        let mut b = vec![0i8; rows * lb];
+        par_rows_pair_mut(&mut a, &mut b, rows, la, lb, 3, |range, wa, wb| {
+            for (i, row) in range.clone().zip(wa.chunks_mut(la)) {
+                row.fill(i as i32);
+            }
+            for (i, row) in range.clone().zip(wb.chunks_mut(lb)) {
+                row.fill(i as i8);
+            }
+        });
+        for i in 0..rows {
+            assert!(a[i * la..(i + 1) * la].iter().all(|&v| v == i as i32));
+            assert!(b[i * lb..(i + 1) * lb].iter().all(|&v| v == i as i8));
+        }
+    }
+
+    #[test]
+    fn nested_fork_degrades_to_sequential() {
+        // a fork issued from inside a fork must not deadlock the pool
+        let (rows, row_len) = (8usize, 4usize);
+        let mut out = vec![0u32; rows * row_len];
+        par_rows_mut(&mut out, rows, row_len, 4, |range, window| {
+            let inner_rows = range.end - range.start;
+            par_rows_mut(window, inner_rows, row_len, 4, |inner, w| {
+                for (k, row) in inner.clone().zip(w.chunks_mut(row_len)) {
+                    row.fill((range.start + k) as u32 + 1);
+                }
+            });
+        });
+        let want: Vec<u32> =
+            (0..rows).flat_map(|i| std::iter::repeat(i as u32 + 1).take(row_len)).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn concurrent_forks_from_independent_threads_serialize() {
+        // several OS threads forking on the global pool at once: the
+        // fork lock serializes them and every result stays correct
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let (rows, row_len) = (11usize, 3usize);
+                        let mut out = vec![0u32; rows * row_len];
+                        par_rows_mut(&mut out, rows, row_len, 3, |range, window| {
+                            for (i, row) in range.clone().zip(window.chunks_mut(row_len)) {
+                                row.fill(i as u32 * 10 + t);
+                            }
+                        });
+                        for i in 0..rows {
+                            assert!(out[i * row_len..(i + 1) * row_len]
+                                .iter()
+                                .all(|&v| v == i as u32 * 10 + t));
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_part() {
+        let pool = Pool::new(2);
+        let boom = panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut out = vec![0u32; 30];
+            pool.par_rows_mut(&mut out, 30, 1, 3, |range, _| {
+                if range.start == 0 {
+                    panic!("injected");
+                }
+            });
+        }));
+        assert!(boom.is_err(), "panic must propagate to the forking caller");
+        // the pool still works after the failed fork
+        let mut out = vec![0u32; 30];
+        pool.par_rows_mut(&mut out, 30, 1, 3, |range, w| {
+            for (i, v) in range.clone().zip(w.iter_mut()) {
+                *v = i as u32;
+            }
+        });
+        let want: Vec<u32> = (0..30).collect();
+        assert_eq!(out, want);
     }
 }

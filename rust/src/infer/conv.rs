@@ -1,17 +1,45 @@
-//! Quantized dilated 1-D convolution over integer codes.
+//! Quantized dilated 1-D convolution over integer codes — im2col-free.
 //!
-//! One layer = im2col (i8 patch matrix) -> integer GEMM (ternary add-only
-//! path when the weights are W2) -> threshold-LUT re-binning straight
-//! onto the next layer's input grid. Matches the deployed Pallas kernel's
-//! two-step binning bit-for-bit (see quant::lut).
+//! The old layer materialized an im2col patch matrix (pure data
+//! movement: `ksize x` the input's memory traffic for zero extra MACs),
+//! ran a gather-style GEMM over it, then re-binned through a transpose.
+//! The layer now accumulates the `ksize` shifted dot products **directly
+//! over the input codes**: for every weight tap `(ci, f)` the input row
+//! `x[ci, f*dilation ..]` is a contiguous window that streams straight
+//! into the output row's accumulator — an add-only stream for ternary
+//! weights (via the flat CSR columns of
+//! [`TernaryMatrix`](super::gemm::TernaryMatrix)), a 4-row register-tiled
+//! multiply-accumulate for dense i8 weights.
+//!
+//! Accumulators are laid out `(c_out, t_out)` — already the layer's
+//! output layout — so requantization is a fused, branchless
+//! direct-index pass ([`RequantLut::dense_table`]) over contiguous rows
+//! with **no transpose step at all**. Channel blocks parallelize over
+//! [`crate::exec::par_rows_pair_mut`]; every output element is computed
+//! with the same instruction sequence at every thread count, so results
+//! stay bit-identical (pinned by rust/tests/parallel.rs).
+//!
+//! The old im2col path survives as [`QuantConv1d::forward_im2col`]: it
+//! is the reference oracle the equivalence tests sweep against across
+//! all seven KWS dilation schedules and the edge shapes (ksize = 1,
+//! dilation gaps wider than T_out).
 
+use std::ops::Range;
+
+use crate::exec;
 use crate::quant::{QParams, RequantLut};
 
 use super::gemm::{self, TernaryMatrix};
 
-/// Weight storage: dense i8 (transposed for GEMM) or ternary sparse.
+/// Below this many output channels per worker, fork-join overhead
+/// dominates the per-row work and the layer runs sequentially.
+const MIN_CH_PER_THREAD: usize = 8;
+
+/// Weight storage: dense i8 codes in (c_in*ksize, c_out) row-major
+/// layout (tap-major, so one tap's coefficients for consecutive output
+/// channels are contiguous), or ternary flat-CSR.
 pub enum WeightKind {
-    Dense { bt: Vec<i8> }, // (K_out, C*F)
+    Dense { b: Vec<i8> }, // (C*F, K_out)
     Ternary(TernaryMatrix),
 }
 
@@ -40,6 +68,7 @@ impl QuantConv1d {
     ///   ReLU).
     /// * `next` — the next layer's input quantizer, or None for the last
     ///   layer (then codes are emitted on the `mid` grid).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         w: &[f32],
         c_out: usize,
@@ -52,8 +81,9 @@ impl QuantConv1d {
         next: Option<QParams>,
     ) -> Self {
         assert_eq!(w.len(), c_out * c_in * ksize);
+        assert!(c_out > 0 && c_in > 0 && ksize > 0, "degenerate conv shape");
         let kdim = c_in * ksize;
-        // integer weight codes, laid out (kdim, c_out) then transposed
+        // integer weight codes, laid out (kdim, c_out)
         let mut b = vec![0i8; kdim * c_out];
         for ko in 0..c_out {
             for ci in 0..c_in {
@@ -68,7 +98,7 @@ impl QuantConv1d {
         let weights = if ternary {
             WeightKind::Ternary(TernaryMatrix::from_dense(kdim, c_out, &b))
         } else {
-            WeightKind::Dense { bt: gemm::transpose(kdim, c_out, &b) }
+            WeightKind::Dense { b }
         };
         // accumulator bound: |acc| <= kdim * max|a-code| * max|w-code|
         let amax = qa.n.abs().max(qa.b.abs() * qa.n) as i64;
@@ -86,6 +116,8 @@ impl QuantConv1d {
     }
 
     /// im2col: codes (c_in, T) -> patch matrix (T_out, c_in*ksize).
+    /// Only the reference path uses this; the hot path never
+    /// materializes the patch matrix.
     pub fn im2col(&self, x: &[i8], t_in: usize, out: &mut Vec<i8>) {
         let t_out = self.t_out(t_in);
         out.clear();
@@ -102,45 +134,215 @@ impl QuantConv1d {
     /// Forward one sample: input codes (c_in, T) -> output codes
     /// (c_out, T_out) on the next layer's grid. `scratch` buffers are
     /// reused across layers/calls to keep the hot path allocation-free.
-    pub fn forward(
-        &self,
-        x: &[i8],
-        t_in: usize,
-        cols: &mut Vec<i8>,
-        acc: &mut Vec<i32>,
-        out: &mut Vec<i8>,
-    ) {
-        self.forward_mt(x, t_in, cols, acc, out, 1);
+    pub fn forward(&self, x: &[i8], t_in: usize, acc: &mut Vec<i32>, out: &mut Vec<i8>) {
+        self.forward_mt(x, t_in, acc, out, 1);
     }
 
     /// [`QuantConv1d::forward`] with an intra-layer thread budget: the
-    /// GEMM over the (T_out, c_in*ksize) patch matrix is split into
-    /// row-blocks of T_out. Output is bit-identical at every `threads`.
+    /// output-channel dimension is split into contiguous blocks over the
+    /// persistent pool, each worker convolving *and* requantizing its
+    /// own rows. Output is bit-identical at every `threads`.
     pub fn forward_mt(
         &self,
         x: &[i8],
         t_in: usize,
-        cols: &mut Vec<i8>,
         acc: &mut Vec<i32>,
         out: &mut Vec<i8>,
         threads: usize,
+    ) {
+        assert_eq!(x.len(), self.c_in * t_in, "input geometry");
+        let t_out = self.t_out(t_in);
+        acc.clear();
+        acc.resize(self.c_out * t_out, 0);
+        out.clear();
+        out.resize(self.c_out * t_out, 0);
+        let threads = exec::clamp_threads(threads, self.c_out, MIN_CH_PER_THREAD);
+        if threads <= 1 {
+            self.conv_rows(x, t_in, t_out, 0..self.c_out, acc);
+            self.requant_rows(acc, out);
+            return;
+        }
+        exec::par_rows_pair_mut(
+            acc.as_mut_slice(),
+            out.as_mut_slice(),
+            self.c_out,
+            t_out,
+            t_out,
+            threads,
+            |range, aw, ow| {
+                self.conv_rows(x, t_in, t_out, range, aw);
+                self.requant_rows(aw, ow);
+            },
+        );
+    }
+
+    /// Direct (im2col-free) convolution of output channels
+    /// `ko_range` into `acc` (rows local to the window, (rows, t_out)).
+    fn conv_rows(
+        &self,
+        x: &[i8],
+        t_in: usize,
+        t_out: usize,
+        ko_range: Range<usize>,
+        acc: &mut [i32],
+    ) {
+        debug_assert_eq!(acc.len(), (ko_range.end - ko_range.start) * t_out);
+        if t_out == 0 {
+            return;
+        }
+        match &self.weights {
+            WeightKind::Ternary(tern) => {
+                self.conv_rows_ternary(tern, x, t_in, t_out, ko_range, acc)
+            }
+            WeightKind::Dense { b } => self.conv_rows_dense(b, x, t_in, t_out, ko_range, acc),
+        }
+    }
+
+    /// Add-only ternary path: per output channel, stream one contiguous
+    /// input window per nonzero tap (+1 taps add, -1 taps subtract).
+    fn conv_rows_ternary(
+        &self,
+        tern: &TernaryMatrix,
+        x: &[i8],
+        t_in: usize,
+        t_out: usize,
+        ko_range: Range<usize>,
+        acc: &mut [i32],
+    ) {
+        for (local, ko) in ko_range.enumerate() {
+            let crow = &mut acc[local * t_out..(local + 1) * t_out];
+            crow.fill(0);
+            let (plus, minus) = tern.col(ko);
+            for &p in plus {
+                let (ci, f) = (p as usize / self.ksize, p as usize % self.ksize);
+                let xw = &x[ci * t_in + f * self.dilation..][..t_out];
+                for (c, &v) in crow.iter_mut().zip(xw) {
+                    *c += v as i32;
+                }
+            }
+            for &p in minus {
+                let (ci, f) = (p as usize / self.ksize, p as usize % self.ksize);
+                let xw = &x[ci * t_in + f * self.dilation..][..t_out];
+                for (c, &v) in crow.iter_mut().zip(xw) {
+                    *c -= v as i32;
+                }
+            }
+        }
+    }
+
+    /// Dense path: 4 output channels per register tile, one contiguous
+    /// multiply-accumulate stream per tap.
+    fn conv_rows_dense(
+        &self,
+        b: &[i8],
+        x: &[i8],
+        t_in: usize,
+        t_out: usize,
+        ko_range: Range<usize>,
+        acc: &mut [i32],
+    ) {
+        let c_out = self.c_out;
+        let mut ko = ko_range.start;
+        let mut local = 0usize;
+        while ko < ko_range.end {
+            let rows = (ko_range.end - ko).min(4);
+            let tile = &mut acc[local * t_out..(local + rows) * t_out];
+            tile.fill(0);
+            if rows == 4 {
+                let (r0, rest) = tile.split_at_mut(t_out);
+                let (r1, rest) = rest.split_at_mut(t_out);
+                let (r2, r3) = rest.split_at_mut(t_out);
+                for ci in 0..self.c_in {
+                    for f in 0..self.ksize {
+                        let p = ci * self.ksize + f;
+                        let w = &b[p * c_out + ko..p * c_out + ko + 4];
+                        if w[0] == 0 && w[1] == 0 && w[2] == 0 && w[3] == 0 {
+                            continue; // zero taps contribute exactly nothing
+                        }
+                        let (w0, w1, w2, w3) =
+                            (w[0] as i32, w[1] as i32, w[2] as i32, w[3] as i32);
+                        let xw = &x[ci * t_in + f * self.dilation..][..t_out];
+                        for (t, &xv) in xw.iter().enumerate() {
+                            let v = xv as i32;
+                            r0[t] += w0 * v;
+                            r1[t] += w1 * v;
+                            r2[t] += w2 * v;
+                            r3[t] += w3 * v;
+                        }
+                    }
+                }
+            } else {
+                for r in 0..rows {
+                    let crow = &mut tile[r * t_out..(r + 1) * t_out];
+                    for ci in 0..self.c_in {
+                        for f in 0..self.ksize {
+                            let p = ci * self.ksize + f;
+                            let wv = b[p * c_out + ko + r] as i32;
+                            if wv == 0 {
+                                continue;
+                            }
+                            let xw = &x[ci * t_in + f * self.dilation..][..t_out];
+                            for (c, &v) in crow.iter_mut().zip(xw) {
+                                *c += wv * v as i32;
+                            }
+                        }
+                    }
+                }
+            }
+            ko += rows;
+            local += rows;
+        }
+    }
+
+    /// Fused re-binning over contiguous (c_out, t_out) rows: a branchless
+    /// direct-index load per element on the dense-table path (always
+    /// taken for the KWS accumulator ranges), threshold search otherwise.
+    /// No transpose — the accumulator already sits in output layout.
+    fn requant_rows(&self, acc: &[i32], out: &mut [i8]) {
+        debug_assert_eq!(acc.len(), out.len());
+        if let Some((tbl, base)) = self.lut.dense_table() {
+            let (lo, hi) = (self.lut.acc_min, self.lut.acc_max);
+            for (o, &a) in out.iter_mut().zip(acc) {
+                let idx = ((a as i64).clamp(lo, hi) - base) as usize;
+                *o = tbl[idx] as i8;
+            }
+        } else {
+            for (o, &a) in out.iter_mut().zip(acc) {
+                *o = self.lut.apply(a as i64) as i8;
+            }
+        }
+    }
+
+    /// The pre-rewrite layer body — im2col patch matrix, gather GEMM,
+    /// threshold re-binning with transpose — kept as the oracle for the
+    /// direct-path equivalence tests. Bit-identical to
+    /// [`QuantConv1d::forward`] by construction (exact integer
+    /// arithmetic; both paths sum taps in the same order).
+    pub fn forward_im2col(
+        &self,
+        x: &[i8],
+        t_in: usize,
+        cols: &mut Vec<i8>,
+        acc: &mut Vec<i32>,
+        out: &mut Vec<i8>,
     ) {
         let t_out = self.t_out(t_in);
         self.im2col(x, t_in, cols);
         acc.clear();
         acc.resize(t_out * self.c_out, 0);
         match &self.weights {
-            WeightKind::Ternary(t) => t.gemm_mt(t_out, cols, acc, threads),
-            WeightKind::Dense { bt } => {
-                gemm::gemm_i8_mt(t_out, self.c_in * self.ksize, self.c_out, cols, bt, acc, threads)
+            WeightKind::Ternary(t) => t.gemm(t_out, cols, acc),
+            WeightKind::Dense { b } => {
+                gemm::gemm_ref(t_out, self.c_in * self.ksize, self.c_out, cols, b, acc)
             }
         }
-        // re-bin, transposing (T_out, c_out) -> (c_out, T_out)
+        // re-bin, transposing (T_out, c_out) -> (c_out, T_out); the
+        // threshold-search path doubles as a dense-table cross-check
         out.clear();
         out.resize(self.c_out * t_out, 0);
         for t in 0..t_out {
             for k in 0..self.c_out {
-                out[k * t_out + t] = self.lut.apply(acc[t * self.c_out + k] as i64) as i8;
+                out[k * t_out + t] = self.lut.apply_search(acc[t * self.c_out + k] as i64) as i8;
             }
         }
     }
@@ -215,8 +417,8 @@ mod tests {
         let layer = QuantConv1d::new(&w, c_out, c_in, ksize, dil, qa, qw, mid, next);
         assert!(layer.is_ternary());
         let x: Vec<i8> = (0..c_in * t_in).map(|_| rng.below(8) as i8).collect();
-        let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
-        layer.forward(&x, t_in, &mut cols, &mut acc, &mut out);
+        let (mut acc, mut out) = (Vec::new(), Vec::new());
+        layer.forward(&x, t_in, &mut acc, &mut out);
         let want = float_ref(&layer, &w, &x, t_in, next, mid);
         assert_eq!(out, want);
     }
@@ -232,10 +434,82 @@ mod tests {
         let layer = QuantConv1d::new(&w, c_out, c_in, ksize, dil, qa, qw, mid, None);
         assert!(!layer.is_ternary());
         let x: Vec<i8> = (0..c_in * t_in).map(|_| rng.below(8) as i8).collect();
-        let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
-        layer.forward(&x, t_in, &mut cols, &mut acc, &mut out);
+        let (mut acc, mut out) = (Vec::new(), Vec::new());
+        layer.forward(&x, t_in, &mut acc, &mut out);
         let want = float_ref(&layer, &w, &x, t_in, None, mid);
         assert_eq!(out, want);
+    }
+
+    /// Random layer at a given shape; nw = 1.0 takes the ternary path.
+    fn random_layer(
+        rng: &mut Rng,
+        c_in: usize,
+        c_out: usize,
+        ksize: usize,
+        dil: usize,
+        nw: f32,
+    ) -> (QuantConv1d, Vec<f32>) {
+        let w: Vec<f32> = (0..c_out * c_in * ksize).map(|_| rng.gaussian_f32(0.0, 0.5)).collect();
+        let qa = QParams::new(0.9, 7.0, 0.0);
+        let qw = QParams::new(0.5, nw, -1.0);
+        let mid = QParams::new(1.1, 7.0, 0.0);
+        let next = Some(QParams::new(1.05, 7.0, 0.0));
+        let layer = QuantConv1d::new(&w, c_out, c_in, ksize, dil, qa, qw, mid, next);
+        (layer, w)
+    }
+
+    #[test]
+    fn direct_conv_matches_im2col_across_kws_dilations() {
+        // the full KWS schedule, both weight kinds, odd channel counts
+        // so the 4-row dense tile has a remainder
+        let mut rng = Rng::new(17);
+        for &dil in &[1usize, 1, 2, 4, 8, 8, 8] {
+            for nw in [1.0f32, 7.0] {
+                let (c_in, c_out, ksize) = (6usize, 7usize, 3usize);
+                let t_in = 8 * (ksize - 1) + 5 + rng.below(20); // always valid for dil <= 8
+                let (layer, _w) = random_layer(&mut rng, c_in, c_out, ksize, dil, nw);
+                let x: Vec<i8> = (0..c_in * t_in).map(|_| rng.below(8) as i8).collect();
+                let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
+                layer.forward_im2col(&x, t_in, &mut cols, &mut acc, &mut out);
+                let want = out.clone();
+                let (mut acc2, mut got) = (Vec::new(), Vec::new());
+                layer.forward(&x, t_in, &mut acc2, &mut got);
+                assert_eq!(got, want, "dil={dil} nw={nw} t_in={t_in}");
+                // and at several intra-layer thread budgets
+                for threads in [2usize, 3, 8] {
+                    let (mut acc3, mut got3) = (Vec::new(), Vec::new());
+                    layer.forward_mt(&x, t_in, &mut acc3, &mut got3, threads);
+                    assert_eq!(got3, want, "dil={dil} nw={nw} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn direct_conv_matches_im2col_edge_shapes() {
+        let mut rng = Rng::new(19);
+        // (c_in, c_out, ksize, dil, t_in): pointwise conv, dilation gap
+        // wider than T_out, single output step, single channel
+        for &(c_in, c_out, ksize, dil, t_in) in &[
+            (5usize, 4usize, 1usize, 1usize, 12usize), // ksize=1: pure 1x1
+            (3, 5, 3, 8, 18),                          // t_out=2 < dilation=8
+            (4, 4, 3, 8, 17),                          // t_out=1
+            (1, 1, 2, 3, 9),                           // minimal channels
+            (2, 9, 5, 2, 11),                          // t_out=3, odd c_out
+        ] {
+            for nw in [1.0f32, 7.0] {
+                let (layer, _w) = random_layer(&mut rng, c_in, c_out, ksize, dil, nw);
+                let x: Vec<i8> = (0..c_in * t_in).map(|_| rng.below(8) as i8).collect();
+                let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
+                layer.forward_im2col(&x, t_in, &mut cols, &mut acc, &mut out);
+                let (mut acc2, mut got) = (Vec::new(), Vec::new());
+                layer.forward(&x, t_in, &mut acc2, &mut got);
+                assert_eq!(
+                    got, out,
+                    "edge shape c_in={c_in} c_out={c_out} ksize={ksize} dil={dil} t_in={t_in} nw={nw}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -3,23 +3,45 @@
 //! Layouts: A is (M, K) row-major activations, B is (K, N) row-major
 //! weights, C is (M, N) i32 accumulators. K is the reduction dim.
 //!
-//! The scalar kernel is written to autovectorize: the inner loop is a
-//! dense dot over K with i32 widening; the blocked variant tiles (M, N)
-//! for L1/L2 locality. The ternary path stores B as per-column sparse
-//! +/- index lists, replacing multiplies with adds/subs — on W2 networks
-//! (the paper's target) this is the deployment kernel.
+//! # Packed-panel layout and microkernel contract
 //!
-//! Both kernels have `_mt` variants that split the M (row) dimension into
-//! contiguous blocks over [`crate::exec`] scoped threads. Every output
-//! element is computed by exactly one worker with the same instruction
-//! sequence as the sequential kernel, so results are bit-identical at
-//! every thread count (pinned by rust/tests/parallel.rs).
+//! The dense kernel is a BLIS-style register-tiled microkernel over
+//! **packed K-panels** ([`PackedB`]): B's columns are grouped into
+//! panels of [`NR`] columns, and within a panel the elements are stored
+//! K-major — `panel[p * NR + c] = B[p, j0 + c]` — so the microkernel's
+//! reduction loop streams one contiguous array regardless of N. The
+//! last panel is zero-padded to NR columns (i8 zeros contribute nothing
+//! to the i32 accumulators, so padding never changes a result).
+//!
+//! The microkernel computes one `MR x NR` output tile: MR rows of A are
+//! walked in lockstep against one panel, widening each i8 product into
+//! an i32 accumulator held in registers. Every output element is the
+//! plain ascending-`p` dot product `sum_p A[i,p] * B[p,j]` in exact
+//! integer arithmetic, so the tiled kernel, the `_mt` row-split
+//! variants, and [`gemm_ref`] are all **bit-identical by construction**
+//! (pinned by the tests below and rust/tests/parallel.rs).
+//!
+//! On x86_64 the tile body dispatches at runtime to an AVX2 version
+//! (`_mm256_mullo_epi32` over sign-extended i8 lanes — the same exact
+//! i32 arithmetic, 8 lanes at a time); every other target (and pre-AVX2
+//! x86) takes the portable tile kernel, which is written over
+//! fixed-size `[i32; NR]` rows so LLVM autovectorizes it well.
+//!
+//! The ternary path ([`TernaryMatrix`]) stores B as one flat CSR-style
+//! index array with a per-column sign split, replacing multiplies with
+//! adds/subs — on W2 networks (the paper's target) this is the
+//! deployment kernel.
 
 use crate::exec;
 
 /// Below this many output rows per worker, fork-join overhead dominates
 /// and the `_mt` kernels fall back to the sequential path.
 const MIN_ROWS_PER_THREAD: usize = 16;
+
+/// Microkernel tile height (rows of A per tile).
+pub const MR: usize = 4;
+/// Microkernel tile width (columns of B per packed panel).
+pub const NR: usize = 8;
 
 /// Reference: straightforward triple loop (used by tests as oracle).
 pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
@@ -37,37 +59,269 @@ pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32])
     }
 }
 
-/// Blocked i8 GEMM. B is pre-transposed to (N, K) ("bt") so the inner
-/// loop is a contiguous dot product over K for both operands.
-pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], bt: &[i8], c: &mut [i32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(bt.len(), n * k);
-    assert_eq!(c.len(), m * n);
-    const MB: usize = 32;
-    const NB: usize = 32;
-    for i0 in (0..m).step_by(MB) {
-        let i1 = (i0 + MB).min(m);
-        for j0 in (0..n).step_by(NB) {
-            let j1 = (j0 + NB).min(n);
-            for i in i0..i1 {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for j in j0..j1 {
-                    let brow = &bt[j * k..(j + 1) * k];
-                    let mut acc = 0i32;
-                    // contiguous dot; autovectorizes to pmaddubsw-ish code
-                    for p in 0..k {
-                        acc += arow[p] as i32 * brow[p] as i32;
-                    }
-                    crow[j] = acc;
+/// B pre-packed into K-major panels of [`NR`] columns (see the module
+/// doc for the exact layout). Pack once per weight matrix; the packing
+/// cost is amortized over every GEMM that reuses it.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    /// `ceil(n / NR)` panels, each `k * NR` bytes, zero-padded columns.
+    panels: Vec<i8>,
+}
+
+impl PackedB {
+    /// Pack from a transposed (N, K) row-major weight matrix.
+    pub fn from_bt(k: usize, n: usize, bt: &[i8]) -> Self {
+        assert!(k > 0 && n > 0, "degenerate GEMM shape k={k} n={n}");
+        assert_eq!(bt.len(), n * k);
+        let nq = n.div_ceil(NR);
+        let mut panels = vec![0i8; nq * k * NR];
+        for q in 0..nq {
+            let jn = (n - q * NR).min(NR);
+            let panel = &mut panels[q * k * NR..(q + 1) * k * NR];
+            for c in 0..jn {
+                let col = &bt[(q * NR + c) * k..(q * NR + c + 1) * k];
+                for (p, &v) in col.iter().enumerate() {
+                    panel[p * NR + c] = v;
                 }
             }
+        }
+        PackedB { k, n, panels }
+    }
+
+    /// Pack from a (K, N) row-major weight matrix.
+    pub fn from_b(k: usize, n: usize, b: &[i8]) -> Self {
+        assert!(k > 0 && n > 0, "degenerate GEMM shape k={k} n={n}");
+        assert_eq!(b.len(), k * n);
+        let nq = n.div_ceil(NR);
+        let mut panels = vec![0i8; nq * k * NR];
+        for q in 0..nq {
+            let jn = (n - q * NR).min(NR);
+            let panel = &mut panels[q * k * NR..(q + 1) * k * NR];
+            for p in 0..k {
+                for c in 0..jn {
+                    panel[p * NR + c] = b[p * n + q * NR + c];
+                }
+            }
+        }
+        PackedB { k, n, panels }
+    }
+
+    fn panel(&self, q: usize) -> &[i8] {
+        &self.panels[q * self.k * NR..(q + 1) * self.k * NR]
+    }
+}
+
+/// True iff the AVX2 tile body is usable on this machine (cached).
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+/// Portable 1xNR tile: one A row against one packed panel.
+#[inline]
+fn tile_1(k: usize, a0: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+    debug_assert!(a0.len() >= k && panel.len() >= k * NR);
+    for (p, b) in panel.chunks_exact(NR).take(k).enumerate() {
+        let v0 = a0[p] as i32;
+        for (av, &bv) in acc.iter_mut().zip(b) {
+            *av += v0 * bv as i32;
         }
     }
 }
 
-/// Row-block-parallel [`gemm_i8`]: splits M across up to `threads` scoped
-/// workers (bit-identical to the sequential kernel at any thread count).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 tile bodies: identical exact i32 arithmetic to the portable
+    //! tiles (sign-extend i8 lanes, 32-bit multiply, 32-bit add), just
+    //! eight lanes per instruction.
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available, `a*` have at least `k`
+    /// elements and `panel` at least `k * NR`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile_4(
+        k: usize,
+        a0: &[i8],
+        a1: &[i8],
+        a2: &[i8],
+        a3: &[i8],
+        panel: &[i8],
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        let mut c0 = _mm256_setzero_si256();
+        let mut c1 = _mm256_setzero_si256();
+        let mut c2 = _mm256_setzero_si256();
+        let mut c3 = _mm256_setzero_si256();
+        for p in 0..k {
+            // 8 packed i8 weights -> 8 sign-extended i32 lanes
+            let b8 = _mm_loadl_epi64(panel.as_ptr().add(p * NR) as *const __m128i);
+            let b = _mm256_cvtepi8_epi32(b8);
+            c0 = _mm256_add_epi32(
+                c0,
+                _mm256_mullo_epi32(_mm256_set1_epi32(*a0.get_unchecked(p) as i32), b),
+            );
+            c1 = _mm256_add_epi32(
+                c1,
+                _mm256_mullo_epi32(_mm256_set1_epi32(*a1.get_unchecked(p) as i32), b),
+            );
+            c2 = _mm256_add_epi32(
+                c2,
+                _mm256_mullo_epi32(_mm256_set1_epi32(*a2.get_unchecked(p) as i32), b),
+            );
+            c3 = _mm256_add_epi32(
+                c3,
+                _mm256_mullo_epi32(_mm256_set1_epi32(*a3.get_unchecked(p) as i32), b),
+            );
+        }
+        _mm256_storeu_si256(acc[0].as_mut_ptr() as *mut __m256i, c0);
+        _mm256_storeu_si256(acc[1].as_mut_ptr() as *mut __m256i, c1);
+        _mm256_storeu_si256(acc[2].as_mut_ptr() as *mut __m256i, c2);
+        _mm256_storeu_si256(acc[3].as_mut_ptr() as *mut __m256i, c3);
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available, `a0` has at least `k`
+    /// elements and `panel` at least `k * NR`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile_1(k: usize, a0: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
+        let mut c0 = _mm256_setzero_si256();
+        for p in 0..k {
+            let b8 = _mm_loadl_epi64(panel.as_ptr().add(p * NR) as *const __m128i);
+            let b = _mm256_cvtepi8_epi32(b8);
+            c0 = _mm256_add_epi32(
+                c0,
+                _mm256_mullo_epi32(_mm256_set1_epi32(*a0.get_unchecked(p) as i32), b),
+            );
+        }
+        _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, c0);
+    }
+}
+
+/// GEMM over a pre-packed B: C = A @ B with A (M, K) row-major.
+pub fn gemm_packed(m: usize, k: usize, a: &[i8], pb: &PackedB, c: &mut [i32]) {
+    assert_eq!(k, pb.k, "reduction dim mismatch");
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * pb.n);
+    let n = pb.n;
+    let nq = n.div_ceil(NR);
+    #[cfg(target_arch = "x86_64")]
+    let use_avx2 = avx2_available();
+    #[cfg(not(target_arch = "x86_64"))]
+    let use_avx2 = false;
+
+    let mut i = 0;
+    while i < m {
+        let rows = (m - i).min(MR);
+        for q in 0..nq {
+            let panel = pb.panel(q);
+            let j0 = q * NR;
+            let jn = (n - j0).min(NR);
+            if rows == MR {
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                let mut acc = [[0i32; NR]; MR];
+                if use_avx2 {
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: avx2_available() checked; slice lengths
+                    // are exactly k and k*NR by construction.
+                    unsafe {
+                        avx2::tile_4(k, a0, a1, a2, a3, panel, &mut acc)
+                    };
+                } else {
+                    tile_4_portable(k, a0, a1, a2, a3, panel, &mut acc);
+                }
+                for (r, row) in acc.iter().enumerate() {
+                    c[(i + r) * n + j0..(i + r) * n + j0 + jn].copy_from_slice(&row[..jn]);
+                }
+            } else {
+                for r in 0..rows {
+                    let a0 = &a[(i + r) * k..(i + r + 1) * k];
+                    let mut acc = [0i32; NR];
+                    if use_avx2 {
+                        #[cfg(target_arch = "x86_64")]
+                        // SAFETY: as above.
+                        unsafe {
+                            avx2::tile_1(k, a0, panel, &mut acc)
+                        };
+                    } else {
+                        tile_1(k, a0, panel, &mut acc);
+                    }
+                    c[(i + r) * n + j0..(i + r) * n + j0 + jn].copy_from_slice(&acc[..jn]);
+                }
+            }
+        }
+        i += rows;
+    }
+}
+
+/// Portable MRxNR tile body (see module doc). Kept free of bounds
+/// checks in the reduction loop via `chunks_exact`.
+#[inline]
+fn tile_4_portable(
+    k: usize,
+    a0: &[i8],
+    a1: &[i8],
+    a2: &[i8],
+    a3: &[i8],
+    panel: &[i8],
+    acc: &mut [[i32; NR]; MR],
+) {
+    let mut r0 = [0i32; NR];
+    let mut r1 = [0i32; NR];
+    let mut r2 = [0i32; NR];
+    let mut r3 = [0i32; NR];
+    for (p, b) in panel.chunks_exact(NR).take(k).enumerate() {
+        let (v0, v1, v2, v3) = (a0[p] as i32, a1[p] as i32, a2[p] as i32, a3[p] as i32);
+        for c in 0..NR {
+            let bv = b[c] as i32;
+            r0[c] += v0 * bv;
+            r1[c] += v1 * bv;
+            r2[c] += v2 * bv;
+            r3[c] += v3 * bv;
+        }
+    }
+    acc[0] = r0;
+    acc[1] = r1;
+    acc[2] = r2;
+    acc[3] = r3;
+}
+
+/// i8 GEMM with B pre-transposed to (N, K) ("bt"). Packs `bt` into
+/// K-panels and runs the register-tiled microkernel; callers that reuse
+/// a weight matrix should pack once with [`PackedB`] + [`gemm_packed`].
+pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], bt: &[i8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    let pb = PackedB::from_bt(k, n, bt);
+    gemm_packed(m, k, a, &pb, c);
+}
+
+/// Row-block-parallel [`gemm_packed`]: splits M across the persistent
+/// pool (bit-identical to the sequential kernel at any thread count).
+pub fn gemm_packed_mt(m: usize, k: usize, a: &[i8], pb: &PackedB, c: &mut [i32], threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * pb.n);
+    let threads = exec::clamp_threads(threads, m, MIN_ROWS_PER_THREAD);
+    if threads <= 1 {
+        return gemm_packed(m, k, a, pb, c);
+    }
+    let n = pb.n;
+    exec::par_rows_mut(c, m, n, threads, |rows, window| {
+        gemm_packed(rows.end - rows.start, k, &a[rows.start * k..rows.end * k], pb, window);
+    });
+}
+
+/// Row-block-parallel [`gemm_i8`]: packs once, then splits M across the
+/// persistent pool (bit-identical at any thread count).
 pub fn gemm_i8_mt(
     m: usize,
     k: usize,
@@ -80,13 +334,8 @@ pub fn gemm_i8_mt(
     assert_eq!(a.len(), m * k);
     assert_eq!(bt.len(), n * k);
     assert_eq!(c.len(), m * n);
-    let threads = exec::clamp_threads(threads, m, MIN_ROWS_PER_THREAD);
-    if threads <= 1 {
-        return gemm_i8(m, k, n, a, bt, c);
-    }
-    exec::par_rows_mut(c, m, n, threads, |rows, window| {
-        gemm_i8(rows.end - rows.start, k, n, &a[rows.start * k..rows.end * k], bt, window);
-    });
+    let pb = PackedB::from_bt(k, n, bt);
+    gemm_packed_mt(m, k, a, &pb, c, threads);
 }
 
 /// Transpose (K, N) -> (N, K).
@@ -100,75 +349,116 @@ pub fn transpose(k: usize, n: usize, b: &[i8]) -> Vec<i8> {
     bt
 }
 
-/// Ternary weight matrix in sparse +/- form: per output column, the list
-/// of K-indices with +1 and with -1 (zeros skipped entirely).
+/// Ternary weight matrix in flat CSR form: one contiguous index array,
+/// one offset array. Column `j`'s +1 row-indices are
+/// `indices[offsets[2j] .. offsets[2j+1]]` and its -1 row-indices are
+/// `indices[offsets[2j+1] .. offsets[2j+2]]` (zeros are skipped
+/// entirely). Compared to the old per-column `Vec<Vec<u32>>`, the
+/// add-only kernel now streams a single allocation with no pointer
+/// chasing between columns.
 #[derive(Clone, Debug)]
 pub struct TernaryMatrix {
     pub k: usize,
     pub n: usize,
-    plus: Vec<Vec<u32>>,
-    minus: Vec<Vec<u32>>,
+    /// `2n + 1` entries; see the struct doc for the sign-split layout.
+    offsets: Vec<u32>,
+    /// ascending row indices, +1 runs then -1 runs, column by column
+    indices: Vec<u32>,
     /// fraction of zero weights (sparsity exploited by the kernel)
     pub sparsity: f64,
 }
 
 impl TernaryMatrix {
     /// Build from a dense (K, N) matrix with entries in {-1, 0, +1}.
+    /// Degenerate shapes are rejected here so the kernels can assume
+    /// `k > 0 && n > 0` (the old per-call row inference divided by
+    /// `n.max(1)` and silently miscomputed for n == 0).
     pub fn from_dense(k: usize, n: usize, b: &[i8]) -> Self {
+        assert!(k > 0 && n > 0, "degenerate ternary shape k={k} n={n}");
+        assert!(k <= u32::MAX as usize, "row index would overflow u32");
         assert_eq!(b.len(), k * n);
-        let mut plus = vec![Vec::new(); n];
-        let mut minus = vec![Vec::new(); n];
+        let mut offsets = Vec::with_capacity(2 * n + 1);
+        let mut indices = Vec::new();
         let mut zeros = 0usize;
-        for p in 0..k {
-            for j in 0..n {
+        offsets.push(0u32);
+        for j in 0..n {
+            for p in 0..k {
                 match b[p * n + j] {
-                    1 => plus[j].push(p as u32),
-                    -1 => minus[j].push(p as u32),
-                    0 => zeros += 1,
+                    1 => indices.push(p as u32),
+                    0 | -1 => {}
                     v => panic!("non-ternary weight {v}"),
                 }
             }
+            offsets.push(indices.len() as u32);
+            for p in 0..k {
+                match b[p * n + j] {
+                    -1 => indices.push(p as u32),
+                    0 => {
+                        zeros += 1;
+                    }
+                    _ => {}
+                }
+            }
+            offsets.push(indices.len() as u32);
         }
-        TernaryMatrix { k, n, plus, minus, sparsity: zeros as f64 / (k * n) as f64 }
+        TernaryMatrix { k, n, offsets, indices, sparsity: zeros as f64 / (k * n) as f64 }
+    }
+
+    /// Column `j`'s (+1 indices, -1 indices), both ascending.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[u32]) {
+        let (o0, o1, o2) = (
+            self.offsets[2 * j] as usize,
+            self.offsets[2 * j + 1] as usize,
+            self.offsets[2 * j + 2] as usize,
+        );
+        (&self.indices[o0..o1], &self.indices[o1..o2])
     }
 
     /// C = A @ B with adds/subs only (A: (M, K) i8, C: (M, N) i32).
     pub fn gemm(&self, m: usize, a: &[i8], c: &mut [i32]) {
         assert_eq!(a.len(), m * self.k);
         assert_eq!(c.len(), m * self.n);
-        self.gemm_rows(a, c);
+        self.gemm_rows(m, a, c);
     }
 
-    /// Row-block-parallel [`TernaryMatrix::gemm`] over up to `threads`
-    /// scoped workers (bit-identical at any thread count).
+    /// Row-block-parallel [`TernaryMatrix::gemm`] over the persistent
+    /// pool (bit-identical at any thread count).
     pub fn gemm_mt(&self, m: usize, a: &[i8], c: &mut [i32], threads: usize) {
         assert_eq!(a.len(), m * self.k);
         assert_eq!(c.len(), m * self.n);
         let threads = exec::clamp_threads(threads, m, MIN_ROWS_PER_THREAD);
         if threads <= 1 {
-            return self.gemm_rows(a, c);
+            return self.gemm_rows(m, a, c);
         }
         exec::par_rows_mut(c, m, self.n, threads, |rows, window| {
-            self.gemm_rows(&a[rows.start * self.k..rows.end * self.k], window);
+            self.gemm_rows(
+                rows.end - rows.start,
+                &a[rows.start * self.k..rows.end * self.k],
+                window,
+            );
         });
     }
 
-    /// Kernel body over a contiguous row block (row count implied by
-    /// slice lengths, already validated by the callers).
-    fn gemm_rows(&self, a: &[i8], c: &mut [i32]) {
-        let m = c.len() / self.n.max(1);
+    /// Kernel body over a contiguous block of `m` rows (the caller
+    /// passes the row count explicitly — shapes were validated at
+    /// construction and in the public entry points).
+    fn gemm_rows(&self, m: usize, a: &[i8], c: &mut [i32]) {
+        debug_assert_eq!(a.len(), m * self.k);
+        debug_assert_eq!(c.len(), m * self.n);
         for i in 0..m {
             let arow = &a[i * self.k..(i + 1) * self.k];
             let crow = &mut c[i * self.n..(i + 1) * self.n];
-            for j in 0..self.n {
+            for (j, cj) in crow.iter_mut().enumerate() {
+                let (plus, minus) = self.col(j);
                 let mut acc = 0i32;
-                for &p in &self.plus[j] {
+                for &p in plus {
                     acc += arow[p as usize] as i32;
                 }
-                for &p in &self.minus[j] {
+                for &p in minus {
                     acc -= arow[p as usize] as i32;
                 }
-                crow[j] = acc;
+                *cj = acc;
             }
         }
     }
@@ -184,9 +474,22 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matches_ref() {
+    fn packed_microkernel_matches_ref() {
         let mut rng = Rng::new(2);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (33, 40, 65), (128, 300, 45)] {
+        // shapes straddle every tile edge: m % MR and n % NR in all
+        // residue classes, k == 1, single-element, and KWS-like sizes
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 5, 3),
+            (2, 7, 8),
+            (3, 4, 9),
+            (4, 6, 16),
+            (5, 9, 7),
+            (3, 5, 7),
+            (7, 13, 17),
+            (33, 40, 65),
+            (128, 300, 45),
+        ] {
             let a = rand_i8(&mut rng, m * k, -127, 127);
             let b = rand_i8(&mut rng, k * n, -127, 127);
             let mut want = vec![0i32; m * n];
@@ -195,13 +498,18 @@ mod tests {
             let mut got = vec![0i32; m * n];
             gemm_i8(m, k, n, &a, &bt, &mut got);
             assert_eq!(got, want, "shape ({m},{k},{n})");
+            // packing from (K, N) directly agrees with packing from bt
+            let pb = PackedB::from_b(k, n, &b);
+            let mut got2 = vec![0i32; m * n];
+            gemm_packed(m, k, &a, &pb, &mut got2);
+            assert_eq!(got2, want, "from_b pack ({m},{k},{n})");
         }
     }
 
     #[test]
     fn ternary_matches_ref() {
         let mut rng = Rng::new(3);
-        for &(m, k, n) in &[(4, 9, 5), (40, 135, 45)] {
+        for &(m, k, n) in &[(4, 9, 5), (40, 135, 45), (1, 3, 1)] {
             let a = rand_i8(&mut rng, m * k, -7, 7);
             let b = rand_i8(&mut rng, k * n, -1, 1);
             let mut want = vec![0i32; m * n];
@@ -210,6 +518,33 @@ mod tests {
             let mut got = vec![0i32; m * n];
             t.gemm(m, &a, &mut got);
             assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn csr_columns_are_sign_split_and_ascending() {
+        let mut rng = Rng::new(9);
+        let (k, n) = (23usize, 11usize);
+        let b = rand_i8(&mut rng, k * n, -1, 1);
+        let t = TernaryMatrix::from_dense(k, n, &b);
+        for j in 0..n {
+            let (plus, minus) = t.col(j);
+            for w in plus.windows(2) {
+                assert!(w[0] < w[1], "plus indices not ascending");
+            }
+            for w in minus.windows(2) {
+                assert!(w[0] < w[1], "minus indices not ascending");
+            }
+            for &p in plus {
+                assert_eq!(b[p as usize * n + j], 1);
+            }
+            for &p in minus {
+                assert_eq!(b[p as usize * n + j], -1);
+            }
+            assert_eq!(
+                plus.len() + minus.len(),
+                (0..k).filter(|&p| b[p * n + j] != 0).count()
+            );
         }
     }
 
@@ -247,6 +582,18 @@ mod tests {
     #[should_panic(expected = "non-ternary")]
     fn ternary_rejects_wide_weights() {
         TernaryMatrix::from_dense(1, 1, &[3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn ternary_rejects_zero_columns() {
+        TernaryMatrix::from_dense(3, 0, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn packed_rejects_zero_reduction() {
+        PackedB::from_bt(0, 4, &[]);
     }
 
     #[test]

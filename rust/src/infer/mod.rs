@@ -3,13 +3,16 @@
 //!
 //! Weights and activations live as integer codes (i8), convolutions
 //! accumulate in i32 (Eq. 4), and layer-to-layer re-binning goes through
-//! the threshold LUT ([`crate::quant::RequantLut`]) so **no float scale
-//! ever materializes on the hot path**. Ternary weights (W2) take an
-//! add/subtract-only path — the paper's "only additions, no
-//! multiplications" claim, measurable in `benches/perf_infer.rs`.
+//! the requant LUT ([`crate::quant::RequantLut`] — a branchless dense
+//! direct-index table for the realistic accumulator ranges) so **no
+//! float scale ever materializes on the hot path**. Ternary weights
+//! (W2) take an add/subtract-only path — the paper's "only additions,
+//! no multiplications" claim, measurable in `benches/perf_infer.rs`.
 //!
-//! * [`gemm`]     — i8 x i8 -> i32 blocked GEMM + ternary fast path
-//! * [`conv`]     — quantized dilated conv1d via im2col over the GEMM
+//! * [`gemm`]     — register-tiled packed-panel i8 GEMM microkernel
+//!   (runtime-dispatched AVX2 tile on x86_64) + flat-CSR ternary path
+//! * [`conv`]     — im2col-free quantized dilated conv1d: `ksize`
+//!   shifted contiguous streams with fused requantization
 //! * [`pipeline`] — the full KWS network as an integer pipeline, built
 //!   directly from a trained FQ [`ParamSet`](crate::coordinator::ParamSet);
 //!   agreement with the XLA deployment artifact is pinned by

@@ -47,19 +47,28 @@ pub struct FqKwsNet {
 /// Each worker of a data-parallel batch owns one of these.
 #[derive(Default)]
 pub struct Scratch {
-    cols: Vec<i8>,
     acc: Vec<i32>,
     a: Vec<i8>,
     b: Vec<i8>,
+    /// float accumulator row for the embedding's streaming dot products
+    fa: Vec<f32>,
+    /// pooled features, reused so the GAP + head path never allocates
+    pooled: Vec<f32>,
 }
 
 /// Higher-precision global average pooling over final-grid codes
 /// (filters, t_cur): the sum runs in i64 so an arbitrarily long time
 /// axis cannot silently truncate (an i8-code sum overflows i32 once
 /// t_cur exceeds ~2^24 — see [`QParams::dequantize_i64`]).
-pub fn global_avg_pool(codes: &[i8], filters: usize, t_cur: usize, dq: &QParams) -> Vec<f32> {
+pub fn global_avg_pool_into(
+    codes: &[i8],
+    filters: usize,
+    t_cur: usize,
+    dq: &QParams,
+    pooled: &mut [f32],
+) {
     debug_assert_eq!(codes.len(), filters * t_cur);
-    let mut pooled = vec![0f32; filters];
+    debug_assert_eq!(pooled.len(), filters);
     for (k, p) in pooled.iter_mut().enumerate() {
         let mut sum = 0i64;
         for t in 0..t_cur {
@@ -67,6 +76,12 @@ pub fn global_avg_pool(codes: &[i8], filters: usize, t_cur: usize, dq: &QParams)
         }
         *p = dq.dequantize_i64(sum) / t_cur as f32;
     }
+}
+
+/// Allocating convenience wrapper over [`global_avg_pool_into`].
+pub fn global_avg_pool(codes: &[i8], filters: usize, t_cur: usize, dq: &QParams) -> Vec<f32> {
+    let mut pooled = vec![0f32; filters];
+    global_avg_pool_into(codes, filters, t_cur, dq, &mut pooled);
     pooled
 }
 
@@ -184,27 +199,50 @@ impl FqKwsNet {
     }
 
     /// [`FqKwsNet::forward`] with an intra-layer thread budget for the
-    /// per-layer GEMMs (useful when serving single samples on an
+    /// per-layer kernels (useful when serving single samples on an
     /// otherwise idle machine). Bit-identical at every `threads`.
     pub fn forward_with(&self, x: &[f32], s: &mut Scratch, threads: usize) -> Vec<f32> {
+        let mut logits = vec![0f32; self.classes];
+        self.forward_into(x, s, &mut logits, threads);
+        logits
+    }
+
+    /// Allocation-free forward: logits land in the caller's slice and
+    /// every intermediate lives in `s` — the steady-state serving path
+    /// performs zero heap allocations per sample.
+    pub fn forward_into(&self, x: &[f32], s: &mut Scratch, logits: &mut [f32], threads: usize) {
         let t_in = self.frames;
         let e = &self.embed;
         debug_assert_eq!(x.len(), e.n_mfcc * t_in);
+        assert_eq!(logits.len(), self.classes, "logit buffer size");
         // --- FP embedding + BN + learned input quantization -> codes ----
+        // Streamed as per-channel axpy rows: for each output channel the
+        // t-axis accumulator row is contiguous and every input row is
+        // contiguous, so the inner loops vectorize; the per-(k,t) f32
+        // addition order over c is unchanged from the naive triple loop,
+        // keeping the embedding bit-identical to the float reference.
         let qa0 = &self.layers[0].qa;
         s.a.clear();
         s.a.resize(e.dim * t_in, 0);
+        s.fa.clear();
+        s.fa.resize(t_in, 0.0);
         for k in 0..e.dim {
             let wrow = &e.w[k * e.n_mfcc..(k + 1) * e.n_mfcc];
-            for t in 0..t_in {
-                let mut acc = 0f32;
-                for c in 0..e.n_mfcc {
-                    acc += wrow[c] * x[c * t_in + t];
+            let fa = &mut s.fa[..t_in];
+            fa.fill(0.0);
+            for (c, &wc) in wrow.iter().enumerate() {
+                let xrow = &x[c * t_in..(c + 1) * t_in];
+                for (av, &xv) in fa.iter_mut().zip(xrow) {
+                    *av += wc * xv;
                 }
-                let bn = acc * e.scale[k] + e.shift[k];
+            }
+            let (sc, sh) = (e.scale[k], e.shift[k]);
+            let arow = &mut s.a[k * t_in..(k + 1) * t_in];
+            for (o, &av) in arow.iter_mut().zip(fa.iter()) {
+                let bn = av * sc + sh;
                 // two-step: Q_{embed.sa}(b=-1) then conv0's input bin
                 let q = learned_quantize(bn, e.es, self.na, -1.0);
-                s.a[k * t_in + t] = qa0.int_code(q) as i8;
+                *o = qa0.int_code(q) as i8;
             }
         }
         // --- integer QCNN ------------------------------------------------
@@ -214,7 +252,7 @@ impl FqKwsNet {
             {
                 let (input, output) =
                     if cur_in_a { (&s.a, &mut s.b) } else { (&s.b, &mut s.a) };
-                l.forward_mt(input, t_cur, &mut s.cols, &mut s.acc, output, threads);
+                l.forward_mt(input, t_cur, &mut s.acc, output, threads);
             }
             t_cur = l.t_out(t_cur);
             cur_in_a = !cur_in_a;
@@ -223,20 +261,22 @@ impl FqKwsNet {
         // --- higher-precision GAP + head ---------------------------------
         let last = self.layers.last().unwrap();
         let dq = last.lut.out; // final grid
-        let pooled = global_avg_pool(codes, self.filters, t_cur, &dq);
-        self.head_logits(&pooled)
+        s.pooled.clear();
+        s.pooled.resize(self.filters, 0.0);
+        global_avg_pool_into(codes, self.filters, t_cur, &dq, &mut s.pooled);
+        self.head_logits_into(&s.pooled, logits);
     }
 
     /// Forward a run of flattened samples into a pre-sized logits window
     /// — the single shared batch loop behind [`FqKwsNet::forward_batch`]
-    /// and the serving backend (`serve::NativeBackend`).
+    /// and the serving backend (`serve::NativeBackend`). Allocation-free
+    /// in steady state (all intermediates live in `s`).
     pub fn forward_rows(&self, xs: &[f32], s: &mut Scratch, out: &mut [f32]) {
         let per = self.embed.n_mfcc * self.frames;
         assert_eq!(xs.len() % per.max(1), 0, "feature buffer not a whole number of samples");
         assert_eq!(out.len(), xs.len() / per * self.classes, "logit buffer size");
         for (xi, oi) in xs.chunks_exact(per).zip(out.chunks_exact_mut(self.classes)) {
-            let logits = self.forward(xi, s);
-            oi.copy_from_slice(&logits);
+            self.forward_into(xi, s, oi, 1);
         }
     }
 
@@ -247,10 +287,12 @@ impl FqKwsNet {
     }
 
     /// [`FqKwsNet::forward_batch`] with an explicit pool size. Samples
-    /// are split into contiguous blocks, one scoped worker per block,
-    /// each with its own [`Scratch`] reused across its samples; a batch
-    /// of one instead spends the budget inside the layer GEMMs. Output
-    /// is bit-identical for every `threads` (rust/tests/parallel.rs).
+    /// are split into contiguous blocks over the persistent worker pool
+    /// ([`exec::par_rows_mut`] — no thread spawn per batch), one block
+    /// per worker, each with its own [`Scratch`] reused across its
+    /// samples; a batch of one instead spends the budget inside the
+    /// layer kernels. Output is bit-identical for every `threads`
+    /// (rust/tests/parallel.rs).
     pub fn forward_batch_with(&self, x: &TensorF, threads: usize) -> TensorF {
         let b = x.shape()[0];
         let per = self.embed.n_mfcc * self.frames;
@@ -258,7 +300,7 @@ impl FqKwsNet {
         let threads = threads.max(1);
         if b == 1 {
             let mut s = Scratch::default();
-            out.copy_from_slice(&self.forward_with(x.data(), &mut s, threads));
+            self.forward_into(x.data(), &mut s, &mut out, threads);
         } else if threads == 1 {
             let mut s = Scratch::default();
             self.forward_rows(x.data(), &mut s, &mut out);
@@ -284,15 +326,24 @@ impl FqKwsNet {
         (l.mid, l.next)
     }
 
-    /// Dense head on pooled features.
-    pub fn head_logits(&self, pooled: &[f32]) -> Vec<f32> {
-        let mut logits = self.head_b.clone();
-        for k in 0..self.filters {
+    /// Dense head on pooled features, into a caller-owned buffer (the
+    /// hot path routes this through [`Scratch`] so no per-sample `Vec`
+    /// is allocated — including no clone of the bias row).
+    pub fn head_logits_into(&self, pooled: &[f32], logits: &mut [f32]) {
+        debug_assert_eq!(pooled.len(), self.filters);
+        logits.copy_from_slice(&self.head_b);
+        for (k, &p) in pooled.iter().enumerate() {
             let w = &self.head_w[k * self.classes..(k + 1) * self.classes];
-            for (j, l) in logits.iter_mut().enumerate() {
-                *l += pooled[k] * w[j];
+            for (l, &wj) in logits.iter_mut().zip(w) {
+                *l += p * wj;
             }
         }
+    }
+
+    /// Allocating convenience wrapper over [`FqKwsNet::head_logits_into`].
+    pub fn head_logits(&self, pooled: &[f32]) -> Vec<f32> {
+        let mut logits = vec![0f32; self.classes];
+        self.head_logits_into(pooled, &mut logits);
         logits
     }
 

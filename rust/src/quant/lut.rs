@@ -11,20 +11,40 @@
 //! The paper observes this scale "is not needed for active computation as
 //! long as the hardware-supported quantization ... puts the integer-valued
 //! sum into the correct integer-valued quantized bin". We implement that
-//! hardware bin mapper as a threshold table: since `code(acc)` is
-//! monotone non-decreasing in `acc`, the mapping is fully described by at
-//! most (range of codes) threshold integers. Thresholds are found by
-//! binary search against the *f32 reference formula*, so the LUT agrees
-//! with the XLA artifact bit-for-bit for every in-range accumulator —
-//! including ties-to-even edge cases (verified by property test).
+//! hardware bin mapper two ways:
+//!
+//! * a **dense direct-index table**: one i16 code per in-range
+//!   accumulator value, built whenever the accumulator span fits
+//!   [`DENSE_TABLE_MAX`] entries. `apply` is then a single branchless
+//!   bounded load — no search at all. For the conv layers the span is
+//!   `kdim * amax * nw` (a few thousand for the KWS shapes), so this is
+//!   the path the inference engine always takes.
+//! * a **threshold table** fallback: since `code(acc)` is monotone
+//!   non-decreasing in `acc`, the mapping is fully described by at most
+//!   (range of codes) threshold integers, found by binary search against
+//!   the f32 reference formula, and applied by `partition_point`.
+//!
+//! Both agree with the XLA artifact bit-for-bit for every in-range
+//! accumulator — including ties-to-even edge cases (verified by the
+//! property tests in rust/tests/properties.rs, which sweep the dense
+//! table against [`RequantLut::reference_code`] exactly).
 
 use super::QParams;
+
+/// Largest accumulator span (`acc_max - acc_min + 1`) for which the
+/// dense direct-index table is built: 2^17 entries = 256 KiB of i16 —
+/// comfortably cache-resident per layer, and far above every KWS shape
+/// (`kdim * amax * nw` ~ 1e3..1e4).
+pub const DENSE_TABLE_MAX: i64 = 1 << 17;
 
 /// Threshold-table requantizer: integer accumulator -> integer output code.
 #[derive(Clone, Debug)]
 pub struct RequantLut {
     /// thresholds[k] = smallest acc whose code is codes_min + k + 1
     thresholds: Vec<i64>,
+    /// dense direct-index table: `table[acc - acc_min]` = output code
+    /// (present iff the span fits [`DENSE_TABLE_MAX`])
+    table: Vec<i16>,
     code_min: i32,
     code_max: i32,
     pub acc_min: i64,
@@ -86,6 +106,9 @@ impl RequantLut {
         assert!(f > 0.0);
         assert!(acc_min <= acc_max);
         let (code_min, code_max) = out.code_range();
+        // threshold table (kept even when the dense table exists: it is
+        // the fallback for out-of-cap ranges and the oracle the tests
+        // cross-check the dense table against)
         let mut thresholds = Vec::with_capacity((code_max - code_min) as usize);
         for target in code_min + 1..=code_max {
             // smallest acc in [acc_min, acc_max+1] with code(acc) >= target
@@ -100,13 +123,52 @@ impl RequantLut {
             }
             thresholds.push(lo);
         }
-        RequantLut { thresholds, code_min, code_max, acc_min, acc_max, f, out }
+        // dense direct-index table when the span is small enough
+        let span = acc_max - acc_min + 1;
+        let dense_ok =
+            span <= DENSE_TABLE_MAX && code_min >= i16::MIN as i32 && code_max <= i16::MAX as i32;
+        let table = if dense_ok {
+            (acc_min..=acc_max).map(|acc| eval(acc) as i16).collect()
+        } else {
+            Vec::new()
+        };
+        RequantLut { thresholds, table, code_min, code_max, acc_min, acc_max, f, out }
     }
 
-    /// Map an accumulator to its output code. O(log levels).
+    /// True when the branchless dense table is active.
+    #[inline]
+    pub fn is_dense(&self) -> bool {
+        !self.table.is_empty()
+    }
+
+    /// The dense table and its base accumulator, for callers that want
+    /// to hoist the lookup into their own fused loop:
+    /// `code = table[(acc.clamp(acc_min, acc_max) - base) as usize]`.
+    #[inline]
+    pub fn dense_table(&self) -> Option<(&[i16], i64)> {
+        if self.table.is_empty() {
+            None
+        } else {
+            Some((&self.table, self.acc_min))
+        }
+    }
+
+    /// Map an accumulator to its output code: a single bounded load on
+    /// the dense path, O(log levels) on the threshold fallback.
     #[inline]
     pub fn apply(&self, acc: i64) -> i32 {
         debug_assert!(acc >= self.acc_min && acc <= self.acc_max, "acc {acc} out of LUT range");
+        if !self.table.is_empty() {
+            let idx = (acc.clamp(self.acc_min, self.acc_max) - self.acc_min) as usize;
+            return self.table[idx] as i32;
+        }
+        self.apply_search(acc)
+    }
+
+    /// The threshold-table path, regardless of whether the dense table
+    /// exists (exposed so tests can cross-check the two).
+    #[inline]
+    pub fn apply_search(&self, acc: i64) -> i32 {
         // partition_point: number of thresholds <= acc
         let k = self.thresholds.partition_point(|&t| t <= acc);
         self.code_min + k as i32
@@ -132,6 +194,11 @@ mod tests {
                 lut.apply(acc),
                 RequantLut::reference_code(acc, f, &out),
                 "acc={acc} f={f} out={out:?}"
+            );
+            assert_eq!(
+                lut.apply_search(acc),
+                lut.apply(acc),
+                "dense/threshold disagree at acc={acc}"
             );
         }
     }
@@ -166,5 +233,44 @@ mod tests {
         let out = QParams::new(1.0, 7.0, -1.0);
         let lut = RequantLut::build(0.05, out, -1000, 1000);
         assert_eq!(lut.num_thresholds(), 14); // codes -7..=7 -> 14 boundaries
+    }
+
+    #[test]
+    fn small_ranges_take_the_dense_path() {
+        let out = QParams::new(1.0, 7.0, 0.0);
+        let lut = RequantLut::build(0.01, out, -5000, 5000);
+        assert!(lut.is_dense());
+        let (tbl, base) = lut.dense_table().unwrap();
+        assert_eq!(tbl.len() as i64, 10001);
+        assert_eq!(base, -5000);
+    }
+
+    #[test]
+    fn huge_ranges_fall_back_to_thresholds() {
+        let out = QParams::new(1.0, 7.0, 0.0);
+        let span = DENSE_TABLE_MAX + 10;
+        let lut = RequantLut::build(1e-6, out, -span / 2, span / 2);
+        assert!(!lut.is_dense());
+        assert!(lut.dense_table().is_none());
+        // the threshold path still answers correctly at the edges
+        for acc in [-span / 2, -1, 0, 1, span / 2] {
+            assert_eq!(lut.apply(acc), RequantLut::reference_code(acc, 1e-6, &out));
+        }
+    }
+
+    #[test]
+    fn composed_dense_matches_composed_reference() {
+        let mid = QParams::new(0.8, 7.0, 0.0);
+        let next = QParams::new(1.1, 7.0, 0.0);
+        let f = 0.004f32;
+        let lut = RequantLut::build_composed(f, mid, next, -700, 700);
+        assert!(lut.is_dense());
+        for acc in -700..=700 {
+            assert_eq!(
+                lut.apply(acc),
+                RequantLut::reference_code_composed(acc, f, &mid, &next),
+                "acc={acc}"
+            );
+        }
     }
 }

@@ -32,6 +32,12 @@
 //! Backends: the native integer engine ([`NativeBackend`], per-sample,
 //! batch-size-free) or the XLA deployment artifact ([`XlaBackend`],
 //! fixed-batch with padding). Both are measured in `benches/perf_serve.rs`.
+//!
+//! Hot-path allocation discipline: each worker stages batch features in
+//! one recycled buffer and the native backend routes logits through its
+//! reusable [`Scratch`], so steady-state serving performs no per-sample
+//! heap allocation; batch-level data parallelism inside the engine runs
+//! on the persistent [`crate::exec::Pool`] (no thread spawn per batch).
 
 pub mod batcher;
 
@@ -494,14 +500,20 @@ fn worker_loop(
     let _guard = RetireGuard { slot, alive, queue };
     let mut backend = factory();
     let mut my_errors = 0u64;
+    // batch feature staging buffer, recycled across batches (the tensor
+    // hands the allocation back via into_vec after each infer call)
+    let mut flat: Vec<f32> = Vec::new();
     while let Some(mut qb) = queue.pop() {
         let b = qb.reqs.len();
-        let mut flat = Vec::with_capacity(b * sample_numel);
+        flat.clear();
+        flat.reserve(b * sample_numel);
         for r in &qb.reqs {
             flat.extend_from_slice(&r.features);
         }
-        let x = TensorF::from_vec(&[b, sample_numel], flat);
-        match backend.infer(&x) {
+        let x = TensorF::from_vec(&[b, sample_numel], std::mem::take(&mut flat));
+        let result = backend.infer(&x);
+        flat = x.into_vec();
+        match result {
             Ok(logits) => {
                 my_errors = 0; // the error budget is for *consecutive* failures
                 // count the batch BEFORE replying: stats() may be read

@@ -6,6 +6,7 @@
 use std::sync::Arc;
 
 use fqconv::data::{self, Dataset as _};
+use fqconv::exec;
 use fqconv::infer::pipeline::{global_avg_pool, Scratch};
 use fqconv::infer::FqKwsNet;
 use fqconv::quant::QParams;
@@ -78,6 +79,45 @@ fn serve_path_bit_identical_at_every_worker_count() {
             reference = Some(logits);
         }
     }
+}
+
+#[test]
+fn pool_and_scoped_fork_join_agree_on_the_net() {
+    // the persistent pool replaced scoped spawning behind par_rows_mut;
+    // both fork-join substrates must produce identical logits
+    let net = FqKwsNet::synthetic(1.0, 7.0, 21).expect("synthetic net");
+    let b = 9usize;
+    let x = synthetic_batch(net.frames, b);
+    let want = net.forward_batch_with(&x, 4); // persistent pool
+    let per = x.data().len() / b;
+    let mut out = vec![0f32; b * net.classes];
+    exec::par_rows_mut_scoped(&mut out, b, net.classes, 4, |rows, window| {
+        let mut s = Scratch::default();
+        net.forward_rows(&x.data()[rows.start * per..rows.end * per], &mut s, window);
+    });
+    assert_eq!(want.data(), &out[..], "pool vs scoped fork-join diverged");
+}
+
+#[test]
+fn concurrent_batch_calls_share_the_global_pool() {
+    // several OS threads hammer forward_batch_with at once: the global
+    // pool serializes forks internally and every caller still gets the
+    // bit-exact sequential answer
+    let net = Arc::new(FqKwsNet::synthetic(1.0, 7.0, 5).expect("synthetic net"));
+    let x = synthetic_batch(net.frames, 8);
+    let want = net.forward_batch_with(&x, 1);
+    std::thread::scope(|sc| {
+        for _ in 0..4 {
+            let net = Arc::clone(&net);
+            let (x, want) = (&x, &want);
+            sc.spawn(move || {
+                for threads in [2usize, 4, 8] {
+                    let got = net.forward_batch_with(x, threads);
+                    assert_eq!(got.data(), want.data(), "threads={threads}");
+                }
+            });
+        }
+    });
 }
 
 #[test]

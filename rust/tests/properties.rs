@@ -118,6 +118,76 @@ fn lut_agrees_with_float_reference_everywhere() {
 }
 
 #[test]
+fn dense_requant_table_matches_reference_exactly() {
+    // random (f, QParams, acc range): the branchless direct-index table
+    // must reproduce the float reference for EVERY in-range accumulator
+    // (including ties-to-even edges — the sweep probes each value), and
+    // must agree with the threshold-search fallback everywhere.
+    check(
+        "requant-dense-table",
+        40,
+        |g, size| {
+            let f = g.f32_in(0.0005, 0.05);
+            let es = g.f32_in(0.2, 3.0);
+            let nb = *g.choice(&[2u32, 3, 4, 5, 8]);
+            let b = *g.choice(&[-1.0f32, 0.0]);
+            let range = g.sized_usize(size, 4000) as i64 + 50;
+            (f, es, nb, b, range)
+        },
+        |&(f, es, nb, b, range)| {
+            let out = QParams::new(es, n_levels(nb) as f32, b);
+            let lut = RequantLut::build(f, out, -range, range);
+            if !lut.is_dense() {
+                return Err(format!("range {range} small enough but no dense table"));
+            }
+            for acc in -range..=range {
+                let want = RequantLut::reference_code(acc, f, &out);
+                let got = lut.apply(acc);
+                if got != want {
+                    return Err(format!("acc={acc}: dense={got} ref={want}"));
+                }
+                let search = lut.apply_search(acc);
+                if search != got {
+                    return Err(format!("acc={acc}: dense={got} thresholds={search}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dense_composed_table_matches_double_rounding_exactly() {
+    check(
+        "requant-dense-composed",
+        25,
+        |g, size| {
+            let f = g.f32_in(0.001, 0.05);
+            let es1 = g.f32_in(0.3, 2.0);
+            let es2 = g.f32_in(0.3, 2.0);
+            let n = n_levels(*g.choice(&[3u32, 4])) as f32;
+            let range = g.sized_usize(size, 2500) as i64 + 50;
+            (f, es1, es2, n, range)
+        },
+        |&(f, es1, es2, n, range)| {
+            let mid = QParams::new(es1, n, 0.0);
+            let next = QParams::new(es2, n, 0.0);
+            let lut = RequantLut::build_composed(f, mid, next, -range, range);
+            if !lut.is_dense() {
+                return Err("expected dense table".into());
+            }
+            for acc in -range..=range {
+                let want = RequantLut::reference_code_composed(acc, f, &mid, &next);
+                if lut.apply(acc) != want {
+                    return Err(format!("acc={acc}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn composed_lut_matches_double_rounding() {
     check(
         "lut-composed",
