@@ -22,7 +22,7 @@ use fqconv::coordinator::{checkpoint, ParamSet, Pipeline, Schedule};
 use fqconv::data::{self, Dataset as _};
 use fqconv::infer::FqKwsNet;
 use fqconv::runtime::{Engine, Manifest};
-use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server};
+use fqconv::serve::{BatchPolicy, NativeBackend, Server};
 use fqconv::util::{Rng, Timer};
 
 fn main() -> anyhow::Result<()> {
@@ -64,9 +64,9 @@ fn main() -> anyhow::Result<()> {
     let net = std::sync::Arc::new(FqKwsNet::from_params(&params, 1.0, 7.0, frames)?);
     println!(
         "integer engine: {} ternary layers, {:.2}M int-MACs/sample, mean weight sparsity {:.1}%",
-        net.layers.len(),
+        net.layers().len(),
         net.macs_per_sample() as f64 / 1e6,
-        net.layers.iter().map(|l| l.sparsity()).sum::<f64>() / net.layers.len() as f64 * 100.0
+        net.layers().iter().map(|l| l.sparsity()).sum::<f64>() / net.layers().len() as f64 * 100.0
     );
     // integer accuracy over the validation set
     let mut correct = 0;
@@ -96,11 +96,10 @@ fn main() -> anyhow::Result<()> {
 
     // --- 5. serving ---------------------------------------------------------
     let workers = 2;
-    let factories = (0..workers)
-        .map(|_| ready(NativeBackend::new(net.clone(), info.input_shape.clone())))
-        .collect();
-    let server = Server::start_with(
-        factories,
+    let factory = NativeBackend::factory(&net, &info.input_shape);
+    let server = Server::start(
+        factory,
+        workers,
         info.input_shape.iter().product(),
         BatchPolicy::new(16, 2000),
     );
@@ -114,7 +113,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     for rx in rxs {
-        rx.recv().expect("response");
+        rx.recv().expect("response").expect("serving ok");
     }
     let dt = t.elapsed_s();
     let stats = server.stats();

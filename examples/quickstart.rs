@@ -67,8 +67,8 @@ fn main() -> anyhow::Result<()> {
     let net = FqKwsNet::from_params(&fq_params, 1.0, 7.0, info.input_shape[1])?;
     println!(
         "\n[deploy] integer engine: {} layers, all ternary: {}, {:.2}M int-MACs/sample",
-        net.layers.len(),
-        net.layers.iter().all(|l| l.is_ternary()),
+        net.layers().len(),
+        net.layers().iter().all(|l| l.is_ternary()),
         net.macs_per_sample() as f64 / 1e6
     );
     let mut scratch = Scratch::default();

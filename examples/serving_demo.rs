@@ -12,7 +12,9 @@ use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset};
 use fqconv::infer::FqKwsNet;
 use fqconv::runtime::{hp, Engine, Manifest};
-use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server, XlaBackend};
+use fqconv::serve::{
+    BatchPolicy, ModelId, ModelRegistry, ModelSpec, NativeBackend, Priority, Server, XlaBackend,
+};
 use fqconv::util::{Rng, Timer};
 
 fn drive(server: &Server, ds: &dyn Dataset, n: usize, pace_us: u64) -> (f64, f64, f64) {
@@ -21,13 +23,15 @@ fn drive(server: &Server, ds: &dyn Dataset, n: usize, pace_us: u64) -> (f64, f64
     let mut rxs = Vec::with_capacity(n);
     for i in 0..n {
         let (x, _) = ds.sample(i as u64 % data::VAL_SIZE, Some(&mut rng));
-        rxs.push(server.submit(x));
+        // every 4th request rides the Batch lane to exercise priorities
+        let prio = if i % 4 == 3 { Priority::Batch } else { Priority::Interactive };
+        rxs.push(server.submit_with(x, prio, None));
         if pace_us > 0 {
             std::thread::sleep(std::time::Duration::from_micros(pace_us));
         }
     }
     for rx in rxs {
-        rx.recv().expect("response");
+        rx.recv().expect("response").expect("serving ok");
     }
     let dt = t.elapsed_s();
     let stats = server.stats();
@@ -75,10 +79,8 @@ fn main() -> anyhow::Result<()> {
         "policy", "req/s", "p50(us)", "p99(us)"
     );
     for (mb, wait) in [(1, 0u64), (8, 1000), (16, 2000), (32, 4000)] {
-        let factories = (0..2)
-            .map(|_| ready(NativeBackend::new(net.clone(), shape.clone())))
-            .collect();
-        let server = Server::start_with(factories, numel, BatchPolicy::new(mb, wait.max(1)));
+        let policy = BatchPolicy::new(mb, wait.max(1));
+        let server = Server::start(NativeBackend::factory(&net, &shape), 2, numel, policy);
         let (rps, p50, p99) = drive(&server, ds.as_ref(), n_req, 50);
         println!(
             "{:<26} {:>10.0} {:>10.0} {:>10.0}",
@@ -93,16 +95,62 @@ fn main() -> anyhow::Result<()> {
     println!("\n== pool-size sweep (shared queue, max_batch=16) ==");
     println!("{:<10} {:>10}  per-worker (batches, served)", "workers", "req/s");
     for workers in [1usize, 2, 4] {
-        let factories = (0..workers)
-            .map(|_| ready(NativeBackend::new(net.clone(), shape.clone())))
-            .collect();
-        let server = Server::start_with(factories, numel, BatchPolicy::new(16, 2000));
+        let policy = BatchPolicy::new(16, 2000);
+        let server = Server::start(NativeBackend::factory(&net, &shape), workers, numel, policy);
         let (rps, _, _) = drive(&server, ds.as_ref(), n_req, 0);
         let stats = server.stats();
         let per: Vec<(u64, u64)> = stats.workers.iter().map(|w| (w.batches, w.served)).collect();
         println!("{workers:<10} {rps:>10.0}  {per:?}");
         server.shutdown();
     }
+
+    println!("\n== multi-model registry: two nets, one shared worker pool ==");
+    let registry = ModelRegistry::start(2);
+    let fast = std::sync::Arc::new(FqKwsNet::synthetic(1.0, 7.0, 21)?);
+    registry.register(
+        "kws-w2",
+        ModelSpec {
+            factory: NativeBackend::factory(&net, &shape),
+            sample_numel: numel,
+            policy: BatchPolicy::new(16, 2000),
+        },
+    )?;
+    registry.register(
+        "kws-w2-alt",
+        ModelSpec {
+            factory: NativeBackend::factory(&fast, &shape),
+            sample_numel: numel,
+            policy: BatchPolicy::new(4, 500),
+        },
+    )?;
+    let (id_a, id_b) = (ModelId::new("kws-w2"), ModelId::new("kws-w2-alt"));
+    let mut rng = Rng::new(11);
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let (x, _) = ds.sample(i as u64 % data::VAL_SIZE, Some(&mut rng));
+        let id = if i % 3 == 0 { &id_b } else { &id_a };
+        let prio = if i % 5 == 0 { Priority::Batch } else { Priority::Interactive };
+        rxs.push(registry.submit_with(id, x, prio, None).expect("registered"));
+    }
+    for rx in rxs {
+        rx.recv().expect("response").expect("serving ok");
+    }
+    for m in registry.stats().models {
+        println!(
+            "model {:<10} served={:<4} meanB={:.1} p50={:.0}us p99={:.0}us \
+             (interactive {} / batch {})",
+            m.id.as_str(),
+            m.served,
+            m.mean_batch,
+            m.p50_us,
+            m.p99_us,
+            m.priorities[Priority::Interactive.index()].served,
+            m.priorities[Priority::Batch.index()].served,
+        );
+    }
+    registry.evict(&id_b);
+    println!("evicted {} — remaining models: {:?}", id_b, registry.model_ids());
+    registry.shutdown();
 
     match (&runtime, params_for_xla) {
         (Some((manifest, _)), Some(params)) => {
@@ -118,15 +166,15 @@ fn main() -> anyhow::Result<()> {
             hpv[hp::NW] = 1.0;
             hpv[hp::NA] = 7.0;
             let artifact = info.artifact_path(&dir, "fq_fwd")?;
-            let factories = vec![XlaBackend::factory(
+            let factory = XlaBackend::factory(
                 artifact,
                 host_params,
                 hpv,
                 info.batch,
                 info.num_classes,
                 info.input_shape.clone(),
-            )];
-            let server = Server::start_with(factories, numel, BatchPolicy::new(info.batch, 3000));
+            );
+            let server = Server::start(factory, 1, numel, BatchPolicy::new(info.batch, 3000));
             let (rps, p50, p99) = drive(&server, ds.as_ref(), n_req, 50);
             println!("req/s {rps:.0}   p50 {p50:.0}us   p99 {p99:.0}us");
             server.shutdown();

@@ -21,6 +21,7 @@ use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset};
 use fqconv::exec;
 use fqconv::infer::gemm::{gemm_i8, gemm_i8_mt, gemm_packed, transpose, PackedB, TernaryMatrix};
+use fqconv::infer::graph::{synthetic_graph, SynthArch};
 use fqconv::infer::pipeline::Scratch;
 use fqconv::infer::FqKwsNet;
 use fqconv::tensor::TensorF;
@@ -188,6 +189,36 @@ fn small_batch_section(net: &FqKwsNet, threads: usize) -> Json {
     Json::Arr(records)
 }
 
+/// Second architecture on the graph API: the deeper/wider synthetic net
+/// (10 layers, 48 channels, dilations to 16) — pins that the composable
+/// engine carries non-KWS stacks at full kernel speed.
+fn graph_arch_section(threads: usize, iters: usize) -> Json {
+    println!("\n--- second architecture (QuantGraph deep-wide) ---");
+    let g = synthetic_graph(&SynthArch::deep_wide(), 1.0, 7.0, 7).expect("deep-wide graph");
+    let mut rng = Rng::new(2);
+    let mut x = vec![0f32; g.in_numel()];
+    rng.fill_gaussian(&mut x, 1.0);
+    let macs = g.macs_per_sample() as f64;
+    let mut scratch = fqconv::infer::graph::Scratch::for_graph(&g);
+    let seq = bench("deep-wide forward (1 sample, 1 thread)", 3, iters, || {
+        std::hint::black_box(g.forward(&x, &mut scratch));
+    });
+    report(&seq, macs, "GMAC/s");
+    let mut logits = vec![0f32; g.classes()];
+    let par = bench(&format!("deep-wide forward (1 sample, x{threads})"), 3, iters, || {
+        g.forward_into(&x, &mut scratch, &mut logits, threads);
+        std::hint::black_box(&logits);
+    });
+    report(&par, macs, "GMAC/s");
+    obj(vec![
+        ("arch", s("deep-wide")),
+        ("macs_per_sample", num(macs)),
+        ("samples_per_sec_1t", num(1.0 / seq.median_s)),
+        ("samples_per_sec_mt", num(1.0 / par.median_s)),
+        ("intra_layer_speedup", num(seq.median_s / par.median_s.max(1e-12))),
+    ])
+}
+
 fn main() {
     banner("perf_infer — integer engine hot paths");
     let threads = exec::default_threads();
@@ -205,6 +236,7 @@ fn main() {
             small_batch_json = small_batch_section(&net, threads);
         }
     }
+    let graph_json = graph_arch_section(threads, iters);
 
     let out = obj(vec![
         ("bench", s("perf_infer")),
@@ -213,6 +245,7 @@ fn main() {
         ("gemm", gemm_json),
         ("nets", Json::Arr(nets_json)),
         ("small_batch_pool_vs_scoped", small_batch_json),
+        ("graph_arch", graph_json),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_infer.json");
     match std::fs::write(path, out.to_string() + "\n") {

@@ -1,20 +1,24 @@
 //! Perf: serving layer — throughput/latency across batching policies and
-//! worker counts under open-loop load, over the shared work queue. Feeds
-//! EXPERIMENTS.md §Perf (target: p99 < 5 ms at the default policy on the
-//! KWS net). Falls back to a synthetic network offline.
+//! worker counts under open-loop load, over the shared two-lane work
+//! queue, plus a mixed-priority paced section. Feeds EXPERIMENTS.md
+//! §Perf (target: p99 < 5 ms at the default policy on the KWS net).
+//! Falls back to a synthetic network offline.
 //!
 //! Emits a machine-readable `BENCH_serve.json` at the repository root
-//! (req/s, p50/p99 latency, mean batch size per configuration) so the
+//! (req/s, p50/p99 latency, mean batch size per configuration, and
+//! per-priority p50/p99 from the mixed-priority run) so the
 //! serving-perf trajectory is tracked across PRs.
 //! `FQCONV_BENCH_SMOKE=1` shrinks the load to one short iteration.
 #[path = "common.rs"]
 mod common;
 
+use std::sync::Arc;
+
 use fqconv::bench::banner;
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset as _};
 use fqconv::infer::FqKwsNet;
-use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server};
+use fqconv::serve::{BatchPolicy, NativeBackend, Priority, Server};
 use fqconv::util::json::{num, obj, s, Json};
 use fqconv::util::{Rng, Timer};
 
@@ -23,7 +27,7 @@ fn smoke() -> bool {
 }
 
 fn main() {
-    banner("perf_serve — router + dynamic batcher (shared work queue)");
+    banner("perf_serve — registry + dynamic batcher (two-lane shared queue)");
     // trained FQ parameters when the runtime is present, synthetic net
     // otherwise (identical serving mechanics either way)
     let net = match common::try_setup() {
@@ -34,13 +38,11 @@ fn main() {
                 .unwrap();
             let fq_graph = info.fq.clone().unwrap();
             let params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
-            std::sync::Arc::new(
-                FqKwsNet::from_params(&params, 1.0, 7.0, info.input_shape[1]).unwrap(),
-            )
+            Arc::new(FqKwsNet::from_params(&params, 1.0, 7.0, info.input_shape[1]).unwrap())
         }
         None => {
             println!("(artifacts unavailable — serving the synthetic KWS net)");
-            std::sync::Arc::new(FqKwsNet::synthetic(1.0, 7.0, 7).expect("synthetic net"))
+            Arc::new(FqKwsNet::synthetic(1.0, 7.0, 7).expect("synthetic net"))
         }
     };
     let shape = vec![39usize, net.frames];
@@ -63,14 +65,13 @@ fn main() {
     let mut sweep_json = Vec::new();
     for workers in [1usize, 2, 4] {
         for (mb, wait) in [(1usize, 1u64), (16, 2000), (32, 4000)] {
-            let factories = (0..workers)
-                .map(|_| ready(NativeBackend::new(net.clone(), shape.clone())))
-                .collect();
-            let server = Server::start_with(factories, numel, BatchPolicy::new(mb, wait));
+            let policy = BatchPolicy::new(mb, wait);
+            let factory = NativeBackend::factory(&net, &shape);
+            let server = Server::start(factory, workers, numel, policy);
             let timer = Timer::start();
             let rxs: Vec<_> = feats.iter().map(|f| server.submit(f.clone())).collect();
             for rx in rxs {
-                rx.recv().unwrap();
+                rx.recv().unwrap().unwrap();
             }
             let dt = timer.elapsed_s();
             let stats = server.stats();
@@ -99,17 +100,15 @@ fn main() {
     }
 
     // paced run: ~1000 req/s offered vs saturation capacity
-    let factories = (0..1)
-        .map(|_| ready(NativeBackend::new(net.clone(), shape.clone())))
-        .collect();
-    let server = Server::start_with(factories, numel, BatchPolicy::new(8, 1000));
+    let server =
+        Server::start(NativeBackend::factory(&net, &shape), 1, numel, BatchPolicy::new(8, 1000));
     let mut rxs = Vec::new();
     for f in feats.iter() {
         rxs.push(server.submit(f.clone()));
         std::thread::sleep(std::time::Duration::from_micros(1000));
     }
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let stats = server.stats();
     println!(
@@ -118,6 +117,36 @@ fn main() {
     );
     server.shutdown();
 
+    // mixed-priority paced run: 3:1 Interactive:Batch — the per-priority
+    // p50/p99 split is the headline observability for priority classes
+    let server =
+        Server::start(NativeBackend::factory(&net, &shape), 2, numel, BatchPolicy::new(8, 1000));
+    let mut rxs = Vec::new();
+    for (i, f) in feats.iter().enumerate() {
+        let prio = if i % 4 == 3 { Priority::Batch } else { Priority::Interactive };
+        rxs.push(server.submit_with(f.clone(), prio, None));
+        std::thread::sleep(std::time::Duration::from_micros(800));
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let mixed = server.stats();
+    let pi = &mixed.priorities[Priority::Interactive.index()];
+    let pb = &mixed.priorities[Priority::Batch.index()];
+    println!(
+        "mixed-priority paced:  interactive p50 {:.0}us p99 {:.0}us ({} served) | \
+         batch p50 {:.0}us p99 {:.0}us ({} served)",
+        pi.p50_us, pi.p99_us, pi.served, pb.p50_us, pb.p99_us, pb.served
+    );
+    server.shutdown();
+
+    let prio_json = |p: &fqconv::serve::PriorityStats| {
+        obj(vec![
+            ("served", num(p.served as f64)),
+            ("p50_us", num(p.p50_us)),
+            ("p99_us", num(p.p99_us)),
+        ])
+    };
     let out = obj(vec![
         ("bench", s("perf_serve")),
         ("smoke", Json::Bool(smoke())),
@@ -129,6 +158,14 @@ fn main() {
                 ("p50_us", num(stats.p50_us)),
                 ("p99_us", num(stats.p99_us)),
                 ("mean_batch", num(stats.mean_batch)),
+            ]),
+        ),
+        (
+            "per_priority",
+            obj(vec![
+                ("interactive", prio_json(pi)),
+                ("batch", prio_json(pb)),
+                ("expired", num(mixed.expired as f64)),
             ]),
         ),
     ]);

@@ -69,7 +69,7 @@ impl CrossbarKws {
     pub fn new(params: &ParamSet, nw: f32, na: f32, frames: usize) -> Result<Self> {
         let net = FqKwsNet::from_params(params, nw, na, frames)?;
         let mut wcodes = Vec::new();
-        for (i, l) in net.layers.iter().enumerate() {
+        for (i, l) in net.layers().iter().enumerate() {
             let w = params.get(&format!("conv{i}.w")).unwrap();
             let kdim = l.c_in * l.ksize;
             let mut codes = vec![0f32; kdim * l.c_out];
@@ -100,7 +100,7 @@ impl CrossbarKws {
         let t_in = net.frames;
         // --- digital front end: embedding + input quantization -----------
         let (dim, n_mfcc, ew, scale, shift, es) = net.embed_view();
-        let qa0 = net.layers[0].qa;
+        let qa0 = net.layers()[0].qa;
         let mut codes = vec![0f64; dim * t_in];
         for k in 0..dim {
             for t in 0..t_in {
@@ -115,7 +115,7 @@ impl CrossbarKws {
         }
         // --- analog crossbar layers ---------------------------------------
         let mut t_cur = t_in;
-        for (li, l) in net.layers.iter().enumerate() {
+        for (li, l) in net.layers().iter().enumerate() {
             let t_out = l.t_out(t_cur);
             // DAC noise on activation codes
             let acts: Vec<f64> = codes
@@ -157,7 +157,7 @@ impl CrossbarKws {
             t_cur = t_out;
         }
         // --- digital back end: GAP + head ----------------------------------
-        let last = net.layers.last().unwrap();
+        let last = net.layers().last().unwrap();
         let dq = last.lut.out;
         let mut pooled = vec![0f32; net.filters];
         for (k, p) in pooled.iter_mut().enumerate() {

@@ -347,6 +347,14 @@ impl QuantConv1d {
         }
     }
 
+    /// The grid this layer's output codes live on: the next layer's
+    /// input grid when fused, else the layer's own output quantizer.
+    /// Graph builders hand this to the pooling stage so the final codes
+    /// are dequantized on exactly the grid the kernels emitted.
+    pub fn out_grid(&self) -> QParams {
+        self.lut.out
+    }
+
     pub fn is_ternary(&self) -> bool {
         matches!(self.weights, WeightKind::Ternary(_))
     }

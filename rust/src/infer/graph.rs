@@ -1,0 +1,667 @@
+//! Composable quantized model graph — the engine's architecture seam.
+//!
+//! The paper's deployment pipeline (full-precision embedding → integer
+//! FQ-Conv stack → higher-precision global average pooling → dense head)
+//! used to be hardwired into one monolithic network struct. Survey work
+//! on integer inference (Krishnamoorthi 2018; Nagel et al. 2021) frames
+//! a quantized model instead as a *graph of requantizing ops with
+//! per-tensor scale metadata*; this module is that abstraction:
+//!
+//! * [`QuantStage`] — the typed stages a fully-quantized network is
+//!   composed of: [`FpEmbed`] (f32 features → input codes),
+//!   [`FqConvStack`] (integer codes → integer codes, ping-pong),
+//!   [`GlobalAvgPool`] (codes → f32 features, i64 higher-precision sum)
+//!   and [`DenseHead`] (f32 features → logits).
+//! * [`QuantGraph`] — owns stage sequencing, shape/grid validation,
+//!   ping-pong code-buffer planning and scratch sizing, and exposes an
+//!   allocation-free [`QuantGraph::forward_into`]. Every architecture
+//!   the paper evaluates (the KWS TCN, ResNet-32, DarkNet-19) is a
+//!   different stage list over the same bit-exact kernels.
+//!
+//! [`crate::infer::FqKwsNet`] is now a thin constructor facade over a
+//! `QuantGraph`; [`synthetic_graph`] instantiates arbitrary
+//! [`SynthArch`] descriptions (including a deeper/wider second
+//! architecture, [`SynthArch::deep_wide`]) on the same API, which is how
+//! rust/tests/graph.rs proves the graph generalizes beyond KWS.
+//!
+//! **Determinism contract:** stage bodies are the exact loops the
+//! monolithic pipeline ran — same float accumulation order, same integer
+//! instruction sequence — so a graph-built network is bit-identical to
+//! the pre-refactor pipeline at every thread count (rust/tests/graph.rs,
+//! rust/tests/parallel.rs).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::quant::{learned_quantize, QParams};
+use crate::util::Rng;
+
+use super::conv::QuantConv1d;
+
+// ---------------------------------------------------------------------------
+// Scratch
+// ---------------------------------------------------------------------------
+
+/// Reusable per-thread scratch buffers (the hot path is allocation-free
+/// in steady state). Each worker of a data-parallel batch owns one.
+/// [`Scratch::for_graph`] pre-sizes every buffer from the graph's plan
+/// so even the *first* forward allocates nothing.
+#[derive(Default)]
+pub struct Scratch {
+    /// i32 conv accumulators, (c_out, t_out) of the current layer
+    pub(crate) acc: Vec<i32>,
+    /// ping-pong i8 code buffers
+    pub(crate) a: Vec<i8>,
+    pub(crate) b: Vec<i8>,
+    /// float accumulator row for the embedding's streaming dot products
+    pub(crate) fa: Vec<f32>,
+    /// pooled features, reused so the GAP + head path never allocates
+    pub(crate) pooled: Vec<f32>,
+}
+
+impl Scratch {
+    /// Scratch with every buffer pre-reserved to the graph's plan.
+    pub fn for_graph(g: &QuantGraph) -> Self {
+        let p = &g.plan;
+        Scratch {
+            acc: Vec::with_capacity(p.acc),
+            a: Vec::with_capacity(p.codes),
+            b: Vec::with_capacity(p.codes),
+            fa: Vec::with_capacity(p.fa),
+            pooled: Vec::with_capacity(p.pooled),
+        }
+    }
+
+    /// Current buffer capacities `(acc, a, b, fa, pooled)` — lets tests
+    /// pin that a pre-planned scratch never reallocates on the hot path.
+    pub fn capacities(&self) -> (usize, usize, usize, usize, usize) {
+        (
+            self.acc.capacity(),
+            self.a.capacity(),
+            self.b.capacity(),
+            self.fa.capacity(),
+            self.pooled.capacity(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stages
+// ---------------------------------------------------------------------------
+
+/// Full-precision 1x1 embedding + inference-mode (folded) BN + learned
+/// input quantizer: f32 features `(n_in, T)` → i8 codes `(dim, T)` on
+/// the first conv layer's input grid (`out_q`).
+pub struct FpEmbed {
+    /// (dim, n_in) projection weights
+    pub w: Vec<f32>,
+    /// folded eval-mode BN: y = x * scale + shift, per output channel
+    pub scale: Vec<f32>,
+    pub shift: Vec<f32>,
+    /// e^{sa}: the learned input quantizer scale of the quantized stack
+    pub es: f32,
+    /// activation level count of the quantized stack
+    pub na: f32,
+    /// the first conv layer's input grid (codes are emitted on it)
+    pub out_q: QParams,
+    pub n_in: usize,
+    pub dim: usize,
+}
+
+impl FpEmbed {
+    /// Embed one sample into `codes` (resized to `dim * t_in`), using
+    /// `fa` as the reusable float accumulator row.
+    ///
+    /// Streamed as per-channel axpy rows: for each output channel the
+    /// t-axis accumulator row is contiguous and every input row is
+    /// contiguous, so the inner loops vectorize; the per-(k,t) f32
+    /// addition order over c is unchanged from the naive triple loop,
+    /// keeping the embedding bit-identical to the float reference.
+    pub fn forward_into(&self, x: &[f32], t_in: usize, codes: &mut Vec<i8>, fa: &mut Vec<f32>) {
+        debug_assert_eq!(x.len(), self.n_in * t_in);
+        codes.clear();
+        codes.resize(self.dim * t_in, 0);
+        fa.clear();
+        fa.resize(t_in, 0.0);
+        for k in 0..self.dim {
+            let wrow = &self.w[k * self.n_in..(k + 1) * self.n_in];
+            let facc = &mut fa[..t_in];
+            facc.fill(0.0);
+            for (c, &wc) in wrow.iter().enumerate() {
+                let xrow = &x[c * t_in..(c + 1) * t_in];
+                for (av, &xv) in facc.iter_mut().zip(xrow) {
+                    *av += wc * xv;
+                }
+            }
+            let (sc, sh) = (self.scale[k], self.shift[k]);
+            let crow = &mut codes[k * t_in..(k + 1) * t_in];
+            for (o, &av) in crow.iter_mut().zip(facc.iter()) {
+                let bn = av * sc + sh;
+                // two-step: Q_{sa}(b=-1) then the first conv's input bin
+                let q = learned_quantize(bn, self.es, self.na, -1.0);
+                *o = self.out_q.int_code(q) as i8;
+            }
+        }
+    }
+}
+
+/// A run of integer FQ-Conv layers. Codes ping-pong between the two
+/// scratch buffers; each layer re-bins into the next layer's input grid
+/// through its fused requant LUT.
+pub struct FqConvStack {
+    pub layers: Vec<QuantConv1d>,
+}
+
+/// Higher-precision global average pooling: i8 codes `(channels, t)` →
+/// f32 features `(channels,)`, summing in i64 so an arbitrarily long
+/// time axis cannot silently truncate (see [`QParams::dequantize_i64`]).
+pub struct GlobalAvgPool {
+    pub channels: usize,
+    /// the final conv grid the codes live on
+    pub dq: QParams,
+}
+
+/// Full-precision dense classifier head on pooled features.
+pub struct DenseHead {
+    /// (d_in, d_out) weights
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl DenseHead {
+    /// Pooled features → logits, into a caller-owned buffer (the hot
+    /// path routes this through [`Scratch`] so no per-sample `Vec` is
+    /// allocated — including no clone of the bias row).
+    pub fn forward_into(&self, pooled: &[f32], logits: &mut [f32]) {
+        debug_assert_eq!(pooled.len(), self.d_in);
+        debug_assert_eq!(logits.len(), self.d_out);
+        logits.copy_from_slice(&self.b);
+        for (k, &p) in pooled.iter().enumerate() {
+            let w = &self.w[k * self.d_out..(k + 1) * self.d_out];
+            for (l, &wj) in logits.iter_mut().zip(w) {
+                *l += p * wj;
+            }
+        }
+    }
+}
+
+/// One typed stage of a fully-quantized inference graph.
+pub enum QuantStage {
+    FpEmbed(FpEmbed),
+    FqConvStack(FqConvStack),
+    GlobalAvgPool(GlobalAvgPool),
+    DenseHead(DenseHead),
+}
+
+impl QuantStage {
+    fn kind(&self) -> &'static str {
+        match self {
+            QuantStage::FpEmbed(_) => "FpEmbed",
+            QuantStage::FqConvStack(_) => "FqConvStack",
+            QuantStage::GlobalAvgPool(_) => "GlobalAvgPool",
+            QuantStage::DenseHead(_) => "DenseHead",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Higher-precision GAP kernel (stage body, shared with the facade)
+// ---------------------------------------------------------------------------
+
+/// Higher-precision global average pooling over final-grid codes
+/// (channels, t_cur): the sum runs in i64 so an arbitrarily long time
+/// axis cannot silently truncate (an i8-code sum overflows i32 once
+/// t_cur exceeds ~2^24 — see [`QParams::dequantize_i64`]).
+pub fn global_avg_pool_into(
+    codes: &[i8],
+    channels: usize,
+    t_cur: usize,
+    dq: &QParams,
+    pooled: &mut [f32],
+) {
+    debug_assert_eq!(codes.len(), channels * t_cur);
+    debug_assert_eq!(pooled.len(), channels);
+    for (k, p) in pooled.iter_mut().enumerate() {
+        let mut sum = 0i64;
+        for t in 0..t_cur {
+            sum += codes[k * t_cur + t] as i64;
+        }
+        *p = dq.dequantize_i64(sum) / t_cur as f32;
+    }
+}
+
+/// Allocating convenience wrapper over [`global_avg_pool_into`].
+pub fn global_avg_pool(codes: &[i8], channels: usize, t_cur: usize, dq: &QParams) -> Vec<f32> {
+    let mut pooled = vec![0f32; channels];
+    global_avg_pool_into(codes, channels, t_cur, dq, &mut pooled);
+    pooled
+}
+
+// ---------------------------------------------------------------------------
+// Graph
+// ---------------------------------------------------------------------------
+
+/// Peak buffer sizes of one forward pass, computed once at build time so
+/// [`Scratch::for_graph`] can pre-reserve everything.
+#[derive(Clone, Copy, Debug, Default)]
+struct Plan {
+    /// max i8 code-buffer numel at any stage boundary (ping-pong size)
+    codes: usize,
+    /// max i32 accumulator numel across conv layers
+    acc: usize,
+    /// float accumulator row length (embedding)
+    fa: usize,
+    /// pooled feature length
+    pooled: usize,
+}
+
+/// A validated, executable sequence of [`QuantStage`]s.
+///
+/// The accepted stage grammar is `FpEmbed FqConvStack+ GlobalAvgPool
+/// DenseHead` — exactly the paper's fully-quantized deployment shape,
+/// with the conv stack free to be any depth/width/dilation schedule.
+/// Construction validates channel chaining, quantizer-grid consistency
+/// at the pooling boundary, and that the time axis survives every
+/// dilated layer; `forward_into` then runs without any per-call checks
+/// beyond debug asserts.
+pub struct QuantGraph {
+    stages: Vec<QuantStage>,
+    frames: usize,
+    n_in: usize,
+    classes: usize,
+    out_frames: usize,
+    plan: Plan,
+}
+
+impl QuantGraph {
+    /// Validate and seal a stage sequence for inputs of `frames` time
+    /// steps. Errors name the offending stage so mis-assembled
+    /// architectures fail loudly at build time, not silently at inference.
+    pub fn new(stages: Vec<QuantStage>, frames: usize) -> Result<Self> {
+        ensure!(frames >= 1, "graph needs at least one input frame");
+        ensure!(!stages.is_empty(), "empty stage list");
+
+        // --- grammar + shape chaining -----------------------------------
+        let mut it = stages.iter().enumerate().peekable();
+        let (n_in, mut channels) = match it.next() {
+            Some((_, QuantStage::FpEmbed(e))) => {
+                ensure!(e.dim >= 1 && e.n_in >= 1, "degenerate embedding shape");
+                ensure!(e.w.len() == e.dim * e.n_in, "embedding weight numel");
+                ensure!(
+                    e.scale.len() == e.dim && e.shift.len() == e.dim,
+                    "embedding BN fold length"
+                );
+                (e.n_in, e.dim)
+            }
+            Some((_, s)) => bail!("graph must start with FpEmbed, found {}", s.kind()),
+            None => unreachable!(),
+        };
+
+        let mut t = frames;
+        let mut plan = Plan { codes: channels * t, acc: 0, fa: frames, pooled: 0 };
+        let mut n_stacks = 0usize;
+        let mut last_grid: Option<QParams> = None;
+        while let Some((si, QuantStage::FqConvStack(stack))) =
+            it.next_if(|(_, s)| matches!(s, QuantStage::FqConvStack(_)))
+        {
+            ensure!(!stack.layers.is_empty(), "stage {si}: empty FqConvStack");
+            n_stacks += 1;
+            for (li, l) in stack.layers.iter().enumerate() {
+                ensure!(
+                    l.c_in == channels,
+                    "stage {si} layer {li}: c_in {} but incoming channels {channels}",
+                    l.c_in
+                );
+                let span = l.dilation * (l.ksize - 1);
+                ensure!(
+                    t > span,
+                    "stage {si} layer {li}: receptive span {span} consumes all {t} \
+                     remaining frames"
+                );
+                t = l.t_out(t);
+                channels = l.c_out;
+                plan.codes = plan.codes.max(channels * t);
+                plan.acc = plan.acc.max(channels * t);
+                last_grid = Some(l.out_grid());
+            }
+        }
+        ensure!(n_stacks >= 1, "graph needs at least one FqConvStack");
+
+        match it.next() {
+            Some((si, QuantStage::GlobalAvgPool(g))) => {
+                ensure!(
+                    g.channels == channels,
+                    "stage {si}: GlobalAvgPool over {} channels but conv stack \
+                     emits {channels}",
+                    g.channels
+                );
+                if let Some(grid) = last_grid {
+                    ensure!(
+                        g.dq == grid,
+                        "stage {si}: GlobalAvgPool dequant grid does not match the \
+                         final conv layer's output grid"
+                    );
+                }
+                plan.pooled = g.channels;
+            }
+            Some((_, s)) => {
+                bail!("expected GlobalAvgPool after the conv stack, found {}", s.kind())
+            }
+            None => bail!("graph ends without GlobalAvgPool + DenseHead"),
+        }
+
+        let classes = match it.next() {
+            Some((si, QuantStage::DenseHead(h))) => {
+                ensure!(
+                    h.d_in == channels,
+                    "stage {si}: DenseHead d_in {} but pooled features have {channels}",
+                    h.d_in
+                );
+                ensure!(h.w.len() == h.d_in * h.d_out, "head weight numel");
+                ensure!(h.b.len() == h.d_out, "head bias length");
+                h.d_out
+            }
+            Some((_, s)) => bail!("expected DenseHead after GlobalAvgPool, found {}", s.kind()),
+            None => bail!("graph ends without a DenseHead"),
+        };
+        if let Some((_, s)) = it.next() {
+            bail!("trailing stage after DenseHead: {}", s.kind());
+        }
+
+        Ok(QuantGraph { stages, frames, n_in, classes, out_frames: t, plan })
+    }
+
+    pub fn stages(&self) -> &[QuantStage] {
+        &self.stages
+    }
+
+    /// Input time steps per sample.
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    /// Flattened feature count per sample: `n_in * frames`.
+    pub fn in_numel(&self) -> usize {
+        self.n_in * self.frames
+    }
+
+    /// Input channel count (e.g. MFCC features).
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Time steps surviving the full conv stack (the GAP width).
+    pub fn out_frames(&self) -> usize {
+        self.out_frames
+    }
+
+    /// The embedding stage (always present in a validated graph).
+    pub fn embed(&self) -> &FpEmbed {
+        match &self.stages[0] {
+            QuantStage::FpEmbed(e) => e,
+            _ => unreachable!("validated graph starts with FpEmbed"),
+        }
+    }
+
+    /// The classifier head (always last in a validated graph).
+    pub fn head(&self) -> &DenseHead {
+        match self.stages.last() {
+            Some(QuantStage::DenseHead(h)) => h,
+            _ => unreachable!("validated graph ends with DenseHead"),
+        }
+    }
+
+    /// All conv layers, in execution order, across every stack stage.
+    pub fn conv_layers(&self) -> impl Iterator<Item = &QuantConv1d> {
+        self.stages.iter().flat_map(|s| match s {
+            QuantStage::FqConvStack(st) => st.layers.as_slice(),
+            _ => &[],
+        })
+    }
+
+    /// The layers of the first conv stack (the whole stack for
+    /// single-stack graphs like the KWS facade).
+    pub fn first_stack(&self) -> &[QuantConv1d] {
+        for s in &self.stages {
+            if let QuantStage::FqConvStack(st) = s {
+                return &st.layers;
+            }
+        }
+        &[]
+    }
+
+    /// Total integer MACs per sample (for the perf accounting).
+    pub fn macs_per_sample(&self) -> u64 {
+        let mut t = self.frames;
+        let mut total = 0u64;
+        for l in self.conv_layers() {
+            t = l.t_out(t);
+            total += (l.c_out * l.c_in * l.ksize * t) as u64;
+        }
+        total
+    }
+
+    /// Allocation-free forward of one sample: f32 features
+    /// `(n_in, frames)` → logits in the caller's slice. Every
+    /// intermediate lives in `s`; `threads` is the intra-layer budget
+    /// handed to the conv kernels (bit-identical at every value).
+    pub fn forward_into(&self, x: &[f32], s: &mut Scratch, logits: &mut [f32], threads: usize) {
+        debug_assert_eq!(x.len(), self.in_numel(), "feature buffer size");
+        assert_eq!(logits.len(), self.classes, "logit buffer size");
+        let mut t_cur = self.frames;
+        // which ping-pong buffer currently holds the live codes
+        let mut cur_in_a = true;
+        for stage in &self.stages {
+            match stage {
+                QuantStage::FpEmbed(e) => {
+                    e.forward_into(x, t_cur, &mut s.a, &mut s.fa);
+                    cur_in_a = true;
+                }
+                QuantStage::FqConvStack(stack) => {
+                    for l in &stack.layers {
+                        let (input, output) =
+                            if cur_in_a { (&s.a, &mut s.b) } else { (&s.b, &mut s.a) };
+                        l.forward_mt(input, t_cur, &mut s.acc, output, threads);
+                        t_cur = l.t_out(t_cur);
+                        cur_in_a = !cur_in_a;
+                    }
+                }
+                QuantStage::GlobalAvgPool(g) => {
+                    let codes = if cur_in_a { &s.a } else { &s.b };
+                    s.pooled.clear();
+                    s.pooled.resize(g.channels, 0.0);
+                    global_avg_pool_into(codes, g.channels, t_cur, &g.dq, &mut s.pooled);
+                }
+                QuantStage::DenseHead(h) => h.forward_into(&s.pooled, logits),
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`QuantGraph::forward_into`].
+    pub fn forward(&self, x: &[f32], s: &mut Scratch) -> Vec<f32> {
+        let mut logits = vec![0f32; self.classes];
+        self.forward_into(x, s, &mut logits, 1);
+        logits
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic architectures (offline tests / benches)
+// ---------------------------------------------------------------------------
+
+/// A synthetic architecture description: enough to instantiate a full
+/// [`QuantGraph`] with deterministic random parameters and no artifacts.
+pub struct SynthArch {
+    pub name: &'static str,
+    pub n_in: usize,
+    pub frames: usize,
+    pub embed_dim: usize,
+    pub classes: usize,
+    /// per conv layer: (c_out, ksize, dilation)
+    pub convs: Vec<(usize, usize, usize)>,
+}
+
+impl SynthArch {
+    /// The paper's KWS temporal-conv net: 39 MFCC x 80 frames, 32-wide,
+    /// seven ksize-3 layers with the [1, 1, 2, 4, 8, 8, 8] schedule.
+    pub fn kws() -> Self {
+        SynthArch {
+            name: "kws",
+            n_in: 39,
+            frames: 80,
+            embed_dim: 32,
+            classes: 12,
+            convs: [1usize, 1, 2, 4, 8, 8, 8].iter().map(|&d| (32, 3, d)).collect(),
+        }
+    }
+
+    /// A deeper/wider second architecture with a different dilation
+    /// schedule (two stacked pyramids reaching dilation 16) — exists to
+    /// prove the graph API generalizes beyond the KWS monolith.
+    pub fn deep_wide() -> Self {
+        SynthArch {
+            name: "deep-wide",
+            n_in: 39,
+            frames: 160,
+            embed_dim: 48,
+            classes: 12,
+            convs: [1usize, 2, 4, 8, 16, 1, 2, 4, 8, 16].iter().map(|&d| (48, 3, d)).collect(),
+        }
+    }
+}
+
+/// Build a [`QuantGraph`] for `arch` with deterministic Gaussian
+/// parameters (seeded) — no artifacts or XLA needed. `nw`/`na` are the
+/// weight/activation level counts (nw = 1 takes the ternary path).
+pub fn synthetic_graph(arch: &SynthArch, nw: f32, na: f32, seed: u64) -> Result<QuantGraph> {
+    ensure!(!arch.convs.is_empty(), "architecture has no conv layers");
+    let mut rng = Rng::new(seed ^ 0x9A_D06_C0DE);
+    let dim = arch.embed_dim;
+
+    let mut ew = vec![0f32; dim * arch.n_in];
+    rng.fill_gaussian(&mut ew, 0.5);
+    // unit BN fold (gamma = var = 1, beta = mean = 0), unit quant scales
+    // — mirrors FqKwsNet::synthetic's parameterization
+    let qa0 = QParams::new(1.0, na, -1.0);
+    let embed = FpEmbed {
+        w: ew,
+        scale: vec![1.0; dim],
+        shift: vec![0.0; dim],
+        es: 1.0,
+        na,
+        out_q: qa0,
+        n_in: arch.n_in,
+        dim,
+    };
+
+    let mut layers = Vec::with_capacity(arch.convs.len());
+    let mut c_in = dim;
+    for (i, &(c_out, ksize, dilation)) in arch.convs.iter().enumerate() {
+        let mut w = vec![0f32; c_out * c_in * ksize];
+        rng.fill_gaussian(&mut w, 0.5);
+        let ba = if i == 0 { -1.0 } else { 0.0 };
+        let qa = QParams::new(1.0, na, ba);
+        let qw = QParams::new(1.0, nw, -1.0);
+        let mid = QParams::new(1.0, na, 0.0);
+        let next = if i + 1 < arch.convs.len() { Some(QParams::new(1.0, na, 0.0)) } else { None };
+        layers.push(QuantConv1d::new(&w, c_out, c_in, ksize, dilation, qa, qw, mid, next));
+        c_in = c_out;
+    }
+    let filters = c_in;
+    let gap = GlobalAvgPool { channels: filters, dq: layers.last().unwrap().out_grid() };
+
+    let mut hw = vec![0f32; filters * arch.classes];
+    rng.fill_gaussian(&mut hw, 0.5);
+    let head =
+        DenseHead { w: hw, b: vec![0.0; arch.classes], d_in: filters, d_out: arch.classes };
+
+    QuantGraph::new(
+        vec![
+            QuantStage::FpEmbed(embed),
+            QuantStage::FqConvStack(FqConvStack { layers }),
+            QuantStage::GlobalAvgPool(gap),
+            QuantStage::DenseHead(head),
+        ],
+        arch.frames,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_arch() -> SynthArch {
+        SynthArch {
+            name: "tiny",
+            n_in: 3,
+            frames: 12,
+            embed_dim: 4,
+            classes: 2,
+            convs: vec![(4, 3, 1), (5, 3, 2)],
+        }
+    }
+
+    #[test]
+    fn builds_and_plans_a_tiny_graph() {
+        let g = synthetic_graph(&tiny_arch(), 1.0, 7.0, 3).expect("tiny graph");
+        assert_eq!(g.frames(), 12);
+        assert_eq!(g.in_numel(), 36);
+        assert_eq!(g.classes(), 2);
+        // t: 12 -> 10 -> 6
+        assert_eq!(g.out_frames(), 6);
+        assert_eq!(g.first_stack().len(), 2);
+        assert!(g.macs_per_sample() > 0);
+        let mut s = Scratch::for_graph(&g);
+        let x = vec![0.25f32; g.in_numel()];
+        let logits = g.forward(&x, &mut s);
+        assert_eq!(logits.len(), 2);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rejects_missing_conv_stack() {
+        let good = synthetic_graph(&tiny_arch(), 1.0, 7.0, 3).unwrap();
+        let mut stages = good.stages;
+        // drop the conv stack entirely: the grammar check must fire
+        stages.remove(1);
+        let err = QuantGraph::new(stages, 12).unwrap_err().to_string();
+        assert!(err.contains("FqConvStack"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_time_axis_collapse() {
+        let mut arch = tiny_arch();
+        arch.frames = 5; // 5 - 2 = 3, then 3 - 4: receptive span too wide
+        let err = synthetic_graph(&arch, 1.0, 7.0, 3).unwrap_err().to_string();
+        assert!(err.contains("receptive span"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_misordered_stages() {
+        let good = synthetic_graph(&tiny_arch(), 1.0, 7.0, 3).unwrap();
+        let mut stages = good.stages;
+        stages.swap(2, 3); // head before GAP
+        let err = QuantGraph::new(stages, 12).unwrap_err().to_string();
+        assert!(err.contains("GlobalAvgPool"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn forward_bit_identical_across_thread_budgets() {
+        let g = synthetic_graph(&SynthArch::deep_wide(), 1.0, 7.0, 11).expect("deep-wide");
+        let mut rng = Rng::new(5);
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 1.0);
+        let mut s = Scratch::for_graph(&g);
+        let want = g.forward(&x, &mut s);
+        for threads in [2usize, 4, 8] {
+            let mut logits = vec![0f32; g.classes()];
+            g.forward_into(&x, &mut s, &mut logits, threads);
+            assert_eq!(logits, want, "threads={threads}");
+        }
+    }
+}

@@ -13,14 +13,20 @@
 //!   (runtime-dispatched AVX2 tile on x86_64) + flat-CSR ternary path
 //! * [`conv`]     — im2col-free quantized dilated conv1d: `ksize`
 //!   shifted contiguous streams with fused requantization
-//! * [`pipeline`] — the full KWS network as an integer pipeline, built
-//!   directly from a trained FQ [`ParamSet`](crate::coordinator::ParamSet);
-//!   agreement with the XLA deployment artifact is pinned by
-//!   rust/tests/engine_vs_artifact.rs.
+//! * [`graph`]    — the composable quantized model graph: typed
+//!   [`QuantStage`]s (FP embed, FQ-Conv stack, GAP, dense head) sealed
+//!   into a [`QuantGraph`] that owns sequencing, ping-pong buffer
+//!   planning and the allocation-free forward
+//! * [`pipeline`] — the KWS network as a thin constructor facade over
+//!   [`QuantGraph`], built directly from a trained FQ
+//!   [`ParamSet`](crate::coordinator::ParamSet); agreement with the XLA
+//!   deployment artifact is pinned by rust/tests/engine_vs_artifact.rs.
 
 pub mod conv;
 pub mod gemm;
+pub mod graph;
 pub mod pipeline;
 
 pub use conv::QuantConv1d;
+pub use graph::{QuantGraph, QuantStage};
 pub use pipeline::FqKwsNet;

@@ -1,196 +1,182 @@
-//! The full KWS network as a native integer pipeline.
+//! The KWS network as a thin constructor facade over the composable
+//! [`QuantGraph`] engine.
 //!
 //! Mirrors `compile.models.kws.fq_apply_pallas` exactly: full-precision
 //! 1x1 embedding + inference-mode BN + learned input quantizer, seven
 //! integer FQ-Conv layers with LUT re-binning, higher-precision global
-//! average pooling, dense head. Built straight from a trained FQ
-//! [`ParamSet`] + the manifest — no XLA on this path.
+//! average pooling, dense head. [`FqKwsNet::from_params`] only *builds
+//! the stage list* ([`kws_stages`]) from a trained FQ [`ParamSet`] + the
+//! manifest — sequencing, buffer planning and the allocation-free
+//! forward all live in [`QuantGraph`], shared with every other
+//! architecture on the graph API (rust/tests/graph.rs pins the facade
+//! bit-identical to a hand-assembled graph at every pool size).
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::ParamSet;
 use crate::exec;
-use crate::quant::{learned_quantize, QParams};
+use crate::quant::QParams;
 use crate::runtime::{GraphSpec, TensorSpec};
 use crate::tensor::TensorF;
 use crate::util::Rng;
 
 use super::conv::QuantConv1d;
+use super::graph::{DenseHead, FpEmbed, FqConvStack, GlobalAvgPool, QuantGraph, QuantStage};
+
+// Re-exported from the graph engine so existing imports keep working.
+pub use super::graph::{global_avg_pool, global_avg_pool_into, Scratch};
 
 /// KWS dilation schedule — must match compile/models/kws.py DILATIONS.
 pub const DILATIONS: [usize; 7] = [1, 1, 2, 4, 8, 8, 8];
 
 pub const BN_EPS: f32 = 1e-5;
 
-struct Embed {
-    w: Vec<f32>, // (embed, n_mfcc)
-    scale: Vec<f32>,
-    shift: Vec<f32>,
-    /// e^{embed.sa}: the learned input quantizer of the QCNN
-    es: f32,
-    n_mfcc: usize,
-    dim: usize,
+/// Assemble the KWS stage list (FP embed → 7-layer FQ-Conv stack → GAP
+/// → dense head) from trained FQ parameters. This is the *only* place
+/// the KWS architecture is spelled out; [`QuantGraph::new`] validates
+/// and seals it.
+pub fn kws_stages(params: &ParamSet, nw: f32, na: f32) -> Result<Vec<QuantStage>> {
+    let get = |n: &str| params.get(n).with_context(|| format!("missing param {n}"));
+    let ew = get("embed.w")?;
+    let (dim, n_mfcc) = (ew.shape()[0], ew.shape()[1]);
+    let gamma = get("embed.bn.gamma")?.data();
+    let beta = get("embed.bn.beta")?.data();
+    let mean = get("embed.bn.mean")?.data();
+    let var = get("embed.bn.var")?.data();
+    // fold eval-mode BN into per-channel scale+shift
+    let scale: Vec<f32> = (0..dim).map(|k| gamma[k] / (var[k] + BN_EPS).sqrt()).collect();
+    let shift: Vec<f32> = (0..dim).map(|k| beta[k] - scale[k] * mean[k]).collect();
+    // layer 0 sees the signed embedding grid
+    let qa0 = QParams::new(params.scalar("conv0.sa")?.exp(), na, -1.0);
+    let embed = FpEmbed {
+        w: ew.data().to_vec(),
+        scale,
+        shift,
+        es: params.scalar("embed.sa")?.exp(),
+        na,
+        out_q: qa0,
+        n_in: n_mfcc,
+        dim,
+    };
+
+    let n_layers = DILATIONS.len();
+    let mut layers = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        let w = get(&format!("conv{i}.w"))?;
+        let (c_out, c_in, ksize) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        let ba = if i == 0 { -1.0 } else { 0.0 };
+        let qa = QParams::new(params.scalar(&format!("conv{i}.sa"))?.exp(), na, ba);
+        let qw = QParams::new(params.scalar(&format!("conv{i}.sw"))?.exp(), nw, -1.0);
+        let mid = QParams::new(params.scalar(&format!("conv{i}.so"))?.exp(), na, 0.0);
+        let next = if i + 1 < n_layers {
+            Some(QParams::new(params.scalar(&format!("conv{}.sa", i + 1))?.exp(), na, 0.0))
+        } else {
+            None
+        };
+        layers.push(QuantConv1d::new(
+            w.data(),
+            c_out,
+            c_in,
+            ksize,
+            DILATIONS[i],
+            qa,
+            qw,
+            mid,
+            next,
+        ));
+    }
+    let last = layers.last().unwrap();
+    let gap = GlobalAvgPool { channels: last.c_out, dq: last.out_grid() };
+
+    let head_w = get("head.w")?.data().to_vec();
+    let head_b = get("head.b")?.data().to_vec();
+    let (d_in, d_out) = (get("head.w")?.shape()[0], head_b.len());
+    let head = DenseHead { w: head_w, b: head_b, d_in, d_out };
+
+    Ok(vec![
+        QuantStage::FpEmbed(embed),
+        QuantStage::FqConvStack(FqConvStack { layers }),
+        QuantStage::GlobalAvgPool(gap),
+        QuantStage::DenseHead(head),
+    ])
 }
 
+/// Deterministic synthetic KWS parameters — no artifacts or XLA needed.
+/// Shapes match the KWS dataset (39 MFCC features x 80 frames, 12
+/// classes) so `data::kws::KwsDataset` samples feed the resulting net
+/// directly; used by offline tests and the perf benches (and by
+/// rust/tests/graph.rs to build the facade and a hand-assembled graph
+/// from the *same* parameters).
+pub fn synthetic_params(seed: u64) -> Result<ParamSet> {
+    let (n_mfcc, dim, filters, classes) = (39usize, 32usize, 32usize, 12usize);
+    let mut specs: Vec<TensorSpec> = Vec::new();
+    let mut spec = |name: &str, shape: Vec<usize>| {
+        specs.push(TensorSpec { name: name.to_string(), shape });
+    };
+    spec("embed.w", vec![dim, n_mfcc]);
+    for field in ["gamma", "beta", "mean", "var"] {
+        spec(&format!("embed.bn.{field}"), vec![dim]);
+    }
+    spec("embed.sa", vec![]);
+    for i in 0..DILATIONS.len() {
+        let c_in = if i == 0 { dim } else { filters };
+        spec(&format!("conv{i}.w"), vec![filters, c_in, 3]);
+        for role in ["sa", "sw", "so"] {
+            spec(&format!("conv{i}.{role}"), vec![]);
+        }
+    }
+    spec("head.w", vec![filters, classes]);
+    spec("head.b", vec![classes]);
+    let graph = GraphSpec { trainable: specs, state: Vec::new(), opt: Vec::new(), param_count: 0 };
+    let mut params = ParamSet::zeros(&graph);
+    let mut rng = Rng::new(seed ^ 0x5EED_F0CC);
+    for (spec, v) in graph.trainable.iter().zip(params.values.iter_mut()) {
+        if spec.name.ends_with(".w") {
+            rng.fill_gaussian(v.data_mut(), 0.5);
+        } else if spec.name.ends_with(".bn.gamma") || spec.name.ends_with(".bn.var") {
+            v.data_mut().fill(1.0);
+        }
+        // bn.beta / bn.mean / head.b / log-scales stay 0 (=> es = 1)
+    }
+    Ok(params)
+}
+
+/// The KWS deployment network: a named facade over [`QuantGraph`].
 pub struct FqKwsNet {
-    embed: Embed,
-    pub layers: Vec<QuantConv1d>,
-    head_w: Vec<f32>, // (filters, classes)
-    head_b: Vec<f32>,
+    graph: QuantGraph,
     pub na: f32,
     pub filters: usize,
     pub classes: usize,
     pub frames: usize,
 }
 
-/// Reusable per-thread scratch buffers (hot path is allocation-free).
-/// Each worker of a data-parallel batch owns one of these.
-#[derive(Default)]
-pub struct Scratch {
-    acc: Vec<i32>,
-    a: Vec<i8>,
-    b: Vec<i8>,
-    /// float accumulator row for the embedding's streaming dot products
-    fa: Vec<f32>,
-    /// pooled features, reused so the GAP + head path never allocates
-    pooled: Vec<f32>,
-}
-
-/// Higher-precision global average pooling over final-grid codes
-/// (filters, t_cur): the sum runs in i64 so an arbitrarily long time
-/// axis cannot silently truncate (an i8-code sum overflows i32 once
-/// t_cur exceeds ~2^24 — see [`QParams::dequantize_i64`]).
-pub fn global_avg_pool_into(
-    codes: &[i8],
-    filters: usize,
-    t_cur: usize,
-    dq: &QParams,
-    pooled: &mut [f32],
-) {
-    debug_assert_eq!(codes.len(), filters * t_cur);
-    debug_assert_eq!(pooled.len(), filters);
-    for (k, p) in pooled.iter_mut().enumerate() {
-        let mut sum = 0i64;
-        for t in 0..t_cur {
-            sum += codes[k * t_cur + t] as i64;
-        }
-        *p = dq.dequantize_i64(sum) / t_cur as f32;
-    }
-}
-
-/// Allocating convenience wrapper over [`global_avg_pool_into`].
-pub fn global_avg_pool(codes: &[i8], filters: usize, t_cur: usize, dq: &QParams) -> Vec<f32> {
-    let mut pooled = vec![0f32; filters];
-    global_avg_pool_into(codes, filters, t_cur, dq, &mut pooled);
-    pooled
-}
-
 impl FqKwsNet {
     /// Build from trained FQ parameters (nw/na are the stage's level counts).
     pub fn from_params(params: &ParamSet, nw: f32, na: f32, frames: usize) -> Result<Self> {
-        let get = |n: &str| params.get(n).with_context(|| format!("missing param {n}"));
-        let ew = get("embed.w")?;
-        let (dim, n_mfcc) = (ew.shape()[0], ew.shape()[1]);
-        let gamma = get("embed.bn.gamma")?.data();
-        let beta = get("embed.bn.beta")?.data();
-        let mean = get("embed.bn.mean")?.data();
-        let var = get("embed.bn.var")?.data();
-        // fold eval-mode BN into per-channel scale+shift
-        let scale: Vec<f32> =
-            (0..dim).map(|k| gamma[k] / (var[k] + BN_EPS).sqrt()).collect();
-        let shift: Vec<f32> = (0..dim).map(|k| beta[k] - scale[k] * mean[k]).collect();
-        let embed = Embed {
-            w: ew.data().to_vec(),
-            scale,
-            shift,
-            es: params.scalar("embed.sa")?.exp(),
-            n_mfcc,
-            dim,
-        };
-
-        let n_layers = DILATIONS.len();
-        // per-layer quantizers; layer 0 sees the signed embedding grid
-        let mut layers = Vec::with_capacity(n_layers);
-        for i in 0..n_layers {
-            let w = get(&format!("conv{i}.w"))?;
-            let (c_out, c_in, ksize) = (w.shape()[0], w.shape()[1], w.shape()[2]);
-            let ba = if i == 0 { -1.0 } else { 0.0 };
-            let qa = QParams::new(params.scalar(&format!("conv{i}.sa"))?.exp(), na, ba);
-            let qw = QParams::new(params.scalar(&format!("conv{i}.sw"))?.exp(), nw, -1.0);
-            let mid = QParams::new(params.scalar(&format!("conv{i}.so"))?.exp(), na, 0.0);
-            let next = if i + 1 < n_layers {
-                Some(QParams::new(params.scalar(&format!("conv{}.sa", i + 1))?.exp(), na, 0.0))
-            } else {
-                None
-            };
-            layers.push(QuantConv1d::new(
-                w.data(),
-                c_out,
-                c_in,
-                ksize,
-                DILATIONS[i],
-                qa,
-                qw,
-                mid,
-                next,
-            ));
-        }
-        let head_w = get("head.w")?.data().to_vec();
-        let head_b = get("head.b")?.data().to_vec();
-        let filters = layers.last().unwrap().c_out;
-        let classes = head_b.len();
-        Ok(FqKwsNet { embed, layers, head_w, head_b, na, filters, classes, frames })
+        let graph = QuantGraph::new(kws_stages(params, nw, na)?, frames)?;
+        let filters = graph.head().d_in;
+        let classes = graph.classes();
+        Ok(FqKwsNet { graph, na, filters, classes, frames })
     }
 
-    /// Deterministic synthetic network + parameters — no artifacts or
-    /// XLA needed. Shapes match the KWS dataset (39 MFCC features x 80
-    /// frames, 12 classes) so `data::kws::KwsDataset` samples feed it
-    /// directly; used by offline tests and the perf benches.
+    /// Deterministic synthetic network — [`synthetic_params`] +
+    /// [`FqKwsNet::from_params`] at the KWS input geometry.
     pub fn synthetic(nw: f32, na: f32, seed: u64) -> Result<Self> {
-        let (n_mfcc, frames, dim, filters, classes) = (39usize, 80usize, 32usize, 32usize, 12usize);
-        let mut specs: Vec<TensorSpec> = Vec::new();
-        let mut spec = |name: &str, shape: Vec<usize>| {
-            specs.push(TensorSpec { name: name.to_string(), shape });
-        };
-        spec("embed.w", vec![dim, n_mfcc]);
-        for field in ["gamma", "beta", "mean", "var"] {
-            spec(&format!("embed.bn.{field}"), vec![dim]);
-        }
-        spec("embed.sa", vec![]);
-        for i in 0..DILATIONS.len() {
-            let c_in = if i == 0 { dim } else { filters };
-            spec(&format!("conv{i}.w"), vec![filters, c_in, 3]);
-            for role in ["sa", "sw", "so"] {
-                spec(&format!("conv{i}.{role}"), vec![]);
-            }
-        }
-        spec("head.w", vec![filters, classes]);
-        spec("head.b", vec![classes]);
-        let graph = GraphSpec {
-            trainable: specs,
-            state: Vec::new(),
-            opt: Vec::new(),
-            param_count: 0,
-        };
-        let mut params = ParamSet::zeros(&graph);
-        let mut rng = Rng::new(seed ^ 0x5EED_F0CC);
-        for (spec, v) in graph.trainable.iter().zip(params.values.iter_mut()) {
-            if spec.name.ends_with(".w") {
-                rng.fill_gaussian(v.data_mut(), 0.5);
-            } else if spec.name.ends_with(".bn.gamma") || spec.name.ends_with(".bn.var") {
-                v.data_mut().fill(1.0);
-            }
-            // bn.beta / bn.mean / head.b / log-scales stay 0 (=> es = 1)
-        }
-        FqKwsNet::from_params(&params, nw, na, frames)
+        FqKwsNet::from_params(&synthetic_params(seed)?, nw, na, 80)
+    }
+
+    /// The underlying stage graph.
+    pub fn graph(&self) -> &QuantGraph {
+        &self.graph
+    }
+
+    /// The integer conv layers, in execution order.
+    pub fn layers(&self) -> &[QuantConv1d] {
+        self.graph.first_stack()
     }
 
     pub fn out_frames(&self) -> usize {
-        let mut t = self.frames;
-        for l in &self.layers {
-            t = l.t_out(t);
-        }
-        t
+        self.graph.out_frames()
     }
 
     /// Forward one sample: MFCC features (n_mfcc, frames) -> logits.
@@ -211,60 +197,7 @@ impl FqKwsNet {
     /// every intermediate lives in `s` — the steady-state serving path
     /// performs zero heap allocations per sample.
     pub fn forward_into(&self, x: &[f32], s: &mut Scratch, logits: &mut [f32], threads: usize) {
-        let t_in = self.frames;
-        let e = &self.embed;
-        debug_assert_eq!(x.len(), e.n_mfcc * t_in);
-        assert_eq!(logits.len(), self.classes, "logit buffer size");
-        // --- FP embedding + BN + learned input quantization -> codes ----
-        // Streamed as per-channel axpy rows: for each output channel the
-        // t-axis accumulator row is contiguous and every input row is
-        // contiguous, so the inner loops vectorize; the per-(k,t) f32
-        // addition order over c is unchanged from the naive triple loop,
-        // keeping the embedding bit-identical to the float reference.
-        let qa0 = &self.layers[0].qa;
-        s.a.clear();
-        s.a.resize(e.dim * t_in, 0);
-        s.fa.clear();
-        s.fa.resize(t_in, 0.0);
-        for k in 0..e.dim {
-            let wrow = &e.w[k * e.n_mfcc..(k + 1) * e.n_mfcc];
-            let fa = &mut s.fa[..t_in];
-            fa.fill(0.0);
-            for (c, &wc) in wrow.iter().enumerate() {
-                let xrow = &x[c * t_in..(c + 1) * t_in];
-                for (av, &xv) in fa.iter_mut().zip(xrow) {
-                    *av += wc * xv;
-                }
-            }
-            let (sc, sh) = (e.scale[k], e.shift[k]);
-            let arow = &mut s.a[k * t_in..(k + 1) * t_in];
-            for (o, &av) in arow.iter_mut().zip(fa.iter()) {
-                let bn = av * sc + sh;
-                // two-step: Q_{embed.sa}(b=-1) then conv0's input bin
-                let q = learned_quantize(bn, e.es, self.na, -1.0);
-                *o = qa0.int_code(q) as i8;
-            }
-        }
-        // --- integer QCNN ------------------------------------------------
-        let mut t_cur = t_in;
-        let mut cur_in_a = true;
-        for l in &self.layers {
-            {
-                let (input, output) =
-                    if cur_in_a { (&s.a, &mut s.b) } else { (&s.b, &mut s.a) };
-                l.forward_mt(input, t_cur, &mut s.acc, output, threads);
-            }
-            t_cur = l.t_out(t_cur);
-            cur_in_a = !cur_in_a;
-        }
-        let codes = if cur_in_a { &s.a } else { &s.b };
-        // --- higher-precision GAP + head ---------------------------------
-        let last = self.layers.last().unwrap();
-        let dq = last.lut.out; // final grid
-        s.pooled.clear();
-        s.pooled.resize(self.filters, 0.0);
-        global_avg_pool_into(codes, self.filters, t_cur, &dq, &mut s.pooled);
-        self.head_logits_into(&s.pooled, logits);
+        self.graph.forward_into(x, s, logits, threads);
     }
 
     /// Forward a run of flattened samples into a pre-sized logits window
@@ -272,11 +205,11 @@ impl FqKwsNet {
     /// and the serving backend (`serve::NativeBackend`). Allocation-free
     /// in steady state (all intermediates live in `s`).
     pub fn forward_rows(&self, xs: &[f32], s: &mut Scratch, out: &mut [f32]) {
-        let per = self.embed.n_mfcc * self.frames;
+        let per = self.graph.in_numel();
         assert_eq!(xs.len() % per.max(1), 0, "feature buffer not a whole number of samples");
         assert_eq!(out.len(), xs.len() / per * self.classes, "logit buffer size");
         for (xi, oi) in xs.chunks_exact(per).zip(out.chunks_exact_mut(self.classes)) {
-            self.forward_into(xi, s, oi, 1);
+            self.graph.forward_into(xi, s, oi, 1);
         }
     }
 
@@ -295,18 +228,18 @@ impl FqKwsNet {
     /// (rust/tests/parallel.rs).
     pub fn forward_batch_with(&self, x: &TensorF, threads: usize) -> TensorF {
         let b = x.shape()[0];
-        let per = self.embed.n_mfcc * self.frames;
+        let per = self.graph.in_numel();
         let mut out = vec![0f32; b * self.classes];
         let threads = threads.max(1);
         if b == 1 {
-            let mut s = Scratch::default();
+            let mut s = Scratch::for_graph(&self.graph);
             self.forward_into(x.data(), &mut s, &mut out, threads);
         } else if threads == 1 {
-            let mut s = Scratch::default();
+            let mut s = Scratch::for_graph(&self.graph);
             self.forward_rows(x.data(), &mut s, &mut out);
         } else {
             exec::par_rows_mut(&mut out, b, self.classes, threads, |rows, window| {
-                let mut s = Scratch::default();
+                let mut s = Scratch::for_graph(&self.graph);
                 self.forward_rows(&x.data()[rows.start * per..rows.end * per], &mut s, window);
             });
         }
@@ -316,13 +249,13 @@ impl FqKwsNet {
     /// Embedding internals for the analog simulator:
     /// (dim, n_mfcc, w, bn_scale, bn_shift, e^{embed.sa}).
     pub fn embed_view(&self) -> (usize, usize, &[f32], &[f32], &[f32], f32) {
-        let e = &self.embed;
-        (e.dim, e.n_mfcc, &e.w, &e.scale, &e.shift, e.es)
+        let e = self.graph.embed();
+        (e.dim, e.n_in, &e.w, &e.scale, &e.shift, e.es)
     }
 
     /// (mid, next) quantizer grids of layer `li`.
     pub fn layer_grids(&self, li: usize) -> (crate::quant::QParams, Option<crate::quant::QParams>) {
-        let l = &self.layers[li];
+        let l = &self.layers()[li];
         (l.mid, l.next)
     }
 
@@ -330,14 +263,7 @@ impl FqKwsNet {
     /// hot path routes this through [`Scratch`] so no per-sample `Vec`
     /// is allocated — including no clone of the bias row).
     pub fn head_logits_into(&self, pooled: &[f32], logits: &mut [f32]) {
-        debug_assert_eq!(pooled.len(), self.filters);
-        logits.copy_from_slice(&self.head_b);
-        for (k, &p) in pooled.iter().enumerate() {
-            let w = &self.head_w[k * self.classes..(k + 1) * self.classes];
-            for (l, &wj) in logits.iter_mut().zip(w) {
-                *l += p * wj;
-            }
-        }
+        self.graph.head().forward_into(pooled, logits);
     }
 
     /// Allocating convenience wrapper over [`FqKwsNet::head_logits_into`].
@@ -349,12 +275,6 @@ impl FqKwsNet {
 
     /// Total integer MACs per sample (for the perf accounting).
     pub fn macs_per_sample(&self) -> u64 {
-        let mut t = self.frames;
-        let mut total = 0u64;
-        for l in &self.layers {
-            t = l.t_out(t);
-            total += (l.c_out * l.c_in * l.ksize * t) as u64;
-        }
-        total
+        self.graph.macs_per_sample()
     }
 }

@@ -18,7 +18,7 @@ use fqconv::data;
 use fqconv::exp::{self, Ctx};
 use fqconv::infer::FqKwsNet;
 use fqconv::runtime::{Engine, Manifest};
-use fqconv::serve::{BatchPolicy, NativeBackend, Server};
+use fqconv::serve::{BatchPolicy, NativeBackend, Priority, Server};
 use fqconv::util::cli::Args;
 use fqconv::util::{Rng, Timer};
 
@@ -27,7 +27,7 @@ const USAGE: &str = "usage: fqconv <arch|plan|exp|train|serve|selftest> [options
   plan --model <model> [--steps N]
   exp <table1|table2|table3|table4|table5|table6|table7|all> [--budget smoke|quick|full] [--model M] [--verbose]
   train --model <model> [--steps N] [--ckpt-dir DIR] [--verbose]
-  serve [--requests N] [--workers W] [--max-batch B] [--max-wait-us U]
+  serve [--requests N] [--workers W] [--max-batch B] [--max-wait-us U] [--deadline-us D]
   selftest";
 
 fn main() -> Result<()> {
@@ -207,39 +207,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 2);
     let policy =
         BatchPolicy::new(args.usize_or("max-batch", 16), args.u64_or("max-wait-us", 2000));
+    // 0 = no deadline; otherwise every 4th (Batch-priority) request gets
+    // none and the Interactive ones carry this budget
+    let deadline_us = args.u64_or("deadline-us", 0);
+    let deadline = (deadline_us > 0).then(|| std::time::Duration::from_micros(deadline_us));
     let sample_numel: usize = input_shape.iter().product();
-    let factories: Vec<fqconv::serve::BackendFactory> = (0..workers)
-        .map(|_| fqconv::serve::ready(NativeBackend::new(net.clone(), input_shape.clone())))
-        .collect();
-    let server = Server::start_with(factories, sample_numel, policy);
+    let factory = NativeBackend::factory(&net, &input_shape);
+    let server = Server::start(factory, workers, sample_numel, policy);
 
     let ds = data::for_model("kws", &input_shape, net.classes);
     let n = args.usize_or("requests", 256);
     let mut rng = Rng::new(7);
     let t = Timer::start();
     let mut correct = 0usize;
+    let mut expired = 0usize;
     let mut pending = Vec::new();
     let mut labels = Vec::new();
     for i in 0..n {
         let (x, y) = ds.sample(i as u64 % data::VAL_SIZE, Some(&mut rng));
         labels.push(y);
-        pending.push(server.submit(x));
+        // mixed workload: every 4th request is bulk (Batch class, no
+        // deadline), the rest are Interactive with the optional budget
+        let rx = if i % 4 == 3 {
+            server.submit_with(x, Priority::Batch, None)
+        } else {
+            server.submit_with(x, Priority::Interactive, deadline)
+        };
+        pending.push(rx);
     }
     for (rx, y) in pending.into_iter().zip(labels) {
-        let resp = rx.recv().expect("response");
-        if resp.class as i32 == y {
-            correct += 1;
+        match rx.recv().expect("reply channel") {
+            Ok(resp) => {
+                if resp.class as i32 == y {
+                    correct += 1;
+                }
+            }
+            Err(fqconv::serve::ServeError::DeadlineExceeded { .. }) => expired += 1,
+            Err(e) => anyhow::bail!("serving failed: {e}"),
         }
     }
     let dt = t.elapsed_s();
     let stats = server.stats();
-    println!("served {n} requests in {dt:.3}s = {:.0} req/s", n as f64 / dt);
+    let answered = n - expired;
+    println!("served {answered}/{n} requests in {dt:.3}s = {:.0} req/s", answered as f64 / dt);
     println!(
-        "accuracy {:.2}%  mean batch {:.1}",
-        correct as f64 / n as f64 * 100.0,
+        "accuracy {:.2}%  mean batch {:.1}  expired {expired}",
+        correct as f64 / answered.max(1) as f64 * 100.0,
         stats.mean_batch
     );
     println!("latency: {}", stats.latency_summary);
+    for p in Priority::ALL {
+        let ps = &stats.priorities[p.index()];
+        println!(
+            "priority {:<11} served={} p50={:.0}us p99={:.0}us",
+            p.label(),
+            ps.served,
+            ps.p50_us,
+            ps.p99_us
+        );
+    }
     for w in &stats.workers {
         println!(
             "worker {}: batches={} served={} errors={} alive={}",

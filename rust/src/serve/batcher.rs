@@ -2,9 +2,50 @@
 //!
 //! The policy mirrors the classic serving trade-off: a batch closes when
 //! it reaches `max_batch` (throughput bound) or when the oldest queued
-//! request has waited `max_wait_us` (latency bound). The property tests
-//! in rust/tests/properties.rs check that no admissible sequence of
-//! arrivals can starve a request beyond `max_wait_us` + one service time.
+//! request has waited `max_wait_us` (latency bound). Requests carry a
+//! [`Priority`] class — the batcher keeps one forming batch *per
+//! priority* and the shared work queue serves Interactive batches before
+//! Batch ones — and an optional absolute deadline: a request whose
+//! deadline has passed when its batch is dispatched is answered with a
+//! typed error instead of riding the batch.
+//!
+//! [`simulate`] / [`simulate_prio`] are discrete-time models of the
+//! threaded loop (`serve`), used by the property tests in
+//! rust/tests/properties.rs: no admissible arrival sequence may starve a
+//! request beyond `max_wait_us` + backlog, an Interactive batch never
+//! waits behind a Batch-priority batch it was ready before, and a
+//! deadlined request is either dispatched by its deadline or expired —
+//! never silently lost.
+
+/// Request priority class. Interactive batches are pulled from the
+/// shared work queue before Batch-priority ones; within a class,
+/// batches stay FIFO.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    /// Both classes, in queue-pop order.
+    pub const ALL: [Priority; 2] = [Priority::Interactive, Priority::Batch];
+
+    /// Dense index for per-priority tables (pop order).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BatchPolicy {
@@ -27,41 +68,180 @@ impl BatchPolicy {
     }
 }
 
-/// Discrete-time simulation of the batcher (used by tests and the
-/// batching-policy ablation bench): given arrival times (us), returns
-/// per-request (dispatch_time, batch_size).
-pub fn simulate(policy: BatchPolicy, arrivals_us: &[u64], service_us: u64) -> Vec<(u64, usize)> {
-    let mut out = vec![(0u64, 0usize); arrivals_us.len()];
-    let mut i = 0;
+/// One simulated request for [`simulate_prio`]. Times are absolute
+/// microseconds; `deadline_us` is the instant after which the request
+/// must not start inference.
+#[derive(Clone, Copy, Debug)]
+pub struct SimRequest {
+    pub arrival_us: u64,
+    pub priority: Priority,
+    pub deadline_us: Option<u64>,
+}
+
+impl SimRequest {
+    pub fn at(arrival_us: u64, priority: Priority) -> Self {
+        SimRequest { arrival_us, priority, deadline_us: None }
+    }
+}
+
+/// Per-request outcome of [`simulate_prio`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimOutcome {
+    /// rode a batch: closed at `closed_us`, inference started at
+    /// `start_us`, `batch` survivors ran together
+    Dispatched { closed_us: u64, start_us: u64, batch: usize },
+    /// deadline elapsed before the batch could start; answered with
+    /// `ServeError::DeadlineExceeded` at `at_us`
+    Expired { at_us: u64 },
+}
+
+impl SimOutcome {
+    pub fn start_us(&self) -> Option<u64> {
+        match self {
+            SimOutcome::Dispatched { start_us, .. } => Some(*start_us),
+            SimOutcome::Expired { .. } => None,
+        }
+    }
+}
+
+/// A closed batch travelling through the simulated queue.
+struct SimBatch {
+    priority: Priority,
+    closed_us: u64,
+    members: Vec<usize>,
+}
+
+/// Discrete-time simulation of the priority batcher + single worker
+/// over the two-lane shared queue (used by tests and the
+/// batching-policy ablation bench).
+///
+/// Mirrors `serve`'s threaded loop: per-priority forming batches close
+/// on size or on the oldest member's `max_wait_us` timer (an arrival
+/// landing exactly at the timer instant starts the next batch); closed
+/// batches queue per lane; the worker always pops the Interactive lane
+/// first; at pop time, members whose deadline lies strictly before the
+/// inference start are expired out of the batch.
+pub fn simulate_prio(
+    policy: BatchPolicy,
+    reqs: &[SimRequest],
+    service_us: u64,
+) -> Vec<SimOutcome> {
+    debug_assert!(reqs.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+    let mut out = vec![SimOutcome::Expired { at_us: 0 }; reqs.len()];
+
+    // --- phase 1: close batches per priority (independent of the queue
+    // and worker state, exactly as in the threaded batcher) ------------
+    let mut batches: Vec<SimBatch> = Vec::new();
+    for prio in Priority::ALL {
+        let idx: Vec<usize> = (0..reqs.len()).filter(|&i| reqs[i].priority == prio).collect();
+        let mut i = 0;
+        while i < idx.len() {
+            let open = reqs[idx[i]].arrival_us;
+            let deadline = open + policy.max_wait_us;
+            // collect while size and timer admit; strictly *before* the
+            // timer instant (the threaded recv_timeout has already fired
+            // at `deadline`, so a boundary arrival starts the next batch)
+            let mut j = i + 1;
+            while j < idx.len() && j - i < policy.max_batch && reqs[idx[j]].arrival_us < deadline {
+                j += 1;
+            }
+            let closed_us = if j - i == policy.max_batch {
+                reqs[idx[j - 1]].arrival_us // filled up
+            } else {
+                deadline // timer fired
+            };
+            batches.push(SimBatch { priority: prio, closed_us, members: idx[i..j].to_vec() });
+            i = j;
+        }
+    }
+
+    // --- phase 2: one worker drains the two-lane queue ----------------
+    // Lanes are FIFO; close times are non-decreasing within a lane.
+    let mut lane_pos = [0usize; 2]; // next unserved batch per lane
+    let mut lanes: [Vec<&SimBatch>; 2] = [Vec::new(), Vec::new()];
+    for b in &batches {
+        lanes[b.priority.index()].push(b);
+    }
+    lanes.iter_mut().for_each(|l| l.sort_by_key(|b| b.closed_us));
     let mut worker_free_at = 0u64;
-    while i < arrivals_us.len() {
-        let open = arrivals_us[i];
-        let deadline = open + policy.max_wait_us;
-        // collect while size and deadline admit. Strictly *before* the
-        // deadline: the threaded batcher's recv_timeout has already fired
-        // at `deadline`, so an arrival landing exactly then starts the
-        // next batch (keeps simulate() aligned with serve::batcher_loop)
-        let mut j = i + 1;
-        while j < arrivals_us.len()
-            && j - i < policy.max_batch
-            && arrivals_us[j] < deadline
-        {
-            j += 1;
-        }
-        let size = j - i;
-        let close = if size == policy.max_batch {
-            arrivals_us[j - 1] // filled up
-        } else {
-            deadline // timer fired
+    loop {
+        // among unserved batches, those closed by `worker_free_at` are
+        // "in the queue"; the Interactive lane pops first. If none is
+        // ready, the worker sleeps until the earliest close.
+        let ready_lane = Priority::ALL
+            .into_iter()
+            .map(Priority::index)
+            .find(|&li| {
+                lane_pos[li] < lanes[li].len()
+                    && lanes[li][lane_pos[li]].closed_us <= worker_free_at
+            });
+        let li = match ready_lane {
+            Some(li) => li,
+            None => {
+                // nothing queued yet: jump to the earliest next close
+                // (Interactive wins a tie — same pop-order rule)
+                let next = Priority::ALL
+                    .into_iter()
+                    .map(Priority::index)
+                    .filter(|&li| lane_pos[li] < lanes[li].len())
+                    .min_by_key(|&li| (lanes[li][lane_pos[li]].closed_us, li));
+                match next {
+                    Some(li) => {
+                        worker_free_at = worker_free_at.max(lanes[li][lane_pos[li]].closed_us);
+                        li
+                    }
+                    None => break, // every batch served
+                }
+            }
         };
-        let start = close.max(worker_free_at);
-        worker_free_at = start + service_us;
-        for r in i..j {
-            out[r] = (start, size);
+        let b = lanes[li][lane_pos[li]];
+        lane_pos[li] += 1;
+        let start = b.closed_us.max(worker_free_at);
+        // expire members whose deadline lies strictly before the start
+        let survivors: Vec<usize> = b
+            .members
+            .iter()
+            .copied()
+            .filter(|&r| match reqs[r].deadline_us {
+                Some(d) => {
+                    if d < start {
+                        out[r] = SimOutcome::Expired { at_us: start };
+                        false
+                    } else {
+                        true
+                    }
+                }
+                None => true,
+            })
+            .collect();
+        if survivors.is_empty() {
+            continue; // nothing to run; the worker stays free
         }
-        i = j;
+        for &r in &survivors {
+            out[r] = SimOutcome::Dispatched {
+                closed_us: b.closed_us,
+                start_us: start,
+                batch: survivors.len(),
+            };
+        }
+        worker_free_at = start + service_us;
     }
     out
+}
+
+/// Single-priority, no-deadline view of [`simulate_prio`]: given arrival
+/// times (us), returns per-request (dispatch_time, batch_size). Kept as
+/// the stable interface of the original batcher model.
+pub fn simulate(policy: BatchPolicy, arrivals_us: &[u64], service_us: u64) -> Vec<(u64, usize)> {
+    let reqs: Vec<SimRequest> =
+        arrivals_us.iter().map(|&t| SimRequest::at(t, Priority::Interactive)).collect();
+    simulate_prio(policy, &reqs, service_us)
+        .into_iter()
+        .map(|o| match o {
+            SimOutcome::Dispatched { start_us, batch, .. } => (start_us, batch),
+            SimOutcome::Expired { .. } => unreachable!("no deadlines in simulate()"),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -125,5 +305,71 @@ mod tests {
         assert_eq!(d[0].0, 0);
         assert_eq!(d[1].0, 100);
         assert_eq!(d[2].0, 200);
+    }
+
+    #[test]
+    fn interactive_lane_pops_before_batch_lane() {
+        // both lanes close a batch at t=100 while the worker is busy
+        // until t=10_000: the Interactive batch must start first
+        let p = BatchPolicy::new(1, 100);
+        let reqs = vec![
+            SimRequest::at(0, Priority::Batch), // served first (worker idle)
+            SimRequest::at(50, Priority::Batch),
+            SimRequest::at(60, Priority::Interactive),
+        ];
+        let d = simulate_prio(p, &reqs, 10_000);
+        let s1 = d[1].start_us().unwrap();
+        let s2 = d[2].start_us().unwrap();
+        assert!(s2 < s1, "interactive ({s2}) must preempt queued batch lane ({s1})");
+    }
+
+    #[test]
+    fn expired_member_leaves_the_batch() {
+        // request 1's deadline (5) already lies before the batch start
+        // (10): it is expired out and request 0 runs alone — the expired
+        // member must not count toward the reported batch size
+        let p = BatchPolicy::new(2, 100);
+        let reqs = vec![
+            SimRequest::at(0, Priority::Interactive),
+            SimRequest { arrival_us: 10, priority: Priority::Interactive, deadline_us: Some(5) },
+        ];
+        let d = simulate_prio(p, &reqs, 50);
+        assert_eq!(d[0], SimOutcome::Dispatched { closed_us: 10, start_us: 10, batch: 1 });
+        assert_eq!(d[1], SimOutcome::Expired { at_us: 10 });
+    }
+
+    #[test]
+    fn queued_request_expires_behind_a_slow_service() {
+        // worker busy until t=5_000; request 1's deadline (1_000) passes
+        // while its batch waits in the queue -> typed expiry, and the
+        // later request still runs
+        let p = BatchPolicy::new(1, 100);
+        let queued = SimRequest {
+            arrival_us: 10,
+            priority: Priority::Interactive,
+            deadline_us: Some(1_000),
+        };
+        let reqs = vec![
+            SimRequest::at(0, Priority::Interactive),
+            queued,
+            SimRequest::at(20, Priority::Interactive),
+        ];
+        let d = simulate_prio(p, &reqs, 5_000);
+        assert_eq!(d[1], SimOutcome::Expired { at_us: 5_000 });
+        assert_eq!(d[2], SimOutcome::Dispatched { closed_us: 20, start_us: 5_000, batch: 1 });
+    }
+
+    #[test]
+    fn deadline_at_start_instant_still_rides() {
+        // expiry is strict (deadline < start): a deadline exactly at the
+        // dispatch instant is honored
+        let p = BatchPolicy::new(1, 50);
+        let reqs = vec![SimRequest {
+            arrival_us: 0,
+            priority: Priority::Interactive,
+            deadline_us: Some(0),
+        }];
+        let d = simulate_prio(p, &reqs, 10);
+        assert_eq!(d[0], SimOutcome::Dispatched { closed_us: 0, start_us: 0, batch: 1 });
     }
 }

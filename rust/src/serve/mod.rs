@@ -1,47 +1,89 @@
-//! Serving layer: request router + dynamic batcher over the deployed
-//! FQ network — the edge-inference story the paper motivates.
+//! Serving layer: a multi-model registry over one shared worker pool —
+//! the edge-inference story the paper motivates, scaled out to many
+//! deployed networks.
 //!
 //! Architecture (vLLM-router-like, scaled to the edge):
 //!
 //! ```text
-//!  clients --> [ingress queue] --> batcher thread --(batches)--> shared
-//!                                   (max_batch / max_wait_us)    work queue
-//!                                                                   |
-//!                                              idle workers PULL ---+
-//!  clients <---------------- per-request response channels <--------+
+//!              [ModelRegistry]  register / evict by ModelId
+//!                     |
+//!        +------------+------------+
+//!        v                         v
+//!  model "kws"               model "resnet"
+//!  ingress queue             ingress queue          (one per model)
+//!        |                         |
+//!  batcher thread            batcher thread         (one per model;
+//!   per-priority forming      per-priority forming   deadline-expired
+//!   batches, max_batch /      batches                requests answered
+//!   max_wait_us)                   |                 with a typed error)
+//!        |                         |
+//!        +---------> shared two-lane work queue <----+
+//!                 [Interactive lane | Batch lane]
+//!                           |
+//!          idle workers PULL (Interactive first) ----+
+//!          each worker lazily builds + caches one
+//!          backend replica per model (factory runs
+//!          in-thread: non-Send backends work)
+//!                           |
+//!  clients <----- per-request reply channels:
+//!                 Ok(Response {model, priority, logits, ...})
+//!                 | Err(ServeError::{DeadlineExceeded, BackendFailed})
 //! ```
 //!
-//! * [`batcher`] — pure batch-assembly policy (unit-testable, no threads)
-//! * [`Server`]  — threads + channels glue; workers own backend replicas
+//! * [`batcher`] — pure batch-assembly policy + priority/deadline
+//!   simulation (unit-testable, no threads)
+//! * [`ModelRegistry`] — threads + channels glue; the shared worker
+//!   pool serves every registered model
+//! * [`Server`] — single-model convenience facade over a registry
 //!
-//! Scheduling is **pull-based**: the batcher pushes closed batches onto
-//! one shared queue and idle workers take from it. Unlike the previous
-//! push-based round-robin, a slow worker never head-of-line-blocks
-//! batches that another worker could serve, and a dead worker simply
-//! stops pulling. Error policy distinguishes poisoned *batches* from
-//! poisoned *backends*: a failed batch is re-queued at the back (other
-//! traffic proceeds first) with bounded attempts before it is dropped,
-//! and a worker retires only after [`MAX_WORKER_ERRORS`] *consecutive*
-//! failures (success resets the budget) — so one unservable batch
-//! cannot cascade-retire the whole pool. Per-worker counters surface in [`ServerStats::workers`]. When
-//! the *last* worker retires the queue is closed and drained (and
-//! further pushes are dropped) so waiting clients observe a disconnect
-//! instead of hanging — guaranteed even for panicking backends via a
-//! drop guard.
+//! Scheduling is **pull-based and priority-aware**: each model's
+//! batcher pushes closed batches onto the shared two-lane queue and
+//! idle workers pull — Interactive lane strictly before Batch lane, so
+//! latency-sensitive traffic never queues behind bulk scoring. A slow
+//! worker never head-of-line-blocks batches another worker could serve,
+//! and a dead worker simply stops pulling.
 //!
-//! Backends: the native integer engine ([`NativeBackend`], per-sample,
-//! batch-size-free) or the XLA deployment artifact ([`XlaBackend`],
-//! fixed-batch with padding). Both are measured in `benches/perf_serve.rs`.
+//! **Deadlines.** A request may carry a deadline; both the batcher (at
+//! dispatch) and the worker (at pop) expire overdue requests out of
+//! their batch and answer them with [`ServeError::DeadlineExceeded`]
+//! instead of letting them ride — an answer that can no longer be used
+//! by its caller is not worth a backend's cycles.
 //!
-//! Hot-path allocation discipline: each worker stages batch features in
-//! one recycled buffer and the native backend routes logits through its
-//! reusable [`Scratch`], so steady-state serving performs no per-sample
-//! heap allocation; batch-level data parallelism inside the engine runs
-//! on the persistent [`crate::exec::Pool`] (no thread spawn per batch).
+//! **Error policy** distinguishes poisoned *batches* from poisoned
+//! *replicas*: a failed batch is re-queued at the back of its lane
+//! (bounded attempts, then every member is answered with
+//! [`ServeError::BackendFailed`]), and after [`MAX_WORKER_ERRORS`]
+//! *consecutive* failures on one model a worker quarantines its replica
+//! **for that model only** — it stays alive, keeps serving every other
+//! model, and hands the quarantined model's batches back to the queue
+//! (with a back-off and a bounce budget) for healthier replicas. One
+//! broken model can therefore never take the shared pool down. Per-worker
+//! counters surface in [`RegistryStats::workers`]; if the *last* worker
+//! dies (panicking backend) the queue is closed and drained with typed
+//! errors so waiting clients observe a failure instead of hanging —
+//! guaranteed via a drop guard.
+//!
+//! Backends implement the allocation-free [`Backend::infer_into`]
+//! contract: flattened features in, logits out, no per-batch tensor or
+//! shape allocation ([`Backend::sample_shape`] returns a borrowed
+//! slice). The native integer engine ([`NativeBackend`]) routes a batch
+//! of one through the single-sample `forward_into` with the full
+//! intra-layer thread budget (the batch-of-one fast path); the XLA
+//! deployment artifact ([`XlaBackend`]) pads to its fixed batch. Both
+//! are measured in `benches/perf_serve.rs`.
+//!
+//! Hot-path allocation discipline: each worker stages batch features
+//! and logits in recycled buffers and the native backend routes
+//! intermediates through its reusable [`Scratch`], so steady-state
+//! serving performs no per-sample heap allocation; batch-level data
+//! parallelism inside the engine runs on the persistent
+//! [`crate::exec::Pool`] (no thread spawn per batch).
 
 pub mod batcher;
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -50,26 +92,94 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use std::path::PathBuf;
-
+use crate::exec;
 use crate::infer::pipeline::{FqKwsNet, Scratch};
 use crate::metrics::LatencyHist;
 use crate::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Executable};
-use crate::tensor::TensorF;
 
-pub use batcher::BatchPolicy;
+pub use batcher::{BatchPolicy, Priority};
 
-/// A classification request: one feature tensor (flattened sample).
+// ---------------------------------------------------------------------------
+// Identifiers, requests, responses, typed errors
+// ---------------------------------------------------------------------------
+
+/// Cheap, clonable model identifier (an interned name).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(Arc<str>);
+
+impl ModelId {
+    pub fn new(name: &str) -> Self {
+        ModelId(Arc::from(name))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl From<&str> for ModelId {
+    fn from(s: &str) -> Self {
+        ModelId::new(s)
+    }
+}
+
+/// Typed serving failure, delivered on the reply channel (clients never
+/// observe a bare disconnect for a policy decision).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// the request's deadline passed before a worker could start it; it
+    /// was expired out of its batch instead of riding
+    DeadlineExceeded { model: ModelId, waited_us: u64 },
+    /// the batch failed on every delivery attempt (backend errors)
+    BackendFailed { model: ModelId, attempts: usize },
+    /// no model with this id is registered
+    UnknownModel(ModelId),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { model, waited_us } => {
+                write!(f, "deadline exceeded after {waited_us}us on model {model}")
+            }
+            ServeError::BackendFailed { model, attempts } => {
+                write!(f, "backend for model {model} failed after {attempts} attempts")
+            }
+            ServeError::UnknownModel(m) => write!(f, "unknown model {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a reply channel carries.
+pub type ServeResult = std::result::Result<Response, ServeError>;
+
+/// A classification request: one feature tensor (flattened sample),
+/// plus its scheduling class and optional absolute deadline.
 pub struct Request {
     pub id: u64,
     pub features: Vec<f32>,
+    pub priority: Priority,
+    /// a request not started by this instant is answered with
+    /// [`ServeError::DeadlineExceeded`] instead of riding a batch
+    pub deadline: Option<Instant>,
     submitted: Instant,
-    reply: Sender<Response>,
+    reply: Sender<ServeResult>,
 }
 
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// the model that served this request
+    pub model: ModelId,
+    pub priority: Priority,
     pub logits: Vec<f32>,
     pub class: usize,
     pub latency_us: f64,
@@ -77,11 +187,24 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// Inference backend executed by a worker.
+// ---------------------------------------------------------------------------
+// Backends
+// ---------------------------------------------------------------------------
+
+/// Inference backend executed by a worker. The contract is
+/// allocation-free: the worker owns the staging buffers, the backend
+/// owns its scratch, and per-batch metadata is borrowed, not cloned.
 pub trait Backend {
-    /// (B, sample_numel) -> (B, classes)
-    fn infer(&mut self, x: &TensorF) -> Result<TensorF>;
-    fn sample_shape(&self) -> Vec<usize>;
+    /// Flattened `(batch, sample_numel)` features → logits into `out`
+    /// (`batch * out_dim()`, row-major).
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()>;
+
+    /// Per-sample feature shape — borrowed: this is called on the hot
+    /// path (per batch), a clone per call was pure allocator traffic.
+    fn sample_shape(&self) -> &[usize];
+
+    /// Logits per sample (sizes the worker's output window).
+    fn out_dim(&self) -> usize;
 }
 
 /// Native integer engine backend (batch-size agnostic).
@@ -89,27 +212,64 @@ pub struct NativeBackend {
     pub net: Arc<FqKwsNet>,
     scratch: Scratch,
     shape: Vec<usize>,
+    /// intra-layer thread budget for the batch-of-one fast path
+    intra_threads: usize,
 }
 
 impl NativeBackend {
+    /// Backend with the batch-of-one fast path sized to the machine
+    /// ([`exec::default_threads`]). NOTE: the global [`exec::Pool`]
+    /// serializes concurrent forks, so on a many-worker pool serving
+    /// max_batch=1 traffic, replicas built with
+    /// [`NativeBackend::with_intra_threads`]`(.., 1)` can outperform
+    /// the default (worker-level parallelism instead of contended
+    /// intra-layer forks); outputs are bit-identical either way.
     pub fn new(net: Arc<FqKwsNet>, shape: Vec<usize>) -> Self {
-        NativeBackend { net, scratch: Scratch::default(), shape }
+        let threads = exec::default_threads();
+        NativeBackend::with_intra_threads(net, shape, threads)
+    }
+
+    /// Backend with an explicit intra-layer budget for batches of one
+    /// (`1` disables the fast path; outputs are bit-identical either way).
+    pub fn with_intra_threads(net: Arc<FqKwsNet>, shape: Vec<usize>, intra_threads: usize) -> Self {
+        let scratch = Scratch::for_graph(net.graph());
+        NativeBackend { net, scratch, shape, intra_threads: intra_threads.max(1) }
+    }
+
+    /// A shareable factory for [`ModelRegistry::register`] /
+    /// [`Server::start`]: every call builds a fresh replica over the
+    /// shared network.
+    pub fn factory(net: &Arc<FqKwsNet>, shape: &[usize]) -> BackendFactory {
+        let (net, shape) = (Arc::clone(net), shape.to_vec());
+        Arc::new(move |_wi| {
+            Box::new(NativeBackend::new(Arc::clone(&net), shape.clone())) as Box<dyn Backend>
+        })
     }
 }
 
 impl Backend for NativeBackend {
-    fn infer(&mut self, x: &TensorF) -> Result<TensorF> {
-        let b = x.shape()[0];
-        let mut out = vec![0f32; b * self.net.classes];
-        // shared batch loop with FqKwsNet::forward_batch; worker-level
-        // parallelism comes from the pool, so each backend stays
-        // single-threaded over its own reusable scratch
-        self.net.forward_rows(x.data(), &mut self.scratch, &mut out);
-        Ok(TensorF::from_vec(&[b, self.net.classes], out))
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(out.len() == batch * self.net.classes, "logit buffer size");
+        if batch == 1 {
+            // batch-of-one fast path (max_batch == 1 policies route every
+            // request here): spend the whole thread budget *inside* the
+            // layer kernels instead of across a one-sample batch loop
+            self.net.forward_into(x, &mut self.scratch, out, self.intra_threads);
+        } else {
+            // shared batch loop with FqKwsNet::forward_batch; worker-level
+            // parallelism comes from the pool, so each backend stays
+            // single-threaded over its own reusable scratch
+            self.net.forward_rows(x, &mut self.scratch, out);
+        }
+        Ok(())
     }
 
-    fn sample_shape(&self) -> Vec<usize> {
-        self.shape.clone()
+    fn sample_shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn out_dim(&self) -> usize {
+        self.net.classes
     }
 }
 
@@ -117,8 +277,9 @@ impl Backend for NativeBackend {
 ///
 /// NOTE: the `xla` crate's PJRT handles are not `Send` (Rc-based), so an
 /// `XlaBackend` must be constructed *inside* its worker thread — use
-/// [`XlaBackend::factory`] with [`Server::start_with`], which builds one
-/// engine + compiled executable per worker.
+/// [`XlaBackend::factory`], which builds one engine + compiled
+/// executable per worker, lazily on the worker's first batch for the
+/// model.
 pub struct XlaBackend {
     _engine: Engine,
     exe: Executable,
@@ -144,7 +305,8 @@ impl XlaBackend {
         Ok(XlaBackend { _engine: engine, exe, params, hp: hpv, batch, classes, shape })
     }
 
-    /// A `Send` factory for [`Server::start_with`].
+    /// A shareable factory for [`ModelRegistry::register`] /
+    /// [`Server::start`]: every call builds a fresh in-thread replica.
     pub fn factory(
         artifact: PathBuf,
         params: Vec<(Vec<usize>, Vec<f32>)>,
@@ -153,9 +315,9 @@ impl XlaBackend {
         classes: usize,
         shape: Vec<usize>,
     ) -> BackendFactory {
-        Box::new(move || {
+        Arc::new(move |_wi| {
             Box::new(
-                XlaBackend::load(&artifact, params, hpv, batch, classes, shape)
+                XlaBackend::load(&artifact, params.clone(), hpv, batch, classes, shape.clone())
                     .expect("building XLA backend"),
             ) as Box<dyn Backend>
         })
@@ -163,11 +325,12 @@ impl XlaBackend {
 }
 
 impl Backend for XlaBackend {
-    fn infer(&mut self, x: &TensorF) -> Result<TensorF> {
-        let b = x.shape()[0];
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
         let per: usize = self.shape.iter().product();
-        anyhow::ensure!(b <= self.batch, "batch {b} exceeds artifact batch {}", self.batch);
-        let mut padded = x.data().to_vec();
+        anyhow::ensure!(x.len() == batch * per, "feature geometry");
+        anyhow::ensure!(batch <= self.batch, "batch {batch} exceeds artifact batch {}", self.batch);
+        anyhow::ensure!(out.len() == batch * self.classes, "logit buffer size");
+        let mut padded = x.to_vec();
         padded.resize(self.batch * per, 0.0);
         let mut shape = vec![self.batch];
         shape.extend(&self.shape);
@@ -177,73 +340,107 @@ impl Backend for XlaBackend {
         inputs.push(lit_f32(&[hp::LEN], &self.hp));
         let outs = self.exe.run(&inputs)?;
         let logits = lit_to_vec_f32(&outs[0])?;
-        Ok(TensorF::from_vec(&[b, self.classes], logits[..b * self.classes].to_vec()))
+        out.copy_from_slice(&logits[..batch * self.classes]);
+        Ok(())
     }
 
-    fn sample_shape(&self) -> Vec<usize> {
-        self.shape.clone()
+    fn sample_shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn out_dim(&self) -> usize {
+        self.classes
     }
 }
 
-/// Backend constructor executed inside the worker thread (required for
-/// non-Send backends like [`XlaBackend`]).
-pub type BackendFactory = Box<dyn FnOnce() -> Box<dyn Backend> + Send>;
+/// Shareable backend constructor: every worker calls it (with its
+/// worker index) *inside its own thread* the first time it pulls a
+/// batch for the model — which is how non-Send backends like
+/// [`XlaBackend`] get one replica per worker.
+pub type BackendFactory = Arc<dyn Fn(usize) -> Box<dyn Backend> + Send + Sync>;
 
-/// Wrap an already-Send backend in a factory.
-pub fn ready<B: Backend + Send + 'static>(b: B) -> BackendFactory {
-    Box::new(move || Box::new(b) as Box<dyn Backend>)
+/// Wrap a per-replica constructor into a [`BackendFactory`] (the worker
+/// index is ignored; each call builds a fresh backend).
+pub fn ready<B, F>(make: F) -> BackendFactory
+where
+    B: Backend + 'static,
+    F: Fn() -> B + Send + Sync + 'static,
+{
+    Arc::new(move |_wi| Box::new(make()) as Box<dyn Backend>)
+}
+
+/// A [`BackendFactory`] that sees the worker index — lets tests and
+/// heterogeneous deployments give specific workers specific replicas.
+pub fn ready_indexed<F>(make: F) -> BackendFactory
+where
+    F: Fn(usize) -> Box<dyn Backend> + Send + Sync + 'static,
+{
+    Arc::new(make)
 }
 
 // ---------------------------------------------------------------------------
-// Shared work queue
+// Shared two-lane work queue
 // ---------------------------------------------------------------------------
 
-/// One closed batch travelling from the batcher to a worker.
+/// One closed batch travelling from a model's batcher to a worker.
 struct QueuedBatch {
+    model: Arc<ModelEntry>,
+    priority: Priority,
     reqs: Vec<Request>,
-    /// delivery attempts so far (bounds error-path re-queues)
+    /// delivery attempts that actually ran a backend and failed
+    /// (bounds error-path re-queues)
     attempts: usize,
+    /// hand-backs by workers whose replica for the model is quarantined
+    /// (bounds the ping-pong when every worker has quarantined it)
+    bounces: usize,
 }
 
 struct QueueState {
-    q: VecDeque<QueuedBatch>,
+    /// one FIFO lane per [`Priority`], indexed by [`Priority::index`]
+    lanes: [VecDeque<QueuedBatch>; 2],
     closed: bool,
 }
 
-/// MPMC batch queue: the batcher pushes, idle workers pull.
+/// MPMC batch queue: model batchers push into their lane, idle workers
+/// pull — Interactive lane strictly first.
 struct SharedQueue {
     state: Mutex<QueueState>,
     cv: Condvar,
 }
 
 impl SharedQueue {
-    fn new() -> Arc<Self> {
-        Arc::new(SharedQueue {
-            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+    fn new() -> Self {
+        SharedQueue {
+            state: Mutex::new(QueueState {
+                lanes: [VecDeque::new(), VecDeque::new()],
+                closed: false,
+            }),
             cv: Condvar::new(),
-        })
+        }
     }
 
-    /// Push to the back. On a closed queue (all workers retired) the
-    /// batch is dropped instead — dropping its reply senders signals a
-    /// disconnect to waiting clients rather than queueing them forever.
-    fn push_back(&self, b: QueuedBatch) {
+    /// Push to the back of the batch's lane. On a closed queue (all
+    /// workers retired) every member is answered with a typed
+    /// [`ServeError::BackendFailed`] instead of queueing forever.
+    fn push(&self, b: QueuedBatch) {
         let mut st = self.state.lock().unwrap();
         if st.closed {
             drop(st);
-            drop(b);
+            fail_batch(b);
             return;
         }
-        st.q.push_back(b);
+        st.lanes[b.priority.index()].push_back(b);
         drop(st);
         self.cv.notify_one();
     }
 
-    /// Blocking pop; `None` once the queue is closed *and* drained.
+    /// Blocking pop, Interactive lane first; `None` once the queue is
+    /// closed *and* drained.
     fn pop(&self) -> Option<QueuedBatch> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(b) = st.q.pop_front() {
+            // lanes are in Priority::index order: Interactive first
+            if let Some(b) = st.lanes.iter_mut().find_map(|l| l.pop_front()) {
                 return Some(b);
             }
             if st.closed {
@@ -253,12 +450,12 @@ impl SharedQueue {
         }
     }
 
-    /// Close and return whatever was still queued (dropping the returned
-    /// batches drops their reply senders, unblocking waiting clients).
+    /// Close and return whatever was still queued (the caller answers
+    /// each drained batch with a typed error).
     fn close_and_drain(&self) -> Vec<QueuedBatch> {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
-        let drained = st.q.drain(..).collect();
+        let drained = st.lanes.iter_mut().flat_map(|l| l.drain(..)).collect();
         drop(st);
         self.cv.notify_all();
         drained
@@ -272,11 +469,78 @@ impl SharedQueue {
     }
 }
 
+/// Answer every member of a batch with [`ServeError::BackendFailed`].
+fn fail_batch(b: QueuedBatch) {
+    let QueuedBatch { model, reqs, attempts, .. } = b;
+    model.counters.dropped.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+    for r in reqs {
+        let _ = r
+            .reply
+            .send(Err(ServeError::BackendFailed { model: model.id.clone(), attempts }));
+    }
+}
+
+/// Answer one request with [`ServeError::DeadlineExceeded`].
+fn expire(r: Request, entry: &ModelEntry) {
+    entry.counters.expired.fetch_add(1, Ordering::Relaxed);
+    let waited = (r.submitted.elapsed().as_secs_f64() * 1e6) as u64;
+    let _ = r
+        .reply
+        .send(Err(ServeError::DeadlineExceeded { model: entry.id.clone(), waited_us: waited }));
+}
+
 // ---------------------------------------------------------------------------
-// Server
+// Registry
 // ---------------------------------------------------------------------------
 
-/// Per-worker counters (lock-free; read by [`Server::stats`]).
+/// Everything the registry needs to serve one model.
+pub struct ModelSpec {
+    pub factory: BackendFactory,
+    /// flattened feature count per sample (checked at submit)
+    pub sample_numel: usize,
+    pub policy: BatchPolicy,
+}
+
+/// Per-model lock-free counters + latency histograms.
+struct ModelCounters {
+    served: AtomicU64,
+    batches: AtomicU64,
+    expired: AtomicU64,
+    dropped: AtomicU64,
+    hist: Mutex<LatencyHist>,
+    prio_hist: [Mutex<LatencyHist>; 2],
+    served_by_prio: [AtomicU64; 2],
+}
+
+impl ModelCounters {
+    fn new() -> Self {
+        ModelCounters {
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            hist: Mutex::new(LatencyHist::new()),
+            prio_hist: [Mutex::new(LatencyHist::new()), Mutex::new(LatencyHist::new())],
+            served_by_prio: [AtomicU64::new(0), AtomicU64::new(0)],
+        }
+    }
+}
+
+/// One registered model: identity, backend recipe, batching policy,
+/// its ingress (taken on evict to stop the batcher) and its counters.
+struct ModelEntry {
+    id: ModelId,
+    /// bumped per (re-)registration — a worker's cached replica for a
+    /// re-registered id is stale when generations differ
+    generation: u64,
+    factory: BackendFactory,
+    sample_numel: usize,
+    policy: BatchPolicy,
+    ingress: Mutex<Option<Sender<Request>>>,
+    counters: ModelCounters,
+}
+
+/// Per-worker counters (lock-free; read by [`ModelRegistry::stats`]).
 #[derive(Debug, Default)]
 struct WorkerSlot {
     batches: AtomicU64,
@@ -292,134 +556,233 @@ pub struct WorkerStats {
     pub batches: u64,
     pub served: u64,
     pub errors: u64,
-    /// false once the worker retired (backend error) or shut down
+    /// false once the worker died (panicking backend) or shut down —
+    /// backend *errors* never retire a worker, they quarantine replicas
     pub alive: bool,
 }
 
-/// Server statistics snapshot.
+/// Per-priority latency snapshot.
 #[derive(Clone, Debug, Default)]
-pub struct ServerStats {
+pub struct PriorityStats {
+    pub served: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// Snapshot of one model's counters.
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub id: ModelId,
     pub served: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    /// requests answered with [`ServeError::DeadlineExceeded`]
+    pub expired: u64,
+    /// requests answered with [`ServeError::BackendFailed`]
+    pub dropped: u64,
     pub latency_summary: String,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// indexed by [`Priority::index`]
+    pub priorities: [PriorityStats; 2],
+}
+
+/// Registry-wide statistics snapshot.
+#[derive(Clone, Debug)]
+pub struct RegistryStats {
+    pub served: u64,
+    pub batches: u64,
+    /// per registered model, sorted by id
+    pub models: Vec<ModelStats>,
     /// per-worker counters, indexed by worker id
     pub workers: Vec<WorkerStats>,
 }
 
-pub struct Server {
-    ingress: Sender<Request>,
-    next_id: AtomicU64,
-    served: Arc<AtomicUsize>,
-    batches: Arc<AtomicUsize>,
-    hist: Arc<Mutex<LatencyHist>>,
-    slots: Arc<Vec<WorkerSlot>>,
-    sample_numel: usize,
-    workers: Vec<thread::JoinHandle<()>>,
-    batcher: Option<thread::JoinHandle<()>>,
+struct RegistryInner {
+    queue: SharedQueue,
+    models: Mutex<HashMap<ModelId, Arc<ModelEntry>>>,
+    next_req_id: AtomicU64,
+    next_generation: AtomicU64,
+    /// bumped per evict — workers compare against it to prune cached
+    /// replicas of models that are no longer registered
+    evictions: AtomicU64,
+    served: AtomicU64,
+    batches: AtomicU64,
+    slots: Vec<WorkerSlot>,
+    alive: AtomicUsize,
+    /// a batch that keeps failing is answered with a typed error after
+    /// this many deliveries; the +1 guarantees a batch failed only by
+    /// one soon-to-quarantine replica still reaches a healthy one
+    max_attempts: usize,
+    /// quarantine hand-backs before a batch is failed (each bounce
+    /// re-queues first and then backs off 1 ms, so a healthy worker has
+    /// ample opportunity to take the batch in between)
+    max_bounces: usize,
 }
 
-impl Server {
-    /// Start a server over backend factories (one worker thread per
-    /// factory; each factory runs inside its thread so non-Send backends
-    /// like XLA executables work).
-    pub fn start_with(
-        factories: Vec<BackendFactory>,
-        sample_numel: usize,
-        policy: BatchPolicy,
-    ) -> Self {
-        assert!(!factories.is_empty());
-        let n_workers = factories.len();
-        let (ingress_tx, ingress_rx) = mpsc::channel::<Request>();
-        let served = Arc::new(AtomicUsize::new(0));
-        let batches = Arc::new(AtomicUsize::new(0));
-        let hist = Arc::new(Mutex::new(LatencyHist::new()));
-        let queue = SharedQueue::new();
-        let slots: Arc<Vec<WorkerSlot>> =
-            Arc::new((0..n_workers).map(|_| WorkerSlot::default()).collect());
-        let alive = Arc::new(AtomicUsize::new(n_workers));
-        // a batch that keeps failing is eventually dropped (clients see
-        // a disconnect, not a hang); the +1 guarantees a batch failed
-        // only by one soon-to-retire worker still reaches a healthy one
-        let max_attempts = n_workers + 1;
+/// Multi-model serving: register/evict named models at runtime; every
+/// model gets its own ingress + batcher, all models share one worker
+/// pool via the two-lane priority queue. See the module docs for the
+/// full architecture diagram.
+pub struct ModelRegistry {
+    inner: Arc<RegistryInner>,
+    workers: Vec<thread::JoinHandle<()>>,
+    batchers: Mutex<Vec<thread::JoinHandle<()>>>,
+}
 
-        let mut workers = Vec::new();
-        for (wi, factory) in factories.into_iter().enumerate() {
-            let queue = Arc::clone(&queue);
-            let served = Arc::clone(&served);
-            let batches = Arc::clone(&batches);
-            let hist = Arc::clone(&hist);
-            let slots = Arc::clone(&slots);
-            let alive = Arc::clone(&alive);
-            workers.push(
+impl ModelRegistry {
+    /// Start a registry with `n_workers` pull-based worker threads and
+    /// no models; [`ModelRegistry::register`] adds models at runtime.
+    pub fn start(n_workers: usize) -> Self {
+        assert!(n_workers >= 1, "registry needs at least one worker");
+        let inner = Arc::new(RegistryInner {
+            queue: SharedQueue::new(),
+            models: Mutex::new(HashMap::new()),
+            next_req_id: AtomicU64::new(0),
+            next_generation: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            slots: (0..n_workers).map(|_| WorkerSlot::default()).collect(),
+            alive: AtomicUsize::new(n_workers),
+            max_attempts: n_workers + 1,
+            max_bounces: 8 * n_workers,
+        });
+        let workers = (0..n_workers)
+            .map(|wi| {
+                let inner = Arc::clone(&inner);
                 thread::Builder::new()
                     .name(format!("fqconv-worker-{wi}"))
-                    .spawn(move || {
-                        worker_loop(
-                            wi,
-                            factory,
-                            sample_numel,
-                            &queue,
-                            &served,
-                            &batches,
-                            &hist,
-                            &slots[wi],
-                            &alive,
-                            max_attempts,
-                        );
-                    })
-                    .expect("spawn worker"),
-            );
+                    .spawn(move || worker_loop(wi, &inner))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ModelRegistry { inner, workers, batchers: Mutex::new(Vec::new()) }
+    }
+
+    /// Register a model under `id`: spawns its ingress + batcher thread
+    /// and makes it submittable. Errors if the id is already registered
+    /// (evict first to replace).
+    pub fn register(&self, id: impl Into<ModelId>, spec: ModelSpec) -> Result<()> {
+        let id = id.into();
+        let mut models = self.inner.models.lock().unwrap();
+        anyhow::ensure!(!models.contains_key(&id), "model {id} already registered");
+        let (tx, rx) = mpsc::channel::<Request>();
+        let entry = Arc::new(ModelEntry {
+            id: id.clone(),
+            generation: self.inner.next_generation.fetch_add(1, Ordering::Relaxed),
+            factory: spec.factory,
+            sample_numel: spec.sample_numel,
+            policy: spec.policy,
+            ingress: Mutex::new(Some(tx)),
+            counters: ModelCounters::new(),
+        });
+        models.insert(id.clone(), Arc::clone(&entry));
+        drop(models);
+        let inner = Arc::clone(&self.inner);
+        let handle = thread::Builder::new()
+            .name(format!("fqconv-batcher-{id}"))
+            .spawn(move || batcher_loop(rx, &inner, &entry))
+            .expect("spawn batcher");
+        let mut batchers = self.batchers.lock().unwrap();
+        // reap batchers of evicted models (their threads already exited)
+        // so register/evict cycles don't grow the handle list forever
+        let mut i = 0;
+        while i < batchers.len() {
+            if batchers[i].is_finished() {
+                let _ = batchers.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
         }
+        batchers.push(handle);
+        Ok(())
+    }
 
-        // batcher thread: assemble batches per policy, push to the queue
-        let batcher = {
-            let queue = Arc::clone(&queue);
-            thread::Builder::new()
-                .name("fqconv-batcher".into())
-                .spawn(move || batcher_loop(ingress_rx, &queue, policy))
-                .expect("spawn batcher")
-        };
-
-        Server {
-            ingress: ingress_tx,
-            next_id: AtomicU64::new(0),
-            served,
-            batches,
-            hist,
-            slots,
-            sample_numel,
-            workers,
-            batcher: Some(batcher),
+    /// Evict a model: unregisters the id and stops its batcher (after
+    /// it dispatched everything already ingressed). Batches already on
+    /// the shared queue still get served. Returns false if the id was
+    /// not registered.
+    pub fn evict(&self, id: &ModelId) -> bool {
+        let entry = self.inner.models.lock().unwrap().remove(id);
+        match entry {
+            Some(e) => {
+                // dropping the sender disconnects the batcher's ingress;
+                // it dispatches its forming batches and exits
+                e.ingress.lock().unwrap().take();
+                // tell workers to prune their cached replica of this model
+                self.inner.evictions.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
         }
     }
 
-    /// Submit a request; returns the response channel.
-    pub fn submit(&self, features: Vec<f32>) -> Receiver<Response> {
-        assert_eq!(features.len(), self.sample_numel, "bad feature length");
+    /// Registered model ids, sorted.
+    pub fn model_ids(&self) -> Vec<ModelId> {
+        let mut ids: Vec<ModelId> = self.inner.models.lock().unwrap().keys().cloned().collect();
+        ids.sort();
+        ids
+    }
+
+    /// Submit an Interactive request with no deadline.
+    pub fn submit(
+        &self,
+        id: &ModelId,
+        features: Vec<f32>,
+    ) -> std::result::Result<Receiver<ServeResult>, ServeError> {
+        self.submit_with(id, features, Priority::Interactive, None)
+    }
+
+    /// Submit with an explicit priority class and optional deadline
+    /// budget (relative to now); returns the reply channel.
+    pub fn submit_with(
+        &self,
+        id: &ModelId,
+        features: Vec<f32>,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<Receiver<ServeResult>, ServeError> {
+        let entry = match self.inner.models.lock().unwrap().get(id) {
+            Some(e) => Arc::clone(e),
+            None => return Err(ServeError::UnknownModel(id.clone())),
+        };
+        assert_eq!(features.len(), entry.sample_numel, "bad feature length for model {id}");
+        let now = Instant::now();
         let (tx, rx) = mpsc::channel();
         let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id: self.inner.next_req_id.fetch_add(1, Ordering::Relaxed),
             features,
-            submitted: Instant::now(),
+            priority,
+            deadline: deadline.map(|d| now + d),
+            submitted: now,
             reply: tx,
         };
-        self.ingress.send(req).expect("server closed");
-        rx
+        let ingress = entry.ingress.lock().unwrap();
+        match ingress.as_ref().map(|tx| tx.send(req)) {
+            Some(Ok(())) => Ok(rx),
+            // racing an evict: the model is gone as far as clients care
+            _ => Err(ServeError::UnknownModel(id.clone())),
+        }
     }
 
-    /// Blocking convenience call.
-    pub fn infer(&self, features: Vec<f32>) -> Response {
-        self.submit(features).recv().expect("worker dropped")
+    /// Blocking convenience call (Interactive, no deadline).
+    pub fn infer(&self, id: &ModelId, features: Vec<f32>) -> ServeResult {
+        match self.submit(id, features) {
+            Ok(rx) => rx.recv().unwrap_or_else(|_| {
+                Err(ServeError::BackendFailed { model: id.clone(), attempts: 0 })
+            }),
+            Err(e) => Err(e),
+        }
     }
 
-    pub fn stats(&self) -> ServerStats {
-        let hist = self.hist.lock().unwrap();
-        let served = self.served.load(Ordering::Relaxed) as u64;
-        let batches = self.batches.load(Ordering::Relaxed) as u64;
+    pub fn stats(&self) -> RegistryStats {
+        let mut entries: Vec<Arc<ModelEntry>> =
+            self.inner.models.lock().unwrap().values().cloned().collect();
+        entries.sort_by(|a, b| a.id.cmp(&b.id));
+        let models = entries.iter().map(|e| model_stats(e)).collect();
         let workers = self
+            .inner
             .slots
             .iter()
             .enumerate()
@@ -431,132 +794,434 @@ impl Server {
                 alive: !s.retired.load(Ordering::Relaxed),
             })
             .collect();
-        ServerStats {
-            served,
-            batches,
-            mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
-            latency_summary: hist.summary(),
-            p50_us: hist.percentile(50.0),
-            p99_us: hist.percentile(99.0),
+        RegistryStats {
+            served: self.inner.served.load(Ordering::Relaxed),
+            batches: self.inner.batches.load(Ordering::Relaxed),
+            models,
             workers,
         }
     }
 
-    /// Graceful shutdown: drain, then join threads.
+    /// Graceful shutdown: stop every batcher, let workers drain the
+    /// queue, then join all threads. Dropping the registry performs the
+    /// same teardown, so an early return or panic cannot leak the pool.
     pub fn shutdown(mut self) {
-        drop(std::mem::replace(&mut self.ingress, mpsc::channel().0));
-        if let Some(b) = self.batcher.take() {
+        self.teardown();
+    }
+
+    /// Idempotent shutdown body, shared by [`ModelRegistry::shutdown`]
+    /// and `Drop`.
+    fn teardown(&mut self) {
+        {
+            let models = self.inner.models.lock().unwrap();
+            for e in models.values() {
+                e.ingress.lock().unwrap().take();
+            }
+        }
+        for b in self.batchers.lock().unwrap().drain(..) {
             let _ = b.join();
         }
+        // everything ingressed is now on the queue; close it so workers
+        // exit after draining
+        self.inner.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-/// A worker retires after this many **consecutive** backend errors —
-/// one error can be batch-attributed (bad payload), an unbroken run of
-/// them means the backend replica itself is poisoned. Any successful
-/// batch resets the count.
+impl Drop for ModelRegistry {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn model_stats(e: &ModelEntry) -> ModelStats {
+    let served = e.counters.served.load(Ordering::Relaxed);
+    let batches = e.counters.batches.load(Ordering::Relaxed);
+    let hist = e.counters.hist.lock().unwrap();
+    let mut priorities: [PriorityStats; 2] = Default::default();
+    for p in Priority::ALL {
+        let i = p.index();
+        let ph = e.counters.prio_hist[i].lock().unwrap();
+        priorities[i] = PriorityStats {
+            served: e.counters.served_by_prio[i].load(Ordering::Relaxed),
+            p50_us: ph.percentile(50.0),
+            p99_us: ph.percentile(99.0),
+        };
+    }
+    ModelStats {
+        id: e.id.clone(),
+        served,
+        batches,
+        mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
+        expired: e.counters.expired.load(Ordering::Relaxed),
+        dropped: e.counters.dropped.load(Ordering::Relaxed),
+        latency_summary: hist.summary(),
+        p50_us: hist.percentile(50.0),
+        p99_us: hist.percentile(99.0),
+        priorities,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-model facade
+// ---------------------------------------------------------------------------
+
+/// Server statistics snapshot (single-model facade view).
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub expired: u64,
+    pub dropped: u64,
+    pub latency_summary: String,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// indexed by [`Priority::index`]
+    pub priorities: [PriorityStats; 2],
+    /// per-worker counters, indexed by worker id
+    pub workers: Vec<WorkerStats>,
+}
+
+/// Single-model convenience facade over a [`ModelRegistry`]: one
+/// registered model named `"default"`, same workers/batcher/queue
+/// machinery underneath.
+pub struct Server {
+    registry: ModelRegistry,
+    model: ModelId,
+}
+
+impl Server {
+    /// Start a registry with `workers` worker threads and register one
+    /// model over `factory`.
+    pub fn start(
+        factory: BackendFactory,
+        workers: usize,
+        sample_numel: usize,
+        policy: BatchPolicy,
+    ) -> Self {
+        let registry = ModelRegistry::start(workers);
+        let model = ModelId::new("default");
+        registry
+            .register(model.clone(), ModelSpec { factory, sample_numel, policy })
+            .expect("fresh registry cannot have the id");
+        Server { registry, model }
+    }
+
+    /// The underlying registry (register more models, evict, etc.).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    pub fn model_id(&self) -> &ModelId {
+        &self.model
+    }
+
+    /// Submit an Interactive request; returns the reply channel.
+    pub fn submit(&self, features: Vec<f32>) -> Receiver<ServeResult> {
+        self.submit_with(features, Priority::Interactive, None)
+    }
+
+    /// Submit with a priority class and optional deadline budget. If the
+    /// facade's model was evicted through [`Server::registry`], the
+    /// reply channel carries the typed [`ServeError::UnknownModel`]
+    /// (never a panic or bare disconnect).
+    pub fn submit_with(
+        &self,
+        features: Vec<f32>,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Receiver<ServeResult> {
+        match self.registry.submit_with(&self.model, features, priority, deadline) {
+            Ok(rx) => rx,
+            Err(e) => {
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Err(e));
+                rx
+            }
+        }
+    }
+
+    /// Blocking convenience call; panics on a serving error (use
+    /// [`Server::submit`] for typed error handling).
+    pub fn infer(&self, features: Vec<f32>) -> Response {
+        self.submit(features).recv().expect("worker dropped").expect("serving failed")
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let rs = self.registry.stats();
+        let m = rs.models.into_iter().find(|m| m.id == self.model);
+        let mut out = ServerStats { workers: rs.workers, ..Default::default() };
+        if let Some(m) = m {
+            out.served = m.served;
+            out.batches = m.batches;
+            out.mean_batch = m.mean_batch;
+            out.expired = m.expired;
+            out.dropped = m.dropped;
+            out.latency_summary = m.latency_summary;
+            out.p50_us = m.p50_us;
+            out.p99_us = m.p99_us;
+            out.priorities = m.priorities;
+        }
+        out
+    }
+
+    /// Graceful shutdown: drain, then join threads.
+    pub fn shutdown(self) {
+        self.registry.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker + batcher loops
+// ---------------------------------------------------------------------------
+
+/// A worker quarantines its replica for a model after this many
+/// **consecutive** backend errors on that model — one error can be
+/// batch-attributed (bad payload), an unbroken run of them means the
+/// replica itself is poisoned. Any successful batch resets the budget.
+/// Quarantine is per `(worker, model)`: the worker stays alive and
+/// keeps serving every other model, and re-queues the quarantined
+/// model's batches (bounded attempts) so healthy replicas on other
+/// workers can absorb them — one broken model cannot take down the
+/// shared pool.
 pub const MAX_WORKER_ERRORS: u64 = 2;
 
 /// Runs the worker's retirement bookkeeping on *every* exit path —
 /// including a panicking backend — so the last worker out always
-/// closes the queue and unblocks waiting clients.
+/// closes the queue and answers waiting clients with typed errors.
 struct RetireGuard<'a> {
     slot: &'a WorkerSlot,
-    alive: &'a AtomicUsize,
-    queue: &'a SharedQueue,
+    inner: &'a RegistryInner,
 }
 
 impl Drop for RetireGuard<'_> {
     fn drop(&mut self) {
         self.slot.retired.store(true, Ordering::Relaxed);
-        if self.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+        if self.inner.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
             // last worker out: nothing can serve queued batches any more
-            drop(self.queue.close_and_drain());
+            for qb in self.inner.queue.close_and_drain() {
+                fail_batch(qb);
+            }
         }
     }
 }
 
-/// One worker: pull batches from the shared queue until it closes.
-/// A backend error re-queues the batch at the back (bounded attempts,
-/// then dropped); the worker itself retires after [`MAX_WORKER_ERRORS`]
-/// consecutive failures and the shared queue lets the remaining workers
-/// absorb the load.
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    wi: usize,
-    factory: BackendFactory,
-    sample_numel: usize,
-    queue: &SharedQueue,
-    served: &AtomicUsize,
-    batches: &AtomicUsize,
-    hist: &Mutex<LatencyHist>,
-    slot: &WorkerSlot,
-    alive: &AtomicUsize,
-    max_attempts: usize,
-) {
-    let _guard = RetireGuard { slot, alive, queue };
-    let mut backend = factory();
-    let mut my_errors = 0u64;
-    // batch feature staging buffer, recycled across batches (the tensor
-    // hands the allocation back via into_vec after each infer call)
+/// `max_by(partial_cmp)` over a logits row — last maximum wins on ties,
+/// matching `TensorF::argmax_rows` so the registry rework changed no
+/// predicted class.
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// One worker: pull batches from the shared queue until it closes,
+/// lazily building one backend replica per model (cached across
+/// batches, invalidated by re-registration, pruned on eviction via the
+/// registry's eviction epoch). A backend error re-queues the batch at
+/// the back of its lane (bounded attempts, then a typed error); after
+/// [`MAX_WORKER_ERRORS`] consecutive failures *on one model* the worker
+/// quarantines that model's replica — it keeps serving every other
+/// model and hands the quarantined model's batches back to the queue
+/// for healthier replicas. The worker itself only exits on queue close
+/// or a panicking backend (RetireGuard).
+fn worker_loop(wi: usize, inner: &RegistryInner) {
+    let slot = &inner.slots[wi];
+    let _guard = RetireGuard { slot, inner };
+    let mut backends: HashMap<ModelId, (u64, Box<dyn Backend>)> = HashMap::new();
+    // per model: (generation, consecutive error count) / quarantined
+    // generation — generation-scoped so a re-registered model never
+    // inherits its predecessor's error budget
+    let mut errs: HashMap<ModelId, (u64, u64)> = HashMap::new();
+    let mut quarantined: HashMap<ModelId, u64> = HashMap::new();
+    let mut seen_evictions = 0u64;
+    // staging buffers, recycled across batches and models
     let mut flat: Vec<f32> = Vec::new();
-    while let Some(mut qb) = queue.pop() {
+    let mut out: Vec<f32> = Vec::new();
+    let mut live: Vec<Request> = Vec::new();
+    while let Some(mut qb) = inner.queue.pop() {
+        let entry = Arc::clone(&qb.model);
+        // an evict happened since we last looked: drop replicas (and
+        // quarantine marks) whose registration is gone, so e.g. an
+        // evicted XLA replica does not sit in memory until shutdown
+        let evictions = inner.evictions.load(Ordering::Relaxed);
+        if evictions != seen_evictions {
+            seen_evictions = evictions;
+            let models = inner.models.lock().unwrap();
+            backends.retain(|mid, (gen, _)| {
+                models.get(mid).is_some_and(|e| e.generation == *gen)
+            });
+            quarantined.retain(|mid, gen| {
+                models.get(mid).is_some_and(|e| e.generation == *gen)
+            });
+            errs.retain(|mid, (gen, _)| {
+                models.get(mid).is_some_and(|e| e.generation == *gen)
+            });
+        }
+        // expire members whose deadline passed while queued
+        let now = Instant::now();
+        live.clear();
+        for r in qb.reqs.drain(..) {
+            if r.deadline.is_some_and(|d| now > d) {
+                expire(r, &entry);
+            } else {
+                live.push(r);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        std::mem::swap(&mut qb.reqs, &mut live);
         let b = qb.reqs.len();
+
+        // this worker's replica is quarantined: hand the batch back for
+        // another worker. Re-queue FIRST so the batch is visible to
+        // healthier workers during this worker's back-off; the bounce
+        // budget keeps this terminating (with a typed failure) even
+        // when every worker has quarantined the model.
+        if quarantined.get(&entry.id) == Some(&entry.generation) {
+            qb.bounces += 1;
+            if qb.bounces >= inner.max_bounces {
+                log::error!(
+                    "model {}: every worker has quarantined its replica; failing a \
+                     batch of {b} after {} hand-backs",
+                    entry.id,
+                    qb.bounces
+                );
+                fail_batch(qb);
+            } else {
+                inner.queue.push(qb);
+                thread::sleep(Duration::from_millis(1));
+            }
+            continue;
+        }
+
+        // resolve this worker's replica for the model (lazy + cached)
+        let fresh = backends.get(&entry.id).is_some_and(|(gen, _)| *gen == entry.generation);
+        let mut oneshot: Option<Box<dyn Backend>> = None;
+        if !fresh {
+            let live_generation =
+                inner.models.lock().unwrap().get(&entry.id).map(|e| e.generation);
+            let replica = (entry.factory)(wi);
+            // a misregistered model (factory shape != sample_numel) must
+            // fail typed, not panic inside the backend in release builds
+            // — a panicking worker is the one cascade quarantine cannot
+            // contain
+            let numel: usize = replica.sample_shape().iter().product();
+            if numel != entry.sample_numel {
+                log::error!(
+                    "model {}: backend sample shape {:?} (numel {numel}) disagrees with \
+                     registered sample_numel {}; quarantining and failing the batch",
+                    entry.id,
+                    replica.sample_shape(),
+                    entry.sample_numel
+                );
+                quarantined.insert(entry.id.clone(), entry.generation);
+                fail_batch(qb);
+                continue;
+            }
+            if live_generation == Some(entry.generation) {
+                backends.insert(entry.id.clone(), (entry.generation, replica));
+            } else {
+                // the batch belongs to an evicted / replaced registration:
+                // serve it with a one-shot replica instead of evicting the
+                // cache entry for the model's *current* generation
+                oneshot = Some(replica);
+            }
+        }
+        let backend = match oneshot.as_mut() {
+            Some(b) => b,
+            None => &mut backends.get_mut(&entry.id).unwrap().1,
+        };
+
         flat.clear();
-        flat.reserve(b * sample_numel);
+        flat.reserve(b * entry.sample_numel);
         for r in &qb.reqs {
             flat.extend_from_slice(&r.features);
         }
-        let x = TensorF::from_vec(&[b, sample_numel], std::mem::take(&mut flat));
-        let result = backend.infer(&x);
-        flat = x.into_vec();
-        match result {
-            Ok(logits) => {
-                my_errors = 0; // the error budget is for *consecutive* failures
+        let classes = backend.out_dim();
+        out.clear();
+        out.resize(b * classes, 0.0);
+        match backend.infer_into(&flat, b, &mut out) {
+            Ok(()) => {
+                // the budget is for *consecutive* failures of this
+                // registration — a stale one-shot success must not clear
+                // the current replica's count
+                if errs.get(&entry.id).is_some_and(|(gen, _)| *gen == entry.generation) {
+                    errs.remove(&entry.id);
+                }
                 // count the batch BEFORE replying: stats() may be read
                 // the instant the last response lands
-                batches.fetch_add(1, Ordering::Relaxed);
+                inner.batches.fetch_add(1, Ordering::Relaxed);
+                entry.counters.batches.fetch_add(1, Ordering::Relaxed);
                 slot.batches.fetch_add(1, Ordering::Relaxed);
-                let preds = logits.argmax_rows();
-                let classes = logits.shape()[1];
-                for (i, r) in qb.reqs.into_iter().enumerate() {
+                for (i, r) in qb.reqs.drain(..).enumerate() {
+                    let row = &out[i * classes..(i + 1) * classes];
                     let lat = r.submitted.elapsed().as_secs_f64() * 1e6;
-                    hist.lock().unwrap().record_us(lat);
-                    served.fetch_add(1, Ordering::Relaxed);
+                    let pi = r.priority.index();
+                    entry.counters.hist.lock().unwrap().record_us(lat);
+                    entry.counters.prio_hist[pi].lock().unwrap().record_us(lat);
+                    entry.counters.served_by_prio[pi].fetch_add(1, Ordering::Relaxed);
+                    entry.counters.served.fetch_add(1, Ordering::Relaxed);
+                    inner.served.fetch_add(1, Ordering::Relaxed);
                     slot.served.fetch_add(1, Ordering::Relaxed);
-                    let _ = r.reply.send(Response {
+                    let _ = r.reply.send(Ok(Response {
                         id: r.id,
-                        logits: logits.data()[i * classes..(i + 1) * classes].to_vec(),
-                        class: preds[i],
+                        model: entry.id.clone(),
+                        priority: r.priority,
+                        logits: row.to_vec(),
+                        class: argmax(row),
                         latency_us: lat,
                         batch_size: b,
-                    });
+                    }));
                 }
             }
             Err(e) => {
                 slot.errors.fetch_add(1, Ordering::Relaxed);
-                my_errors += 1;
-                qb.attempts += 1;
-                if qb.attempts < max_attempts {
-                    log::error!(
-                        "worker {wi} backend error (attempt {} of {max_attempts}): {e:#}",
-                        qb.attempts
-                    );
-                    queue.push_back(qb);
-                } else {
-                    // drop the batch — reply senders close and the
-                    // waiting clients observe a disconnect, not a hang
-                    log::error!(
-                        "worker {wi} backend error, dropping batch of {b} after \
-                         {max_attempts} attempts: {e:#}"
-                    );
+                let slot_errs =
+                    errs.entry(entry.id.clone()).or_insert((entry.generation, 0));
+                if slot_errs.0 != entry.generation {
+                    *slot_errs = (entry.generation, 0);
                 }
-                if my_errors >= MAX_WORKER_ERRORS {
-                    log::error!("worker {wi} retiring after {my_errors} consecutive errors");
-                    break;
+                slot_errs.1 += 1;
+                let model_errors = slot_errs.1;
+                qb.attempts += 1;
+                if qb.attempts < inner.max_attempts {
+                    log::error!(
+                        "worker {wi} backend error on model {} (attempt {} of {}): {e:#}",
+                        entry.id,
+                        qb.attempts,
+                        inner.max_attempts
+                    );
+                    inner.queue.push(qb);
+                } else {
+                    log::error!(
+                        "worker {wi} backend error on model {}, failing batch of {b} after \
+                         {} attempts: {e:#}",
+                        entry.id,
+                        inner.max_attempts
+                    );
+                    fail_batch(qb);
+                }
+                if model_errors >= MAX_WORKER_ERRORS {
+                    log::error!(
+                        "worker {wi} quarantining its replica for model {} after \
+                         {model_errors} consecutive errors",
+                        entry.id
+                    );
+                    quarantined.insert(entry.id.clone(), entry.generation);
+                    // drop the cached replica only if it is the one that
+                    // failed (a stale one-shot error must not evict the
+                    // current generation's healthy cache entry)
+                    if backends.get(&entry.id).is_some_and(|(g, _)| *g == entry.generation) {
+                        backends.remove(&entry.id);
+                    }
+                    errs.remove(&entry.id);
                 }
             }
         }
@@ -565,46 +1230,84 @@ fn worker_loop(
     // when this was the last worker — on panic unwinds too.
 }
 
-fn batcher_loop(rx: Receiver<Request>, queue: &SharedQueue, policy: BatchPolicy) {
-    let mut pending: Vec<Request> = Vec::new();
-    let mut deadline: Option<Instant> = None;
+/// One model's batcher: assemble per-priority batches per the model's
+/// policy and push them onto the shared queue. Exits when the model's
+/// ingress disconnects (evict / shutdown), dispatching what it holds.
+fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelEntry>) {
+    let policy = entry.policy;
+    let mut pending: [Vec<Request>; 2] = [Vec::new(), Vec::new()];
+    let mut deadline: [Option<Instant>; 2] = [None, None];
     loop {
-        let timeout = match deadline {
-            Some(d) => d.saturating_duration_since(Instant::now()),
-            None => Duration::from_secs(3600),
-        };
+        // fire any lane whose forming-batch timer elapsed
+        let now = Instant::now();
+        for p in Priority::ALL {
+            let pi = p.index();
+            if deadline[pi].is_some_and(|d| now >= d) {
+                dispatch(&mut pending[pi], p, inner, entry);
+                deadline[pi] = None;
+            }
+        }
+        let timeout = deadline
+            .iter()
+            .flatten()
+            .map(|d| d.saturating_duration_since(now))
+            .min()
+            .unwrap_or(Duration::from_secs(3600));
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                if pending.is_empty() {
-                    deadline = Some(Instant::now() + Duration::from_micros(policy.max_wait_us));
+                let p = req.priority;
+                let pi = p.index();
+                if pending[pi].is_empty() {
+                    let wait = Duration::from_micros(policy.max_wait_us);
+                    deadline[pi] = Some(Instant::now() + wait);
                 }
-                pending.push(req);
-                if pending.len() >= policy.max_batch {
-                    dispatch(&mut pending, queue);
-                    deadline = None;
+                pending[pi].push(req);
+                if pending[pi].len() >= policy.max_batch {
+                    dispatch(&mut pending[pi], p, inner, entry);
+                    deadline[pi] = None;
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
-                if !pending.is_empty() {
-                    dispatch(&mut pending, queue);
-                }
-                deadline = None;
+                // lane timers are handled at the top of the loop
             }
             Err(RecvTimeoutError::Disconnected) => {
-                if !pending.is_empty() {
-                    dispatch(&mut pending, queue);
+                for p in Priority::ALL {
+                    dispatch(&mut pending[p.index()], p, inner, entry);
                 }
-                queue.close();
                 return;
             }
         }
     }
 }
 
-fn dispatch(pending: &mut Vec<Request>, queue: &SharedQueue) {
-    let batch = std::mem::take(pending);
-    if batch.is_empty() {
+/// Close a forming batch: expire overdue members with a typed reply,
+/// push the rest onto the shared queue's lane for `prio`.
+fn dispatch(
+    pending: &mut Vec<Request>,
+    prio: Priority,
+    inner: &RegistryInner,
+    entry: &Arc<ModelEntry>,
+) {
+    if pending.is_empty() {
         return;
     }
-    queue.push_back(QueuedBatch { reqs: batch, attempts: 0 });
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(pending.len());
+    for r in pending.drain(..) {
+        if r.deadline.is_some_and(|d| now > d) {
+            expire(r, entry);
+        } else {
+            live.push(r);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    inner.queue.push(QueuedBatch {
+        model: Arc::clone(entry),
+        priority: prio,
+        reqs: live,
+        attempts: 0,
+        bounces: 0,
+    });
 }

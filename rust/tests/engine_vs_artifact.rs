@@ -92,10 +92,10 @@ fn ternary_layers_use_addonly_path() {
     let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
     // nw=1 (ternary) -> every conv layer takes the TernaryMatrix path
     let net = FqKwsNet::from_params(&fq_params, 1.0, 7.0, info.input_shape[1]).unwrap();
-    assert!(net.layers.iter().all(|l| l.is_ternary()));
+    assert!(net.layers().iter().all(|l| l.is_ternary()));
     // nw=7 (4-bit) -> dense path
     let net4 = FqKwsNet::from_params(&fq_params, 7.0, 7.0, info.input_shape[1]).unwrap();
-    assert!(net4.layers.iter().all(|l| !l.is_ternary()));
+    assert!(net4.layers().iter().all(|l| !l.is_ternary()));
 }
 
 #[test]

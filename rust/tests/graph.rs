@@ -1,0 +1,121 @@
+//! Contract of the composable QuantGraph engine: a graph assembled by
+//! hand from KWS stages is bit-identical to the `FqKwsNet` facade at
+//! every pool size, and a second (deeper/wider) architecture runs on
+//! the same API. Runs fully offline on synthetic parameters.
+
+use fqconv::data::{self, Dataset as _};
+use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
+use fqconv::infer::pipeline::{kws_stages, synthetic_params};
+use fqconv::infer::{FqKwsNet, QuantGraph};
+use fqconv::util::Rng;
+
+#[test]
+fn graph_bit_identical_to_fqkwsnet_at_pool_sizes_1_2_4_8() {
+    // same trained-parameter set builds the facade AND a hand-assembled
+    // graph; outputs must agree bit-for-bit at every pool size, for both
+    // ternary (W2) and dense (W4) weight kinds
+    let params = synthetic_params(42).expect("synthetic params");
+    for nw in [1.0f32, 7.0] {
+        let net = FqKwsNet::from_params(&params, nw, 7.0, 80).expect("facade");
+        let graph =
+            QuantGraph::new(kws_stages(&params, nw, 7.0).expect("stages"), 80).expect("graph");
+        assert_eq!(graph.classes(), net.classes);
+        assert_eq!(graph.out_frames(), net.out_frames());
+        assert_eq!(graph.macs_per_sample(), net.macs_per_sample());
+
+        let ds = data::for_model("kws", &[39, 80], 12);
+        let batch = ds.val_batch(0, 13); // odd size: uneven partitions
+        let per = batch.x.data().len() / 13;
+
+        // graph reference: sequential single-sample walk
+        let mut s = Scratch::for_graph(&graph);
+        let mut want = Vec::new();
+        for i in 0..13 {
+            want.extend(graph.forward(&batch.x.data()[i * per..(i + 1) * per], &mut s));
+        }
+        // facade at several pool sizes vs the graph reference
+        for threads in [1usize, 2, 4, 8] {
+            let got = net.forward_batch_with(&batch.x, threads);
+            assert_eq!(
+                got.data(),
+                &want[..],
+                "nw={nw} pool={threads}: facade diverged from the hand-built graph"
+            );
+        }
+        // and the graph's own intra-layer threading is bit-identical
+        for threads in [2usize, 4, 8] {
+            let mut logits = vec![0f32; graph.classes()];
+            graph.forward_into(&batch.x.data()[..per], &mut s, &mut logits, threads);
+            assert_eq!(logits[..], want[..graph.classes()], "graph intra-op threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn second_architecture_runs_on_the_same_api() {
+    // the deeper/wider net with a different dilation schedule exercises
+    // the same stage types, buffer planner and kernels
+    let kws = synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7).expect("kws graph");
+    let deep = synthetic_graph(&SynthArch::deep_wide(), 1.0, 7.0, 7).expect("deep-wide graph");
+    assert_eq!(deep.classes(), kws.classes());
+    assert!(deep.frames() > kws.frames());
+    assert!(
+        deep.macs_per_sample() > kws.macs_per_sample(),
+        "deep-wide must be heavier: {} vs {}",
+        deep.macs_per_sample(),
+        kws.macs_per_sample()
+    );
+    assert_eq!(deep.first_stack().len(), 10);
+    // dilation schedule reaches 16 (vs 8 for KWS)
+    assert_eq!(deep.conv_layers().map(|l| l.dilation).max(), Some(16));
+
+    let mut rng = Rng::new(3);
+    let mut x = vec![0f32; deep.in_numel()];
+    rng.fill_gaussian(&mut x, 1.0);
+    let mut s = Scratch::for_graph(&deep);
+    let want = deep.forward(&x, &mut s);
+    assert_eq!(want.len(), 12);
+    assert!(want.iter().all(|v| v.is_finite()));
+    assert!(want.iter().any(|&v| v != 0.0), "logits all zero — dead forward");
+    for threads in [2usize, 4, 8] {
+        let mut logits = vec![0f32; deep.classes()];
+        deep.forward_into(&x, &mut s, &mut logits, threads);
+        assert_eq!(logits, want, "deep-wide threads={threads}");
+    }
+}
+
+#[test]
+fn dense_weights_run_the_second_architecture_too() {
+    let deep = synthetic_graph(&SynthArch::deep_wide(), 7.0, 7.0, 9).expect("dense deep-wide");
+    assert!(deep.conv_layers().all(|l| !l.is_ternary()));
+    let mut rng = Rng::new(4);
+    let mut x = vec![0f32; deep.in_numel()];
+    rng.fill_gaussian(&mut x, 1.0);
+    let mut s = Scratch::for_graph(&deep);
+    let a = deep.forward(&x, &mut s);
+    let b = deep.forward(&x, &mut s);
+    assert_eq!(a, b, "scratch reuse must not change outputs");
+}
+
+#[test]
+fn scratch_plan_covers_the_high_water_marks() {
+    // the buffer plan computed at graph build time must cover the real
+    // per-forward high-water marks: a pre-planned Scratch never grows
+    for arch in [SynthArch::kws(), SynthArch::deep_wide()] {
+        let g = synthetic_graph(&arch, 1.0, 7.0, 5).expect("graph");
+        let mut s = Scratch::for_graph(&g);
+        let planned = s.capacities();
+        let mut rng = Rng::new(8);
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 1.0);
+        let mut logits = vec![0f32; g.classes()];
+        g.forward_into(&x, &mut s, &mut logits, 1);
+        g.forward_into(&x, &mut s, &mut logits, 4);
+        assert_eq!(
+            s.capacities(),
+            planned,
+            "{}: forward outgrew the planned scratch (allocation on the hot path)",
+            arch.name
+        );
+    }
+}

@@ -10,7 +10,7 @@ use fqconv::exec;
 use fqconv::infer::pipeline::{global_avg_pool, Scratch};
 use fqconv::infer::FqKwsNet;
 use fqconv::quant::QParams;
-use fqconv::serve::{ready, BatchPolicy, NativeBackend, Server};
+use fqconv::serve::{BatchPolicy, NativeBackend, Server};
 use fqconv::tensor::TensorF;
 
 fn synthetic_batch(net_frames: usize, b: usize) -> TensorF {
@@ -65,13 +65,13 @@ fn serve_path_bit_identical_at_every_worker_count() {
 
     let mut reference: Option<Vec<Vec<f32>>> = None;
     for workers in [1usize, 2, 4] {
-        let factories = (0..workers)
-            .map(|_| ready(NativeBackend::new(Arc::clone(&net), shape.clone())))
-            .collect();
-        let server = Server::start_with(factories, numel, BatchPolicy::new(4, 500));
+        let factory = NativeBackend::factory(&net, &shape);
+        let server = Server::start(factory, workers, numel, BatchPolicy::new(4, 500));
         let rxs: Vec<_> = feats.iter().map(|f| server.submit(f.clone())).collect();
-        let logits: Vec<Vec<f32>> =
-            rxs.into_iter().map(|rx| rx.recv().expect("response").logits).collect();
+        let logits: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("response").expect("serving ok").logits)
+            .collect();
         server.shutdown();
         if let Some(want) = &reference {
             assert_eq!(&logits, want, "{workers}-worker serve path diverged");

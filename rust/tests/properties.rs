@@ -2,7 +2,9 @@
 //! (custom helper in util::proptest — no proptest crate offline).
 
 use fqconv::quant::{learned_quantize, n_levels, QParams, RequantLut};
-use fqconv::serve::batcher::{simulate, BatchPolicy};
+use fqconv::serve::batcher::{
+    simulate, simulate_prio, BatchPolicy, Priority, SimOutcome, SimRequest,
+};
 use fqconv::util::proptest::check;
 use fqconv::util::Rng;
 
@@ -252,6 +254,123 @@ fn batcher_never_starves() {
                         "request {k} waited {} > {worst}",
                         start - arrivals[k]
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random mixed-priority workload generator shared by the batcher
+/// properties: sorted arrivals, random class, random optional deadline.
+fn gen_mixed_requests(
+    g: &mut fqconv::util::proptest::Gen,
+    size: f64,
+    with_deadlines: bool,
+) -> (BatchPolicy, Vec<SimRequest>, u64) {
+    let max_batch = 1 + g.rng.below(8);
+    let max_wait = 100 + g.rng.below(3000) as u64;
+    let n = 2 + g.sized_usize(size, 120);
+    let mut t = 0u64;
+    let reqs: Vec<SimRequest> = (0..n)
+        .map(|_| {
+            t += g.rng.below(600) as u64;
+            let priority =
+                if g.rng.below(2) == 0 { Priority::Interactive } else { Priority::Batch };
+            let deadline_us = if with_deadlines && g.rng.below(3) == 0 {
+                Some(t + g.rng.below(4000) as u64)
+            } else {
+                None
+            };
+            SimRequest { arrival_us: t, priority, deadline_us }
+        })
+        .collect();
+    let service = 50 + g.rng.below(800) as u64;
+    (BatchPolicy::new(max_batch, max_wait), reqs, service)
+}
+
+#[test]
+fn batcher_priority_ordering_invariant() {
+    // queue invariant: an Interactive batch never waits behind a
+    // Batch-priority batch it was already closed before. For every
+    // Batch-priority dispatch at start S, no Interactive request whose
+    // batch closed at or before S may start after S.
+    check(
+        "batcher-priority-ordering",
+        60,
+        |g, size| gen_mixed_requests(g, size, false),
+        |(policy, reqs, service)| {
+            let out = simulate_prio(*policy, reqs, *service);
+            let closed = |o: &SimOutcome| match *o {
+                SimOutcome::Dispatched { closed_us, .. } => closed_us,
+                SimOutcome::Expired { .. } => unreachable!("no deadlines here"),
+            };
+            for (j, oj) in out.iter().enumerate() {
+                if reqs[j].priority != Priority::Batch {
+                    continue;
+                }
+                let sj = oj.start_us().unwrap();
+                for (i, oi) in out.iter().enumerate() {
+                    if reqs[i].priority != Priority::Interactive {
+                        continue;
+                    }
+                    let si = oi.start_us().unwrap();
+                    if closed(oi) <= sj && si > sj {
+                        return Err(format!(
+                            "interactive req {i} (closed {}, start {si}) waited behind \
+                             batch-priority req {j} (start {sj})",
+                            closed(oi)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_deadline_rejection_invariant() {
+    // every request is answered exactly once: dispatched no later than
+    // its deadline, or expired — and expiry only happens when the batch
+    // start really lay beyond the deadline. No silent losses either way.
+    check(
+        "batcher-deadline-rejection",
+        60,
+        |g, size| gen_mixed_requests(g, size, true),
+        |(policy, reqs, service)| {
+            let out = simulate_prio(*policy, reqs, *service);
+            if out.len() != reqs.len() {
+                return Err("outcome count mismatch".into());
+            }
+            for (k, o) in out.iter().enumerate() {
+                match *o {
+                    SimOutcome::Dispatched { start_us, batch, closed_us } => {
+                        if batch == 0 || batch > policy.max_batch {
+                            return Err(format!("req {k}: bad batch size {batch}"));
+                        }
+                        if start_us < reqs[k].arrival_us || closed_us < reqs[k].arrival_us {
+                            return Err(format!("req {k}: dispatched before it arrived"));
+                        }
+                        if let Some(d) = reqs[k].deadline_us {
+                            if start_us > d {
+                                return Err(format!(
+                                    "req {k}: started at {start_us} past its deadline {d}"
+                                ));
+                            }
+                        }
+                    }
+                    SimOutcome::Expired { at_us } => {
+                        let d = reqs[k]
+                            .deadline_us
+                            .ok_or_else(|| format!("req {k}: expired without a deadline"))?;
+                        if at_us <= d {
+                            return Err(format!(
+                                "req {k}: expired at {at_us} although deadline {d} had not \
+                                 passed"
+                            ));
+                        }
+                    }
                 }
             }
             Ok(())

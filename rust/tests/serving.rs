@@ -1,12 +1,16 @@
 //! Serving-layer behaviour: batching policy honored, all requests
-//! answered, latency recorded, graceful shutdown, multi-worker fan-out.
+//! answered, latency recorded, graceful shutdown, multi-worker fan-out,
+//! multi-model registry, priorities and deadlines.
 //! Uses a synthetic backend (no XLA / no trained network needed).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use fqconv::serve::{ready, Backend, BatchPolicy, Server};
-use fqconv::tensor::TensorF;
+use fqconv::serve::{
+    ready, ready_indexed, Backend, BatchPolicy, ModelId, ModelRegistry, ModelSpec, Priority,
+    ServeError, Server,
+};
 
 /// Deterministic toy backend: class = argmax-like hash of first feature.
 struct ToyBackend {
@@ -14,27 +18,48 @@ struct ToyBackend {
     calls: Arc<AtomicUsize>,
     max_seen_batch: Arc<AtomicUsize>,
     delay_us: u64,
+    shape: Vec<usize>,
+}
+
+impl ToyBackend {
+    fn new(
+        classes: usize,
+        calls: &Arc<AtomicUsize>,
+        max_seen_batch: &Arc<AtomicUsize>,
+        delay_us: u64,
+    ) -> Self {
+        ToyBackend {
+            classes,
+            calls: Arc::clone(calls),
+            max_seen_batch: Arc::clone(max_seen_batch),
+            delay_us,
+            shape: vec![4],
+        }
+    }
 }
 
 impl Backend for ToyBackend {
-    fn infer(&mut self, x: &TensorF) -> anyhow::Result<TensorF> {
-        let b = x.shape()[0];
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
         self.calls.fetch_add(1, Ordering::SeqCst);
-        self.max_seen_batch.fetch_max(b, Ordering::SeqCst);
+        self.max_seen_batch.fetch_max(batch, Ordering::SeqCst);
         if self.delay_us > 0 {
             std::thread::sleep(std::time::Duration::from_micros(self.delay_us));
         }
-        let per = x.shape()[1];
-        let mut out = vec![0f32; b * self.classes];
-        for i in 0..b {
-            let c = (x.data()[i * per].abs() as usize) % self.classes;
+        let per = x.len() / batch.max(1);
+        out.fill(0.0);
+        for i in 0..batch {
+            let c = (x[i * per].abs() as usize) % self.classes;
             out[i * self.classes + c] = 1.0;
         }
-        Ok(TensorF::from_vec(&[b, self.classes], out))
+        Ok(())
     }
 
-    fn sample_shape(&self) -> Vec<usize> {
-        vec![4]
+    fn sample_shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn out_dim(&self) -> usize {
+        self.classes
     }
 }
 
@@ -45,17 +70,9 @@ fn toy_server(
 ) -> (Server, Arc<AtomicUsize>, Arc<AtomicUsize>) {
     let calls = Arc::new(AtomicUsize::new(0));
     let maxb = Arc::new(AtomicUsize::new(0));
-    let factories = (0..workers)
-        .map(|_| {
-            ready(ToyBackend {
-                classes: 5,
-                calls: Arc::clone(&calls),
-                max_seen_batch: Arc::clone(&maxb),
-                delay_us,
-            })
-        })
-        .collect();
-    (Server::start_with(factories, 4, policy), calls, maxb)
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    let factory = ready(move || ToyBackend::new(5, &c, &m, delay_us));
+    (Server::start(factory, workers, 4, policy), calls, maxb)
 }
 
 #[test]
@@ -69,15 +86,19 @@ fn all_requests_answered_correctly() {
         rxs.push(server.submit(f));
     }
     for (rx, want) in rxs.into_iter().zip(expected) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("serving ok");
         assert_eq!(resp.class, want);
         assert_eq!(resp.logits.len(), 5);
+        assert_eq!(resp.model.as_str(), "default");
+        assert_eq!(resp.priority, Priority::Interactive);
         assert!(resp.latency_us >= 0.0);
         assert!(resp.batch_size >= 1);
     }
     let stats = server.stats();
     assert_eq!(stats.served, 100);
     assert!(stats.batches <= 100);
+    assert_eq!(stats.expired, 0);
+    assert_eq!(stats.dropped, 0);
     server.shutdown();
 }
 
@@ -86,7 +107,7 @@ fn batches_respect_max_batch() {
     let (server, _, maxb) = toy_server(1, BatchPolicy::new(4, 50_000), 100);
     let rxs: Vec<_> = (0..32).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     assert!(maxb.load(Ordering::SeqCst) <= 4, "batch exceeded policy");
     server.shutdown();
@@ -112,7 +133,7 @@ fn multiple_workers_share_load() {
     let (server, calls, _) = toy_server(3, BatchPolicy::new(1, 100), 200);
     let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     // with batch=1, every request is its own backend call
     assert_eq!(calls.load(Ordering::SeqCst), 30);
@@ -122,15 +143,21 @@ fn multiple_workers_share_load() {
 }
 
 /// Backend that always errors — models a poisoned replica.
-struct FailingBackend;
+struct FailingBackend {
+    shape: Vec<usize>,
+}
 
 impl Backend for FailingBackend {
-    fn infer(&mut self, _x: &TensorF) -> anyhow::Result<TensorF> {
+    fn infer_into(&mut self, _x: &[f32], _batch: usize, _out: &mut [f32]) -> anyhow::Result<()> {
         Err(anyhow::anyhow!("injected backend failure"))
     }
 
-    fn sample_shape(&self) -> Vec<usize> {
-        vec![4]
+    fn sample_shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn out_dim(&self) -> usize {
+        5
     }
 }
 
@@ -139,48 +166,39 @@ fn failing_worker_cannot_lose_or_block_requests() {
     let calls = Arc::new(AtomicUsize::new(0));
     let maxb = Arc::new(AtomicUsize::new(0));
     // one poisoned replica + two healthy (slow) ones: failed batches are
-    // re-queued (bounded attempts, back of the line) so the shared queue
-    // must deliver every request, and the poisoned worker retires after
-    // MAX_WORKER_ERRORS failures instead of taking the pool down
-    let factories = vec![
-        ready(FailingBackend),
-        ready(ToyBackend {
-            classes: 5,
-            calls: Arc::clone(&calls),
-            max_seen_batch: Arc::clone(&maxb),
-            delay_us: 1_000,
-        }),
-        ready(ToyBackend {
-            classes: 5,
-            calls: Arc::clone(&calls),
-            max_seen_batch: Arc::clone(&maxb),
-            delay_us: 1_000,
-        }),
-    ];
-    let server = Server::start_with(factories, 4, BatchPolicy::new(4, 200));
+    // re-queued (bounded attempts, back of the lane) so the shared queue
+    // must deliver every request, and the poisoned worker quarantines
+    // its replica after MAX_WORKER_ERRORS consecutive failures while
+    // staying alive for other models
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    let factory = ready_indexed(move |wi| {
+        if wi == 0 {
+            Box::new(FailingBackend { shape: vec![4] })
+        } else {
+            Box::new(ToyBackend::new(5, &c, &m, 1_000))
+        }
+    });
+    let server = Server::start(factory, 3, 4, BatchPolicy::new(4, 200));
     let n = 60u64;
-    let rxs: Vec<_> =
-        (0..n).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
+    let rxs: Vec<_> = (0..n).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} lost to the dead worker"));
+        let resp = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i} lost to the dead worker"))
+            .unwrap_or_else(|e| panic!("request {i} failed: {e}"));
         assert_eq!(resp.class, i % 5);
     }
     let stats = server.stats();
     assert_eq!(stats.served, n, "every request must be served");
-    // per-worker stats: a worker that exhausted its error budget has
-    // retired (how many batches the poisoned worker happened to pull
-    // before that is scheduling-dependent); error-free workers stay up
+    // quarantine is per (worker, model): every worker stays alive —
+    // including the one with the poisoned replica — and the healthy
+    // ones absorb the load
     for w in &stats.workers {
-        if w.errors >= fqconv::serve::MAX_WORKER_ERRORS {
-            assert!(!w.alive, "worker {} exhausted its error budget but is alive", w.worker);
-        }
-        if w.errors == 0 {
-            assert!(w.alive, "healthy worker {} retired: {:?}", w.worker, stats.workers);
-        }
+        assert!(w.alive, "worker {} must stay alive under quarantine: {:?}", w.worker, stats);
     }
     assert!(
-        stats.workers.iter().filter(|w| w.alive).count() >= 2,
-        "healthy workers must stay alive: {:?}",
+        stats.workers.iter().any(|w| w.errors >= fqconv::serve::MAX_WORKER_ERRORS),
+        "the poisoned replica must have burned its error budget: {:?}",
         stats.workers
     );
     assert_eq!(
@@ -192,14 +210,297 @@ fn failing_worker_cannot_lose_or_block_requests() {
 }
 
 #[test]
+fn poisoned_model_cannot_take_down_healthy_models() {
+    // regression: worker error budgets are per *model*, so a model whose
+    // backend always fails must not retire the shared workers — traffic
+    // to the healthy model keeps flowing, and the failing model's
+    // requests get typed BackendFailed replies
+    let registry = ModelRegistry::start(2);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "healthy",
+            ModelSpec {
+                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
+                sample_numel: 4,
+                policy: BatchPolicy::new(2, 100),
+            },
+        )
+        .unwrap();
+    registry
+        .register(
+            "poisoned",
+            ModelSpec {
+                factory: ready(|| FailingBackend { shape: vec![4] }),
+                sample_numel: 4,
+                policy: BatchPolicy::new(2, 100),
+            },
+        )
+        .unwrap();
+    let (healthy, poisoned) = (ModelId::new("healthy"), ModelId::new("poisoned"));
+    // interleave traffic so both models cross every worker
+    for round in 0..8u64 {
+        let bad: Vec<_> = (0..4u64)
+            .map(|i| registry.submit(&poisoned, vec![i as f32, 0.0, 0.0, 0.0]).unwrap())
+            .collect();
+        for rx in bad {
+            let err = rx.recv().expect("typed reply, not a disconnect").unwrap_err();
+            assert!(
+                matches!(err, ServeError::BackendFailed { .. }),
+                "round {round}: expected BackendFailed, got {err}"
+            );
+        }
+        for i in 0..4u64 {
+            let resp = registry
+                .infer(&healthy, vec![i as f32, 0.0, 0.0, 0.0])
+                .unwrap_or_else(|e| panic!("round {round}: healthy model failed: {e}"));
+            assert_eq!(resp.class, (i as usize) % 5);
+        }
+    }
+    let stats = registry.stats();
+    for w in &stats.workers {
+        assert!(w.alive, "worker {} retired because of one bad model: {:?}", w.worker, stats);
+    }
+    let healthy_stats = stats.models.iter().find(|m| m.id == healthy).unwrap();
+    assert_eq!(healthy_stats.served, 32);
+    assert_eq!(healthy_stats.dropped, 0);
+    let poisoned_stats = stats.models.iter().find(|m| m.id == poisoned).unwrap();
+    assert_eq!(poisoned_stats.served, 0);
+    assert_eq!(poisoned_stats.dropped, 32, "every poisoned request gets a typed failure");
+    registry.shutdown();
+}
+
+#[test]
 fn stats_percentiles_sane() {
     let (server, _, _) = toy_server(2, BatchPolicy::default(), 300);
     let rxs: Vec<_> = (0..50).map(|i| server.submit(vec![i as f32, 0.0, 0.0, 0.0])).collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let stats = server.stats();
     assert!(stats.p50_us > 0.0);
     assert!(stats.p99_us >= stats.p50_us);
     server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Priorities + deadlines (threaded; ordering properties live in
+// rust/tests/properties.rs over batcher::simulate_prio)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn per_priority_stats_are_recorded() {
+    let (server, _, _) = toy_server(2, BatchPolicy::new(4, 300), 50);
+    let mut rxs = Vec::new();
+    for i in 0..40u64 {
+        let f = vec![i as f32, 0.0, 0.0, 0.0];
+        let prio = if i % 4 == 0 { Priority::Batch } else { Priority::Interactive };
+        rxs.push((prio, server.submit_with(f, prio, None)));
+    }
+    for (prio, rx) in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.priority, prio, "reply must carry the request's class");
+    }
+    let stats = server.stats();
+    let inter = &stats.priorities[Priority::Interactive.index()];
+    let batch = &stats.priorities[Priority::Batch.index()];
+    assert_eq!(inter.served, 30);
+    assert_eq!(batch.served, 10);
+    assert!(inter.p50_us > 0.0 && batch.p50_us > 0.0);
+    assert_eq!(stats.served, 40);
+    server.shutdown();
+}
+
+#[test]
+fn expired_deadline_gets_a_typed_reply() {
+    // one worker, busy with a slow no-deadline request; the queued
+    // deadlined request must be answered DeadlineExceeded, not served
+    let (server, _, _) = toy_server(1, BatchPolicy::new(1, 50), 30_000);
+    let first = server.submit(vec![1.0, 0.0, 0.0, 0.0]);
+    // give the worker a moment to pick up the first batch
+    std::thread::sleep(Duration::from_millis(5));
+    let doomed = server.submit_with(
+        vec![2.0, 0.0, 0.0, 0.0],
+        Priority::Interactive,
+        Some(Duration::from_micros(1)),
+    );
+    let err = doomed.recv().expect("typed reply, not a disconnect").unwrap_err();
+    match err {
+        ServeError::DeadlineExceeded { model, waited_us } => {
+            assert_eq!(model.as_str(), "default");
+            assert!(waited_us > 0);
+        }
+        other => panic!("expected DeadlineExceeded, got {other}"),
+    }
+    first.recv().unwrap().unwrap();
+    let stats = server.stats();
+    assert_eq!(stats.expired, 1);
+    assert_eq!(stats.served, 1, "the expired request must not be served");
+    server.shutdown();
+}
+
+#[test]
+fn generous_deadline_is_honored() {
+    let (server, _, _) = toy_server(2, BatchPolicy::new(4, 200), 0);
+    let rxs: Vec<_> = (0..20)
+        .map(|i| {
+            server.submit_with(
+                vec![i as f32, 0.0, 0.0, 0.0],
+                Priority::Interactive,
+                Some(Duration::from_secs(30)),
+            )
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().expect("generous deadline must ride");
+        assert_eq!(resp.class, i % 5);
+    }
+    assert_eq!(server.stats().expired, 0);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-model registry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_serves_two_models_concurrently() {
+    let registry = ModelRegistry::start(2);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    let (c5, m5) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "toy5",
+            ModelSpec {
+                factory: ready(move || ToyBackend::new(5, &c5, &m5, 100)),
+                sample_numel: 4,
+                policy: BatchPolicy::new(4, 200),
+            },
+        )
+        .expect("register toy5");
+    let (c3, m3) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "toy3",
+            ModelSpec {
+                factory: ready(move || {
+                    let mut t = ToyBackend::new(3, &c3, &m3, 100);
+                    t.shape = vec![2];
+                    t
+                }),
+                sample_numel: 2,
+                policy: BatchPolicy::new(2, 200),
+            },
+        )
+        .expect("register toy3");
+    // duplicate registration is refused
+    assert!(registry
+        .register(
+            "toy3",
+            ModelSpec {
+                factory: ready(|| FailingBackend { shape: vec![2] }),
+                sample_numel: 2,
+                policy: BatchPolicy::new(1, 100),
+            },
+        )
+        .is_err());
+
+    let (id5, id3) = (ModelId::new("toy5"), ModelId::new("toy3"));
+    let n = 40u64;
+    std::thread::scope(|s| {
+        let (r5, r3) = (&registry, &registry);
+        let (id5, id3) = (&id5, &id3);
+        s.spawn(move || {
+            let rxs: Vec<_> = (0..n)
+                .map(|i| r5.submit(id5, vec![i as f32, 0.0, 0.0, 0.0]).expect("registered"))
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().unwrap().unwrap();
+                assert_eq!(resp.model.as_str(), "toy5");
+                assert_eq!(resp.logits.len(), 5);
+                assert_eq!(resp.class, i % 5);
+            }
+        });
+        s.spawn(move || {
+            let rxs: Vec<_> = (0..n)
+                .map(|i| r3.submit(id3, vec![i as f32, 0.0]).expect("registered"))
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().unwrap().unwrap();
+                assert_eq!(resp.model.as_str(), "toy3");
+                assert_eq!(resp.logits.len(), 3);
+                assert_eq!(resp.class, i % 3);
+            }
+        });
+    });
+
+    let stats = registry.stats();
+    assert_eq!(stats.served, 2 * n);
+    assert_eq!(stats.models.len(), 2);
+    // models are sorted by id: toy3 then toy5
+    assert_eq!(stats.models[0].id.as_str(), "toy3");
+    assert_eq!(stats.models[1].id.as_str(), "toy5");
+    for m in &stats.models {
+        assert_eq!(m.served, n, "model {} served {} of {n}", m.id, m.served);
+        assert!(m.batches >= 1);
+        assert!(m.mean_batch >= 1.0);
+        assert_eq!(m.expired, 0);
+        assert_eq!(m.dropped, 0);
+        assert!(m.p50_us > 0.0);
+    }
+    // per-worker served must cover both models' traffic
+    assert_eq!(stats.workers.iter().map(|w| w.served).sum::<u64>(), 2 * n);
+    registry.shutdown();
+}
+
+#[test]
+fn evicted_model_rejects_new_submits_but_other_models_survive() {
+    let registry = ModelRegistry::start(1);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "a",
+            ModelSpec {
+                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
+                sample_numel: 4,
+                policy: BatchPolicy::new(2, 100),
+            },
+        )
+        .unwrap();
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "b",
+            ModelSpec {
+                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
+                sample_numel: 4,
+                policy: BatchPolicy::new(2, 100),
+            },
+        )
+        .unwrap();
+    let (ida, idb) = (ModelId::new("a"), ModelId::new("b"));
+    assert_eq!(registry.model_ids(), vec![ida.clone(), idb.clone()]);
+    registry.infer(&ida, vec![1.0, 0.0, 0.0, 0.0]).expect("a serves");
+
+    assert!(registry.evict(&ida), "evicting a registered model");
+    assert!(!registry.evict(&ida), "double evict reports absence");
+    match registry.submit(&ida, vec![1.0, 0.0, 0.0, 0.0]) {
+        Err(ServeError::UnknownModel(id)) => assert_eq!(id.as_str(), "a"),
+        other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
+    }
+    // the surviving model keeps serving through the same workers
+    for i in 0..10u64 {
+        let resp = registry.infer(&idb, vec![i as f32, 0.0, 0.0, 0.0]).expect("b serves");
+        assert_eq!(resp.class, (i as usize) % 5);
+    }
+    assert_eq!(registry.model_ids(), vec![idb.clone()]);
+    let stats = registry.stats();
+    assert_eq!(stats.models.len(), 1);
+    assert_eq!(stats.models[0].id, idb);
+    registry.shutdown();
 }
