@@ -10,10 +10,12 @@
 
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset};
+use fqconv::infer::graph::{synthetic_graph, SynthArch};
 use fqconv::infer::FqKwsNet;
 use fqconv::runtime::{hp, Engine, Manifest};
 use fqconv::serve::{
-    BatchPolicy, ModelId, ModelRegistry, ModelSpec, NativeBackend, Priority, Server, XlaBackend,
+    BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec, NativeBackend, Priority, Server,
+    XlaBackend,
 };
 use fqconv::util::{Rng, Timer};
 
@@ -96,7 +98,13 @@ fn main() -> anyhow::Result<()> {
     println!("{:<10} {:>10}  per-worker (batches, served)", "workers", "req/s");
     for workers in [1usize, 2, 4] {
         let policy = BatchPolicy::new(16, 2000);
-        let server = Server::start(NativeBackend::factory(&net, &shape), workers, numel, policy);
+        // intra-layer budget split across the workers (fork-lock relief)
+        let server = Server::start(
+            NativeBackend::factory_sharded(&net, &shape, workers),
+            workers,
+            numel,
+            policy,
+        );
         let (rps, _, _) = drive(&server, ds.as_ref(), n_req, 0);
         let stats = server.stats();
         let per: Vec<(u64, u64)> = stats.workers.iter().map(|w| (w.batches, w.served)).collect();
@@ -104,9 +112,12 @@ fn main() -> anyhow::Result<()> {
         server.shutdown();
     }
 
-    println!("\n== multi-model registry: two nets, one shared worker pool ==");
+    println!("\n== multi-model registry: KWS nets + 2-D ResNet-32, one shared pool ==");
     let registry = ModelRegistry::start(2);
     let fast = std::sync::Arc::new(FqKwsNet::synthetic(1.0, 7.0, 21)?);
+    // the paper's Table-6 CIFAR network, served straight off the graph
+    // engine next to the KWS models
+    let resnet = std::sync::Arc::new(synthetic_graph(&SynthArch::resnet32(), 1.0, 7.0, 9)?);
     registry.register(
         "kws-w2",
         ModelSpec {
@@ -123,10 +134,26 @@ fn main() -> anyhow::Result<()> {
             policy: BatchPolicy::new(4, 500),
         },
     )?;
+    registry.register(
+        "resnet32",
+        ModelSpec {
+            factory: GraphBackend::factory(&resnet),
+            sample_numel: resnet.in_numel(),
+            policy: BatchPolicy::new(4, 2000),
+        },
+    )?;
     let (id_a, id_b) = (ModelId::new("kws-w2"), ModelId::new("kws-w2-alt"));
+    let id_r = ModelId::new("resnet32");
     let mut rng = Rng::new(11);
     let mut rxs = Vec::new();
     for i in 0..n_req {
+        if i % 16 == 7 {
+            // sprinkle CIFAR-shaped traffic at the 2-D model
+            let mut img = vec![0f32; resnet.in_numel()];
+            rng.fill_gaussian(&mut img, 0.5);
+            rxs.push(registry.submit_with(&id_r, img, Priority::Batch, None).expect("registered"));
+            continue;
+        }
         let (x, _) = ds.sample(i as u64 % data::VAL_SIZE, Some(&mut rng));
         let id = if i % 3 == 0 { &id_b } else { &id_a };
         let prio = if i % 5 == 0 { Priority::Batch } else { Priority::Interactive };

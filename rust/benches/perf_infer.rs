@@ -23,7 +23,8 @@ use fqconv::exec;
 use fqconv::infer::gemm::{gemm_i8, gemm_i8_mt, gemm_packed, transpose, PackedB, TernaryMatrix};
 use fqconv::infer::graph::{synthetic_graph, SynthArch};
 use fqconv::infer::pipeline::Scratch;
-use fqconv::infer::FqKwsNet;
+use fqconv::infer::{FqKwsNet, QuantConv2d};
+use fqconv::quant::QParams;
 use fqconv::tensor::TensorF;
 use fqconv::util::json::{num, obj, s, Json};
 use fqconv::util::Rng;
@@ -219,12 +220,93 @@ fn graph_arch_section(threads: usize, iters: usize) -> Json {
     ])
 }
 
+/// 2-D conv layer kernels: direct (im2col-free, fused requant) vs the
+/// im2col + GEMM oracle, ternary vs dense, at a ResNet-32 group-2 shape.
+fn conv2d_section(threads: usize, iters: usize) -> Json {
+    println!("\n--- 2-D conv layer (32ch 3x3 @ 16x16, direct vs im2col) ---");
+    let mut rng = Rng::new(9);
+    let (c_in, c_out, h, w) = (32usize, 32usize, 16usize, 16usize);
+    let wts: Vec<f32> = (0..c_out * c_in * 9).map(|_| rng.gaussian_f32(0.0, 0.5)).collect();
+    let qa = QParams::new(1.0, 7.0, 0.0);
+    let mid = QParams::new(1.0, 7.0, 0.0);
+    let next = Some(QParams::new(1.0, 7.0, 0.0));
+    let x: Vec<i8> = (0..c_in * h * w).map(|_| rng.below(8) as i8).collect();
+    let mut records = Vec::new();
+    for (nw, label) in [(1.0f32, "ternary"), (7.0, "dense")] {
+        let qw = QParams::new(1.0, nw, -1.0);
+        let layer = QuantConv2d::new(&wts, c_out, c_in, 3, 1, 1, qa, qw, mid, next);
+        let (h_out, w_out) = layer.out_hw(h, w);
+        let macs = layer.macs(h_out, w_out) as f64;
+        let (mut acc, mut out) = (Vec::new(), Vec::new());
+        let direct = bench(&format!("conv2d {label} direct"), 2, iters, || {
+            layer.forward(&x, h, w, &mut acc, &mut out);
+            std::hint::black_box(&out);
+        });
+        report(&direct, macs, "GMAC/s");
+        let direct_mt = bench(&format!("conv2d {label} direct (x{threads})"), 2, iters, || {
+            layer.forward_mt(&x, h, w, &mut acc, &mut out, threads);
+            std::hint::black_box(&out);
+        });
+        report(&direct_mt, macs, "GMAC/s");
+        let mut cols = Vec::new();
+        let im2col = bench(&format!("conv2d {label} im2col oracle"), 2, iters, || {
+            layer.forward_im2col(&x, h, w, &mut cols, &mut acc, &mut out);
+            std::hint::black_box(&out);
+        });
+        report(&im2col, macs, "GMAC/s");
+        records.push(obj(vec![
+            ("kind", s(label)),
+            ("macs", num(macs)),
+            ("direct_gmacs", num(direct.throughput(macs) / 1e9)),
+            ("direct_mt_gmacs", num(direct_mt.throughput(macs) / 1e9)),
+            ("im2col_gmacs", num(im2col.throughput(macs) / 1e9)),
+            ("direct_vs_im2col", num(im2col.median_s / direct.median_s.max(1e-12))),
+        ]));
+    }
+    Json::Arr(records)
+}
+
+/// The Table-6 network end to end on the graph engine: ternary
+/// ResNet-32, single-sample sequential vs intra-layer parallel.
+fn resnet32_section(threads: usize, iters: usize) -> Json {
+    println!("\n--- ResNet-32 (2-D residual QuantGraph) ---");
+    let g = synthetic_graph(&SynthArch::resnet32(), 1.0, 7.0, 13).expect("resnet32 graph");
+    let mut rng = Rng::new(3);
+    let mut x = vec![0f32; g.in_numel()];
+    rng.fill_gaussian(&mut x, 0.5);
+    let macs = g.macs_per_sample() as f64;
+    let mut scratch = fqconv::infer::graph::Scratch::for_graph(&g);
+    let seq = bench("resnet32 forward (1 sample, 1 thread)", 2, iters, || {
+        std::hint::black_box(g.forward(&x, &mut scratch));
+    });
+    report(&seq, macs, "GMAC/s");
+    let mut logits = vec![0f32; g.classes()];
+    let par = bench(&format!("resnet32 forward (1 sample, x{threads})"), 2, iters, || {
+        g.forward_into(&x, &mut scratch, &mut logits, threads);
+        std::hint::black_box(&logits);
+    });
+    report(&par, macs, "GMAC/s");
+    println!(
+        "    = {:.0} samples/s/core ({:.1}M int-MACs/sample)",
+        1.0 / seq.median_s,
+        macs / 1e6
+    );
+    obj(vec![
+        ("arch", s("resnet32")),
+        ("macs_per_sample", num(macs)),
+        ("samples_per_sec_1t", num(1.0 / seq.median_s)),
+        ("samples_per_sec_mt", num(1.0 / par.median_s)),
+        ("intra_layer_speedup", num(seq.median_s / par.median_s.max(1e-12))),
+    ])
+}
+
 fn main() {
     banner("perf_infer — integer engine hot paths");
     let threads = exec::default_threads();
     let iters = if smoke() { 5 } else { 30 };
     println!("(pool size {threads}; override with FQCONV_THREADS)\n");
     let gemm_json = gemm_section(threads, iters);
+    let conv2d_json = conv2d_section(threads, iters);
 
     // full network forward on a synthetic net — always available
     let mut nets_json = Vec::new();
@@ -237,15 +319,18 @@ fn main() {
         }
     }
     let graph_json = graph_arch_section(threads, iters);
+    let resnet_json = resnet32_section(threads, if smoke() { 2 } else { 10 });
 
     let out = obj(vec![
         ("bench", s("perf_infer")),
         ("threads", num(threads as f64)),
         ("smoke", Json::Bool(smoke())),
         ("gemm", gemm_json),
+        ("conv2d", conv2d_json),
         ("nets", Json::Arr(nets_json)),
         ("small_batch_pool_vs_scoped", small_batch_json),
         ("graph_arch", graph_json),
+        ("resnet32", resnet_json),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_infer.json");
     match std::fs::write(path, out.to_string() + "\n") {

@@ -66,7 +66,9 @@ fn main() {
     for workers in [1usize, 2, 4] {
         for (mb, wait) in [(1usize, 1u64), (16, 2000), (32, 4000)] {
             let policy = BatchPolicy::new(mb, wait);
-            let factory = NativeBackend::factory(&net, &shape);
+            // worker-count-aware intra-layer budget: replicas split the
+            // machine instead of contending on the pool's fork lock
+            let factory = NativeBackend::factory_sharded(&net, &shape, workers);
             let server = Server::start(factory, workers, numel, policy);
             let timer = Timer::start();
             let rxs: Vec<_> = feats.iter().map(|f| server.submit(f.clone())).collect();

@@ -35,6 +35,47 @@ use super::gemm::{self, TernaryMatrix};
 /// dominates the per-row work and the layer runs sequentially.
 const MIN_CH_PER_THREAD: usize = 8;
 
+/// Fused re-binning over contiguous `(rows, row_len)` accumulators: a
+/// branchless direct-index load per element on the dense-table path
+/// (always taken for realistic conv accumulator ranges), threshold
+/// search otherwise. Shared by the 1-D and 2-D conv layers — the
+/// accumulator already sits in output layout, so there is no transpose.
+pub(crate) fn requant_rows(lut: &RequantLut, acc: &[i32], out: &mut [i8]) {
+    debug_assert_eq!(acc.len(), out.len());
+    if let Some((tbl, base)) = lut.dense_table() {
+        let (lo, hi) = (lut.acc_min, lut.acc_max);
+        for (o, &a) in out.iter_mut().zip(acc) {
+            let idx = ((a as i64).clamp(lo, hi) - base) as usize;
+            *o = tbl[idx] as i8;
+        }
+    } else {
+        for (o, &a) in out.iter_mut().zip(acc) {
+            *o = lut.apply(a as i64) as i8;
+        }
+    }
+}
+
+/// Shared accumulator-range LUT construction: `kdim` reduction taps of
+/// `qa`-grid activations against `qw`-grid weights bound the i32
+/// accumulator, and the LUT re-bins onto `next`'s grid when fused (the
+/// deployed two-step rounding) or `mid`'s otherwise.
+pub(crate) fn build_conv_lut(
+    kdim: usize,
+    qa: QParams,
+    qw: QParams,
+    mid: QParams,
+    next: Option<QParams>,
+) -> RequantLut {
+    // accumulator bound: |acc| <= kdim * max|a-code| * max|w-code|
+    let amax = qa.n.abs().max(qa.b.abs() * qa.n) as i64;
+    let bound = kdim as i64 * amax * qw.n as i64 + 1;
+    let f = (qa.es * qw.es) / (qa.n * qw.n);
+    match next {
+        Some(nx) => RequantLut::build_composed(f, mid, nx, -bound, bound),
+        None => RequantLut::build(f, mid, -bound, bound),
+    }
+}
+
 /// Weight storage: dense i8 codes in (c_in*ksize, c_out) row-major
 /// layout (tap-major, so one tap's coefficients for consecutive output
 /// channels are contiguous), or ternary flat-CSR.
@@ -100,14 +141,7 @@ impl QuantConv1d {
         } else {
             WeightKind::Dense { b }
         };
-        // accumulator bound: |acc| <= kdim * max|a-code| * max|w-code|
-        let amax = qa.n.abs().max(qa.b.abs() * qa.n) as i64;
-        let bound = kdim as i64 * amax * qw.n as i64 + 1;
-        let f = (qa.es * qw.es) / (qa.n * qw.n);
-        let lut = match next {
-            Some(nx) => RequantLut::build_composed(f, mid, nx, -bound, bound),
-            None => RequantLut::build(f, mid, -bound, bound),
-        };
+        let lut = build_conv_lut(kdim, qa, qw, mid, next);
         QuantConv1d { c_in, c_out, ksize, dilation, weights, lut, qa, qw, mid, next }
     }
 
@@ -294,23 +328,11 @@ impl QuantConv1d {
         }
     }
 
-    /// Fused re-binning over contiguous (c_out, t_out) rows: a branchless
-    /// direct-index load per element on the dense-table path (always
-    /// taken for the KWS accumulator ranges), threshold search otherwise.
-    /// No transpose — the accumulator already sits in output layout.
+    /// Fused re-binning over contiguous (c_out, t_out) rows via the
+    /// shared `requant_rows` pass; the accumulator already sits in
+    /// output layout, so there is no transpose step.
     fn requant_rows(&self, acc: &[i32], out: &mut [i8]) {
-        debug_assert_eq!(acc.len(), out.len());
-        if let Some((tbl, base)) = self.lut.dense_table() {
-            let (lo, hi) = (self.lut.acc_min, self.lut.acc_max);
-            for (o, &a) in out.iter_mut().zip(acc) {
-                let idx = ((a as i64).clamp(lo, hi) - base) as usize;
-                *o = tbl[idx] as i8;
-            }
-        } else {
-            for (o, &a) in out.iter_mut().zip(acc) {
-                *o = self.lut.apply(a as i64) as i8;
-            }
-        }
+        requant_rows(&self.lut, acc, out);
     }
 
     /// The pre-rewrite layer body — im2col patch matrix, gather GEMM,

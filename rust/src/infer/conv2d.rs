@@ -1,0 +1,628 @@
+//! Quantized 2-D convolution over integer codes (NCHW) — the 2-D
+//! sibling of [`super::conv`], reusing the same kernel layer.
+//!
+//! The paper's headline networks are 2-D CNNs (ternary ResNet-32 on
+//! CIFAR-10, DarkNet-19 on ImageNet — Tables 5-6); this layer brings
+//! them onto the exact machinery the 1-D KWS path already has:
+//!
+//! * weights live as integer codes in the same tap-major `(c_in*k*k,
+//!   c_out)` layout ([`WeightKind`]): flat-CSR add-only streams for
+//!   ternary (W2) weights, 4-channel register tiles for dense (W4+);
+//! * the convolution is **im2col-free**: each weight tap `(ci, fh, fw)`
+//!   streams the in-bounds window of one input row directly into the
+//!   output-channel accumulator — zero padding is never materialized,
+//!   out-of-bounds taps are simply skipped (they contribute exactly
+//!   nothing, like the explicit zeros of the patch matrix);
+//! * accumulators are laid out `(c_out, h_out*w_out)` — already the
+//!   layer's output layout — so requantization is the same fused,
+//!   branchless `requant_rows` pass the 1-D layer runs, with no
+//!   transpose, parallel over output-channel blocks via
+//!   [`crate::exec::par_rows_pair_mut`] (bit-identical at every thread
+//!   count by the contiguous-disjoint-rows argument);
+//! * [`QuantConv2d::forward_im2col`] keeps the patch-matrix + GEMM +
+//!   threshold-search reference alive as the equivalence oracle,
+//!   mirroring [`super::conv::QuantConv1d::forward_im2col`].
+//!
+//! Stride and zero padding are supported (`ksize` square kernels); a
+//! `stride == 1` tap degenerates to one contiguous `memcpy`-shaped
+//! accumulation per input row, which is the common case for the
+//! paper's 3x3 layers.
+
+use std::ops::Range;
+
+use crate::exec;
+use crate::quant::{QParams, RequantLut};
+
+use super::conv::{build_conv_lut, requant_rows, WeightKind};
+use super::gemm::{self, TernaryMatrix};
+
+/// Below this many output channels per worker, fork-join overhead
+/// dominates the per-row work and the layer runs sequentially. Lower
+/// than the 1-D threshold: a 2-D row is `h_out*w_out` wide, so even a
+/// few channels carry real work.
+const MIN_CH_PER_THREAD: usize = 4;
+
+/// Quantized 2-D convolution: NCHW i8 codes in, i8 codes out.
+pub struct QuantConv2d {
+    pub c_in: usize,
+    pub c_out: usize,
+    /// square kernel edge (the paper's nets use 3x3 and 1x1)
+    pub ksize: usize,
+    pub stride: usize,
+    /// symmetric zero padding on both spatial axes
+    pub pad: usize,
+    pub weights: WeightKind,
+    pub lut: RequantLut,
+    /// this layer's input quantizer (diagnostics / analog sim)
+    pub qa: QParams,
+    pub qw: QParams,
+    /// this layer's own output quantizer (Q_so, the quantized ReLU)
+    pub mid: QParams,
+    /// the next consumer's input quantizer, if fused
+    pub next: Option<QParams>,
+}
+
+impl QuantConv2d {
+    /// Build from float weights + quantizers.
+    ///
+    /// * `w` — float weights (c_out, c_in, ksize, ksize), the FQ shadow
+    ///   copy.
+    /// * `qa`/`qw` — input-activation and weight quantizers.
+    /// * `mid` — this layer's output quantizer (Q_so, b=0: the
+    ///   quantized ReLU).
+    /// * `next` — the consumer's input quantizer, or None (then codes
+    ///   are emitted on the `mid` grid).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        w: &[f32],
+        c_out: usize,
+        c_in: usize,
+        ksize: usize,
+        stride: usize,
+        pad: usize,
+        qa: QParams,
+        qw: QParams,
+        mid: QParams,
+        next: Option<QParams>,
+    ) -> Self {
+        assert_eq!(w.len(), c_out * c_in * ksize * ksize);
+        assert!(c_out > 0 && c_in > 0 && ksize > 0 && stride > 0, "degenerate conv2d shape");
+        let kdim = c_in * ksize * ksize;
+        // integer weight codes, laid out (kdim, c_out) tap-major — the
+        // exact layout the 1-D layer and the GEMM oracle share
+        let mut b = vec![0i8; kdim * c_out];
+        for ko in 0..c_out {
+            for ci in 0..c_in {
+                for fh in 0..ksize {
+                    for fw in 0..ksize {
+                        let code = qw.int_code(w[((ko * c_in + ci) * ksize + fh) * ksize + fw]);
+                        debug_assert!((-127..=127).contains(&code));
+                        b[((ci * ksize + fh) * ksize + fw) * c_out + ko] = code as i8;
+                    }
+                }
+            }
+        }
+        let ternary = qw.n == 1.0;
+        let weights = if ternary {
+            WeightKind::Ternary(TernaryMatrix::from_dense(kdim, c_out, &b))
+        } else {
+            WeightKind::Dense { b }
+        };
+        let lut = build_conv_lut(kdim, qa, qw, mid, next);
+        QuantConv2d { c_in, c_out, ksize, stride, pad, weights, lut, qa, qw, mid, next }
+    }
+
+    /// Output spatial extent for an input of `(h_in, w_in)`.
+    pub fn out_hw(&self, h_in: usize, w_in: usize) -> (usize, usize) {
+        assert!(
+            h_in + 2 * self.pad >= self.ksize && w_in + 2 * self.pad >= self.ksize,
+            "input {h_in}x{w_in} (pad {}) smaller than the {} kernel",
+            self.pad,
+            self.ksize
+        );
+        (
+            (h_in + 2 * self.pad - self.ksize) / self.stride + 1,
+            (w_in + 2 * self.pad - self.ksize) / self.stride + 1,
+        )
+    }
+
+    /// Integer MACs for one forward at the given output extent.
+    pub fn macs(&self, h_out: usize, w_out: usize) -> u64 {
+        (self.c_out * self.c_in * self.ksize * self.ksize * h_out * w_out) as u64
+    }
+
+    /// Valid output-column window `[start, end)` for a tap at kernel
+    /// column `fw`: exactly the `ow` with `0 <= ow*stride + fw - pad <
+    /// w_in`. Columns outside read zero padding and are skipped.
+    fn ow_window(&self, fw: usize, w_in: usize, w_out: usize) -> (usize, usize) {
+        let off = fw as isize - self.pad as isize; // iw = ow*stride + off
+        let start = if off >= 0 { 0 } else { ((-off) as usize).div_ceil(self.stride) };
+        let max_iw = w_in as isize - 1 - off;
+        let end = if max_iw < 0 { 0 } else { (max_iw as usize / self.stride + 1).min(w_out) };
+        (start.min(end), end)
+    }
+
+    /// Visit every in-bounds output position of tap `(ci, fh, fw)`:
+    /// calls `f(out_idx, x_val)` with `out_idx = oh*w_out + ow`. Zero
+    /// padding contributes nothing and is never visited. For
+    /// `stride == 1` the inner walk is one contiguous input window per
+    /// row (the hot shape for 3x3 convs).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn for_tap<F: FnMut(usize, i8)>(
+        &self,
+        x: &[i8],
+        ci: usize,
+        fh: usize,
+        fw: usize,
+        h_in: usize,
+        w_in: usize,
+        h_out: usize,
+        w_out: usize,
+        mut f: F,
+    ) {
+        let s = self.stride;
+        let (ow0, ow1) = self.ow_window(fw, w_in, w_out);
+        if ow0 >= ow1 {
+            return;
+        }
+        let base = ci * h_in * w_in;
+        for oh in 0..h_out {
+            let ih = (oh * s + fh) as isize - self.pad as isize;
+            if ih < 0 || ih >= h_in as isize {
+                continue;
+            }
+            let row = base + ih as usize * w_in;
+            let orow = oh * w_out;
+            if s == 1 {
+                // ow0 + fw >= pad by the window construction
+                let x0 = row + ow0 + fw - self.pad;
+                for (t, &v) in x[x0..x0 + (ow1 - ow0)].iter().enumerate() {
+                    f(orow + ow0 + t, v);
+                }
+            } else {
+                for ow in ow0..ow1 {
+                    f(orow + ow, x[row + ow * s + fw - self.pad]);
+                }
+            }
+        }
+    }
+
+    /// Forward one sample: input codes (c_in, h_in, w_in) -> output
+    /// codes (c_out, h_out, w_out) on the consumer's grid. `acc`/`out`
+    /// are reused across layers/calls to keep the hot path
+    /// allocation-free.
+    pub fn forward(
+        &self,
+        x: &[i8],
+        h_in: usize,
+        w_in: usize,
+        acc: &mut Vec<i32>,
+        out: &mut Vec<i8>,
+    ) {
+        self.forward_mt(x, h_in, w_in, acc, out, 1);
+    }
+
+    /// [`QuantConv2d::forward`] with an intra-layer thread budget: the
+    /// output-channel dimension is split into contiguous blocks over
+    /// the persistent pool, each worker convolving *and* requantizing
+    /// its own rows. Output is bit-identical at every `threads`.
+    pub fn forward_mt(
+        &self,
+        x: &[i8],
+        h_in: usize,
+        w_in: usize,
+        acc: &mut Vec<i32>,
+        out: &mut Vec<i8>,
+        threads: usize,
+    ) {
+        assert_eq!(x.len(), self.c_in * h_in * w_in, "input geometry");
+        let (h_out, w_out) = self.out_hw(h_in, w_in);
+        let hw = h_out * w_out;
+        acc.clear();
+        acc.resize(self.c_out * hw, 0);
+        out.clear();
+        out.resize(self.c_out * hw, 0);
+        let threads = exec::clamp_threads(threads, self.c_out, MIN_CH_PER_THREAD);
+        if threads <= 1 {
+            self.conv_rows(x, h_in, w_in, h_out, w_out, 0..self.c_out, acc);
+            requant_rows(&self.lut, acc, out);
+            return;
+        }
+        exec::par_rows_pair_mut(
+            acc.as_mut_slice(),
+            out.as_mut_slice(),
+            self.c_out,
+            hw,
+            hw,
+            threads,
+            |range, aw, ow| {
+                self.conv_rows(x, h_in, w_in, h_out, w_out, range, aw);
+                requant_rows(&self.lut, aw, ow);
+            },
+        );
+    }
+
+    /// Direct (im2col-free) convolution of output channels `ko_range`
+    /// into `acc` (rows local to the window, (rows, h_out*w_out)).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_rows(
+        &self,
+        x: &[i8],
+        h_in: usize,
+        w_in: usize,
+        h_out: usize,
+        w_out: usize,
+        ko_range: Range<usize>,
+        acc: &mut [i32],
+    ) {
+        debug_assert_eq!(acc.len(), (ko_range.end - ko_range.start) * h_out * w_out);
+        if h_out * w_out == 0 {
+            return;
+        }
+        match &self.weights {
+            WeightKind::Ternary(tern) => {
+                self.conv_rows_ternary(tern, x, h_in, w_in, h_out, w_out, ko_range, acc)
+            }
+            WeightKind::Dense { b } => {
+                self.conv_rows_dense(b, x, h_in, w_in, h_out, w_out, ko_range, acc)
+            }
+        }
+    }
+
+    /// Add-only ternary path: per output channel, stream the in-bounds
+    /// window of each nonzero tap (+1 taps add, -1 taps subtract).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_rows_ternary(
+        &self,
+        tern: &TernaryMatrix,
+        x: &[i8],
+        h_in: usize,
+        w_in: usize,
+        h_out: usize,
+        w_out: usize,
+        ko_range: Range<usize>,
+        acc: &mut [i32],
+    ) {
+        let k = self.ksize;
+        let hw = h_out * w_out;
+        for (local, ko) in ko_range.enumerate() {
+            let crow = &mut acc[local * hw..(local + 1) * hw];
+            crow.fill(0);
+            let (plus, minus) = tern.col(ko);
+            for &p in plus {
+                let p = p as usize;
+                let (ci, fh, fw) = (p / (k * k), (p / k) % k, p % k);
+                self.for_tap(x, ci, fh, fw, h_in, w_in, h_out, w_out, |o, v| {
+                    crow[o] += v as i32;
+                });
+            }
+            for &p in minus {
+                let p = p as usize;
+                let (ci, fh, fw) = (p / (k * k), (p / k) % k, p % k);
+                self.for_tap(x, ci, fh, fw, h_in, w_in, h_out, w_out, |o, v| {
+                    crow[o] -= v as i32;
+                });
+            }
+        }
+    }
+
+    /// Dense path: 4 output channels per register tile, one in-bounds
+    /// multiply-accumulate stream per tap shared across the tile.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_rows_dense(
+        &self,
+        b: &[i8],
+        x: &[i8],
+        h_in: usize,
+        w_in: usize,
+        h_out: usize,
+        w_out: usize,
+        ko_range: Range<usize>,
+        acc: &mut [i32],
+    ) {
+        let k = self.ksize;
+        let c_out = self.c_out;
+        let hw = h_out * w_out;
+        let mut ko = ko_range.start;
+        let mut local = 0usize;
+        while ko < ko_range.end {
+            let rows = (ko_range.end - ko).min(4);
+            let tile = &mut acc[local * hw..(local + rows) * hw];
+            tile.fill(0);
+            if rows == 4 {
+                let (r0, rest) = tile.split_at_mut(hw);
+                let (r1, rest) = rest.split_at_mut(hw);
+                let (r2, r3) = rest.split_at_mut(hw);
+                for ci in 0..self.c_in {
+                    for fh in 0..k {
+                        for fw in 0..k {
+                            let p = (ci * k + fh) * k + fw;
+                            let w = &b[p * c_out + ko..p * c_out + ko + 4];
+                            if w[0] == 0 && w[1] == 0 && w[2] == 0 && w[3] == 0 {
+                                continue; // zero taps contribute exactly nothing
+                            }
+                            let (w0, w1, w2, w3) =
+                                (w[0] as i32, w[1] as i32, w[2] as i32, w[3] as i32);
+                            self.for_tap(x, ci, fh, fw, h_in, w_in, h_out, w_out, |o, xv| {
+                                let v = xv as i32;
+                                r0[o] += w0 * v;
+                                r1[o] += w1 * v;
+                                r2[o] += w2 * v;
+                                r3[o] += w3 * v;
+                            });
+                        }
+                    }
+                }
+            } else {
+                for r in 0..rows {
+                    let crow = &mut tile[r * hw..(r + 1) * hw];
+                    for ci in 0..self.c_in {
+                        for fh in 0..k {
+                            for fw in 0..k {
+                                let p = (ci * k + fh) * k + fw;
+                                let wv = b[p * c_out + ko + r] as i32;
+                                if wv == 0 {
+                                    continue;
+                                }
+                                self.for_tap(x, ci, fh, fw, h_in, w_in, h_out, w_out, |o, xv| {
+                                    crow[o] += wv * xv as i32;
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            ko += rows;
+            local += rows;
+        }
+    }
+
+    /// im2col: codes (c_in, h_in, w_in) -> patch matrix
+    /// (h_out*w_out, c_in*k*k) with explicit zeros for padding. Only
+    /// the reference path materializes this.
+    pub fn im2col(&self, x: &[i8], h_in: usize, w_in: usize, out: &mut Vec<i8>) {
+        let (h_out, w_out) = self.out_hw(h_in, w_in);
+        let k = self.ksize;
+        out.clear();
+        out.reserve(h_out * w_out * self.c_in * k * k);
+        for oh in 0..h_out {
+            for ow in 0..w_out {
+                for ci in 0..self.c_in {
+                    for fh in 0..k {
+                        for fw in 0..k {
+                            let ih = (oh * self.stride + fh) as isize - self.pad as isize;
+                            let iw = (ow * self.stride + fw) as isize - self.pad as isize;
+                            let in_bounds = ih >= 0
+                                && ih < h_in as isize
+                                && iw >= 0
+                                && iw < w_in as isize;
+                            out.push(if in_bounds {
+                                x[ci * h_in * w_in + ih as usize * w_in + iw as usize]
+                            } else {
+                                0
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The classic layer body — im2col patch matrix, gather GEMM,
+    /// threshold re-binning with transpose — kept as the oracle for the
+    /// direct-path equivalence tests. Bit-identical to
+    /// [`QuantConv2d::forward`] by construction (exact integer
+    /// arithmetic; skipped padding taps equal the patch matrix's
+    /// explicit zeros).
+    pub fn forward_im2col(
+        &self,
+        x: &[i8],
+        h_in: usize,
+        w_in: usize,
+        cols: &mut Vec<i8>,
+        acc: &mut Vec<i32>,
+        out: &mut Vec<i8>,
+    ) {
+        let (h_out, w_out) = self.out_hw(h_in, w_in);
+        let m = h_out * w_out;
+        self.im2col(x, h_in, w_in, cols);
+        acc.clear();
+        acc.resize(m * self.c_out, 0);
+        match &self.weights {
+            WeightKind::Ternary(t) => t.gemm(m, cols, acc),
+            WeightKind::Dense { b } => {
+                gemm::gemm_ref(m, self.c_in * self.ksize * self.ksize, self.c_out, cols, b, acc)
+            }
+        }
+        // re-bin, transposing (h_out*w_out, c_out) -> (c_out, h_out*w_out);
+        // the threshold-search path doubles as a dense-table cross-check
+        out.clear();
+        out.resize(self.c_out * m, 0);
+        for t in 0..m {
+            for ko in 0..self.c_out {
+                out[ko * m + t] = self.lut.apply_search(acc[t * self.c_out + ko] as i64) as i8;
+            }
+        }
+    }
+
+    /// The grid this layer's output codes live on: the consumer's input
+    /// grid when fused, else the layer's own output quantizer.
+    pub fn out_grid(&self) -> QParams {
+        self.lut.out
+    }
+
+    pub fn is_ternary(&self) -> bool {
+        matches!(self.weights, WeightKind::Ternary(_))
+    }
+
+    /// Ternary weight sparsity (0 if dense).
+    pub fn sparsity(&self) -> f64 {
+        match &self.weights {
+            WeightKind::Ternary(t) => t.sparsity,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_int;
+    use crate::util::Rng;
+
+    /// float reference of the whole layer (quantize -> conv with zero
+    /// padding -> requant chain)
+    fn float_ref(
+        layer: &QuantConv2d,
+        w: &[f32],
+        xcodes: &[i8],
+        h_in: usize,
+        w_in: usize,
+    ) -> Vec<i8> {
+        let (h_out, w_out) = layer.out_hw(h_in, w_in);
+        let k = layer.ksize;
+        let mut out = vec![0i8; layer.c_out * h_out * w_out];
+        for ko in 0..layer.c_out {
+            for oh in 0..h_out {
+                for ow in 0..w_out {
+                    let mut acc = 0f64;
+                    for ci in 0..layer.c_in {
+                        for fh in 0..k {
+                            for fw in 0..k {
+                                let ih = (oh * layer.stride + fh) as isize - layer.pad as isize;
+                                let iw = (ow * layer.stride + fw) as isize - layer.pad as isize;
+                                let code = if ih >= 0
+                                    && ih < h_in as isize
+                                    && iw >= 0
+                                    && iw < w_in as isize
+                                {
+                                    xcodes[ci * h_in * w_in + ih as usize * w_in + iw as usize]
+                                } else {
+                                    0
+                                };
+                                let a = code as f64 * (layer.qa.es as f64 / layer.qa.n as f64);
+                                let wq = quantize_int(
+                                    w[((ko * layer.c_in + ci) * k + fh) * k + fw],
+                                    layer.qw.es,
+                                    layer.qw.n,
+                                    -1.0,
+                                ) as f64
+                                    * (layer.qw.es as f64 / layer.qw.n as f64);
+                                acc += a * wq;
+                            }
+                        }
+                    }
+                    let y = layer.mid.quantize(acc as f32);
+                    let code = match layer.next {
+                        Some(nx) => nx.int_code(y),
+                        None => layer.mid.int_code(y),
+                    };
+                    out[(ko * h_out + oh) * w_out + ow] = code as i8;
+                }
+            }
+        }
+        out
+    }
+
+    /// Random layer at a given shape; nw = 1.0 takes the ternary path.
+    #[allow(clippy::too_many_arguments)]
+    fn random_layer(
+        rng: &mut Rng,
+        c_in: usize,
+        c_out: usize,
+        ksize: usize,
+        stride: usize,
+        pad: usize,
+        nw: f32,
+        fused: bool,
+    ) -> (QuantConv2d, Vec<f32>) {
+        let w: Vec<f32> =
+            (0..c_out * c_in * ksize * ksize).map(|_| rng.gaussian_f32(0.0, 0.5)).collect();
+        let qa = QParams::new(0.9, 7.0, 0.0);
+        let qw = QParams::new(0.5, nw, -1.0);
+        let mid = QParams::new(1.1, 7.0, 0.0);
+        let next = fused.then(|| QParams::new(1.05, 7.0, 0.0));
+        let layer = QuantConv2d::new(&w, c_out, c_in, ksize, stride, pad, qa, qw, mid, next);
+        (layer, w)
+    }
+
+    #[test]
+    fn matches_float_reference_ternary_and_dense() {
+        let mut rng = Rng::new(23);
+        for nw in [1.0f32, 7.0] {
+            let (c_in, c_out, h_in, w_in) = (3usize, 5usize, 9usize, 8usize);
+            let (layer, w) = random_layer(&mut rng, c_in, c_out, 3, 1, 1, nw, true);
+            assert_eq!(layer.is_ternary(), nw == 1.0);
+            let x: Vec<i8> = (0..c_in * h_in * w_in).map(|_| rng.below(8) as i8).collect();
+            let (mut acc, mut out) = (Vec::new(), Vec::new());
+            layer.forward(&x, h_in, w_in, &mut acc, &mut out);
+            let want = float_ref(&layer, &w, &x, h_in, w_in);
+            assert_eq!(out, want, "nw={nw}");
+        }
+    }
+
+    #[test]
+    fn direct_conv_matches_im2col_edge_shapes() {
+        let mut rng = Rng::new(29);
+        // (c_in, c_out, ksize, stride, pad, h_in, w_in): pointwise 1x1,
+        // stride 2, pad >= ksize, h_out == 1, w_out == 1, odd channels
+        // so the 4-channel dense tile has a remainder
+        for &(c_in, c_out, ksize, stride, pad, h_in, w_in) in &[
+            (4usize, 5usize, 1usize, 1usize, 0usize, 6usize, 5usize), // 1x1 pointwise
+            (3, 7, 3, 2, 1, 9, 9),                                    // strided 3x3
+            (2, 4, 3, 1, 4, 5, 6),                                    // pad > ksize
+            (3, 3, 3, 1, 0, 3, 7),                                    // h_out == 1
+            (2, 6, 3, 2, 0, 7, 3),                                    // w_out == 1
+            (1, 1, 2, 3, 1, 6, 8),                                    // minimal channels
+            (2, 9, 5, 3, 2, 11, 8),                                   // big kernel, odd c_out
+        ] {
+            for nw in [1.0f32, 7.0] {
+                let (layer, _w) =
+                    random_layer(&mut rng, c_in, c_out, ksize, stride, pad, nw, true);
+                let x: Vec<i8> = (0..c_in * h_in * w_in).map(|_| rng.below(8) as i8).collect();
+                let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
+                layer.forward_im2col(&x, h_in, w_in, &mut cols, &mut acc, &mut out);
+                let (mut acc2, mut got) = (Vec::new(), Vec::new());
+                layer.forward(&x, h_in, w_in, &mut acc2, &mut got);
+                assert_eq!(
+                    got, out,
+                    "edge shape c_in={c_in} c_out={c_out} ksize={ksize} stride={stride} \
+                     pad={pad} h_in={h_in} w_in={w_in} nw={nw}"
+                );
+                // and at several intra-layer thread budgets
+                for threads in [2usize, 3, 8] {
+                    let (mut acc3, mut got3) = (Vec::new(), Vec::new());
+                    layer.forward_mt(&x, h_in, w_in, &mut acc3, &mut got3, threads);
+                    assert_eq!(got3, out, "threads={threads} ksize={ksize} stride={stride}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unfused_last_layer_emits_on_its_own_grid() {
+        let mut rng = Rng::new(31);
+        let (layer, w) = random_layer(&mut rng, 2, 3, 3, 1, 1, 1.0, false);
+        let (h_in, w_in) = (6usize, 6usize);
+        let x: Vec<i8> = (0..2 * h_in * w_in).map(|_| rng.below(8) as i8).collect();
+        let (mut acc, mut out) = (Vec::new(), Vec::new());
+        layer.forward(&x, h_in, w_in, &mut acc, &mut out);
+        assert_eq!(out, float_ref(&layer, &w, &x, h_in, w_in));
+        assert_eq!(layer.out_grid(), layer.mid);
+    }
+
+    #[test]
+    fn output_geometry() {
+        let w = vec![0.0f32; 4 * 3 * 3 * 3];
+        let q = QParams::new(1.0, 1.0, -1.0);
+        let l = QuantConv2d::new(&w, 4, 3, 3, 1, 1, q, q, q, None);
+        assert_eq!(l.out_hw(32, 32), (32, 32)); // same-pad 3x3
+        let s = QuantConv2d::new(&w, 4, 3, 3, 2, 1, q, q, q, None);
+        assert_eq!(s.out_hw(32, 32), (16, 16)); // strided downsample
+        let w1 = vec![0.0f32; 4 * 3 * 1 * 1];
+        let p = QuantConv2d::new(&w1, 4, 3, 1, 2, 0, q, q, q, None);
+        assert_eq!(p.out_hw(32, 32), (16, 16)); // strided 1x1 projection
+        assert_eq!(p.macs(16, 16), (4 * 3 * 16 * 16) as u64);
+    }
+}

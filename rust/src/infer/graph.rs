@@ -8,34 +8,65 @@
 //! per-tensor scale metadata*; this module is that abstraction:
 //!
 //! * [`QuantStage`] — the typed stages a fully-quantized network is
-//!   composed of: [`FpEmbed`] (f32 features → input codes),
-//!   [`FqConvStack`] (integer codes → integer codes, ping-pong),
-//!   [`GlobalAvgPool`] (codes → f32 features, i64 higher-precision sum)
-//!   and [`DenseHead`] (f32 features → logits).
+//!   composed of. Sequence (1-D) nets use [`FpEmbed`] (f32 features →
+//!   input codes), [`FqConvStack`] (integer codes → integer codes,
+//!   ping-pong); image (2-D, NCHW) nets use [`QuantStem2d`] (f32 pixels
+//!   → input codes on the first conv's grid), [`FqConv2dStack`] and
+//!   [`Residual`] (integer skip-add through an exact
+//!   [`crate::quant::AddLut`], optional strided 1x1 projection on the
+//!   shortcut). Both families share [`GlobalAvgPool`] (codes → f32
+//!   features, i64 higher-precision sum over time steps *or* spatial
+//!   positions) and [`DenseHead`] (f32 features → logits).
 //! * [`QuantGraph`] — owns stage sequencing, shape/grid validation,
 //!   ping-pong code-buffer planning and scratch sizing, and exposes an
 //!   allocation-free [`QuantGraph::forward_into`]. Every architecture
 //!   the paper evaluates (the KWS TCN, ResNet-32, DarkNet-19) is a
 //!   different stage list over the same bit-exact kernels.
 //!
+//! Accepted stage grammars (validated at build time, by constructor):
+//!
+//! ```text
+//! QuantGraph::new    (1-D):  FpEmbed     FqConvStack+                GlobalAvgPool DenseHead
+//! QuantGraph::new_2d (2-D):  QuantStem2d (FqConv2dStack | Residual)+ GlobalAvgPool DenseHead
+//! ```
+//!
+//! A 2-D [`Residual`] block is the integer form of the classic ResNet
+//! basic block (see [`super::resnet`] for ResNet-32 assembled on this
+//! grammar):
+//!
+//! ```text
+//!        codes (c_in, h, w) on grid G_in
+//!          |------------------------------.
+//!   FQ-Conv2d (3x3, maybe strided)        |  identity           (c_in == c_out)
+//!   FQ-Conv2d (3x3)                       |  or FQ-Conv2d 1x1   (strided / widening
+//!          |                              |                      projection)
+//!        body codes on grid G_a     shortcut codes on grid G_b
+//!          `-----------> AddLut <---------'
+//!              out[i] = Q_out(deq_a(body[i]) + deq_b(skip[i]))
+//!                 (one exact 2-D table load per element)
+//! ```
+//!
 //! [`crate::infer::FqKwsNet`] is now a thin constructor facade over a
 //! `QuantGraph`; [`synthetic_graph`] instantiates arbitrary
-//! [`SynthArch`] descriptions (including a deeper/wider second
-//! architecture, [`SynthArch::deep_wide`]) on the same API, which is how
+//! [`SynthArch`] descriptions — the KWS TCN, the deeper/wider
+//! [`SynthArch::deep_wide`], and the 2-D residual
+//! [`SynthArch::resnet32`] — on the same API, which is how
 //! rust/tests/graph.rs proves the graph generalizes beyond KWS.
 //!
 //! **Determinism contract:** stage bodies are the exact loops the
 //! monolithic pipeline ran — same float accumulation order, same integer
 //! instruction sequence — so a graph-built network is bit-identical to
 //! the pre-refactor pipeline at every thread count (rust/tests/graph.rs,
-//! rust/tests/parallel.rs).
+//! rust/tests/parallel.rs); the 2-D stages inherit the contract from
+//! the contiguous-disjoint-row partitioning of [`crate::exec`].
 
 use anyhow::{bail, ensure, Result};
 
-use crate::quant::{learned_quantize, QParams};
+use crate::quant::{learned_quantize, AddLut, QParams};
 use crate::util::Rng;
 
 use super::conv::QuantConv1d;
+use super::conv2d::QuantConv2d;
 
 // ---------------------------------------------------------------------------
 // Scratch
@@ -52,6 +83,8 @@ pub struct Scratch {
     /// ping-pong i8 code buffers
     pub(crate) a: Vec<i8>,
     pub(crate) b: Vec<i8>,
+    /// residual shortcut codes, held while the block body ping-pongs
+    pub(crate) skip: Vec<i8>,
     /// float accumulator row for the embedding's streaming dot products
     pub(crate) fa: Vec<f32>,
     /// pooled features, reused so the GAP + head path never allocates
@@ -66,21 +99,45 @@ impl Scratch {
             acc: Vec::with_capacity(p.acc),
             a: Vec::with_capacity(p.codes),
             b: Vec::with_capacity(p.codes),
+            skip: Vec::with_capacity(p.skip),
             fa: Vec::with_capacity(p.fa),
             pooled: Vec::with_capacity(p.pooled),
         }
     }
 
-    /// Current buffer capacities `(acc, a, b, fa, pooled)` — lets tests
-    /// pin that a pre-planned scratch never reallocates on the hot path.
-    pub fn capacities(&self) -> (usize, usize, usize, usize, usize) {
+    /// Current buffer capacities `(acc, a, b, skip, fa, pooled)` — lets
+    /// tests pin that a pre-planned scratch never reallocates on the
+    /// hot path.
+    pub fn capacities(&self) -> (usize, usize, usize, usize, usize, usize) {
         (
             self.acc.capacity(),
             self.a.capacity(),
             self.b.capacity(),
+            self.skip.capacity(),
             self.fa.capacity(),
             self.pooled.capacity(),
         )
+    }
+
+    /// One 2-D conv layer step of the graph walk: ping-pong buffer
+    /// select, conv + fused requant, spatial bookkeeping. Shared by the
+    /// plain-stack and residual-body loops so their bookkeeping cannot
+    /// diverge.
+    fn conv2d_step(
+        &mut self,
+        l: &QuantConv2d,
+        h_cur: &mut usize,
+        w_cur: &mut usize,
+        cur_in_a: &mut bool,
+        threads: usize,
+    ) {
+        let (input, output) =
+            if *cur_in_a { (&self.a, &mut self.b) } else { (&self.b, &mut self.a) };
+        l.forward_mt(input, *h_cur, *w_cur, &mut self.acc, output, threads);
+        let (h2, w2) = l.out_hw(*h_cur, *w_cur);
+        *h_cur = h2;
+        *w_cur = w2;
+        *cur_in_a = !*cur_in_a;
     }
 }
 
@@ -186,10 +243,58 @@ impl DenseHead {
     }
 }
 
+/// Learned input quantizer for image (NCHW) networks: f32 pixels
+/// `(c_in, h, w)` → i8 codes on the first conv layer's input grid —
+/// the 2-D analogue of [`FpEmbed`]'s trailing quantization step (ResNet
+/// and DarkNet have no full-precision embedding; their first conv is
+/// itself quantized).
+pub struct QuantStem2d {
+    /// input channels (e.g. 3 RGB planes)
+    pub c_in: usize,
+    /// the first conv layer's input grid (codes are emitted on it)
+    pub out_q: QParams,
+}
+
+impl QuantStem2d {
+    /// Quantize one sample into `codes` (resized to `x.len()`).
+    pub fn forward_into(&self, x: &[f32], codes: &mut Vec<i8>) {
+        codes.clear();
+        codes.reserve(x.len());
+        for &v in x {
+            codes.push(self.out_q.int_code(v) as i8);
+        }
+    }
+}
+
+/// A run of integer 2-D FQ-Conv layers. Codes ping-pong between the
+/// two scratch buffers, exactly like the 1-D stack.
+pub struct FqConv2dStack {
+    pub layers: Vec<QuantConv2d>,
+}
+
+/// Integer residual block: a conv body, an optional shortcut
+/// projection, and an exact tabulated skip-add (see the module doc for
+/// the block diagram). The join is `out[i] = add.apply(body[i],
+/// skip[i])` — one branchless 2-D table load per element, no float
+/// scale on the hot path.
+pub struct Residual {
+    /// the block body (e.g. two 3x3 convs; the first may be strided)
+    pub body: Vec<QuantConv2d>,
+    /// optional shortcut projection (1x1, possibly strided) for blocks
+    /// that change channel count or spatial extent; None = identity
+    pub down: Option<QuantConv2d>,
+    /// the integer skip-add: `a` must be the body's output grid, `b`
+    /// the shortcut's grid; `out` is the consumer's input grid
+    pub add: AddLut,
+}
+
 /// One typed stage of a fully-quantized inference graph.
 pub enum QuantStage {
     FpEmbed(FpEmbed),
     FqConvStack(FqConvStack),
+    QuantStem2d(QuantStem2d),
+    FqConv2dStack(FqConv2dStack),
+    Residual(Residual),
     GlobalAvgPool(GlobalAvgPool),
     DenseHead(DenseHead),
 }
@@ -199,6 +304,9 @@ impl QuantStage {
         match self {
             QuantStage::FpEmbed(_) => "FpEmbed",
             QuantStage::FqConvStack(_) => "FqConvStack",
+            QuantStage::QuantStem2d(_) => "QuantStem2d",
+            QuantStage::FqConv2dStack(_) => "FqConv2dStack",
+            QuantStage::Residual(_) => "Residual",
             QuantStage::GlobalAvgPool(_) => "GlobalAvgPool",
             QuantStage::DenseHead(_) => "DenseHead",
         }
@@ -250,6 +358,8 @@ struct Plan {
     codes: usize,
     /// max i32 accumulator numel across conv layers
     acc: usize,
+    /// max residual shortcut numel (0 for graphs without residuals)
+    skip: usize,
     /// float accumulator row length (embedding)
     fa: usize,
     /// pooled feature length
@@ -258,20 +368,115 @@ struct Plan {
 
 /// A validated, executable sequence of [`QuantStage`]s.
 ///
-/// The accepted stage grammar is `FpEmbed FqConvStack+ GlobalAvgPool
-/// DenseHead` — exactly the paper's fully-quantized deployment shape,
-/// with the conv stack free to be any depth/width/dilation schedule.
-/// Construction validates channel chaining, quantizer-grid consistency
-/// at the pooling boundary, and that the time axis survives every
-/// dilated layer; `forward_into` then runs without any per-call checks
-/// beyond debug asserts.
+/// Two grammars are accepted, one per constructor (see the module doc):
+/// [`QuantGraph::new`] seals the 1-D sequence shape `FpEmbed
+/// FqConvStack+ GlobalAvgPool DenseHead`; [`QuantGraph::new_2d`] seals
+/// the image shape `QuantStem2d (FqConv2dStack | Residual)+
+/// GlobalAvgPool DenseHead`. Construction validates channel/spatial
+/// chaining, quantizer-grid consistency at the residual joins and the
+/// pooling boundary, and that the time axis survives every dilated
+/// layer; `forward_into` then runs without any per-call checks beyond
+/// debug asserts.
 pub struct QuantGraph {
     stages: Vec<QuantStage>,
-    frames: usize,
-    n_in: usize,
+    /// per-sample input shape: `[n_in, frames]` for sequence graphs,
+    /// `[c, h, w]` for image graphs
+    in_shape: Vec<usize>,
     classes: usize,
+    /// positions the GAP stage averages over (surviving time steps for
+    /// sequences, `h*w` for images)
     out_frames: usize,
     plan: Plan,
+}
+
+/// True for the stage kinds the 2-D validator's conv loop accepts.
+fn is_2d_conv_stage(s: &QuantStage) -> bool {
+    matches!(s, QuantStage::FqConv2dStack(_) | QuantStage::Residual(_))
+}
+
+/// Shared tail validation for both grammars: a [`GlobalAvgPool`]
+/// matching the conv stages' channels and output grid, then a
+/// [`DenseHead`], then end of list. Returns the class count.
+fn validate_tail<'a, I>(
+    it: &mut I,
+    channels: usize,
+    last_grid: Option<QParams>,
+    plan: &mut Plan,
+) -> Result<usize>
+where
+    I: Iterator<Item = (usize, &'a QuantStage)>,
+{
+    match it.next() {
+        Some((si, QuantStage::GlobalAvgPool(g))) => {
+            ensure!(
+                g.channels == channels,
+                "stage {si}: GlobalAvgPool over {} channels but the conv stages \
+                 emit {channels}",
+                g.channels
+            );
+            if let Some(grid) = last_grid {
+                ensure!(
+                    g.dq == grid,
+                    "stage {si}: GlobalAvgPool dequant grid does not match the final \
+                     conv stage's output grid"
+                );
+            }
+            plan.pooled = g.channels;
+        }
+        Some((_, s)) => bail!("expected GlobalAvgPool after the conv stages, found {}", s.kind()),
+        None => bail!("graph ends without GlobalAvgPool + DenseHead"),
+    }
+    let classes = match it.next() {
+        Some((si, QuantStage::DenseHead(h))) => {
+            ensure!(
+                h.d_in == channels,
+                "stage {si}: DenseHead d_in {} but pooled features have {channels}",
+                h.d_in
+            );
+            ensure!(h.w.len() == h.d_in * h.d_out, "head weight numel");
+            ensure!(h.b.len() == h.d_out, "head bias length");
+            h.d_out
+        }
+        Some((_, s)) => bail!("expected DenseHead after GlobalAvgPool, found {}", s.kind()),
+        None => bail!("graph ends without a DenseHead"),
+    };
+    if let Some((_, s)) = it.next() {
+        bail!("trailing stage after DenseHead: {}", s.kind());
+    }
+    Ok(classes)
+}
+
+/// Shared per-conv bookkeeping for the 2-D validator: channel/spatial
+/// chaining plus buffer planning; returns the layer's output grid.
+fn chain_conv2d(
+    l: &QuantConv2d,
+    si: usize,
+    li: &str,
+    channels: &mut usize,
+    hc: &mut usize,
+    wc: &mut usize,
+    plan: &mut Plan,
+) -> Result<QParams> {
+    ensure!(
+        l.c_in == *channels,
+        "stage {si} layer {li}: c_in {} but incoming channels {channels}",
+        l.c_in
+    );
+    ensure!(
+        *hc + 2 * l.pad >= l.ksize && *wc + 2 * l.pad >= l.ksize,
+        "stage {si} layer {li}: {}x{} kernel (pad {}) consumes the whole {hc}x{wc} extent",
+        l.ksize,
+        l.ksize,
+        l.pad
+    );
+    let (h2, w2) = l.out_hw(*hc, *wc);
+    ensure!(h2 >= 1 && w2 >= 1, "stage {si} layer {li}: empty output extent");
+    *hc = h2;
+    *wc = w2;
+    *channels = l.c_out;
+    plan.codes = plan.codes.max(l.c_out * h2 * w2);
+    plan.acc = plan.acc.max(l.c_out * h2 * w2);
+    Ok(l.out_grid())
 }
 
 impl QuantGraph {
@@ -299,7 +504,7 @@ impl QuantGraph {
         };
 
         let mut t = frames;
-        let mut plan = Plan { codes: channels * t, acc: 0, fa: frames, pooled: 0 };
+        let mut plan = Plan { codes: channels * t, acc: 0, skip: 0, fa: frames, pooled: 0 };
         let mut n_stacks = 0usize;
         let mut last_grid: Option<QParams> = None;
         while let Some((si, QuantStage::FqConvStack(stack))) =
@@ -327,68 +532,131 @@ impl QuantGraph {
             }
         }
         ensure!(n_stacks >= 1, "graph needs at least one FqConvStack");
+        let classes = validate_tail(&mut it, channels, last_grid, &mut plan)?;
 
-        match it.next() {
-            Some((si, QuantStage::GlobalAvgPool(g))) => {
-                ensure!(
-                    g.channels == channels,
-                    "stage {si}: GlobalAvgPool over {} channels but conv stack \
-                     emits {channels}",
-                    g.channels
-                );
-                if let Some(grid) = last_grid {
-                    ensure!(
-                        g.dq == grid,
-                        "stage {si}: GlobalAvgPool dequant grid does not match the \
-                         final conv layer's output grid"
-                    );
-                }
-                plan.pooled = g.channels;
-            }
-            Some((_, s)) => {
-                bail!("expected GlobalAvgPool after the conv stack, found {}", s.kind())
-            }
-            None => bail!("graph ends without GlobalAvgPool + DenseHead"),
-        }
+        Ok(QuantGraph { stages, in_shape: vec![n_in, frames], classes, out_frames: t, plan })
+    }
 
-        let classes = match it.next() {
-            Some((si, QuantStage::DenseHead(h))) => {
-                ensure!(
-                    h.d_in == channels,
-                    "stage {si}: DenseHead d_in {} but pooled features have {channels}",
-                    h.d_in
-                );
-                ensure!(h.w.len() == h.d_in * h.d_out, "head weight numel");
-                ensure!(h.b.len() == h.d_out, "head bias length");
-                h.d_out
+    /// Validate and seal a 2-D (NCHW image) stage sequence for inputs
+    /// of `h x w` pixels. Grammar: `QuantStem2d (FqConv2dStack |
+    /// Residual)+ GlobalAvgPool DenseHead`. Errors name the offending
+    /// stage so mis-assembled architectures fail loudly at build time.
+    pub fn new_2d(stages: Vec<QuantStage>, h: usize, w: usize) -> Result<Self> {
+        ensure!(h >= 1 && w >= 1, "graph needs a non-empty input image");
+        ensure!(!stages.is_empty(), "empty stage list");
+
+        let mut it = stages.iter().enumerate().peekable();
+        let (c_in, mut grid) = match it.next() {
+            Some((_, QuantStage::QuantStem2d(s))) => {
+                ensure!(s.c_in >= 1, "degenerate stem channel count");
+                (s.c_in, s.out_q)
             }
-            Some((_, s)) => bail!("expected DenseHead after GlobalAvgPool, found {}", s.kind()),
-            None => bail!("graph ends without a DenseHead"),
+            Some((_, s)) => bail!("2-D graph must start with QuantStem2d, found {}", s.kind()),
+            None => unreachable!(),
         };
-        if let Some((_, s)) = it.next() {
-            bail!("trailing stage after DenseHead: {}", s.kind());
-        }
 
-        Ok(QuantGraph { stages, frames, n_in, classes, out_frames: t, plan })
+        let (mut channels, mut hc, mut wc) = (c_in, h, w);
+        let mut plan = Plan { codes: channels * hc * wc, acc: 0, skip: 0, fa: 0, pooled: 0 };
+        let mut n_stacks = 0usize;
+
+        while let Some((si, stage)) = it.next_if(|(_, s)| is_2d_conv_stage(s)) {
+            n_stacks += 1;
+            match stage {
+                QuantStage::FqConv2dStack(stack) => {
+                    ensure!(!stack.layers.is_empty(), "stage {si}: empty FqConv2dStack");
+                    for (li, l) in stack.layers.iter().enumerate() {
+                        grid = chain_conv2d(
+                            l,
+                            si,
+                            &li.to_string(),
+                            &mut channels,
+                            &mut hc,
+                            &mut wc,
+                            &mut plan,
+                        )?;
+                    }
+                }
+                QuantStage::Residual(r) => {
+                    ensure!(!r.body.is_empty(), "stage {si}: residual block without a body");
+                    let (in_ch, in_h, in_w, in_grid) = (channels, hc, wc, grid);
+                    for (li, l) in r.body.iter().enumerate() {
+                        grid = chain_conv2d(
+                            l,
+                            si,
+                            &format!("body.{li}"),
+                            &mut channels,
+                            &mut hc,
+                            &mut wc,
+                            &mut plan,
+                        )?;
+                    }
+                    let skip_grid = match &r.down {
+                        Some(d) => {
+                            let (mut dc, mut dh, mut dw) = (in_ch, in_h, in_w);
+                            let g =
+                                chain_conv2d(d, si, "down", &mut dc, &mut dh, &mut dw, &mut plan)?;
+                            ensure!(
+                                dc == channels && dh == hc && dw == wc,
+                                "stage {si}: shortcut projection emits {dc}x{dh}x{dw} but \
+                                 the body emits {channels}x{hc}x{wc}"
+                            );
+                            g
+                        }
+                        None => {
+                            ensure!(
+                                in_ch == channels && in_h == hc && in_w == wc,
+                                "stage {si}: identity shortcut needs matching shapes \
+                                 ({in_ch}x{in_h}x{in_w} in, {channels}x{hc}x{wc} out) — \
+                                 add a projection"
+                            );
+                            in_grid
+                        }
+                    };
+                    ensure!(
+                        r.add.a == grid,
+                        "stage {si}: AddLut body grid does not match the body's output grid"
+                    );
+                    ensure!(
+                        r.add.b == skip_grid,
+                        "stage {si}: AddLut shortcut grid does not match the shortcut's grid"
+                    );
+                    plan.skip = plan.skip.max(in_ch * in_h * in_w).max(channels * hc * wc);
+                    grid = r.add.out;
+                }
+                _ => unreachable!("next_if matched conv2d stage kinds"),
+            }
+        }
+        ensure!(n_stacks >= 1, "2-D graph needs at least one FqConv2dStack or Residual");
+        let classes = validate_tail(&mut it, channels, Some(grid), &mut plan)?;
+
+        Ok(QuantGraph { stages, in_shape: vec![c_in, h, w], classes, out_frames: hc * wc, plan })
     }
 
     pub fn stages(&self) -> &[QuantStage] {
         &self.stages
     }
 
-    /// Input time steps per sample.
+    /// Per-sample input shape: `[n_in, frames]` for sequence graphs,
+    /// `[c, h, w]` for image graphs (what a serving backend reports as
+    /// its sample shape).
+    pub fn in_shape(&self) -> &[usize] {
+        &self.in_shape
+    }
+
+    /// Input time steps per sample (sequence graphs) / spatial
+    /// positions per sample (image graphs).
     pub fn frames(&self) -> usize {
-        self.frames
+        self.in_shape[1..].iter().product()
     }
 
-    /// Flattened feature count per sample: `n_in * frames`.
+    /// Flattened feature count per sample.
     pub fn in_numel(&self) -> usize {
-        self.n_in * self.frames
+        self.in_shape.iter().product()
     }
 
-    /// Input channel count (e.g. MFCC features).
+    /// Input channel count (MFCC features / image planes).
     pub fn n_in(&self) -> usize {
-        self.n_in
+        self.in_shape[0]
     }
 
     pub fn classes(&self) -> usize {
@@ -437,13 +705,65 @@ impl QuantGraph {
 
     /// Total integer MACs per sample (for the perf accounting).
     pub fn macs_per_sample(&self) -> u64 {
-        let mut t = self.frames;
+        if self.in_shape.len() == 3 {
+            return self.macs_2d();
+        }
+        let mut t = self.frames();
         let mut total = 0u64;
         for l in self.conv_layers() {
             t = l.t_out(t);
             total += (l.c_out * l.c_in * l.ksize * t) as u64;
         }
         total
+    }
+
+    /// MAC accounting for image graphs: walk the spatial extent through
+    /// every conv stage (residual bodies + shortcut projections).
+    fn macs_2d(&self) -> u64 {
+        let (mut h, mut w) = (self.in_shape[1], self.in_shape[2]);
+        let mut total = 0u64;
+        for stage in &self.stages {
+            match stage {
+                QuantStage::FqConv2dStack(st) => {
+                    for l in &st.layers {
+                        let (h2, w2) = l.out_hw(h, w);
+                        total += l.macs(h2, w2);
+                        h = h2;
+                        w = w2;
+                    }
+                }
+                QuantStage::Residual(r) => {
+                    let (ih, iw) = (h, w);
+                    for l in &r.body {
+                        let (h2, w2) = l.out_hw(h, w);
+                        total += l.macs(h2, w2);
+                        h = h2;
+                        w = w2;
+                    }
+                    if let Some(d) = &r.down {
+                        let (dh, dw) = d.out_hw(ih, iw);
+                        total += d.macs(dh, dw);
+                    }
+                }
+                _ => {}
+            }
+        }
+        total
+    }
+
+    /// All 2-D conv layers, in execution order — a block's shortcut
+    /// projection runs (and is yielded) before its body, matching the
+    /// forward walk, which stashes the shortcut first. Empty for
+    /// sequence graphs.
+    pub fn conv2d_layers(&self) -> impl Iterator<Item = &QuantConv2d> {
+        self.stages.iter().flat_map(|s| {
+            let (down, body) = match s {
+                QuantStage::FqConv2dStack(st) => (None, st.layers.as_slice()),
+                QuantStage::Residual(r) => (r.down.as_ref(), r.body.as_slice()),
+                _ => (None, &[][..]),
+            };
+            down.into_iter().chain(body)
+        })
     }
 
     /// Allocation-free forward of one sample: f32 features
@@ -453,7 +773,14 @@ impl QuantGraph {
     pub fn forward_into(&self, x: &[f32], s: &mut Scratch, logits: &mut [f32], threads: usize) {
         debug_assert_eq!(x.len(), self.in_numel(), "feature buffer size");
         assert_eq!(logits.len(), self.classes, "logit buffer size");
-        let mut t_cur = self.frames;
+        // current extent: time steps for sequence stages; (h, w) for
+        // image stages (GAP derives its pooled width from whichever
+        // family the graph belongs to)
+        let mut t_cur = self.frames();
+        let (mut h_cur, mut w_cur) = match self.in_shape.len() {
+            3 => (self.in_shape[1], self.in_shape[2]),
+            _ => (0, 0),
+        };
         // which ping-pong buffer currently holds the live codes
         let mut cur_in_a = true;
         for stage in &self.stages {
@@ -471,11 +798,43 @@ impl QuantGraph {
                         cur_in_a = !cur_in_a;
                     }
                 }
+                QuantStage::QuantStem2d(st) => {
+                    st.forward_into(x, &mut s.a);
+                    cur_in_a = true;
+                }
+                QuantStage::FqConv2dStack(stack) => {
+                    for l in &stack.layers {
+                        s.conv2d_step(l, &mut h_cur, &mut w_cur, &mut cur_in_a, threads);
+                    }
+                }
+                QuantStage::Residual(r) => {
+                    // stash the shortcut (identity copy or projection)
+                    {
+                        let input: &Vec<i8> = if cur_in_a { &s.a } else { &s.b };
+                        if let Some(d) = &r.down {
+                            d.forward_mt(input, h_cur, w_cur, &mut s.acc, &mut s.skip, threads);
+                        } else {
+                            s.skip.clear();
+                            s.skip.extend_from_slice(input);
+                        }
+                    }
+                    // run the body through the ping-pong buffers
+                    for l in &r.body {
+                        s.conv2d_step(l, &mut h_cur, &mut w_cur, &mut cur_in_a, threads);
+                    }
+                    // exact integer skip-add, in place over the body output
+                    let cur: &mut Vec<i8> = if cur_in_a { &mut s.a } else { &mut s.b };
+                    debug_assert_eq!(cur.len(), s.skip.len(), "residual join geometry");
+                    for (o, &sk) in cur.iter_mut().zip(s.skip.iter()) {
+                        *o = r.add.apply(*o, sk);
+                    }
+                }
                 QuantStage::GlobalAvgPool(g) => {
                     let codes = if cur_in_a { &s.a } else { &s.b };
+                    let t = if self.in_shape.len() == 3 { h_cur * w_cur } else { t_cur };
                     s.pooled.clear();
                     s.pooled.resize(g.channels, 0.0);
-                    global_avg_pool_into(codes, g.channels, t_cur, &g.dq, &mut s.pooled);
+                    global_avg_pool_into(codes, g.channels, t, &g.dq, &mut s.pooled);
                 }
                 QuantStage::DenseHead(h) => h.forward_into(&s.pooled, logits),
             }
@@ -494,9 +853,8 @@ impl QuantGraph {
 // Synthetic architectures (offline tests / benches)
 // ---------------------------------------------------------------------------
 
-/// A synthetic architecture description: enough to instantiate a full
-/// [`QuantGraph`] with deterministic random parameters and no artifacts.
-pub struct SynthArch {
+/// A synthetic sequence (1-D) architecture description.
+pub struct SeqArch {
     pub name: &'static str,
     pub n_in: usize,
     pub frames: usize,
@@ -506,31 +864,97 @@ pub struct SynthArch {
     pub convs: Vec<(usize, usize, usize)>,
 }
 
+/// A synthetic image (2-D residual) architecture description —
+/// CIFAR-style ResNets: a 3x3 stem, `groups` of basic blocks (two 3x3
+/// convs each; the first block of a group may stride and widen, taking
+/// a 1x1 shortcut projection), GAP, dense head.
+pub struct ImgArch {
+    pub name: &'static str,
+    /// input planes (3 for RGB)
+    pub in_ch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub classes: usize,
+    /// stem conv output channels
+    pub stem_ch: usize,
+    /// per group: (channels, residual blocks, stride of the first block)
+    pub groups: Vec<(usize, usize, usize)>,
+}
+
+impl ImgArch {
+    /// The paper's Table-6 CIFAR-10 network: ResNet-(6n+2) with n = 5 —
+    /// 16/32/64-channel groups of five basic blocks on 32x32 inputs.
+    pub fn resnet32() -> Self {
+        ImgArch::resnet("resnet32", 5)
+    }
+
+    /// CIFAR ResNet-(6n+2) with `n` blocks per group.
+    pub fn resnet(name: &'static str, n: usize) -> Self {
+        assert!(n >= 1, "resnet needs at least one block per group");
+        ImgArch {
+            name,
+            in_ch: 3,
+            h: 32,
+            w: 32,
+            classes: 10,
+            stem_ch: 16,
+            groups: vec![(16, n, 1), (32, n, 2), (64, n, 2)],
+        }
+    }
+}
+
+/// A synthetic architecture description: enough to instantiate a full
+/// [`QuantGraph`] with deterministic random parameters and no artifacts.
+pub enum SynthArch {
+    Seq(SeqArch),
+    Img(ImgArch),
+}
+
 impl SynthArch {
     /// The paper's KWS temporal-conv net: 39 MFCC x 80 frames, 32-wide,
     /// seven ksize-3 layers with the [1, 1, 2, 4, 8, 8, 8] schedule.
     pub fn kws() -> Self {
-        SynthArch {
+        SynthArch::Seq(SeqArch {
             name: "kws",
             n_in: 39,
             frames: 80,
             embed_dim: 32,
             classes: 12,
             convs: [1usize, 1, 2, 4, 8, 8, 8].iter().map(|&d| (32, 3, d)).collect(),
-        }
+        })
     }
 
     /// A deeper/wider second architecture with a different dilation
     /// schedule (two stacked pyramids reaching dilation 16) — exists to
     /// prove the graph API generalizes beyond the KWS monolith.
     pub fn deep_wide() -> Self {
-        SynthArch {
+        SynthArch::Seq(SeqArch {
             name: "deep-wide",
             n_in: 39,
             frames: 160,
             embed_dim: 48,
             classes: 12,
             convs: [1usize, 2, 4, 8, 16, 1, 2, 4, 8, 16].iter().map(|&d| (48, 3, d)).collect(),
+        })
+    }
+
+    /// The paper's Table-6 ternary ResNet-32 on CIFAR-10-shaped inputs
+    /// (see [`ImgArch::resnet32`]), expressed on the 2-D residual
+    /// stage grammar.
+    pub fn resnet32() -> Self {
+        SynthArch::Img(ImgArch::resnet32())
+    }
+
+    /// A shallower CIFAR ResNet-(6n+2) — same stage grammar as
+    /// [`SynthArch::resnet32`] at a fraction of the cost (tests).
+    pub fn resnet(name: &'static str, n: usize) -> Self {
+        SynthArch::Img(ImgArch::resnet(name, n))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SynthArch::Seq(a) => a.name,
+            SynthArch::Img(a) => a.name,
         }
     }
 }
@@ -539,6 +963,13 @@ impl SynthArch {
 /// parameters (seeded) — no artifacts or XLA needed. `nw`/`na` are the
 /// weight/activation level counts (nw = 1 takes the ternary path).
 pub fn synthetic_graph(arch: &SynthArch, nw: f32, na: f32, seed: u64) -> Result<QuantGraph> {
+    match arch {
+        SynthArch::Seq(a) => synthetic_seq_graph(a, nw, na, seed),
+        SynthArch::Img(a) => super::resnet::synthetic_resnet_graph(a, nw, na, seed),
+    }
+}
+
+fn synthetic_seq_graph(arch: &SeqArch, nw: f32, na: f32, seed: u64) -> Result<QuantGraph> {
     ensure!(!arch.convs.is_empty(), "architecture has no conv layers");
     let mut rng = Rng::new(seed ^ 0x9A_D06_C0DE);
     let dim = arch.embed_dim;
@@ -595,8 +1026,8 @@ pub fn synthetic_graph(arch: &SynthArch, nw: f32, na: f32, seed: u64) -> Result<
 mod tests {
     use super::*;
 
-    fn tiny_arch() -> SynthArch {
-        SynthArch {
+    fn tiny_seq() -> SeqArch {
+        SeqArch {
             name: "tiny",
             n_in: 3,
             frames: 12,
@@ -604,6 +1035,10 @@ mod tests {
             classes: 2,
             convs: vec![(4, 3, 1), (5, 3, 2)],
         }
+    }
+
+    fn tiny_arch() -> SynthArch {
+        SynthArch::Seq(tiny_seq())
     }
 
     #[test]
@@ -635,9 +1070,9 @@ mod tests {
 
     #[test]
     fn rejects_time_axis_collapse() {
-        let mut arch = tiny_arch();
+        let mut arch = tiny_seq();
         arch.frames = 5; // 5 - 2 = 3, then 3 - 4: receptive span too wide
-        let err = synthetic_graph(&arch, 1.0, 7.0, 3).unwrap_err().to_string();
+        let err = synthetic_graph(&SynthArch::Seq(arch), 1.0, 7.0, 3).unwrap_err().to_string();
         assert!(err.contains("receptive span"), "unexpected error: {err}");
     }
 
@@ -648,6 +1083,63 @@ mod tests {
         stages.swap(2, 3); // head before GAP
         let err = QuantGraph::new(stages, 12).unwrap_err().to_string();
         assert!(err.contains("GlobalAvgPool"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn builds_and_plans_a_small_2d_residual_graph() {
+        let g = synthetic_graph(&SynthArch::resnet("r8", 1), 1.0, 7.0, 3).expect("resnet8");
+        assert_eq!(g.in_shape(), &[3, 32, 32]);
+        assert_eq!(g.in_numel(), 3 * 32 * 32);
+        assert_eq!(g.classes(), 10);
+        // 32x32 -> 16x16 -> 8x8 through the strided groups
+        assert_eq!(g.out_frames(), 64);
+        assert!(g.macs_per_sample() > 0);
+        // plan must cover the widest boundary: 16ch @ 32x32 = 16384
+        let s = Scratch::for_graph(&g);
+        let (acc, a, b, skip, _fa, pooled) = s.capacities();
+        assert!(a >= 16 * 32 * 32 && b >= 16 * 32 * 32, "code plan too small: {a}/{b}");
+        assert!(acc >= 16 * 32 * 32, "acc plan too small: {acc}");
+        assert!(skip >= 16 * 32 * 32, "skip plan too small: {skip}");
+        assert!(pooled >= 64, "pooled plan too small: {pooled}");
+    }
+
+    #[test]
+    fn rejects_2d_graph_without_a_stem() {
+        let good = synthetic_graph(&SynthArch::resnet("r8", 1), 1.0, 7.0, 3).unwrap();
+        let mut stages = good.stages;
+        stages.remove(0); // drop the stem: the 2-D grammar check fires
+        let err = QuantGraph::new_2d(stages, 32, 32).unwrap_err().to_string();
+        assert!(err.contains("QuantStem2d"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_residual_with_a_missing_projection() {
+        let good = synthetic_graph(&SynthArch::resnet("r8", 1), 1.0, 7.0, 3).unwrap();
+        let mut stages = good.stages;
+        // the first strided/widening block needs its 1x1 projection —
+        // turning it into an identity shortcut must fail loudly
+        for s in stages.iter_mut() {
+            if let QuantStage::Residual(r) = s {
+                if r.down.is_some() {
+                    r.down = None;
+                    break;
+                }
+            }
+        }
+        let err = QuantGraph::new_2d(stages, 32, 32).unwrap_err().to_string();
+        assert!(err.contains("identity shortcut"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_grammar_mixing() {
+        // a 1-D stage list handed to the 2-D constructor (and vice
+        // versa) is a build-time error, not a runtime surprise
+        let seq = synthetic_graph(&tiny_arch(), 1.0, 7.0, 3).unwrap();
+        let err = QuantGraph::new_2d(seq.stages, 12, 12).unwrap_err().to_string();
+        assert!(err.contains("QuantStem2d"), "unexpected error: {err}");
+        let img = synthetic_graph(&SynthArch::resnet("r8", 1), 1.0, 7.0, 3).unwrap();
+        let err = QuantGraph::new(img.stages, 32).unwrap_err().to_string();
+        assert!(err.contains("FpEmbed"), "unexpected error: {err}");
     }
 
     #[test]

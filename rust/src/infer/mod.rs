@@ -13,20 +13,30 @@
 //!   (runtime-dispatched AVX2 tile on x86_64) + flat-CSR ternary path
 //! * [`conv`]     — im2col-free quantized dilated conv1d: `ksize`
 //!   shifted contiguous streams with fused requantization
+//! * [`conv2d`]   — im2col-free quantized NCHW conv2d (stride +
+//!   padding) on the same kernel layer: ternary add-only streams /
+//!   4-channel dense tiles, fused requantization, no transpose
 //! * [`graph`]    — the composable quantized model graph: typed
-//!   [`QuantStage`]s (FP embed, FQ-Conv stack, GAP, dense head) sealed
-//!   into a [`QuantGraph`] that owns sequencing, ping-pong buffer
-//!   planning and the allocation-free forward
+//!   [`QuantStage`]s (FP embed, FQ-Conv stacks in 1-D and 2-D, integer
+//!   residual blocks, GAP, dense head) sealed into a [`QuantGraph`]
+//!   that owns sequencing, ping-pong buffer planning and the
+//!   allocation-free forward
 //! * [`pipeline`] — the KWS network as a thin constructor facade over
 //!   [`QuantGraph`], built directly from a trained FQ
 //!   [`ParamSet`](crate::coordinator::ParamSet); agreement with the XLA
 //!   deployment artifact is pinned by rust/tests/engine_vs_artifact.rs.
+//! * [`resnet`]   — ResNet-32 (Table 6) assembled on the 2-D stage
+//!   grammar: `resnet32_stages` from a trained `ParamSet`, plus the
+//!   synthetic instantiation behind `SynthArch::resnet32`.
 
 pub mod conv;
+pub mod conv2d;
 pub mod gemm;
 pub mod graph;
 pub mod pipeline;
+pub mod resnet;
 
 pub use conv::QuantConv1d;
+pub use conv2d::QuantConv2d;
 pub use graph::{QuantGraph, QuantStage};
 pub use pipeline::FqKwsNet;

@@ -1,0 +1,361 @@
+//! ResNet-32 (Table 6) expressed as a [`QuantGraph`] stage list.
+//!
+//! The paper's CIFAR-10 headline network is a ternary-weight
+//! ResNet-(6n+2): a 3x3 stem conv, three groups of `n` basic blocks
+//! (16 → 32 → 64 channels; the first block of groups two and three
+//! strides by 2 with a 1x1 shortcut projection), global average
+//! pooling and a dense head. This module assembles that network from a
+//! flat [`ParamSet`] onto the 2-D stage grammar of [`super::graph`] —
+//! the exact analogue of [`super::pipeline::kws_stages`] for the 1-D
+//! KWS net:
+//!
+//! * [`resnet_stages`] / [`resnet32_stages`] — *the only place the
+//!   ResNet architecture is spelled out*; [`QuantGraph::new_2d`]
+//!   validates and seals it.
+//! * [`resnet_params`] / [`resnet32_params`] — deterministic synthetic
+//!   parameters (no artifacts or XLA), powering offline tests, the
+//!   serving demo and `benches/perf_infer.rs`.
+//! * [`synthetic_resnet_graph`] — both of the above behind
+//!   [`super::graph::synthetic_graph`]`(&SynthArch::resnet32(), ..)`.
+//!
+//! Parameter naming mirrors the manifest convention the architecture
+//! printers already use (`crate::models::render_resnet`): `stem.w`,
+//! `g{g}.b{b}.c1.w`, `g{g}.b{b}.c2.w`, optional `g{g}.b{b}.down.w`,
+//! `head.w`/`head.b`, with per-conv log-scales `*.sa` / `*.sw` /
+//! `*.so` (input, weight, output quantizers).
+//!
+//! Grid chaining is the fused-requant recipe of the integer-inference
+//! surveys (Krishnamoorthi 2018; Nagel et al. 2021): each conv re-bins
+//! onto its consumer's input grid through its LUT; the residual join
+//! adds the body grid and the shortcut grid onto the next block's
+//! input grid through an exact [`AddLut`] — no float scale on the hot
+//! path anywhere between the stem quantizer and the GAP dequantize.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::ParamSet;
+use crate::quant::{AddLut, QParams};
+use crate::runtime::{GraphSpec, TensorSpec};
+use crate::util::Rng;
+
+use super::conv2d::QuantConv2d;
+use super::graph::{
+    DenseHead, FqConv2dStack, GlobalAvgPool, ImgArch, QuantGraph, QuantStage, QuantStem2d,
+    Residual,
+};
+
+/// Flatten the group structure into per-block (name prefix, channels,
+/// stride) — the first block of a group carries the group's stride.
+fn blocks_of(arch: &ImgArch) -> Vec<(String, usize, usize)> {
+    let mut blocks = Vec::new();
+    for (gi, &(ch, n, stride)) in arch.groups.iter().enumerate() {
+        for bi in 0..n {
+            blocks.push((format!("g{gi}.b{bi}"), ch, if bi == 0 { stride } else { 1 }));
+        }
+    }
+    blocks
+}
+
+/// Deterministic synthetic ResNet parameters for `arch` — Gaussian
+/// weights, zero biases, zero log-scales (=> every `e^s = 1`), exactly
+/// the parameterization of [`super::pipeline::synthetic_params`].
+pub fn resnet_params(arch: &ImgArch, seed: u64) -> Result<ParamSet> {
+    ensure!(!arch.groups.is_empty(), "resnet needs at least one group");
+    let mut specs: Vec<TensorSpec> = Vec::new();
+    let mut spec = |name: &str, shape: Vec<usize>| {
+        specs.push(TensorSpec { name: name.to_string(), shape });
+    };
+    spec("stem.w", vec![arch.stem_ch, arch.in_ch, 3, 3]);
+    for role in ["sa", "sw", "so"] {
+        spec(&format!("stem.{role}"), vec![]);
+    }
+    let mut c_in = arch.stem_ch;
+    for (prefix, ch, stride) in blocks_of(arch) {
+        spec(&format!("{prefix}.c1.w"), vec![ch, c_in, 3, 3]);
+        spec(&format!("{prefix}.c2.w"), vec![ch, ch, 3, 3]);
+        if stride != 1 || ch != c_in {
+            spec(&format!("{prefix}.down.w"), vec![ch, c_in, 1, 1]);
+        }
+        for conv in ["c1", "c2", "down"] {
+            if conv == "down" && stride == 1 && ch == c_in {
+                continue;
+            }
+            for role in ["sa", "sw", "so"] {
+                spec(&format!("{prefix}.{conv}.{role}"), vec![]);
+            }
+        }
+        c_in = ch;
+    }
+    spec("head.w", vec![c_in, arch.classes]);
+    spec("head.b", vec![arch.classes]);
+    let graph = GraphSpec { trainable: specs, state: Vec::new(), opt: Vec::new(), param_count: 0 };
+    let mut params = ParamSet::zeros(&graph);
+    let mut rng = Rng::new(seed ^ 0x2D_2E5_0CDE);
+    for (spec, v) in graph.trainable.iter().zip(params.values.iter_mut()) {
+        if spec.name.ends_with(".w") {
+            rng.fill_gaussian(v.data_mut(), 0.5);
+        }
+        // head.b and the log-scales stay 0 (=> es = 1)
+    }
+    Ok(params)
+}
+
+/// [`resnet_params`] at the Table-6 ResNet-32 shape.
+pub fn resnet32_params(seed: u64) -> Result<ParamSet> {
+    resnet_params(&ImgArch::resnet32(), seed)
+}
+
+/// `e^{s}` of one log-scale parameter, with a named error.
+fn es_of(params: &ParamSet, name: &str) -> Result<f32> {
+    Ok(params.scalar(name).with_context(|| format!("missing scale {name}"))?.exp())
+}
+
+/// One conv layer's geometry + quantizer wiring, resolved against the
+/// parameter set by [`build_conv`].
+struct ConvSpec<'a> {
+    name: &'a str,
+    c_out: usize,
+    c_in: usize,
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+    /// input grid (the producer's output grid)
+    qa: QParams,
+    /// consumer input grid when fused; None emits on the own mid grid
+    next: Option<QParams>,
+}
+
+/// Build one quantized conv layer from `{name}.w` and its `sw`/`so`
+/// log-scales.
+fn build_conv(params: &ParamSet, spec: &ConvSpec<'_>, nw: f32, na: f32) -> Result<QuantConv2d> {
+    let name = spec.name;
+    let wname = format!("{name}.w");
+    let w = params.get(&wname).with_context(|| format!("missing param {wname}"))?;
+    ensure!(
+        w.shape() == [spec.c_out, spec.c_in, spec.ksize, spec.ksize],
+        "{name}.w: shape {:?}, expected ({}, {}, {}, {})",
+        w.shape(),
+        spec.c_out,
+        spec.c_in,
+        spec.ksize,
+        spec.ksize
+    );
+    let qw = QParams::new(es_of(params, &format!("{name}.sw"))?, nw, -1.0);
+    // every conv output quantizer is the quantized ReLU (b = 0)
+    let mid = QParams::new(es_of(params, &format!("{name}.so"))?, na, 0.0);
+    Ok(QuantConv2d::new(
+        w.data(),
+        spec.c_out,
+        spec.c_in,
+        spec.ksize,
+        spec.stride,
+        spec.pad,
+        spec.qa,
+        qw,
+        mid,
+        spec.next,
+    ))
+}
+
+/// Assemble the ResNet stage list (quantized stem → residual groups →
+/// GAP → dense head) from trained FQ parameters. `nw`/`na` are the
+/// weight/activation level counts (nw = 1 takes the ternary add-only
+/// path). This is the *only* place the architecture is spelled out;
+/// [`QuantGraph::new_2d`] validates and seals it.
+pub fn resnet_stages(
+    arch: &ImgArch,
+    params: &ParamSet,
+    nw: f32,
+    na: f32,
+) -> Result<Vec<QuantStage>> {
+    ensure!(!arch.groups.is_empty(), "resnet needs at least one group");
+    // every post-ReLU activation grid is unsigned (b = 0)
+    let relu = |es: f32| QParams::new(es, na, 0.0);
+
+    // stem: learned input quantizer on signed pixels, then the 3x3 stem
+    // conv re-binning onto the first block's input grid
+    let stem_qa = QParams::new(es_of(params, "stem.sa")?, na, -1.0);
+    let blocks = blocks_of(arch);
+    let first_qa = relu(es_of(params, &format!("{}.c1.sa", blocks[0].0))?);
+    let stem_conv = build_conv(
+        params,
+        &ConvSpec {
+            name: "stem",
+            c_out: arch.stem_ch,
+            c_in: arch.in_ch,
+            ksize: 3,
+            stride: 1,
+            pad: 1,
+            qa: stem_qa,
+            next: Some(first_qa),
+        },
+        nw,
+        na,
+    )?;
+    let mut stages = vec![
+        QuantStage::QuantStem2d(QuantStem2d { c_in: arch.in_ch, out_q: stem_qa }),
+        QuantStage::FqConv2dStack(FqConv2dStack { layers: vec![stem_conv] }),
+    ];
+
+    let mut c_in = arch.stem_ch;
+    let mut gap_grid = first_qa;
+    for (i, (prefix, ch, stride)) in blocks.iter().enumerate() {
+        let (ch, stride) = (*ch, *stride);
+        let qa_in = relu(es_of(params, &format!("{prefix}.c1.sa"))?);
+        let c2_qa = relu(es_of(params, &format!("{prefix}.c2.sa"))?);
+        let c1_name = format!("{prefix}.c1");
+        let c1 = build_conv(
+            params,
+            &ConvSpec {
+                name: &c1_name,
+                c_out: ch,
+                c_in,
+                ksize: 3,
+                stride,
+                pad: 1,
+                qa: qa_in,
+                next: Some(c2_qa),
+            },
+            nw,
+            na,
+        )?;
+        // the body's last conv is unfused: its codes feed the AddLut,
+        // which owns the re-binning onto the consumer grid
+        let c2_name = format!("{prefix}.c2");
+        let c2 = build_conv(
+            params,
+            &ConvSpec {
+                name: &c2_name,
+                c_out: ch,
+                c_in: ch,
+                ksize: 3,
+                stride: 1,
+                pad: 1,
+                qa: c2_qa,
+                next: None,
+            },
+            nw,
+            na,
+        )?;
+        let body_grid = c2.out_grid();
+        let (down, skip_grid) = if stride != 1 || ch != c_in {
+            let down_name = format!("{prefix}.down");
+            let d = build_conv(
+                params,
+                &ConvSpec {
+                    name: &down_name,
+                    c_out: ch,
+                    c_in,
+                    ksize: 1,
+                    stride,
+                    pad: 0,
+                    qa: qa_in,
+                    next: None,
+                },
+                nw,
+                na,
+            )?;
+            let g = d.out_grid();
+            (Some(d), g)
+        } else {
+            (None, qa_in)
+        };
+        // the join emits on the next block's input grid; the last
+        // block's codes go straight to GAP on the body grid
+        let out_grid = match blocks.get(i + 1) {
+            Some((np, _, _)) => relu(es_of(params, &format!("{np}.c1.sa"))?),
+            None => body_grid,
+        };
+        let add = AddLut::build(body_grid, skip_grid, out_grid);
+        stages.push(QuantStage::Residual(Residual { body: vec![c1, c2], down, add }));
+        gap_grid = out_grid;
+        c_in = ch;
+    }
+
+    stages.push(QuantStage::GlobalAvgPool(GlobalAvgPool { channels: c_in, dq: gap_grid }));
+    let head_w = params.get("head.w").context("missing param head.w")?;
+    let head_b = params.get("head.b").context("missing param head.b")?.data().to_vec();
+    ensure!(head_w.shape() == [c_in, arch.classes], "head.w shape");
+    stages.push(QuantStage::DenseHead(DenseHead {
+        w: head_w.data().to_vec(),
+        b: head_b,
+        d_in: c_in,
+        d_out: arch.classes,
+    }));
+    Ok(stages)
+}
+
+/// [`resnet_stages`] at the Table-6 ResNet-32 shape: the paper's
+/// CIFAR-10 network from a trained FQ [`ParamSet`].
+pub fn resnet32_stages(params: &ParamSet, nw: f32, na: f32) -> Result<Vec<QuantStage>> {
+    resnet_stages(&ImgArch::resnet32(), params, nw, na)
+}
+
+/// Synthetic ResNet as a sealed graph: [`resnet_params`] +
+/// [`resnet_stages`] + [`QuantGraph::new_2d`]. This is what
+/// [`super::graph::synthetic_graph`] runs for
+/// [`super::graph::SynthArch::Img`] architectures.
+pub fn synthetic_resnet_graph(arch: &ImgArch, nw: f32, na: f32, seed: u64) -> Result<QuantGraph> {
+    let params = resnet_params(arch, seed)?;
+    QuantGraph::new_2d(resnet_stages(arch, &params, nw, na)?, arch.h, arch.w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::graph::{synthetic_graph, Scratch, SynthArch};
+    use crate::util::Rng;
+
+    #[test]
+    fn resnet32_has_the_table6_structure() {
+        let g = synthetic_resnet_graph(&ImgArch::resnet32(), 1.0, 7.0, 3).expect("resnet32");
+        assert_eq!(g.in_shape(), &[3, 32, 32]);
+        assert_eq!(g.classes(), 10);
+        // 32x32 -> 16x16 -> 8x8 through the two strided groups
+        assert_eq!(g.out_frames(), 8 * 8);
+        // stem + 15 blocks x 2 body convs + 2 shortcut projections
+        assert_eq!(g.conv2d_layers().count(), 1 + 15 * 2 + 2);
+        assert!(g.conv2d_layers().all(|l| l.is_ternary()));
+        assert!(g.macs_per_sample() > 60_000_000, "macs {}", g.macs_per_sample());
+    }
+
+    #[test]
+    fn tiny_resnet_forward_is_finite_and_deterministic() {
+        let arch = SynthArch::resnet("resnet8", 1);
+        let g = synthetic_graph(&arch, 1.0, 7.0, 11).expect("resnet8");
+        let mut rng = Rng::new(2);
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 0.5);
+        let mut s = Scratch::for_graph(&g);
+        let a = g.forward(&x, &mut s);
+        let b = g.forward(&x, &mut s);
+        assert_eq!(a, b, "scratch reuse must not change outputs");
+        assert_eq!(a.len(), 10);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert!(a.iter().any(|&v| v != 0.0), "logits all zero — dead forward");
+    }
+
+    #[test]
+    fn dense_weights_run_the_resnet_grammar_too() {
+        let g = synthetic_resnet_graph(&ImgArch::resnet("resnet8-w4", 1), 7.0, 7.0, 5)
+            .expect("dense resnet8");
+        assert!(g.conv2d_layers().all(|l| !l.is_ternary()));
+        let mut rng = Rng::new(4);
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 0.5);
+        let mut s = Scratch::for_graph(&g);
+        let logits = g.forward(&x, &mut s);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn missing_parameter_fails_loudly() {
+        let arch = ImgArch::resnet("r8", 1);
+        let mut params = resnet_params(&arch, 7).unwrap();
+        // drop a block weight by renaming it away
+        let idx = params.specs.iter().position(|s| s.name == "g1.b0.down.w").unwrap();
+        params.specs[idx].name = "g1.b0.down.w.gone".into();
+        let err = resnet_stages(&arch, &params, 1.0, 7.0).unwrap_err().to_string();
+        assert!(err.contains("g1.b0.down.w"), "unexpected error: {err}");
+    }
+}

@@ -212,7 +212,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let deadline_us = args.u64_or("deadline-us", 0);
     let deadline = (deadline_us > 0).then(|| std::time::Duration::from_micros(deadline_us));
     let sample_numel: usize = input_shape.iter().product();
-    let factory = NativeBackend::factory(&net, &input_shape);
+    // split the intra-layer thread budget across the serve workers so
+    // their batch-of-one forks don't contend on the global pool lock
+    let factory = NativeBackend::factory_sharded(&net, &input_shape, workers);
     let server = Server::start(factory, workers, sample_numel, policy);
 
     let ds = data::for_model("kws", &input_shape, net.classes);

@@ -8,7 +8,7 @@
 
 pub mod lut;
 
-pub use lut::RequantLut;
+pub use lut::{AddLut, RequantLut};
 
 /// Positive level count for an `nbits` code: n = 2^(nb-1) - 1.
 pub fn n_levels(nbits: u32) -> i32 {

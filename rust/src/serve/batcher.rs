@@ -5,9 +5,10 @@
 //! request has waited `max_wait_us` (latency bound). Requests carry a
 //! [`Priority`] class — the batcher keeps one forming batch *per
 //! priority* and the shared work queue serves Interactive batches before
-//! Batch ones — and an optional absolute deadline: a request whose
-//! deadline has passed when its batch is dispatched is answered with a
-//! typed error instead of riding the batch.
+//! Batch ones — and an optional absolute deadline: the batcher wakes at
+//! the earliest pending deadline, so a doomed request is answered with
+//! a typed error promptly at its deadline (early expiry) — and whatever
+//! slips through is still expired at dispatch or at worker pop.
 //!
 //! [`simulate`] / [`simulate_prio`] are discrete-time models of the
 //! threaded loop (`serve`), used by the property tests in
@@ -119,8 +120,18 @@ struct SimBatch {
 /// on size or on the oldest member's `max_wait_us` timer (an arrival
 /// landing exactly at the timer instant starts the next batch); closed
 /// batches queue per lane; the worker always pops the Interactive lane
-/// first; at pop time, members whose deadline lies strictly before the
-/// inference start are expired out of the batch.
+/// first. Deadlines expire in two places, mirroring the threaded loop:
+/// a member whose deadline passes while its batch is still *forming*
+/// is expired **early** at the deadline wake (`max(deadline + 1,
+/// arrival)` — the batcher checks strictly after the deadline, and
+/// cannot act before the request exists); at pop time, members whose
+/// deadline lies strictly before the inference start are expired out
+/// of the batch. One idealization: an early-expired member still
+/// occupies its forming-batch slot for the close-time computation
+/// (the threaded loop frees the slot at the expiry wake, so a later
+/// arrival may close marginally differently); the tested invariants —
+/// expiry strictly after the deadline, dispatch never past it — hold
+/// under both accountings.
 pub fn simulate_prio(
     policy: BatchPolicy,
     reqs: &[SimRequest],
@@ -150,7 +161,19 @@ pub fn simulate_prio(
             } else {
                 deadline // timer fired
             };
-            batches.push(SimBatch { priority: prio, closed_us, members: idx[i..j].to_vec() });
+            // early expiry: a deadline that passes before the batch
+            // closes is answered at its own wake, not at dispatch
+            let mut members = Vec::with_capacity(j - i);
+            for &r in &idx[i..j] {
+                match reqs[r].deadline_us {
+                    Some(d) if d < closed_us => {
+                        out[r] =
+                            SimOutcome::Expired { at_us: (d + 1).max(reqs[r].arrival_us) };
+                    }
+                    _ => members.push(r),
+                }
+            }
+            batches.push(SimBatch { priority: prio, closed_us, members });
             i = j;
         }
     }
@@ -357,6 +380,43 @@ mod tests {
         let d = simulate_prio(p, &reqs, 5_000);
         assert_eq!(d[1], SimOutcome::Expired { at_us: 5_000 });
         assert_eq!(d[2], SimOutcome::Dispatched { closed_us: 20, start_us: 5_000, batch: 1 });
+    }
+
+    #[test]
+    fn doomed_request_expires_at_its_deadline_not_at_dispatch() {
+        // the forming batch stays open until t=10_000 (big max_batch,
+        // long timer); the deadlined member must be answered at its own
+        // deadline wake (101), not held hostage until dispatch
+        let p = BatchPolicy::new(16, 10_000);
+        let reqs = vec![
+            SimRequest::at(0, Priority::Interactive),
+            SimRequest {
+                arrival_us: 0,
+                priority: Priority::Interactive,
+                deadline_us: Some(100),
+            },
+        ];
+        let d = simulate_prio(p, &reqs, 50);
+        assert_eq!(d[1], SimOutcome::Expired { at_us: 101 }, "early expiry at the deadline");
+        assert_eq!(
+            d[0],
+            SimOutcome::Dispatched { closed_us: 10_000, start_us: 10_000, batch: 1 },
+            "the survivor still rides the timer-closed batch alone"
+        );
+    }
+
+    #[test]
+    fn already_overdue_arrival_expires_at_arrival() {
+        // a request that arrives with its deadline already past cannot
+        // be answered before it exists: expiry clamps to the arrival
+        let p = BatchPolicy::new(16, 500);
+        let reqs = vec![SimRequest {
+            arrival_us: 40,
+            priority: Priority::Batch,
+            deadline_us: Some(5),
+        }];
+        let d = simulate_prio(p, &reqs, 10);
+        assert_eq!(d[0], SimOutcome::Expired { at_us: 40 });
     }
 
     #[test]

@@ -43,11 +43,14 @@
 //! worker never head-of-line-blocks batches another worker could serve,
 //! and a dead worker simply stops pulling.
 //!
-//! **Deadlines.** A request may carry a deadline; both the batcher (at
-//! dispatch) and the worker (at pop) expire overdue requests out of
-//! their batch and answer them with [`ServeError::DeadlineExceeded`]
-//! instead of letting them ride — an answer that can no longer be used
-//! by its caller is not worth a backend's cycles.
+//! **Deadlines.** A request may carry a deadline; the batcher wakes at
+//! the earliest pending deadline and expires overdue forming-batch
+//! members *right away* (early expiry), and both the batcher (at
+//! dispatch) and the worker (at pop) expire whatever slipped through,
+//! answering with [`ServeError::DeadlineExceeded`] instead of letting
+//! doomed requests ride — an answer that can no longer be used by its
+//! caller is not worth a backend's cycles, and the caller learns
+//! promptly at the deadline, not at dispatch.
 //!
 //! **Error policy** distinguishes poisoned *batches* from poisoned
 //! *replicas*: a failed batch is re-queued at the back of its lane
@@ -68,9 +71,12 @@
 //! shape allocation ([`Backend::sample_shape`] returns a borrowed
 //! slice). The native integer engine ([`NativeBackend`]) routes a batch
 //! of one through the single-sample `forward_into` with the full
-//! intra-layer thread budget (the batch-of-one fast path); the XLA
-//! deployment artifact ([`XlaBackend`]) pads to its fixed batch. Both
-//! are measured in `benches/perf_serve.rs`.
+//! intra-layer thread budget (the batch-of-one fast path; use
+//! [`NativeBackend::factory_sharded`] to split that budget across a
+//! many-worker pool), [`GraphBackend`] serves any bare [`QuantGraph`]
+//! (e.g. the 2-D ResNet-32 stage list) next to the KWS models, and the
+//! XLA deployment artifact ([`XlaBackend`]) pads to its fixed batch.
+//! All are measured in `benches/perf_serve.rs`.
 //!
 //! Hot-path allocation discipline: each worker stages batch features
 //! and logits in recycled buffers and the native backend routes
@@ -86,7 +92,7 @@ use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -94,6 +100,7 @@ use anyhow::Result;
 
 use crate::exec;
 use crate::infer::pipeline::{FqKwsNet, Scratch};
+use crate::infer::QuantGraph;
 use crate::metrics::LatencyHist;
 use crate::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Executable};
 
@@ -207,6 +214,14 @@ pub trait Backend {
     fn out_dim(&self) -> usize;
 }
 
+/// Batch-of-one intra-layer thread budget for one of `serve_workers`
+/// concurrently-forking replicas: the machine budget split across the
+/// pool (min 1), shared by every `factory_sharded` so the backend
+/// families cannot drift apart.
+fn sharded_budget(serve_workers: usize) -> usize {
+    (exec::default_threads() / serve_workers.max(1)).max(1)
+}
+
 /// Native integer engine backend (batch-size agnostic).
 pub struct NativeBackend {
     pub net: Arc<FqKwsNet>,
@@ -245,6 +260,27 @@ impl NativeBackend {
             Box::new(NativeBackend::new(Arc::clone(&net), shape.clone())) as Box<dyn Backend>
         })
     }
+
+    /// [`NativeBackend::factory`] for a pool of `serve_workers` workers
+    /// serving batch-of-one traffic: replicas get an intra-layer thread
+    /// budget of `pool_workers / serve_workers` (min 1) instead of the
+    /// full machine, so concurrent replicas stop contending on the
+    /// global [`exec::Pool`]'s fork lock (which serializes forks — with
+    /// many workers each forking the full budget, the pool becomes the
+    /// bottleneck; see the [`NativeBackend::new`] note). Outputs are
+    /// bit-identical at every budget.
+    pub fn factory_sharded(
+        net: &Arc<FqKwsNet>,
+        shape: &[usize],
+        serve_workers: usize,
+    ) -> BackendFactory {
+        let budget = sharded_budget(serve_workers);
+        let (net, shape) = (Arc::clone(net), shape.to_vec());
+        Arc::new(move |_wi| {
+            let b = NativeBackend::with_intra_threads(Arc::clone(&net), shape.clone(), budget);
+            Box::new(b) as Box<dyn Backend>
+        })
+    }
 }
 
 impl Backend for NativeBackend {
@@ -270,6 +306,84 @@ impl Backend for NativeBackend {
 
     fn out_dim(&self) -> usize {
         self.net.classes
+    }
+}
+
+/// Backend over a bare [`QuantGraph`] — serves any architecture the
+/// graph engine can express (the 2-D ResNet-32 stage list, a custom
+/// stack, ...) without a named facade. Batch-size agnostic: a batch of
+/// one spends the intra-layer thread budget inside the kernels (same
+/// fast path as [`NativeBackend`]), larger batches walk samples over
+/// one reusable [`Scratch`] — allocation-free either way, bit-identical
+/// at every budget.
+pub struct GraphBackend {
+    pub graph: Arc<QuantGraph>,
+    scratch: Scratch,
+    /// intra-layer thread budget for the batch-of-one fast path
+    intra_threads: usize,
+}
+
+impl GraphBackend {
+    /// Backend with the batch-of-one fast path sized to the machine
+    /// ([`exec::default_threads`]); use
+    /// [`GraphBackend::with_intra_threads`] or
+    /// [`GraphBackend::factory_sharded`] on many-worker pools.
+    pub fn new(graph: Arc<QuantGraph>) -> Self {
+        let threads = exec::default_threads();
+        GraphBackend::with_intra_threads(graph, threads)
+    }
+
+    /// Backend with an explicit intra-layer budget for batches of one
+    /// (`1` disables the fast path; outputs are bit-identical either way).
+    pub fn with_intra_threads(graph: Arc<QuantGraph>, intra_threads: usize) -> Self {
+        let scratch = Scratch::for_graph(&graph);
+        GraphBackend { graph, scratch, intra_threads: intra_threads.max(1) }
+    }
+
+    /// A shareable factory for [`ModelRegistry::register`]: every call
+    /// builds a fresh replica (own scratch) over the shared graph.
+    pub fn factory(graph: &Arc<QuantGraph>) -> BackendFactory {
+        let graph = Arc::clone(graph);
+        Arc::new(move |_wi| Box::new(GraphBackend::new(Arc::clone(&graph))) as Box<dyn Backend>)
+    }
+
+    /// [`GraphBackend::factory`] with the batch-of-one intra-layer
+    /// budget split across `serve_workers` — same fork-lock relief as
+    /// [`NativeBackend::factory_sharded`].
+    pub fn factory_sharded(graph: &Arc<QuantGraph>, serve_workers: usize) -> BackendFactory {
+        let budget = sharded_budget(serve_workers);
+        let graph = Arc::clone(graph);
+        Arc::new(move |_wi| {
+            let b = GraphBackend::with_intra_threads(Arc::clone(&graph), budget);
+            Box::new(b) as Box<dyn Backend>
+        })
+    }
+}
+
+impl Backend for GraphBackend {
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        let per = self.graph.in_numel();
+        let classes = self.graph.classes();
+        anyhow::ensure!(x.len() == batch * per, "feature geometry");
+        anyhow::ensure!(out.len() == batch * classes, "logit buffer size");
+        if batch == 1 {
+            // batch-of-one fast path: the whole thread budget goes
+            // inside the layer kernels (bit-identical at every budget)
+            self.graph.forward_into(x, &mut self.scratch, out, self.intra_threads);
+            return Ok(());
+        }
+        for (xi, oi) in x.chunks_exact(per).zip(out.chunks_exact_mut(classes)) {
+            self.graph.forward_into(xi, &mut self.scratch, oi, 1);
+        }
+        Ok(())
+    }
+
+    fn sample_shape(&self) -> &[usize] {
+        self.graph.in_shape()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.graph.classes()
     }
 }
 
@@ -600,7 +714,10 @@ pub struct RegistryStats {
 
 struct RegistryInner {
     queue: SharedQueue,
-    models: Mutex<HashMap<ModelId, Arc<ModelEntry>>>,
+    /// `RwLock`, not `Mutex`: submits to *different* models only take a
+    /// read lock here, so concurrent client traffic never serializes on
+    /// one registry-wide lock — writers are rare (register / evict)
+    models: RwLock<HashMap<ModelId, Arc<ModelEntry>>>,
     next_req_id: AtomicU64,
     next_generation: AtomicU64,
     /// bumped per evict — workers compare against it to prune cached
@@ -637,7 +754,7 @@ impl ModelRegistry {
         assert!(n_workers >= 1, "registry needs at least one worker");
         let inner = Arc::new(RegistryInner {
             queue: SharedQueue::new(),
-            models: Mutex::new(HashMap::new()),
+            models: RwLock::new(HashMap::new()),
             next_req_id: AtomicU64::new(0),
             next_generation: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -665,7 +782,7 @@ impl ModelRegistry {
     /// (evict first to replace).
     pub fn register(&self, id: impl Into<ModelId>, spec: ModelSpec) -> Result<()> {
         let id = id.into();
-        let mut models = self.inner.models.lock().unwrap();
+        let mut models = self.inner.models.write().unwrap();
         anyhow::ensure!(!models.contains_key(&id), "model {id} already registered");
         let (tx, rx) = mpsc::channel::<Request>();
         let entry = Arc::new(ModelEntry {
@@ -704,7 +821,7 @@ impl ModelRegistry {
     /// the shared queue still get served. Returns false if the id was
     /// not registered.
     pub fn evict(&self, id: &ModelId) -> bool {
-        let entry = self.inner.models.lock().unwrap().remove(id);
+        let entry = self.inner.models.write().unwrap().remove(id);
         match entry {
             Some(e) => {
                 // dropping the sender disconnects the batcher's ingress;
@@ -720,7 +837,7 @@ impl ModelRegistry {
 
     /// Registered model ids, sorted.
     pub fn model_ids(&self) -> Vec<ModelId> {
-        let mut ids: Vec<ModelId> = self.inner.models.lock().unwrap().keys().cloned().collect();
+        let mut ids: Vec<ModelId> = self.inner.models.read().unwrap().keys().cloned().collect();
         ids.sort();
         ids
     }
@@ -743,7 +860,7 @@ impl ModelRegistry {
         priority: Priority,
         deadline: Option<Duration>,
     ) -> std::result::Result<Receiver<ServeResult>, ServeError> {
-        let entry = match self.inner.models.lock().unwrap().get(id) {
+        let entry = match self.inner.models.read().unwrap().get(id) {
             Some(e) => Arc::clone(e),
             None => return Err(ServeError::UnknownModel(id.clone())),
         };
@@ -778,7 +895,7 @@ impl ModelRegistry {
 
     pub fn stats(&self) -> RegistryStats {
         let mut entries: Vec<Arc<ModelEntry>> =
-            self.inner.models.lock().unwrap().values().cloned().collect();
+            self.inner.models.read().unwrap().values().cloned().collect();
         entries.sort_by(|a, b| a.id.cmp(&b.id));
         let models = entries.iter().map(|e| model_stats(e)).collect();
         let workers = self
@@ -813,7 +930,7 @@ impl ModelRegistry {
     /// and `Drop`.
     fn teardown(&mut self) {
         {
-            let models = self.inner.models.lock().unwrap();
+            let models = self.inner.models.read().unwrap();
             for e in models.values() {
                 e.ingress.lock().unwrap().take();
             }
@@ -1052,7 +1169,7 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
         let evictions = inner.evictions.load(Ordering::Relaxed);
         if evictions != seen_evictions {
             seen_evictions = evictions;
-            let models = inner.models.lock().unwrap();
+            let models = inner.models.read().unwrap();
             backends.retain(|mid, (gen, _)| {
                 models.get(mid).is_some_and(|e| e.generation == *gen)
             });
@@ -1106,7 +1223,7 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
         let mut oneshot: Option<Box<dyn Backend>> = None;
         if !fresh {
             let live_generation =
-                inner.models.lock().unwrap().get(&entry.id).map(|e| e.generation);
+                inner.models.read().unwrap().get(&entry.id).map(|e| e.generation);
             let replica = (entry.factory)(wi);
             // a misregistered model (factory shape != sample_numel) must
             // fail typed, not panic inside the backend in release builds
@@ -1233,13 +1350,29 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
 /// One model's batcher: assemble per-priority batches per the model's
 /// policy and push them onto the shared queue. Exits when the model's
 /// ingress disconnects (evict / shutdown), dispatching what it holds.
+///
+/// **Early expiry:** the loop wakes at the earliest pending request
+/// deadline (not only at the forming-batch timers), so a doomed request
+/// gets its typed [`ServeError::DeadlineExceeded`] reply promptly at
+/// its deadline instead of waiting for its batch to dispatch.
 fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelEntry>) {
     let policy = entry.policy;
     let mut pending: [Vec<Request>; 2] = [Vec::new(), Vec::new()];
     let mut deadline: [Option<Instant>; 2] = [None, None];
     loop {
-        // fire any lane whose forming-batch timer elapsed
         let now = Instant::now();
+        // early expiry: answer overdue forming-batch members right away
+        for lane in pending.iter_mut() {
+            let mut i = 0;
+            while i < lane.len() {
+                if lane[i].deadline.is_some_and(|d| now > d) {
+                    expire(lane.remove(i), entry);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // fire any lane whose forming-batch timer elapsed
         for p in Priority::ALL {
             let pi = p.index();
             if deadline[pi].is_some_and(|d| now >= d) {
@@ -1247,9 +1380,14 @@ fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelE
                 deadline[pi] = None;
             }
         }
+        // wake at the earlier of: a lane's forming-batch timer, or the
+        // earliest pending request deadline (early expiry)
+        let next_expiry = pending.iter().flatten().filter_map(|r| r.deadline).min();
         let timeout = deadline
             .iter()
             .flatten()
+            .copied()
+            .chain(next_expiry)
             .map(|d| d.saturating_duration_since(now))
             .min()
             .unwrap_or(Duration::from_secs(3600));

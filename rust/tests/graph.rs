@@ -1,10 +1,14 @@
 //! Contract of the composable QuantGraph engine: a graph assembled by
 //! hand from KWS stages is bit-identical to the `FqKwsNet` facade at
-//! every pool size, and a second (deeper/wider) architecture runs on
-//! the same API. Runs fully offline on synthetic parameters.
+//! every pool size, a second (deeper/wider) 1-D architecture runs on
+//! the same API, and the 2-D residual ResNet-32 stage list is
+//! bit-identical to a stage-by-stage im2col-oracle walk at every pool
+//! size. Runs fully offline on synthetic parameters.
 
 use fqconv::data::{self, Dataset as _};
-use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
+use fqconv::infer::graph::{
+    global_avg_pool_into, synthetic_graph, QuantStage, Scratch, SynthArch,
+};
 use fqconv::infer::pipeline::{kws_stages, synthetic_params};
 use fqconv::infer::{FqKwsNet, QuantGraph};
 use fqconv::util::Rng;
@@ -100,8 +104,9 @@ fn dense_weights_run_the_second_architecture_too() {
 #[test]
 fn scratch_plan_covers_the_high_water_marks() {
     // the buffer plan computed at graph build time must cover the real
-    // per-forward high-water marks: a pre-planned Scratch never grows
-    for arch in [SynthArch::kws(), SynthArch::deep_wide()] {
+    // per-forward high-water marks: a pre-planned Scratch never grows —
+    // for the 1-D nets AND the 2-D residual grammar (skip buffer)
+    for arch in [SynthArch::kws(), SynthArch::deep_wide(), SynthArch::resnet("resnet8", 1)] {
         let g = synthetic_graph(&arch, 1.0, 7.0, 5).expect("graph");
         let mut s = Scratch::for_graph(&g);
         let planned = s.capacities();
@@ -115,7 +120,118 @@ fn scratch_plan_covers_the_high_water_marks() {
             s.capacities(),
             planned,
             "{}: forward outgrew the planned scratch (allocation on the hot path)",
-            arch.name
+            arch.name()
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2-D residual graphs (ResNet-32)
+// ---------------------------------------------------------------------------
+
+/// Stage-by-stage reference walk of a 2-D graph with every conv run
+/// through its im2col + GEMM + threshold-search oracle
+/// (`QuantConv2d::forward_im2col`) — the independent implementation the
+/// direct engine must match bit-for-bit.
+fn forward_reference_2d(g: &QuantGraph, x: &[f32]) -> Vec<f32> {
+    let shape = g.in_shape();
+    assert_eq!(shape.len(), 3, "reference walk is for image graphs");
+    let (mut h, mut w) = (shape[1], shape[2]);
+    let mut codes: Vec<i8> = Vec::new();
+    let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
+    let mut pooled = Vec::new();
+    let mut logits = vec![0f32; g.classes()];
+    for stage in g.stages() {
+        match stage {
+            QuantStage::QuantStem2d(st) => st.forward_into(x, &mut codes),
+            QuantStage::FqConv2dStack(stack) => {
+                for l in &stack.layers {
+                    l.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut out);
+                    let (h2, w2) = l.out_hw(h, w);
+                    h = h2;
+                    w = w2;
+                    std::mem::swap(&mut codes, &mut out);
+                }
+            }
+            QuantStage::Residual(r) => {
+                let skip: Vec<i8> = match &r.down {
+                    Some(d) => {
+                        let mut s = Vec::new();
+                        d.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut s);
+                        s
+                    }
+                    None => codes.clone(),
+                };
+                for l in &r.body {
+                    l.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut out);
+                    let (h2, w2) = l.out_hw(h, w);
+                    h = h2;
+                    w = w2;
+                    std::mem::swap(&mut codes, &mut out);
+                }
+                assert_eq!(codes.len(), skip.len(), "join geometry");
+                for (c, &sk) in codes.iter_mut().zip(&skip) {
+                    *c = r.add.apply(*c, sk);
+                }
+            }
+            QuantStage::GlobalAvgPool(gap) => {
+                pooled.clear();
+                pooled.resize(gap.channels, 0.0);
+                global_avg_pool_into(&codes, gap.channels, h * w, &gap.dq, &mut pooled);
+            }
+            QuantStage::DenseHead(hd) => hd.forward_into(&pooled, &mut logits),
+            _ => panic!("unexpected 1-D stage in an image graph"),
+        }
+    }
+    logits
+}
+
+#[test]
+fn resnet32_bit_identical_to_im2col_oracle_at_pool_sizes_1_2_4_8() {
+    // the acceptance pin: the full Table-6 network runs end-to-end
+    // through forward_into, matches the stage-by-stage im2col oracle
+    // bit-for-bit, at every pool size, with zero steady-state
+    // allocations (the planned scratch never grows)
+    let g = synthetic_graph(&SynthArch::resnet32(), 1.0, 7.0, 21).expect("resnet32");
+    assert_eq!(g.in_shape(), &[3, 32, 32]);
+    assert_eq!(g.classes(), 10);
+    let mut rng = Rng::new(6);
+    let mut x = vec![0f32; g.in_numel()];
+    rng.fill_gaussian(&mut x, 0.5);
+    let want = forward_reference_2d(&g, &x);
+    assert!(want.iter().all(|v| v.is_finite()));
+    assert!(want.iter().any(|&v| v != 0.0), "logits all zero — dead forward");
+
+    let mut s = Scratch::for_graph(&g);
+    let planned = s.capacities();
+    for threads in [1usize, 2, 4, 8] {
+        let mut logits = vec![0f32; g.classes()];
+        g.forward_into(&x, &mut s, &mut logits, threads);
+        assert_eq!(logits, want, "pool={threads}: direct engine diverged from the oracle");
+    }
+    assert_eq!(
+        s.capacities(),
+        planned,
+        "resnet32 forward outgrew the planned scratch (allocation on the hot path)"
+    );
+}
+
+#[test]
+fn small_resnet_matches_oracle_for_both_weight_kinds() {
+    // the shallow ResNet-8 exercises every stage type (stem stack,
+    // identity block, strided projection blocks) at a fraction of the
+    // cost — swept for ternary AND dense weights
+    for nw in [1.0f32, 7.0] {
+        let g = synthetic_graph(&SynthArch::resnet("resnet8", 1), nw, 7.0, 17).expect("graph");
+        let mut rng = Rng::new(9);
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 0.5);
+        let want = forward_reference_2d(&g, &x);
+        let mut s = Scratch::for_graph(&g);
+        for threads in [1usize, 3, 8] {
+            let mut logits = vec![0f32; g.classes()];
+            g.forward_into(&x, &mut s, &mut logits, threads);
+            assert_eq!(logits, want, "nw={nw} pool={threads}");
+        }
     }
 }

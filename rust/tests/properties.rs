@@ -1,7 +1,7 @@
 //! Randomized property tests over the crate's core invariants
 //! (custom helper in util::proptest — no proptest crate offline).
 
-use fqconv::quant::{learned_quantize, n_levels, QParams, RequantLut};
+use fqconv::quant::{learned_quantize, n_levels, AddLut, QParams, RequantLut};
 use fqconv::serve::batcher::{
     simulate, simulate_prio, BatchPolicy, Priority, SimOutcome, SimRequest,
 };
@@ -370,6 +370,92 @@ fn batcher_deadline_rejection_invariant() {
                                  passed"
                             ));
                         }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_early_expiry_is_prompt() {
+    // with zero service time a batch starts the instant it closes, so a
+    // deadlined request either rides (its deadline reached the close)
+    // or was doomed *while forming* — and early expiry must answer it
+    // exactly at its deadline wake, max(d + 1, arrival), never holding
+    // it until dispatch
+    check(
+        "batcher-early-expiry",
+        60,
+        |g, size| gen_mixed_requests(g, size, true),
+        |(policy, reqs, _service)| {
+            let out = simulate_prio(*policy, reqs, 0);
+            for (k, o) in out.iter().enumerate() {
+                match *o {
+                    SimOutcome::Expired { at_us } => {
+                        let d = reqs[k]
+                            .deadline_us
+                            .ok_or_else(|| format!("req {k}: expired without a deadline"))?;
+                        let want = (d + 1).max(reqs[k].arrival_us);
+                        if at_us != want {
+                            return Err(format!(
+                                "req {k}: expired at {at_us}, early expiry demands {want} \
+                                 (deadline {d}, arrival {})",
+                                reqs[k].arrival_us
+                            ));
+                        }
+                    }
+                    SimOutcome::Dispatched { start_us, .. } => {
+                        if let Some(d) = reqs[k].deadline_us {
+                            if start_us > d {
+                                return Err(format!("req {k}: rode past its deadline"));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn residual_add_lut_matches_float_reference_on_random_grids() {
+    // the integer residual join (AddLut over the body/shortcut/output
+    // grids) must reproduce the float path — dequantize both addends,
+    // add, re-quantize onto the consumer grid — exactly, for every
+    // representable code pair, across random scale/level combinations
+    check(
+        "residual-addlut-scale-matching",
+        60,
+        |g, _| {
+            let ea = g.f32_in(0.2, 3.0);
+            let eb = g.f32_in(0.2, 3.0);
+            let eo = g.f32_in(0.2, 3.0);
+            let na = n_levels(*g.choice(&[2u32, 3, 4, 5])) as f32;
+            let nb = n_levels(*g.choice(&[2u32, 3, 4, 5])) as f32;
+            let no = n_levels(*g.choice(&[3u32, 4, 5])) as f32;
+            let ba = *g.choice(&[-1.0f32, 0.0]);
+            let bb = *g.choice(&[-1.0f32, 0.0]);
+            (ea, eb, eo, na, nb, no, ba, bb)
+        },
+        |&(ea, eb, eo, na, nb, no, ba, bb)| {
+            let a = QParams::new(ea, na, ba);
+            let b = QParams::new(eb, nb, bb);
+            let out = QParams::new(eo, no, 0.0);
+            let lut = AddLut::build(a, b, out);
+            let (a_min, a_max) = a.code_range();
+            let (b_min, b_max) = b.code_range();
+            if lut.len() != ((a_max - a_min + 1) * (b_max - b_min + 1)) as usize {
+                return Err(format!("table covers {} pairs", lut.len()));
+            }
+            for ca in a_min..=a_max {
+                for cb in b_min..=b_max {
+                    let got = lut.apply(ca as i8, cb as i8) as i32;
+                    let want = AddLut::reference_code(ca, cb, &a, &b, &out);
+                    if got != want {
+                        return Err(format!("pair ({ca},{cb}): lut={got} float={want}"));
                     }
                 }
             }

@@ -7,10 +7,13 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
+use fqconv::infer::FqKwsNet;
 use fqconv::serve::{
-    ready, ready_indexed, Backend, BatchPolicy, ModelId, ModelRegistry, ModelSpec, Priority,
-    ServeError, Server,
+    ready, ready_indexed, Backend, BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec,
+    NativeBackend, Priority, ServeError, Server,
 };
+use fqconv::util::Rng;
 
 /// Deterministic toy backend: class = argmax-like hash of first feature.
 struct ToyBackend {
@@ -453,6 +456,99 @@ fn registry_serves_two_models_concurrently() {
     }
     // per-worker served must cover both models' traffic
     assert_eq!(stats.workers.iter().map(|w| w.served).sum::<u64>(), 2 * n);
+    registry.shutdown();
+}
+
+#[test]
+fn registry_serves_resnet32_alongside_a_kws_model() {
+    // the acceptance pin for the 2-D subsystem: the synthetic ResNet-32
+    // graph serves from the registry next to a KWS model on the same
+    // shared worker pool, and every served logit row is bit-identical
+    // to the engine's direct forward of the same sample
+    let kws = Arc::new(FqKwsNet::synthetic(1.0, 7.0, 7).expect("kws net"));
+    let resnet =
+        Arc::new(synthetic_graph(&SynthArch::resnet32(), 1.0, 7.0, 7).expect("resnet32"));
+    let registry = ModelRegistry::start(2);
+    registry
+        .register(
+            "kws",
+            ModelSpec {
+                factory: NativeBackend::factory(&kws, &[39, 80]),
+                sample_numel: 39 * 80,
+                policy: BatchPolicy::new(4, 300),
+            },
+        )
+        .expect("register kws");
+    registry
+        .register(
+            "resnet32",
+            ModelSpec {
+                factory: GraphBackend::factory(&resnet),
+                sample_numel: resnet.in_numel(),
+                policy: BatchPolicy::new(2, 300),
+            },
+        )
+        .expect("register resnet32");
+
+    // deterministic inputs + expected logits from the direct engine
+    let mut rng = Rng::new(15);
+    let (n_res, n_kws) = (4usize, 12usize);
+    let res_x: Vec<Vec<f32>> = (0..n_res)
+        .map(|_| {
+            let mut v = vec![0f32; resnet.in_numel()];
+            rng.fill_gaussian(&mut v, 0.5);
+            v
+        })
+        .collect();
+    let kws_x: Vec<Vec<f32>> = (0..n_kws)
+        .map(|_| {
+            let mut v = vec![0f32; 39 * 80];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let mut rs = Scratch::for_graph(&resnet);
+    let res_want: Vec<Vec<f32>> = res_x.iter().map(|x| resnet.forward(x, &mut rs)).collect();
+    let mut ks = Scratch::for_graph(kws.graph());
+    let kws_want: Vec<Vec<f32>> = kws_x.iter().map(|x| kws.forward(x, &mut ks)).collect();
+
+    let (rid, kid) = (ModelId::new("resnet32"), ModelId::new("kws"));
+    std::thread::scope(|s| {
+        let (reg_a, reg_b) = (&registry, &registry);
+        let (rid, kid) = (&rid, &kid);
+        let (res_x, res_want) = (&res_x, &res_want);
+        let (kws_x, kws_want) = (&kws_x, &kws_want);
+        s.spawn(move || {
+            let rxs: Vec<_> = res_x
+                .iter()
+                .map(|x| reg_a.submit(rid, x.clone()).expect("registered"))
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().unwrap().unwrap();
+                assert_eq!(resp.model.as_str(), "resnet32");
+                assert_eq!(resp.logits, res_want[i], "resnet sample {i} diverged");
+            }
+        });
+        s.spawn(move || {
+            let rxs: Vec<_> = kws_x
+                .iter()
+                .map(|x| reg_b.submit(kid, x.clone()).expect("registered"))
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().unwrap().unwrap();
+                assert_eq!(resp.model.as_str(), "kws");
+                assert_eq!(resp.logits, kws_want[i], "kws sample {i} diverged");
+            }
+        });
+    });
+
+    let stats = registry.stats();
+    assert_eq!(stats.served, (n_res + n_kws) as u64);
+    let rm = stats.models.iter().find(|m| m.id == rid).unwrap();
+    assert_eq!(rm.served, n_res as u64);
+    assert_eq!(rm.dropped, 0);
+    let km = stats.models.iter().find(|m| m.id == kid).unwrap();
+    assert_eq!(km.served, n_kws as u64);
     registry.shutdown();
 }
 
