@@ -266,22 +266,23 @@ fn conv2d_section(threads: usize, iters: usize) -> Json {
     Json::Arr(records)
 }
 
-/// The Table-6 network end to end on the graph engine: ternary
-/// ResNet-32, single-sample sequential vs intra-layer parallel.
-fn resnet32_section(threads: usize, iters: usize) -> Json {
-    println!("\n--- ResNet-32 (2-D residual QuantGraph) ---");
-    let g = synthetic_graph(&SynthArch::resnet32(), 1.0, 7.0, 13).expect("resnet32 graph");
+/// One of the paper's 2-D networks end to end on the graph engine:
+/// single-sample sequential vs intra-layer parallel (ternary weights).
+fn img_net_section(arch: &SynthArch, title: &str, threads: usize, iters: usize) -> Json {
+    let tag = arch.name();
+    println!("\n--- {title} ---");
+    let g = synthetic_graph(arch, 1.0, 7.0, 13).unwrap_or_else(|e| panic!("{tag} graph: {e}"));
     let mut rng = Rng::new(3);
     let mut x = vec![0f32; g.in_numel()];
     rng.fill_gaussian(&mut x, 0.5);
     let macs = g.macs_per_sample() as f64;
     let mut scratch = fqconv::infer::graph::Scratch::for_graph(&g);
-    let seq = bench("resnet32 forward (1 sample, 1 thread)", 2, iters, || {
+    let seq = bench(&format!("{tag} forward (1 sample, 1 thread)"), 2, iters, || {
         std::hint::black_box(g.forward(&x, &mut scratch));
     });
     report(&seq, macs, "GMAC/s");
     let mut logits = vec![0f32; g.classes()];
-    let par = bench(&format!("resnet32 forward (1 sample, x{threads})"), 2, iters, || {
+    let par = bench(&format!("{tag} forward (1 sample, x{threads})"), 2, iters, || {
         g.forward_into(&x, &mut scratch, &mut logits, threads);
         std::hint::black_box(&logits);
     });
@@ -292,7 +293,7 @@ fn resnet32_section(threads: usize, iters: usize) -> Json {
         macs / 1e6
     );
     obj(vec![
-        ("arch", s("resnet32")),
+        ("arch", s(tag)),
         ("macs_per_sample", num(macs)),
         ("samples_per_sec_1t", num(1.0 / seq.median_s)),
         ("samples_per_sec_mt", num(1.0 / par.median_s)),
@@ -319,7 +320,19 @@ fn main() {
         }
     }
     let graph_json = graph_arch_section(threads, iters);
-    let resnet_json = resnet32_section(threads, if smoke() { 2 } else { 10 });
+    let img_iters = if smoke() { 2 } else { 10 };
+    let resnet_json = img_net_section(
+        &SynthArch::resnet32(),
+        "ResNet-32 (2-D residual QuantGraph)",
+        threads,
+        img_iters,
+    );
+    let darknet_json = img_net_section(
+        &SynthArch::darknet19(),
+        "DarkNet-19 (pooled 2-D QuantGraph)",
+        threads,
+        img_iters,
+    );
 
     let out = obj(vec![
         ("bench", s("perf_infer")),
@@ -331,6 +344,7 @@ fn main() {
         ("small_batch_pool_vs_scoped", small_batch_json),
         ("graph_arch", graph_json),
         ("resnet32", resnet_json),
+        ("darknet19", darknet_json),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_infer.json");
     match std::fs::write(path, out.to_string() + "\n") {

@@ -5,8 +5,10 @@
 //! Falls back to a synthetic network offline.
 //!
 //! Emits a machine-readable `BENCH_serve.json` at the repository root
-//! (req/s, p50/p99 latency, mean batch size per configuration, and
-//! per-priority p50/p99 from the mixed-priority run) so the
+//! (req/s, p50/p99 latency, mean batch size per configuration,
+//! per-priority p50/p99 from the mixed-priority run, and the `batch_2d`
+//! section — GraphBackend sample-parallel batched image serving vs the
+//! sequential per-sample walk, for ResNet-32 and DarkNet-19) so the
 //! serving-perf trajectory is tracked across PRs.
 //! `FQCONV_BENCH_SMOKE=1` shrinks the load to one short iteration.
 #[path = "common.rs"]
@@ -14,11 +16,13 @@ mod common;
 
 use std::sync::Arc;
 
-use fqconv::bench::banner;
+use fqconv::bench::{banner, bench};
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset as _};
+use fqconv::exec;
+use fqconv::infer::graph::{synthetic_graph, SynthArch};
 use fqconv::infer::FqKwsNet;
-use fqconv::serve::{BatchPolicy, NativeBackend, Priority, Server};
+use fqconv::serve::{Backend as _, BatchPolicy, GraphBackend, NativeBackend, Priority, Server};
 use fqconv::util::json::{num, obj, s, Json};
 use fqconv::util::{Rng, Timer};
 
@@ -142,6 +146,51 @@ fn main() {
     );
     server.shutdown();
 
+    // batched 2-D serving: the GraphBackend batch path (sample-parallel
+    // forward_batch_into across the intra-layer budget) against the
+    // sequential per-sample walk it replaced — the acceptance number is
+    // batched samples/sec >= the sequential-walk baseline
+    println!("\n--- batched 2-D serving (GraphBackend, sample-parallel vs sequential walk) ---");
+    let threads = exec::default_threads();
+    let mut batch2d_json = Vec::new();
+    for arch in [SynthArch::resnet32(), SynthArch::darknet19()] {
+        let tag = arch.name();
+        let graph = Arc::new(synthetic_graph(&arch, 1.0, 7.0, 7).expect("2-D graph"));
+        let b = if smoke() { 4usize } else { 16 };
+        let iters = if smoke() { 2 } else { 5 };
+        let mut rng = Rng::new(5);
+        let mut flat = vec![0f32; b * graph.in_numel()];
+        rng.fill_gaussian(&mut flat, 0.5);
+        let mut out_seq = vec![0f32; b * graph.classes()];
+        let mut out_par = vec![0f32; b * graph.classes()];
+        // intra budget 1 == the old sequential per-sample walk
+        let mut seq = GraphBackend::with_intra_threads(Arc::clone(&graph), 1);
+        let mut par = GraphBackend::with_intra_threads(Arc::clone(&graph), threads);
+        let st_seq = bench(&format!("{tag} batch({b}) sequential walk"), 1, iters, || {
+            seq.infer_into(&flat, b, &mut out_seq).expect("sequential infer");
+            std::hint::black_box(&out_seq);
+        });
+        let st_par = bench(&format!("{tag} batch({b}) sample-parallel x{threads}"), 1, iters, || {
+            par.infer_into(&flat, b, &mut out_par).expect("batched infer");
+            std::hint::black_box(&out_par);
+        });
+        assert_eq!(out_par, out_seq, "{tag}: batched path diverged from the sequential walk");
+        let speedup = st_seq.median_s / st_par.median_s.max(1e-12);
+        println!(
+            "{tag} batch {b}: {:.0} -> {:.0} samples/s  ({speedup:.2}x, {threads} threads)",
+            b as f64 / st_seq.median_s,
+            b as f64 / st_par.median_s
+        );
+        batch2d_json.push(obj(vec![
+            ("model", s(tag)),
+            ("batch", num(b as f64)),
+            ("threads", num(threads as f64)),
+            ("seq_samples_per_sec", num(b as f64 / st_seq.median_s)),
+            ("batched_samples_per_sec", num(b as f64 / st_par.median_s)),
+            ("speedup_vs_sequential_walk", num(speedup)),
+        ]));
+    }
+
     let prio_json = |p: &fqconv::serve::PriorityStats| {
         obj(vec![
             ("served", num(p.served as f64)),
@@ -170,6 +219,7 @@ fn main() {
                 ("expired", num(mixed.expired as f64)),
             ]),
         ),
+        ("batch_2d", Json::Arr(batch2d_json)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
     match std::fs::write(path, out.to_string() + "\n") {

@@ -1,0 +1,300 @@
+//! DarkNet-19 (Table 3) expressed as a [`QuantGraph`] stage list.
+//!
+//! The paper's ImageNet headline network is a ternary-weight DarkNet-19
+//! (losing only ~2.4/1.3 top-1/top-5 points): conv groups following the
+//! classic 3x3-widen / 1x1-squeeze block pattern, separated by 2x2
+//! stride-2 max pools, then global average pooling and a classifier
+//! (the original's final 1x1 conv over pooled features — a dense head
+//! on this engine). This module assembles that network from a flat
+//! [`ParamSet`] onto the pooled 2-D stage grammar of [`super::graph`] —
+//! the exact analogue of [`super::resnet`] for the residual family:
+//!
+//! * [`darknet_stages`] / [`darknet19_stages`] — *the only place the
+//!   DarkNet architecture is spelled out*; [`QuantGraph::new_2d`]
+//!   validates and seals it.
+//! * [`darknet_params`] / [`darknet19_params`] — deterministic
+//!   synthetic parameters (no artifacts or XLA), powering offline
+//!   tests, the serving tests and `benches/perf_infer.rs`.
+//! * [`synthetic_darknet_graph`] — both of the above behind
+//!   [`super::graph::synthetic_graph`]`(&SynthArch::darknet19(), ..)`.
+//!
+//! Parameter naming follows the 4-D `{name}.w` convention the
+//! architecture printers consume (`crate::models::render_darknet`
+//! renders any such conv spec): `g{g}.c{c}.w` with per-conv log-scales
+//! `*.sa` / `*.sw` / `*.so`, plus `head.w` / `head.b`.
+//!
+//! Grid chaining is the same fused-requant recipe as
+//! [`super::resnet`]: every conv re-bins onto its consumer's input grid
+//! through its LUT. A [`MaxPool2d`](super::graph::MaxPool2d) between
+//! producer and consumer is *transparent* to the chain — max over
+//! integer codes is order-exact on the shared grid, so the pooled codes
+//! still live on the producer's output grid and the consumer's `sa`
+//! stays the fusion target. The final conv is unfused and feeds GAP on
+//! its own mid grid. No float scale materializes anywhere between the
+//! stem quantizer and the GAP dequantize.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::ParamSet;
+use crate::quant::QParams;
+use crate::runtime::{GraphSpec, TensorSpec};
+use crate::util::Rng;
+
+use super::graph::{
+    DarkArch, DenseHead, FqConv2dStack, GlobalAvgPool, MaxPool2d, QuantGraph, QuantStage,
+    QuantStem2d,
+};
+use super::resnet::{build_conv, es_of, ConvSpec};
+
+/// One conv's resolved geometry inside the group structure.
+struct ConvGeom {
+    name: String,
+    c_out: usize,
+    c_in: usize,
+    ksize: usize,
+}
+
+/// Flatten the group structure into per-group conv geometry: group `g`
+/// alternates `3x3 ch` (even positions) and `1x1 ch/2` squeeze convs
+/// (odd positions) — the DarkNet block pattern.
+fn groups_of(arch: &DarkArch) -> Result<Vec<(Vec<ConvGeom>, bool)>> {
+    ensure!(!arch.groups.is_empty(), "darknet needs at least one conv group");
+    let mut c_in = arch.in_ch;
+    let mut out = Vec::with_capacity(arch.groups.len());
+    for (gi, &(ch, n, pool)) in arch.groups.iter().enumerate() {
+        ensure!(
+            n >= 1 && n % 2 == 1,
+            "group {gi}: conv count {n} must be odd (3x3/1x1 alternation ends on 3x3)"
+        );
+        ensure!(n == 1 || ch % 2 == 0, "group {gi}: squeeze convs need even channels ({ch})");
+        let mut convs = Vec::with_capacity(n);
+        for ci in 0..n {
+            let squeeze = ci % 2 == 1;
+            let (c_out, ksize) = if squeeze { (ch / 2, 1) } else { (ch, 3) };
+            convs.push(ConvGeom { name: format!("g{gi}.c{ci}"), c_out, c_in, ksize });
+            c_in = c_out;
+        }
+        out.push((convs, pool));
+    }
+    Ok(out)
+}
+
+/// Deterministic synthetic DarkNet parameters for `arch` — Gaussian
+/// weights, zero biases, zero log-scales (=> every `e^s = 1`), exactly
+/// the parameterization of [`super::resnet::resnet_params`].
+pub fn darknet_params(arch: &DarkArch, seed: u64) -> Result<ParamSet> {
+    let groups = groups_of(arch)?;
+    let mut specs: Vec<TensorSpec> = Vec::new();
+    let mut spec = |name: &str, shape: Vec<usize>| {
+        specs.push(TensorSpec { name: name.to_string(), shape });
+    };
+    let mut last_ch = arch.in_ch;
+    for (convs, _) in &groups {
+        for g in convs {
+            spec(&format!("{}.w", g.name), vec![g.c_out, g.c_in, g.ksize, g.ksize]);
+            for role in ["sa", "sw", "so"] {
+                spec(&format!("{}.{role}", g.name), vec![]);
+            }
+            last_ch = g.c_out;
+        }
+    }
+    spec("head.w", vec![last_ch, arch.classes]);
+    spec("head.b", vec![arch.classes]);
+    let graph = GraphSpec { trainable: specs, state: Vec::new(), opt: Vec::new(), param_count: 0 };
+    let mut params = ParamSet::zeros(&graph);
+    let mut rng = Rng::new(seed ^ 0xDA_2C19_C0DE);
+    for (spec, v) in graph.trainable.iter().zip(params.values.iter_mut()) {
+        if spec.name.ends_with(".w") {
+            rng.fill_gaussian(v.data_mut(), 0.5);
+        }
+        // head.b and the log-scales stay 0 (=> es = 1)
+    }
+    Ok(params)
+}
+
+/// [`darknet_params`] at the Table-3 DarkNet-19 shape.
+pub fn darknet19_params(seed: u64) -> Result<ParamSet> {
+    darknet_params(&DarkArch::darknet19(), seed)
+}
+
+/// Assemble the DarkNet stage list (quantized stem → conv groups with
+/// max pools between them → GAP → dense head) from trained FQ
+/// parameters. `nw`/`na` are the weight/activation level counts (nw = 1
+/// takes the ternary add-only path). This is the *only* place the
+/// architecture is spelled out; [`QuantGraph::new_2d`] validates and
+/// seals it.
+pub fn darknet_stages(
+    arch: &DarkArch,
+    params: &ParamSet,
+    nw: f32,
+    na: f32,
+) -> Result<Vec<QuantStage>> {
+    let groups = groups_of(arch)?;
+    // linear conv order across groups: pools are grid-transparent, so
+    // conv i always fuses into conv i+1's input grid
+    let flat: Vec<&ConvGeom> = groups.iter().flat_map(|(g, _)| g.iter()).collect();
+    // every post-ReLU activation grid is unsigned (b = 0)
+    let relu = |es: f32| QParams::new(es, na, 0.0);
+
+    // stem: learned input quantizer on signed pixels — the first conv's
+    // own sa grid (DarkNet has no full-precision embedding)
+    let stem_qa = QParams::new(es_of(params, &format!("{}.sa", flat[0].name))?, na, -1.0);
+    let mut stages =
+        vec![QuantStage::QuantStem2d(QuantStem2d { c_in: arch.in_ch, out_q: stem_qa })];
+
+    let mut idx = 0usize;
+    let mut gap_grid = stem_qa;
+    let mut last_ch = arch.in_ch;
+    for (convs, pool) in &groups {
+        let mut layers = Vec::with_capacity(convs.len());
+        for g in convs {
+            let qa = if idx == 0 {
+                stem_qa
+            } else {
+                relu(es_of(params, &format!("{}.sa", g.name))?)
+            };
+            // fused into the next conv's input grid; the last conv
+            // overall is unfused and feeds GAP on its own mid grid
+            let next = if idx + 1 < flat.len() {
+                Some(relu(es_of(params, &format!("{}.sa", flat[idx + 1].name))?))
+            } else {
+                None
+            };
+            let l = build_conv(
+                params,
+                &ConvSpec {
+                    name: &g.name,
+                    c_out: g.c_out,
+                    c_in: g.c_in,
+                    ksize: g.ksize,
+                    stride: 1,
+                    pad: g.ksize / 2,
+                    qa,
+                    next,
+                },
+                nw,
+                na,
+            )?;
+            gap_grid = l.out_grid();
+            last_ch = g.c_out;
+            layers.push(l);
+            idx += 1;
+        }
+        stages.push(QuantStage::FqConv2dStack(FqConv2dStack { layers }));
+        if *pool {
+            stages.push(QuantStage::MaxPool2d(MaxPool2d { ksize: 2, stride: 2 }));
+        }
+    }
+
+    stages.push(QuantStage::GlobalAvgPool(GlobalAvgPool { channels: last_ch, dq: gap_grid }));
+    let head_w = params.get("head.w").context("missing param head.w")?;
+    let head_b = params.get("head.b").context("missing param head.b")?.data().to_vec();
+    ensure!(head_w.shape() == [last_ch, arch.classes], "head.w shape");
+    stages.push(QuantStage::DenseHead(DenseHead {
+        w: head_w.data().to_vec(),
+        b: head_b,
+        d_in: last_ch,
+        d_out: arch.classes,
+    }));
+    Ok(stages)
+}
+
+/// [`darknet_stages`] at the Table-3 DarkNet-19 shape: the paper's
+/// ImageNet network from a trained FQ [`ParamSet`].
+pub fn darknet19_stages(params: &ParamSet, nw: f32, na: f32) -> Result<Vec<QuantStage>> {
+    darknet_stages(&DarkArch::darknet19(), params, nw, na)
+}
+
+/// Synthetic DarkNet as a sealed graph: [`darknet_params`] +
+/// [`darknet_stages`] + [`QuantGraph::new_2d`]. This is what
+/// [`super::graph::synthetic_graph`] runs for
+/// [`super::graph::SynthArch::Dark`] architectures.
+pub fn synthetic_darknet_graph(arch: &DarkArch, nw: f32, na: f32, seed: u64) -> Result<QuantGraph> {
+    let params = darknet_params(arch, seed)?;
+    QuantGraph::new_2d(darknet_stages(arch, &params, nw, na)?, arch.h, arch.w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::graph::{synthetic_graph, Scratch, SynthArch};
+    use crate::util::Rng;
+
+    /// A DarkNet-patterned mini net cheap enough for unit tests: two
+    /// groups, one pool, 12x12 inputs.
+    fn dark_tiny() -> DarkArch {
+        DarkArch {
+            name: "dark-tiny",
+            in_ch: 2,
+            h: 12,
+            w: 12,
+            classes: 3,
+            groups: vec![(4, 1, true), (8, 3, false)],
+        }
+    }
+
+    #[test]
+    fn darknet19_has_the_table3_structure() {
+        let g = synthetic_darknet_graph(&DarkArch::darknet19(), 1.0, 7.0, 3).expect("darknet19");
+        assert_eq!(g.in_shape(), &[3, 64, 64]);
+        assert_eq!(g.classes(), 100);
+        // 64 -> 2 through the five 2x2 stride-2 pools
+        assert_eq!(g.out_frames(), 2 * 2);
+        // 1 + 1 + 3 + 3 + 5 + 5 quantized convs, all ternary
+        assert_eq!(g.conv2d_layers().count(), 18);
+        assert!(g.conv2d_layers().all(|l| l.is_ternary()));
+        // the 3x3/1x1 alternation: 12 wide convs, 6 squeezes
+        assert_eq!(g.conv2d_layers().filter(|l| l.ksize == 1).count(), 6);
+        assert!(g.macs_per_sample() > 150_000_000, "macs {}", g.macs_per_sample());
+        // five pool stages on the stage list
+        let pools = g.stages().iter().filter(|s| matches!(s, QuantStage::MaxPool2d(_))).count();
+        assert_eq!(pools, 5);
+    }
+
+    #[test]
+    fn tiny_darknet_forward_is_finite_and_deterministic() {
+        let g = synthetic_graph(&SynthArch::Dark(dark_tiny()), 1.0, 7.0, 11).expect("dark-tiny");
+        // 12 -> 6 through the single pool
+        assert_eq!(g.out_frames(), 6 * 6);
+        let mut rng = Rng::new(2);
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 0.5);
+        let mut s = Scratch::for_graph(&g);
+        let a = g.forward(&x, &mut s);
+        let b = g.forward(&x, &mut s);
+        assert_eq!(a, b, "scratch reuse must not change outputs");
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert!(a.iter().any(|&v| v != 0.0), "logits all zero — dead forward");
+    }
+
+    #[test]
+    fn dense_weights_run_the_darknet_grammar_too() {
+        let g = synthetic_graph(&SynthArch::Dark(dark_tiny()), 7.0, 7.0, 5).expect("dense tiny");
+        assert!(g.conv2d_layers().all(|l| !l.is_ternary()));
+        let mut rng = Rng::new(4);
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 0.5);
+        let mut s = Scratch::for_graph(&g);
+        let logits = g.forward(&x, &mut s);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn missing_parameter_fails_loudly() {
+        let arch = dark_tiny();
+        let mut params = darknet_params(&arch, 7).unwrap();
+        let idx = params.specs.iter().position(|s| s.name == "g1.c1.w").unwrap();
+        params.specs[idx].name = "g1.c1.w.gone".into();
+        let err = darknet_stages(&arch, &params, 1.0, 7.0).unwrap_err().to_string();
+        assert!(err.contains("g1.c1.w"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_even_conv_counts() {
+        let mut arch = dark_tiny();
+        arch.groups[1].1 = 2; // alternation must end on a 3x3
+        let err = darknet_params(&arch, 3).unwrap_err().to_string();
+        assert!(err.contains("odd"), "unexpected error: {err}");
+    }
+}

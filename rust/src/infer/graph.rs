@@ -11,24 +11,34 @@
 //!   composed of. Sequence (1-D) nets use [`FpEmbed`] (f32 features →
 //!   input codes), [`FqConvStack`] (integer codes → integer codes,
 //!   ping-pong); image (2-D, NCHW) nets use [`QuantStem2d`] (f32 pixels
-//!   → input codes on the first conv's grid), [`FqConv2dStack`] and
+//!   → input codes on the first conv's grid), [`FqConv2dStack`],
 //!   [`Residual`] (integer skip-add through an exact
 //!   [`crate::quant::AddLut`], optional strided 1x1 projection on the
-//!   shortcut). Both families share [`GlobalAvgPool`] (codes → f32
-//!   features, i64 higher-precision sum over time steps *or* spatial
-//!   positions) and [`DenseHead`] (f32 features → logits).
+//!   shortcut) and [`MaxPool2d`] (spatial max over i8 codes — the
+//!   quantizer is monotone, so the max over codes *is* the requantized
+//!   max over dequantized values: no LUT needed, the grid passes
+//!   through unchanged). Both families share [`GlobalAvgPool`] (codes →
+//!   f32 features, i64 higher-precision sum over time steps *or*
+//!   spatial positions) and [`DenseHead`] (f32 features → logits).
 //! * [`QuantGraph`] — owns stage sequencing, shape/grid validation,
 //!   ping-pong code-buffer planning and scratch sizing, and exposes an
-//!   allocation-free [`QuantGraph::forward_into`]. Every architecture
-//!   the paper evaluates (the KWS TCN, ResNet-32, DarkNet-19) is a
-//!   different stage list over the same bit-exact kernels.
+//!   allocation-free [`QuantGraph::forward_into`] plus the
+//!   sample-parallel [`QuantGraph::forward_batch_into`] (per-worker
+//!   [`Scratch`] over the persistent [`crate::exec::Pool`]). Every
+//!   architecture the paper evaluates (the KWS TCN, ResNet-32,
+//!   DarkNet-19) is a different stage list over the same bit-exact
+//!   kernels.
 //!
 //! Accepted stage grammars (validated at build time, by constructor):
 //!
 //! ```text
 //! QuantGraph::new    (1-D):  FpEmbed     FqConvStack+                GlobalAvgPool DenseHead
-//! QuantGraph::new_2d (2-D):  QuantStem2d (FqConv2dStack | Residual)+ GlobalAvgPool DenseHead
+//! QuantGraph::new_2d (2-D):  QuantStem2d (FqConv2dStack | Residual | MaxPool2d)+
+//!                                                                    GlobalAvgPool DenseHead
 //! ```
+//!
+//! (the 2-D body needs at least one conv-bearing stage — pooling alone
+//! is rejected at build time)
 //!
 //! A 2-D [`Residual`] block is the integer form of the classic ResNet
 //! basic block (see [`super::resnet`] for ResNet-32 assembled on this
@@ -46,12 +56,22 @@
 //!                 (one exact 2-D table load per element)
 //! ```
 //!
+//! The Table-3 DarkNet-19 (see [`super::darknet`]) is the pooled
+//! instance of that grammar — conv groups (3x3 widen / 1x1 squeeze)
+//! separated by 2x2 stride-2 max pools:
+//!
+//! ```text
+//!   QuantStem2d → [FqConv2dStack → MaxPool2d]* → FqConv2dStack
+//!               → GlobalAvgPool → DenseHead
+//! ```
+//!
 //! [`crate::infer::FqKwsNet`] is now a thin constructor facade over a
 //! `QuantGraph`; [`synthetic_graph`] instantiates arbitrary
 //! [`SynthArch`] descriptions — the KWS TCN, the deeper/wider
-//! [`SynthArch::deep_wide`], and the 2-D residual
-//! [`SynthArch::resnet32`] — on the same API, which is how
-//! rust/tests/graph.rs proves the graph generalizes beyond KWS.
+//! [`SynthArch::deep_wide`], the 2-D residual [`SynthArch::resnet32`]
+//! and the pooled [`SynthArch::darknet19`] — on the same API, which is
+//! how rust/tests/graph.rs and rust/tests/graph_fuzz.rs prove the graph
+//! generalizes beyond KWS.
 //!
 //! **Determinism contract:** stage bodies are the exact loops the
 //! monolithic pipeline ran — same float accumulation order, same integer
@@ -60,8 +80,11 @@
 //! rust/tests/parallel.rs); the 2-D stages inherit the contract from
 //! the contiguous-disjoint-row partitioning of [`crate::exec`].
 
+use std::sync::Mutex;
+
 use anyhow::{bail, ensure, Result};
 
+use crate::exec;
 use crate::quant::{learned_quantize, AddLut, QParams};
 use crate::util::Rng;
 
@@ -119,6 +142,11 @@ impl Scratch {
         )
     }
 
+    /// Hand a scratch back for reuse by a later batch.
+    fn into_pool(self, pool: &ScratchPool) {
+        pool.spares.lock().unwrap().push(self);
+    }
+
     /// One 2-D conv layer step of the graph walk: ping-pong buffer
     /// select, conv + fused requant, spatial bookkeeping. Shared by the
     /// plain-stack and residual-body loops so their bookkeeping cannot
@@ -138,6 +166,34 @@ impl Scratch {
         *h_cur = h2;
         *w_cur = w2;
         *cur_in_a = !*cur_in_a;
+    }
+}
+
+/// Recycled per-worker scratches for the sample-parallel batch path:
+/// [`QuantGraph::forward_batch_pooled`] pops one scratch per worker
+/// part and hands it back after the part, so a long-lived caller (a
+/// serving backend) allocates at most `threads` scratches on its first
+/// batch and nothing afterwards — the steady-state serve loop stays
+/// allocation-free, same discipline as the single-sample path.
+#[derive(Default)]
+pub struct ScratchPool {
+    spares: Mutex<Vec<Scratch>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        ScratchPool::default()
+    }
+
+    /// Pop a recycled scratch, or pre-plan a fresh one for `g`.
+    fn acquire(&self, g: &QuantGraph) -> Scratch {
+        self.spares.lock().unwrap().pop().unwrap_or_else(|| Scratch::for_graph(g))
+    }
+
+    /// Scratches currently parked in the pool (tests pin that a warm
+    /// pool stops growing).
+    pub fn spares(&self) -> usize {
+        self.spares.lock().unwrap().len()
     }
 }
 
@@ -288,6 +344,71 @@ pub struct Residual {
     pub add: AddLut,
 }
 
+/// Quantized 2-D max pooling: NCHW i8 codes in, i8 codes out, channels
+/// and quantizer grid unchanged.
+///
+/// Because every quantizer grid is monotone (`dequantize` is strictly
+/// increasing in the code — `es / n > 0`), the maximum over integer
+/// codes is *exactly* the requantized maximum over the dequantized
+/// values: `Q(max_i deq(c_i)) == max_i c_i`. The stage therefore needs
+/// no LUT and introduces no rounding of its own — it is order-exact on
+/// the integer path (pinned by the in-module order-preservation test).
+///
+/// No padding: DarkNet-style nets pool with `ksize == stride == 2` on
+/// even extents; the validator rejects windows wider than the incoming
+/// extent (`stride > ksize` — subsampling gaps — is allowed).
+pub struct MaxPool2d {
+    /// square pooling window edge
+    pub ksize: usize,
+    pub stride: usize,
+}
+
+impl MaxPool2d {
+    /// Output spatial extent for an input of `(h_in, w_in)`. Callers
+    /// must hold `ksize >= 1`, `stride >= 1` and `h_in/w_in >= ksize`
+    /// ([`QuantGraph::new_2d`] validates this before any forward).
+    pub fn out_hw(&self, h_in: usize, w_in: usize) -> (usize, usize) {
+        debug_assert!(self.ksize >= 1 && self.stride >= 1, "degenerate pool geometry");
+        debug_assert!(h_in >= self.ksize && w_in >= self.ksize, "window wider than the input");
+        ((h_in - self.ksize) / self.stride + 1, (w_in - self.ksize) / self.stride + 1)
+    }
+
+    /// Pool one sample: codes `(channels, h_in, w_in)` → codes
+    /// `(channels, h_out, w_out)`. `out` is reused across calls so the
+    /// hot path stays allocation-free.
+    pub fn forward_into(
+        &self,
+        x: &[i8],
+        channels: usize,
+        h_in: usize,
+        w_in: usize,
+        out: &mut Vec<i8>,
+    ) {
+        debug_assert_eq!(x.len(), channels * h_in * w_in, "input geometry");
+        let (h_out, w_out) = self.out_hw(h_in, w_in);
+        out.clear();
+        out.resize(channels * h_out * w_out, 0);
+        for c in 0..channels {
+            let plane = &x[c * h_in * w_in..(c + 1) * h_in * w_in];
+            let oplane = &mut out[c * h_out * w_out..(c + 1) * h_out * w_out];
+            for oh in 0..h_out {
+                let orow = &mut oplane[oh * w_out..(oh + 1) * w_out];
+                for (ow, o) in orow.iter_mut().enumerate() {
+                    let (h0, w0) = (oh * self.stride, ow * self.stride);
+                    let mut m = i8::MIN;
+                    for ih in h0..h0 + self.ksize {
+                        let row = &plane[ih * w_in + w0..ih * w_in + w0 + self.ksize];
+                        for &v in row {
+                            m = m.max(v);
+                        }
+                    }
+                    *o = m;
+                }
+            }
+        }
+    }
+}
+
 /// One typed stage of a fully-quantized inference graph.
 pub enum QuantStage {
     FpEmbed(FpEmbed),
@@ -295,6 +416,7 @@ pub enum QuantStage {
     QuantStem2d(QuantStem2d),
     FqConv2dStack(FqConv2dStack),
     Residual(Residual),
+    MaxPool2d(MaxPool2d),
     GlobalAvgPool(GlobalAvgPool),
     DenseHead(DenseHead),
 }
@@ -307,6 +429,7 @@ impl QuantStage {
             QuantStage::QuantStem2d(_) => "QuantStem2d",
             QuantStage::FqConv2dStack(_) => "FqConv2dStack",
             QuantStage::Residual(_) => "Residual",
+            QuantStage::MaxPool2d(_) => "MaxPool2d",
             QuantStage::GlobalAvgPool(_) => "GlobalAvgPool",
             QuantStage::DenseHead(_) => "DenseHead",
         }
@@ -371,7 +494,7 @@ struct Plan {
 /// Two grammars are accepted, one per constructor (see the module doc):
 /// [`QuantGraph::new`] seals the 1-D sequence shape `FpEmbed
 /// FqConvStack+ GlobalAvgPool DenseHead`; [`QuantGraph::new_2d`] seals
-/// the image shape `QuantStem2d (FqConv2dStack | Residual)+
+/// the image shape `QuantStem2d (FqConv2dStack | Residual | MaxPool2d)+
 /// GlobalAvgPool DenseHead`. Construction validates channel/spatial
 /// chaining, quantizer-grid consistency at the residual joins and the
 /// pooling boundary, and that the time axis survives every dilated
@@ -389,9 +512,26 @@ pub struct QuantGraph {
     plan: Plan,
 }
 
-/// True for the stage kinds the 2-D validator's conv loop accepts.
-fn is_2d_conv_stage(s: &QuantStage) -> bool {
-    matches!(s, QuantStage::FqConv2dStack(_) | QuantStage::Residual(_))
+impl std::fmt::Debug for QuantGraph {
+    /// Summary form (stage kinds + geometry) — weights and LUTs are
+    /// megabytes of codes, not something a test failure should print.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kinds: Vec<&'static str> = self.stages.iter().map(|s| s.kind()).collect();
+        f.debug_struct("QuantGraph")
+            .field("stages", &kinds)
+            .field("in_shape", &self.in_shape)
+            .field("classes", &self.classes)
+            .field("out_frames", &self.out_frames)
+            .finish()
+    }
+}
+
+/// True for the stage kinds the 2-D validator's body loop accepts.
+fn is_2d_body_stage(s: &QuantStage) -> bool {
+    matches!(
+        s,
+        QuantStage::FqConv2dStack(_) | QuantStage::Residual(_) | QuantStage::MaxPool2d(_)
+    )
 }
 
 /// Shared tail validation for both grammars: a [`GlobalAvgPool`]
@@ -539,8 +679,9 @@ impl QuantGraph {
 
     /// Validate and seal a 2-D (NCHW image) stage sequence for inputs
     /// of `h x w` pixels. Grammar: `QuantStem2d (FqConv2dStack |
-    /// Residual)+ GlobalAvgPool DenseHead`. Errors name the offending
-    /// stage so mis-assembled architectures fail loudly at build time.
+    /// Residual | MaxPool2d)+ GlobalAvgPool DenseHead`, with at least
+    /// one conv-bearing stage. Errors name the offending stage so
+    /// mis-assembled architectures fail loudly at build time.
     pub fn new_2d(stages: Vec<QuantStage>, h: usize, w: usize) -> Result<Self> {
         ensure!(h >= 1 && w >= 1, "graph needs a non-empty input image");
         ensure!(!stages.is_empty(), "empty stage list");
@@ -559,11 +700,11 @@ impl QuantGraph {
         let mut plan = Plan { codes: channels * hc * wc, acc: 0, skip: 0, fa: 0, pooled: 0 };
         let mut n_stacks = 0usize;
 
-        while let Some((si, stage)) = it.next_if(|(_, s)| is_2d_conv_stage(s)) {
-            n_stacks += 1;
+        while let Some((si, stage)) = it.next_if(|(_, s)| is_2d_body_stage(s)) {
             match stage {
                 QuantStage::FqConv2dStack(stack) => {
                     ensure!(!stack.layers.is_empty(), "stage {si}: empty FqConv2dStack");
+                    n_stacks += 1;
                     for (li, l) in stack.layers.iter().enumerate() {
                         grid = chain_conv2d(
                             l,
@@ -578,6 +719,7 @@ impl QuantGraph {
                 }
                 QuantStage::Residual(r) => {
                     ensure!(!r.body.is_empty(), "stage {si}: residual block without a body");
+                    n_stacks += 1;
                     let (in_ch, in_h, in_w, in_grid) = (channels, hc, wc, grid);
                     for (li, l) in r.body.iter().enumerate() {
                         grid = chain_conv2d(
@@ -623,10 +765,33 @@ impl QuantGraph {
                     plan.skip = plan.skip.max(in_ch * in_h * in_w).max(channels * hc * wc);
                     grid = r.add.out;
                 }
-                _ => unreachable!("next_if matched conv2d stage kinds"),
+                QuantStage::MaxPool2d(p) => {
+                    // a non-conv spatial reduction: channels and grid
+                    // pass through, only the extent shrinks
+                    ensure!(
+                        p.ksize >= 1 && p.stride >= 1,
+                        "stage {si}: degenerate MaxPool2d geometry (ksize {}, stride {})",
+                        p.ksize,
+                        p.stride
+                    );
+                    ensure!(
+                        hc >= p.ksize && wc >= p.ksize,
+                        "stage {si}: {k}x{k} pooling window wider than the {hc}x{wc} extent",
+                        k = p.ksize
+                    );
+                    let (h2, w2) = p.out_hw(hc, wc);
+                    hc = h2;
+                    wc = w2;
+                    plan.codes = plan.codes.max(channels * h2 * w2);
+                }
+                _ => unreachable!("next_if matched 2-D body stage kinds"),
             }
         }
-        ensure!(n_stacks >= 1, "2-D graph needs at least one FqConv2dStack or Residual");
+        ensure!(
+            n_stacks >= 1,
+            "2-D graph needs at least one FqConv2dStack or Residual (pooling alone is not \
+             a network)"
+        );
         let classes = validate_tail(&mut it, channels, Some(grid), &mut plan)?;
 
         Ok(QuantGraph { stages, in_shape: vec![c_in, h, w], classes, out_frames: hc * wc, plan })
@@ -745,6 +910,13 @@ impl QuantGraph {
                         total += d.macs(dh, dw);
                     }
                 }
+                QuantStage::MaxPool2d(p) => {
+                    // no MACs, but the spatial extent shrinks for every
+                    // conv stage downstream
+                    let (h2, w2) = p.out_hw(h, w);
+                    h = h2;
+                    w = w2;
+                }
                 _ => {}
             }
         }
@@ -829,6 +1001,20 @@ impl QuantGraph {
                         *o = r.add.apply(*o, sk);
                     }
                 }
+                QuantStage::MaxPool2d(p) => {
+                    let (input, output) =
+                        if cur_in_a { (&s.a, &mut s.b) } else { (&s.b, &mut s.a) };
+                    // channels are implied by the live buffer's geometry
+                    // (every producer resizes its output to exactly
+                    // channels * h * w)
+                    debug_assert_eq!(input.len() % (h_cur * w_cur), 0, "live code geometry");
+                    let channels = input.len() / (h_cur * w_cur);
+                    p.forward_into(input, channels, h_cur, w_cur, output);
+                    let (h2, w2) = p.out_hw(h_cur, w_cur);
+                    h_cur = h2;
+                    w_cur = w2;
+                    cur_in_a = !cur_in_a;
+                }
                 QuantStage::GlobalAvgPool(g) => {
                     let codes = if cur_in_a { &s.a } else { &s.b };
                     let t = if self.in_shape.len() == 3 { h_cur * w_cur } else { t_cur };
@@ -846,6 +1032,67 @@ impl QuantGraph {
         let mut logits = vec![0f32; self.classes];
         self.forward_into(x, s, &mut logits, 1);
         logits
+    }
+
+    /// Forward a run of flattened samples sequentially into a pre-sized
+    /// logits window over one reusable [`Scratch`] — the sequential
+    /// batch walk behind [`QuantGraph::forward_batch_into`] and the
+    /// serving backends. Allocation-free in steady state.
+    pub fn forward_rows(&self, xs: &[f32], s: &mut Scratch, out: &mut [f32]) {
+        let per = self.in_numel();
+        assert_eq!(xs.len() % per.max(1), 0, "feature buffer not a whole number of samples");
+        assert_eq!(out.len(), xs.len() / per * self.classes, "logit buffer size");
+        for (xi, oi) in xs.chunks_exact(per).zip(out.chunks_exact_mut(self.classes)) {
+            self.forward_into(xi, s, oi, 1);
+        }
+    }
+
+    /// Sample-parallel batched forward: flattened `(batch, in_numel)`
+    /// features → logits into `out` (`batch * classes`, row-major).
+    /// Samples are split into contiguous blocks over the persistent
+    /// worker pool ([`exec::par_rows_mut`] — no thread spawn per
+    /// batch), one block per worker, each with its own pre-planned
+    /// [`Scratch`] reused across its samples; a batch of one instead
+    /// spends the whole budget *inside* the layer kernels. Output is
+    /// bit-identical for every `threads` (the per-sample instruction
+    /// sequence never changes — rust/tests/serving.rs pins this through
+    /// the serving path).
+    pub fn forward_batch_into(&self, xs: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        self.forward_batch_pooled(xs, batch, out, threads, &ScratchPool::new());
+    }
+
+    /// [`QuantGraph::forward_batch_into`] with caller-owned scratch
+    /// recycling: each worker part pops a [`Scratch`] from `scratches`
+    /// and parks it back when done, so a long-lived caller (e.g.
+    /// `serve::GraphBackend`) performs no steady-state allocation on
+    /// the batched path either. Bit-identical to the plain call.
+    pub fn forward_batch_pooled(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        out: &mut [f32],
+        threads: usize,
+        scratches: &ScratchPool,
+    ) {
+        let per = self.in_numel();
+        assert_eq!(xs.len(), batch * per, "feature buffer size");
+        assert_eq!(out.len(), batch * self.classes, "logit buffer size");
+        let threads = threads.max(1);
+        if batch == 1 {
+            let mut s = scratches.acquire(self);
+            self.forward_into(xs, &mut s, out, threads);
+            s.into_pool(scratches);
+        } else if threads == 1 {
+            let mut s = scratches.acquire(self);
+            self.forward_rows(xs, &mut s, out);
+            s.into_pool(scratches);
+        } else {
+            exec::par_rows_mut(out, batch, self.classes, threads, |rows, window| {
+                let mut s = scratches.acquire(self);
+                self.forward_rows(&xs[rows.start * per..rows.end * per], &mut s, window);
+                s.into_pool(scratches);
+            });
+        }
     }
 }
 
@@ -903,11 +1150,60 @@ impl ImgArch {
     }
 }
 
+/// A synthetic DarkNet-style image architecture description — conv
+/// groups (one 3x3 widening conv, then alternating 1x1 squeeze / 3x3
+/// widen convs) separated by 2x2 stride-2 max pools, GAP, dense head.
+/// See [`super::darknet`] for the stage assembly.
+pub struct DarkArch {
+    pub name: &'static str,
+    /// input planes (3 for RGB)
+    pub in_ch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub classes: usize,
+    /// per group: (channels, conv count, pool after the group). Groups
+    /// with `conv count` > 1 alternate `3x3 channels` and `1x1
+    /// channels/2` squeeze convs (count must be odd, channels even).
+    pub groups: Vec<(usize, usize, bool)>,
+}
+
+impl DarkArch {
+    /// The paper's Table-3 DarkNet-19 block pattern (3x3 + maxpool +
+    /// 1x1 squeeze) at the repo's ImageNet-64-like input geometry:
+    /// 1+1+3+3+5+5 = 18 quantized convs; the classifier 1x1 conv of the
+    /// original becomes the dense head on pooled features.
+    pub fn darknet19() -> Self {
+        DarkArch::darknet("darknet19", 64, 100)
+    }
+
+    /// DarkNet-19 on `hw x hw` inputs with `classes` outputs. `hw` must
+    /// keep all five 2x2/2 pools valid (>= 32).
+    pub fn darknet(name: &'static str, hw: usize, classes: usize) -> Self {
+        assert!(hw >= 32, "darknet-19 needs >= 32x32 inputs for its five 2x2/2 pools");
+        DarkArch {
+            name,
+            in_ch: 3,
+            h: hw,
+            w: hw,
+            classes,
+            groups: vec![
+                (32, 1, true),
+                (64, 1, true),
+                (128, 3, true),
+                (256, 3, true),
+                (512, 5, true),
+                (1024, 5, false),
+            ],
+        }
+    }
+}
+
 /// A synthetic architecture description: enough to instantiate a full
 /// [`QuantGraph`] with deterministic random parameters and no artifacts.
 pub enum SynthArch {
     Seq(SeqArch),
     Img(ImgArch),
+    Dark(DarkArch),
 }
 
 impl SynthArch {
@@ -951,10 +1247,18 @@ impl SynthArch {
         SynthArch::Img(ImgArch::resnet(name, n))
     }
 
+    /// The paper's Table-3 DarkNet-19 (see [`DarkArch::darknet19`]) on
+    /// the pooled 2-D stage grammar — conv groups separated by
+    /// [`MaxPool2d`] stages.
+    pub fn darknet19() -> Self {
+        SynthArch::Dark(DarkArch::darknet19())
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             SynthArch::Seq(a) => a.name,
             SynthArch::Img(a) => a.name,
+            SynthArch::Dark(a) => a.name,
         }
     }
 }
@@ -966,6 +1270,7 @@ pub fn synthetic_graph(arch: &SynthArch, nw: f32, na: f32, seed: u64) -> Result<
     match arch {
         SynthArch::Seq(a) => synthetic_seq_graph(a, nw, na, seed),
         SynthArch::Img(a) => super::resnet::synthetic_resnet_graph(a, nw, na, seed),
+        SynthArch::Dark(a) => super::darknet::synthetic_darknet_graph(a, nw, na, seed),
     }
 }
 
@@ -1155,5 +1460,189 @@ mod tests {
             g.forward_into(&x, &mut s, &mut logits, threads);
             assert_eq!(logits, want, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn batched_forward_bit_identical_to_the_sequential_walk() {
+        let g = synthetic_graph(&SynthArch::resnet("r8", 1), 1.0, 7.0, 13).expect("resnet8");
+        let (per, classes, b) = (g.in_numel(), g.classes(), 5usize);
+        let mut rng = Rng::new(6);
+        let mut xs = vec![0f32; b * per];
+        rng.fill_gaussian(&mut xs, 0.5);
+        let mut s = Scratch::for_graph(&g);
+        let mut want = vec![0f32; b * classes];
+        g.forward_rows(&xs, &mut s, &mut want);
+        for threads in [1usize, 2, 3, 8] {
+            let mut out = vec![0f32; b * classes];
+            g.forward_batch_into(&xs, b, &mut out, threads);
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn batched_scratch_pool_warms_up_and_stops_growing() {
+        // the serving backends recycle per-worker scratches through a
+        // ScratchPool: the first batch fills it (one scratch per part),
+        // every later batch reuses them — steady state allocates nothing
+        let g = synthetic_graph(&SynthArch::resnet("r8", 1), 1.0, 7.0, 13).expect("resnet8");
+        let (per, classes, b) = (g.in_numel(), g.classes(), 6usize);
+        let mut rng = Rng::new(8);
+        let mut xs = vec![0f32; b * per];
+        rng.fill_gaussian(&mut xs, 0.5);
+        let mut want = vec![0f32; b * classes];
+        g.forward_batch_into(&xs, b, &mut want, 4);
+        let pool = ScratchPool::new();
+        let mut out = vec![0f32; b * classes];
+        g.forward_batch_pooled(&xs, b, &mut out, 4, &pool);
+        assert_eq!(out, want, "pooled batch diverged from the plain batch");
+        let warm = pool.spares();
+        assert!((1..=4).contains(&warm), "pool holds one scratch per part: {warm}");
+        for round in 0..3 {
+            g.forward_batch_pooled(&xs, b, &mut out, 4, &pool);
+            assert_eq!(out, want, "round {round}");
+            assert_eq!(pool.spares(), warm, "warm pool must stop growing (round {round})");
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // MaxPool2d stage
+    // -----------------------------------------------------------------
+
+    /// Float reference of the pooling stage: dequantize every code,
+    /// take the window max, requantize onto the same grid.
+    fn maxpool_float_ref(
+        p: &MaxPool2d,
+        q: &QParams,
+        x: &[i8],
+        channels: usize,
+        h_in: usize,
+        w_in: usize,
+    ) -> Vec<i8> {
+        let (h_out, w_out) = p.out_hw(h_in, w_in);
+        let mut out = vec![0i8; channels * h_out * w_out];
+        for c in 0..channels {
+            for oh in 0..h_out {
+                for ow in 0..w_out {
+                    let mut best = f32::NEG_INFINITY;
+                    for ih in oh * p.stride..oh * p.stride + p.ksize {
+                        for iw in ow * p.stride..ow * p.stride + p.ksize {
+                            best = best.max(q.dequantize(x[(c * h_in + ih) * w_in + iw] as i32));
+                        }
+                    }
+                    out[(c * h_out + oh) * w_out + ow] = q.int_code(best) as i8;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn maxpool_matches_float_reference_on_random_grids() {
+        let mut rng = Rng::new(41);
+        // unsigned (post-ReLU) and signed grids, several scales
+        for q in [
+            QParams::new(0.9, 7.0, 0.0),
+            QParams::new(1.3, 7.0, -1.0),
+            QParams::new(0.6, 15.0, 0.0),
+        ] {
+            let (lo, hi) = q.code_range();
+            for &(k, stride, h, w) in
+                &[(2usize, 2usize, 8usize, 6usize), (3, 1, 7, 7), (2, 3, 9, 8), (3, 2, 10, 5)]
+            {
+                let channels = 3usize;
+                let p = MaxPool2d { ksize: k, stride };
+                let x: Vec<i8> = (0..channels * h * w)
+                    .map(|_| (lo + rng.below((hi - lo + 1) as usize) as i32) as i8)
+                    .collect();
+                let mut got = Vec::new();
+                p.forward_into(&x, channels, h, w, &mut got);
+                let want = maxpool_float_ref(&p, &q, &x, channels, h, w);
+                assert_eq!(got, want, "k={k} stride={stride} h={h} w={w} q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_edge_shapes() {
+        let mut rng = Rng::new(43);
+        let x: Vec<i8> = (0..2 * 6 * 6).map(|_| rng.below(8) as i8).collect();
+        // window == input: one global max per channel
+        let global = MaxPool2d { ksize: 6, stride: 1 };
+        let mut out = Vec::new();
+        global.forward_into(&x, 2, 6, 6, &mut out);
+        assert_eq!(global.out_hw(6, 6), (1, 1));
+        for c in 0..2 {
+            let want = x[c * 36..(c + 1) * 36].iter().copied().max().unwrap();
+            assert_eq!(out[c], want, "channel {c} global max");
+        }
+        // stride > ksize: subsampling windows with gaps
+        let gappy = MaxPool2d { ksize: 2, stride: 3 };
+        assert_eq!(gappy.out_hw(6, 6), (2, 2));
+        gappy.forward_into(&x, 2, 6, 6, &mut out);
+        assert_eq!(out.len(), 2 * 2 * 2);
+        assert_eq!(out[0], x[0].max(x[1]).max(x[6]).max(x[7]), "top-left gapped window");
+        // ksize 1, stride 1: identity
+        let id = MaxPool2d { ksize: 1, stride: 1 };
+        id.forward_into(&x, 2, 6, 6, &mut out);
+        assert_eq!(out, x);
+        // w_out == 1 on a non-square extent
+        let narrow = MaxPool2d { ksize: 3, stride: 2 };
+        assert_eq!(narrow.out_hw(7, 3), (3, 1));
+        let xs: Vec<i8> = (0..7 * 3).map(|_| rng.below(8) as i8).collect();
+        narrow.forward_into(&xs, 1, 7, 3, &mut out);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn maxpool_preserves_code_order() {
+        // the property that makes the stage LUT-free: on any shared
+        // grid, the max over integer codes IS the requantized max over
+        // the dequantized values (dequantize is monotone, and the grid
+        // round-trips its own codes exactly)
+        let mut rng = Rng::new(47);
+        for q in [QParams::new(0.8, 7.0, 0.0), QParams::new(1.7, 15.0, -1.0)] {
+            let (lo, hi) = q.code_range();
+            for _ in 0..200 {
+                let codes: Vec<i32> = (0..1 + rng.below(9))
+                    .map(|_| lo + rng.below((hi - lo + 1) as usize) as i32)
+                    .collect();
+                let max_code = codes.iter().copied().max().unwrap();
+                let max_val =
+                    codes.iter().map(|&c| q.dequantize(c)).fold(f32::NEG_INFINITY, f32::max);
+                assert_eq!(q.int_code(max_val), max_code, "codes {codes:?} on {q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_pool_stages() {
+        // off-grammar pool geometry is a typed build-time error, never
+        // a panic (the fuzz rejection sweep leans on this)
+        let q = QParams::new(1.0, 7.0, -1.0);
+        for (pool, why) in [
+            (MaxPool2d { ksize: 40, stride: 1 }, "window wider than the extent"),
+            (MaxPool2d { ksize: 0, stride: 1 }, "zero ksize"),
+            (MaxPool2d { ksize: 2, stride: 0 }, "zero stride"),
+        ] {
+            let stages = vec![
+                QuantStage::QuantStem2d(QuantStem2d { c_in: 3, out_q: q }),
+                QuantStage::MaxPool2d(pool),
+            ];
+            let err = QuantGraph::new_2d(stages, 32, 32);
+            assert!(err.is_err(), "degenerate pool must be rejected: {why}");
+        }
+    }
+
+    #[test]
+    fn pooling_alone_is_not_a_network() {
+        // the body loop accepts MaxPool2d stages, but the graph still
+        // needs at least one conv-bearing stage
+        let q = QParams::new(1.0, 7.0, -1.0);
+        let stages = vec![
+            QuantStage::QuantStem2d(QuantStem2d { c_in: 3, out_q: q }),
+            QuantStage::MaxPool2d(MaxPool2d { ksize: 2, stride: 2 }),
+        ];
+        let err = QuantGraph::new_2d(stages, 32, 32).unwrap_err().to_string();
+        assert!(err.contains("at least one"), "unexpected error: {err}");
     }
 }

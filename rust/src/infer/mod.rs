@@ -18,9 +18,10 @@
 //!   4-channel dense tiles, fused requantization, no transpose
 //! * [`graph`]    — the composable quantized model graph: typed
 //!   [`QuantStage`]s (FP embed, FQ-Conv stacks in 1-D and 2-D, integer
-//!   residual blocks, GAP, dense head) sealed into a [`QuantGraph`]
-//!   that owns sequencing, ping-pong buffer planning and the
-//!   allocation-free forward
+//!   residual blocks, order-exact max pooling, GAP, dense head) sealed
+//!   into a [`QuantGraph`] that owns sequencing, ping-pong buffer
+//!   planning, the allocation-free forward and the sample-parallel
+//!   batched forward
 //! * [`pipeline`] — the KWS network as a thin constructor facade over
 //!   [`QuantGraph`], built directly from a trained FQ
 //!   [`ParamSet`](crate::coordinator::ParamSet); agreement with the XLA
@@ -28,9 +29,13 @@
 //! * [`resnet`]   — ResNet-32 (Table 6) assembled on the 2-D stage
 //!   grammar: `resnet32_stages` from a trained `ParamSet`, plus the
 //!   synthetic instantiation behind `SynthArch::resnet32`.
+//! * [`darknet`]  — DarkNet-19 (Table 3) on the pooled 2-D grammar
+//!   (conv groups + `MaxPool2d` stages): `darknet19_stages` from a
+//!   trained `ParamSet`, plus `SynthArch::darknet19`.
 
 pub mod conv;
 pub mod conv2d;
+pub mod darknet;
 pub mod gemm;
 pub mod graph;
 pub mod pipeline;

@@ -202,15 +202,12 @@ impl FqKwsNet {
 
     /// Forward a run of flattened samples into a pre-sized logits window
     /// — the single shared batch loop behind [`FqKwsNet::forward_batch`]
-    /// and the serving backend (`serve::NativeBackend`). Allocation-free
-    /// in steady state (all intermediates live in `s`).
+    /// and the serving backend (`serve::NativeBackend`), now delegated
+    /// to [`QuantGraph::forward_rows`] so the facade and the bare-graph
+    /// walk cannot diverge. Allocation-free in steady state (all
+    /// intermediates live in `s`).
     pub fn forward_rows(&self, xs: &[f32], s: &mut Scratch, out: &mut [f32]) {
-        let per = self.graph.in_numel();
-        assert_eq!(xs.len() % per.max(1), 0, "feature buffer not a whole number of samples");
-        assert_eq!(out.len(), xs.len() / per * self.classes, "logit buffer size");
-        for (xi, oi) in xs.chunks_exact(per).zip(out.chunks_exact_mut(self.classes)) {
-            self.graph.forward_into(xi, s, oi, 1);
-        }
+        self.graph.forward_rows(xs, s, out);
     }
 
     /// Forward a batch (B, n_mfcc, frames) -> logits tensor (B, classes),
@@ -219,30 +216,18 @@ impl FqKwsNet {
         self.forward_batch_with(x, exec::default_threads())
     }
 
-    /// [`FqKwsNet::forward_batch`] with an explicit pool size. Samples
-    /// are split into contiguous blocks over the persistent worker pool
-    /// ([`exec::par_rows_mut`] — no thread spawn per batch), one block
-    /// per worker, each with its own [`Scratch`] reused across its
-    /// samples; a batch of one instead spends the budget inside the
-    /// layer kernels. Output is bit-identical for every `threads`
-    /// (rust/tests/parallel.rs).
+    /// [`FqKwsNet::forward_batch`] with an explicit pool size — now a
+    /// thin wrapper over the graph engine's
+    /// [`QuantGraph::forward_batch_into`]: samples are split into
+    /// contiguous blocks over the persistent worker pool (no thread
+    /// spawn per batch), one block per worker, each with its own
+    /// [`Scratch`] reused across its samples; a batch of one instead
+    /// spends the budget inside the layer kernels. Output is
+    /// bit-identical for every `threads` (rust/tests/parallel.rs).
     pub fn forward_batch_with(&self, x: &TensorF, threads: usize) -> TensorF {
         let b = x.shape()[0];
-        let per = self.graph.in_numel();
         let mut out = vec![0f32; b * self.classes];
-        let threads = threads.max(1);
-        if b == 1 {
-            let mut s = Scratch::for_graph(&self.graph);
-            self.forward_into(x.data(), &mut s, &mut out, threads);
-        } else if threads == 1 {
-            let mut s = Scratch::for_graph(&self.graph);
-            self.forward_rows(x.data(), &mut s, &mut out);
-        } else {
-            exec::par_rows_mut(&mut out, b, self.classes, threads, |rows, window| {
-                let mut s = Scratch::for_graph(&self.graph);
-                self.forward_rows(&x.data()[rows.start * per..rows.end * per], &mut s, window);
-            });
-        }
+        self.graph.forward_batch_into(x.data(), b, &mut out, threads);
         TensorF::from_vec(&[b, self.classes], out)
     }
 

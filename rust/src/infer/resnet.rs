@@ -105,29 +105,35 @@ pub fn resnet32_params(seed: u64) -> Result<ParamSet> {
     resnet_params(&ImgArch::resnet32(), seed)
 }
 
-/// `e^{s}` of one log-scale parameter, with a named error.
-fn es_of(params: &ParamSet, name: &str) -> Result<f32> {
+/// `e^{s}` of one log-scale parameter, with a named error. Shared with
+/// [`super::darknet`].
+pub(super) fn es_of(params: &ParamSet, name: &str) -> Result<f32> {
     Ok(params.scalar(name).with_context(|| format!("missing scale {name}"))?.exp())
 }
 
 /// One conv layer's geometry + quantizer wiring, resolved against the
-/// parameter set by [`build_conv`].
-struct ConvSpec<'a> {
-    name: &'a str,
-    c_out: usize,
-    c_in: usize,
-    ksize: usize,
-    stride: usize,
-    pad: usize,
+/// parameter set by [`build_conv`]. Shared with [`super::darknet`].
+pub(super) struct ConvSpec<'a> {
+    pub(super) name: &'a str,
+    pub(super) c_out: usize,
+    pub(super) c_in: usize,
+    pub(super) ksize: usize,
+    pub(super) stride: usize,
+    pub(super) pad: usize,
     /// input grid (the producer's output grid)
-    qa: QParams,
+    pub(super) qa: QParams,
     /// consumer input grid when fused; None emits on the own mid grid
-    next: Option<QParams>,
+    pub(super) next: Option<QParams>,
 }
 
 /// Build one quantized conv layer from `{name}.w` and its `sw`/`so`
-/// log-scales.
-fn build_conv(params: &ParamSet, spec: &ConvSpec<'_>, nw: f32, na: f32) -> Result<QuantConv2d> {
+/// log-scales. Shared with [`super::darknet`].
+pub(super) fn build_conv(
+    params: &ParamSet,
+    spec: &ConvSpec<'_>,
+    nw: f32,
+    na: f32,
+) -> Result<QuantConv2d> {
     let name = spec.name;
     let wname = format!("{name}.w");
     let w = params.get(&wname).with_context(|| format!("missing param {wname}"))?;

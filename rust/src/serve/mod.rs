@@ -74,9 +74,11 @@
 //! intra-layer thread budget (the batch-of-one fast path; use
 //! [`NativeBackend::factory_sharded`] to split that budget across a
 //! many-worker pool), [`GraphBackend`] serves any bare [`QuantGraph`]
-//! (e.g. the 2-D ResNet-32 stage list) next to the KWS models, and the
-//! XLA deployment artifact ([`XlaBackend`]) pads to its fixed batch.
-//! All are measured in `benches/perf_serve.rs`.
+//! (the 2-D ResNet-32 / DarkNet-19 stage lists) next to the KWS models
+//! — batches of images run *sample-parallel* across the intra budget
+//! via [`QuantGraph::forward_batch_into`] — and the XLA deployment
+//! artifact ([`XlaBackend`]) pads to its fixed batch. All are measured
+//! in `benches/perf_serve.rs`.
 //!
 //! Hot-path allocation discipline: each worker stages batch features
 //! and logits in recycled buffers and the native backend routes
@@ -99,6 +101,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::exec;
+use crate::infer::graph::ScratchPool;
 use crate::infer::pipeline::{FqKwsNet, Scratch};
 use crate::infer::QuantGraph;
 use crate::metrics::LatencyHist;
@@ -310,15 +313,26 @@ impl Backend for NativeBackend {
 }
 
 /// Backend over a bare [`QuantGraph`] — serves any architecture the
-/// graph engine can express (the 2-D ResNet-32 stage list, a custom
-/// stack, ...) without a named facade. Batch-size agnostic: a batch of
-/// one spends the intra-layer thread budget inside the kernels (same
-/// fast path as [`NativeBackend`]), larger batches walk samples over
-/// one reusable [`Scratch`] — allocation-free either way, bit-identical
-/// at every budget.
+/// graph engine can express (the 2-D ResNet-32 / DarkNet-19 stage
+/// lists, a custom stack, ...) without a named facade. Batch-size
+/// agnostic: a batch of one spends the intra-layer thread budget inside
+/// the kernels (same fast path as [`NativeBackend`]); larger batches
+/// run **sample-parallel** over the same budget through
+/// [`QuantGraph::forward_batch_pooled`], with per-worker scratches
+/// recycled through the backend's [`ScratchPool`] (after the first
+/// batch the batched path allocates nothing) — image samples carry
+/// tens of millions of MACs each, so splitting the batch beats walking
+/// it sequentially. With a budget of one (e.g.
+/// [`GraphBackend::factory_sharded`] on a many-worker pool) batches
+/// walk sequentially over the backend's own reusable [`Scratch`],
+/// allocation-free. Bit-identical at every budget.
 pub struct GraphBackend {
     pub graph: Arc<QuantGraph>,
     scratch: Scratch,
+    /// recycled per-worker scratches for the sample-parallel batch path
+    /// (fills up to `intra_threads` scratches on the first batch, then
+    /// the serve loop allocates nothing)
+    scratch_pool: ScratchPool,
     /// intra-layer thread budget for the batch-of-one fast path
     intra_threads: usize,
 }
@@ -337,7 +351,12 @@ impl GraphBackend {
     /// (`1` disables the fast path; outputs are bit-identical either way).
     pub fn with_intra_threads(graph: Arc<QuantGraph>, intra_threads: usize) -> Self {
         let scratch = Scratch::for_graph(&graph);
-        GraphBackend { graph, scratch, intra_threads: intra_threads.max(1) }
+        GraphBackend {
+            graph,
+            scratch,
+            scratch_pool: ScratchPool::new(),
+            intra_threads: intra_threads.max(1),
+        }
     }
 
     /// A shareable factory for [`ModelRegistry::register`]: every call
@@ -370,10 +389,15 @@ impl Backend for GraphBackend {
             // batch-of-one fast path: the whole thread budget goes
             // inside the layer kernels (bit-identical at every budget)
             self.graph.forward_into(x, &mut self.scratch, out, self.intra_threads);
-            return Ok(());
-        }
-        for (xi, oi) in x.chunks_exact(per).zip(out.chunks_exact_mut(classes)) {
-            self.graph.forward_into(xi, &mut self.scratch, oi, 1);
+        } else if self.intra_threads <= 1 {
+            // sharded budget: sequential walk over the backend's own
+            // scratch (worker-level parallelism comes from the pool)
+            self.graph.forward_rows(x, &mut self.scratch, out);
+        } else {
+            // sample-parallel batch over the intra budget — batch > 1
+            // no longer drops to a single thread per sample; per-worker
+            // scratches recycle through the backend's pool
+            self.graph.forward_batch_pooled(x, batch, out, self.intra_threads, &self.scratch_pool);
         }
         Ok(())
     }

@@ -1,6 +1,12 @@
 //! Shared integration-test bootstrap (`mod common;` in each test file —
 //! a directory module so cargo does not treat it as its own test target).
 
+// each test binary includes this module and uses a subset of it
+#![allow(dead_code)]
+
+use fqconv::infer::graph::{global_avg_pool_into, QuantStage};
+use fqconv::infer::QuantGraph;
+use fqconv::quant::QParams;
 use fqconv::runtime::{Engine, Manifest};
 
 /// `None` (=> the caller's test skips) when the artifacts or the PJRT
@@ -23,4 +29,99 @@ pub fn setup() -> Option<(Manifest, Engine)> {
         }
     };
     Some((manifest, engine))
+}
+
+/// Stage-by-stage reference walk of a 2-D graph with every conv run
+/// through its im2col + GEMM + threshold-search oracle
+/// (`QuantConv2d::forward_im2col`) — the independent implementation the
+/// direct engine must match bit-for-bit (rust/tests/graph.rs,
+/// rust/tests/graph_fuzz.rs).
+///
+/// The walk tracks the live quantizer grid so `MaxPool2d` stages can be
+/// oracled through the *float* path — dequantize every code in the
+/// window, take the float max, requantize onto the same grid — which
+/// independently proves the engine's LUT-free integer max is
+/// order-exact on every graph it runs.
+pub fn forward_reference_2d(g: &QuantGraph, x: &[f32]) -> Vec<f32> {
+    let shape = g.in_shape();
+    assert_eq!(shape.len(), 3, "reference walk is for image graphs");
+    let (mut h, mut w) = (shape[1], shape[2]);
+    let mut codes: Vec<i8> = Vec::new();
+    let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
+    let mut pooled = Vec::new();
+    let mut logits = vec![0f32; g.classes()];
+    // the grid the live codes are currently binned on
+    let mut grid: Option<QParams> = None;
+    for stage in g.stages() {
+        match stage {
+            QuantStage::QuantStem2d(st) => {
+                st.forward_into(x, &mut codes);
+                grid = Some(st.out_q);
+            }
+            QuantStage::FqConv2dStack(stack) => {
+                for l in &stack.layers {
+                    l.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut out);
+                    let (h2, w2) = l.out_hw(h, w);
+                    h = h2;
+                    w = w2;
+                    std::mem::swap(&mut codes, &mut out);
+                    grid = Some(l.out_grid());
+                }
+            }
+            QuantStage::Residual(r) => {
+                let skip: Vec<i8> = match &r.down {
+                    Some(d) => {
+                        let mut s = Vec::new();
+                        d.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut s);
+                        s
+                    }
+                    None => codes.clone(),
+                };
+                for l in &r.body {
+                    l.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut out);
+                    let (h2, w2) = l.out_hw(h, w);
+                    h = h2;
+                    w = w2;
+                    std::mem::swap(&mut codes, &mut out);
+                }
+                assert_eq!(codes.len(), skip.len(), "join geometry");
+                for (c, &sk) in codes.iter_mut().zip(&skip) {
+                    *c = r.add.apply(*c, sk);
+                }
+                grid = Some(r.add.out);
+            }
+            QuantStage::MaxPool2d(p) => {
+                let q = grid.expect("pool before any code-producing stage");
+                let (h2, w2) = p.out_hw(h, w);
+                let channels = codes.len() / (h * w);
+                out.clear();
+                out.resize(channels * h2 * w2, 0);
+                for c in 0..channels {
+                    for oh in 0..h2 {
+                        for ow in 0..w2 {
+                            let mut best = f32::NEG_INFINITY;
+                            for ih in oh * p.stride..oh * p.stride + p.ksize {
+                                for iw in ow * p.stride..ow * p.stride + p.ksize {
+                                    let code = codes[(c * h + ih) * w + iw];
+                                    best = best.max(q.dequantize(code as i32));
+                                }
+                            }
+                            out[(c * h2 + oh) * w2 + ow] = q.int_code(best) as i8;
+                        }
+                    }
+                }
+                h = h2;
+                w = w2;
+                std::mem::swap(&mut codes, &mut out);
+            }
+            QuantStage::GlobalAvgPool(gap) => {
+                pooled.clear();
+                pooled.resize(gap.channels, 0.0);
+                global_avg_pool_into(&codes, gap.channels, h * w, &gap.dq, &mut pooled);
+            }
+            QuantStage::DenseHead(hd) => hd.forward_into(&pooled, &mut logits),
+            _ => panic!("unexpected 1-D stage in an image graph"),
+        }
+    }
+    logits
 }

@@ -1,17 +1,20 @@
 //! Contract of the composable QuantGraph engine: a graph assembled by
 //! hand from KWS stages is bit-identical to the `FqKwsNet` facade at
 //! every pool size, a second (deeper/wider) 1-D architecture runs on
-//! the same API, and the 2-D residual ResNet-32 stage list is
-//! bit-identical to a stage-by-stage im2col-oracle walk at every pool
-//! size. Runs fully offline on synthetic parameters.
+//! the same API, and the 2-D stage lists — the residual ResNet-32 and
+//! the pooled DarkNet-19 — are bit-identical to a stage-by-stage
+//! im2col-oracle walk at every pool size. Runs fully offline on
+//! synthetic parameters.
+
+mod common;
 
 use fqconv::data::{self, Dataset as _};
-use fqconv::infer::graph::{
-    global_avg_pool_into, synthetic_graph, QuantStage, Scratch, SynthArch,
-};
+use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
 use fqconv::infer::pipeline::{kws_stages, synthetic_params};
 use fqconv::infer::{FqKwsNet, QuantGraph};
 use fqconv::util::Rng;
+
+use common::forward_reference_2d;
 
 #[test]
 fn graph_bit_identical_to_fqkwsnet_at_pool_sizes_1_2_4_8() {
@@ -126,65 +129,9 @@ fn scratch_plan_covers_the_high_water_marks() {
 }
 
 // ---------------------------------------------------------------------------
-// 2-D residual graphs (ResNet-32)
+// 2-D graphs (ResNet-32, DarkNet-19) vs the shared im2col-oracle walk
+// (common::forward_reference_2d)
 // ---------------------------------------------------------------------------
-
-/// Stage-by-stage reference walk of a 2-D graph with every conv run
-/// through its im2col + GEMM + threshold-search oracle
-/// (`QuantConv2d::forward_im2col`) — the independent implementation the
-/// direct engine must match bit-for-bit.
-fn forward_reference_2d(g: &QuantGraph, x: &[f32]) -> Vec<f32> {
-    let shape = g.in_shape();
-    assert_eq!(shape.len(), 3, "reference walk is for image graphs");
-    let (mut h, mut w) = (shape[1], shape[2]);
-    let mut codes: Vec<i8> = Vec::new();
-    let (mut cols, mut acc, mut out) = (Vec::new(), Vec::new(), Vec::new());
-    let mut pooled = Vec::new();
-    let mut logits = vec![0f32; g.classes()];
-    for stage in g.stages() {
-        match stage {
-            QuantStage::QuantStem2d(st) => st.forward_into(x, &mut codes),
-            QuantStage::FqConv2dStack(stack) => {
-                for l in &stack.layers {
-                    l.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut out);
-                    let (h2, w2) = l.out_hw(h, w);
-                    h = h2;
-                    w = w2;
-                    std::mem::swap(&mut codes, &mut out);
-                }
-            }
-            QuantStage::Residual(r) => {
-                let skip: Vec<i8> = match &r.down {
-                    Some(d) => {
-                        let mut s = Vec::new();
-                        d.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut s);
-                        s
-                    }
-                    None => codes.clone(),
-                };
-                for l in &r.body {
-                    l.forward_im2col(&codes, h, w, &mut cols, &mut acc, &mut out);
-                    let (h2, w2) = l.out_hw(h, w);
-                    h = h2;
-                    w = w2;
-                    std::mem::swap(&mut codes, &mut out);
-                }
-                assert_eq!(codes.len(), skip.len(), "join geometry");
-                for (c, &sk) in codes.iter_mut().zip(&skip) {
-                    *c = r.add.apply(*c, sk);
-                }
-            }
-            QuantStage::GlobalAvgPool(gap) => {
-                pooled.clear();
-                pooled.resize(gap.channels, 0.0);
-                global_avg_pool_into(&codes, gap.channels, h * w, &gap.dq, &mut pooled);
-            }
-            QuantStage::DenseHead(hd) => hd.forward_into(&pooled, &mut logits),
-            _ => panic!("unexpected 1-D stage in an image graph"),
-        }
-    }
-    logits
-}
 
 #[test]
 fn resnet32_bit_identical_to_im2col_oracle_at_pool_sizes_1_2_4_8() {
@@ -213,6 +160,39 @@ fn resnet32_bit_identical_to_im2col_oracle_at_pool_sizes_1_2_4_8() {
         s.capacities(),
         planned,
         "resnet32 forward outgrew the planned scratch (allocation on the hot path)"
+    );
+}
+
+#[test]
+fn darknet19_bit_identical_to_im2col_oracle_at_pool_sizes_1_2_4_8() {
+    // the Table-3 acceptance pin: the full DarkNet-19 stage list (conv
+    // groups + 2x2/2 max pools) runs end-to-end through forward_into,
+    // matches the stage-by-stage oracle walk (im2col convs + float-path
+    // max pooling) bit-for-bit at every pool size, with zero
+    // steady-state allocations
+    let g = synthetic_graph(&SynthArch::darknet19(), 1.0, 7.0, 23).expect("darknet19");
+    assert_eq!(g.in_shape(), &[3, 64, 64]);
+    assert_eq!(g.classes(), 100);
+    // 64 -> 2 through the five 2x2 stride-2 pools
+    assert_eq!(g.out_frames(), 4);
+    let mut rng = Rng::new(12);
+    let mut x = vec![0f32; g.in_numel()];
+    rng.fill_gaussian(&mut x, 0.5);
+    let want = forward_reference_2d(&g, &x);
+    assert!(want.iter().all(|v| v.is_finite()));
+    assert!(want.iter().any(|&v| v != 0.0), "logits all zero — dead forward");
+
+    let mut s = Scratch::for_graph(&g);
+    let planned = s.capacities();
+    for threads in [1usize, 2, 4, 8] {
+        let mut logits = vec![0f32; g.classes()];
+        g.forward_into(&x, &mut s, &mut logits, threads);
+        assert_eq!(logits, want, "pool={threads}: direct engine diverged from the oracle");
+    }
+    assert_eq!(
+        s.capacities(),
+        planned,
+        "darknet19 forward outgrew the planned scratch (allocation on the hot path)"
     );
 }
 

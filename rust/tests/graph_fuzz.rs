@@ -1,0 +1,348 @@
+//! Randomized graph-equivalence fuzz harness for the 2-D stage grammar.
+//!
+//! A seeded generator assembles *valid* random stage lists — random
+//! depth, channels, strides, kernel/pad shapes, pool placements, a
+//! per-conv W2/W4 weight-kind mix and a per-conv fused/unfused requant
+//! mix (fused convs re-bin through the composed LUT straight onto the
+//! consumer grid, as every real network here does) — over the full
+//! grammar
+//! `QuantStem2d (FqConv2dStack | Residual | MaxPool2d)+ GlobalAvgPool
+//! DenseHead`, then pins for every spec that
+//!
+//! * the direct engine forward is bit-identical to the independent
+//!   oracle walk (im2col + GEMM + threshold-search convs, float-path
+//!   max pooling) at pool sizes 1/2/4, and
+//! * `Scratch::capacities` is unchanged after those three forwards —
+//!   the build-time buffer plan really covers the high-water marks
+//!   (no allocation on the hot path).
+//!
+//! A companion rejection sweep builds one known-valid spec and mutates
+//! one field at a time, asserting every mutation is refused with a
+//! *typed* construction error — never a panic.
+//!
+//! Deterministic: one fixed seed drives the whole sweep.
+
+mod common;
+
+use fqconv::infer::graph::{
+    DenseHead, FqConv2dStack, GlobalAvgPool, MaxPool2d, QuantGraph, QuantStage, QuantStem2d,
+    Residual, Scratch,
+};
+use fqconv::infer::QuantConv2d;
+use fqconv::quant::{AddLut, QParams};
+use fqconv::util::Rng;
+
+use common::forward_reference_2d;
+
+/// Activation level count (4-bit) for every generated grid.
+const NA: f32 = 7.0;
+
+/// A random post-ReLU (b = 0) activation grid.
+fn relu_grid(rng: &mut Rng) -> QParams {
+    QParams::new(rng.range(0.6, 1.4), NA, 0.0)
+}
+
+/// A random conv layer, randomly ternary (W2) or dense (W4) AND
+/// randomly fused (re-bins straight onto a consumer grid through the
+/// composed LUT — the configuration every real network in the repo
+/// uses) or unfused (emits on its own mid grid) — the full mix the
+/// grammar must carry. The chaining grid is always `out_grid()`, so
+/// the generator stays valid either way.
+fn rand_conv(
+    rng: &mut Rng,
+    c_in: usize,
+    c_out: usize,
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+    qa: QParams,
+) -> QuantConv2d {
+    let mut w = vec![0f32; c_out * c_in * ksize * ksize];
+    rng.fill_gaussian(&mut w, 0.5);
+    let nw = if rng.chance(0.5) { 1.0 } else { 7.0 };
+    let qw = QParams::new(rng.range(0.3, 1.0), nw, -1.0);
+    let mid = relu_grid(rng);
+    let next = if rng.chance(0.5) { Some(relu_grid(rng)) } else { None };
+    QuantConv2d::new(&w, c_out, c_in, ksize, stride, pad, qa, qw, mid, next)
+}
+
+/// Geometry threaded through the generator: what the *next* stage sees.
+struct Cursor {
+    ch: usize,
+    h: usize,
+    w: usize,
+    grid: QParams,
+}
+
+/// Append a random conv stack (1-2 layers) to `stages`.
+fn push_stack(rng: &mut Rng, stages: &mut Vec<QuantStage>, cur: &mut Cursor) {
+    let mut layers = Vec::new();
+    for _ in 0..1 + rng.below(2) {
+        let c_out = 1 + rng.below(6);
+        let ksize = if cur.h.min(cur.w) >= 3 && rng.chance(0.6) { 3 } else { 1 };
+        let pad = if ksize == 3 && rng.chance(0.7) { 1 } else { 0 };
+        let stride = if cur.h.min(cur.w) >= 4 && rng.chance(0.3) { 2 } else { 1 };
+        let l = rand_conv(rng, cur.ch, c_out, ksize, stride, pad, cur.grid);
+        cur.grid = l.out_grid();
+        let (h2, w2) = l.out_hw(cur.h, cur.w);
+        cur.h = h2;
+        cur.w = w2;
+        cur.ch = c_out;
+        layers.push(l);
+    }
+    stages.push(QuantStage::FqConv2dStack(FqConv2dStack { layers }));
+}
+
+/// Append a random residual block (two 3x3 body convs, optional strided
+/// / widening 1x1 shortcut projection, fresh join grid).
+fn push_residual(rng: &mut Rng, stages: &mut Vec<QuantStage>, cur: &mut Cursor) {
+    let c2 = 1 + rng.below(6);
+    let stride = if cur.h.min(cur.w) >= 4 && rng.chance(0.4) { 2 } else { 1 };
+    let b1 = rand_conv(rng, cur.ch, c2, 3, stride, 1, cur.grid);
+    let (h2, w2) = b1.out_hw(cur.h, cur.w);
+    let b2 = rand_conv(rng, c2, c2, 3, 1, 1, b1.out_grid());
+    let body_grid = b2.out_grid();
+    let (down, skip_grid) = if stride != 1 || c2 != cur.ch {
+        let d = rand_conv(rng, cur.ch, c2, 1, stride, 0, cur.grid);
+        let g = d.out_grid();
+        (Some(d), g)
+    } else {
+        (None, cur.grid)
+    };
+    let out_grid = relu_grid(rng);
+    let add = AddLut::build(body_grid, skip_grid, out_grid);
+    stages.push(QuantStage::Residual(Residual { body: vec![b1, b2], down, add }));
+    cur.ch = c2;
+    cur.h = h2;
+    cur.w = w2;
+    cur.grid = out_grid;
+}
+
+/// Append a random max pool (window <= extent; stride may exceed the
+/// window — subsampling gaps are part of the grammar).
+fn push_pool(rng: &mut Rng, stages: &mut Vec<QuantStage>, cur: &mut Cursor) {
+    let kmax = cur.h.min(cur.w).min(3);
+    let k = 1 + rng.below(kmax);
+    let s = 1 + rng.below(3);
+    let p = MaxPool2d { ksize: k, stride: s };
+    let (h2, w2) = p.out_hw(cur.h, cur.w);
+    stages.push(QuantStage::MaxPool2d(p));
+    cur.h = h2;
+    cur.w = w2;
+}
+
+/// Generate one valid random spec; returns (stages, h, w).
+fn random_spec(rng: &mut Rng) -> (Vec<QuantStage>, usize, usize) {
+    let c_in = 1 + rng.below(3);
+    let h = 6 + rng.below(6);
+    let w = 6 + rng.below(6);
+    let classes = 2 + rng.below(3);
+    let stem_q = QParams::new(rng.range(0.6, 1.4), NA, -1.0);
+    let mut stages = vec![QuantStage::QuantStem2d(QuantStem2d { c_in, out_q: stem_q })];
+    let mut cur = Cursor { ch: c_in, h, w, grid: stem_q };
+    let mut n_convs = 0usize;
+    for _ in 0..2 + rng.below(3) {
+        match rng.below(3) {
+            0 => {
+                push_stack(rng, &mut stages, &mut cur);
+                n_convs += 1;
+            }
+            1 => {
+                push_residual(rng, &mut stages, &mut cur);
+                n_convs += 1;
+            }
+            _ => push_pool(rng, &mut stages, &mut cur),
+        }
+    }
+    if n_convs == 0 {
+        // the grammar requires at least one conv-bearing stage
+        push_stack(rng, &mut stages, &mut cur);
+    }
+    stages.push(QuantStage::GlobalAvgPool(GlobalAvgPool { channels: cur.ch, dq: cur.grid }));
+    let mut hw = vec![0f32; cur.ch * classes];
+    rng.fill_gaussian(&mut hw, 0.5);
+    stages.push(QuantStage::DenseHead(DenseHead {
+        w: hw,
+        b: vec![0.0; classes],
+        d_in: cur.ch,
+        d_out: classes,
+    }));
+    (stages, h, w)
+}
+
+#[test]
+fn fuzz_random_2d_graphs_match_the_im2col_oracle() {
+    let mut rng = Rng::new(0xF0_22D_5EED);
+    let mut built = 0usize;
+    let mut pooled_specs = 0usize;
+    for spec_i in 0..60 {
+        let (stages, h, w) = random_spec(&mut rng);
+        let has_pool = stages.iter().any(|s| matches!(s, QuantStage::MaxPool2d(_)));
+        pooled_specs += usize::from(has_pool);
+        let g = QuantGraph::new_2d(stages, h, w)
+            .unwrap_or_else(|e| panic!("spec {spec_i}: generator produced an invalid graph: {e}"));
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 0.5);
+        let want = forward_reference_2d(&g, &x);
+        assert!(want.iter().all(|v| v.is_finite()), "spec {spec_i}: non-finite logits");
+
+        let mut s = Scratch::for_graph(&g);
+        let planned = s.capacities();
+        for threads in [1usize, 2, 4] {
+            let mut logits = vec![0f32; g.classes()];
+            g.forward_into(&x, &mut s, &mut logits, threads);
+            assert_eq!(
+                logits,
+                want,
+                "spec {spec_i} pool={threads}: direct engine diverged from the oracle"
+            );
+        }
+        assert_eq!(
+            s.capacities(),
+            planned,
+            "spec {spec_i}: three forwards outgrew the planned scratch"
+        );
+        built += 1;
+    }
+    assert!(built >= 50, "fuzz sweep must cover >= 50 specs, got {built}");
+    assert!(pooled_specs >= 10, "sweep barely exercised pooling: {pooled_specs} specs");
+}
+
+// ---------------------------------------------------------------------------
+// Rejection sweep: one mutated field per spec => one typed error
+// ---------------------------------------------------------------------------
+
+/// Every single-field mutation the sweep applies to the valid base spec.
+#[derive(Clone, Copy, Debug)]
+enum Mutation {
+    None,
+    DropStem,
+    StemZeroChannels,
+    ConvChannelMismatch,
+    EmptyStack,
+    PoolWiderThanExtent,
+    PoolZeroKsize,
+    PoolZeroStride,
+    MissingProjection,
+    AddLutBodyGridMismatch,
+    AddLutSkipGridMismatch,
+    GapChannelMismatch,
+    GapGridMismatch,
+    HeadDinMismatch,
+    HeadWeightNumel,
+    MissingTail,
+    TrailingStage,
+    NoConvStages,
+}
+
+/// Build the base spec (stem → 2-conv stack → 2x2/2 pool → strided
+/// residual → GAP → head on 8x8 inputs), with `m` mutating exactly one
+/// field. `Mutation::None` must validate; everything else must fail
+/// with a typed error.
+fn build_spec(m: Mutation) -> Vec<QuantStage> {
+    use Mutation as M;
+    let mut rng = Rng::new(99);
+    let stem_q = QParams::new(1.0, NA, -1.0);
+    let stem_ch = if matches!(m, M::StemZeroChannels) { 0 } else { 2 };
+    let mut stages = vec![QuantStage::QuantStem2d(QuantStem2d { c_in: stem_ch, out_q: stem_q })];
+    if matches!(m, M::DropStem) {
+        stages.clear();
+    }
+
+    // conv stack: 2 -> 4 -> 4 channels on the 8x8 extent
+    let c1 = rand_conv(&mut rng, 2, 4, 3, 1, 1, stem_q);
+    let c1_grid = c1.out_grid();
+    let c2_in = if matches!(m, M::ConvChannelMismatch) { 5 } else { 4 };
+    let c2 = rand_conv(&mut rng, c2_in, 4, 3, 1, 1, c1_grid);
+    let stack_grid = c2.out_grid();
+    let layers = if matches!(m, M::EmptyStack) { Vec::new() } else { vec![c1, c2] };
+    if !matches!(m, M::NoConvStages) {
+        stages.push(QuantStage::FqConv2dStack(FqConv2dStack { layers }));
+    }
+
+    // pool: 8x8 -> 4x4
+    let pool = match m {
+        M::PoolWiderThanExtent => MaxPool2d { ksize: 9, stride: 1 },
+        M::PoolZeroKsize => MaxPool2d { ksize: 0, stride: 2 },
+        M::PoolZeroStride => MaxPool2d { ksize: 2, stride: 0 },
+        _ => MaxPool2d { ksize: 2, stride: 2 },
+    };
+    stages.push(QuantStage::MaxPool2d(pool));
+
+    // strided, widening residual: 4ch 4x4 -> 6ch 2x2 (projection required)
+    let b1 = rand_conv(&mut rng, 4, 6, 3, 2, 1, stack_grid);
+    let b2 = rand_conv(&mut rng, 6, 6, 3, 1, 1, b1.out_grid());
+    let body_grid = b2.out_grid();
+    let down = rand_conv(&mut rng, 4, 6, 1, 2, 0, stack_grid);
+    let skip_grid = down.out_grid();
+    let join_grid = QParams::new(0.9, NA, 0.0);
+    let wrong = QParams::new(0.123, NA, 0.0);
+    let add = match m {
+        M::AddLutBodyGridMismatch => AddLut::build(wrong, skip_grid, join_grid),
+        M::AddLutSkipGridMismatch => AddLut::build(body_grid, wrong, join_grid),
+        _ => AddLut::build(body_grid, skip_grid, join_grid),
+    };
+    let down = if matches!(m, M::MissingProjection) { None } else { Some(down) };
+    if !matches!(m, M::NoConvStages) {
+        stages.push(QuantStage::Residual(Residual { body: vec![b1, b2], down, add }));
+    }
+
+    // tail: GAP over 6 channels on the join grid, head to 3 classes
+    if matches!(m, M::MissingTail) {
+        return stages;
+    }
+    let (gap_ch, gap_grid) = match m {
+        M::GapChannelMismatch => (7, join_grid),
+        M::GapGridMismatch => (6, wrong),
+        // without conv stages the live grid is still the stem's
+        M::NoConvStages => (2, stem_q),
+        _ => (6, join_grid),
+    };
+    stages.push(QuantStage::GlobalAvgPool(GlobalAvgPool { channels: gap_ch, dq: gap_grid }));
+    let d_in = if matches!(m, M::HeadDinMismatch) { 5 } else { gap_ch };
+    let numel = if matches!(m, M::HeadWeightNumel) { d_in * 3 + 1 } else { d_in * 3 };
+    stages.push(QuantStage::DenseHead(DenseHead {
+        w: vec![0.1; numel],
+        b: vec![0.0; 3],
+        d_in,
+        d_out: 3,
+    }));
+    if matches!(m, M::TrailingStage) {
+        stages.push(QuantStage::MaxPool2d(MaxPool2d { ksize: 1, stride: 1 }));
+    }
+    stages
+}
+
+#[test]
+fn mutated_specs_fail_with_typed_errors_not_panics() {
+    // the unmutated base spec is valid...
+    let g = QuantGraph::new_2d(build_spec(Mutation::None), 8, 8).expect("base spec");
+    assert_eq!(g.classes(), 3);
+    // ...and every single-field mutation is refused with a typed error
+    // (an Err from the constructor — the sweep itself proves no panic)
+    for m in [
+        Mutation::DropStem,
+        Mutation::StemZeroChannels,
+        Mutation::ConvChannelMismatch,
+        Mutation::EmptyStack,
+        Mutation::PoolWiderThanExtent,
+        Mutation::PoolZeroKsize,
+        Mutation::PoolZeroStride,
+        Mutation::MissingProjection,
+        Mutation::AddLutBodyGridMismatch,
+        Mutation::AddLutSkipGridMismatch,
+        Mutation::GapChannelMismatch,
+        Mutation::GapGridMismatch,
+        Mutation::HeadDinMismatch,
+        Mutation::HeadWeightNumel,
+        Mutation::MissingTail,
+        Mutation::TrailingStage,
+        Mutation::NoConvStages,
+    ] {
+        let err = QuantGraph::new_2d(build_spec(m), 8, 8);
+        assert!(err.is_err(), "{m:?}: mutated spec must be rejected");
+        // errors are descriptive (they name a stage or a constraint)
+        let msg = err.unwrap_err().to_string();
+        assert!(!msg.is_empty(), "{m:?}: empty error message");
+    }
+}

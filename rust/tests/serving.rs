@@ -553,6 +553,112 @@ fn registry_serves_resnet32_alongside_a_kws_model() {
 }
 
 #[test]
+fn registry_serves_batched_2d_models_bit_identically_at_1_2_4_workers() {
+    // the batched-2-D acceptance pin: resnet32 AND darknet19 registered
+    // in one registry, mixed batch>1 traffic, and every served logit
+    // row bit-identical to the offline forward_into of the same sample
+    // — at 1, 2 and 4 workers (exercises the new sample-parallel
+    // GraphBackend batch path at several pool shapes)
+    let resnet =
+        Arc::new(synthetic_graph(&SynthArch::resnet32(), 1.0, 7.0, 7).expect("resnet32"));
+    let dark =
+        Arc::new(synthetic_graph(&SynthArch::darknet19(), 1.0, 7.0, 7).expect("darknet19"));
+    let mut rng = Rng::new(77);
+    let (n_res, n_dark) = (3usize, 2usize);
+    let res_x: Vec<Vec<f32>> = (0..n_res)
+        .map(|_| {
+            let mut v = vec![0f32; resnet.in_numel()];
+            rng.fill_gaussian(&mut v, 0.5);
+            v
+        })
+        .collect();
+    let dark_x: Vec<Vec<f32>> = (0..n_dark)
+        .map(|_| {
+            let mut v = vec![0f32; dark.in_numel()];
+            rng.fill_gaussian(&mut v, 0.5);
+            v
+        })
+        .collect();
+    let mut rs = Scratch::for_graph(&resnet);
+    let res_want: Vec<Vec<f32>> = res_x.iter().map(|x| resnet.forward(x, &mut rs)).collect();
+    let mut ds = Scratch::for_graph(&dark);
+    let dark_want: Vec<Vec<f32>> = dark_x.iter().map(|x| dark.forward(x, &mut ds)).collect();
+
+    let (rid, did) = (ModelId::new("resnet32"), ModelId::new("darknet19"));
+    for workers in [1usize, 2, 4] {
+        let registry = ModelRegistry::start(workers);
+        // max_batch == the traffic size with a generous wait: every
+        // model's requests close into one batch > 1 by count
+        registry
+            .register(
+                rid.as_str(),
+                ModelSpec {
+                    factory: GraphBackend::factory_sharded(&resnet, workers),
+                    sample_numel: resnet.in_numel(),
+                    policy: BatchPolicy::new(n_res, 500_000),
+                },
+            )
+            .expect("register resnet32");
+        registry
+            .register(
+                did.as_str(),
+                ModelSpec {
+                    factory: GraphBackend::factory_sharded(&dark, workers),
+                    sample_numel: dark.in_numel(),
+                    policy: BatchPolicy::new(n_dark, 500_000),
+                },
+            )
+            .expect("register darknet19");
+        let rrx: Vec<_> =
+            res_x.iter().map(|x| registry.submit(&rid, x.clone()).expect("registered")).collect();
+        let drx: Vec<_> =
+            dark_x.iter().map(|x| registry.submit(&did, x.clone()).expect("registered")).collect();
+        let mut max_batch = 0usize;
+        for (i, rx) in rrx.into_iter().enumerate() {
+            let resp = rx.recv().expect("reply").expect("served");
+            assert_eq!(resp.logits, res_want[i], "workers={workers} resnet sample {i} diverged");
+            max_batch = max_batch.max(resp.batch_size);
+        }
+        for (i, rx) in drx.into_iter().enumerate() {
+            let resp = rx.recv().expect("reply").expect("served");
+            assert_eq!(resp.logits, dark_want[i], "workers={workers} darknet sample {i} diverged");
+            max_batch = max_batch.max(resp.batch_size);
+        }
+        assert!(
+            max_batch >= 2,
+            "workers={workers}: traffic never formed a batch > 1 — the batched path \
+             went unexercised"
+        );
+        let stats = registry.stats();
+        assert_eq!(stats.served, (n_res + n_dark) as u64);
+        registry.shutdown();
+    }
+}
+
+#[test]
+fn graph_backend_batch_output_bit_identical_across_intra_budgets() {
+    // regression for the batch>1 thread-budget drop: GraphBackend used
+    // to run every batched sample with threads=1 regardless of
+    // intra_threads; now the budget fans out across samples — and the
+    // output must stay bit-identical at every budget
+    let g = Arc::new(synthetic_graph(&SynthArch::resnet("resnet8", 1), 1.0, 7.0, 11).expect("r8"));
+    let b = 5usize;
+    let mut rng = Rng::new(21);
+    let mut flat = vec![0f32; b * g.in_numel()];
+    rng.fill_gaussian(&mut flat, 0.5);
+    // reference: the offline sequential walk
+    let mut s = Scratch::for_graph(&g);
+    let mut want = vec![0f32; b * g.classes()];
+    g.forward_rows(&flat, &mut s, &mut want);
+    for intra in [1usize, 2, 3, 8] {
+        let mut backend = GraphBackend::with_intra_threads(Arc::clone(&g), intra);
+        let mut out = vec![0f32; b * g.classes()];
+        backend.infer_into(&flat, b, &mut out).expect("infer");
+        assert_eq!(out, want, "intra={intra}: batched backend diverged");
+    }
+}
+
+#[test]
 fn evicted_model_rejects_new_submits_but_other_models_survive() {
     let registry = ModelRegistry::start(1);
     let calls = Arc::new(AtomicUsize::new(0));
