@@ -1,0 +1,43 @@
+//! In-tree concurrency model checking and the `check::sync` facade.
+//!
+//! The engine's fork-join pool and the serving registry are condvar/lock
+//! protocols whose correctness depends on *which* interleavings the OS
+//! happens to produce under test. This module closes that gap without
+//! vendoring loom/shuttle (no new dependencies in this image):
+//!
+//! - `check::sync` is a drop-in facade over `std::sync` primitives
+//!   (`Mutex`, `Condvar`, `RwLock`, the atomics the engine uses, and
+//!   named thread spawning). In a normal build it re-exports `std::sync`
+//!   types verbatim — zero cost, zero behavior change. Under
+//!   `--features model-check` the same names resolve to wrappers that
+//!   route every operation through a controlled scheduler.
+//! - `check::sched` (model-check builds only) serializes the "threads"
+//!   of a model run onto one runnable-at-a-time schedule and explores
+//!   the tree of scheduling decisions: depth-first over yield points
+//!   with a bounded-preemption budget, falling back to seeded random
+//!   schedules for state spaces larger than the DFS cap. It detects
+//!   deadlock (which is also how a lost notify manifests), panics /
+//!   assertion failures inside the model, and reports a replayable
+//!   schedule trace for any failure.
+//!
+//! Rules for engine code (enforced by `cargo xtask lint`):
+//!
+//! - Concurrency-bearing modules (`exec`, `serve`, `infer::graph`) must
+//!   import `Mutex`/`Condvar`/`RwLock` from `crate::check::sync`, never
+//!   from `std::sync` directly. `Arc`, `OnceLock`, `mpsc` and
+//!   `atomic::Ordering` stay in `std::sync` — the facade does not wrap
+//!   them.
+//! - Threads are spawned through `check::sync::spawn_named` so model
+//!   runs can capture them.
+//!
+//! Model tests live in `rust/tests/model_check.rs` and run with
+//! `cargo test -p fqconv --features model-check --test model_check`.
+//! See CONCURRENCY.md at the repo root for the protocol invariants the
+//! model tests pin.
+
+#[cfg(feature = "model-check")]
+pub mod sched;
+pub mod sync;
+
+#[cfg(feature = "model-check")]
+pub use sched::{check, check_with, replay, Config, Failure, FailureKind, Report};

@@ -1,0 +1,736 @@
+//! Controlled scheduler behind the `check::sync` facade (model-check
+//! builds only).
+//!
+//! A model run executes the checked closure on real OS threads, but
+//! serialized: exactly one model thread is runnable at a time, and it
+//! only advances to the next *yield point* (a facade operation — lock
+//! acquire, condvar wait/notify, atomic access, spawn) before the
+//! scheduler decides who runs next. Every decision picks an index into
+//! a deterministic candidate list (the current thread first if still
+//! runnable, then the other runnable threads in id order), so a run is
+//! fully described by the sequence of chosen indices — the *schedule*.
+//!
+//! Exploration is a stateless depth-first search over that decision
+//! tree in the CHESS style: re-run the closure from scratch with a
+//! schedule prefix, record the branching factor at each decision, and
+//! backtrack on the deepest incrementable choice. Switching away from a
+//! thread that could have kept running costs one unit of the
+//! *preemption budget* (`Config::preemptions`); once spent, only forced
+//! switches (current thread blocked or finished) branch. Bounded
+//! preemption keeps the tree finite and small while still covering the
+//! schedules that break real condvar protocols. Past `max_execs` the
+//! search falls back to `random_execs` seeded random schedules.
+//!
+//! Detected failures:
+//! - **deadlock / lost notify** — no thread is runnable but some are
+//!   unfinished (a dropped or misordered `notify` strands waiters here);
+//! - **panic** — any assertion or panic inside the model closure.
+//!
+//! Every failure carries the choice sequence that produced it;
+//! `replay` re-runs a closure under a recorded schedule.
+
+use std::cell::Cell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard, OnceLock};
+use std::thread;
+
+// ---------------------------------------------------------------------------
+// public API types
+// ---------------------------------------------------------------------------
+
+/// Exploration limits for [`check_with`].
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Budget of voluntary context switches (switching away from a
+    /// still-runnable thread) per execution. Forced switches are free.
+    pub preemptions: usize,
+    /// Cap on DFS executions before falling back to random schedules.
+    pub max_execs: usize,
+    /// Number of seeded random executions if the DFS cap is hit.
+    pub random_execs: usize,
+    /// Seed for the random fallback (and for nothing else — DFS is
+    /// deterministic).
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { preemptions: 2, max_execs: 20_000, random_execs: 2_000, seed: 0x5eed_cafe }
+    }
+}
+
+/// What kind of failure the checker found.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// No runnable thread but unfinished threads remain (includes lost
+    /// wakeups: the stranded waiter shows up in the message).
+    Deadlock,
+    /// A model thread panicked (assertion failure, index error, ...).
+    Panic,
+}
+
+/// A failing schedule with enough context to diagnose and replay it.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub kind: FailureKind,
+    /// Human-readable description (panic message or blocked-thread set).
+    pub message: String,
+    /// The choice-index sequence that reproduces this failure via
+    /// [`replay`].
+    pub schedule: Vec<usize>,
+    /// Per-yield-point log of the failing execution: `tN name: op`.
+    pub trace: Vec<String>,
+}
+
+/// Outcome of a [`check_with`] exploration.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Number of executions run (DFS + random).
+    pub execs: usize,
+    /// True iff the DFS exhausted the whole bounded-preemption tree.
+    pub complete: bool,
+    /// First failure found, if any (exploration stops at the first).
+    pub failure: Option<Failure>,
+}
+
+// ---------------------------------------------------------------------------
+// scheduler state
+// ---------------------------------------------------------------------------
+
+/// Panic payload used to unwind model threads when an execution aborts
+/// (failure found or exploration tearing down). Never escapes `check`.
+struct Abort;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BlockOn {
+    /// Waiting to acquire a mutex/rwlock (resource id).
+    Resource(usize),
+    /// Waiting on a condvar (condvar id, FIFO arrival order).
+    Condvar(usize, u64),
+    /// Waiting for a model thread to finish (thread id).
+    Join(usize),
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum ThreadState {
+    Runnable,
+    Blocked(BlockOn),
+    Finished,
+}
+
+struct ModelThread {
+    name: String,
+    state: ThreadState,
+}
+
+#[derive(Clone, Copy)]
+struct Choice {
+    /// Chosen index into the candidate list at this decision point.
+    idx: usize,
+    /// Number of candidates that were available.
+    n: usize,
+}
+
+struct SchedState {
+    /// True while an execution is in flight. Facade ops from threads
+    /// without a model id (plain test threads) never consult this.
+    active: bool,
+    threads: Vec<ModelThread>,
+    /// Id of the thread currently granted the CPU.
+    current: usize,
+    /// Unfinished model threads.
+    live: usize,
+    /// Prescribed choice-index prefix for this execution.
+    schedule: Vec<usize>,
+    /// Next decision index.
+    depth: usize,
+    /// Choices actually taken this execution (idx + branching factor).
+    choices: Vec<Choice>,
+    preemptions: usize,
+    budget: usize,
+    /// Some(rng-state): past the schedule prefix, choose randomly
+    /// instead of defaulting to index 0.
+    rng: Option<u64>,
+    /// FIFO ticket counter for condvar waiters.
+    wait_seq: u64,
+    aborted: bool,
+    failure: Option<Failure>,
+    /// (thread id, op label) per yield point; rendered only on failure.
+    trace: Vec<(usize, &'static str)>,
+    /// OS handles of threads spawned inside the model, joined by the
+    /// controller after each execution.
+    os_handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl SchedState {
+    fn idle() -> Self {
+        SchedState {
+            active: false,
+            threads: Vec::new(),
+            current: 0,
+            live: 0,
+            schedule: Vec::new(),
+            depth: 0,
+            choices: Vec::new(),
+            preemptions: 0,
+            budget: 0,
+            rng: None,
+            wait_seq: 0,
+            aborted: false,
+            failure: None,
+            trace: Vec::new(),
+            os_handles: Vec::new(),
+        }
+    }
+
+    fn rendered_trace(&self) -> Vec<String> {
+        self.trace
+            .iter()
+            .map(|&(tid, op)| {
+                let name = self.threads.get(tid).map(|t| t.name.as_str()).unwrap_or("?");
+                format!("t{tid} {name}: {op}")
+            })
+            .collect()
+    }
+
+    fn taken_schedule(&self) -> Vec<usize> {
+        self.choices.iter().map(|c| c.idx).collect()
+    }
+}
+
+struct Global {
+    lock: StdMutex<SchedState>,
+    cv: StdCondvar,
+}
+
+fn global() -> &'static Global {
+    static G: OnceLock<Global> = OnceLock::new();
+    G.get_or_init(|| Global { lock: StdMutex::new(SchedState::idle()), cv: StdCondvar::new() })
+}
+
+/// Serializes whole model runs: `cargo test` runs tests on parallel
+/// threads, and the scheduler is a process-global singleton.
+fn run_lock() -> &'static StdMutex<()> {
+    static L: OnceLock<StdMutex<()>> = OnceLock::new();
+    L.get_or_init(|| StdMutex::new(()))
+}
+
+thread_local! {
+    /// Model-thread id of the current OS thread, if it is one.
+    static TL_ID: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+fn tl_id() -> Option<usize> {
+    TL_ID.with(|c| c.get())
+}
+
+/// True iff the calling OS thread is a thread of an in-flight model
+/// execution. The facade uses this as its model/std dispatch switch.
+pub(crate) fn on_model_thread() -> bool {
+    tl_id().is_some()
+}
+
+/// Fresh id for a facade mutex/rwlock/condvar (used as the blocked-set
+/// key; allocation order is irrelevant to exploration).
+pub(crate) fn new_resource_id() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+fn lock_state() -> StdMutexGuard<'static, SchedState> {
+    global().lock.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn lcg(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+// ---------------------------------------------------------------------------
+// core scheduling
+// ---------------------------------------------------------------------------
+
+/// Record a failure and abort the execution. The caller must
+/// `cv.notify_all()` afterwards so blocked threads unwind.
+fn fail(st: &mut SchedState, kind: FailureKind, message: String) {
+    if st.failure.is_none() {
+        st.failure = Some(Failure {
+            kind,
+            message,
+            schedule: st.taken_schedule(),
+            trace: st.rendered_trace(),
+        });
+    }
+    st.aborted = true;
+}
+
+/// Make a scheduling decision: pick the next thread to run and set
+/// `current`. `me` is the deciding thread (it may be blocked or
+/// finished — then the switch is forced and free). Detects deadlock.
+fn pick_next(st: &mut SchedState, me: usize) {
+    if st.aborted || st.live == 0 {
+        return;
+    }
+    let me_runnable = matches!(st.threads[me].state, ThreadState::Runnable);
+    // Candidates: current-thread-first (continuing is the free default),
+    // then the other runnable threads in id order.
+    let mut cands: Vec<usize> = Vec::new();
+    if me_runnable {
+        cands.push(me);
+    }
+    for (tid, t) in st.threads.iter().enumerate() {
+        if tid != me && matches!(t.state, ThreadState::Runnable) {
+            cands.push(tid);
+        }
+    }
+    if cands.is_empty() {
+        let blocked: Vec<String> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter_map(|(tid, t)| match &t.state {
+                ThreadState::Blocked(on) => {
+                    Some(format!("t{tid} {} blocked on {:?}", t.name, on))
+                }
+                _ => None,
+            })
+            .collect();
+        fail(
+            st,
+            FailureKind::Deadlock,
+            format!("deadlock: no runnable thread; {}", blocked.join("; ")),
+        );
+        return;
+    }
+    // Out of preemption budget: the current thread must keep running.
+    if me_runnable && cands.len() > 1 && st.preemptions >= st.budget {
+        cands.truncate(1);
+    }
+    let idx = if st.depth < st.schedule.len() {
+        st.schedule[st.depth].min(cands.len() - 1)
+    } else if let Some(rng) = st.rng.as_mut() {
+        (lcg(rng) as usize) % cands.len()
+    } else {
+        0
+    };
+    st.choices.push(Choice { idx, n: cands.len() });
+    st.depth += 1;
+    let next = cands[idx];
+    if me_runnable && next != me {
+        st.preemptions += 1;
+    }
+    st.current = next;
+}
+
+/// Park the calling OS thread until the scheduler grants it the CPU
+/// (or the execution aborts, in which case unwind via `Abort`).
+fn wait_granted(mut st: StdMutexGuard<'_, SchedState>, me: usize) {
+    loop {
+        if st.aborted {
+            drop(st);
+            panic::panic_any(Abort);
+        }
+        if st.current == me && matches!(st.threads[me].state, ThreadState::Runnable) {
+            return;
+        }
+        st = global().cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// Yield point: give the scheduler a chance to switch threads before
+/// the caller's next facade operation. No-op off model threads.
+pub(crate) fn op_yield(op: &'static str) {
+    let Some(me) = tl_id() else { return };
+    let mut st = lock_state();
+    if !st.active {
+        return;
+    }
+    st.trace.push((me, op));
+    pick_next(&mut st, me);
+    global().cv.notify_all();
+    wait_granted(st, me);
+}
+
+/// Block the calling model thread on a mutex/rwlock until `release`
+/// wakes it. The caller retries its `try_lock` after this returns.
+pub(crate) fn block_resource(id: usize, op: &'static str) {
+    let Some(me) = tl_id() else { return };
+    let mut st = lock_state();
+    if !st.active {
+        return;
+    }
+    st.trace.push((me, op));
+    st.threads[me].state = ThreadState::Blocked(BlockOn::Resource(id));
+    pick_next(&mut st, me);
+    global().cv.notify_all();
+    wait_granted(st, me);
+}
+
+/// A mutex/rwlock was released: every thread blocked on it becomes
+/// runnable again (they re-contend at their next grant). Not itself a
+/// yield point — the releasing thread keeps the CPU.
+pub(crate) fn release(id: usize) {
+    if tl_id().is_none() {
+        return;
+    }
+    let mut st = lock_state();
+    if !st.active || st.aborted {
+        return;
+    }
+    for t in st.threads.iter_mut() {
+        if t.state == ThreadState::Blocked(BlockOn::Resource(id)) {
+            t.state = ThreadState::Runnable;
+        }
+    }
+    global().cv.notify_all();
+}
+
+/// Enqueue the calling thread as a condvar waiter. Must be called
+/// *before* the associated mutex guard is dropped so the
+/// wait-atomicity contract holds (no yield point in between: the
+/// caller keeps the CPU until `cv_block`).
+pub(crate) fn cv_enqueue(id: usize) {
+    let Some(me) = tl_id() else { return };
+    let mut st = lock_state();
+    if !st.active {
+        return;
+    }
+    let seq = st.wait_seq;
+    st.wait_seq += 1;
+    st.trace.push((me, "cv-wait"));
+    st.threads[me].state = ThreadState::Blocked(BlockOn::Condvar(id, seq));
+}
+
+/// Park until a notify wakes this thread (enqueued via `cv_enqueue`).
+pub(crate) fn cv_block() {
+    let Some(me) = tl_id() else { return };
+    let mut st = lock_state();
+    if !st.active {
+        return;
+    }
+    pick_next(&mut st, me);
+    global().cv.notify_all();
+    wait_granted(st, me);
+}
+
+/// Wake one (FIFO) or all waiters of a condvar. The caller should pass
+/// through an `op_yield` first so the notify placement is explored.
+pub(crate) fn cv_wake(id: usize, all: bool) {
+    if tl_id().is_none() {
+        return;
+    }
+    let mut st = lock_state();
+    if !st.active || st.aborted {
+        return;
+    }
+    let mut waiters: Vec<(u64, usize)> = st
+        .threads
+        .iter()
+        .enumerate()
+        .filter_map(|(tid, t)| match t.state {
+            ThreadState::Blocked(BlockOn::Condvar(cid, seq)) if cid == id => Some((seq, tid)),
+            _ => None,
+        })
+        .collect();
+    waiters.sort_unstable();
+    if !all {
+        waiters.truncate(1);
+    }
+    for &(_, tid) in &waiters {
+        st.threads[tid].state = ThreadState::Runnable;
+    }
+    global().cv.notify_all();
+}
+
+/// Block until model thread `target` finishes.
+pub(crate) fn join_wait(target: usize) {
+    let Some(me) = tl_id() else { return };
+    loop {
+        let mut st = lock_state();
+        if !st.active {
+            return;
+        }
+        if st.aborted {
+            drop(st);
+            panic::panic_any(Abort);
+        }
+        if matches!(st.threads[target].state, ThreadState::Finished) {
+            return;
+        }
+        st.trace.push((me, "join"));
+        st.threads[me].state = ThreadState::Blocked(BlockOn::Join(target));
+        pick_next(&mut st, me);
+        global().cv.notify_all();
+        wait_granted(st, me);
+    }
+}
+
+/// True iff model thread `target` has finished.
+pub(crate) fn is_finished(target: usize) -> bool {
+    let st = lock_state();
+    st.active && matches!(st.threads.get(target).map(|t| &t.state), Some(ThreadState::Finished))
+}
+
+fn payload_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// Final bookkeeping for a model thread. `panic_msg` is `Some` for a
+/// real (non-`Abort`) panic, which becomes the execution's failure.
+fn finish_thread(me: usize, panic_msg: Option<String>) {
+    let mut st = lock_state();
+    if !st.active {
+        return;
+    }
+    if let Some(msg) = panic_msg {
+        if !st.aborted {
+            fail(&mut st, FailureKind::Panic, format!("model thread t{me} panicked: {msg}"));
+        }
+    }
+    st.threads[me].state = ThreadState::Finished;
+    st.live -= 1;
+    for t in st.threads.iter_mut() {
+        if t.state == ThreadState::Blocked(BlockOn::Join(me)) {
+            t.state = ThreadState::Runnable;
+        }
+    }
+    if st.live > 0 && !st.aborted {
+        pick_next(&mut st, me);
+    }
+    global().cv.notify_all();
+}
+
+// ---------------------------------------------------------------------------
+// model thread spawning
+// ---------------------------------------------------------------------------
+
+type ResultSlot<T> = std::sync::Arc<StdMutex<Option<thread::Result<T>>>>;
+
+/// Handle to a thread spawned inside a model execution.
+pub(crate) struct ModelHandle<T> {
+    tid: usize,
+    result: ResultSlot<T>,
+}
+
+impl<T> ModelHandle<T> {
+    pub(crate) fn join(self) -> thread::Result<T> {
+        join_wait(self.tid);
+        let out = self.result.lock().unwrap_or_else(|e| e.into_inner()).take();
+        out.expect("model thread finished without storing a result")
+    }
+
+    pub(crate) fn is_finished(&self) -> bool {
+        is_finished(self.tid)
+    }
+}
+
+/// Body shared by the model main thread and model-spawned threads:
+/// adopt the id, wait for the first grant, run, record, finish.
+fn model_thread_body<T, F>(tid: usize, f: F, result: &ResultSlot<T>)
+where
+    F: FnOnce() -> T,
+{
+    TL_ID.with(|c| c.set(Some(tid)));
+    let out = panic::catch_unwind(AssertUnwindSafe(|| {
+        wait_granted(lock_state(), tid);
+        f()
+    }));
+    match out {
+        Ok(v) => {
+            *result.lock().unwrap_or_else(|e| e.into_inner()) = Some(Ok(v));
+            finish_thread(tid, None);
+        }
+        Err(p) => {
+            if p.downcast_ref::<Abort>().is_some() {
+                finish_thread(tid, None);
+            } else {
+                let msg = payload_message(p.as_ref());
+                *result.lock().unwrap_or_else(|e| e.into_inner()) = Some(Err(p));
+                finish_thread(tid, Some(msg));
+            }
+        }
+    }
+}
+
+/// Spawn a thread inside the current model execution. Registers it as
+/// runnable and passes through a yield point so the scheduler can run
+/// the child before the parent's next step.
+pub(crate) fn spawn_model<T, F>(name: &str, f: F) -> ModelHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    assert!(on_model_thread(), "spawn_model called off a model thread");
+    let result: ResultSlot<T> = std::sync::Arc::new(StdMutex::new(None));
+    let tid;
+    {
+        let mut st = lock_state();
+        assert!(st.active, "spawn_model outside an execution");
+        tid = st.threads.len();
+        st.threads.push(ModelThread { name: name.to_string(), state: ThreadState::Runnable });
+        st.live += 1;
+        let slot = result.clone();
+        let os = thread::Builder::new()
+            .name(format!("model-{name}"))
+            .spawn(move || model_thread_body(tid, f, &slot))
+            .expect("spawn model OS thread");
+        st.os_handles.push(os);
+    }
+    op_yield("spawn");
+    ModelHandle { tid, result }
+}
+
+// ---------------------------------------------------------------------------
+// controller
+// ---------------------------------------------------------------------------
+
+/// Suppress panic output from model threads: their panics are captured
+/// as `Failure`s (and `Abort` unwinds are pure control flow). Installed
+/// once; delegates to the previous hook for ordinary threads.
+fn install_quiet_panic_hook() {
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if !on_model_thread() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Run the closure once under `schedule` (defaulting to choice 0 — or
+/// random, if `rng` — past its end). Returns the recorded choices and
+/// any failure.
+fn run_one(
+    f: &std::sync::Arc<dyn Fn() + Send + Sync>,
+    schedule: &[usize],
+    budget: usize,
+    rng: Option<u64>,
+) -> (Vec<Choice>, Option<Failure>) {
+    let g = global();
+    {
+        let mut st = lock_state();
+        *st = SchedState::idle();
+        st.active = true;
+        st.schedule = schedule.to_vec();
+        st.budget = budget;
+        st.rng = rng;
+        st.threads.push(ModelThread { name: "main".to_string(), state: ThreadState::Runnable });
+        st.live = 1;
+        st.current = 0;
+        let f = f.clone();
+        let result: ResultSlot<()> = std::sync::Arc::new(StdMutex::new(None));
+        let os = thread::Builder::new()
+            .name("model-main".to_string())
+            .spawn(move || model_thread_body(0, move || f(), &result))
+            .expect("spawn model main thread");
+        st.os_handles.push(os);
+    }
+    g.cv.notify_all();
+    let mut st = g.lock.lock().unwrap_or_else(|e| e.into_inner());
+    while st.live > 0 {
+        st = g.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+    st.active = false;
+    let choices = std::mem::take(&mut st.choices);
+    let failure = st.failure.take();
+    let handles = std::mem::take(&mut st.os_handles);
+    drop(st);
+    for h in handles {
+        let _ = h.join();
+    }
+    (choices, failure)
+}
+
+/// Deepest-incrementable-choice backtracking: the next DFS schedule
+/// after an execution that took `choices`, or `None` when the bounded
+/// tree is exhausted.
+fn next_schedule(choices: &[Choice]) -> Option<Vec<usize>> {
+    for (i, c) in choices.iter().enumerate().rev() {
+        if c.idx + 1 < c.n {
+            let mut s: Vec<usize> = choices[..i].iter().map(|x| x.idx).collect();
+            s.push(c.idx + 1);
+            return Some(s);
+        }
+    }
+    None
+}
+
+/// Explore `f` under the default [`Config`].
+pub fn check<F>(f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    check_with(Config::default(), f)
+}
+
+/// Explore every schedule of `f` within the bounded-preemption DFS
+/// tree (up to `cfg.max_execs`), then `cfg.random_execs` seeded random
+/// schedules if the tree was not exhausted. Stops at the first failure.
+///
+/// `f` runs many times and must be self-contained: build all state
+/// inside the closure, spawn via `check::sync::spawn_named`, and keep
+/// it deterministic apart from scheduling.
+pub fn check_with<F>(cfg: Config, f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let _serial = run_lock().lock().unwrap_or_else(|e| e.into_inner());
+    install_quiet_panic_hook();
+    let f: std::sync::Arc<dyn Fn() + Send + Sync> = std::sync::Arc::new(f);
+    let mut schedule: Vec<usize> = Vec::new();
+    let mut execs = 0usize;
+    let mut complete = false;
+    while execs < cfg.max_execs {
+        execs += 1;
+        let (choices, failure) = run_one(&f, &schedule, cfg.preemptions, None);
+        if failure.is_some() {
+            return Report { execs, complete: false, failure };
+        }
+        match next_schedule(&choices) {
+            Some(next) => schedule = next,
+            None => {
+                complete = true;
+                break;
+            }
+        }
+    }
+    if !complete {
+        let mut seed = cfg.seed | 1;
+        for _ in 0..cfg.random_execs {
+            execs += 1;
+            let rng = lcg(&mut seed).wrapping_mul(2) | 1;
+            let (_, failure) = run_one(&f, &[], cfg.preemptions, Some(rng));
+            if failure.is_some() {
+                return Report { execs, complete: false, failure };
+            }
+        }
+    }
+    Report { execs, complete, failure: None }
+}
+
+/// Re-run `f` once under a recorded failing schedule (from
+/// `Failure::schedule`). Choices past the end of the schedule default
+/// to index 0, mirroring the DFS. Returns that single execution's
+/// outcome.
+pub fn replay<F>(f: F, schedule: &[usize]) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let _serial = run_lock().lock().unwrap_or_else(|e| e.into_inner());
+    install_quiet_panic_hook();
+    let f: std::sync::Arc<dyn Fn() + Send + Sync> = std::sync::Arc::new(f);
+    // Replays use an effectively unlimited preemption budget: the
+    // recorded schedule already encodes every switch it needs, and a
+    // tighter budget could only truncate its candidate lists.
+    let (_, failure) = run_one(&f, schedule, usize::MAX, None);
+    Report { execs: 1, complete: false, failure }
+}

@@ -1,0 +1,419 @@
+//! Drop-in `std::sync` facade for the engine's concurrency-bearing
+//! modules.
+//!
+//! Normal builds: pure re-exports of the `std::sync` types plus a
+//! `spawn_named` helper — identical codegen, identical behavior, pinned
+//! by the tier-1 suite. `--features model-check` builds: wrappers with
+//! the same names and signatures that route every operation through
+//! `check::sched` *when called from a model thread* and fall back to
+//! plain `std` blocking behavior everywhere else, so ordinary tests
+//! keep working in a model-check build.
+//!
+//! Facade rules (enforced by `cargo xtask lint`):
+//! - `exec`, `serve`, and `infer::graph` import `Mutex`/`Condvar`/
+//!   `RwLock` (and the atomics below) from here, never `std::sync`.
+//! - Threads are spawned via `spawn_named`, never `std::thread`
+//!   directly, so model runs capture them.
+//! - `Arc`, `OnceLock`, `mpsc`, and `atomic::Ordering` are not wrapped;
+//!   keep importing them from `std::sync`.
+//!
+//! Model-mode semantics (see `check::sched` for the scheduler):
+//! - `lock`/`read`/`write` spin on `try_*` with a scheduler yield
+//!   before each attempt and scheduler-blocked bookkeeping on
+//!   contention; poisoning is absorbed (a poisoned model run has
+//!   already recorded the panic that caused it).
+//! - `Condvar::wait` enqueues FIFO, releases the mutex, parks on the
+//!   scheduler, and re-acquires on wake. There are no spurious wakeups
+//!   in the model, so a protocol relying on them is caught, not masked.
+//! - Atomics are sequentially consistent at yield-point granularity:
+//!   each access is a scheduling point and the requested `Ordering` is
+//!   accepted but executed as `SeqCst`. The model checker therefore
+//!   explores interleavings of atomic accesses, not weak-memory
+//!   reorderings — `Ordering` correctness is covered by the per-site
+//!   justification comments (see CONCURRENCY.md), not the checker.
+
+#[cfg(not(feature = "model-check"))]
+mod imp {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize};
+    pub use std::sync::{
+        Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    };
+    pub use std::thread::JoinHandle;
+
+    /// Spawn a named thread (std build: a thin `std::thread::Builder`
+    /// wrapper). Panics if the OS refuses to spawn, like the previous
+    /// in-tree call sites did.
+    pub fn spawn_named<T, F>(name: &str, f: F) -> JoinHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("spawn thread")
+    }
+}
+
+#[cfg(feature = "model-check")]
+mod imp {
+    use crate::check::sched;
+    use std::ops::{Deref, DerefMut};
+    use std::sync::atomic::Ordering;
+    use std::sync::{LockResult, TryLockError};
+
+    // -- Mutex --------------------------------------------------------
+
+    pub struct Mutex<T: ?Sized> {
+        id: usize,
+        inner: std::sync::Mutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T: ?Sized> {
+        lock: &'a Mutex<T>,
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        /// True iff acquired through the model scheduler (so drop must
+        /// release the scheduler's blocked-set entry).
+        model: bool,
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(t: T) -> Self {
+            Mutex { id: sched::new_resource_id(), inner: std::sync::Mutex::new(t) }
+        }
+    }
+
+    impl<T: ?Sized> Mutex<T> {
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            if !sched::on_model_thread() {
+                let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+                return Ok(MutexGuard { lock: self, inner: Some(g), model: false });
+            }
+            loop {
+                sched::op_yield("mutex-lock");
+                match self.inner.try_lock() {
+                    Ok(g) => {
+                        return Ok(MutexGuard { lock: self, inner: Some(g), model: true });
+                    }
+                    Err(TryLockError::Poisoned(e)) => {
+                        return Ok(MutexGuard {
+                            lock: self,
+                            inner: Some(e.into_inner()),
+                            model: true,
+                        });
+                    }
+                    Err(TryLockError::WouldBlock) => {
+                        sched::block_resource(self.id, "mutex-blocked");
+                    }
+                }
+            }
+        }
+    }
+
+    impl<T: ?Sized> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("mutex guard")
+        }
+    }
+
+    impl<T: ?Sized> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("mutex guard")
+        }
+    }
+
+    impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            let model = self.model;
+            // Release the real lock before telling the scheduler, so a
+            // woken thread's try_lock can succeed at its next grant.
+            drop(self.inner.take());
+            if model {
+                sched::release(self.lock.id);
+            }
+        }
+    }
+
+    // -- Condvar ------------------------------------------------------
+
+    pub struct Condvar {
+        id: usize,
+        std: std::sync::Condvar,
+    }
+
+    impl Condvar {
+        #[allow(clippy::new_without_default)]
+        pub fn new() -> Self {
+            Condvar { id: sched::new_resource_id(), std: std::sync::Condvar::new() }
+        }
+
+        pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            if !guard.model {
+                let inner = guard.inner.take().expect("mutex guard");
+                let inner = self.std.wait(inner).unwrap_or_else(|e| e.into_inner());
+                guard.inner = Some(inner);
+                return Ok(guard);
+            }
+            let lock = guard.lock;
+            // Enqueue as a waiter *before* releasing the mutex; no
+            // scheduling point runs in between, so wait is atomic with
+            // the release exactly like std's contract.
+            sched::cv_enqueue(self.id);
+            drop(guard);
+            sched::cv_block();
+            lock.lock()
+        }
+
+        pub fn notify_one(&self) {
+            if !sched::on_model_thread() {
+                self.std.notify_one();
+                return;
+            }
+            // Yield first so schedules where the notify is delayed
+            // relative to other threads are explored too.
+            sched::op_yield("notify-one");
+            sched::cv_wake(self.id, false);
+        }
+
+        pub fn notify_all(&self) {
+            if !sched::on_model_thread() {
+                self.std.notify_all();
+                return;
+            }
+            sched::op_yield("notify-all");
+            sched::cv_wake(self.id, true);
+        }
+    }
+
+    // -- RwLock -------------------------------------------------------
+
+    pub struct RwLock<T: ?Sized> {
+        id: usize,
+        inner: std::sync::RwLock<T>,
+    }
+
+    pub struct RwLockReadGuard<'a, T: ?Sized> {
+        lock: &'a RwLock<T>,
+        inner: Option<std::sync::RwLockReadGuard<'a, T>>,
+        model: bool,
+    }
+
+    pub struct RwLockWriteGuard<'a, T: ?Sized> {
+        lock: &'a RwLock<T>,
+        inner: Option<std::sync::RwLockWriteGuard<'a, T>>,
+        model: bool,
+    }
+
+    impl<T> RwLock<T> {
+        pub fn new(t: T) -> Self {
+            RwLock { id: sched::new_resource_id(), inner: std::sync::RwLock::new(t) }
+        }
+    }
+
+    impl<T: ?Sized> RwLock<T> {
+        pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+            if !sched::on_model_thread() {
+                let g = self.inner.read().unwrap_or_else(|e| e.into_inner());
+                return Ok(RwLockReadGuard { lock: self, inner: Some(g), model: false });
+            }
+            loop {
+                sched::op_yield("rwlock-read");
+                match self.inner.try_read() {
+                    Ok(g) => {
+                        return Ok(RwLockReadGuard { lock: self, inner: Some(g), model: true });
+                    }
+                    Err(TryLockError::Poisoned(e)) => {
+                        return Ok(RwLockReadGuard {
+                            lock: self,
+                            inner: Some(e.into_inner()),
+                            model: true,
+                        });
+                    }
+                    Err(TryLockError::WouldBlock) => {
+                        sched::block_resource(self.id, "rwlock-read-blocked");
+                    }
+                }
+            }
+        }
+
+        pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+            if !sched::on_model_thread() {
+                let g = self.inner.write().unwrap_or_else(|e| e.into_inner());
+                return Ok(RwLockWriteGuard { lock: self, inner: Some(g), model: false });
+            }
+            loop {
+                sched::op_yield("rwlock-write");
+                match self.inner.try_write() {
+                    Ok(g) => {
+                        return Ok(RwLockWriteGuard { lock: self, inner: Some(g), model: true });
+                    }
+                    Err(TryLockError::Poisoned(e)) => {
+                        return Ok(RwLockWriteGuard {
+                            lock: self,
+                            inner: Some(e.into_inner()),
+                            model: true,
+                        });
+                    }
+                    Err(TryLockError::WouldBlock) => {
+                        sched::block_resource(self.id, "rwlock-write-blocked");
+                    }
+                }
+            }
+        }
+    }
+
+    impl<T: ?Sized> Deref for RwLockReadGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("rwlock read guard")
+        }
+    }
+
+    impl<T: ?Sized> Drop for RwLockReadGuard<'_, T> {
+        fn drop(&mut self) {
+            let model = self.model;
+            drop(self.inner.take());
+            if model {
+                sched::release(self.lock.id);
+            }
+        }
+    }
+
+    impl<T: ?Sized> Deref for RwLockWriteGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("rwlock write guard")
+        }
+    }
+
+    impl<T: ?Sized> DerefMut for RwLockWriteGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("rwlock write guard")
+        }
+    }
+
+    impl<T: ?Sized> Drop for RwLockWriteGuard<'_, T> {
+        fn drop(&mut self) {
+            let model = self.model;
+            drop(self.inner.take());
+            if model {
+                sched::release(self.lock.id);
+            }
+        }
+    }
+
+    // -- atomics ------------------------------------------------------
+    //
+    // Each access is a scheduling point; the requested ordering is
+    // accepted for signature parity but executed as SeqCst (the model
+    // explores interleavings, not weak-memory reorderings).
+
+    macro_rules! model_atomic {
+        ($name:ident, $std:ty, $prim:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $prim) -> Self {
+                    Self { inner: <$std>::new(v) }
+                }
+
+                pub fn load(&self, _order: Ordering) -> $prim {
+                    sched::op_yield("atomic-load");
+                    self.inner.load(Ordering::SeqCst)
+                }
+
+                pub fn store(&self, v: $prim, _order: Ordering) {
+                    sched::op_yield("atomic-store");
+                    self.inner.store(v, Ordering::SeqCst)
+                }
+            }
+        };
+    }
+
+    model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+    impl AtomicU64 {
+        pub fn fetch_add(&self, v: u64, _order: Ordering) -> u64 {
+            sched::op_yield("atomic-rmw");
+            self.inner.fetch_add(v, Ordering::SeqCst)
+        }
+
+        pub fn fetch_sub(&self, v: u64, _order: Ordering) -> u64 {
+            sched::op_yield("atomic-rmw");
+            self.inner.fetch_sub(v, Ordering::SeqCst)
+        }
+    }
+
+    impl AtomicUsize {
+        pub fn fetch_add(&self, v: usize, _order: Ordering) -> usize {
+            sched::op_yield("atomic-rmw");
+            self.inner.fetch_add(v, Ordering::SeqCst)
+        }
+
+        pub fn fetch_sub(&self, v: usize, _order: Ordering) -> usize {
+            sched::op_yield("atomic-rmw");
+            self.inner.fetch_sub(v, Ordering::SeqCst)
+        }
+    }
+
+    impl AtomicBool {
+        pub fn swap(&self, v: bool, _order: Ordering) -> bool {
+            sched::op_yield("atomic-rmw");
+            self.inner.swap(v, Ordering::SeqCst)
+        }
+    }
+
+    // -- threads ------------------------------------------------------
+
+    enum HandleInner<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model(sched::ModelHandle<T>),
+    }
+
+    /// Join handle matching the subset of `std::thread::JoinHandle`
+    /// the engine uses (`join`, `is_finished`).
+    pub struct JoinHandle<T>(HandleInner<T>);
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                HandleInner::Std(h) => h.join(),
+                HandleInner::Model(h) => h.join(),
+            }
+        }
+
+        pub fn is_finished(&self) -> bool {
+            match &self.0 {
+                HandleInner::Std(h) => h.is_finished(),
+                HandleInner::Model(h) => h.is_finished(),
+            }
+        }
+    }
+
+    /// Spawn a named thread: a model thread when called from inside a
+    /// model execution, a real OS thread otherwise.
+    pub fn spawn_named<T, F>(name: &str, f: F) -> JoinHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        if sched::on_model_thread() {
+            JoinHandle(HandleInner::Model(sched::spawn_model(name, f)))
+        } else {
+            JoinHandle(HandleInner::Std(
+                std::thread::Builder::new()
+                    .name(name.to_string())
+                    .spawn(f)
+                    .expect("spawn thread"),
+            ))
+        }
+    }
+}
+
+pub use imp::*;

@@ -29,11 +29,11 @@
 //! shared pool, and the determinism contract makes the sequential
 //! fallback indistinguishable in output.
 
+use crate::check::sync::{spawn_named, Condvar, JoinHandle, Mutex};
 use std::cell::Cell;
 use std::ops::Range;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread;
+use std::sync::{Arc, OnceLock};
 
 /// Process-wide default worker count: `FQCONV_THREADS` if set (>= 1),
 /// else the machine's available parallelism.
@@ -122,7 +122,7 @@ pub struct Pool {
     /// would only reorder identical work)
     fork_lock: Mutex<()>,
     workers: usize,
-    handles: Vec<thread::JoinHandle<()>>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl Pool {
@@ -143,10 +143,7 @@ impl Pool {
         let handles = (0..workers)
             .map(|wi| {
                 let shared = Arc::clone(&shared);
-                thread::Builder::new()
-                    .name(format!("fqconv-pool-{wi}"))
-                    .spawn(move || worker_loop(wi, &shared))
-                    .expect("spawn pool worker")
+                spawn_named(&format!("fqconv-pool-{wi}"), move || worker_loop(wi, &shared))
             })
             .collect();
         Pool { shared, fork_lock: Mutex::new(()), workers, handles }
@@ -288,8 +285,10 @@ impl Pool {
         let task = move |i: usize| {
             let (range, pa) = &wa[i];
             let (_, pb) = &wb[i];
-            // SAFETY: disjoint windows, each part run exactly once.
+            // SAFETY: split_windows produced disjoint windows of `a` and
+            // each part index is run exactly once per fork.
             let sa = unsafe { std::slice::from_raw_parts_mut(pa.0, pa.1) };
+            // SAFETY: same as above, for the disjoint windows of `b`.
             let sb = unsafe { std::slice::from_raw_parts_mut(pb.0, pb.1) };
             f(range.clone(), sa, sb);
         };
@@ -315,6 +314,8 @@ struct WindowPtr<T>(*mut T, usize);
 // SAFETY: each window is a disjoint sub-slice of one `&mut` buffer and
 // is accessed by exactly one part of the fork.
 unsafe impl<T: Send> Send for WindowPtr<T> {}
+// SAFETY: a fork only hands each window to the single part that owns
+// it, so shared references to the wrapper never alias a mutation.
 unsafe impl<T: Send> Sync for WindowPtr<T> {}
 
 /// Split a row-major buffer into per-part windows matching `parts`.

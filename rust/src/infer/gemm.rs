@@ -116,6 +116,12 @@ impl PackedB {
 /// True iff the AVX2 tile body is usable on this machine (cached).
 #[cfg(target_arch = "x86_64")]
 fn avx2_available() -> bool {
+    // Miri interprets MIR and cannot execute AVX2 intrinsics: always
+    // take the portable tiles under it, so `cargo miri test` can cover
+    // the integer kernel paths (see .github/workflows/miri.yml).
+    if cfg!(miri) {
+        return false;
+    }
     use std::sync::OnceLock;
     static AVX2: OnceLock<bool> = OnceLock::new();
     *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
@@ -160,29 +166,35 @@ mod avx2 {
         let mut c3 = _mm256_setzero_si256();
         for p in 0..k {
             // 8 packed i8 weights -> 8 sign-extended i32 lanes
-            let b8 = _mm_loadl_epi64(panel.as_ptr().add(p * NR) as *const __m128i);
+            // SAFETY: caller guarantees `panel.len() >= k * NR`, so the
+            // 8 bytes at `p * NR` are in bounds (NR == 8); loadl_epi64
+            // has no alignment requirement.
+            let b8 = unsafe { _mm_loadl_epi64(panel.as_ptr().add(p * NR) as *const __m128i) };
             let b = _mm256_cvtepi8_epi32(b8);
-            c0 = _mm256_add_epi32(
-                c0,
-                _mm256_mullo_epi32(_mm256_set1_epi32(*a0.get_unchecked(p) as i32), b),
-            );
-            c1 = _mm256_add_epi32(
-                c1,
-                _mm256_mullo_epi32(_mm256_set1_epi32(*a1.get_unchecked(p) as i32), b),
-            );
-            c2 = _mm256_add_epi32(
-                c2,
-                _mm256_mullo_epi32(_mm256_set1_epi32(*a2.get_unchecked(p) as i32), b),
-            );
-            c3 = _mm256_add_epi32(
-                c3,
-                _mm256_mullo_epi32(_mm256_set1_epi32(*a3.get_unchecked(p) as i32), b),
-            );
+            // SAFETY: caller guarantees every `a*` row has at least `k`
+            // elements, so index `p < k` is in bounds for all four.
+            let (v0, v1, v2, v3) = unsafe {
+                (
+                    *a0.get_unchecked(p),
+                    *a1.get_unchecked(p),
+                    *a2.get_unchecked(p),
+                    *a3.get_unchecked(p),
+                )
+            };
+            c0 = _mm256_add_epi32(c0, _mm256_mullo_epi32(_mm256_set1_epi32(v0 as i32), b));
+            c1 = _mm256_add_epi32(c1, _mm256_mullo_epi32(_mm256_set1_epi32(v1 as i32), b));
+            c2 = _mm256_add_epi32(c2, _mm256_mullo_epi32(_mm256_set1_epi32(v2 as i32), b));
+            c3 = _mm256_add_epi32(c3, _mm256_mullo_epi32(_mm256_set1_epi32(v3 as i32), b));
         }
-        _mm256_storeu_si256(acc[0].as_mut_ptr() as *mut __m256i, c0);
-        _mm256_storeu_si256(acc[1].as_mut_ptr() as *mut __m256i, c1);
-        _mm256_storeu_si256(acc[2].as_mut_ptr() as *mut __m256i, c2);
-        _mm256_storeu_si256(acc[3].as_mut_ptr() as *mut __m256i, c3);
+        // SAFETY: each acc row is [i32; NR] = 32 bytes, exactly one
+        // __m256i; storeu tolerates any alignment and the four rows are
+        // distinct.
+        unsafe {
+            _mm256_storeu_si256(acc[0].as_mut_ptr() as *mut __m256i, c0);
+            _mm256_storeu_si256(acc[1].as_mut_ptr() as *mut __m256i, c1);
+            _mm256_storeu_si256(acc[2].as_mut_ptr() as *mut __m256i, c2);
+            _mm256_storeu_si256(acc[3].as_mut_ptr() as *mut __m256i, c3);
+        }
     }
 
     /// # Safety
@@ -192,14 +204,19 @@ mod avx2 {
     pub unsafe fn tile_1(k: usize, a0: &[i8], panel: &[i8], acc: &mut [i32; NR]) {
         let mut c0 = _mm256_setzero_si256();
         for p in 0..k {
-            let b8 = _mm_loadl_epi64(panel.as_ptr().add(p * NR) as *const __m128i);
+            // SAFETY: caller guarantees `panel.len() >= k * NR`, so the
+            // 8 bytes at `p * NR` are in bounds (NR == 8); loadl_epi64
+            // has no alignment requirement.
+            let b8 = unsafe { _mm_loadl_epi64(panel.as_ptr().add(p * NR) as *const __m128i) };
             let b = _mm256_cvtepi8_epi32(b8);
-            c0 = _mm256_add_epi32(
-                c0,
-                _mm256_mullo_epi32(_mm256_set1_epi32(*a0.get_unchecked(p) as i32), b),
-            );
+            // SAFETY: caller guarantees `a0.len() >= k`, so `p < k` is
+            // in bounds.
+            let v0 = unsafe { *a0.get_unchecked(p) };
+            c0 = _mm256_add_epi32(c0, _mm256_mullo_epi32(_mm256_set1_epi32(v0 as i32), b));
         }
-        _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, c0);
+        // SAFETY: acc is [i32; NR] = 32 bytes, exactly one __m256i;
+        // storeu tolerates any alignment.
+        unsafe { _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, c0) };
     }
 }
 

@@ -80,7 +80,7 @@
 //! rust/tests/parallel.rs); the 2-D stages inherit the contract from
 //! the contiguous-disjoint-row partitioning of [`crate::exec`].
 
-use std::sync::Mutex;
+use crate::check::sync::Mutex;
 
 use anyhow::{bail, ensure, Result};
 

@@ -14,6 +14,9 @@
 //! Module map (see DESIGN.md for the full system inventory):
 //!
 //! * [`util`]        — PRNGs, JSON, timers, property testing
+//! * [`check`]       — `std::sync` facade + in-tree concurrency model
+//!                     checker (deterministic-schedule exploration under
+//!                     `--features model-check`; see CONCURRENCY.md)
 //! * [`exec`]        — scoped-thread data-parallel substrate (deterministic
 //!                     fork-join used by the engine and the serving layer)
 //! * [`tensor`]      — minimal strided ndarray (f32 / i32 / i8)
@@ -30,8 +33,15 @@
 //! * [`metrics`]     — accuracy, confusion, latency histograms
 //! * [`bench`]       — micro-benchmark harness used by `cargo bench` targets
 
+// Unsafe code policy: every `unsafe` operation inside an `unsafe fn`
+// must still be wrapped in an explicit `unsafe {}` block with its own
+// `// SAFETY:` comment (enforced by clippy::undocumented_unsafe_blocks
+// in CI and by `cargo xtask lint`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod analog;
 pub mod bench;
+pub mod check;
 pub mod config;
 pub mod coordinator;
 pub mod data;

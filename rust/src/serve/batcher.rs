@@ -17,6 +17,12 @@
 //! waits behind a Batch-priority batch it was ready before, and a
 //! deadlined request is either dispatched by its deadline or expired —
 //! never silently lost.
+//!
+//! Because this module is pure (no locks, no threads), it needs nothing
+//! from the `crate::check::sync` facade; the *threaded* batcher loop in
+//! `serve` that drives this policy is swept onto the facade and its
+//! queue/registry protocols are model-checked under
+//! `--features model-check` (see CONCURRENCY.md for the invariants).
 
 /// Request priority class. Interactive batches are pulled from the
 /// shared work queue before Batch-priority ones; within a class,

@@ -92,9 +92,12 @@ pub mod batcher;
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::check::sync::{
+    spawn_named, AtomicBool, AtomicU64, AtomicUsize, Condvar, JoinHandle, Mutex, RwLock,
+};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -640,6 +643,14 @@ pub struct ModelSpec {
 }
 
 /// Per-model lock-free counters + latency histograms.
+///
+/// Ordering policy (audited against the model-checker protocols, see
+/// CONCURRENCY.md): every counter here is monitoring-only — bumped on
+/// one thread, read by `stats()` snapshots that tolerate being a few
+/// operations stale. `Relaxed` is sufficient because no control-flow
+/// decision is derived from a counter value; the request/reply payloads
+/// themselves travel through mpsc channels and the queue mutex, whose
+/// release/acquire edges order the data.
 struct ModelCounters {
     served: AtomicU64,
     batches: AtomicU64,
@@ -679,6 +690,9 @@ struct ModelEntry {
 }
 
 /// Per-worker counters (lock-free; read by [`ModelRegistry::stats`]).
+/// Same `Relaxed` policy as [`ModelCounters`]: monitoring-only values,
+/// except `retired`+`alive` whose shutdown edge is ordered by the
+/// `AcqRel` fetch_sub in [`RetireGuard`]'s drop.
 #[derive(Debug, Default)]
 struct WorkerSlot {
     batches: AtomicU64,
@@ -742,10 +756,17 @@ struct RegistryInner {
     /// read lock here, so concurrent client traffic never serializes on
     /// one registry-wide lock — writers are rare (register / evict)
     models: RwLock<HashMap<ModelId, Arc<ModelEntry>>>,
+    /// Relaxed everywhere: only uniqueness of the handed-out ids is
+    /// needed, which fetch_add's atomicity alone guarantees.
     next_req_id: AtomicU64,
+    /// Relaxed everywhere: ditto — generation values are *compared*
+    /// under the `models` RwLock, never used as a publication fence.
     next_generation: AtomicU64,
     /// bumped per evict — workers compare against it to prune cached
-    /// replicas of models that are no longer registered
+    /// replicas of models that are no longer registered. Relaxed: a
+    /// stale read only delays pruning by one loop iteration; the prune
+    /// itself re-reads `models` under its RwLock, which provides the
+    /// happens-before edge for the map contents.
     evictions: AtomicU64,
     served: AtomicU64,
     batches: AtomicU64,
@@ -767,8 +788,8 @@ struct RegistryInner {
 /// full architecture diagram.
 pub struct ModelRegistry {
     inner: Arc<RegistryInner>,
-    workers: Vec<thread::JoinHandle<()>>,
-    batchers: Mutex<Vec<thread::JoinHandle<()>>>,
+    workers: Vec<JoinHandle<()>>,
+    batchers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl ModelRegistry {
@@ -792,10 +813,7 @@ impl ModelRegistry {
         let workers = (0..n_workers)
             .map(|wi| {
                 let inner = Arc::clone(&inner);
-                thread::Builder::new()
-                    .name(format!("fqconv-worker-{wi}"))
-                    .spawn(move || worker_loop(wi, &inner))
-                    .expect("spawn worker")
+                spawn_named(&format!("fqconv-worker-{wi}"), move || worker_loop(wi, &inner))
             })
             .collect();
         ModelRegistry { inner, workers, batchers: Mutex::new(Vec::new()) }
@@ -821,10 +839,9 @@ impl ModelRegistry {
         models.insert(id.clone(), Arc::clone(&entry));
         drop(models);
         let inner = Arc::clone(&self.inner);
-        let handle = thread::Builder::new()
-            .name(format!("fqconv-batcher-{id}"))
-            .spawn(move || batcher_loop(rx, &inner, &entry))
-            .expect("spawn batcher");
+        let handle = spawn_named(&format!("fqconv-batcher-{id}"), move || {
+            batcher_loop(rx, &inner, &entry)
+        });
         let mut batchers = self.batchers.lock().unwrap();
         // reap batchers of evicted models (their threads already exited)
         // so register/evict cycles don't grow the handle list forever
@@ -1140,7 +1157,13 @@ struct RetireGuard<'a> {
 
 impl Drop for RetireGuard<'_> {
     fn drop(&mut self) {
+        // Relaxed: stats-only flag; no reader derives control flow from it.
         self.slot.retired.store(true, Ordering::Relaxed);
+        // AcqRel (required, not just documentation): the last worker out
+        // must observe every predecessor's retirement before deciding it
+        // is last — Release publishes this worker's retirement, Acquire
+        // orders it after the others', so exactly one worker sees the
+        // count hit 1 and closes/drains the queue exactly once.
         if self.inner.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
             // last worker out: nothing can serve queued batches any more
             for qb in self.inner.queue.close_and_drain() {

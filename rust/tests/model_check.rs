@@ -1,0 +1,727 @@
+//! Model-checked concurrency protocols (`--features model-check`).
+//!
+//! Run with:
+//!   cargo test -p fqconv --features model-check --test model_check
+//!
+//! Three load-bearing protocols are checked (see CONCURRENCY.md for the
+//! invariant catalogue):
+//!
+//! 1. **Pool fork-join epoch handshake** — checked against the *real*
+//!    `exec::Pool`: no lost wakeup (every part runs exactly once), no
+//!    stale-epoch execution across consecutive forks, and the
+//!    panic-guard join (a panicking part propagates to the caller after
+//!    every participant finished, and the pool survives).
+//! 2. **Registry replica generations** — distilled model of the
+//!    register/evict vs. in-flight-batch protocol from
+//!    `serve::worker_loop`: a batch is only ever served by a replica of
+//!    its own generation, a stale resolution never overwrites the
+//!    current generation's cached replica, and an evict prunes exactly
+//!    once.
+//! 3. **Quarantine/bounce hand-back** — distilled model: a poisoned
+//!    model quarantines its replica and fails its batches *typed*; it
+//!    never retires the shared worker, which keeps serving healthy
+//!    models.
+//!
+//! The registry/quarantine protocols are modeled in distilled form
+//! (same decision structure, minus backends/mpsc/wall-clock — none of
+//! which the deterministic scheduler can control); the real threaded
+//! registry is exercised by the tier-1 stress test in
+//! rust/tests/serving.rs. The seeded-mutation suite at the bottom
+//! hand-breaks each protocol in ≥6 distinct ways and proves the checker
+//! catches every one; the replay test pins that a recorded failing
+//! schedule reproduces its failure deterministically.
+
+#![cfg(feature = "model-check")]
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use fqconv::check::sync::{spawn_named, Condvar, Mutex, RwLock};
+use fqconv::check::{check_with, replay, Config, FailureKind};
+use fqconv::exec::Pool;
+
+fn cfg(preemptions: usize, max_execs: usize, random_execs: usize) -> Config {
+    Config { preemptions, max_execs, random_execs, seed: 0x5eed_cafe }
+}
+
+// ===========================================================================
+// 1. Pool fork-join epoch handshake (real exec::Pool under the model)
+// ===========================================================================
+
+/// The headline exhaustiveness claim: at 2 workers (fork width 3), the
+/// bounded-preemption DFS over the full pool lifecycle — spawn, one
+/// 3-part fork, shutdown, join — terminates, and no schedule loses a
+/// wakeup (every part runs exactly once) or deadlocks.
+#[test]
+fn pool_forkjoin_two_workers_exhaustive() {
+    let report = check_with(cfg(1, 150_000, 0), || {
+        let pool = Pool::new(2);
+        let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(3, &|part| {
+            hits[part].fetch_add(1, Ordering::SeqCst);
+        });
+        for (p, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "part {p} did not run exactly once");
+        }
+    });
+    assert!(report.failure.is_none(), "pool fork-join failed: {:#?}", report.failure);
+    assert!(
+        report.complete,
+        "preemption-bound-1 DFS did not terminate within the cap ({} execs)",
+        report.execs
+    );
+}
+
+/// Same protocol at preemption bound 2 (capped DFS + seeded random
+/// fallback): deeper coverage of preempted schedules.
+#[test]
+fn pool_forkjoin_two_workers_preemptive() {
+    let report = check_with(cfg(2, 15_000, 5_000), || {
+        let pool = Pool::new(2);
+        let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(3, &|part| {
+            hits[part].fetch_add(1, Ordering::SeqCst);
+        });
+        for (p, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "part {p} did not run exactly once");
+        }
+    });
+    assert!(report.failure.is_none(), "pool fork-join failed: {:#?}", report.failure);
+}
+
+/// No stale-epoch execution: two consecutive forks on one pool must
+/// each run their *own* closure exactly once per part — a worker that
+/// re-runs a stale job (or misses the epoch bump) breaks the counts.
+#[test]
+fn pool_consecutive_forks_no_stale_epoch() {
+    let report = check_with(cfg(1, 30_000, 5_000), || {
+        let pool = Pool::new(2);
+        for round in 1usize..=2 {
+            let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(3, &|part| {
+                hits[part].fetch_add(round, Ordering::SeqCst);
+            });
+            for (p, h) in hits.iter().enumerate() {
+                assert_eq!(
+                    h.load(Ordering::SeqCst),
+                    round,
+                    "round {round}: part {p} ran a stale or duplicated job"
+                );
+            }
+        }
+    });
+    assert!(report.failure.is_none(), "stale-epoch check failed: {:#?}", report.failure);
+}
+
+/// Panic-guard join: a panicking part (caller part 0, then a worker
+/// part) propagates to the forking caller only after every participant
+/// finished, and the pool survives and serves the next fork.
+#[test]
+fn pool_panic_guard_join() {
+    let report = check_with(cfg(1, 30_000, 5_000), || {
+        let pool = Pool::new(1);
+        // caller part panics
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, &|part| {
+                if part == 0 {
+                    panic!("injected caller-part panic");
+                }
+            });
+        }));
+        assert!(r.is_err(), "caller-part panic must propagate");
+        // worker part panics
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, &|part| {
+                if part == 1 {
+                    panic!("injected worker-part panic");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker-part panic must propagate to the caller");
+        // the pool still works after both failed forks
+        let hits: Vec<AtomicUsize> = (0..2).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(2, &|part| {
+            hits[part].fetch_add(1, Ordering::SeqCst);
+        });
+        for (p, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "post-panic fork lost part {p}");
+        }
+    });
+    assert!(report.failure.is_none(), "panic-guard join failed: {:#?}", report.failure);
+}
+
+// ===========================================================================
+// 2. Registry replica generations (distilled serve::worker_loop model)
+// ===========================================================================
+
+/// Hand-breakable switches for the distilled protocols. `None` is the
+/// faithful distillation; every other variant removes one load-bearing
+/// line of the real code and must be caught by the checker.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Mutation {
+    None,
+    // -- mini-pool fork-join --
+    /// the last finishing worker does not notify the done condvar
+    DroppedNotify,
+    /// job fields are published *after* the epoch bump + notify instead
+    /// of atomically with them (reordered epoch store)
+    ReorderedEpochStore,
+    /// the forking thread checks completion with `if` instead of `while`
+    IfInsteadOfWhile,
+    /// the fork wakes workers with notify_one instead of notify_all
+    NotifyOneNotAll,
+    /// a worker decrements `remaining` before publishing its result
+    DecrementBeforeRun,
+    // -- registry generations --
+    /// a worker uses any cached replica for the model id without
+    /// comparing its generation to the batch's (missing generation check)
+    NoFreshGenerationCheck,
+    /// a stale resolution caches its replica even though the live
+    /// generation moved on (overwrites the current-generation entry)
+    NoLiveGenerationCheck,
+    /// evict forgets to bump the eviction epoch (prune never fires)
+    NoEvictBump,
+    // -- quarantine --
+    /// the worker retires itself when a model trips the quarantine
+    /// threshold instead of quarantining just that replica
+    RetireOnPoison,
+}
+
+/// Distilled register/evict vs. in-flight-batch replica-generation
+/// protocol (mirrors serve::worker_loop's resolve path, minus the
+/// eviction-epoch prune, which registry_prune_model checks separately).
+///
+/// Threads: an admin evicts + re-registers the one model id (generation
+/// 1 -> 2) and then submits a generation-2 batch; a worker drains the
+/// batch queue, re-queueing the first generation-1 batch once (the
+/// requeue path is how a stale batch can land *behind* a current one).
+///
+/// Invariants asserted inside the model:
+/// - a batch of generation g is only ever served by a replica of
+///   generation g;
+/// - after all traffic, the cached replica (if any) is the live
+///   generation — a stale resolution never overwrote it.
+fn registry_generation_model(m: Mutation) {
+    let live: Arc<RwLock<Option<u64>>> = Arc::new(RwLock::new(Some(1)));
+    // queue of batch generations; None = shutdown sentinel
+    let queue: Arc<(Mutex<VecDeque<Option<u64>>>, Condvar)> =
+        Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+    queue.0.lock().unwrap().push_back(Some(1));
+
+    let admin = {
+        let live = Arc::clone(&live);
+        let queue = Arc::clone(&queue);
+        spawn_named("admin", move || {
+            // evict + re-register under the models write lock, then
+            // submit a current-generation batch
+            *live.write().unwrap() = Some(2);
+            queue.0.lock().unwrap().push_back(Some(2));
+            queue.1.notify_all();
+        })
+    };
+
+    let worker = {
+        let live = Arc::clone(&live);
+        let queue = Arc::clone(&queue);
+        spawn_named("worker", move || {
+            let mut cache: Option<u64> = None;
+            let mut requeued = false;
+            loop {
+                let g = {
+                    let mut q = queue.0.lock().unwrap();
+                    loop {
+                        if let Some(cmd) = q.pop_front() {
+                            break cmd;
+                        }
+                        q = queue.1.wait(q).unwrap();
+                    }
+                };
+                let Some(g) = g else { break };
+                if g == 1 && !requeued {
+                    // model the real requeue path (failed attempt /
+                    // bounce): the stale batch goes to the back, behind
+                    // any current-generation traffic
+                    requeued = true;
+                    queue.0.lock().unwrap().push_back(Some(1));
+                    queue.1.notify_all();
+                    continue;
+                }
+                // resolve the replica (serve::worker_loop lines: fresh
+                // check -> live_generation read -> cache or one-shot)
+                let fresh = if m == Mutation::NoFreshGenerationCheck {
+                    cache.is_some()
+                } else {
+                    cache == Some(g)
+                };
+                let replica_gen = if fresh {
+                    cache.expect("fresh implies cached")
+                } else {
+                    let live_generation = *live.read().unwrap();
+                    // the factory belongs to the batch's entry, so the
+                    // constructed replica is of the batch's generation
+                    let replica = g;
+                    if m == Mutation::NoLiveGenerationCheck || live_generation == Some(g) {
+                        cache = Some(replica);
+                    }
+                    replica
+                };
+                assert_eq!(
+                    replica_gen, g,
+                    "batch of generation {g} served by a generation-{replica_gen} replica"
+                );
+            }
+            cache
+        })
+    };
+
+    admin.join().expect("admin");
+    // all traffic has been submitted; tell the worker to finish
+    queue.0.lock().unwrap().push_back(None);
+    queue.1.notify_all();
+    let cache = worker.join().expect("worker");
+    let live_now = *live.read().unwrap();
+    if let Some(g) = cache {
+        assert_eq!(
+            Some(g),
+            live_now,
+            "a stale resolution overwrote the current-generation cache entry"
+        );
+    }
+}
+
+/// The eviction-epoch prune: exactly one prune per evict (mirrors the
+/// `evictions != seen_evictions` compare in serve::worker_loop).
+fn registry_prune_model(m: Mutation) {
+    let live: Arc<RwLock<Option<u64>>> = Arc::new(RwLock::new(Some(1)));
+    let evictions: Arc<Mutex<u64>> = Arc::new(Mutex::new(0));
+    let queue: Arc<(Mutex<VecDeque<Option<u64>>>, Condvar)> =
+        Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+    queue.0.lock().unwrap().push_back(Some(1));
+
+    let admin = {
+        let live = Arc::clone(&live);
+        let evictions = Arc::clone(&evictions);
+        let queue = Arc::clone(&queue);
+        spawn_named("admin", move || {
+            *live.write().unwrap() = None; // evict
+            if m != Mutation::NoEvictBump {
+                *evictions.lock().unwrap() += 1;
+            }
+            *live.write().unwrap() = Some(2); // re-register
+            queue.0.lock().unwrap().push_back(Some(2));
+            queue.1.notify_all();
+        })
+    };
+
+    let worker = {
+        let live = Arc::clone(&live);
+        let evictions = Arc::clone(&evictions);
+        let queue = Arc::clone(&queue);
+        spawn_named("worker", move || {
+            let mut cache: Option<u64> = None;
+            let mut seen_evictions = 0u64;
+            let mut prunes = 0u32;
+            loop {
+                let g = {
+                    let mut q = queue.0.lock().unwrap();
+                    loop {
+                        if let Some(cmd) = q.pop_front() {
+                            break cmd;
+                        }
+                        q = queue.1.wait(q).unwrap();
+                    }
+                };
+                // eviction-epoch prune, once per bump
+                let ev = *evictions.lock().unwrap();
+                if ev != seen_evictions {
+                    seen_evictions = ev;
+                    prunes += 1;
+                    let l = *live.read().unwrap();
+                    if cache.is_some() && cache != l {
+                        cache = None;
+                    }
+                }
+                let Some(g) = g else { break };
+                let live_generation = *live.read().unwrap();
+                if live_generation == Some(g) {
+                    cache = Some(g);
+                }
+            }
+            (cache, prunes)
+        })
+    };
+
+    admin.join().expect("admin");
+    queue.0.lock().unwrap().push_back(None);
+    queue.1.notify_all();
+    let (cache, prunes) = worker.join().expect("worker");
+    assert_eq!(prunes, 1, "one evict must prune exactly once (got {prunes})");
+    let live_now = *live.read().unwrap();
+    if let Some(g) = cache {
+        assert_eq!(Some(g), live_now, "stale replica survived the eviction prune");
+    }
+}
+
+/// The satellite "model-scheduler stress" of concurrent register /
+/// evict / submit on one model id: the faithful generation model under
+/// a deeper preemption budget plus random schedules.
+#[test]
+fn registry_register_evict_submit_model_stress() {
+    let report = check_with(cfg(2, 20_000, 10_000), || {
+        registry_generation_model(Mutation::None)
+    });
+    assert!(report.failure.is_none(), "generation protocol failed: {:#?}", report.failure);
+    let report = check_with(cfg(2, 20_000, 10_000), || registry_prune_model(Mutation::None));
+    assert!(report.failure.is_none(), "prune protocol failed: {:#?}", report.failure);
+}
+
+// ===========================================================================
+// 3. Quarantine / bounce hand-back (distilled)
+// ===========================================================================
+
+const MODEL_A: u8 = 0; // poisoned: every infer errors
+const MODEL_B: u8 = 1; // healthy
+
+/// Distilled quarantine protocol: model A's backend always errors; two
+/// consecutive errors quarantine the worker's A-replica; quarantined
+/// batches bounce (re-queue) under a bounce budget and then fail typed.
+/// The worker itself must survive and still serve model B.
+fn quarantine_model(m: Mutation) {
+    const MAX_ERRS: u32 = 2;
+    const MAX_ATTEMPTS: u32 = 2;
+    const MAX_BOUNCES: u32 = 2;
+    struct Batch {
+        model: u8,
+        attempts: u32,
+        bounces: u32,
+    }
+    struct Outcome {
+        served_b: u32,
+        failed_a: u32,
+        retired_early: bool,
+    }
+    let queue: Arc<(Mutex<VecDeque<Batch>>, Condvar)> =
+        Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+    {
+        let mut q = queue.0.lock().unwrap();
+        q.push_back(Batch { model: MODEL_A, attempts: 0, bounces: 0 });
+        q.push_back(Batch { model: MODEL_A, attempts: 0, bounces: 0 });
+        q.push_back(Batch { model: MODEL_B, attempts: 0, bounces: 0 });
+    }
+    // 3 batches to resolve (serve or typed failure)
+    let worker = {
+        let queue = Arc::clone(&queue);
+        spawn_named("worker", move || {
+            let mut errs: u32 = 0;
+            let mut quarantined = false;
+            let mut out = Outcome { served_b: 0, failed_a: 0, retired_early: false };
+            let mut resolved = 0u32;
+            while resolved < 3 {
+                let mut qb = {
+                    let mut q = queue.0.lock().unwrap();
+                    loop {
+                        if let Some(b) = q.pop_front() {
+                            break b;
+                        }
+                        q = queue.1.wait(q).unwrap();
+                    }
+                };
+                if qb.model == MODEL_A && quarantined {
+                    // hand-back: re-queue FIRST so other replicas could
+                    // pick the batch up during this worker's back-off
+                    qb.bounces += 1;
+                    if qb.bounces >= MAX_BOUNCES {
+                        out.failed_a += 1; // typed failure
+                        resolved += 1;
+                    } else {
+                        queue.0.lock().unwrap().push_back(qb);
+                        queue.1.notify_all();
+                    }
+                    continue;
+                }
+                if qb.model == MODEL_A {
+                    // poisoned backend: infer errors
+                    errs += 1;
+                    qb.attempts += 1;
+                    if qb.attempts >= MAX_ATTEMPTS {
+                        out.failed_a += 1;
+                        resolved += 1;
+                    } else {
+                        queue.0.lock().unwrap().push_back(qb);
+                        queue.1.notify_all();
+                    }
+                    if errs >= MAX_ERRS {
+                        if m == Mutation::RetireOnPoison {
+                            // the hand-broken variant takes the whole
+                            // worker down with the poisoned model
+                            out.retired_early = true;
+                            return out;
+                        }
+                        quarantined = true;
+                        errs = 0;
+                    }
+                } else {
+                    // healthy backend: serve, which also resets nothing
+                    // for A (budgets are per-model)
+                    out.served_b += 1;
+                    resolved += 1;
+                }
+            }
+            out
+        })
+    };
+    let out = worker.join().expect("worker");
+    assert!(!out.retired_early, "a poisoned model retired the shared worker");
+    assert_eq!(out.served_b, 1, "the healthy model was not served");
+    assert_eq!(out.failed_a, 2, "poisoned batches must fail typed, not vanish");
+}
+
+#[test]
+fn quarantine_never_retires_shared_worker() {
+    let report = check_with(cfg(2, 20_000, 5_000), || quarantine_model(Mutation::None));
+    assert!(report.failure.is_none(), "quarantine protocol failed: {:#?}", report.failure);
+}
+
+// ===========================================================================
+// Mini-pool: a parameterized distillation of the exec::Pool fork-join
+// handshake, used by the seeded-mutation suite (the real Pool cannot be
+// hand-broken at runtime).
+// ===========================================================================
+
+struct MiniState {
+    epoch: u64,
+    /// parts of the published fork (None between forks / pre-publish)
+    job: Option<usize>,
+    remaining: usize,
+    done: [bool; 3],
+    shutdown: bool,
+}
+
+fn mini_pool(m: Mutation) {
+    let shared = Arc::new((
+        Mutex::new(MiniState {
+            epoch: 0,
+            job: None,
+            remaining: 0,
+            done: [false; 3],
+            shutdown: false,
+        }),
+        Condvar::new(), // work_cv
+        Condvar::new(), // done_cv
+    ));
+    const PARTS: usize = 3;
+    let workers: Vec<_> = (0..2usize)
+        .map(|wi| {
+            let shared = Arc::clone(&shared);
+            spawn_named(&format!("mini-worker-{wi}"), move || {
+                let mut seen = 0u64;
+                loop {
+                    let parts = {
+                        let mut st = shared.0.lock().unwrap();
+                        loop {
+                            if st.shutdown {
+                                return;
+                            }
+                            if st.epoch != seen {
+                                seen = st.epoch;
+                                break st.job.expect("fresh epoch published without a job");
+                            }
+                            st = shared.1.wait(st).unwrap();
+                        }
+                    };
+                    let part = wi + 1;
+                    if part >= parts {
+                        continue;
+                    }
+                    if m == Mutation::DecrementBeforeRun {
+                        // hand-broken: signal completion before doing
+                        // the work
+                        {
+                            let mut st = shared.0.lock().unwrap();
+                            st.remaining -= 1;
+                        }
+                        shared.2.notify_all();
+                        let mut st = shared.0.lock().unwrap();
+                        assert!(!st.done[part], "part {part} ran twice");
+                        st.done[part] = true;
+                        continue;
+                    }
+                    {
+                        let mut st = shared.0.lock().unwrap();
+                        assert!(!st.done[part], "part {part} ran twice");
+                        st.done[part] = true;
+                        st.remaining -= 1;
+                    }
+                    // per-part completion signal; the join re-checks
+                    // `remaining` under `while` (the load-bearing line
+                    // the IfInsteadOfWhile mutation removes)
+                    if m != Mutation::DroppedNotify {
+                        shared.2.notify_all();
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // publish the fork
+    if m == Mutation::ReorderedEpochStore {
+        // hand-broken: epoch bump + notify escape the critical section
+        // that publishes the job fields
+        {
+            let mut st = shared.0.lock().unwrap();
+            st.epoch += 1;
+            st.remaining = PARTS - 1;
+        }
+        shared.1.notify_all();
+        {
+            let mut st = shared.0.lock().unwrap();
+            st.job = Some(PARTS);
+        }
+    } else {
+        {
+            let mut st = shared.0.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(PARTS);
+            st.remaining = PARTS - 1;
+        }
+        if m == Mutation::NotifyOneNotAll {
+            shared.1.notify_one();
+        } else {
+            shared.1.notify_all();
+        }
+    }
+    // caller runs part 0
+    {
+        let mut st = shared.0.lock().unwrap();
+        st.done[0] = true;
+    }
+    // join: wait for the workers' parts
+    {
+        let mut st = shared.0.lock().unwrap();
+        if m == Mutation::IfInsteadOfWhile {
+            if st.remaining > 0 {
+                st = shared.2.wait(st).unwrap();
+            }
+        } else {
+            while st.remaining > 0 {
+                st = shared.2.wait(st).unwrap();
+            }
+        }
+        for (p, d) in st.done.iter().enumerate() {
+            assert!(*d, "fork joined with part {p} not finished");
+        }
+        st.job = None;
+        st.shutdown = true;
+    }
+    shared.1.notify_all();
+    for w in workers {
+        w.join().expect("mini worker");
+    }
+}
+
+/// The faithful mini-pool passes exhaustively — pinning that the
+/// mutation failures below come from the seeded breakage, not from the
+/// distillation itself.
+#[test]
+fn mini_pool_faithful_passes() {
+    let report = check_with(cfg(2, 40_000, 5_000), || mini_pool(Mutation::None));
+    assert!(report.failure.is_none(), "faithful mini-pool failed: {:#?}", report.failure);
+}
+
+// ===========================================================================
+// Seeded-mutation suite: every hand-broken variant must be caught.
+// ===========================================================================
+
+fn assert_caught(name: &str, m: Mutation, f: impl Fn() + Send + Sync + 'static) -> Vec<usize> {
+    let report = check_with(cfg(2, 20_000, 10_000), f);
+    let failure = report
+        .failure
+        .unwrap_or_else(|| panic!("mutation {name} ({m:?}) was NOT caught by the checker"));
+    assert!(!failure.schedule.is_empty(), "failing schedule missing for {name}");
+    assert!(!failure.trace.is_empty(), "failing trace missing for {name}");
+    failure.schedule
+}
+
+#[test]
+fn mutation_dropped_notify_caught() {
+    assert_caught("dropped-notify", Mutation::DroppedNotify, || {
+        mini_pool(Mutation::DroppedNotify)
+    });
+}
+
+#[test]
+fn mutation_reordered_epoch_store_caught() {
+    assert_caught("reordered-epoch-store", Mutation::ReorderedEpochStore, || {
+        mini_pool(Mutation::ReorderedEpochStore)
+    });
+}
+
+#[test]
+fn mutation_if_instead_of_while_caught() {
+    assert_caught("if-instead-of-while", Mutation::IfInsteadOfWhile, || {
+        mini_pool(Mutation::IfInsteadOfWhile)
+    });
+}
+
+#[test]
+fn mutation_notify_one_not_all_caught() {
+    assert_caught("notify-one-not-all", Mutation::NotifyOneNotAll, || {
+        mini_pool(Mutation::NotifyOneNotAll)
+    });
+}
+
+#[test]
+fn mutation_decrement_before_run_caught() {
+    assert_caught("decrement-before-run", Mutation::DecrementBeforeRun, || {
+        mini_pool(Mutation::DecrementBeforeRun)
+    });
+}
+
+#[test]
+fn mutation_missing_generation_check_caught() {
+    assert_caught("missing-generation-check", Mutation::NoFreshGenerationCheck, || {
+        registry_generation_model(Mutation::NoFreshGenerationCheck)
+    });
+}
+
+#[test]
+fn mutation_stale_cache_overwrite_caught() {
+    assert_caught("stale-cache-overwrite", Mutation::NoLiveGenerationCheck, || {
+        registry_generation_model(Mutation::NoLiveGenerationCheck)
+    });
+}
+
+#[test]
+fn mutation_no_evict_bump_caught() {
+    assert_caught("no-evict-bump", Mutation::NoEvictBump, || {
+        registry_prune_model(Mutation::NoEvictBump)
+    });
+}
+
+#[test]
+fn mutation_retire_on_poison_caught() {
+    assert_caught("retire-on-poison", Mutation::RetireOnPoison, || {
+        quarantine_model(Mutation::RetireOnPoison)
+    });
+}
+
+// ===========================================================================
+// Replay: a recorded failing schedule reproduces its failure.
+// ===========================================================================
+
+#[test]
+fn failing_schedule_replays_deterministically() {
+    let schedule =
+        assert_caught("dropped-notify", Mutation::DroppedNotify, || {
+            mini_pool(Mutation::DroppedNotify)
+        });
+    let report = replay(|| mini_pool(Mutation::DroppedNotify), &schedule);
+    let failure = report.failure.expect("replayed schedule must reproduce the failure");
+    assert_eq!(
+        failure.kind,
+        FailureKind::Deadlock,
+        "dropped notify must replay as the lost-wakeup deadlock: {failure:#?}"
+    );
+}

@@ -706,3 +706,105 @@ fn evicted_model_rejects_new_submits_but_other_models_survive() {
     assert_eq!(stats.models[0].id, idb);
     registry.shutdown();
 }
+
+#[test]
+fn concurrent_register_evict_submit_same_model_id() {
+    // registry churn stress: one thread register/evicts the same ModelId
+    // in a tight loop while two submitter threads hammer it and a fourth
+    // drives steady traffic to a neighbor model. Invariants: a submit
+    // either gets a typed UnknownModel at the evicted window or is
+    // accepted — and every accepted request is served correctly (stale
+    // generations ride on one-shot replicas, they are never dropped); the
+    // neighbor model never misses; no worker retires.
+    let registry = ModelRegistry::start(2);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "stable",
+            ModelSpec {
+                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
+                sample_numel: 4,
+                policy: BatchPolicy::new(2, 100),
+            },
+        )
+        .unwrap();
+    let churn_id = ModelId::new("churn");
+    let stable_id = ModelId::new("stable");
+    std::thread::scope(|s| {
+        let reg = &registry;
+        let churn = &churn_id;
+        let stable = &stable_id;
+        s.spawn(move || {
+            for _round in 0..30 {
+                let (c, m) = (Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(0)));
+                reg.register(
+                    "churn",
+                    ModelSpec {
+                        factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
+                        sample_numel: 4,
+                        policy: BatchPolicy::new(2, 100),
+                    },
+                )
+                .expect("churn id was evicted last round");
+                // let some traffic land on this generation
+                std::thread::sleep(Duration::from_micros(300));
+                assert!(reg.evict(churn), "evicting the generation just registered");
+            }
+        });
+        for t in 0..2u64 {
+            s.spawn(move || {
+                for i in 0..150u64 {
+                    match reg.submit(churn, vec![i as f32, 0.0, 0.0, 0.0]) {
+                        Ok(rx) => {
+                            // accepted: must be answered, and with the
+                            // right class — evicted generations are
+                            // served via one-shot replicas, not dropped
+                            let resp = rx
+                                .recv()
+                                .unwrap_or_else(|_| {
+                                    panic!("submitter {t}: request {i} lost to churn")
+                                })
+                                .unwrap_or_else(|e| {
+                                    panic!("submitter {t}: request {i} failed typed: {e}")
+                                });
+                            assert_eq!(resp.class, (i as usize) % 5);
+                        }
+                        // racing the evicted window is the expected miss
+                        Err(ServeError::UnknownModel(id)) => assert_eq!(id.as_str(), "churn"),
+                        Err(e) => panic!("submitter {t}: unexpected submit error: {e}"),
+                    }
+                }
+            });
+        }
+        s.spawn(move || {
+            for i in 0..100u64 {
+                let resp = reg
+                    .infer(stable, vec![i as f32, 0.0, 0.0, 0.0])
+                    .unwrap_or_else(|e| panic!("stable model missed under churn: {e}"));
+                assert_eq!(resp.class, (i as usize) % 5);
+            }
+        });
+    });
+    // the storm ends on an evict; a fresh generation must register and
+    // serve, and no worker may have retired along the way
+    assert_eq!(registry.model_ids(), vec![stable_id.clone()]);
+    let (c, m) = (Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(0)));
+    registry
+        .register(
+            "churn",
+            ModelSpec {
+                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
+                sample_numel: 4,
+                policy: BatchPolicy::new(2, 100),
+            },
+        )
+        .expect("fresh register after the churn storm");
+    let resp = registry.infer(&churn_id, vec![3.0, 0.0, 0.0, 0.0]).expect("fresh generation serves");
+    assert_eq!(resp.class, 3);
+    for w in &registry.stats().workers {
+        assert!(w.alive, "worker {} retired during registry churn", w.worker);
+    }
+    registry.shutdown();
+}

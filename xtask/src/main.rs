@@ -1,0 +1,650 @@
+//! `cargo xtask lint` — AST-free source lints for concurrency and
+//! hot-path hygiene (see CONCURRENCY.md for the policy rationale).
+//!
+//! Four rules, all token scans over comment/string-stripped source (no
+//! syn, no dependencies — the scanner is a ~50-line state machine):
+//!
+//! 1. **safety-comment** — every `unsafe` keyword must have a
+//!    `// SAFETY:` comment (or a `/// # Safety` doc section) directly
+//!    above it, attributes and blank lines permitting.
+//! 2. **target-feature-dispatch** — a `#[target_feature]` fn may only
+//!    be called from another `#[target_feature]` fn or from a function
+//!    whose body consults `is_x86_feature_detected!` (directly or via a
+//!    local detector fn such as `avx2_available`).
+//! 3. **raw-sync** — `std::sync::{Mutex, Condvar, RwLock}` must not be
+//!    named outside `rust/src/check/`; concurrency modules go through
+//!    the `crate::check::sync` facade so the model checker sees them.
+//! 4. **hot-path-float** — no `f32`/`f64` tokens or float literals in
+//!    the named fn bodies of the integer kernels (`infer/gemm.rs`,
+//!    `infer/conv.rs`, `infer/conv2d.rs`), apart from a per-file
+//!    allowlist of construction/stats fns. Known limitation: float
+//!    arithmetic behind type inference with no textual `f32`/`f64`/
+//!    literal (e.g. `qa.es * qw.es` on f32 fields) is invisible to a
+//!    token scan — such fns (`build_conv_lut`) sit in the allowlist as
+//!    documentation.
+//!
+//! `cargo xtask lint --self-test` runs every rule against embedded
+//! seeded violations (and clean twins) to prove the rules still bite.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Per-file allowlists for rule 4 (paths relative to rust/src).
+const HOT_PATH_ALLOW: &[(&str, &[&str])] = &[
+    ("infer/gemm.rs", &["from_dense"]),
+    ("infer/conv.rs", &["new", "sparsity", "build_conv_lut"]),
+    ("infer/conv2d.rs", &["new", "sparsity"]),
+];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") if args.iter().any(|a| a == "--self-test") => self_test(),
+        Some("lint") => lint_tree(),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--self-test]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let loc = format!("{}:{}", self.file, self.line);
+        write!(f, "{loc}: [{}] {}", self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// source scanner: comment/string stripping, word search, fn spans
+// ---------------------------------------------------------------------------
+
+/// Blank out comments and string/char literals byte-for-byte (newlines
+/// kept), so token scans cannot match inside them and byte offsets and
+/// line numbers stay aligned with the original source.
+fn strip(src: &str) -> String {
+    #[derive(Clone, Copy)]
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(usize),
+        Char,
+    }
+    let b = src.as_bytes();
+    let mut out = vec![0u8; b.len()];
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        let n = b.get(i + 1).copied().unwrap_or(0);
+        let keep = c == b'\n';
+        match st {
+            St::Code => {
+                if c == b'/' && n == b'/' {
+                    st = St::Line;
+                    out[i] = b' ';
+                } else if c == b'/' && n == b'*' {
+                    st = St::Block(1);
+                    out[i] = b' ';
+                } else if c == b'"' {
+                    st = St::Str;
+                    out[i] = b' ';
+                } else if c == b'r'
+                    && (i == 0 || !is_ident(b[i - 1]))
+                    && raw_str_hashes(b, i).is_some()
+                {
+                    st = St::RawStr(raw_str_hashes(b, i).unwrap());
+                    out[i] = b' ';
+                } else if c == b'\'' {
+                    // char literal vs lifetime: a literal is 'x' or an
+                    // escape; a lifetime has no closing quote right after
+                    if n == b'\\' || b.get(i + 2).copied() == Some(b'\'') {
+                        st = St::Char;
+                        out[i] = b' ';
+                    } else {
+                        out[i] = c;
+                    }
+                } else {
+                    out[i] = c;
+                }
+                i += 1;
+                continue;
+            }
+            St::Line => {
+                if c == b'\n' {
+                    st = St::Code;
+                }
+            }
+            St::Block(d) => {
+                if c == b'*' && n == b'/' {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    out[i] = b' ';
+                    out[i + 1] = b' ';
+                    i += 2;
+                    continue;
+                }
+                if c == b'/' && n == b'*' {
+                    st = St::Block(d + 1);
+                    out[i] = b' ';
+                    out[i + 1] = b' ';
+                    i += 2;
+                    continue;
+                }
+            }
+            St::Str => {
+                if c == b'\\' {
+                    // keep escaped newlines (line-continuation strings)
+                    // so line numbers stay aligned
+                    out[i] = b' ';
+                    if i + 1 < b.len() {
+                        out[i + 1] = if b[i + 1] == b'\n' { b'\n' } else { b' ' };
+                    }
+                    i += 2;
+                    continue;
+                }
+                if c == b'"' {
+                    st = St::Code;
+                }
+            }
+            St::RawStr(h) => {
+                if c == b'"' && b[i + 1..].iter().take(h).filter(|&&x| x == b'#').count() == h {
+                    out[i] = b' ';
+                    for o in out.iter_mut().skip(i + 1).take(h) {
+                        *o = b' ';
+                    }
+                    st = St::Code;
+                    i += 1 + h;
+                    continue;
+                }
+            }
+            St::Char => {
+                if c == b'\\' {
+                    out[i] = b' ';
+                    if i + 1 < b.len() {
+                        out[i + 1] = b' ';
+                    }
+                    i += 2;
+                    continue;
+                }
+                if c == b'\'' {
+                    st = St::Code;
+                }
+            }
+        }
+        out[i] = if keep { b'\n' } else { b' ' };
+        i += 1;
+    }
+    String::from_utf8(out).expect("stripped source is ASCII+newlines")
+}
+
+/// If `b[i..]` starts a raw string (`r"` / `r#"` / ...), the hash count.
+fn raw_str_hashes(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    (j < b.len() && b[j] == b'"').then_some(j - i - 1)
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of word-boundary matches of `word` in `hay`.
+fn find_words(hay: &str, word: &str) -> Vec<usize> {
+    let (h, w) = (hay.as_bytes(), word.as_bytes());
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(word) {
+        let off = from + p;
+        let pre = off == 0 || !is_ident(h[off - 1]);
+        let post = off + w.len() >= h.len() || !is_ident(h[off + w.len()]);
+        if pre && post {
+            out.push(off);
+        }
+        from = off + w.len();
+    }
+    out
+}
+
+/// 1-based line number of byte offset `off` (clean text keeps newlines).
+fn line_of(text: &str, off: usize) -> usize {
+    text.as_bytes()[..off].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+struct FnSpan {
+    name: String,
+    /// byte offset of the fn's name token (to skip definition sites)
+    name_off: usize,
+    /// body byte range, excluding the outer braces
+    body: Range<usize>,
+    target_feature: bool,
+}
+
+/// Named-fn spans via brace matching over the stripped source. The
+/// original source provides the attribute lines above each `fn`.
+fn fn_spans(clean: &str, orig: &str) -> Vec<FnSpan> {
+    let bytes = clean.as_bytes();
+    let orig_lines: Vec<&str> = orig.lines().collect();
+    let mut spans = Vec::new();
+    for off in find_words(clean, "fn") {
+        let mut j = off + 2;
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < bytes.len() && is_ident(bytes[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue; // `fn(..)` pointer type, not a definition
+        }
+        let name = clean[name_start..j].to_string();
+        let mut k = j;
+        // find the body `{`, tolerating `;` inside `[i32; NR]`-style
+        // array types in the signature (depth-tracked); a `;` at depth
+        // zero means a bodyless declaration
+        let mut depth = 0i32;
+        let open = loop {
+            match bytes.get(k) {
+                Some(b'(' | b'[') => depth += 1,
+                Some(b')' | b']') => depth -= 1,
+                Some(b'{') if depth == 0 => break Some(k),
+                Some(b';') if depth == 0 => break None,
+                None => break None,
+                _ => {}
+            }
+            k += 1;
+        };
+        let Some(open) = open else { continue };
+        let close = match_brace(bytes, open);
+        // attributes/doc lines directly above the `fn` line
+        let mut tf = false;
+        let mut li = line_of(clean, off) - 1; // 0-based index of fn line
+        while li > 0 {
+            li -= 1;
+            let t = orig_lines[li].trim_start();
+            if t.starts_with("#[") || t.starts_with("#![") || t.starts_with("//") || t.is_empty() {
+                if t.contains("#[target_feature") {
+                    tf = true;
+                }
+            } else {
+                break;
+            }
+        }
+        spans.push(FnSpan {
+            name,
+            name_off: name_start,
+            body: open + 1..close,
+            target_feature: tf,
+        });
+    }
+    spans
+}
+
+/// Offset of the `}` matching the `{` at `open` (or EOF if unbalanced).
+fn match_brace(bytes: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    bytes.len()
+}
+
+// ---------------------------------------------------------------------------
+// rule 1: SAFETY comments
+// ---------------------------------------------------------------------------
+
+fn lint_safety(file: &str, orig: &str, clean: &str) -> Vec<Violation> {
+    let orig_lines: Vec<&str> = orig.lines().collect();
+    let mut out = Vec::new();
+    let mut seen = BTreeSet::new();
+    for off in find_words(clean, "unsafe") {
+        let line = line_of(clean, off);
+        if !seen.insert(line) {
+            continue;
+        }
+        let mut ok = false;
+        let mut li = line - 1; // 0-based index of the `unsafe` line
+        while li > 0 {
+            li -= 1;
+            let t = orig_lines[li].trim_start();
+            if t.starts_with("//") {
+                // walk through the whole comment block: the SAFETY tag
+                // may sit on its first line
+                if t.contains("SAFETY:") || t.contains("# Safety") {
+                    ok = true;
+                    break;
+                }
+            } else if !(t.starts_with("#[") || t.starts_with("#![") || t.is_empty()) {
+                break;
+            }
+        }
+        if !ok {
+            out.push(Violation {
+                file: file.to_string(),
+                line,
+                rule: "safety-comment",
+                msg: "`unsafe` without a `// SAFETY:` (or `/// # Safety`) comment directly above"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule 2: #[target_feature] dispatch
+// ---------------------------------------------------------------------------
+
+/// `files` entries are (label, original source, stripped source).
+fn lint_target_feature(files: &[(String, String, String)]) -> Vec<Violation> {
+    let per_file: Vec<Vec<FnSpan>> =
+        files.iter().map(|(_, orig, clean)| fn_spans(clean, orig)).collect();
+    let mut tf_names = BTreeSet::new();
+    let mut detectors = BTreeSet::new();
+    for (spans, (_, _, clean)) in per_file.iter().zip(files) {
+        for s in spans {
+            if s.target_feature {
+                tf_names.insert(s.name.clone());
+            }
+            if clean[s.body.clone()].contains("is_x86_feature_detected!") {
+                detectors.insert(s.name.clone());
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (spans, (label, _, clean)) in per_file.iter().zip(files) {
+        let bytes = clean.as_bytes();
+        for name in &tf_names {
+            for off in find_words(clean, name) {
+                if spans.iter().any(|s| s.name_off == off) {
+                    continue; // definition, not a call
+                }
+                let mut j = off + name.len();
+                while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                if bytes.get(j) != Some(&b'(') {
+                    continue; // not a call site
+                }
+                let enclosing =
+                    spans.iter().filter(|s| s.body.contains(&off)).max_by_key(|s| s.body.start);
+                let guarded = match enclosing {
+                    Some(s) if s.target_feature => true,
+                    Some(s) => {
+                        let body = &clean[s.body.clone()];
+                        body.contains("is_x86_feature_detected!")
+                            || detectors.iter().any(|d| {
+                                find_words(body, d).iter().any(|&w| {
+                                    let mut k = w + d.len();
+                                    let bb = body.as_bytes();
+                                    while k < bb.len() && bb[k].is_ascii_whitespace() {
+                                        k += 1;
+                                    }
+                                    bb.get(k) == Some(&b'(')
+                                })
+                            })
+                    }
+                    None => false,
+                };
+                if !guarded {
+                    out.push(Violation {
+                        file: label.clone(),
+                        line: line_of(clean, off),
+                        rule: "target-feature-dispatch",
+                        msg: format!(
+                            "`{name}` is #[target_feature] but this call site is not behind \
+                             an is_x86_feature_detected! dispatch"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule 3: raw std::sync primitives outside check/
+// ---------------------------------------------------------------------------
+
+fn lint_raw_sync(file: &str, clean: &str) -> Vec<Violation> {
+    if file.contains("/check/") {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = clean[from..].find("std::sync::") {
+        let tail_start = from + p + "std::sync::".len();
+        let tail_end =
+            clean[tail_start..].find(';').map(|e| tail_start + e).unwrap_or(clean.len());
+        let seg = &clean[tail_start..tail_end];
+        for prim in ["Mutex", "Condvar", "RwLock"] {
+            if let Some(&w) = find_words(seg, prim).first() {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: line_of(clean, tail_start + w),
+                    rule: "raw-sync",
+                    msg: format!(
+                        "std::sync::{prim} outside check/ — use crate::check::sync::{prim} \
+                         so the model checker can interpose"
+                    ),
+                });
+            }
+        }
+        from = tail_start;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule 4: float tokens in integer hot paths
+// ---------------------------------------------------------------------------
+
+fn lint_hot_floats(file: &str, orig: &str, clean: &str, allow: &[&str]) -> Vec<Violation> {
+    // unit tests at the bottom of kernel files may use floats freely
+    let cut = clean.find("#[cfg(test)]").unwrap_or(clean.len());
+    let clean = &clean[..cut];
+    let spans = fn_spans(clean, orig);
+    let mut out = Vec::new();
+    let mut seen = BTreeSet::new();
+    for s in &spans {
+        if allow.contains(&s.name.as_str()) {
+            continue;
+        }
+        let body = &clean[s.body.clone()];
+        for ty in ["f32", "f64"] {
+            for off in find_words(body, ty) {
+                let line = line_of(clean, s.body.start + off);
+                if seen.insert((line, ty)) {
+                    out.push(Violation {
+                        file: file.to_string(),
+                        line,
+                        rule: "hot-path-float",
+                        msg: format!("`{ty}` in integer hot-path fn `{}`", s.name),
+                    });
+                }
+            }
+        }
+        let b = body.as_bytes();
+        for i in 1..b.len() {
+            if b[i] == b'.'
+                && b[i - 1].is_ascii_digit()
+                && b.get(i + 1).is_some_and(|d| d.is_ascii_digit())
+            {
+                let line = line_of(clean, s.body.start + i);
+                if seen.insert((line, "lit")) {
+                    out.push(Violation {
+                        file: file.to_string(),
+                        line,
+                        rule: "hot-path-float",
+                        msg: format!("float literal in integer hot-path fn `{}`", s.name),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// drivers
+// ---------------------------------------------------------------------------
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn lint_tree() -> ExitCode {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root").to_path_buf();
+    let src = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    collect_rs_files(&src, &mut paths);
+    let files: Vec<(String, String, String)> = paths
+        .iter()
+        .map(|p| {
+            let rel = p.strip_prefix(&root).unwrap_or(p).display().to_string();
+            let orig = fs::read_to_string(p).unwrap_or_else(|e| panic!("read {rel}: {e}"));
+            let clean = strip(&orig);
+            (rel, orig, clean)
+        })
+        .collect();
+    let mut violations = Vec::new();
+    for (label, orig, clean) in &files {
+        violations.extend(lint_safety(label, orig, clean));
+        violations.extend(lint_raw_sync(label, clean));
+        for (hot, allow) in HOT_PATH_ALLOW {
+            if label.strip_prefix("rust/src/") == Some(*hot) {
+                violations.extend(lint_hot_floats(label, orig, clean, allow));
+            }
+        }
+    }
+    violations.extend(lint_target_feature(&files));
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    if violations.is_empty() {
+        println!("xtask lint: OK ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------------
+// --self-test: seeded violations must be caught, clean twins must pass
+// ---------------------------------------------------------------------------
+
+fn self_test() -> ExitCode {
+    let mut failed = 0usize;
+    let mut check = |name: &str, got: usize, want: usize| {
+        if got == want {
+            println!("self-test {name}: ok ({got} finding(s))");
+        } else {
+            eprintln!("self-test {name}: FAILED — {got} finding(s), expected {want}");
+            failed += 1;
+        }
+    };
+
+    // rule 1: safety-comment
+    let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let good =
+        "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller keeps p valid\n    unsafe { *p }\n}\n";
+    let doc = "/// # Safety\n/// p must be valid.\n#[inline]\nunsafe fn g(p: *const u8) {}\n";
+    let tricky = "fn f() { let s = \"unsafe\"; } // unsafe in a string and a comment\n";
+    let got = lint_safety("seed.rs", bad, &strip(bad)).len();
+    check("safety/seeded", got, 1);
+    let got = lint_safety("seed.rs", good, &strip(good)).len();
+    check("safety/clean", got, 0);
+    let got = lint_safety("seed.rs", doc, &strip(doc)).len();
+    check("safety/doc-section", got, 0);
+    let got = lint_safety("seed.rs", tricky, &strip(tricky)).len();
+    check("safety/strings", got, 0);
+
+    // rule 2: target-feature-dispatch
+    let tf_def = "#[target_feature(enable = \"avx2\")]\nunsafe fn kern(x: &mut [i32]) {}\n";
+    let guard = "    if is_x86_feature_detected!(\"avx2\") {\n        unsafe { kern(x) };\n    }\n";
+    let bad = format!("{tf_def}fn caller(x: &mut [i32]) {{\n    unsafe {{ kern(x) }};\n}}\n");
+    let good = format!("{tf_def}fn caller(x: &mut [i32]) {{\n{guard}}}\n");
+    let det = "fn have() -> bool {\n    is_x86_feature_detected!(\"avx2\")\n}\n";
+    let call =
+        "fn caller(x: &mut [i32]) {\n    if have() {\n        unsafe { kern(x) };\n    }\n}\n";
+    let indirect = format!("{tf_def}{det}{call}");
+    let pack = |src: &str| vec![("seed.rs".to_string(), src.to_string(), strip(src))];
+    let got = lint_target_feature(&pack(&bad)).len();
+    check("target-feature/seeded", got, 1);
+    let got = lint_target_feature(&pack(&good)).len();
+    check("target-feature/clean", got, 0);
+    let got = lint_target_feature(&pack(&indirect)).len();
+    check("target-feature/detector-fn", got, 0);
+
+    // rule 3: raw-sync
+    let bad = "use std::sync::{Arc, Mutex};\n";
+    let bad2 = "fn f() -> std::sync::RwLock<u8> {\n    std::sync::RwLock::new(0)\n}\n";
+    let good = "use std::sync::Arc;\nuse std::sync::atomic::Ordering;\n";
+    let got = lint_raw_sync("rust/src/serve/seed.rs", &strip(bad)).len();
+    check("raw-sync/seeded-use", got, 1);
+    let got = lint_raw_sync("rust/src/serve/seed.rs", &strip(bad2)).len();
+    check("raw-sync/seeded-path", got, 2);
+    let got = lint_raw_sync("rust/src/serve/seed.rs", &strip(good)).len();
+    check("raw-sync/clean", got, 0);
+    let got = lint_raw_sync("rust/src/check/seed.rs", &strip(bad)).len();
+    check("raw-sync/check-exempt", got, 0);
+
+    // rule 4: hot-path-float
+    let bad =
+        "fn requant(acc: i32) -> i8 {\n    let s = 0.5;\n    ((acc as f32) * s) as i8\n}\n";
+    let tests_only =
+        "fn ok(a: i32) -> i32 {\n    a\n}\n#[cfg(test)]\nfn t() -> f32 {\n    1.5\n}\n";
+    let got = lint_hot_floats("seed.rs", bad, &strip(bad), &[]).len();
+    check("hot-float/seeded", got, 2);
+    let got = lint_hot_floats("seed.rs", bad, &strip(bad), &["requant"]).len();
+    check("hot-float/allowlist", got, 0);
+    let got = lint_hot_floats("seed.rs", tests_only, &strip(tests_only), &[]).len();
+    check("hot-float/tests-exempt", got, 0);
+
+    if failed == 0 {
+        println!("xtask lint --self-test: all rules bite");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint --self-test: {failed} rule check(s) FAILED");
+        ExitCode::FAILURE
+    }
+}
