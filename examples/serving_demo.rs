@@ -14,8 +14,8 @@ use fqconv::infer::graph::{synthetic_graph, SynthArch};
 use fqconv::infer::FqKwsNet;
 use fqconv::runtime::{hp, Engine, Manifest};
 use fqconv::serve::{
-    BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec, NativeBackend, Priority, Server,
-    XlaBackend,
+    AdmissionPolicy, BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec, NativeBackend,
+    Priority, Server, XlaBackend,
 };
 use fqconv::util::{Rng, Timer};
 
@@ -120,27 +120,25 @@ fn main() -> anyhow::Result<()> {
     let resnet = std::sync::Arc::new(synthetic_graph(&SynthArch::resnet32(), 1.0, 7.0, 9)?);
     registry.register(
         "kws-w2",
-        ModelSpec {
-            factory: NativeBackend::factory(&net, &shape),
-            sample_numel: numel,
-            policy: BatchPolicy::new(16, 2000),
-        },
+        ModelSpec::new(NativeBackend::factory(&net, &shape), numel, BatchPolicy::new(16, 2000))
+            .with_cost(net.cost_per_sample()),
     )?;
     registry.register(
         "kws-w2-alt",
-        ModelSpec {
-            factory: NativeBackend::factory(&fast, &shape),
-            sample_numel: numel,
-            policy: BatchPolicy::new(4, 500),
-        },
+        ModelSpec::new(NativeBackend::factory(&fast, &shape), numel, BatchPolicy::new(4, 500))
+            .with_cost(fast.cost_per_sample()),
     )?;
+    // the expensive 2-D model gets a declared cost (DWFQ weight) and a
+    // bounded queue, so a CIFAR flood cannot starve the KWS lanes
     registry.register(
         "resnet32",
-        ModelSpec {
-            factory: GraphBackend::factory(&resnet),
-            sample_numel: resnet.in_numel(),
-            policy: BatchPolicy::new(4, 2000),
-        },
+        ModelSpec::new(
+            GraphBackend::factory(&resnet),
+            resnet.in_numel(),
+            BatchPolicy::new(4, 2000),
+        )
+        .with_cost(resnet.cost_per_sample())
+        .with_admission(AdmissionPolicy::bounded(64)),
     )?;
     let (id_a, id_b) = (ModelId::new("kws-w2"), ModelId::new("kws-w2-alt"));
     let id_r = ModelId::new("resnet32");

@@ -8,8 +8,11 @@
 //! (req/s, p50/p99 latency, mean batch size per configuration,
 //! per-priority p50/p99 from the mixed-priority run, and the `batch_2d`
 //! section — GraphBackend sample-parallel batched image serving vs the
-//! sequential per-sample walk, for ResNet-32 and DarkNet-19) so the
-//! serving-perf trajectory is tracked across PRs.
+//! sequential per-sample walk, for ResNet-32 and DarkNet-19 — plus the
+//! `saturation` section: interactive KWS p50/p99 and the flood's shed
+//! rate while a darknet19 batch lane is 10x oversubscribed behind a
+//! bounded admission queue) so the serving-perf trajectory is tracked
+//! across PRs.
 //! `FQCONV_BENCH_SMOKE=1` shrinks the load to one short iteration.
 #[path = "common.rs"]
 mod common;
@@ -20,9 +23,12 @@ use fqconv::bench::{banner, bench};
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset as _};
 use fqconv::exec;
-use fqconv::infer::graph::{synthetic_graph, SynthArch};
+use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
 use fqconv::infer::FqKwsNet;
-use fqconv::serve::{Backend as _, BatchPolicy, GraphBackend, NativeBackend, Priority, Server};
+use fqconv::serve::{
+    AdmissionPolicy, Backend as _, BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec,
+    NativeBackend, Priority, ServeError, Server,
+};
 use fqconv::util::json::{num, obj, s, Json};
 use fqconv::util::{Rng, Timer};
 
@@ -191,6 +197,114 @@ fn main() {
         ]));
     }
 
+    // overload saturation: interactive KWS next to a 10x-oversubscribed
+    // darknet19 batch flood behind a bounded admission queue and a
+    // replica budget of 1 — the robustness headline is the interactive
+    // p99 ratio vs the unloaded baseline plus the flood's shed rate
+    println!("\n--- saturation: interactive KWS vs 10x-oversubscribed darknet19 flood ---");
+    let dark = Arc::new(synthetic_graph(&SynthArch::darknet19(), 1.0, 7.0, 7).expect("darknet19"));
+    let mut dark_in = vec![0f32; dark.in_numel()];
+    Rng::new(9).fill_gaussian(&mut dark_in, 0.5);
+    // best-of-3 single-sample service time sets the flood pace
+    let mut scratch = Scratch::for_graph(&dark);
+    let mut t_dark = f64::MAX;
+    for _ in 0..3 {
+        let t = Timer::start();
+        std::hint::black_box(dark.forward(&dark_in, &mut scratch));
+        t_dark = t_dark.min(t.elapsed_s());
+    }
+    let sat_workers = 2usize;
+    let overload = 10.0f64;
+    let n_inter = if smoke() { 60usize } else { 200 };
+    let n_flood = if smoke() { 40usize } else { 300 };
+    let kws_spec = || {
+        ModelSpec::new(
+            NativeBackend::factory_sharded(&net, &shape, sat_workers),
+            numel,
+            BatchPolicy::new(8, 1000),
+        )
+        .with_cost(net.cost_per_sample())
+    };
+    let kid = ModelId::new("kws");
+    // unloaded baseline: the same paced interactive traffic, no flood
+    let registry = ModelRegistry::start(sat_workers);
+    registry.register("kws", kws_spec()).expect("register kws");
+    let mut rxs = Vec::new();
+    for f in feats.iter().take(n_inter) {
+        rxs.push(registry.submit_with(&kid, f.clone(), Priority::Interactive, None).expect("kws"));
+        std::thread::sleep(std::time::Duration::from_micros(800));
+    }
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let base = registry.stats();
+    let base_p99 = base.models[0].priorities[Priority::Interactive.index()].p99_us;
+    registry.shutdown();
+
+    // saturated run: identical interactive traffic + the flood. The
+    // flood model rides the Batch lane behind a pending bound of 8 and
+    // a replica budget of 1, so one worker grinds the flood while the
+    // rest of the pool keeps interactive headroom.
+    let registry = ModelRegistry::start(sat_workers);
+    registry.register("kws", kws_spec()).expect("register kws");
+    registry
+        .register(
+            "darknet19",
+            ModelSpec::new(
+                GraphBackend::factory_sharded(&dark, sat_workers),
+                dark.in_numel(),
+                BatchPolicy::new(2, 2000),
+            )
+            .with_cost(dark.cost_per_sample())
+            .with_admission(AdmissionPolicy::bounded(8)),
+        )
+        .expect("register darknet19");
+    let did = ModelId::new("darknet19");
+    registry.set_replica_budget(&did, 1);
+    // inter-arrival for `overload`x the pool's single-sample capacity
+    let flood_gap_us = (t_dark * 1e6 / (sat_workers as f64 * overload)).max(1.0) as u64;
+    std::thread::scope(|scope| {
+        let (reg, kid, did) = (&registry, &kid, &did);
+        let (feats, dark_in) = (&feats, &dark_in);
+        scope.spawn(move || {
+            let mut rxs = Vec::new();
+            for _ in 0..n_flood {
+                match reg.submit_with(did, dark_in.clone(), Priority::Batch, None) {
+                    Ok(rx) => rxs.push(rx),
+                    // over the bound: the typed shed *is* the measurement
+                    Err(ServeError::Overloaded { .. }) => {}
+                    Err(e) => panic!("flood submit failed: {e}"),
+                }
+                std::thread::sleep(std::time::Duration::from_micros(flood_gap_us));
+            }
+            for rx in rxs {
+                rx.recv().expect("flood reply").expect("flood served");
+            }
+        });
+        let mut rxs = Vec::new();
+        for f in feats.iter().take(n_inter) {
+            rxs.push(reg.submit_with(kid, f.clone(), Priority::Interactive, None).expect("kws"));
+            std::thread::sleep(std::time::Duration::from_micros(800));
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    });
+    let sat = registry.stats();
+    let km = sat.models.iter().find(|m| m.id == kid).expect("kws stats");
+    let kp = &km.priorities[Priority::Interactive.index()];
+    let dm = sat.models.iter().find(|m| m.id == did).expect("darknet19 stats");
+    let shed_rate = dm.shed as f64 / n_flood as f64;
+    let p99_ratio = kp.p99_us / base_p99.max(1.0);
+    println!(
+        "interactive p99 {:.0}us (unloaded {base_p99:.0}us, {p99_ratio:.2}x) | flood: {n_flood} \
+         offered, {} shed ({:.0}% shed rate)",
+        kp.p99_us,
+        dm.shed,
+        shed_rate * 100.0
+    );
+    registry.shutdown();
+
     let prio_json = |p: &fqconv::serve::PriorityStats| {
         obj(vec![
             ("served", num(p.served as f64)),
@@ -220,6 +334,20 @@ fn main() {
             ]),
         ),
         ("batch_2d", Json::Arr(batch2d_json)),
+        (
+            "saturation",
+            obj(vec![
+                ("workers", num(sat_workers as f64)),
+                ("overload_factor", num(overload)),
+                ("kws_unloaded_p99_us", num(base_p99)),
+                ("kws_p50_us", num(kp.p50_us)),
+                ("kws_p99_us", num(kp.p99_us)),
+                ("p99_ratio_vs_unloaded", num(p99_ratio)),
+                ("dark_offered", num(n_flood as f64)),
+                ("dark_shed", num(dm.shed as f64)),
+                ("shed_rate", num(shed_rate)),
+            ]),
+        ),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
     match std::fs::write(path, out.to_string() + "\n") {

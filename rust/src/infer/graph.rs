@@ -882,6 +882,15 @@ impl QuantGraph {
         total
     }
 
+    /// Per-sample serving cost estimate: conv MACs plus the dense
+    /// head's multiplies. This is the deficit-weighted-fair-queueing
+    /// weight the registry schedules by (`serve`), so a DarkNet-19
+    /// next to a KWS net is charged for what it actually costs rather
+    /// than per request.
+    pub fn cost_per_sample(&self) -> u64 {
+        self.macs_per_sample() + (self.head().d_in * self.head().d_out) as u64
+    }
+
     /// MAC accounting for image graphs: walk the spatial extent through
     /// every conv stage (residual bodies + shortcut projections).
     fn macs_2d(&self) -> u64 {

@@ -262,4 +262,10 @@ impl FqKwsNet {
     pub fn macs_per_sample(&self) -> u64 {
         self.graph.macs_per_sample()
     }
+
+    /// Per-sample serving cost (conv MACs + head multiplies) — the
+    /// registry's DWFQ weight; see [`QuantGraph::cost_per_sample`].
+    pub fn cost_per_sample(&self) -> u64 {
+        self.graph.cost_per_sample()
+    }
 }

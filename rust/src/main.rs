@@ -5,7 +5,7 @@
 //!   plan --model <m> [--steps N]                Fig. 1 GQ schedule renderer
 //!   exp <table1..table7|all> [--budget B] ...   regenerate a paper table
 //!   train --model <m> [--steps N] [--verbose]   run the model's GQ ladder
-//!   serve [--requests N] [--workers W]          serving demo + latency stats
+//!   serve [--requests N] [--workers W]          serving demo + latency/shed stats
 //!   selftest                                    quick wiring check
 //!
 //! Budgets: --budget smoke|quick|full (default quick for exp, full for train).
@@ -18,7 +18,7 @@ use fqconv::data;
 use fqconv::exp::{self, Ctx};
 use fqconv::infer::FqKwsNet;
 use fqconv::runtime::{Engine, Manifest};
-use fqconv::serve::{BatchPolicy, NativeBackend, Priority, Server};
+use fqconv::serve::{AdmissionPolicy, BatchPolicy, ModelSpec, NativeBackend, Priority, Server};
 use fqconv::util::cli::Args;
 use fqconv::util::{Rng, Timer};
 
@@ -27,7 +27,7 @@ const USAGE: &str = "usage: fqconv <arch|plan|exp|train|serve|selftest> [options
   plan --model <model> [--steps N]
   exp <table1|table2|table3|table4|table5|table6|table7|all> [--budget smoke|quick|full] [--model M] [--verbose]
   train --model <model> [--steps N] [--ckpt-dir DIR] [--verbose]
-  serve [--requests N] [--workers W] [--max-batch B] [--max-wait-us U] [--deadline-us D]
+  serve [--requests N] [--workers W] [--max-batch B] [--max-wait-us U] [--deadline-us D] [--max-pending P]
   selftest";
 
 fn main() -> Result<()> {
@@ -211,11 +211,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // none and the Interactive ones carry this budget
     let deadline_us = args.u64_or("deadline-us", 0);
     let deadline = (deadline_us > 0).then(|| std::time::Duration::from_micros(deadline_us));
+    // 0 = unbounded; otherwise admission control sheds submits over the
+    // per-lane pending bound with a typed Overloaded reply
+    let max_pending = args.usize_or("max-pending", 0);
+    let admission = if max_pending == 0 {
+        AdmissionPolicy::unbounded()
+    } else {
+        AdmissionPolicy::bounded(max_pending)
+    };
     let sample_numel: usize = input_shape.iter().product();
     // split the intra-layer thread budget across the serve workers so
     // their batch-of-one forks don't contend on the global pool lock
     let factory = NativeBackend::factory_sharded(&net, &input_shape, workers);
-    let server = Server::start(factory, workers, sample_numel, policy);
+    let spec = ModelSpec::new(factory, sample_numel, policy)
+        .with_cost(net.cost_per_sample())
+        .with_admission(admission);
+    let server = Server::start_spec(spec, workers);
 
     let ds = data::for_model("kws", &input_shape, net.classes);
     let n = args.usize_or("requests", 256);
@@ -223,6 +234,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let t = Timer::start();
     let mut correct = 0usize;
     let mut expired = 0usize;
+    let mut shed = 0usize;
     let mut pending = Vec::new();
     let mut labels = Vec::new();
     for i in 0..n {
@@ -245,15 +257,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 }
             }
             Err(fqconv::serve::ServeError::DeadlineExceeded { .. }) => expired += 1,
+            Err(fqconv::serve::ServeError::Overloaded { .. }) => shed += 1,
             Err(e) => anyhow::bail!("serving failed: {e}"),
         }
     }
     let dt = t.elapsed_s();
     let stats = server.stats();
-    let answered = n - expired;
+    let answered = n - expired - shed;
     println!("served {answered}/{n} requests in {dt:.3}s = {:.0} req/s", answered as f64 / dt);
     println!(
-        "accuracy {:.2}%  mean batch {:.1}  expired {expired}",
+        "accuracy {:.2}%  mean batch {:.1}  expired {expired}  shed {shed}",
         correct as f64 / answered.max(1) as f64 * 100.0,
         stats.mean_batch
     );

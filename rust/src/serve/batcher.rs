@@ -10,13 +10,16 @@
 //! a typed error promptly at its deadline (early expiry) — and whatever
 //! slips through is still expired at dispatch or at worker pop.
 //!
-//! [`simulate`] / [`simulate_prio`] are discrete-time models of the
-//! threaded loop (`serve`), used by the property tests in
-//! rust/tests/properties.rs: no admissible arrival sequence may starve a
-//! request beyond `max_wait_us` + backlog, an Interactive batch never
-//! waits behind a Batch-priority batch it was ready before, and a
-//! deadlined request is either dispatched by its deadline or expired —
-//! never silently lost.
+//! [`simulate`] / [`simulate_prio`] / [`simulate_prio_bounded`] are
+//! discrete-time models of the threaded loop (`serve`), used by the
+//! property tests in rust/tests/properties.rs: no admissible arrival
+//! sequence may starve a request beyond `max_wait_us` + backlog, an
+//! Interactive batch never waits behind a Batch-priority batch it was
+//! ready before, and a deadlined request is either dispatched by its
+//! deadline or expired — never silently lost. The bounded variant adds
+//! the registry's admission control: a lane at its pending bound
+//! refuses new arrivals with [`SimOutcome::Shed`] *at submit* — a shed
+//! is never deferred to a deadline.
 //!
 //! Because this module is pure (no locks, no threads), it needs nothing
 //! from the `crate::check::sync` facade; the *threaded* batcher loop in
@@ -100,13 +103,18 @@ pub enum SimOutcome {
     /// deadline elapsed before the batch could start; answered with
     /// `ServeError::DeadlineExceeded` at `at_us`
     Expired { at_us: u64 },
+    /// refused admission: the lane already held its bound of pending
+    /// requests at the arrival instant, so the request was answered
+    /// with `ServeError::Overloaded` **at submit** (`at_us` is always
+    /// the arrival time — shedding never waits for a deadline)
+    Shed { at_us: u64 },
 }
 
 impl SimOutcome {
     pub fn start_us(&self) -> Option<u64> {
         match self {
             SimOutcome::Dispatched { start_us, .. } => Some(*start_us),
-            SimOutcome::Expired { .. } => None,
+            SimOutcome::Expired { .. } | SimOutcome::Shed { .. } => None,
         }
     }
 }
@@ -143,14 +151,92 @@ pub fn simulate_prio(
     reqs: &[SimRequest],
     service_us: u64,
 ) -> Vec<SimOutcome> {
+    simulate_prio_bounded(policy, None, reqs, service_us)
+}
+
+/// [`simulate_prio`] with per-lane admission control: with
+/// `bound = Some(B)`, a request arriving while its priority lane
+/// already holds `B` pending admitted requests is refused at submit
+/// with [`SimOutcome::Shed`] at its own arrival instant. "Pending"
+/// mirrors the threaded registry's reservation counter: a request
+/// holds its slot from arrival until its *terminal reply* — the end of
+/// its service (`start_us + service_us`) or its expiry — not merely
+/// until dispatch. Shed requests occupy no slot, join no batch, and
+/// never expire. `bound = None` is exactly [`simulate_prio`].
+///
+/// Computed as a fixpoint: shedding the first over-bound arrival
+/// changes every later batch composition, so the simulation re-runs on
+/// the surviving set until no arrival finds its lane full. Each round
+/// sheds exactly one request, so it terminates.
+pub fn simulate_prio_bounded(
+    policy: BatchPolicy,
+    bound: Option<usize>,
+    reqs: &[SimRequest],
+    service_us: u64,
+) -> Vec<SimOutcome> {
+    let mut admitted = vec![true; reqs.len()];
+    loop {
+        let out = simulate_admitted(policy, reqs, service_us, &admitted);
+        let Some(b) = bound else { return out };
+        // departure instant of each admitted request: when its terminal
+        // reply releases the lane slot (service end, or typed expiry)
+        let depart: Vec<u64> = out
+            .iter()
+            .map(|o| match *o {
+                SimOutcome::Dispatched { start_us, .. } => start_us + service_us,
+                SimOutcome::Expired { at_us } | SimOutcome::Shed { at_us } => at_us,
+            })
+            .collect();
+        // first arrival that found its lane full (ties broken by
+        // submission order = index order)
+        let victim = (0..reqs.len()).find(|&i| {
+            if !admitted[i] {
+                return false;
+            }
+            let lane = reqs[i].priority.index();
+            let t = reqs[i].arrival_us;
+            let held = (0..i)
+                .filter(|&j| {
+                    admitted[j] && reqs[j].priority.index() == lane && depart[j] > t
+                })
+                .count();
+            held >= b
+        });
+        match victim {
+            Some(i) => admitted[i] = false,
+            None => return out,
+        }
+    }
+}
+
+/// One simulation pass over the admitted subset; non-admitted requests
+/// are reported [`SimOutcome::Shed`] at their arrival and are invisible
+/// to batching, queueing, and the worker.
+fn simulate_admitted(
+    policy: BatchPolicy,
+    reqs: &[SimRequest],
+    service_us: u64,
+    admitted: &[bool],
+) -> Vec<SimOutcome> {
     debug_assert!(reqs.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
-    let mut out = vec![SimOutcome::Expired { at_us: 0 }; reqs.len()];
+    let mut out: Vec<SimOutcome> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            if admitted[i] {
+                SimOutcome::Expired { at_us: 0 }
+            } else {
+                SimOutcome::Shed { at_us: r.arrival_us }
+            }
+        })
+        .collect();
 
     // --- phase 1: close batches per priority (independent of the queue
     // and worker state, exactly as in the threaded batcher) ------------
     let mut batches: Vec<SimBatch> = Vec::new();
     for prio in Priority::ALL {
-        let idx: Vec<usize> = (0..reqs.len()).filter(|&i| reqs[i].priority == prio).collect();
+        let idx: Vec<usize> =
+            (0..reqs.len()).filter(|&i| admitted[i] && reqs[i].priority == prio).collect();
         let mut i = 0;
         while i < idx.len() {
             let open = reqs[idx[i]].arrival_us;
@@ -269,6 +355,7 @@ pub fn simulate(policy: BatchPolicy, arrivals_us: &[u64], service_us: u64) -> Ve
         .map(|o| match o {
             SimOutcome::Dispatched { start_us, batch, .. } => (start_us, batch),
             SimOutcome::Expired { .. } => unreachable!("no deadlines in simulate()"),
+            SimOutcome::Shed { .. } => unreachable!("no admission bound in simulate()"),
         })
         .collect()
 }
@@ -423,6 +510,69 @@ mod tests {
         }];
         let d = simulate_prio(p, &reqs, 10);
         assert_eq!(d[0], SimOutcome::Expired { at_us: 40 });
+    }
+
+    #[test]
+    fn bound_one_sheds_the_overlapping_arrival_at_submit() {
+        // batch-of-one, slow worker: request 0 holds its lane slot until
+        // its reply at t=5_000, so request 1 (same lane, arrives at
+        // t=10) finds the lane full and is shed at its own arrival —
+        // request 2 arrives after the reply and rides normally
+        let p = BatchPolicy::new(1, 100);
+        let reqs = vec![
+            SimRequest::at(0, Priority::Interactive),
+            SimRequest::at(10, Priority::Interactive),
+            SimRequest::at(6_000, Priority::Interactive),
+        ];
+        let d = simulate_prio_bounded(p, Some(1), &reqs, 5_000);
+        assert_eq!(d[0], SimOutcome::Dispatched { closed_us: 0, start_us: 0, batch: 1 });
+        assert_eq!(d[1], SimOutcome::Shed { at_us: 10 }, "shed at submit, not later");
+        assert_eq!(d[2], SimOutcome::Dispatched { closed_us: 6_000, start_us: 6_000, batch: 1 });
+    }
+
+    #[test]
+    fn lanes_have_independent_bounds() {
+        // the Interactive lane being full must not shed a Batch arrival
+        let p = BatchPolicy::new(1, 100);
+        let reqs = vec![
+            SimRequest::at(0, Priority::Interactive),
+            SimRequest::at(10, Priority::Batch),
+        ];
+        let d = simulate_prio_bounded(p, Some(1), &reqs, 5_000);
+        assert!(matches!(d[0], SimOutcome::Dispatched { .. }));
+        assert!(matches!(d[1], SimOutcome::Dispatched { .. }));
+    }
+
+    #[test]
+    fn unbounded_delegation_is_identical() {
+        let p = BatchPolicy::new(4, 700);
+        let reqs: Vec<SimRequest> = (0..30)
+            .map(|i| {
+                let prio = if i % 3 == 0 { Priority::Batch } else { Priority::Interactive };
+                SimRequest { arrival_us: i * 61, priority: prio, deadline_us: Some(i * 61 + 900) }
+            })
+            .collect();
+        assert_eq!(
+            simulate_prio(p, &reqs, 350),
+            simulate_prio_bounded(p, None, &reqs, 350)
+        );
+    }
+
+    #[test]
+    fn shed_request_frees_no_slot_and_joins_no_batch() {
+        // bound 1, three simultaneous-ish arrivals: only the first is
+        // admitted while it is pending; the shed ones must not inflate
+        // any batch size
+        let p = BatchPolicy::new(8, 100);
+        let reqs = vec![
+            SimRequest::at(0, Priority::Interactive),
+            SimRequest::at(1, Priority::Interactive),
+            SimRequest::at(2, Priority::Interactive),
+        ];
+        let d = simulate_prio_bounded(p, Some(1), &reqs, 50);
+        assert_eq!(d[0], SimOutcome::Dispatched { closed_us: 100, start_us: 100, batch: 1 });
+        assert_eq!(d[1], SimOutcome::Shed { at_us: 1 });
+        assert_eq!(d[2], SimOutcome::Shed { at_us: 2 });
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Deterministic fault injection for serving tests and drills.
+//!
+//! [`ChaosBackend`] decorates any [`Backend`] and injects three fault
+//! classes into `infer_into`, all driven by one seeded [`Rng`] so a
+//! failing run is replayable from its seed alone:
+//!
+//! - **transient errors** — the call returns an `Err`, which the worker
+//!   loop turns into a bounded re-queue and, past the attempt budget, a
+//!   typed [`ServeError::BackendFailed`](crate::serve::ServeError)
+//!   reply;
+//! - **stalls** — the call sleeps for a configured duration before
+//!   delegating, modelling a slow or wedged replica (this is what
+//!   drives deadline expiry and feasibility shedding under test);
+//! - **worker panics** — at most one worker (by index) panics on its
+//!   *first* chaos call, exercising the worker-death containment path:
+//!   the in-flight batch still gets typed failure replies (admission
+//!   reservations released), the `RetireGuard` retires the slot, and
+//!   the survivors are woken to absorb its budgeted work.
+//!
+//! Determinism: each replica derives its stream from
+//! `seed ^ worker-index`, so a given `(seed, worker)` pair always draws
+//! the same fault sequence regardless of scheduling. The decorator
+//! holds no shared state — per the repo's raw-sync lint (which covers
+//! this file), it names no `std::sync` lock or condvar.
+//!
+//! ```no_run
+//! use std::time::Duration;
+//! use fqconv::serve::chaos::{chaos_factory, ChaosConfig};
+//! # let inner: fqconv::serve::BackendFactory = todo!();
+//! let cfg = ChaosConfig::new(7)
+//!     .with_failures(50)                               // 5% transient errors
+//!     .with_stalls(100, Duration::from_millis(2))      // 10% slow calls
+//!     .with_panic_on(1);                               // worker 1 dies
+//! let factory = chaos_factory(inner, cfg);
+//! ```
+
+use std::time::Duration;
+
+use crate::serve::{Backend, BackendFactory};
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Fault mix for a [`ChaosBackend`]; see the module doc.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// base seed; each replica draws from `seed ^ worker-index`
+    pub seed: u64,
+    /// per-mille of calls that return a transient error
+    pub fail_per_mille: u32,
+    /// per-mille of calls that stall for [`ChaosConfig::stall`]
+    pub stall_per_mille: u32,
+    /// injected delay for a stalled call
+    pub stall: Duration,
+    /// this worker's replica panics on its first chaos call
+    pub panic_on_worker: Option<usize>,
+}
+
+impl ChaosConfig {
+    /// No faults; compose with the `with_*` builders.
+    pub fn new(seed: u64) -> Self {
+        ChaosConfig {
+            seed,
+            fail_per_mille: 0,
+            stall_per_mille: 0,
+            stall: Duration::ZERO,
+            panic_on_worker: None,
+        }
+    }
+
+    /// Inject transient `Err` returns on `per_mille`/1000 of calls.
+    pub fn with_failures(mut self, per_mille: u32) -> Self {
+        self.fail_per_mille = per_mille.min(1000);
+        self
+    }
+
+    /// Stall `per_mille`/1000 of calls for `stall` before delegating.
+    pub fn with_stalls(mut self, per_mille: u32, stall: Duration) -> Self {
+        self.stall_per_mille = per_mille.min(1000);
+        self.stall = stall;
+        self
+    }
+
+    /// Panic worker `worker`'s replica on its first chaos call — at
+    /// most one worker dies, deterministically.
+    pub fn with_panic_on(mut self, worker: usize) -> Self {
+        self.panic_on_worker = Some(worker);
+        self
+    }
+}
+
+/// A [`Backend`] decorator injecting seeded faults; see the module doc.
+pub struct ChaosBackend {
+    inner: Box<dyn Backend>,
+    rng: Rng,
+    cfg: ChaosConfig,
+    worker: usize,
+    calls: u64,
+}
+
+impl ChaosBackend {
+    /// Decorate `inner` as worker `worker`'s replica under `cfg`.
+    pub fn new(inner: Box<dyn Backend>, worker: usize, cfg: ChaosConfig) -> Self {
+        ChaosBackend { inner, rng: Rng::new(cfg.seed ^ worker as u64), cfg, worker, calls: 0 }
+    }
+}
+
+impl Backend for ChaosBackend {
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        self.calls += 1;
+        if self.cfg.panic_on_worker == Some(self.worker) && self.calls == 1 {
+            panic!("chaos: injected worker panic (worker {})", self.worker);
+        }
+        let draw = self.rng.below(1000) as u32;
+        if draw < self.cfg.fail_per_mille {
+            anyhow::bail!("chaos: injected transient backend failure");
+        }
+        if draw < self.cfg.fail_per_mille + self.cfg.stall_per_mille {
+            std::thread::sleep(self.cfg.stall);
+        }
+        self.inner.infer_into(x, batch, out)
+    }
+
+    fn sample_shape(&self) -> &[usize] {
+        self.inner.sample_shape()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.inner.out_dim()
+    }
+}
+
+/// Wrap a [`BackendFactory`] so every replica it builds is decorated
+/// with a [`ChaosBackend`] seeded from `cfg.seed` and the worker index.
+pub fn chaos_factory(inner: BackendFactory, cfg: ChaosConfig) -> BackendFactory {
+    Arc::new(move |wi| Box::new(ChaosBackend::new(inner(wi), wi, cfg)) as Box<dyn Backend>)
+}

@@ -18,16 +18,21 @@
 //!   max_wait_us)                   |                 with a typed error)
 //!        |                         |
 //!        +---------> shared two-lane work queue <----+
-//!                 [Interactive lane | Batch lane]
+//!          [Interactive lane | Batch lane], each lane
+//!           holding per-model sub-queues scheduled by
+//!           deficit-weighted fair queueing over the
+//!           models' per-sample cost (MACs)
 //!                           |
 //!          idle workers PULL (Interactive first) ----+
 //!          each worker lazily builds + caches one
 //!          backend replica per model (factory runs
-//!          in-thread: non-Send backends work)
+//!          in-thread: non-Send backends work),
+//!          placement shaped by per-model replica budgets
 //!                           |
 //!  clients <----- per-request reply channels:
 //!                 Ok(Response {model, priority, logits, ...})
-//!                 | Err(ServeError::{DeadlineExceeded, BackendFailed})
+//!                 | Err(ServeError::{DeadlineExceeded, BackendFailed,
+//!                                    Overloaded})
 //! ```
 //!
 //! * [`batcher`] — pure batch-assembly policy + priority/deadline
@@ -36,12 +41,51 @@
 //!   pool serves every registered model
 //! * [`Server`] — single-model convenience facade over a registry
 //!
-//! Scheduling is **pull-based and priority-aware**: each model's
-//! batcher pushes closed batches onto the shared two-lane queue and
-//! idle workers pull — Interactive lane strictly before Batch lane, so
-//! latency-sensitive traffic never queues behind bulk scoring. A slow
+//! Scheduling is **pull-based, priority-aware, and cost-aware**: each
+//! model's batcher pushes closed batches onto the shared two-lane queue
+//! and idle workers pull — Interactive lane strictly before Batch lane,
+//! so latency-sensitive traffic never queues behind bulk scoring. A slow
 //! worker never head-of-line-blocks batches another worker could serve,
-//! and a dead worker simply stops pulling.
+//! and a dead worker simply stops pulling. Within a lane, batches are
+//! *not* FIFO across models: each model has its own FIFO sub-queue and
+//! the lane runs **deficit-weighted fair queueing** — every model
+//! carries a virtual-cost tag, a pop takes the smallest tag and charges
+//! the model `samples x cost_per_sample` ([`ModelSpec::with_cost`],
+//! typically [`QuantGraph::cost_per_sample`] MACs), so a cheap
+//! interactive model interleaves fairly with an expensive batch model
+//! instead of starving behind its backlog. Models without a declared
+//! cost are charged 1 per sample (request-count fair), which for a
+//! single registered model degenerates to exactly the old FIFO order.
+//!
+//! **Admission control and load shedding** ([`AdmissionPolicy`]): a
+//! model may bound its per-lane count of admitted-but-unanswered
+//! requests. The bound is enforced at submit by an atomic reservation —
+//! over the bound, [`ModelRegistry::submit_with`] returns
+//! [`ServeError::Overloaded`] *immediately* instead of queueing a
+//! request that will miss its deadline anyway (shedding beats
+//! deadline-missing at saturation). With
+//! [`AdmissionPolicy::shed_infeasible`], a deadlined request is also
+//! shed when the cost-based ETA (pending depth x the model's observed
+//! per-sample service-time EWMA / pool size) already exceeds its
+//! budget. The reservation is released at the request's **terminal
+//! reply** — served, expired, failed, or shed — and the protocol
+//! invariant *every admitted request reaches exactly one terminal
+//! reply* is model-checked (see CONCURRENCY.md).
+//!
+//! **Replica pressure response**: each model has a *replica budget* —
+//! how many workers (lowest indices first) may pull its batches. With
+//! [`AdmissionPolicy::autoscale`] the model's batcher scales the budget
+//! up under queue pressure (depth or deadline expiries) and down after
+//! a sustained idle period, with hysteresis on both edges;
+//! [`ModelRegistry::set_replica_budget`] sets it directly. Budgets are
+//! advisory placement, never a liveness hazard: bounced/retried batches
+//! and batches whose in-budget workers have all retired are exempt, and
+//! every budget change wakes the queue so waiting workers re-evaluate.
+//!
+//! **Chaos testing**: [`chaos::ChaosBackend`] wraps any backend with
+//! deterministic, seeded fault injection (transient errors, stalls,
+//! worker panics) so the degradation story above is *tested*, not
+//! asserted — see `rust/tests/serving.rs`.
 //!
 //! **Deadlines.** A request may carry a deadline; the batcher wakes at
 //! the earliest pending deadline and expires overdue forming-batch
@@ -88,6 +132,7 @@
 //! [`crate::exec::Pool`] (no thread spawn per batch).
 
 pub mod batcher;
+pub mod chaos;
 
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
@@ -151,6 +196,12 @@ pub enum ServeError {
     DeadlineExceeded { model: ModelId, waited_us: u64 },
     /// the batch failed on every delivery attempt (backend errors)
     BackendFailed { model: ModelId, attempts: usize },
+    /// shed at submit by admission control: the model's per-lane
+    /// pending bound was hit, or the cost-based ETA already exceeded
+    /// the request's deadline budget (shedding beats deadline-missing
+    /// at saturation). `pending` is the admitted-but-unanswered depth
+    /// observed at the shed.
+    Overloaded { model: ModelId, pending: usize },
     /// no model with this id is registered
     UnknownModel(ModelId),
 }
@@ -163,6 +214,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::BackendFailed { model, attempts } => {
                 write!(f, "backend for model {model} failed after {attempts} attempts")
+            }
+            ServeError::Overloaded { model, pending } => {
+                write!(f, "model {model} overloaded ({pending} pending), request shed")
             }
             ServeError::UnknownModel(m) => write!(f, "unknown model {m}"),
         }
@@ -536,32 +590,133 @@ struct QueuedBatch {
     bounces: usize,
 }
 
+/// DWFQ charge for one popped batch of `samples` requests: per-sample
+/// cost in kMAC units, min 1 so cost-unknown models (`cost == 0`) fall
+/// back to request-count-fair scheduling.
+fn cost_weight(e: &ModelEntry) -> u64 {
+    (e.cost_per_sample / 1_000).max(1)
+}
+
+/// One priority lane of the shared queue: per-model FIFO sub-queues
+/// scheduled by deficit-weighted fair queueing. Each model carries a
+/// virtual-cost tag; a pop takes the smallest tag (id breaks ties) and
+/// charges the model `samples x cost_weight`, so cheap models
+/// interleave with expensive ones instead of queueing behind their
+/// backlog. With one model per lane this is exactly FIFO.
+struct Lane {
+    /// per-model FIFO of closed batches (an entry is removed when its
+    /// sub-queue drains)
+    queues: HashMap<ModelId, VecDeque<QueuedBatch>>,
+    /// virtual finish tags: cumulative weighted cost charged per model
+    vcost: HashMap<ModelId, u64>,
+    /// lane virtual clock: the tag of the most recently popped model; a
+    /// model entering an empty sub-queue is clamped up to it, so idle
+    /// periods accumulate no credit (start-time fair queueing)
+    vclock: u64,
+}
+
+impl Lane {
+    fn new() -> Self {
+        Lane { queues: HashMap::new(), vcost: HashMap::new(), vclock: 0 }
+    }
+
+    fn push(&mut self, b: QueuedBatch) {
+        let id = b.model.id.clone();
+        if !self.queues.contains_key(&id) {
+            // a model entering with no queued work is clamped up to the
+            // lane clock: idle periods accumulate no scheduling credit
+            let tag = self.vcost.entry(id.clone()).or_insert(0);
+            *tag = (*tag).max(self.vclock);
+        }
+        self.queues.entry(id).or_default().push_back(b);
+    }
+
+    /// Pop the front batch of the smallest-tag model whose front batch
+    /// `admit` accepts, and charge the model its weighted cost.
+    fn pop_admitted(
+        &mut self,
+        admit: &mut impl FnMut(&QueuedBatch) -> bool,
+    ) -> Option<QueuedBatch> {
+        let mut best: Option<(u64, ModelId)> = None;
+        for (id, q) in &self.queues {
+            let front = q.front().expect("drained sub-queues are removed");
+            if !admit(front) {
+                continue;
+            }
+            let tag = self.vcost.get(id).copied().unwrap_or(self.vclock);
+            let better = match &best {
+                None => true,
+                Some((bt, bid)) => (tag, id) < (*bt, bid),
+            };
+            if better {
+                best = Some((tag, id.clone()));
+            }
+        }
+        let (tag, id) = best?;
+        let q = self.queues.get_mut(&id).expect("selected sub-queue exists");
+        let b = q.pop_front().expect("selected sub-queue is non-empty");
+        if q.is_empty() {
+            self.queues.remove(&id);
+        }
+        self.vclock = tag;
+        let charge = (b.reqs.len() as u64).saturating_mul(cost_weight(&b.model));
+        self.vcost.insert(id, tag.saturating_add(charge));
+        // GC tags that can no longer matter: no queued work and already
+        // at/behind the clock (a future push would clamp them up anyway)
+        let (vclock, queues) = (self.vclock, &self.queues);
+        self.vcost.retain(|mid, t| queues.contains_key(mid) || *t > vclock);
+        Some(b)
+    }
+
+    fn drain(&mut self) -> impl Iterator<Item = QueuedBatch> + '_ {
+        self.vcost.clear();
+        self.queues.drain().flat_map(|(_, q)| q)
+    }
+}
+
 struct QueueState {
-    /// one FIFO lane per [`Priority`], indexed by [`Priority::index`]
-    lanes: [VecDeque<QueuedBatch>; 2],
+    /// one DWFQ lane per [`Priority`], indexed by [`Priority::index`]
+    lanes: [Lane; 2],
     closed: bool,
 }
 
 /// MPMC batch queue: model batchers push into their lane, idle workers
-/// pull — Interactive lane strictly first.
+/// pull — Interactive lane strictly first, weighted-fair across models
+/// within a lane, placement shaped by per-model replica budgets.
 struct SharedQueue {
     state: Mutex<QueueState>,
     cv: Condvar,
 }
 
+/// May worker `wi` take this batch? Replica budgets place a model's
+/// batches on the lowest-indexed workers. Never a liveness hazard:
+/// retried/bounced batches are exempt (a quarantined in-budget replica
+/// must be able to hand work to out-of-budget peers), and the budget is
+/// ignored once every in-budget worker has retired.
+fn budget_admits(qb: &QueuedBatch, wi: usize, slots: &[WorkerSlot]) -> bool {
+    if qb.bounces > 0 || qb.attempts > 0 {
+        return true;
+    }
+    // Relaxed loads under the queue mutex: writers publish through
+    // SharedQueue::wake_all, whose lock round-trip provides the edge; a
+    // stale value only delays placement by one wakeup, never wedges it.
+    let budget = qb.model.replica_budget.load(Ordering::Relaxed).clamp(1, slots.len());
+    if wi < budget {
+        return true;
+    }
+    slots[..budget].iter().all(|s| s.retired.load(Ordering::Relaxed))
+}
+
 impl SharedQueue {
     fn new() -> Self {
         SharedQueue {
-            state: Mutex::new(QueueState {
-                lanes: [VecDeque::new(), VecDeque::new()],
-                closed: false,
-            }),
+            state: Mutex::new(QueueState { lanes: [Lane::new(), Lane::new()], closed: false }),
             cv: Condvar::new(),
         }
     }
 
-    /// Push to the back of the batch's lane. On a closed queue (all
-    /// workers retired) every member is answered with a typed
+    /// Push to the batch's lane. On a closed queue (all workers
+    /// retired) every member is answered with a typed
     /// [`ServeError::BackendFailed`] instead of queueing forever.
     fn push(&self, b: QueuedBatch) {
         let mut st = self.state.lock().unwrap();
@@ -570,21 +725,29 @@ impl SharedQueue {
             fail_batch(b);
             return;
         }
-        st.lanes[b.priority.index()].push_back(b);
+        st.lanes[b.priority.index()].push(b);
         drop(st);
-        self.cv.notify_one();
+        // notify_all, not notify_one: pops are selective (replica
+        // budgets), so the one woken worker might not admit this batch
+        self.cv.notify_all();
     }
 
-    /// Blocking pop, Interactive lane first; `None` once the queue is
-    /// closed *and* drained.
-    fn pop(&self) -> Option<QueuedBatch> {
+    /// Blocking pop for worker `wi`, Interactive lane first, DWFQ
+    /// within a lane, replica budgets respected while the queue is
+    /// open; `None` once the queue is closed *and* drained.
+    fn pop(&self, wi: usize, slots: &[WorkerSlot]) -> Option<QueuedBatch> {
         let mut st = self.state.lock().unwrap();
         loop {
-            // lanes are in Priority::index order: Interactive first
-            if let Some(b) = st.lanes.iter_mut().find_map(|l| l.pop_front()) {
-                return Some(b);
+            let closed = st.closed;
+            // lanes are in Priority::index order: Interactive first. A
+            // closed queue admits everything: draining beats placement.
+            for lane in st.lanes.iter_mut() {
+                let mut admit = |qb: &QueuedBatch| closed || budget_admits(qb, wi, slots);
+                if let Some(b) = lane.pop_admitted(&mut admit) {
+                    return Some(b);
+                }
             }
-            if st.closed {
+            if closed {
                 return None;
             }
             st = self.cv.wait(st).unwrap();
@@ -596,7 +759,7 @@ impl SharedQueue {
     fn close_and_drain(&self) -> Vec<QueuedBatch> {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
-        let drained = st.lanes.iter_mut().flat_map(|l| l.drain(..)).collect();
+        let drained = st.lanes.iter_mut().flat_map(|l| l.drain()).collect();
         drop(st);
         self.cv.notify_all();
         drained
@@ -608,13 +771,26 @@ impl SharedQueue {
         drop(st);
         self.cv.notify_all();
     }
+
+    /// Wake every waiting worker without touching queue contents — used
+    /// after replica-budget or worker-liveness changes so the admission
+    /// predicate in [`SharedQueue::pop`] is re-evaluated. The lock
+    /// round-trip (even over an unchanged queue) orders the caller's
+    /// preceding Relaxed stores before any waiter's next predicate
+    /// evaluation: the waiter re-reads under the same mutex.
+    fn wake_all(&self) {
+        drop(self.state.lock().unwrap());
+        self.cv.notify_all();
+    }
 }
 
 /// Answer every member of a batch with [`ServeError::BackendFailed`].
+/// A terminal reply: releases each member's admission reservation.
 fn fail_batch(b: QueuedBatch) {
     let QueuedBatch { model, reqs, attempts, .. } = b;
     model.counters.dropped.fetch_add(reqs.len() as u64, Ordering::Relaxed);
     for r in reqs {
+        model.counters.pending[r.priority.index()].fetch_sub(1, Ordering::Relaxed);
         let _ = r
             .reply
             .send(Err(ServeError::BackendFailed { model: model.id.clone(), attempts }));
@@ -622,8 +798,10 @@ fn fail_batch(b: QueuedBatch) {
 }
 
 /// Answer one request with [`ServeError::DeadlineExceeded`].
+/// A terminal reply: releases the request's admission reservation.
 fn expire(r: Request, entry: &ModelEntry) {
     entry.counters.expired.fetch_add(1, Ordering::Relaxed);
+    entry.counters.pending[r.priority.index()].fetch_sub(1, Ordering::Relaxed);
     let waited = (r.submitted.elapsed().as_secs_f64() * 1e6) as u64;
     let _ = r
         .reply
@@ -634,12 +812,92 @@ fn expire(r: Request, entry: &ModelEntry) {
 // Registry
 // ---------------------------------------------------------------------------
 
-/// Everything the registry needs to serve one model.
+/// Per-model admission-control policy (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// cap on admitted-but-unanswered requests per (model, lane);
+    /// `usize::MAX` = unbounded. Over the cap, submit returns
+    /// [`ServeError::Overloaded`] immediately.
+    pub max_pending: usize,
+    /// also shed a deadlined request whose cost-based ETA (pending
+    /// depth x observed per-sample service EWMA / pool size) already
+    /// exceeds its deadline budget
+    pub shed_infeasible: bool,
+    /// let the registry scale this model's replica budget up/down from
+    /// observed queue pressure (starts at 1 and grows; off = the full
+    /// pool serves the model, the pre-admission status quo)
+    pub autoscale: bool,
+}
+
+impl Default for AdmissionPolicy {
+    /// Unbounded, no feasibility shedding, no autoscaling — exactly
+    /// the registry's behavior before admission control existed.
+    fn default() -> Self {
+        AdmissionPolicy { max_pending: usize::MAX, shed_infeasible: false, autoscale: false }
+    }
+}
+
+impl AdmissionPolicy {
+    /// Admit everything (the default).
+    pub fn unbounded() -> Self {
+        AdmissionPolicy::default()
+    }
+
+    /// Bound each lane's pending depth and shed infeasible deadlines —
+    /// the saturation-safe configuration.
+    pub fn bounded(max_pending: usize) -> Self {
+        AdmissionPolicy {
+            max_pending: max_pending.max(1),
+            shed_infeasible: true,
+            autoscale: false,
+        }
+    }
+
+    /// Enable replica-budget autoscaling (see the module docs).
+    pub fn with_autoscale(mut self) -> Self {
+        self.autoscale = true;
+        self
+    }
+}
+
+/// Everything the registry needs to serve one model. Build with
+/// [`ModelSpec::new`] + the `with_*` builders.
 pub struct ModelSpec {
     pub factory: BackendFactory,
     /// flattened feature count per sample (checked at submit)
     pub sample_numel: usize,
     pub policy: BatchPolicy,
+    /// estimated cost per sample in MACs (the DWFQ scheduling weight;
+    /// typically [`QuantGraph::cost_per_sample`]). 0 = unknown, which
+    /// schedules as cost 1 — request-count fair.
+    pub cost_per_sample: u64,
+    pub admission: AdmissionPolicy,
+}
+
+impl ModelSpec {
+    /// Spec with no declared cost and the default (unbounded, non-
+    /// autoscaling) admission policy.
+    pub fn new(factory: BackendFactory, sample_numel: usize, policy: BatchPolicy) -> Self {
+        ModelSpec {
+            factory,
+            sample_numel,
+            policy,
+            cost_per_sample: 0,
+            admission: AdmissionPolicy::default(),
+        }
+    }
+
+    /// Declare the model's per-sample cost (MACs) for cost-aware
+    /// weighted-fair scheduling and ETA-based shedding.
+    pub fn with_cost(mut self, macs_per_sample: u64) -> Self {
+        self.cost_per_sample = macs_per_sample;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> Self {
+        self.admission = admission;
+        self
+    }
 }
 
 /// Per-model lock-free counters + latency histograms.
@@ -656,6 +914,22 @@ struct ModelCounters {
     batches: AtomicU64,
     expired: AtomicU64,
     dropped: AtomicU64,
+    /// requests answered with [`ServeError::Overloaded`] at submit
+    shed: AtomicU64,
+    /// admitted-but-unanswered requests per lane: the admission
+    /// reservation counter — incremented at submit (reserve), and
+    /// decremented exactly once per request at its terminal reply
+    /// (served / expired / failed). Relaxed: the *bound* needs only
+    /// fetch_add/fetch_sub atomicity, not ordering — an over-the-cap
+    /// reservation is rolled back before any payload exists, and the
+    /// admitted payload is ordered by the ingress channel. Also read
+    /// (Relaxed) as the queue-depth signal by the autoscaler and stats.
+    pending: [AtomicUsize; 2],
+    /// EWMA of observed per-sample service time in us (0 = no sample
+    /// yet). Relaxed + racy load/store read-modify-write: a
+    /// monitoring-quality estimate for ETA shedding; a lost update
+    /// under a race only delays convergence by one batch.
+    est_sample_us: AtomicU64,
     hist: Mutex<LatencyHist>,
     prio_hist: [Mutex<LatencyHist>; 2],
     served_by_prio: [AtomicU64; 2],
@@ -668,6 +942,9 @@ impl ModelCounters {
             batches: AtomicU64::new(0),
             expired: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            pending: [AtomicUsize::new(0), AtomicUsize::new(0)],
+            est_sample_us: AtomicU64::new(0),
             hist: Mutex::new(LatencyHist::new()),
             prio_hist: [Mutex::new(LatencyHist::new()), Mutex::new(LatencyHist::new())],
             served_by_prio: [AtomicU64::new(0), AtomicU64::new(0)],
@@ -685,6 +962,14 @@ struct ModelEntry {
     factory: BackendFactory,
     sample_numel: usize,
     policy: BatchPolicy,
+    /// estimated MACs per sample (0 = unknown): the DWFQ weight
+    cost_per_sample: u64,
+    admission: AdmissionPolicy,
+    /// how many workers (lowest indices first) may pull this model's
+    /// batches; clamped to [1, n_workers] at use. Relaxed stores
+    /// followed by `SharedQueue::wake_all` (the lock round-trip is the
+    /// publication edge); consumed in `pop` under the queue mutex.
+    replica_budget: AtomicUsize,
     ingress: Mutex<Option<Sender<Request>>>,
     counters: ModelCounters,
 }
@@ -732,6 +1017,12 @@ pub struct ModelStats {
     pub expired: u64,
     /// requests answered with [`ServeError::BackendFailed`]
     pub dropped: u64,
+    /// requests shed with [`ServeError::Overloaded`] at submit
+    pub shed: u64,
+    /// admitted-but-unanswered requests at snapshot time (both lanes)
+    pub pending: u64,
+    /// current replica budget (workers allowed to pull this model)
+    pub replica_budget: usize,
     pub latency_summary: String,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -827,12 +1118,19 @@ impl ModelRegistry {
         let mut models = self.inner.models.write().unwrap();
         anyhow::ensure!(!models.contains_key(&id), "model {id} already registered");
         let (tx, rx) = mpsc::channel::<Request>();
+        // autoscaling models start with one replica and grow under
+        // pressure; otherwise the whole pool serves the model (the
+        // pre-admission status quo)
+        let budget = if spec.admission.autoscale { 1 } else { self.inner.slots.len() };
         let entry = Arc::new(ModelEntry {
             id: id.clone(),
             generation: self.inner.next_generation.fetch_add(1, Ordering::Relaxed),
             factory: spec.factory,
             sample_numel: spec.sample_numel,
             policy: spec.policy,
+            cost_per_sample: spec.cost_per_sample,
+            admission: spec.admission,
+            replica_budget: AtomicUsize::new(budget),
             ingress: Mutex::new(Some(tx)),
             counters: ModelCounters::new(),
         });
@@ -906,6 +1204,41 @@ impl ModelRegistry {
             None => return Err(ServeError::UnknownModel(id.clone())),
         };
         assert_eq!(features.len(), entry.sample_numel, "bad feature length for model {id}");
+        // admission control: reserve a pending slot before anything
+        // else exists for this request. The fetch_add *is* the
+        // reservation — its atomicity alone enforces the bound under
+        // any interleaving; an over-the-cap reservation is rolled back
+        // and the caller gets the typed shed reply right here, at
+        // submit, not at its deadline.
+        let lane = priority.index();
+        let held = entry.counters.pending[lane].fetch_add(1, Ordering::Relaxed);
+        if held >= entry.admission.max_pending {
+            entry.counters.pending[lane].fetch_sub(1, Ordering::Relaxed);
+            entry.counters.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded { model: id.clone(), pending: held });
+        }
+        // cost-based deadline feasibility: if the admitted backlog
+        // already implies an ETA past this request's deadline, shed now
+        // instead of admitting a request that can only expire
+        if entry.admission.shed_infeasible {
+            if let Some(budget) = deadline {
+                let est = entry.counters.est_sample_us.load(Ordering::Relaxed);
+                if est > 0 {
+                    let backlog = (entry.counters.pending[0].load(Ordering::Relaxed)
+                        + entry.counters.pending[1].load(Ordering::Relaxed))
+                        as u64;
+                    let eta_us = backlog * est / self.inner.slots.len().max(1) as u64;
+                    if Duration::from_micros(eta_us) > budget {
+                        entry.counters.pending[lane].fetch_sub(1, Ordering::Relaxed);
+                        entry.counters.shed.fetch_add(1, Ordering::Relaxed);
+                        return Err(ServeError::Overloaded {
+                            model: id.clone(),
+                            pending: backlog as usize,
+                        });
+                    }
+                }
+            }
+        }
         let now = Instant::now();
         let (tx, rx) = mpsc::channel();
         let req = Request {
@@ -919,9 +1252,29 @@ impl ModelRegistry {
         let ingress = entry.ingress.lock().unwrap();
         match ingress.as_ref().map(|tx| tx.send(req)) {
             Some(Ok(())) => Ok(rx),
-            // racing an evict: the model is gone as far as clients care
-            _ => Err(ServeError::UnknownModel(id.clone())),
+            // racing an evict: the model is gone as far as clients
+            // care; the request never entered, release its reservation
+            _ => {
+                drop(ingress);
+                entry.counters.pending[lane].fetch_sub(1, Ordering::Relaxed);
+                Err(ServeError::UnknownModel(id.clone()))
+            }
         }
+    }
+
+    /// Set a model's replica budget directly (clamped to
+    /// `[1, n_workers]`); returns false for an unknown id. The
+    /// autoscaler (if enabled for the model) keeps adjusting from here.
+    pub fn set_replica_budget(&self, id: &ModelId, budget: usize) -> bool {
+        let entry = match self.inner.models.read().unwrap().get(id) {
+            Some(e) => Arc::clone(e),
+            None => return false,
+        };
+        let clamped = budget.clamp(1, self.inner.slots.len());
+        // Relaxed + wake_all: see the field's ordering note
+        entry.replica_budget.store(clamped, Ordering::Relaxed);
+        self.inner.queue.wake_all();
+        true
     }
 
     /// Blocking convenience call (Interactive, no deadline).
@@ -1015,6 +1368,10 @@ fn model_stats(e: &ModelEntry) -> ModelStats {
         mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
         expired: e.counters.expired.load(Ordering::Relaxed),
         dropped: e.counters.dropped.load(Ordering::Relaxed),
+        shed: e.counters.shed.load(Ordering::Relaxed),
+        pending: (e.counters.pending[0].load(Ordering::Relaxed)
+            + e.counters.pending[1].load(Ordering::Relaxed)) as u64,
+        replica_budget: e.replica_budget.load(Ordering::Relaxed),
         latency_summary: hist.summary(),
         p50_us: hist.percentile(50.0),
         p99_us: hist.percentile(99.0),
@@ -1034,6 +1391,8 @@ pub struct ServerStats {
     pub mean_batch: f64,
     pub expired: u64,
     pub dropped: u64,
+    /// requests shed with [`ServeError::Overloaded`] at submit
+    pub shed: u64,
     pub latency_summary: String,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -1053,18 +1412,23 @@ pub struct Server {
 
 impl Server {
     /// Start a registry with `workers` worker threads and register one
-    /// model over `factory`.
+    /// model over `factory` (default cost/admission; use
+    /// [`Server::start_spec`] for admission control).
     pub fn start(
         factory: BackendFactory,
         workers: usize,
         sample_numel: usize,
         policy: BatchPolicy,
     ) -> Self {
+        Server::start_spec(ModelSpec::new(factory, sample_numel, policy), workers)
+    }
+
+    /// [`Server::start`] with a full [`ModelSpec`] — cost estimate and
+    /// admission policy included.
+    pub fn start_spec(spec: ModelSpec, workers: usize) -> Self {
         let registry = ModelRegistry::start(workers);
         let model = ModelId::new("default");
-        registry
-            .register(model.clone(), ModelSpec { factory, sample_numel, policy })
-            .expect("fresh registry cannot have the id");
+        registry.register(model.clone(), spec).expect("fresh registry cannot have the id");
         Server { registry, model }
     }
 
@@ -1118,6 +1482,7 @@ impl Server {
             out.mean_batch = m.mean_batch;
             out.expired = m.expired;
             out.dropped = m.dropped;
+            out.shed = m.shed;
             out.latency_summary = m.latency_summary;
             out.p50_us = m.p50_us;
             out.p99_us = m.p99_us;
@@ -1169,6 +1534,12 @@ impl Drop for RetireGuard<'_> {
             for qb in self.inner.queue.close_and_drain() {
                 fail_batch(qb);
             }
+        } else {
+            // a worker died mid-run: wake the survivors so batches that
+            // were budget-gated onto *this* worker get re-evaluated
+            // against the retired-fallback in `budget_admits` instead of
+            // waiting on a notify that will never come
+            self.inner.queue.wake_all();
         }
     }
 }
@@ -1208,7 +1579,7 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
     let mut flat: Vec<f32> = Vec::new();
     let mut out: Vec<f32> = Vec::new();
     let mut live: Vec<Request> = Vec::new();
-    while let Some(mut qb) = inner.queue.pop() {
+    while let Some(mut qb) = inner.queue.pop(wi, &inner.slots) {
         let entry = Arc::clone(&qb.model);
         // an evict happened since we last looked: drop replicas (and
         // quarantine marks) whose registration is gone, so e.g. an
@@ -1311,8 +1682,32 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
         let classes = backend.out_dim();
         out.clear();
         out.resize(b * classes, 0.0);
-        match backend.infer_into(&flat, b, &mut out) {
+        // Contain a panicking backend (e.g. chaos-injected): answer the
+        // batch with typed failures FIRST — releasing every member's
+        // admission reservation — then let the unwind continue so the
+        // worker still dies per the RetireGuard contract. Without this,
+        // the panicking batch's clients would hang until queue close.
+        let started = Instant::now();
+        let infer = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.infer_into(&flat, b, &mut out)
+        }));
+        let infer = match infer {
+            Ok(r) => r,
+            Err(payload) => {
+                fail_batch(qb);
+                std::panic::resume_unwind(payload);
+            }
+        };
+        match infer {
             Ok(()) => {
+                // feed the per-sample service-time estimator that the
+                // deadline-feasibility shed in `submit_with` reads
+                let per_sample_us =
+                    ((started.elapsed().as_secs_f64() * 1e6) as u64 / b as u64).max(1);
+                let old = entry.counters.est_sample_us.load(Ordering::Relaxed);
+                let est =
+                    if old == 0 { per_sample_us } else { (old * 7 + per_sample_us) / 8 };
+                entry.counters.est_sample_us.store(est, Ordering::Relaxed);
                 // the budget is for *consecutive* failures of this
                 // registration — a stale one-shot success must not clear
                 // the current replica's count
@@ -1332,6 +1727,8 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
                     entry.counters.prio_hist[pi].lock().unwrap().record_us(lat);
                     entry.counters.served_by_prio[pi].fetch_add(1, Ordering::Relaxed);
                     entry.counters.served.fetch_add(1, Ordering::Relaxed);
+                    // terminal reply: release the admission reservation
+                    entry.counters.pending[pi].fetch_sub(1, Ordering::Relaxed);
                     inner.served.fetch_add(1, Ordering::Relaxed);
                     slot.served.fetch_add(1, Ordering::Relaxed);
                     let _ = r.reply.send(Ok(Response {
@@ -1394,6 +1791,16 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
     // when this was the last worker — on panic unwinds too.
 }
 
+/// Autoscaler cadence: how often an autoscaling model's batcher
+/// re-evaluates queue pressure (caps the batcher's recv timeout).
+const AUTOSCALE_TICK: Duration = Duration::from_millis(10);
+/// Hysteresis: minimum gap between consecutive scale-*up* steps, so one
+/// burst does not instantly claim the whole pool.
+const SCALE_UP_COOLDOWN: Duration = Duration::from_millis(20);
+/// Hysteresis: how long the model must sit at zero admitted depth
+/// before the batcher returns a replica to the pool.
+const SCALE_DOWN_IDLE: Duration = Duration::from_millis(250);
+
 /// One model's batcher: assemble per-priority batches per the model's
 /// policy and push them onto the shared queue. Exits when the model's
 /// ingress disconnects (evict / shutdown), dispatching what it holds.
@@ -1402,12 +1809,63 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
 /// deadline (not only at the forming-batch timers), so a doomed request
 /// gets its typed [`ServeError::DeadlineExceeded`] reply promptly at
 /// its deadline instead of waiting for its batch to dispatch.
+///
+/// **Replica pressure response:** when the model's
+/// [`AdmissionPolicy::autoscale`] flag is set, the batcher doubles as
+/// the model's autoscaler — every [`AUTOSCALE_TICK`] it reads the
+/// admitted-but-unanswered depth and the expired counter, grows the
+/// replica budget by one under pressure (depth above `2 * max_batch`,
+/// or fresh deadline expiries) with [`SCALE_UP_COOLDOWN`] hysteresis,
+/// and shrinks it after [`SCALE_DOWN_IDLE`] of sustained zero depth.
 fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelEntry>) {
     let policy = entry.policy;
     let mut pending: [Vec<Request>; 2] = [Vec::new(), Vec::new()];
     let mut deadline: [Option<Instant>; 2] = [None, None];
+    let n_workers = inner.slots.len();
+    let mut scale_tick = Instant::now();
+    let mut last_up: Option<Instant> = None;
+    let mut idle_since: Option<Instant> = None;
+    let mut last_expired = 0u64;
     loop {
         let now = Instant::now();
+        if entry.admission.autoscale && now.saturating_duration_since(scale_tick) >= AUTOSCALE_TICK
+        {
+            scale_tick = now;
+            let depth = entry.counters.pending[0].load(Ordering::Relaxed)
+                + entry.counters.pending[1].load(Ordering::Relaxed);
+            let expired = entry.counters.expired.load(Ordering::Relaxed);
+            let budget = entry.replica_budget.load(Ordering::Relaxed);
+            let pressured = depth > 2 * policy.max_batch || expired > last_expired;
+            last_expired = expired;
+            if pressured {
+                idle_since = None;
+                let cooled = match last_up {
+                    None => true,
+                    Some(t) => now.saturating_duration_since(t) >= SCALE_UP_COOLDOWN,
+                };
+                if budget < n_workers && cooled {
+                    // Relaxed store; wake_all's lock round-trip is the
+                    // publication edge to `pop` (see `replica_budget`)
+                    entry.replica_budget.store(budget + 1, Ordering::Relaxed);
+                    inner.queue.wake_all();
+                    last_up = Some(now);
+                }
+            } else if depth == 0 {
+                match idle_since {
+                    None => idle_since = Some(now),
+                    Some(t) if now.saturating_duration_since(t) >= SCALE_DOWN_IDLE => {
+                        if budget > 1 {
+                            entry.replica_budget.store(budget - 1, Ordering::Relaxed);
+                            inner.queue.wake_all();
+                        }
+                        idle_since = Some(now);
+                    }
+                    Some(_) => {}
+                }
+            } else {
+                idle_since = None;
+            }
+        }
         // early expiry: answer overdue forming-batch members right away
         for lane in pending.iter_mut() {
             let mut i = 0;
@@ -1430,7 +1888,7 @@ fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelE
         // wake at the earlier of: a lane's forming-batch timer, or the
         // earliest pending request deadline (early expiry)
         let next_expiry = pending.iter().flatten().filter_map(|r| r.deadline).min();
-        let timeout = deadline
+        let mut timeout = deadline
             .iter()
             .flatten()
             .copied()
@@ -1438,6 +1896,10 @@ fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelE
             .map(|d| d.saturating_duration_since(now))
             .min()
             .unwrap_or(Duration::from_secs(3600));
+        if entry.admission.autoscale {
+            // autoscaling models must keep ticking even when idle
+            timeout = timeout.min(AUTOSCALE_TICK);
+        }
         match rx.recv_timeout(timeout) {
             Ok(req) => {
                 let p = req.priority;

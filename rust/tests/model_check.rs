@@ -21,6 +21,10 @@
 //!    model quarantines its replica and fails its batches *typed*; it
 //!    never retires the shared worker, which keeps serving healthy
 //!    models.
+//! 4. **Admission/shed handshake** — distilled model of the
+//!    `submit_with` reservation protocol: the queue never exceeds its
+//!    admission bound, and every request gets exactly one terminal
+//!    reply — served by the consumer, or shed right at submit.
 //!
 //! The registry/quarantine protocols are modeled in distilled form
 //! (same decision structure, minus backends/mpsc/wall-clock — none of
@@ -187,6 +191,12 @@ enum Mutation {
     /// the worker retires itself when a model trips the quarantine
     /// threshold instead of quarantining just that replica
     RetireOnPoison,
+    // -- admission / shed --
+    /// submit never checks the bound — the queue grows without limit
+    UnboundedQueue,
+    /// an over-bound submit drops the shed reply on the floor instead
+    /// of answering the request at submit
+    ShedReplyDropped,
 }
 
 /// Distilled register/evict vs. in-flight-batch replica-generation
@@ -485,6 +495,102 @@ fn quarantine_never_retires_shared_worker() {
 }
 
 // ===========================================================================
+// 4. Admission / shed handshake (distilled submit_with reservation model)
+// ===========================================================================
+
+/// Queue half of the distilled admission protocol.
+struct AdmissionState {
+    q: VecDeque<usize>,
+    depth_max: usize,
+    closed: bool,
+}
+
+/// Distilled admission-control protocol from `serve::submit_with`: a
+/// producer submits N requests through a depth-BOUND queue; a submit
+/// that finds the queue full must answer the request *right there*
+/// with a terminal shed reply (`ServeError::Overloaded` in the real
+/// registry). A consumer serves whatever was admitted.
+///
+/// Invariants asserted inside the model:
+/// - the queue never holds more than BOUND requests;
+/// - every request receives exactly one terminal reply — served or
+///   shed; none is silently dropped, none is answered twice.
+fn admission_model(m: Mutation) {
+    const N: usize = 4;
+    const BOUND: usize = 1;
+    let shared = Arc::new((
+        Mutex::new(AdmissionState { q: VecDeque::new(), depth_max: 0, closed: false }),
+        Condvar::new(),
+    ));
+    let replies: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..N).map(|_| AtomicUsize::new(0)).collect());
+
+    let consumer = {
+        let shared = Arc::clone(&shared);
+        let replies = Arc::clone(&replies);
+        spawn_named("admission-consumer", move || loop {
+            let i = {
+                let mut st = shared.0.lock().unwrap();
+                loop {
+                    if let Some(i) = st.q.pop_front() {
+                        break i;
+                    }
+                    if st.closed {
+                        return;
+                    }
+                    st = shared.1.wait(st).unwrap();
+                }
+            };
+            // serve: the request's one terminal reply
+            replies[i].fetch_add(1, Ordering::SeqCst);
+        })
+    };
+
+    // producer: submit N requests through the reservation check
+    for i in 0..N {
+        let mut st = shared.0.lock().unwrap();
+        let over = st.q.len() >= BOUND;
+        if over && m != Mutation::UnboundedQueue {
+            drop(st);
+            // shed: the request's one terminal reply, at submit — the
+            // load-bearing line the ShedReplyDropped mutation removes
+            if m != Mutation::ShedReplyDropped {
+                replies[i].fetch_add(1, Ordering::SeqCst);
+            }
+            continue;
+        }
+        st.q.push_back(i);
+        st.depth_max = st.depth_max.max(st.q.len());
+        drop(st);
+        shared.1.notify_all();
+    }
+    {
+        let mut st = shared.0.lock().unwrap();
+        st.closed = true;
+    }
+    shared.1.notify_all();
+    consumer.join().expect("admission consumer");
+
+    let st = shared.0.lock().unwrap();
+    assert!(
+        st.depth_max <= BOUND,
+        "queue depth {} exceeded the admission bound {BOUND}",
+        st.depth_max
+    );
+    for (i, r) in replies.iter().enumerate() {
+        assert_eq!(r.load(Ordering::SeqCst), 1, "request {i}: not exactly one terminal reply");
+    }
+}
+
+/// The faithful admission protocol passes — every request is answered
+/// exactly once and the bound holds under every explored interleaving.
+#[test]
+fn admission_faithful_passes() {
+    let report = check_with(cfg(2, 20_000, 5_000), || admission_model(Mutation::None));
+    assert!(report.failure.is_none(), "admission protocol failed: {:#?}", report.failure);
+}
+
+// ===========================================================================
 // Mini-pool: a parameterized distillation of the exec::Pool fork-join
 // handshake, used by the seeded-mutation suite (the real Pool cannot be
 // hand-broken at runtime).
@@ -704,6 +810,20 @@ fn mutation_no_evict_bump_caught() {
 fn mutation_retire_on_poison_caught() {
     assert_caught("retire-on-poison", Mutation::RetireOnPoison, || {
         quarantine_model(Mutation::RetireOnPoison)
+    });
+}
+
+#[test]
+fn mutation_unbounded_queue_caught() {
+    assert_caught("unbounded-queue", Mutation::UnboundedQueue, || {
+        admission_model(Mutation::UnboundedQueue)
+    });
+}
+
+#[test]
+fn mutation_shed_reply_dropped_caught() {
+    assert_caught("shed-reply-dropped", Mutation::ShedReplyDropped, || {
+        admission_model(Mutation::ShedReplyDropped)
     });
 }
 

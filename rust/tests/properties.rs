@@ -3,7 +3,7 @@
 
 use fqconv::quant::{learned_quantize, n_levels, AddLut, QParams, RequantLut};
 use fqconv::serve::batcher::{
-    simulate, simulate_prio, BatchPolicy, Priority, SimOutcome, SimRequest,
+    simulate, simulate_prio, simulate_prio_bounded, BatchPolicy, Priority, SimOutcome, SimRequest,
 };
 use fqconv::util::proptest::check;
 use fqconv::util::Rng;
@@ -304,6 +304,7 @@ fn batcher_priority_ordering_invariant() {
             let closed = |o: &SimOutcome| match *o {
                 SimOutcome::Dispatched { closed_us, .. } => closed_us,
                 SimOutcome::Expired { .. } => unreachable!("no deadlines here"),
+                SimOutcome::Shed { .. } => unreachable!("no admission bound here"),
             };
             for (j, oj) in out.iter().enumerate() {
                 if reqs[j].priority != Priority::Batch {
@@ -371,6 +372,9 @@ fn batcher_deadline_rejection_invariant() {
                             ));
                         }
                     }
+                    SimOutcome::Shed { .. } => {
+                        return Err(format!("req {k}: shed without an admission bound"));
+                    }
                 }
             }
             Ok(())
@@ -413,6 +417,67 @@ fn batcher_early_expiry_is_prompt() {
                             }
                         }
                     }
+                    SimOutcome::Shed { .. } => {
+                        return Err(format!("req {k}: shed without an admission bound"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_bounded_admission_invariant() {
+    // admission-control invariants (mirrors the registry's reservation
+    // protocol): with a per-lane bound of B, no lane ever holds more
+    // than B pending admitted requests — a request holds its slot from
+    // arrival to its terminal reply (service end or expiry) — and every
+    // shed is answered at its own arrival instant (submit time), never
+    // deferred to a deadline
+    check(
+        "batcher-bounded-admission",
+        60,
+        |g, size| {
+            let (policy, reqs, service) = gen_mixed_requests(g, size, true);
+            let bound = 1 + g.rng.below(4);
+            (policy, reqs, service, bound)
+        },
+        |(policy, reqs, service, bound)| {
+            let out = simulate_prio_bounded(*policy, Some(*bound), reqs, *service);
+            if out.len() != reqs.len() {
+                return Err("outcome count mismatch".into());
+            }
+            let depart: Vec<u64> = out
+                .iter()
+                .map(|o| match *o {
+                    SimOutcome::Dispatched { start_us, .. } => start_us + *service,
+                    SimOutcome::Expired { at_us } | SimOutcome::Shed { at_us } => at_us,
+                })
+                .collect();
+            for (k, o) in out.iter().enumerate() {
+                if let SimOutcome::Shed { at_us } = *o {
+                    if at_us != reqs[k].arrival_us {
+                        return Err(format!(
+                            "req {k}: shed at {at_us}, not at its arrival {}",
+                            reqs[k].arrival_us
+                        ));
+                    }
+                    continue;
+                }
+                // admitted: its lane may not already be at the bound
+                let lane = reqs[k].priority.index();
+                let held = (0..k)
+                    .filter(|&j| {
+                        !matches!(out[j], SimOutcome::Shed { .. })
+                            && reqs[j].priority.index() == lane
+                            && depart[j] > reqs[k].arrival_us
+                    })
+                    .count();
+                if held >= *bound {
+                    return Err(format!(
+                        "req {k}: admitted into a lane already holding {held} >= bound {bound}"
+                    ));
                 }
             }
             Ok(())

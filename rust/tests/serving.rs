@@ -10,8 +10,8 @@ use std::time::Duration;
 use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
 use fqconv::infer::FqKwsNet;
 use fqconv::serve::{
-    ready, ready_indexed, Backend, BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec,
-    NativeBackend, Priority, ServeError, Server,
+    ready, ready_indexed, AdmissionPolicy, Backend, BatchPolicy, GraphBackend, ModelId,
+    ModelRegistry, ModelSpec, NativeBackend, Priority, ServeError, Server,
 };
 use fqconv::util::Rng;
 
@@ -225,21 +225,21 @@ fn poisoned_model_cannot_take_down_healthy_models() {
     registry
         .register(
             "healthy",
-            ModelSpec {
-                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
-                sample_numel: 4,
-                policy: BatchPolicy::new(2, 100),
-            },
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c, &m, 0)),
+                4,
+                BatchPolicy::new(2, 100),
+            ),
         )
         .unwrap();
     registry
         .register(
             "poisoned",
-            ModelSpec {
-                factory: ready(|| FailingBackend { shape: vec![4] }),
-                sample_numel: 4,
-                policy: BatchPolicy::new(2, 100),
-            },
+            ModelSpec::new(
+                ready(|| FailingBackend { shape: vec![4] }),
+                4,
+                BatchPolicy::new(2, 100),
+            ),
         )
         .unwrap();
     let (healthy, poisoned) = (ModelId::new("healthy"), ModelId::new("poisoned"));
@@ -377,37 +377,37 @@ fn registry_serves_two_models_concurrently() {
     registry
         .register(
             "toy5",
-            ModelSpec {
-                factory: ready(move || ToyBackend::new(5, &c5, &m5, 100)),
-                sample_numel: 4,
-                policy: BatchPolicy::new(4, 200),
-            },
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c5, &m5, 100)),
+                4,
+                BatchPolicy::new(4, 200),
+            ),
         )
         .expect("register toy5");
     let (c3, m3) = (Arc::clone(&calls), Arc::clone(&maxb));
     registry
         .register(
             "toy3",
-            ModelSpec {
-                factory: ready(move || {
+            ModelSpec::new(
+                ready(move || {
                     let mut t = ToyBackend::new(3, &c3, &m3, 100);
                     t.shape = vec![2];
                     t
                 }),
-                sample_numel: 2,
-                policy: BatchPolicy::new(2, 200),
-            },
+                2,
+                BatchPolicy::new(2, 200),
+            ),
         )
         .expect("register toy3");
     // duplicate registration is refused
     assert!(registry
         .register(
             "toy3",
-            ModelSpec {
-                factory: ready(|| FailingBackend { shape: vec![2] }),
-                sample_numel: 2,
-                policy: BatchPolicy::new(1, 100),
-            },
+            ModelSpec::new(
+                ready(|| FailingBackend { shape: vec![2] }),
+                2,
+                BatchPolicy::new(1, 100),
+            ),
         )
         .is_err());
 
@@ -472,21 +472,21 @@ fn registry_serves_resnet32_alongside_a_kws_model() {
     registry
         .register(
             "kws",
-            ModelSpec {
-                factory: NativeBackend::factory(&kws, &[39, 80]),
-                sample_numel: 39 * 80,
-                policy: BatchPolicy::new(4, 300),
-            },
+            ModelSpec::new(
+                NativeBackend::factory(&kws, &[39, 80]),
+                39 * 80,
+                BatchPolicy::new(4, 300),
+            ),
         )
         .expect("register kws");
     registry
         .register(
             "resnet32",
-            ModelSpec {
-                factory: GraphBackend::factory(&resnet),
-                sample_numel: resnet.in_numel(),
-                policy: BatchPolicy::new(2, 300),
-            },
+            ModelSpec::new(
+                GraphBackend::factory(&resnet),
+                resnet.in_numel(),
+                BatchPolicy::new(2, 300),
+            ),
         )
         .expect("register resnet32");
 
@@ -592,21 +592,21 @@ fn registry_serves_batched_2d_models_bit_identically_at_1_2_4_workers() {
         registry
             .register(
                 rid.as_str(),
-                ModelSpec {
-                    factory: GraphBackend::factory_sharded(&resnet, workers),
-                    sample_numel: resnet.in_numel(),
-                    policy: BatchPolicy::new(n_res, 500_000),
-                },
+                ModelSpec::new(
+                    GraphBackend::factory_sharded(&resnet, workers),
+                    resnet.in_numel(),
+                    BatchPolicy::new(n_res, 500_000),
+                ),
             )
             .expect("register resnet32");
         registry
             .register(
                 did.as_str(),
-                ModelSpec {
-                    factory: GraphBackend::factory_sharded(&dark, workers),
-                    sample_numel: dark.in_numel(),
-                    policy: BatchPolicy::new(n_dark, 500_000),
-                },
+                ModelSpec::new(
+                    GraphBackend::factory_sharded(&dark, workers),
+                    dark.in_numel(),
+                    BatchPolicy::new(n_dark, 500_000),
+                ),
             )
             .expect("register darknet19");
         let rrx: Vec<_> =
@@ -667,22 +667,22 @@ fn evicted_model_rejects_new_submits_but_other_models_survive() {
     registry
         .register(
             "a",
-            ModelSpec {
-                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
-                sample_numel: 4,
-                policy: BatchPolicy::new(2, 100),
-            },
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c, &m, 0)),
+                4,
+                BatchPolicy::new(2, 100),
+            ),
         )
         .unwrap();
     let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
     registry
         .register(
             "b",
-            ModelSpec {
-                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
-                sample_numel: 4,
-                policy: BatchPolicy::new(2, 100),
-            },
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c, &m, 0)),
+                4,
+                BatchPolicy::new(2, 100),
+            ),
         )
         .unwrap();
     let (ida, idb) = (ModelId::new("a"), ModelId::new("b"));
@@ -723,11 +723,11 @@ fn concurrent_register_evict_submit_same_model_id() {
     registry
         .register(
             "stable",
-            ModelSpec {
-                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
-                sample_numel: 4,
-                policy: BatchPolicy::new(2, 100),
-            },
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c, &m, 0)),
+                4,
+                BatchPolicy::new(2, 100),
+            ),
         )
         .unwrap();
     let churn_id = ModelId::new("churn");
@@ -741,11 +741,11 @@ fn concurrent_register_evict_submit_same_model_id() {
                 let (c, m) = (Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(0)));
                 reg.register(
                     "churn",
-                    ModelSpec {
-                        factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
-                        sample_numel: 4,
-                        policy: BatchPolicy::new(2, 100),
-                    },
+                    ModelSpec::new(
+                        ready(move || ToyBackend::new(5, &c, &m, 0)),
+                        4,
+                        BatchPolicy::new(2, 100),
+                    ),
                 )
                 .expect("churn id was evicted last round");
                 // let some traffic land on this generation
@@ -794,11 +794,11 @@ fn concurrent_register_evict_submit_same_model_id() {
     registry
         .register(
             "churn",
-            ModelSpec {
-                factory: ready(move || ToyBackend::new(5, &c, &m, 0)),
-                sample_numel: 4,
-                policy: BatchPolicy::new(2, 100),
-            },
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c, &m, 0)),
+                4,
+                BatchPolicy::new(2, 100),
+            ),
         )
         .expect("fresh register after the churn storm");
     let resp = registry.infer(&churn_id, vec![3.0, 0.0, 0.0, 0.0]).expect("fresh generation serves");
@@ -807,4 +807,356 @@ fn concurrent_register_evict_submit_same_model_id() {
         assert!(w.alive, "worker {} retired during registry churn", w.worker);
     }
     registry.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Overload robustness: admission control, DWFQ fairness, replica budgets,
+// and the chaos fault-injection harness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_bound_sheds_typed_overloaded_at_submit() {
+    // one slow worker, a pending bound of 2, and a 10-deep instant
+    // burst: the overflow must come back as a typed Overloaded *from
+    // submit*, every admitted request must still be served, and the
+    // reservation counter must drain back to zero with the replies
+    let registry = ModelRegistry::start(1);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "bounded",
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c, &m, 20_000)),
+                4,
+                BatchPolicy::new(1, 100),
+            )
+            .with_admission(AdmissionPolicy::bounded(2)),
+        )
+        .unwrap();
+    let id = ModelId::new("bounded");
+    let mut rxs = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..10u64 {
+        match registry.submit(&id, vec![i as f32, 0.0, 0.0, 0.0]) {
+            Ok(rx) => rxs.push(rx),
+            Err(ServeError::Overloaded { model, pending }) => {
+                assert_eq!(model.as_str(), "bounded");
+                assert!(pending >= 2, "shed below the bound: pending={pending}");
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed >= 1, "a 10-deep instant burst over a bound of 2 must shed");
+    let served = rxs.len() as u64;
+    for rx in rxs {
+        rx.recv().expect("admitted request must reach a terminal reply").expect("served");
+    }
+    let stats = registry.stats();
+    let ms = &stats.models[0];
+    assert_eq!(ms.served, served);
+    assert_eq!(ms.shed, shed);
+    assert_eq!(ms.served + ms.shed, 10);
+    assert_eq!(ms.pending, 0, "reservations must drain with the terminal replies");
+    registry.shutdown();
+}
+
+#[test]
+fn infeasible_deadline_is_shed_at_submit_once_cost_is_known() {
+    // once one served batch has trained the per-sample service-time
+    // EWMA (~50ms here), a 2ms-deadline request arriving behind a
+    // queued no-deadline request is a guaranteed deadline miss — the
+    // admission layer must shed it at submit instead of queueing it
+    let registry = ModelRegistry::start(1);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "slow",
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c, &m, 50_000)),
+                4,
+                BatchPolicy::new(1, 100),
+            )
+            .with_admission(AdmissionPolicy::bounded(16)),
+        )
+        .unwrap();
+    let id = ModelId::new("slow");
+    let resp = registry.infer(&id, vec![1.0, 0.0, 0.0, 0.0]).expect("first request serves");
+    assert_eq!(resp.class, 1);
+    // occupy the worker; no deadline, so feasibility never sheds it
+    let blocker = registry
+        .submit_with(&id, vec![2.0, 0.0, 0.0, 0.0], Priority::Interactive, None)
+        .expect("no-deadline requests pass feasibility");
+    let doomed = registry.submit_with(
+        &id,
+        vec![3.0, 0.0, 0.0, 0.0],
+        Priority::Interactive,
+        Some(Duration::from_millis(2)),
+    );
+    match doomed {
+        Err(ServeError::Overloaded { model, .. }) => assert_eq!(model.as_str(), "slow"),
+        Ok(_) => panic!("an infeasible deadline must be shed at submit"),
+        Err(e) => panic!("unexpected submit error: {e}"),
+    }
+    blocker.recv().expect("reply").expect("served");
+    let stats = registry.stats();
+    assert_eq!(stats.models[0].shed, 1);
+    assert_eq!(stats.models[0].served, 2);
+    registry.shutdown();
+}
+
+#[test]
+fn replica_budget_pins_a_model_to_a_subset_of_the_pool() {
+    // dropping a model's replica budget to 1 on a 2-worker pool must
+    // route all of its (healthy, never-bounced) batches through worker
+    // 0 — worker 1 serves nothing — while every request is still
+    // answered correctly
+    let registry = ModelRegistry::start(2);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let maxb = Arc::new(AtomicUsize::new(0));
+    let (c, m) = (Arc::clone(&calls), Arc::clone(&maxb));
+    registry
+        .register(
+            "pinned",
+            ModelSpec::new(
+                ready(move || ToyBackend::new(5, &c, &m, 1_000)),
+                4,
+                BatchPolicy::new(1, 100),
+            ),
+        )
+        .unwrap();
+    let id = ModelId::new("pinned");
+    assert!(registry.set_replica_budget(&id, 1), "budget applies to a registered model");
+    assert!(!registry.set_replica_budget(&ModelId::new("ghost"), 1), "unknown id reports false");
+    let rxs: Vec<_> = (0..20u64)
+        .map(|i| registry.submit(&id, vec![i as f32, 0.0, 0.0, 0.0]).expect("registered"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("reply").expect("served");
+        assert_eq!(resp.class, i % 5);
+    }
+    let stats = registry.stats();
+    assert_eq!(stats.models[0].replica_budget, 1);
+    assert_eq!(stats.workers[0].served, 20, "the budgeted worker serves everything");
+    assert_eq!(stats.workers[1].served, 0, "budget 1 must exclude worker 1");
+    registry.shutdown();
+}
+
+/// Backend that logs its model tag into a shared slot array on every
+/// call (cursor + slot stores, no locks), so tests can assert the
+/// cross-model dispatch order of a single worker.
+struct OrderBackend {
+    tag: usize,
+    order: Arc<Vec<AtomicUsize>>,
+    cursor: Arc<AtomicUsize>,
+    delay_us: u64,
+    shape: Vec<usize>,
+}
+
+impl Backend for OrderBackend {
+    fn infer_into(&mut self, _x: &[f32], _batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        let k = self.cursor.fetch_add(1, Ordering::SeqCst);
+        if k < self.order.len() {
+            self.order[k].store(self.tag, Ordering::SeqCst);
+        }
+        if self.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.delay_us));
+        }
+        out.fill(0.0);
+        Ok(())
+    }
+
+    fn sample_shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn out_dim(&self) -> usize {
+        2
+    }
+}
+
+#[test]
+fn dwfq_keeps_a_cheap_model_live_behind_an_expensive_flood() {
+    // one worker, two models on the same (Batch) lane: a 1000x-cost
+    // model floods 8 requests first, then a cheap model submits 8. With
+    // FIFO the cheap model would wait out the whole flood; deficit-
+    // weighted fair queueing must instead serve every cheap batch
+    // before the flood's second batch (the first is already in flight)
+    const EXPENSIVE: usize = 1;
+    const CHEAP: usize = 2;
+    let registry = ModelRegistry::start(1);
+    let order: Arc<Vec<AtomicUsize>> = Arc::new((0..32).map(|_| AtomicUsize::new(0)).collect());
+    let cursor = Arc::new(AtomicUsize::new(0));
+    for (name, tag, cost, delay_us) in
+        [("expensive", EXPENSIVE, 1_000_000u64, 10_000u64), ("cheap", CHEAP, 1_000, 1_000)]
+    {
+        let (order, cursor) = (Arc::clone(&order), Arc::clone(&cursor));
+        registry
+            .register(
+                name,
+                ModelSpec::new(
+                    ready(move || OrderBackend {
+                        tag,
+                        order: Arc::clone(&order),
+                        cursor: Arc::clone(&cursor),
+                        delay_us,
+                        shape: vec![4],
+                    }),
+                    4,
+                    BatchPolicy::new(1, 100),
+                )
+                .with_cost(cost),
+            )
+            .unwrap();
+    }
+    let (eid, cid) = (ModelId::new("expensive"), ModelId::new("cheap"));
+    let mut rxs = Vec::new();
+    // the first expensive request occupies the worker (10ms) while the
+    // rest of the contest lands on the queue
+    for i in 0..9u64 {
+        rxs.push(
+            registry
+                .submit_with(&eid, vec![i as f32, 0.0, 0.0, 0.0], Priority::Batch, None)
+                .expect("registered"),
+        );
+    }
+    for i in 0..8u64 {
+        rxs.push(
+            registry
+                .submit_with(&cid, vec![i as f32, 0.0, 0.0, 0.0], Priority::Batch, None)
+                .expect("registered"),
+        );
+    }
+    for rx in rxs {
+        rx.recv().expect("reply").expect("served");
+    }
+    let n = cursor.load(Ordering::SeqCst).min(order.len());
+    let seq: Vec<usize> = (0..n).map(|k| order[k].load(Ordering::SeqCst)).collect();
+    assert_eq!(seq.len(), 17, "max_batch=1 means one call per request");
+    let last_cheap = seq.iter().rposition(|&t| t == CHEAP).expect("cheap model served");
+    let flood_ahead = seq[..last_cheap].iter().filter(|&&t| t == EXPENSIVE).count();
+    assert!(
+        flood_ahead <= 1,
+        "expensive flood starved the cheap model under DWFQ: dispatch order {seq:?}"
+    );
+    registry.shutdown();
+}
+
+#[test]
+fn chaos_faults_degrade_gracefully_and_keep_healthy_models_exact() {
+    // the overload-robustness acceptance pin: a two-model registry
+    // (kws + darknet19) where the darknet19 backend is wrapped in the
+    // chaos harness — seeded transient failures, injected stalls, and
+    // (at >=2 workers) one worker panicking outright on its first
+    // chaos call. Invariants at 1, 2 and 4 workers: every accepted
+    // request reaches exactly one terminal reply (no disconnects, no
+    // hangs), the chaos model only ever fails *typed*, and the healthy
+    // model's logits stay bit-identical to the offline forward
+    use fqconv::serve::chaos::{chaos_factory, ChaosConfig};
+    let kws = Arc::new(FqKwsNet::synthetic(1.0, 7.0, 7).expect("kws net"));
+    let dark =
+        Arc::new(synthetic_graph(&SynthArch::darknet19(), 1.0, 7.0, 7).expect("darknet19"));
+    let mut rng = Rng::new(31);
+    let (n_kws, n_dark) = (12usize, 6usize);
+    let kws_x: Vec<Vec<f32>> = (0..n_kws)
+        .map(|_| {
+            let mut v = vec![0f32; 39 * 80];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let dark_x: Vec<Vec<f32>> = (0..n_dark)
+        .map(|_| {
+            let mut v = vec![0f32; dark.in_numel()];
+            rng.fill_gaussian(&mut v, 0.5);
+            v
+        })
+        .collect();
+    let mut ks = Scratch::for_graph(kws.graph());
+    let kws_want: Vec<Vec<f32>> = kws_x.iter().map(|x| kws.forward(x, &mut ks)).collect();
+
+    let (kid, did) = (ModelId::new("kws"), ModelId::new("darknet19"));
+    for workers in [1usize, 2, 4] {
+        let registry = ModelRegistry::start(workers);
+        registry
+            .register(
+                "kws",
+                ModelSpec::new(
+                    NativeBackend::factory(&kws, &[39, 80]),
+                    39 * 80,
+                    BatchPolicy::new(4, 300),
+                )
+                .with_cost(kws.cost_per_sample()),
+            )
+            .expect("register kws");
+        let mut cfg = ChaosConfig::new(0xC4A05 + workers as u64)
+            .with_failures(250)
+            .with_stalls(250, Duration::from_millis(2));
+        if workers >= 2 {
+            // kill one worker outright; the survivors absorb the load
+            cfg = cfg.with_panic_on(workers - 1);
+        }
+        registry
+            .register(
+                "darknet19",
+                ModelSpec::new(
+                    chaos_factory(GraphBackend::factory_sharded(&dark, workers), cfg),
+                    dark.in_numel(),
+                    BatchPolicy::new(2, 200),
+                )
+                .with_cost(dark.cost_per_sample()),
+            )
+            .expect("register darknet19");
+        // chaos traffic first so the doomed worker meets it early
+        let drx: Vec<_> = dark_x
+            .iter()
+            .map(|x| {
+                registry
+                    .submit_with(&did, x.clone(), Priority::Batch, None)
+                    .expect("registered")
+            })
+            .collect();
+        let krx: Vec<_> =
+            kws_x.iter().map(|x| registry.submit(&kid, x.clone()).expect("registered")).collect();
+        for (i, rx) in krx.into_iter().enumerate() {
+            let resp = rx
+                .recv()
+                .expect("healthy-model reply lost to chaos next door")
+                .expect("healthy model must keep serving");
+            assert_eq!(
+                resp.logits, kws_want[i],
+                "workers={workers}: kws sample {i} corrupted by chaos next door"
+            );
+        }
+        let (mut dark_served, mut dark_failed) = (0usize, 0usize);
+        for rx in drx {
+            let reply = rx.recv().unwrap_or_else(|_| {
+                panic!("workers={workers}: accepted chaos-model request silently dropped")
+            });
+            match reply {
+                Ok(resp) => {
+                    assert_eq!(resp.model.as_str(), "darknet19");
+                    dark_served += 1;
+                }
+                Err(ServeError::BackendFailed { .. }) => dark_failed += 1,
+                Err(e) => panic!("workers={workers}: unexpected typed error: {e}"),
+            }
+        }
+        assert_eq!(
+            dark_served + dark_failed,
+            n_dark,
+            "workers={workers}: every accepted request needs a terminal reply"
+        );
+        let stats = registry.stats();
+        let km = stats.models.iter().find(|m| m.id == kid).unwrap();
+        assert_eq!(km.served, n_kws as u64);
+        assert_eq!(km.pending, 0, "workers={workers}: kws reservations must drain");
+        let dm = stats.models.iter().find(|m| m.id == did).unwrap();
+        assert_eq!(dm.pending, 0, "workers={workers}: chaos-model reservations must drain");
+        registry.shutdown();
+    }
 }
