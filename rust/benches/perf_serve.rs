@@ -11,8 +11,11 @@
 //! sequential per-sample walk, for ResNet-32 and DarkNet-19 — plus the
 //! `saturation` section: interactive KWS p50/p99 and the flood's shed
 //! rate while a darknet19 batch lane is 10x oversubscribed behind a
-//! bounded admission queue) so the serving-perf trajectory is tracked
-//! across PRs.
+//! bounded admission queue — plus the `streaming` section: a
+//! 10k-concurrent-session sweep over the stateful stream path reporting
+//! sessions held, frames/s, per-session resident bytes from the state
+//! plan, and closed-loop p99 feed latency) so the serving-perf
+//! trajectory is tracked across PRs.
 //! `FQCONV_BENCH_SMOKE=1` shrinks the load to one short iteration.
 #[path = "common.rs"]
 mod common;
@@ -27,7 +30,7 @@ use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
 use fqconv::infer::FqKwsNet;
 use fqconv::serve::{
     AdmissionPolicy, Backend as _, BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec,
-    NativeBackend, Priority, ServeError, Server,
+    NativeBackend, Priority, ServeError, Server, StreamSpec,
 };
 use fqconv::util::json::{num, obj, s, Json};
 use fqconv::util::{Rng, Timer};
@@ -305,6 +308,74 @@ fn main() {
     );
     registry.shutdown();
 
+    // streaming sessions: the stateful per-stream path. Hold a large
+    // population of concurrent sessions (the ROADMAP shape: tens of
+    // thousands of always-on streams per process), push frames through
+    // the shared worker pool in waves for throughput, then measure
+    // closed-loop per-feed service latency one round trip at a time.
+    // Resident memory is exactly the state plan's bytes_per_session —
+    // pinned by tests to not grow across feeds — so sessions * that
+    // figure is the RSS proxy reported here.
+    println!("\n--- streaming: concurrent stateful sessions (incremental dilated-conv) ---");
+    let sgraph = Arc::new(synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7).expect("kws graph"));
+    let stream_workers = if smoke() { 2usize } else { 4 };
+    let n_sessions = if smoke() { 64usize } else { 10_000 };
+    let waves = if smoke() { 2usize } else { 4 };
+    let spec = ModelSpec::new(
+        GraphBackend::factory_sharded(&sgraph, stream_workers),
+        sgraph.in_numel(),
+        BatchPolicy::default(),
+    )
+    .with_cost(sgraph.cost_per_sample())
+    .with_streaming(StreamSpec {
+        graph: Arc::clone(&sgraph),
+        max_sessions: n_sessions,
+        idle_timeout: std::time::Duration::from_secs(120),
+    });
+    let server = Server::start_spec(spec, stream_workers);
+    let sinfo = server.registry().stream_info(server.model_id()).expect("streaming model");
+    let t_open = Timer::start();
+    let sessions: Vec<_> =
+        (0..n_sessions).map(|_| server.open_session().expect("under bound")).collect();
+    let sessions_per_sec = n_sessions as f64 / t_open.elapsed_s().max(1e-9);
+    // one frame per wave, cloned per feed — contents don't affect cost
+    let mut frame = vec![0f32; sinfo.frame_dim];
+    Rng::new(11).fill_gaussian(&mut frame, 1.0);
+    let t_feed = Timer::start();
+    let mut replies = Vec::with_capacity(n_sessions);
+    for _ in 0..waves {
+        replies.clear();
+        for &sid in &sessions {
+            replies.push(server.feed(sid, frame.clone()).expect("open session"));
+        }
+        for rx in &replies {
+            rx.recv().expect("feed reply").expect("feed served");
+        }
+    }
+    let frames_per_sec = (n_sessions * waves) as f64 / t_feed.elapsed_s().max(1e-9);
+    // closed-loop service latency: one in-flight feed at a time
+    let mut lat_us: Vec<f64> = Vec::with_capacity(n_sessions);
+    for &sid in &sessions {
+        let t = Timer::start();
+        let rx = server.feed(sid, frame.clone()).expect("open session");
+        rx.recv().expect("feed reply").expect("feed served");
+        lat_us.push(t.elapsed_s() * 1e6);
+    }
+    lat_us.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| lat_us[((lat_us.len() - 1) as f64 * p) as usize];
+    let (feed_p50, feed_p99) = (pct(0.50), pct(0.99));
+    println!(
+        "{n_sessions} sessions (opened at {sessions_per_sec:.0}/s, {stream_workers} workers): \
+         {frames_per_sec:.0} frames/s | feed p50 {feed_p50:.0}us p99 {feed_p99:.0}us | \
+         {} bytes/session ({} KiB resident)",
+        sinfo.bytes_per_session,
+        sinfo.bytes_per_session * n_sessions / 1024
+    );
+    for &sid in &sessions {
+        server.close_session(sid).expect("open session");
+    }
+    server.shutdown();
+
     let prio_json = |p: &fqconv::serve::PriorityStats| {
         obj(vec![
             ("served", num(p.served as f64)),
@@ -346,6 +417,19 @@ fn main() {
                 ("dark_offered", num(n_flood as f64)),
                 ("dark_shed", num(dm.shed as f64)),
                 ("shed_rate", num(shed_rate)),
+            ]),
+        ),
+        (
+            "streaming",
+            obj(vec![
+                ("sessions", num(n_sessions as f64)),
+                ("workers", num(stream_workers as f64)),
+                ("waves", num(waves as f64)),
+                ("sessions_per_sec", num(sessions_per_sec)),
+                ("frames_per_sec", num(frames_per_sec)),
+                ("bytes_per_session", num(sinfo.bytes_per_session as f64)),
+                ("feed_p50_us", num(feed_p50)),
+                ("feed_p99_us", num(feed_p99)),
             ]),
         ),
     ]);

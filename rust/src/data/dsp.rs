@@ -116,6 +116,16 @@ impl Default for MfccConfig {
     }
 }
 
+/// Reusable per-frame scratch (FFT buffers, power spectrum, log-mel
+/// energies) for the allocation-free MFCC paths. Obtain one sized to an
+/// extractor via [`Mfcc::scratch`].
+pub struct MfccScratch {
+    re: Vec<f32>,
+    im: Vec<f32>,
+    power: Vec<f32>,
+    mels: Vec<f32>,
+}
+
 /// Precomputed MFCC pipeline.
 pub struct Mfcc {
     pub cfg: MfccConfig,
@@ -149,37 +159,79 @@ impl Mfcc {
         (frames - 1) * self.cfg.hop + self.cfg.win
     }
 
-    /// MFCC matrix, row-major (n_mfcc, frames).
-    pub fn compute(&self, signal: &[f32]) -> Vec<f32> {
+    /// Pre-sized per-frame scratch for the allocation-free paths.
+    pub fn scratch(&self) -> MfccScratch {
+        MfccScratch {
+            re: vec![0.0; self.cfg.nfft],
+            im: vec![0.0; self.cfg.nfft],
+            power: vec![0.0; self.cfg.nfft / 2 + 1],
+            mels: vec![0.0; self.cfg.n_mels],
+        }
+    }
+
+    /// One analysis frame up to the log-mel energies: window, FFT,
+    /// power spectrum, filterbank, log — leaves the result in
+    /// `scr.mels`. Shared by [`Mfcc::compute_into`] and
+    /// [`Mfcc::frame_into`] so the per-frame op sequence (and thus the
+    /// f32 result) cannot diverge between the offline and streaming
+    /// paths.
+    fn mel_frame(&self, window: &[f32], scr: &mut MfccScratch) {
+        debug_assert_eq!(window.len(), self.cfg.win);
+        let half = self.cfg.nfft / 2 + 1;
+        scr.re[..self.cfg.win]
+            .iter_mut()
+            .zip(window)
+            .zip(&self.window)
+            .for_each(|((r, &s), &w)| *r = s * w);
+        scr.re[self.cfg.win..].fill(0.0);
+        scr.im.fill(0.0);
+        fft(&mut scr.re, &mut scr.im);
+        for b in 0..half {
+            scr.power[b] = scr.re[b] * scr.re[b] + scr.im[b] * scr.im[b];
+        }
+        for (f, filt) in self.bank.iter().enumerate() {
+            let e: f32 = filt.iter().zip(&scr.power).map(|(&w, &p)| w * p).sum();
+            scr.mels[f] = (e + 1e-10).ln();
+        }
+    }
+
+    /// One frame for the streaming front end: exactly `win` samples →
+    /// `n_mfcc` contiguous coefficients. Each coefficient is the same
+    /// f32 expression [`Mfcc::compute`] writes (strided) into its
+    /// output column, so streamed frames are bit-identical to offline
+    /// columns.
+    pub fn frame_into(&self, window: &[f32], scr: &mut MfccScratch, coeffs: &mut [f32]) {
+        assert_eq!(window.len(), self.cfg.win, "window size");
+        assert_eq!(coeffs.len(), self.cfg.n_mfcc, "coefficient buffer size");
+        self.mel_frame(window, scr);
+        for (k, row) in self.dct.iter().enumerate() {
+            coeffs[k] = row.iter().zip(&scr.mels).map(|(&d, &m)| d * m).sum();
+        }
+    }
+
+    /// Allocation-free [`Mfcc::compute`]: the row-major (n_mfcc,
+    /// frames) matrix into a caller-owned buffer with caller-owned
+    /// scratch — per-frame streaming and batch front ends reuse the
+    /// same buffers instead of churning the allocator per call.
+    pub fn compute_into(&self, signal: &[f32], scr: &mut MfccScratch, out: &mut [f32]) {
         let frames = self.frames_for(signal.len());
-        let nfft = self.cfg.nfft;
-        let half = nfft / 2 + 1;
-        let mut out = vec![0.0f32; self.cfg.n_mfcc * frames];
-        let mut re = vec![0.0f32; nfft];
-        let mut im = vec![0.0f32; nfft];
-        let mut power = vec![0.0f32; half];
-        let mut mels = vec![0.0f32; self.cfg.n_mels];
+        assert_eq!(out.len(), self.cfg.n_mfcc * frames, "output buffer size");
         for t in 0..frames {
             let start = t * self.cfg.hop;
-            re[..self.cfg.win]
-                .iter_mut()
-                .zip(&signal[start..start + self.cfg.win])
-                .zip(&self.window)
-                .for_each(|((r, &s), &w)| *r = s * w);
-            re[self.cfg.win..].fill(0.0);
-            im.fill(0.0);
-            fft(&mut re, &mut im);
-            for b in 0..half {
-                power[b] = re[b] * re[b] + im[b] * im[b];
-            }
-            for (f, filt) in self.bank.iter().enumerate() {
-                let e: f32 = filt.iter().zip(&power).map(|(&w, &p)| w * p).sum();
-                mels[f] = (e + 1e-10).ln();
-            }
+            self.mel_frame(&signal[start..start + self.cfg.win], scr);
             for (k, row) in self.dct.iter().enumerate() {
-                out[k * frames + t] = row.iter().zip(&mels).map(|(&d, &m)| d * m).sum();
+                out[k * frames + t] = row.iter().zip(&scr.mels).map(|(&d, &m)| d * m).sum();
             }
         }
+    }
+
+    /// MFCC matrix, row-major (n_mfcc, frames) — allocating wrapper
+    /// over [`Mfcc::compute_into`].
+    pub fn compute(&self, signal: &[f32]) -> Vec<f32> {
+        let frames = self.frames_for(signal.len());
+        let mut out = vec![0.0f32; self.cfg.n_mfcc * frames];
+        let mut scr = self.scratch();
+        self.compute_into(signal, &mut scr, &mut out);
         out
     }
 
@@ -305,6 +357,75 @@ mod tests {
         let b = m.compute(&tone(1200.0));
         let dist: f32 = a.iter().zip(&b).map(|(&x, &y)| (x - y).powi(2)).sum::<f32>().sqrt();
         assert!(dist > 1.0, "tones not separated: {dist}");
+    }
+
+    #[test]
+    fn compute_into_matches_compute() {
+        let m = Mfcc::new(MfccConfig::default());
+        let n = m.samples_for_frames(20);
+        let sig: Vec<f32> = (0..n).map(|i| (2.0 * PI * 700.0 * i as f32 / 4000.0).sin()).collect();
+        let want = m.compute(&sig);
+        let mut scr = m.scratch();
+        let mut got = vec![0.0f32; want.len()];
+        m.compute_into(&sig, &mut scr, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn frame_into_matches_compute_columns() {
+        let m = Mfcc::new(MfccConfig::default());
+        let frames = 7;
+        let n = m.samples_for_frames(frames);
+        let sig: Vec<f32> = (0..n).map(|i| ((i * 73 % 19) as f32 - 9.0) / 9.0).collect();
+        let whole = m.compute(&sig);
+        let mut scr = m.scratch();
+        let mut coeffs = vec![0.0f32; m.cfg.n_mfcc];
+        for t in 0..frames {
+            let start = t * m.cfg.hop;
+            m.frame_into(&sig[start..start + m.cfg.win], &mut scr, &mut coeffs);
+            for k in 0..m.cfg.n_mfcc {
+                assert_eq!(coeffs[k], whole[k * frames + t], "k={k} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn frames_samples_round_trip_property() {
+        use crate::util::proptest::check;
+        check(
+            "mfcc-frames-roundtrip",
+            150,
+            |g, s| {
+                let win = 1 + g.sized_usize(s, 127);
+                let hop = 1 + g.sized_usize(s, 160);
+                let frames = g.sized_usize(s, 50);
+                (win, hop, frames)
+            },
+            |&(win, hop, frames)| {
+                let m = Mfcc::new(MfccConfig {
+                    sample_rate: 4000.0,
+                    win,
+                    hop,
+                    nfft: 128,
+                    n_mels: 4,
+                    n_mfcc: 3,
+                });
+                let samples = m.samples_for_frames(frames);
+                if m.frames_for(samples) != frames {
+                    return Err(format!(
+                        "frames_for(samples_for_frames({frames})) = {} (win={win} hop={hop})",
+                        m.frames_for(samples)
+                    ));
+                }
+                // samples_for_frames is minimal: one sample less loses a frame
+                if m.frames_for(samples - 1) != frames - 1 {
+                    return Err(format!(
+                        "samples_for_frames({frames}) = {samples} not minimal (win={win} hop={hop})"
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

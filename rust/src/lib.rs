@@ -30,6 +30,9 @@
 //! * [`infer`]       — integer FQ-Conv engine (i8 GEMM, ternary fast path)
 //! * [`analog`]      — crossbar simulator with w/a/MAC noise (Table 7)
 //! * [`serve`]       — router + dynamic batcher over the deployment artifact
+//! * [`stream`]      — streaming stateful inference: per-session ring-buffer
+//!                     conv state + overlap-save MFCC front end, bit-identical
+//!                     to the offline whole-window forward
 //! * [`metrics`]     — accuracy, confusion, latency histograms
 //! * [`bench`]       — micro-benchmark harness used by `cargo bench` targets
 
@@ -53,6 +56,7 @@ pub mod models;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod stream;
 pub mod tensor;
 pub mod util;
 

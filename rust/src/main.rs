@@ -6,6 +6,7 @@
 //!   exp <table1..table7|all> [--budget B] ...   regenerate a paper table
 //!   train --model <m> [--steps N] [--verbose]   run the model's GQ ladder
 //!   serve [--requests N] [--workers W]          serving demo + latency/shed stats
+//!   stream [--sessions N] [--frames F]          concurrent streaming-session demo
 //!   selftest                                    quick wiring check
 //!
 //! Budgets: --budget smoke|quick|full (default quick for exp, full for train).
@@ -22,12 +23,13 @@ use fqconv::serve::{AdmissionPolicy, BatchPolicy, ModelSpec, NativeBackend, Prio
 use fqconv::util::cli::Args;
 use fqconv::util::{Rng, Timer};
 
-const USAGE: &str = "usage: fqconv <arch|plan|exp|train|serve|selftest> [options]
+const USAGE: &str = "usage: fqconv <arch|plan|exp|train|serve|stream|selftest> [options]
   arch <model> [--fq]
   plan --model <model> [--steps N]
   exp <table1|table2|table3|table4|table5|table6|table7|all> [--budget smoke|quick|full] [--model M] [--verbose]
   train --model <model> [--steps N] [--ckpt-dir DIR] [--verbose]
   serve [--requests N] [--workers W] [--max-batch B] [--max-wait-us U] [--deadline-us D] [--max-pending P]
+  stream [--sessions N] [--frames F] [--workers W] [--max-sessions M]
   selftest";
 
 fn main() -> Result<()> {
@@ -38,6 +40,7 @@ fn main() -> Result<()> {
         "exp" => cmd_exp(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "stream" => cmd_stream(&args),
         "selftest" => cmd_selftest(),
         _ => {
             eprintln!("{USAGE}");
@@ -286,6 +289,85 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "worker {}: batches={} served={} errors={} alive={}",
             w.worker, w.batches, w.served, w.errors, w.alive
         );
+    }
+    server.shutdown();
+    Ok(())
+}
+
+/// Streaming-session demo: open N synthetic KWS sessions, feed each F
+/// paced frames through the shared worker pool, and report open rate,
+/// feed throughput, and the state plan's per-session memory bound.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use fqconv::infer::graph::{synthetic_graph, SynthArch};
+    use fqconv::serve::{GraphBackend, StreamSpec};
+
+    let sessions = args.usize_or("sessions", 64);
+    let frames = args.usize_or("frames", 50);
+    let workers = args.usize_or("workers", 2);
+    let max_sessions = args.usize_or("max-sessions", sessions);
+    let graph =
+        std::sync::Arc::new(synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7)?);
+    let spec = ModelSpec::new(
+        GraphBackend::factory_sharded(&graph, workers),
+        graph.in_numel(),
+        BatchPolicy::default(),
+    )
+    .with_cost(graph.cost_per_sample())
+    .with_streaming(StreamSpec {
+        graph: std::sync::Arc::clone(&graph),
+        max_sessions,
+        idle_timeout: std::time::Duration::from_secs(30),
+    });
+    let server = Server::start_spec(spec, workers);
+    let info = server.registry().stream_info(server.model_id()).expect("streaming model");
+    println!(
+        "state plan: {} bytes/session, warm-up {} frames, frame dim {}",
+        info.bytes_per_session, info.warmup_frames, info.frame_dim
+    );
+
+    let t_open = Timer::start();
+    let handles: Vec<_> = (0..sessions)
+        .map(|_| server.open_session().expect("under the session bound"))
+        .collect();
+    let open_s = t_open.elapsed_s();
+
+    // paced feeds: one wave per frame index across every session, reply
+    // drained per wave (a live deployment would pace by the MFCC hop)
+    let mut rng = Rng::new(11);
+    let t_feed = Timer::start();
+    let mut replies = Vec::with_capacity(sessions);
+    for _ in 0..frames {
+        replies.clear();
+        for &sid in &handles {
+            let frame: Vec<f32> =
+                (0..info.frame_dim).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            replies.push(server.feed(sid, frame).expect("session is open"));
+        }
+        for rx in &replies {
+            rx.recv().expect("reply channel").expect("feed served");
+        }
+    }
+    let feed_s = t_feed.elapsed_s();
+    let total_frames = sessions * frames;
+
+    let stats = server.stats();
+    println!(
+        "opened {sessions} sessions in {open_s:.3}s = {:.0} sessions/s",
+        sessions as f64 / open_s.max(1e-9)
+    );
+    println!(
+        "fed {total_frames} frames in {feed_s:.3}s = {:.0} frames/s \
+         ({sessions} concurrent sessions x {frames} frames)",
+        total_frames as f64 / feed_s.max(1e-9)
+    );
+    println!(
+        "resident session state: {} KiB total ({} bytes x {sessions} sessions)",
+        info.bytes_per_session * sessions / 1024,
+        info.bytes_per_session
+    );
+    println!("feed latency: {}", stats.latency_summary);
+    for &sid in &handles {
+        server.close_session(sid).expect("session is open");
     }
     server.shutdown();
     Ok(())

@@ -78,6 +78,13 @@ impl BatchPolicy {
     }
 }
 
+/// Streaming-session idle-sweep cadence: how often a streaming model's
+/// batcher scans its session table for idle-timeout evictions (and the
+/// cap on that batcher's recv timeout, so the sweep keeps ticking on a
+/// quiet ingress). One linear scan of the slab per tick — 10k slots per
+/// 10 ms is noise next to a single feed's conv work.
+pub const SESSION_SWEEP_TICK: std::time::Duration = std::time::Duration::from_millis(10);
+
 /// One simulated request for [`simulate_prio`]. Times are absolute
 /// microseconds; `deadline_us` is the instant after which the request
 /// must not start inference.

@@ -87,6 +87,26 @@
 //! worker panics) so the degradation story above is *tested*, not
 //! asserted — see `rust/tests/serving.rs`.
 //!
+//! **Streaming sessions** ([`ModelRegistry::open_session`] /
+//! [`ModelRegistry::feed`] / [`ModelRegistry::close_session`]): a model
+//! registered with [`ModelSpec::with_streaming`] additionally serves
+//! stateful per-user streams over [`crate::stream`]. Sessions live in a
+//! slab-indexed, generation-tagged [`SessionId`] table — a stale handle
+//! (closed or idle-evicted session, recycled slot) gets the typed
+//! [`ServeError::UnknownSession`], never another session's data. Feeds
+//! multiplex over the *same* worker pool as batch traffic: a feed
+//! enqueues a single-request batch tagged with its session, and the
+//! popping worker checks the session's `Send` state out of the table,
+//! applies the frame with its per-worker [`StreamScratch`], replies with
+//! running logits, then drains any feeds that queued behind it (the
+//! checkout serializes a session's frames in feed order) before putting
+//! the state back. Sessions are bounded per model (`max_sessions`,
+//! typed [`ServeError::Overloaded`] on open) and idle-evicted from the
+//! owning model's batcher tick; eviction and feed linearize on the
+//! table mutex, so a close/evict racing an in-flight feed yields
+//! exactly one terminal outcome per feed (model-checked, see
+//! rust/tests/model_check.rs).
+//!
 //! **Deadlines.** A request may carry a deadline; the batcher wakes at
 //! the earliest pending deadline and expires overdue forming-batch
 //! members *right away* (early expiry), and both the batcher (at
@@ -154,6 +174,7 @@ use crate::infer::pipeline::{FqKwsNet, Scratch};
 use crate::infer::QuantGraph;
 use crate::metrics::LatencyHist;
 use crate::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Executable};
+use crate::stream::{StreamScratch, StreamState, Streamer};
 
 pub use batcher::{BatchPolicy, Priority};
 
@@ -204,6 +225,10 @@ pub enum ServeError {
     Overloaded { model: ModelId, pending: usize },
     /// no model with this id is registered
     UnknownModel(ModelId),
+    /// the streaming [`SessionId`] is stale: the session was closed or
+    /// idle-evicted (or the handle belongs to a recycled slot of an
+    /// earlier generation)
+    UnknownSession { model: ModelId },
 }
 
 impl fmt::Display for ServeError {
@@ -219,6 +244,9 @@ impl fmt::Display for ServeError {
                 write!(f, "model {model} overloaded ({pending} pending), request shed")
             }
             ServeError::UnknownModel(m) => write!(f, "unknown model {m}"),
+            ServeError::UnknownSession { model } => {
+                write!(f, "unknown or expired streaming session on model {model}")
+            }
         }
     }
 }
@@ -588,6 +616,10 @@ struct QueuedBatch {
     /// hand-backs by workers whose replica for the model is quarantined
     /// (bounds the ping-pong when every worker has quarantined it)
     bounces: usize,
+    /// `Some` marks a streaming-session feed: the popping worker checks
+    /// the session's state out of the model's table instead of running
+    /// a batch backend (`reqs` then holds exactly one frame request)
+    session: Option<SessionId>,
 }
 
 /// DWFQ charge for one popped batch of `samples` requests: per-sample
@@ -785,9 +817,26 @@ impl SharedQueue {
 }
 
 /// Answer every member of a batch with [`ServeError::BackendFailed`].
-/// A terminal reply: releases each member's admission reservation.
+/// A terminal reply: releases each member's admission reservation. A
+/// session-feed batch additionally returns its session to idle and
+/// fails whatever backlog queued behind the doomed feed — no client may
+/// hang on a frame that can never run.
 fn fail_batch(b: QueuedBatch) {
-    let QueuedBatch { model, reqs, attempts, .. } = b;
+    let QueuedBatch { model, mut reqs, attempts, session, .. } = b;
+    if let Some(sid) = session {
+        if let Some(sm) = model.stream.as_ref() {
+            let mut tab = sm.sessions.lock().unwrap();
+            let mut close = false;
+            if let Some(slot) = tab.get_live(sid) {
+                slot.busy = false;
+                reqs.extend(slot.backlog.drain(..));
+                close = slot.pending_close;
+            }
+            if close {
+                tab.release(sid.slot);
+            }
+        }
+    }
     model.counters.dropped.fetch_add(reqs.len() as u64, Ordering::Relaxed);
     for r in reqs {
         model.counters.pending[r.priority.index()].fetch_sub(1, Ordering::Relaxed);
@@ -806,6 +855,165 @@ fn expire(r: Request, entry: &ModelEntry) {
     let _ = r
         .reply
         .send(Err(ServeError::DeadlineExceeded { model: entry.id.clone(), waited_us: waited }));
+}
+
+// ---------------------------------------------------------------------------
+// Streaming sessions
+// ---------------------------------------------------------------------------
+
+/// Handle to one open streaming session: slab slot index plus a
+/// generation tag. `Copy` — clients pass it by value to every
+/// [`ModelRegistry::feed`]. A handle outliving its session (closed,
+/// idle-evicted, or the slot recycled to a newer session) is answered
+/// with the typed [`ServeError::UnknownSession`] — never with another
+/// session's data, because the generation tag can only match the
+/// session it was minted for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SessionId {
+    slot: usize,
+    generation: u64,
+}
+
+/// Streaming-session configuration for one model
+/// ([`ModelSpec::with_streaming`]): the 1-D sequence graph to stream
+/// and the session-admission knobs.
+#[derive(Clone)]
+pub struct StreamSpec {
+    /// the graph streamed per session; must be a 1-D sequence graph
+    /// ([`crate::stream::StatePlan::for_graph`] validates at register)
+    pub graph: Arc<QuantGraph>,
+    /// bound on concurrently open sessions: [`ModelRegistry::open_session`]
+    /// past the bound returns [`ServeError::Overloaded`] (admission
+    /// control for state residency, like `max_pending` for requests)
+    pub max_sessions: usize,
+    /// a session with no feed for this long is evicted by the model's
+    /// batcher tick; its next feed gets [`ServeError::UnknownSession`]
+    pub idle_timeout: Duration,
+}
+
+/// Feeds a session may hold queued behind its in-flight feed before new
+/// ones are shed with [`ServeError::Overloaded`] — a per-session bound,
+/// so one runaway stream cannot hoard the feed path.
+const MAX_SESSION_BACKLOG: usize = 32;
+
+/// One slab slot of a [`SessionTable`].
+struct SessionSlot {
+    /// tag of the session currently (or last) resident here; a
+    /// [`SessionId`] is live iff `occupied` and the tags match
+    generation: u64,
+    occupied: bool,
+    /// a worker holds the state checked out (exactly one in-flight feed
+    /// batch exists): new feeds append to `backlog`, the idle sweep
+    /// skips the slot, close marks `pending_close` instead of freeing
+    busy: bool,
+    /// close/evict arrived while busy — the worker frees the slot when
+    /// it would otherwise put the state back
+    pending_close: bool,
+    /// feeds queued behind the in-flight one, drained in arrival order
+    /// by the worker holding the checkout (so one session's frames are
+    /// never applied out of order); bounded by [`MAX_SESSION_BACKLOG`]
+    backlog: VecDeque<Request>,
+    /// `None` while the state is checked out by a worker
+    state: Option<StreamState>,
+    last_fed: Instant,
+}
+
+impl SessionSlot {
+    fn vacant() -> Self {
+        SessionSlot {
+            generation: 0,
+            occupied: false,
+            busy: false,
+            pending_close: false,
+            backlog: VecDeque::new(),
+            state: None,
+            last_fed: Instant::now(),
+        }
+    }
+}
+
+/// Slab of one model's streaming sessions: slot indices recycle through
+/// a free list; monotone generation tags make recycled handles stale.
+/// Every transition (open, feed, checkout, put-back, close, idle sweep)
+/// happens under the table mutex, so feed and eviction linearize —
+/// exactly one terminal outcome per feed (see the module docs).
+struct SessionTable {
+    slots: Vec<SessionSlot>,
+    free: Vec<usize>,
+    /// open sessions (occupied slots)
+    live: usize,
+    next_generation: u64,
+}
+
+impl SessionTable {
+    fn new() -> Self {
+        SessionTable { slots: Vec::new(), free: Vec::new(), live: 0, next_generation: 0 }
+    }
+
+    /// The slot behind a handle, iff the handle is still live.
+    fn get_live(&mut self, sid: SessionId) -> Option<&mut SessionSlot> {
+        let s = self.slots.get_mut(sid.slot)?;
+        (s.occupied && s.generation == sid.generation).then_some(s)
+    }
+
+    /// Install a fresh session state, recycling a free slot if any.
+    fn open(&mut self, state: StreamState) -> SessionId {
+        let generation = self.next_generation;
+        self.next_generation += 1;
+        let slot = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(SessionSlot::vacant());
+                self.slots.len() - 1
+            }
+        };
+        let s = &mut self.slots[slot];
+        s.generation = generation;
+        s.occupied = true;
+        s.busy = false;
+        s.pending_close = false;
+        s.state = Some(state);
+        s.last_fed = Instant::now();
+        self.live += 1;
+        SessionId { slot, generation }
+    }
+
+    /// Free a slot (drops its state, returns the index to the free
+    /// list). The caller must have drained the backlog first.
+    fn release(&mut self, slot: usize) {
+        let s = &mut self.slots[slot];
+        debug_assert!(s.occupied, "releasing a vacant session slot");
+        debug_assert!(s.backlog.is_empty(), "releasing a slot with queued feeds");
+        s.occupied = false;
+        s.busy = false;
+        s.pending_close = false;
+        s.state = None;
+        self.free.push(slot);
+        self.live -= 1;
+    }
+}
+
+/// The streaming half of a registered model: the shared immutable
+/// [`Streamer`] plus the session slab.
+struct StreamModel {
+    streamer: Streamer,
+    sessions: Mutex<SessionTable>,
+    max_sessions: usize,
+    idle_timeout: Duration,
+}
+
+/// Streaming snapshot for one model ([`ModelRegistry::stream_info`]).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamInfo {
+    pub open_sessions: usize,
+    pub max_sessions: usize,
+    /// exact bytes one session's state reserves
+    /// ([`crate::stream::StatePlan::bytes_per_session`])
+    pub bytes_per_session: usize,
+    /// frames before a fresh session emits its first logits
+    pub warmup_frames: usize,
+    /// feature width of one feed frame
+    pub frame_dim: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -872,6 +1080,8 @@ pub struct ModelSpec {
     /// schedules as cost 1 — request-count fair.
     pub cost_per_sample: u64,
     pub admission: AdmissionPolicy,
+    /// streaming-session configuration; `None` = batch-only model
+    pub streaming: Option<StreamSpec>,
 }
 
 impl ModelSpec {
@@ -884,6 +1094,7 @@ impl ModelSpec {
             policy,
             cost_per_sample: 0,
             admission: AdmissionPolicy::default(),
+            streaming: None,
         }
     }
 
@@ -896,6 +1107,15 @@ impl ModelSpec {
 
     pub fn with_admission(mut self, admission: AdmissionPolicy) -> Self {
         self.admission = admission;
+        self
+    }
+
+    /// Enable streaming sessions over a 1-D sequence graph: the model
+    /// additionally answers [`ModelRegistry::open_session`] /
+    /// [`ModelRegistry::feed`] / [`ModelRegistry::close_session`]. The
+    /// graph is validated (and its state plan built) at register time.
+    pub fn with_streaming(mut self, spec: StreamSpec) -> Self {
+        self.streaming = Some(spec);
         self
     }
 }
@@ -972,6 +1192,9 @@ struct ModelEntry {
     replica_budget: AtomicUsize,
     ingress: Mutex<Option<Sender<Request>>>,
     counters: ModelCounters,
+    /// streaming half ([`ModelSpec::with_streaming`]); `None` for
+    /// batch-only models
+    stream: Option<StreamModel>,
 }
 
 /// Per-worker counters (lock-free; read by [`ModelRegistry::stats`]).
@@ -1023,6 +1246,8 @@ pub struct ModelStats {
     pub pending: u64,
     /// current replica budget (workers allowed to pull this model)
     pub replica_budget: usize,
+    /// open streaming sessions (0 for batch-only models)
+    pub sessions: u64,
     pub latency_summary: String,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -1117,6 +1342,21 @@ impl ModelRegistry {
         let id = id.into();
         let mut models = self.inner.models.write().unwrap();
         anyhow::ensure!(!models.contains_key(&id), "model {id} already registered");
+        // validate the streaming graph (and build its state plan)
+        // before the model becomes visible, so a 2-D graph fails the
+        // register call instead of every later open_session
+        let stream = match spec.streaming {
+            Some(s) => {
+                anyhow::ensure!(s.max_sessions >= 1, "max_sessions must be at least 1");
+                Some(StreamModel {
+                    streamer: Streamer::new(s.graph)?,
+                    sessions: Mutex::new(SessionTable::new()),
+                    max_sessions: s.max_sessions,
+                    idle_timeout: s.idle_timeout,
+                })
+            }
+            None => None,
+        };
         let (tx, rx) = mpsc::channel::<Request>();
         // autoscaling models start with one replica and grow under
         // pressure; otherwise the whole pool serves the model (the
@@ -1133,6 +1373,7 @@ impl ModelRegistry {
             replica_budget: AtomicUsize::new(budget),
             ingress: Mutex::new(Some(tx)),
             counters: ModelCounters::new(),
+            stream,
         });
         models.insert(id.clone(), Arc::clone(&entry));
         drop(models);
@@ -1277,6 +1518,145 @@ impl ModelRegistry {
         true
     }
 
+    /// Open a streaming session on a model registered with
+    /// [`ModelSpec::with_streaming`]. Bounded by the spec's
+    /// `max_sessions`: over the bound, returns the typed
+    /// [`ServeError::Overloaded`] immediately (state-residency
+    /// admission control, consistent with request shedding).
+    ///
+    /// # Panics
+    /// On a model registered without streaming — a programmer error,
+    /// like a bad feature length at submit.
+    pub fn open_session(&self, id: &ModelId) -> std::result::Result<SessionId, ServeError> {
+        let entry = match self.inner.models.read().unwrap().get(id) {
+            Some(e) => Arc::clone(e),
+            None => return Err(ServeError::UnknownModel(id.clone())),
+        };
+        let sm = stream_model(&entry);
+        let mut tab = sm.sessions.lock().unwrap();
+        if tab.live >= sm.max_sessions {
+            entry.counters.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(ServeError::Overloaded { model: id.clone(), pending: tab.live });
+        }
+        Ok(tab.open(sm.streamer.open()))
+    }
+
+    /// Feed one frame (`stream_info().frame_dim` features) to an open
+    /// session. Replies on the returned channel with the session's
+    /// running logits — empty `logits` (and class 0) while the session
+    /// is still inside its warm-up receptive field. A stale handle gets
+    /// the typed [`ServeError::UnknownSession`]; feeds racing an
+    /// in-flight feed of the same session queue behind it (bounded,
+    /// then [`ServeError::Overloaded`]) and are applied in feed order.
+    ///
+    /// # Panics
+    /// On a wrong frame length or a model without streaming — both
+    /// programmer errors, like a bad feature length at submit.
+    pub fn feed(
+        &self,
+        id: &ModelId,
+        sid: SessionId,
+        frame: Vec<f32>,
+    ) -> std::result::Result<Receiver<ServeResult>, ServeError> {
+        let entry = match self.inner.models.read().unwrap().get(id) {
+            Some(e) => Arc::clone(e),
+            None => return Err(ServeError::UnknownModel(id.clone())),
+        };
+        let sm = stream_model(&entry);
+        assert_eq!(frame.len(), sm.streamer.frame_dim(), "bad frame length for model {id}");
+        let now = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.inner.next_req_id.fetch_add(1, Ordering::Relaxed),
+            features: frame,
+            priority: Priority::Interactive,
+            deadline: None,
+            submitted: now,
+            reply: tx,
+        };
+        let lane = Priority::Interactive.index();
+        let mut tab = sm.sessions.lock().unwrap();
+        let slot = match tab.get_live(sid) {
+            Some(s) if !s.pending_close => s,
+            _ => return Err(ServeError::UnknownSession { model: id.clone() }),
+        };
+        slot.last_fed = now;
+        if slot.busy {
+            // a worker holds the checkout: queue behind the in-flight
+            // feed; the holder drains the backlog in feed order before
+            // putting the state back
+            if slot.backlog.len() >= MAX_SESSION_BACKLOG {
+                entry.counters.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Overloaded {
+                    model: id.clone(),
+                    pending: slot.backlog.len(),
+                });
+            }
+            // admission reservation, released at the terminal reply
+            entry.counters.pending[lane].fetch_add(1, Ordering::Relaxed);
+            slot.backlog.push_back(req);
+            return Ok(rx);
+        }
+        slot.busy = true;
+        entry.counters.pending[lane].fetch_add(1, Ordering::Relaxed);
+        drop(tab);
+        // bypass the forming batcher: a feed is already a complete unit
+        // of work, and frame latency is the product metric
+        self.inner.queue.push(QueuedBatch {
+            model: Arc::clone(&entry),
+            priority: Priority::Interactive,
+            reqs: vec![req],
+            attempts: 0,
+            bounces: 0,
+            session: Some(sid),
+        });
+        Ok(rx)
+    }
+
+    /// Close a session. If a feed is in flight, the slot is freed by
+    /// the worker when it finishes (the feed still gets its served
+    /// reply); either way the handle is immediately stale — subsequent
+    /// feeds get [`ServeError::UnknownSession`].
+    pub fn close_session(
+        &self,
+        id: &ModelId,
+        sid: SessionId,
+    ) -> std::result::Result<(), ServeError> {
+        let entry = match self.inner.models.read().unwrap().get(id) {
+            Some(e) => Arc::clone(e),
+            None => return Err(ServeError::UnknownModel(id.clone())),
+        };
+        let sm = stream_model(&entry);
+        let mut tab = sm.sessions.lock().unwrap();
+        let busy = match tab.get_live(sid) {
+            Some(s) if !s.pending_close => s.busy,
+            _ => return Err(ServeError::UnknownSession { model: id.clone() }),
+        };
+        if busy {
+            // the worker holding the checkout frees the slot at put-back
+            tab.get_live(sid).expect("validated above").pending_close = true;
+        } else {
+            tab.release(sid.slot);
+        }
+        Ok(())
+    }
+
+    /// Streaming snapshot for a model: open-session count and the state
+    /// plan's per-session geometry. `None` for unknown or batch-only
+    /// models.
+    pub fn stream_info(&self, id: &ModelId) -> Option<StreamInfo> {
+        let entry = Arc::clone(self.inner.models.read().unwrap().get(id)?);
+        let sm = entry.stream.as_ref()?;
+        let plan = sm.streamer.plan();
+        Some(StreamInfo {
+            open_sessions: sm.sessions.lock().unwrap().live,
+            max_sessions: sm.max_sessions,
+            bytes_per_session: plan.bytes_per_session(),
+            warmup_frames: plan.warmup_frames(),
+            frame_dim: sm.streamer.frame_dim(),
+        })
+    }
+
     /// Blocking convenience call (Interactive, no deadline).
     pub fn infer(&self, id: &ModelId, features: Vec<f32>) -> ServeResult {
         match self.submit(id, features) {
@@ -1347,6 +1727,14 @@ impl Drop for ModelRegistry {
     }
 }
 
+/// The streaming half of a model entry; panics (programmer error) on a
+/// batch-only model, mirroring the submit-time feature-length assert.
+fn stream_model(entry: &ModelEntry) -> &StreamModel {
+    entry.stream.as_ref().unwrap_or_else(|| {
+        panic!("model {} was registered without streaming (ModelSpec::with_streaming)", entry.id)
+    })
+}
+
 fn model_stats(e: &ModelEntry) -> ModelStats {
     let served = e.counters.served.load(Ordering::Relaxed);
     let batches = e.counters.batches.load(Ordering::Relaxed);
@@ -1372,6 +1760,7 @@ fn model_stats(e: &ModelEntry) -> ModelStats {
         pending: (e.counters.pending[0].load(Ordering::Relaxed)
             + e.counters.pending[1].load(Ordering::Relaxed)) as u64,
         replica_budget: e.replica_budget.load(Ordering::Relaxed),
+        sessions: e.stream.as_ref().map_or(0, |sm| sm.sessions.lock().unwrap().live as u64),
         latency_summary: hist.summary(),
         p50_us: hist.percentile(50.0),
         p99_us: hist.percentile(99.0),
@@ -1470,6 +1859,26 @@ impl Server {
     /// [`Server::submit`] for typed error handling).
     pub fn infer(&self, features: Vec<f32>) -> Response {
         self.submit(features).recv().expect("worker dropped").expect("serving failed")
+    }
+
+    /// Open a streaming session on the facade model (see
+    /// [`ModelRegistry::open_session`]).
+    pub fn open_session(&self) -> std::result::Result<SessionId, ServeError> {
+        self.registry.open_session(&self.model)
+    }
+
+    /// Feed one frame to a session (see [`ModelRegistry::feed`]).
+    pub fn feed(
+        &self,
+        sid: SessionId,
+        frame: Vec<f32>,
+    ) -> std::result::Result<Receiver<ServeResult>, ServeError> {
+        self.registry.feed(&self.model, sid, frame)
+    }
+
+    /// Close a session (see [`ModelRegistry::close_session`]).
+    pub fn close_session(&self, sid: SessionId) -> std::result::Result<(), ServeError> {
+        self.registry.close_session(&self.model, sid)
     }
 
     pub fn stats(&self) -> ServerStats {
@@ -1579,6 +1988,10 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
     let mut flat: Vec<f32> = Vec::new();
     let mut out: Vec<f32> = Vec::new();
     let mut live: Vec<Request> = Vec::new();
+    // per-model streaming scratch (generation-scoped like replicas) and
+    // the recycled logits row for session feeds
+    let mut stream_scratch: HashMap<ModelId, (u64, StreamScratch)> = HashMap::new();
+    let mut feed_logits: Vec<f32> = Vec::new();
     while let Some(mut qb) = inner.queue.pop(wi, &inner.slots) {
         let entry = Arc::clone(&qb.model);
         // an evict happened since we last looked: drop replicas (and
@@ -1597,6 +2010,15 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
             errs.retain(|mid, (gen, _)| {
                 models.get(mid).is_some_and(|e| e.generation == *gen)
             });
+            stream_scratch.retain(|mid, (gen, _)| {
+                models.get(mid).is_some_and(|e| e.generation == *gen)
+            });
+        }
+        // streaming-session feed: no backend replica involved — check
+        // the session state out of the table and run the stream path
+        if let Some(sid) = qb.session {
+            serve_stream_feed(inner, slot, qb, sid, &mut stream_scratch, &mut feed_logits);
+            continue;
         }
         // expire members whose deadline passed while queued
         let now = Instant::now();
@@ -1791,6 +2213,116 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
     // when this was the last worker — on panic unwinds too.
 }
 
+/// Answer feed requests whose session vanished with the typed
+/// [`ServeError::UnknownSession`]. A terminal reply: releases each
+/// admission reservation.
+fn reply_unknown_session(entry: &ModelEntry, reqs: impl IntoIterator<Item = Request>) {
+    for r in reqs {
+        entry.counters.pending[r.priority.index()].fetch_sub(1, Ordering::Relaxed);
+        let _ = r.reply.send(Err(ServeError::UnknownSession { model: entry.id.clone() }));
+    }
+}
+
+/// One popped session-feed batch: check the session's state out of its
+/// model's table, apply the frame through the shared [`Streamer`] with
+/// this worker's [`StreamScratch`], reply with the running logits
+/// (empty during warm-up), then keep the checkout while draining any
+/// feeds that queued behind it — the checkout is what serializes one
+/// session's frames in feed order across the whole pool — and finally
+/// put the state back (or free the slot if a close raced the feed).
+fn serve_stream_feed(
+    inner: &RegistryInner,
+    wslot: &WorkerSlot,
+    mut qb: QueuedBatch,
+    sid: SessionId,
+    scratches: &mut HashMap<ModelId, (u64, StreamScratch)>,
+    logits: &mut Vec<f32>,
+) {
+    let entry = Arc::clone(&qb.model);
+    if entry.stream.is_none() {
+        // unreachable by construction (feeds only exist for streaming
+        // models); degrade to a typed failure rather than a panic
+        fail_batch(qb);
+        return;
+    }
+    let sm = stream_model(&entry);
+    let cached = scratches
+        .entry(entry.id.clone())
+        .or_insert_with(|| (entry.generation, sm.streamer.scratch()));
+    if cached.0 != entry.generation {
+        *cached = (entry.generation, sm.streamer.scratch());
+    }
+    let scr = &mut cached.1;
+    // checkout: the feed path set `busy` before enqueueing, so the
+    // state must be resident; defensively degrade to a typed error
+    let mut state = {
+        let mut tab = sm.sessions.lock().unwrap();
+        match tab.get_live(sid).and_then(|s| s.state.take()) {
+            Some(st) => st,
+            None => {
+                drop(tab);
+                reply_unknown_session(&entry, qb.reqs.drain(..));
+                return;
+            }
+        }
+    };
+    let classes = sm.streamer.classes();
+    let mut reqs: VecDeque<Request> = qb.reqs.drain(..).collect();
+    inner.batches.fetch_add(1, Ordering::Relaxed);
+    entry.counters.batches.fetch_add(1, Ordering::Relaxed);
+    wslot.batches.fetch_add(1, Ordering::Relaxed);
+    loop {
+        for r in reqs.drain(..) {
+            sm.streamer.feed(&mut state, &r.features, scr);
+            logits.clear();
+            logits.resize(classes, 0.0);
+            let ready = sm.streamer.logits_into(&state, scr, logits);
+            let lat = r.submitted.elapsed().as_secs_f64() * 1e6;
+            let pi = r.priority.index();
+            entry.counters.hist.lock().unwrap().record_us(lat);
+            entry.counters.prio_hist[pi].lock().unwrap().record_us(lat);
+            entry.counters.served_by_prio[pi].fetch_add(1, Ordering::Relaxed);
+            entry.counters.served.fetch_add(1, Ordering::Relaxed);
+            // terminal reply: release the admission reservation
+            entry.counters.pending[pi].fetch_sub(1, Ordering::Relaxed);
+            inner.served.fetch_add(1, Ordering::Relaxed);
+            wslot.served.fetch_add(1, Ordering::Relaxed);
+            let _ = r.reply.send(Ok(Response {
+                id: r.id,
+                model: entry.id.clone(),
+                priority: r.priority,
+                logits: if ready { logits.clone() } else { Vec::new() },
+                class: if ready { argmax(logits) } else { 0 },
+                latency_us: lat,
+                batch_size: 1,
+            }));
+        }
+        let mut tab = sm.sessions.lock().unwrap();
+        let Some(slot) = tab.get_live(sid) else {
+            // the slot vanished while checked out — unreachable while
+            // the protocol holds `busy`; drop the state and move on
+            return;
+        };
+        if !slot.backlog.is_empty() {
+            // feeds arrived while we processed: drain them too under
+            // the same checkout so they apply in feed order
+            std::mem::swap(&mut reqs, &mut slot.backlog);
+            continue;
+        }
+        if slot.pending_close {
+            // a close raced the in-flight feed; the feed above already
+            // got its served reply — free the slot now (exactly one
+            // terminal outcome per feed)
+            tab.release(sid.slot);
+        } else {
+            slot.state = Some(state);
+            slot.busy = false;
+            slot.last_fed = Instant::now();
+        }
+        return;
+    }
+}
+
 /// Autoscaler cadence: how often an autoscaling model's batcher
 /// re-evaluates queue pressure (caps the batcher's recv timeout).
 const AUTOSCALE_TICK: Duration = Duration::from_millis(10);
@@ -1817,6 +2349,14 @@ const SCALE_DOWN_IDLE: Duration = Duration::from_millis(250);
 /// replica budget by one under pressure (depth above `2 * max_batch`,
 /// or fresh deadline expiries) with [`SCALE_UP_COOLDOWN`] hysteresis,
 /// and shrinks it after [`SCALE_DOWN_IDLE`] of sustained zero depth.
+///
+/// **Streaming idle sweep:** a streaming model's batcher also ticks
+/// every [`batcher::SESSION_SWEEP_TICK`], evicting sessions idle past
+/// the spec's `idle_timeout`. Busy slots (a feed in flight) are
+/// skipped — activity by definition — and the feed path updates
+/// `last_fed` under the same table mutex, so eviction and feed
+/// linearize: an evicted session's next feed gets the typed
+/// [`ServeError::UnknownSession`], never a hang or a double reply.
 fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelEntry>) {
     let policy = entry.policy;
     let mut pending: [Vec<Request>; 2] = [Vec::new(), Vec::new()];
@@ -1826,8 +2366,15 @@ fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelE
     let mut last_up: Option<Instant> = None;
     let mut idle_since: Option<Instant> = None;
     let mut last_expired = 0u64;
+    let mut sweep_tick = Instant::now();
     loop {
         let now = Instant::now();
+        if let Some(sm) = entry.stream.as_ref() {
+            if now.saturating_duration_since(sweep_tick) >= batcher::SESSION_SWEEP_TICK {
+                sweep_tick = now;
+                sweep_idle_sessions(sm, now);
+            }
+        }
         if entry.admission.autoscale && now.saturating_duration_since(scale_tick) >= AUTOSCALE_TICK
         {
             scale_tick = now;
@@ -1900,6 +2447,10 @@ fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelE
             // autoscaling models must keep ticking even when idle
             timeout = timeout.min(AUTOSCALE_TICK);
         }
+        if entry.stream.is_some() {
+            // streaming models must keep sweeping idle sessions
+            timeout = timeout.min(batcher::SESSION_SWEEP_TICK);
+        }
         match rx.recv_timeout(timeout) {
             Ok(req) => {
                 let p = req.priority;
@@ -1923,6 +2474,24 @@ fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelE
                 }
                 return;
             }
+        }
+    }
+}
+
+/// Evict sessions idle past the model's `idle_timeout` (run from the
+/// owning batcher's tick). Skips busy slots: an in-flight feed is
+/// activity, and its worker refreshes `last_fed` at put-back under the
+/// same mutex this sweep holds, so the two linearize.
+fn sweep_idle_sessions(sm: &StreamModel, now: Instant) {
+    let mut tab = sm.sessions.lock().unwrap();
+    for i in 0..tab.slots.len() {
+        let s = &tab.slots[i];
+        if s.occupied
+            && !s.busy
+            && !s.pending_close
+            && now.saturating_duration_since(s.last_fed) >= sm.idle_timeout
+        {
+            tab.release(i);
         }
     }
 }
@@ -1956,5 +2525,6 @@ fn dispatch(
         reqs: live,
         attempts: 0,
         bounces: 0,
+        session: None,
     });
 }

@@ -1,0 +1,465 @@
+//! Streaming stateful inference — per-stream session state over the
+//! integer engine.
+//!
+//! The paper's headline workload is always-on keyword spotting: per-user
+//! audio *streams*, not batch-of-N clips. Offline, the engine consumes a
+//! whole `(n_in, frames)` window; in production each user produces one
+//! new MFCC frame every hop, and recomputing the full window per frame
+//! is `frames`× wasted work. The dilated conv stack makes incremental
+//! reuse *exact*: layer output column `t` depends only on the `span =
+//! dilation * (ksize - 1) + 1` most recent input columns, so a per-layer
+//! ring of that many columns is the entire state a stream needs:
+//!
+//! ```text
+//!   frame (n_in f32) ──FpEmbed──► col (dim i8)
+//!        │                          │ push
+//!        ▼                          ▼
+//!   layer 0 ring  [· · · · ·]  span_0 = d0*(k0-1)+1 cols of c_in codes
+//!        │ warm? emit one col       │
+//!        ▼                          ▼
+//!   layer 1 ring  [· · · · · · · ·] ...            (cascade: layer l+1
+//!        │                                          only receives a col
+//!        ▼                                          when layer l emits)
+//!   last layer col ──► gap_sum[ch] += col[ch] (i64), gap_cols += 1
+//!                       │
+//!                       ▼  logits_into(): dequantize_i64 / gap_cols,
+//!                          DenseHead — emittable after any frame
+//! ```
+//!
+//! **Bit-identity contract:** after feeding `n` frames, `logits_into`
+//! equals the offline [`QuantGraph::forward_into`] on the first `n`
+//! frames of the same signal, bit for bit (pinned across every KWS
+//! dilation schedule and the edge shapes by rust/tests/stream.rs):
+//!
+//! * the per-frame [`FpEmbed`](crate::infer::graph::FpEmbed) chain
+//!   accumulates over input channels in the same f32 order as the
+//!   offline per-row axpy, so each embedded column is identical;
+//! * the conv cascade is exact integer arithmetic through the same
+//!   fused `RequantLut` tables ([`state::feed_col`] — integer-only by
+//!   construction, pinned by `cargo xtask lint`);
+//! * the running i64 GAP sum equals the offline whole-window i64 sum
+//!   (integer addition is associative), finished with the identical
+//!   `dequantize_i64 / t` expression.
+//!
+//! [`Streamer`] is the shared, immutable per-model part (graph +
+//! [`StatePlan`]); [`StreamState`] is the per-session part (rings + GAP
+//! accumulator — `Send`, checked out by whichever serve worker pops the
+//! feed); [`StreamScratch`] is the per-worker part (reused column /
+//! accumulator buffers, allocation-free after warm-up). The serving
+//! session layer (`ModelRegistry::{open_session, feed, close_session}`)
+//! lives in [`crate::serve`]; [`StreamingMfcc`] is the overlap-save
+//! front end that turns raw samples into frames, bit-identical to
+//! [`Mfcc::compute`] framing.
+
+pub mod state;
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::data::dsp::{Mfcc, MfccScratch};
+use crate::infer::graph::{QuantGraph, QuantStage};
+use crate::quant::{learned_quantize, QParams};
+
+use state::ConvRing;
+
+// ---------------------------------------------------------------------------
+// StatePlan
+// ---------------------------------------------------------------------------
+
+/// Ring geometry for one conv layer of the plan.
+#[derive(Clone, Copy, Debug)]
+pub struct RingSpec {
+    pub c_in: usize,
+    /// columns of history retained: `dilation * (ksize - 1) + 1`
+    pub span: usize,
+}
+
+/// Per-model streaming plan derived from a validated 1-D [`QuantGraph`]:
+/// ring geometry per conv layer, warm-up length, and the exact bytes a
+/// session's state reserves (the serving layer's RSS proxy).
+#[derive(Clone, Debug)]
+pub struct StatePlan {
+    rings: Vec<RingSpec>,
+    n_in: usize,
+    /// GAP width = last conv layer's c_out
+    channels: usize,
+    classes: usize,
+    /// the final conv grid the GAP dequantizes on
+    dq: QParams,
+    /// frames before the first logits: the stack's receptive field
+    warmup: usize,
+    /// widest column the cascade ping-pongs (embed dim / any c_out)
+    max_cols: usize,
+}
+
+impl StatePlan {
+    /// Build the plan by walking the graph's stage list. Fails on 2-D
+    /// (image) graphs — streaming is a sequence-model workload.
+    pub fn for_graph(g: &QuantGraph) -> Result<StatePlan> {
+        for st in g.stages() {
+            match st {
+                QuantStage::FpEmbed(_)
+                | QuantStage::FqConvStack(_)
+                | QuantStage::GlobalAvgPool(_)
+                | QuantStage::DenseHead(_) => {}
+                _ => bail!("streaming supports 1-D sequence graphs only"),
+            }
+        }
+        let e = g.embed();
+        let mut rings = Vec::new();
+        let mut warmup = 1usize;
+        let mut max_cols = e.dim;
+        let mut channels = e.dim;
+        for l in g.conv_layers() {
+            let span = l.dilation * (l.ksize - 1) + 1;
+            ensure!(l.c_in == channels, "conv stack channel chain broken");
+            rings.push(RingSpec { c_in: l.c_in, span });
+            warmup += span - 1;
+            max_cols = max_cols.max(l.c_out);
+            channels = l.c_out;
+        }
+        ensure!(!rings.is_empty(), "no conv layers to stream");
+        let dq = match g.stages().iter().find_map(|s| match s {
+            QuantStage::GlobalAvgPool(gap) => Some(gap.dq),
+            _ => None,
+        }) {
+            Some(dq) => dq,
+            None => bail!("graph has no GlobalAvgPool stage"),
+        };
+        Ok(StatePlan {
+            rings,
+            n_in: g.n_in(),
+            channels,
+            classes: g.classes(),
+            dq,
+            warmup,
+            max_cols,
+        })
+    }
+
+    pub fn rings(&self) -> &[RingSpec] {
+        &self.rings
+    }
+
+    /// Frames a fresh session must absorb before the first logits (the
+    /// conv stack's receptive field: `1 + Σ (span_l - 1)`).
+    pub fn warmup_frames(&self) -> usize {
+        self.warmup
+    }
+
+    /// Exact bytes one session's [`StreamState`] reserves: ring storage
+    /// plus the i64 GAP accumulator plus the struct itself. The
+    /// no-growth tests pin `StreamState::resident_bytes` to this.
+    pub fn bytes_per_session(&self) -> usize {
+        let ring_bytes: usize = self.rings.iter().map(|r| r.c_in * r.span).sum();
+        ring_bytes
+            + self.channels * std::mem::size_of::<i64>()
+            + std::mem::size_of::<StreamState>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamState + StreamScratch
+// ---------------------------------------------------------------------------
+
+/// Per-session streaming state: one [`ConvRing`] per conv layer plus
+/// the running i64 GAP accumulator. Plain owned data — `Send` — so the
+/// serving layer can check a session out to whichever worker pops its
+/// feed; all model parameters stay in the shared [`Streamer`].
+pub struct StreamState {
+    rings: Vec<ConvRing>,
+    gap_sum: Vec<i64>,
+    /// output columns the last layer has emitted (the GAP divisor)
+    gap_cols: usize,
+    frames_in: usize,
+}
+
+impl StreamState {
+    fn new(plan: &StatePlan) -> Self {
+        StreamState {
+            rings: plan.rings.iter().map(|r| ConvRing::new(r.c_in, r.span)).collect(),
+            gap_sum: vec![0; plan.channels],
+            gap_cols: 0,
+            frames_in: 0,
+        }
+    }
+
+    /// Frames fed into this session so far.
+    pub fn frames_in(&self) -> usize {
+        self.frames_in
+    }
+
+    /// True once logits are emittable (the warm-up receptive field has
+    /// been absorbed).
+    pub fn ready(&self) -> bool {
+        self.gap_cols > 0
+    }
+
+    /// Bytes resident in this session's state (capacities, not lengths
+    /// — pinned equal to [`StatePlan::bytes_per_session`] and constant
+    /// across feeds by rust/tests/stream.rs).
+    pub fn resident_bytes(&self) -> usize {
+        self.rings.iter().map(|r| r.resident_bytes()).sum::<usize>()
+            + self.gap_sum.capacity() * std::mem::size_of::<i64>()
+            + std::mem::size_of::<StreamState>()
+    }
+}
+
+/// Per-worker scratch for the feed path: ping-pong column buffers, the
+/// i32 accumulator column, and the pooled-feature row. Reused across
+/// sessions and feeds — allocation-free after the first warm feed
+/// ([`StreamScratch::capacities`] is pinned stable by tests).
+#[derive(Default)]
+pub struct StreamScratch {
+    acc: Vec<i32>,
+    col_a: Vec<i8>,
+    col_b: Vec<i8>,
+    pooled: Vec<f32>,
+}
+
+impl StreamScratch {
+    /// Scratch with every buffer pre-reserved to the plan, so even the
+    /// first feed allocates nothing.
+    pub fn for_plan(plan: &StatePlan) -> Self {
+        StreamScratch {
+            acc: Vec::with_capacity(plan.max_cols),
+            col_a: Vec::with_capacity(plan.max_cols),
+            col_b: Vec::with_capacity(plan.max_cols),
+            pooled: Vec::with_capacity(plan.channels),
+        }
+    }
+
+    /// Current capacities `(acc, col_a, col_b, pooled)` — lets tests pin
+    /// that steady-state feeds never reallocate.
+    pub fn capacities(&self) -> (usize, usize, usize, usize) {
+        (self.acc.capacity(), self.col_a.capacity(), self.col_b.capacity(), self.pooled.capacity())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streamer
+// ---------------------------------------------------------------------------
+
+/// The shared per-model half of the streaming subsystem: an immutable
+/// [`QuantGraph`] plus its [`StatePlan`]. One `Streamer` serves any
+/// number of concurrent [`StreamState`] sessions from any thread.
+pub struct Streamer {
+    graph: Arc<QuantGraph>,
+    plan: StatePlan,
+}
+
+impl Streamer {
+    pub fn new(graph: Arc<QuantGraph>) -> Result<Self> {
+        let plan = StatePlan::for_graph(&graph)?;
+        Ok(Streamer { graph, plan })
+    }
+
+    pub fn plan(&self) -> &StatePlan {
+        &self.plan
+    }
+
+    pub fn graph(&self) -> &QuantGraph {
+        &self.graph
+    }
+
+    pub fn classes(&self) -> usize {
+        self.plan.classes
+    }
+
+    /// Feature width of one frame (the graph's `n_in`).
+    pub fn frame_dim(&self) -> usize {
+        self.plan.n_in
+    }
+
+    /// Open a fresh session state sized to the plan.
+    pub fn open(&self) -> StreamState {
+        StreamState::new(&self.plan)
+    }
+
+    /// A pre-sized per-worker scratch.
+    pub fn scratch(&self) -> StreamScratch {
+        StreamScratch::for_plan(&self.plan)
+    }
+
+    /// Feed one frame of `n_in` features: embed → cascade the conv
+    /// rings → fold the last layer's column (if any) into the GAP
+    /// accumulator. See the module doc for the bit-identity argument.
+    pub fn feed(&self, st: &mut StreamState, frame: &[f32], scr: &mut StreamScratch) {
+        assert_eq!(frame.len(), self.plan.n_in, "frame width");
+        let e = self.graph.embed();
+        let StreamScratch { acc, col_a, col_b, .. } = scr;
+        // FpEmbed on a single column: identical f32 accumulation order
+        // (over input channels, in sequence) to the offline per-row axpy.
+        col_a.clear();
+        col_a.resize(e.dim, 0);
+        for (k, o) in col_a.iter_mut().enumerate() {
+            let wrow = &e.w[k * e.n_in..(k + 1) * e.n_in];
+            let mut av = 0.0f32;
+            for (&wc, &xv) in wrow.iter().zip(frame) {
+                av += wc * xv;
+            }
+            let bn = av * e.scale[k] + e.shift[k];
+            let q = learned_quantize(bn, e.es, e.na, -1.0);
+            *o = e.out_q.int_code(q) as i8;
+        }
+        st.frames_in += 1;
+        // cascade: layer l+1 only receives a column when layer l emits
+        let (mut cur, mut nxt) = (col_a, col_b);
+        let mut emitted = true;
+        for (l, ring) in self.graph.conv_layers().zip(st.rings.iter_mut()) {
+            if !state::feed_col(l, ring, cur, acc, nxt) {
+                emitted = false;
+                break;
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        if emitted {
+            st.gap_cols += 1;
+            for (s, &c) in st.gap_sum.iter_mut().zip(cur.iter()) {
+                *s += c as i64;
+            }
+        }
+    }
+
+    /// Logits over everything fed so far, bit-identical to the offline
+    /// whole-window forward on the same frames. Returns `false` (and
+    /// leaves `logits` untouched) while the session is still inside the
+    /// warm-up receptive field.
+    pub fn logits_into(&self, st: &StreamState, scr: &mut StreamScratch, logits: &mut [f32]) -> bool {
+        assert_eq!(logits.len(), self.plan.classes, "logit buffer size");
+        if st.gap_cols == 0 {
+            return false;
+        }
+        scr.pooled.clear();
+        scr.pooled.resize(self.plan.channels, 0.0);
+        for (p, &s) in scr.pooled.iter_mut().zip(st.gap_sum.iter()) {
+            *p = self.plan.dq.dequantize_i64(s) / st.gap_cols as f32;
+        }
+        self.graph.head().forward_into(&scr.pooled, logits);
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamingMfcc
+// ---------------------------------------------------------------------------
+
+/// Overlap-save streaming front end over [`Mfcc`]: a per-session ring of
+/// the last `win` raw samples; every `hop` new samples it linearizes the
+/// window and emits one MFCC frame via [`Mfcc::frame_into`] — the same
+/// per-frame op sequence as [`Mfcc::compute`], so each emitted frame is
+/// bit-identical to the corresponding column of the offline matrix.
+pub struct StreamingMfcc {
+    ring: Vec<f32>,
+    head: usize,
+    /// samples still needed before the next frame completes
+    until_emit: usize,
+    hop: usize,
+    /// linearized window + contiguous frame scratch
+    window: Vec<f32>,
+    frame: Vec<f32>,
+    frames_emitted: usize,
+}
+
+impl StreamingMfcc {
+    pub fn new(mfcc: &Mfcc) -> Self {
+        StreamingMfcc {
+            ring: vec![0.0; mfcc.cfg.win],
+            head: 0,
+            until_emit: mfcc.cfg.win,
+            hop: mfcc.cfg.hop,
+            window: vec![0.0; mfcc.cfg.win],
+            frame: vec![0.0; mfcc.cfg.n_mfcc],
+            frames_emitted: 0,
+        }
+    }
+
+    pub fn frames_emitted(&self) -> usize {
+        self.frames_emitted
+    }
+
+    /// Feed raw samples; `on_frame` is called with each completed
+    /// `n_mfcc`-coefficient frame, in order. `mfcc` and `scr` must be
+    /// the extractor/scratch pair this session was opened against.
+    pub fn push(
+        &mut self,
+        mfcc: &Mfcc,
+        scr: &mut MfccScratch,
+        samples: &[f32],
+        mut on_frame: impl FnMut(&[f32]),
+    ) {
+        let win = self.ring.len();
+        for &s in samples {
+            self.ring[self.head] = s;
+            self.head = (self.head + 1) % win;
+            self.until_emit -= 1;
+            if self.until_emit == 0 {
+                // linearize: after the advance, the oldest retained
+                // sample sits at `head`
+                for (i, w) in self.window.iter_mut().enumerate() {
+                    *w = self.ring[(self.head + i) % win];
+                }
+                mfcc.frame_into(&self.window, scr, &mut self.frame);
+                on_frame(&self.frame);
+                self.frames_emitted += 1;
+                self.until_emit = self.hop;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::graph::{synthetic_graph, SeqArch, SynthArch};
+
+    fn tiny() -> Arc<QuantGraph> {
+        let arch = SeqArch {
+            name: "tiny-stream",
+            n_in: 5,
+            frames: 30,
+            embed_dim: 6,
+            classes: 4,
+            convs: vec![(6, 3, 1), (7, 3, 2)],
+        };
+        Arc::new(synthetic_graph(&SynthArch::Seq(arch), 1.0, 7.0, 3).unwrap())
+    }
+
+    #[test]
+    fn plan_geometry() {
+        let g = tiny();
+        let s = Streamer::new(g).unwrap();
+        let p = s.plan();
+        assert_eq!(p.rings().len(), 2);
+        assert_eq!(p.rings()[0].span, 3);
+        assert_eq!(p.rings()[1].span, 5);
+        // receptive field: 1 + 2 + 4
+        assert_eq!(p.warmup_frames(), 7);
+        // ring storage (6*3 + 6*5 code bytes) + the i64 GAP row (7*8)
+        assert!(p.bytes_per_session() >= 6 * 3 + 6 * 5 + 7 * 8);
+    }
+
+    #[test]
+    fn rejects_2d_graphs() {
+        let g = synthetic_graph(&SynthArch::resnet32(), 1.0, 7.0, 3).unwrap();
+        assert!(StatePlan::for_graph(&g).is_err());
+    }
+
+    #[test]
+    fn not_ready_before_warmup() {
+        let g = tiny();
+        let s = Streamer::new(g).unwrap();
+        let mut st = s.open();
+        let mut scr = s.scratch();
+        let mut logits = vec![0.0; s.classes()];
+        let frame = vec![0.25f32; s.frame_dim()];
+        for t in 0..s.plan().warmup_frames() - 1 {
+            s.feed(&mut st, &frame, &mut scr);
+            assert!(!s.logits_into(&st, &mut scr, &mut logits), "t={t}");
+        }
+        s.feed(&mut st, &frame, &mut scr);
+        assert!(s.logits_into(&st, &mut scr, &mut logits));
+        assert!(st.ready());
+    }
+}

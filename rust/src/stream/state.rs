@@ -1,0 +1,226 @@
+//! Integer-only incremental conv1d state — the streaming hot path.
+//!
+//! One [`ConvRing`] per conv layer holds exactly the receptive-field
+//! history that layer needs: `span = dilation * (ksize - 1) + 1` input
+//! columns of `c_in` i8 codes. Feeding one new column ([`feed_col`])
+//! pushes it into the ring and, once the ring is warm, produces one
+//! output column by running the layer's taps against the retained
+//! history — the same i32 accumulation and the same fused
+//! [`crate::quant::RequantLut`] re-binning as the offline
+//! [`crate::infer::QuantConv1d::forward`], so the emitted codes are
+//! bit-identical to the whole-window forward (integer arithmetic is
+//! exact, so tap order cannot change the accumulator).
+//!
+//! This file is deliberately free of any float type or literal: it is
+//! pinned by the `cargo xtask lint` hot-path-float rule, like the conv
+//! kernels it reuses. Everything float-bearing in the streaming path
+//! (FpEmbed, GAP dequantize, the dense head) lives in the parent
+//! [`crate::stream`] module.
+
+use crate::infer::conv::{requant_rows, QuantConv1d, WeightKind};
+
+/// Ring buffer of the last `span` input columns a dilated conv layer
+/// can still see. Storage is slot-major — `ring[slot * c_in + ci]` —
+/// so one pushed column is a single contiguous copy.
+///
+/// Protocol: `head` is the next write position, which (once warm) is
+/// also the *oldest* retained column; logical offset `j` from the
+/// oldest therefore lives at physical slot `(head + j) % span`.
+pub struct ConvRing {
+    ring: Vec<i8>,
+    head: usize,
+    /// columns received so far, saturating at `span`
+    filled: usize,
+    c_in: usize,
+    span: usize,
+}
+
+impl ConvRing {
+    pub fn new(c_in: usize, span: usize) -> Self {
+        assert!(c_in > 0 && span > 0, "degenerate ring geometry");
+        ConvRing { ring: vec![0; c_in * span], head: 0, filled: 0, c_in, span }
+    }
+
+    /// Columns of history this ring retains (`dilation * (ksize-1) + 1`).
+    pub fn span(&self) -> usize {
+        self.span
+    }
+
+    /// True once the ring holds a full receptive field — every push
+    /// from now on emits one output column.
+    pub fn is_warm(&self) -> bool {
+        self.filled == self.span
+    }
+
+    /// Bytes resident in the ring storage (capacity, not length — the
+    /// memory-bound tests pin that this never grows across feeds).
+    pub fn resident_bytes(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    fn push(&mut self, col: &[i8]) {
+        debug_assert_eq!(col.len(), self.c_in, "column width");
+        self.ring[self.head * self.c_in..(self.head + 1) * self.c_in].copy_from_slice(col);
+        self.head = (self.head + 1) % self.span;
+        if self.filled < self.span {
+            self.filled += 1;
+        }
+    }
+
+    /// Code of input channel `ci` at logical column offset `off`
+    /// (0 = oldest retained column).
+    #[inline]
+    fn at(&self, off: usize, ci: usize) -> i8 {
+        debug_assert!(off < self.span && ci < self.c_in);
+        let slot = (self.head + off) % self.span;
+        self.ring[slot * self.c_in + ci]
+    }
+}
+
+/// Push one input column into `ring` and, once the layer's receptive
+/// field is resident, emit one output column of `layer.c_out` codes on
+/// the layer's fused output grid into `out`. Returns `true` when `out`
+/// was written (the ring is warm), `false` during warm-up.
+///
+/// Tap `(ci, f)` of the layer reads the retained column at logical
+/// offset `f * dilation` — exactly the element `x[ci, t + f*dilation]`
+/// the offline conv reads for output step `t` — and the accumulator is
+/// requantized through the layer's own LUT via the shared
+/// [`requant_rows`] pass, so the result is bit-identical to
+/// [`QuantConv1d::forward`] on the whole window.
+pub fn feed_col(
+    layer: &QuantConv1d,
+    ring: &mut ConvRing,
+    col: &[i8],
+    acc: &mut Vec<i32>,
+    out: &mut Vec<i8>,
+) -> bool {
+    debug_assert_eq!(ring.c_in, layer.c_in, "ring/layer channel mismatch");
+    ring.push(col);
+    if !ring.is_warm() {
+        return false;
+    }
+    acc.clear();
+    acc.resize(layer.c_out, 0);
+    match &layer.weights {
+        WeightKind::Ternary(tern) => {
+            for (ko, a) in acc.iter_mut().enumerate() {
+                let (plus, minus) = tern.col(ko);
+                let mut v = 0i32;
+                for &p in plus {
+                    let (ci, f) = (p as usize / layer.ksize, p as usize % layer.ksize);
+                    v += ring.at(f * layer.dilation, ci) as i32;
+                }
+                for &p in minus {
+                    let (ci, f) = (p as usize / layer.ksize, p as usize % layer.ksize);
+                    v -= ring.at(f * layer.dilation, ci) as i32;
+                }
+                *a = v;
+            }
+        }
+        WeightKind::Dense { b } => {
+            for ci in 0..layer.c_in {
+                for f in 0..layer.ksize {
+                    let xv = ring.at(f * layer.dilation, ci) as i32;
+                    if xv == 0 {
+                        continue; // zero inputs contribute exactly nothing
+                    }
+                    let w = &b[(ci * layer.ksize + f) * layer.c_out..][..layer.c_out];
+                    for (a, &wv) in acc.iter_mut().zip(w) {
+                        *a += wv as i32 * xv;
+                    }
+                }
+            }
+        }
+    }
+    out.clear();
+    out.resize(layer.c_out, 0);
+    requant_rows(&layer.lut, acc, out);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QParams;
+    use crate::util::Rng;
+
+    fn random_layer(rng: &mut Rng, c_in: usize, c_out: usize, ksize: usize, dil: usize, nw: f32) -> QuantConv1d {
+        let w: Vec<f32> = (0..c_out * c_in * ksize).map(|_| rng.gaussian_f32(0.0, 0.5)).collect();
+        let qa = QParams::new(0.9, 7.0, 0.0);
+        let qw = QParams::new(0.5, nw, -1.0);
+        let mid = QParams::new(1.1, 7.0, 0.0);
+        let next = Some(QParams::new(1.05, 7.0, 0.0));
+        QuantConv1d::new(&w, c_out, c_in, ksize, dil, qa, qw, mid, next)
+    }
+
+    #[test]
+    fn warmup_then_one_column_per_push() {
+        let mut rng = Rng::new(23);
+        let layer = random_layer(&mut rng, 3, 4, 3, 2, 1.0);
+        let span = layer.dilation * (layer.ksize - 1) + 1;
+        let mut ring = ConvRing::new(layer.c_in, span);
+        let (mut acc, mut out) = (Vec::new(), Vec::new());
+        for t in 0..span - 1 {
+            let col: Vec<i8> = (0..layer.c_in).map(|_| rng.below(8) as i8).collect();
+            assert!(!feed_col(&layer, &mut ring, &col, &mut acc, &mut out), "t={t}");
+        }
+        let col: Vec<i8> = (0..layer.c_in).map(|_| rng.below(8) as i8).collect();
+        assert!(feed_col(&layer, &mut ring, &col, &mut acc, &mut out));
+        assert_eq!(out.len(), layer.c_out);
+    }
+
+    #[test]
+    fn streamed_columns_match_whole_window_forward() {
+        // both weight kinds, dilations incl. the KWS extremes
+        let mut rng = Rng::new(29);
+        for &(ksize, dil) in &[(3usize, 1usize), (3, 2), (3, 8), (1, 1), (5, 2)] {
+            for nw in [1.0f32, 7.0] {
+                let (c_in, c_out, t_in) = (5usize, 6usize, 40usize);
+                let layer = random_layer(&mut rng, c_in, c_out, ksize, dil, nw);
+                let x: Vec<i8> = (0..c_in * t_in).map(|_| rng.below(8) as i8).collect();
+                let (mut acc, mut want) = (Vec::new(), Vec::new());
+                layer.forward(&x, t_in, &mut acc, &mut want);
+                let t_out = layer.t_out(t_in);
+
+                let span = dil * (ksize - 1) + 1;
+                let mut ring = ConvRing::new(c_in, span);
+                let (mut sacc, mut col_out) = (Vec::new(), Vec::new());
+                let mut col = vec![0i8; c_in];
+                let mut emitted = 0usize;
+                for t in 0..t_in {
+                    for (ci, c) in col.iter_mut().enumerate() {
+                        *c = x[ci * t_in + t];
+                    }
+                    if feed_col(&layer, &mut ring, &col, &mut sacc, &mut col_out) {
+                        for ko in 0..c_out {
+                            assert_eq!(
+                                col_out[ko],
+                                want[ko * t_out + emitted],
+                                "ksize={ksize} dil={dil} nw={nw} t={t} ko={ko}"
+                            );
+                        }
+                        emitted += 1;
+                    }
+                }
+                assert_eq!(emitted, t_out, "ksize={ksize} dil={dil} nw={nw}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_memory_is_static() {
+        let mut rng = Rng::new(31);
+        let layer = random_layer(&mut rng, 4, 4, 3, 4, 1.0);
+        let span = layer.dilation * (layer.ksize - 1) + 1;
+        let mut ring = ConvRing::new(layer.c_in, span);
+        let bytes = ring.resident_bytes();
+        assert_eq!(bytes, layer.c_in * span);
+        let (mut acc, mut out) = (Vec::new(), Vec::new());
+        let col = vec![1i8; layer.c_in];
+        for _ in 0..10 * span {
+            feed_col(&layer, &mut ring, &col, &mut acc, &mut out);
+        }
+        assert_eq!(ring.resident_bytes(), bytes, "ring grew across feeds");
+    }
+}

@@ -25,6 +25,12 @@
 //!    `submit_with` reservation protocol: the queue never exceeds its
 //!    admission bound, and every request gets exactly one terminal
 //!    reply — served by the consumer, or shed right at submit.
+//! 5. **Streaming session lifecycle** — distilled model of the serve
+//!    session table (`open_session`/`feed`/idle sweep vs. the worker's
+//!    checkout/put-back): an idle eviction racing an in-flight feed
+//!    yields exactly one terminal outcome per feed — served or typed
+//!    `UnknownSession`, never a hang or a double reply — and a stale
+//!    handle never aliases a recycled slot.
 //!
 //! The registry/quarantine protocols are modeled in distilled form
 //! (same decision structure, minus backends/mpsc/wall-clock — none of
@@ -197,6 +203,13 @@ enum Mutation {
     /// an over-bound submit drops the shed reply on the floor instead
     /// of answering the request at submit
     ShedReplyDropped,
+    // -- streaming sessions --
+    /// the idle sweeper evicts a session even while its feed is in
+    /// flight (missing `!busy` guard), dropping the queued backlog
+    EvictIgnoresBusy,
+    /// session lookups skip the slot-generation compare, so a stale
+    /// handle aliases a recycled slot
+    NoSessionGenerationCheck,
 }
 
 /// Distilled register/evict vs. in-flight-batch replica-generation
@@ -591,6 +604,176 @@ fn admission_faithful_passes() {
 }
 
 // ===========================================================================
+// 5. Streaming session lifecycle (distilled serve session-table model)
+// ===========================================================================
+
+/// One slab slot of the distilled session table (mirrors
+/// `serve::SessionSlot`): generation-tagged occupancy, the in-flight
+/// `busy` flag, the parked state (tagged with the generation it belongs
+/// to), and the backlog of feeds queued behind the in-flight one.
+struct SessSlot {
+    occupied: bool,
+    generation: u64,
+    busy: bool,
+    /// Some(gen) while the session state is parked in the slot; None
+    /// while a worker has it checked out (or after release)
+    state: Option<u64>,
+    /// (feed index, handle generation) queued while `busy`
+    backlog: Vec<(usize, u64)>,
+}
+
+/// The `get_live` validation from the real session table: slot occupied
+/// and the handle's generation current. `NoSessionGenerationCheck`
+/// removes the load-bearing compare.
+fn sess_live(s: &SessSlot, sid: u64, m: Mutation) -> bool {
+    s.occupied && (m == Mutation::NoSessionGenerationCheck || s.generation == sid)
+}
+
+/// Distilled session open/feed/evict lifecycle from the serve session
+/// layer (`ModelRegistry::{open_session, feed}` + `sweep_idle_sessions`
+/// vs. `serve_stream_feed`'s checkout/put-back): a client feeds two
+/// frames on its generation-1 handle, an idle sweeper races the feeds
+/// (a legitimate evict immediately recycles the slot under generation
+/// 2 — slab reuse), and a worker drains the feed queue, draining the
+/// backlog under its checkout before putting the state back.
+///
+/// Invariants asserted inside the model:
+/// - every feed gets exactly one terminal reply — served, or typed
+///   `UnknownSession` — never zero (hang), never two;
+/// - a feed is only ever served against the state of its own session
+///   generation (a stale handle never aliases a recycled slot).
+fn session_model(m: Mutation) {
+    const FEEDS: usize = 2;
+    const SID: u64 = 1; // the client's handle: slot generation 1
+    let table: Arc<Mutex<SessSlot>> = Arc::new(Mutex::new(SessSlot {
+        occupied: true,
+        generation: SID,
+        busy: false,
+        state: Some(SID),
+        backlog: Vec::new(),
+    }));
+    // feed queue: Some((feed index, handle generation)); None = shutdown
+    let queue: Arc<(Mutex<VecDeque<Option<(usize, u64)>>>, Condvar)> =
+        Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+    let replies: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..FEEDS).map(|_| AtomicUsize::new(0)).collect());
+
+    let sweeper = {
+        let table = Arc::clone(&table);
+        spawn_named("session-sweeper", move || {
+            let mut t = table.lock().unwrap();
+            // the `!busy` guard is the load-bearing line the
+            // EvictIgnoresBusy mutation removes
+            if t.occupied && (m == Mutation::EvictIgnoresBusy || !t.busy) {
+                t.occupied = false;
+                t.busy = false;
+                t.state = None;
+                t.backlog.clear(); // the hand-broken variant drops queued feeds
+                // slab reuse: a fresh open recycles the freed slot
+                // under the next generation
+                t.occupied = true;
+                t.generation = SID + 1;
+                t.state = Some(SID + 1);
+            }
+        })
+    };
+
+    let worker = {
+        let table = Arc::clone(&table);
+        let queue = Arc::clone(&queue);
+        let replies = Arc::clone(&replies);
+        spawn_named("session-worker", move || loop {
+            let job = {
+                let mut q = queue.0.lock().unwrap();
+                loop {
+                    if let Some(job) = q.pop_front() {
+                        break job;
+                    }
+                    q = queue.1.wait(q).unwrap();
+                }
+            };
+            let Some((i, sid)) = job else { return };
+            // checkout
+            let state = {
+                let mut t = table.lock().unwrap();
+                if sess_live(&t, sid, m) {
+                    t.state.take()
+                } else {
+                    None
+                }
+            };
+            let Some(state_gen) = state else {
+                // typed UnknownSession: the feed's one terminal reply
+                replies[i].fetch_add(1, Ordering::SeqCst);
+                continue;
+            };
+            let mut reqs = vec![(i, sid)];
+            loop {
+                for &(j, sj) in &reqs {
+                    assert_eq!(
+                        state_gen, sj,
+                        "feed {j} of session generation {sj} served with \
+                         generation-{state_gen} state"
+                    );
+                    replies[j].fetch_add(1, Ordering::SeqCst); // served
+                }
+                reqs.clear();
+                let mut t = table.lock().unwrap();
+                if !sess_live(&t, sid, m) {
+                    break; // evicted while checked out: the state is dropped
+                }
+                if t.backlog.is_empty() {
+                    t.state = Some(state_gen); // put back
+                    t.busy = false;
+                    break;
+                }
+                // keep draining feeds that queued up behind the checkout
+                reqs.append(&mut t.backlog);
+            }
+        })
+    };
+
+    // client: two feeds on the (possibly stale) handle
+    for i in 0..FEEDS {
+        let mut t = table.lock().unwrap();
+        if !sess_live(&t, SID, m) {
+            drop(t);
+            // typed UnknownSession right at feed: the terminal reply
+            replies[i].fetch_add(1, Ordering::SeqCst);
+            continue;
+        }
+        if t.busy {
+            t.backlog.push((i, SID));
+        } else {
+            t.busy = true;
+            drop(t);
+            queue.0.lock().unwrap().push_back(Some((i, SID)));
+            queue.1.notify_all();
+        }
+    }
+
+    sweeper.join().expect("sweeper");
+    queue.0.lock().unwrap().push_back(None);
+    queue.1.notify_all();
+    worker.join().expect("session worker");
+    for (i, r) in replies.iter().enumerate() {
+        assert_eq!(
+            r.load(Ordering::SeqCst),
+            1,
+            "feed {i}: not exactly one terminal reply (served or UnknownSession)"
+        );
+    }
+}
+
+/// The faithful session lifecycle passes: idle eviction racing an
+/// in-flight feed always resolves to exactly one terminal outcome.
+#[test]
+fn session_lifecycle_feed_evict_model() {
+    let report = check_with(cfg(2, 20_000, 10_000), || session_model(Mutation::None));
+    assert!(report.failure.is_none(), "session protocol failed: {:#?}", report.failure);
+}
+
+// ===========================================================================
 // Mini-pool: a parameterized distillation of the exec::Pool fork-join
 // handshake, used by the seeded-mutation suite (the real Pool cannot be
 // hand-broken at runtime).
@@ -827,6 +1010,20 @@ fn mutation_shed_reply_dropped_caught() {
     });
 }
 
+#[test]
+fn mutation_evict_ignores_busy_caught() {
+    assert_caught("evict-ignores-busy", Mutation::EvictIgnoresBusy, || {
+        session_model(Mutation::EvictIgnoresBusy)
+    });
+}
+
+#[test]
+fn mutation_no_session_generation_check_caught() {
+    assert_caught("no-session-generation-check", Mutation::NoSessionGenerationCheck, || {
+        session_model(Mutation::NoSessionGenerationCheck)
+    });
+}
+
 // ===========================================================================
 // Replay: a recorded failing schedule reproduces its failure.
 // ===========================================================================
@@ -843,5 +1040,17 @@ fn failing_schedule_replays_deterministically() {
         failure.kind,
         FailureKind::Deadlock,
         "dropped notify must replay as the lost-wakeup deadlock: {failure:#?}"
+    );
+}
+
+#[test]
+fn session_mutation_replays_deterministically() {
+    let schedule = assert_caught("evict-ignores-busy", Mutation::EvictIgnoresBusy, || {
+        session_model(Mutation::EvictIgnoresBusy)
+    });
+    let report = replay(|| session_model(Mutation::EvictIgnoresBusy), &schedule);
+    assert!(
+        report.failure.is_some(),
+        "replayed session schedule must reproduce its dropped-backlog failure"
     );
 }

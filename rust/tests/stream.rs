@@ -1,0 +1,339 @@
+//! Streaming subsystem acceptance: incremental per-frame inference is
+//! bit-identical to the offline whole-window forward — across every KWS
+//! dilation schedule prefix, the edge shapes, and through the serving
+//! registry at 1/2/4 workers — the overlap-save MFCC front end matches
+//! offline framing, steady-state feeds never grow state or scratch, and
+//! the session layer's typed lifecycle errors (UnknownSession on
+//! close/evict/stale handles, Overloaded over `max_sessions`) hold.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fqconv::data::dsp::{Mfcc, MfccConfig};
+use fqconv::infer::graph::{synthetic_graph, QuantGraph, Scratch, SeqArch, SynthArch};
+use fqconv::serve::{BatchPolicy, GraphBackend, ModelSpec, ServeError, Server, StreamSpec};
+use fqconv::stream::{Streamer, StreamingMfcc};
+use fqconv::util::Rng;
+
+fn seq_graph(
+    name: &'static str,
+    convs: Vec<(usize, usize, usize)>,
+    frames: usize,
+    seed: u64,
+) -> Arc<QuantGraph> {
+    let arch = SeqArch { name, n_in: 5, frames, embed_dim: 8, classes: 4, convs };
+    Arc::new(synthetic_graph(&SynthArch::Seq(arch), 1.0, 7.0, seed).expect(name))
+}
+
+fn gaussian_clip(g: &QuantGraph, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut clip = vec![0f32; g.in_numel()];
+    rng.fill_gaussian(&mut clip, 1.0);
+    clip
+}
+
+fn offline(g: &QuantGraph, clip: &[f32]) -> Vec<f32> {
+    let mut s = Scratch::for_graph(g);
+    g.forward(clip, &mut s)
+}
+
+/// Feed the clip column by column through a fresh session, asserting the
+/// warm-up readiness boundary on the way, and return the final logits.
+fn streamed(g: &Arc<QuantGraph>, clip: &[f32]) -> Vec<f32> {
+    let streamer = Streamer::new(Arc::clone(g)).expect("1-D graph");
+    let frames = g.in_numel() / g.n_in();
+    let warmup = streamer.plan().warmup_frames();
+    let mut st = streamer.open();
+    let mut scr = streamer.scratch();
+    let mut frame = vec![0f32; g.n_in()];
+    let mut logits = vec![0f32; g.classes()];
+    for t in 0..frames {
+        for (k, f) in frame.iter_mut().enumerate() {
+            *f = clip[k * frames + t];
+        }
+        streamer.feed(&mut st, &frame, &mut scr);
+        let ready = t + 1 >= warmup;
+        assert_eq!(st.ready(), ready, "readiness at frame {t} (warmup {warmup})");
+        assert_eq!(streamer.logits_into(&st, &mut scr, &mut logits), ready);
+    }
+    assert_eq!(st.frames_in(), frames);
+    logits
+}
+
+#[test]
+fn every_kws_dilation_schedule_prefix_streams_bit_identically() {
+    // the paper's KWS schedule, layer by layer: each prefix is its own
+    // network (own warm-up, own ring cascade) and must match offline
+    const SCHED: [usize; 7] = [1, 1, 2, 4, 8, 8, 8];
+    for p in 1..=SCHED.len() {
+        let convs: Vec<_> = SCHED[..p].iter().map(|&d| (8, 3, d)).collect();
+        let warmup = 1 + SCHED[..p].iter().map(|d| 2 * d).sum::<usize>();
+        let g = seq_graph("kws-prefix", convs, warmup + 3, 11);
+        let streamer = Streamer::new(Arc::clone(&g)).unwrap();
+        assert_eq!(streamer.plan().warmup_frames(), warmup, "prefix {p} warm-up");
+        let clip = gaussian_clip(&g, 100 + p as u64);
+        assert_eq!(streamed(&g, &clip), offline(&g, &clip), "prefix {p} diverged");
+    }
+    // and the full-size paper net: 39 MFCC x 80 frames, 32 wide, 12 classes
+    let g = Arc::new(synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7).expect("kws"));
+    let clip = gaussian_clip(&g, 200);
+    assert_eq!(streamed(&g, &clip), offline(&g, &clip), "full kws diverged");
+}
+
+#[test]
+fn edge_shapes_stream_bit_identically() {
+    // ksize=1 (span-1 ring), a mixed stack with a pointwise middle
+    // layer, dilation gap wider than the surviving t_out, and a stack
+    // whose output is a single column
+    let cases: [(&'static str, Vec<(usize, usize, usize)>, usize); 4] = [
+        ("k1", vec![(6, 1, 1)], 4),
+        ("k1-mid", vec![(6, 3, 2), (6, 1, 1), (5, 3, 1)], 10),
+        ("wide-gap", vec![(6, 3, 8)], 19), // span 17: t_out=2 < dilation 8
+        ("t-out-1", vec![(6, 3, 4)], 9),   // t_out exactly 1
+    ];
+    for (name, convs, frames) in cases {
+        let g = seq_graph(name, convs, frames, 9);
+        let clip = gaussian_clip(&g, 300);
+        assert_eq!(streamed(&g, &clip), offline(&g, &clip), "{name} diverged");
+    }
+}
+
+#[test]
+fn every_truncated_window_matches_an_offline_rebuild() {
+    // after n frames the session's logits must equal the offline forward
+    // over exactly the first n columns. The synthetic weights depend
+    // only on dims + seed — not on `frames` — so a graph rebuilt with
+    // frames=n carries identical parameters.
+    let full = 20usize;
+    let convs = vec![(6, 3, 1), (7, 3, 2)];
+    let mk = |frames: usize| {
+        let arch = SeqArch {
+            name: "trunc",
+            n_in: 5,
+            frames,
+            embed_dim: 8,
+            classes: 4,
+            convs: convs.clone(),
+        };
+        Arc::new(synthetic_graph(&SynthArch::Seq(arch), 1.0, 7.0, 5).expect("trunc"))
+    };
+    let g = mk(full);
+    let clip = gaussian_clip(&g, 400);
+    let streamer = Streamer::new(Arc::clone(&g)).unwrap();
+    let warmup = streamer.plan().warmup_frames();
+    assert_eq!(warmup, 7); // 1 + 2*1 + 2*2
+    let mut st = streamer.open();
+    let mut scr = streamer.scratch();
+    let mut frame = vec![0f32; g.n_in()];
+    let mut logits = vec![0f32; g.classes()];
+    for t in 0..full {
+        for (k, f) in frame.iter_mut().enumerate() {
+            *f = clip[k * full + t];
+        }
+        streamer.feed(&mut st, &frame, &mut scr);
+        let n = t + 1;
+        if !streamer.logits_into(&st, &mut scr, &mut logits) {
+            assert!(n < warmup, "no logits after warm-up");
+            continue;
+        }
+        let gn = mk(n);
+        let mut xn = vec![0f32; g.n_in() * n];
+        for k in 0..g.n_in() {
+            xn[k * n..(k + 1) * n].copy_from_slice(&clip[k * full..k * full + n]);
+        }
+        assert_eq!(logits, offline(&gn, &xn), "window n={n} diverged");
+    }
+}
+
+#[test]
+fn steady_state_feeds_do_not_grow_state_or_scratch() {
+    let g = Arc::new(synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7).expect("kws"));
+    let streamer = Streamer::new(Arc::clone(&g)).unwrap();
+    let plan_bytes = streamer.plan().bytes_per_session();
+    let mut st = streamer.open();
+    let mut scr = streamer.scratch();
+    assert_eq!(st.resident_bytes(), plan_bytes, "fresh state off plan");
+    let mut rng = Rng::new(8);
+    let mut frame = vec![0f32; streamer.frame_dim()];
+    let mut logits = vec![0f32; streamer.classes()];
+    rng.fill_gaussian(&mut frame, 1.0);
+    streamer.feed(&mut st, &frame, &mut scr);
+    let caps = scr.capacities();
+    for i in 0..200 {
+        rng.fill_gaussian(&mut frame, 1.0);
+        streamer.feed(&mut st, &frame, &mut scr);
+        streamer.logits_into(&st, &mut scr, &mut logits);
+        assert_eq!(scr.capacities(), caps, "scratch grew at feed {i}");
+        assert_eq!(st.resident_bytes(), plan_bytes, "session state grew at feed {i}");
+    }
+}
+
+#[test]
+fn streaming_mfcc_is_bit_identical_at_any_chunking() {
+    let mfcc = Mfcc::new(MfccConfig::default());
+    let mut scr = mfcc.scratch();
+    // 13 extra samples: less than a hop past the last frame boundary,
+    // so the tail must emit nothing
+    let mut signal = vec![0f32; mfcc.samples_for_frames(17) + 13];
+    let mut rng = Rng::new(6);
+    rng.fill_gaussian(&mut signal, 1.0);
+    let off = mfcc.compute(&signal); // (n_mfcc, frames) row-major
+    let n_frames = mfcc.frames_for(signal.len());
+    assert_eq!(n_frames, 17);
+    for chunk in [1usize, 7, 160, signal.len()] {
+        let mut s = StreamingMfcc::new(&mfcc);
+        let mut t = 0usize;
+        for c in signal.chunks(chunk) {
+            s.push(&mfcc, &mut scr, c, |f| {
+                for (k, &v) in f.iter().enumerate() {
+                    assert_eq!(v, off[k * n_frames + t], "chunk={chunk} frame {t} coeff {k}");
+                }
+                t += 1;
+            });
+        }
+        assert_eq!(t, n_frames, "chunk={chunk} emitted the wrong frame count");
+        assert_eq!(s.frames_emitted(), n_frames);
+    }
+}
+
+#[test]
+fn registry_sessions_bit_identical_at_1_2_4_workers() {
+    // concurrent sessions fed through the shared worker pool: warm-up
+    // frames reply with empty logits, every later reply carries running
+    // logits, and the final reply equals the offline whole-window
+    // forward — while the same pool keeps serving offline submits
+    let graph = Arc::new(synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7).expect("kws"));
+    let (n_in, frames) = (graph.n_in(), graph.in_numel() / graph.n_in());
+    let n_sessions = 3usize;
+    let clips: Vec<Vec<f32>> =
+        (0..n_sessions).map(|i| gaussian_clip(&graph, 500 + i as u64)).collect();
+    let mut s = Scratch::for_graph(&graph);
+    let want: Vec<Vec<f32>> = clips.iter().map(|x| graph.forward(x, &mut s)).collect();
+    let warmup = Streamer::new(Arc::clone(&graph)).unwrap().plan().warmup_frames();
+    for workers in [1usize, 2, 4] {
+        let spec = ModelSpec::new(
+            GraphBackend::factory_sharded(&graph, workers),
+            graph.in_numel(),
+            BatchPolicy::default(),
+        )
+        .with_cost(graph.cost_per_sample())
+        .with_streaming(StreamSpec {
+            graph: Arc::clone(&graph),
+            max_sessions: 8,
+            idle_timeout: Duration::from_secs(30),
+        });
+        let server = Server::start_spec(spec, workers);
+        let sids: Vec<_> = (0..n_sessions)
+            .map(|_| server.open_session().expect("under the session bound"))
+            .collect();
+        assert_eq!(server.registry().stats().models[0].sessions, n_sessions as u64);
+        let mut last: Vec<Vec<f32>> = vec![Vec::new(); n_sessions];
+        for t in 0..frames {
+            let rxs: Vec<_> = sids
+                .iter()
+                .enumerate()
+                .map(|(i, &sid)| {
+                    let frame: Vec<f32> = (0..n_in).map(|k| clips[i][k * frames + t]).collect();
+                    server.feed(sid, frame).expect("open session accepts feeds")
+                })
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().expect("feed reply").expect("served");
+                assert_eq!(resp.batch_size, 1, "a feed is its own unit of work");
+                if t + 1 < warmup {
+                    assert!(
+                        resp.logits.is_empty(),
+                        "workers={workers}: warm-up frame {t} emitted logits"
+                    );
+                } else {
+                    assert_eq!(resp.logits.len(), graph.classes());
+                    last[i] = resp.logits;
+                }
+            }
+        }
+        for (i, l) in last.iter().enumerate() {
+            assert_eq!(l, &want[i], "workers={workers} session {i} diverged from offline");
+        }
+        let resp = server.infer(clips[0].clone());
+        assert_eq!(resp.logits, want[0], "workers={workers}: batch path diverged");
+        for &sid in &sids {
+            server.close_session(sid).expect("closing an open session");
+        }
+        assert_eq!(server.registry().stats().models[0].sessions, 0);
+        server.shutdown();
+    }
+}
+
+#[test]
+fn session_lifecycle_typed_errors() {
+    let graph = seq_graph("life", vec![(6, 3, 1)], 6, 4);
+    let spec = ModelSpec::new(
+        GraphBackend::factory(&graph),
+        graph.in_numel(),
+        BatchPolicy::default(),
+    )
+    .with_streaming(StreamSpec {
+        graph: Arc::clone(&graph),
+        max_sessions: 2,
+        idle_timeout: Duration::from_secs(30),
+    });
+    let server = Server::start_spec(spec, 1);
+    let s1 = server.open_session().expect("first session");
+    let s2 = server.open_session().expect("second session");
+    match server.open_session() {
+        Err(ServeError::Overloaded { pending, .. }) => assert_eq!(pending, 2),
+        other => panic!("expected Overloaded over max_sessions, got {:?}", other.map(|_| ())),
+    }
+    server.close_session(s1).expect("closing an open session");
+    match server.feed(s1, vec![0.5; graph.n_in()]) {
+        Err(ServeError::UnknownSession { .. }) => {}
+        other => panic!("expected UnknownSession after close, got {:?}", other.map(|_| ())),
+    }
+    match server.close_session(s1) {
+        Err(ServeError::UnknownSession { .. }) => {}
+        other => panic!("double close must be typed dead, got {other:?}"),
+    }
+    // the freed slot is recycled under a fresh generation — the stale
+    // handle must stay typed dead, not alias the new session
+    let s3 = server.open_session().expect("slot freed by close");
+    match server.feed(s1, vec![0.5; graph.n_in()]) {
+        Err(ServeError::UnknownSession { .. }) => {}
+        other => panic!("stale handle aliased a recycled slot: {:?}", other.map(|_| ())),
+    }
+    for sid in [s2, s3] {
+        let rx = server.feed(sid, vec![0.5; graph.n_in()]).expect("live session");
+        rx.recv().expect("reply").expect("served");
+        server.close_session(sid).expect("closing a live session");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn idle_sessions_are_swept() {
+    let graph = seq_graph("idle", vec![(6, 3, 1)], 6, 4);
+    let spec = ModelSpec::new(
+        GraphBackend::factory(&graph),
+        graph.in_numel(),
+        BatchPolicy::default(),
+    )
+    .with_streaming(StreamSpec {
+        graph: Arc::clone(&graph),
+        max_sessions: 4,
+        idle_timeout: Duration::from_millis(40),
+    });
+    let server = Server::start_spec(spec, 1);
+    let sid = server.open_session().expect("session");
+    let rx = server.feed(sid, vec![0.5; graph.n_in()]).expect("live session");
+    rx.recv().expect("reply").expect("served");
+    // the batcher sweeps idle sessions on its tick; wait it out
+    let t = std::time::Instant::now();
+    while server.registry().stats().models[0].sessions != 0 {
+        assert!(t.elapsed() < Duration::from_secs(5), "idle session never evicted");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    match server.feed(sid, vec![0.5; graph.n_in()]) {
+        Err(ServeError::UnknownSession { .. }) => {}
+        other => panic!("expected UnknownSession after eviction, got {:?}", other.map(|_| ())),
+    }
+    server.shutdown();
+}

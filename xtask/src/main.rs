@@ -18,8 +18,9 @@
 //!    facade so the model checker sees it.
 //! 4. **hot-path-float** — no `f32`/`f64` tokens or float literals in
 //!    the named fn bodies of the integer kernels (`infer/gemm.rs`,
-//!    `infer/conv.rs`, `infer/conv2d.rs`), apart from a per-file
-//!    allowlist of construction/stats fns. Known limitation: float
+//!    `infer/conv.rs`, `infer/conv2d.rs`, and the streaming conv
+//!    kernel `stream/state.rs`), apart from a per-file allowlist of
+//!    construction/stats fns. Known limitation: float
 //!    arithmetic behind type inference with no textual `f32`/`f64`/
 //!    literal (e.g. `qa.es * qw.es` on f32 fields) is invisible to a
 //!    token scan — such fns (`build_conv_lut`) sit in the allowlist as
@@ -40,6 +41,9 @@ const HOT_PATH_ALLOW: &[(&str, &[&str])] = &[
     ("infer/gemm.rs", &["from_dense"]),
     ("infer/conv.rs", &["new", "sparsity", "build_conv_lut"]),
     ("infer/conv2d.rs", &["new", "sparsity"]),
+    // the per-frame streaming feed: every fn is integer-only (the f32
+    // embed/GAP ends live in stream/mod.rs, which is not a hot kernel)
+    ("stream/state.rs", &[]),
 ];
 
 fn main() -> ExitCode {
@@ -653,6 +657,15 @@ fn self_test() -> ExitCode {
     check("hot-float/allowlist", got, 0);
     let got = lint_hot_floats("seed.rs", tests_only, &strip(tests_only), &[]).len();
     check("hot-float/tests-exempt", got, 0);
+    // the streaming conv kernel is pinned under rule 4 with an *empty*
+    // allowlist: every fn in stream/state.rs must stay integer-only
+    let covered =
+        HOT_PATH_ALLOW.iter().any(|(f, allow)| *f == "stream/state.rs" && allow.is_empty());
+    check("hot-float/stream-state-covered", usize::from(covered), 1);
+    let bad_feed = "fn feed_col(ring: &mut [i8], col: &[i8]) {\n    let s: f32 = 0.5;\n    \
+                    let _ = s;\n}\n";
+    let got = lint_hot_floats("rust/src/stream/state.rs", bad_feed, &strip(bad_feed), &[]).len();
+    check("hot-float/stream-seeded", got, 2);
 
     if failed == 0 {
         println!("xtask lint --self-test: all rules bite");
