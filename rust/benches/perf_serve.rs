@@ -14,8 +14,10 @@
 //! bounded admission queue — plus the `streaming` section: a
 //! 10k-concurrent-session sweep over the stateful stream path reporting
 //! sessions held, frames/s, per-session resident bytes from the state
-//! plan, and closed-loop p99 feed latency) so the serving-perf
-//! trajectory is tracked across PRs.
+//! plan, and closed-loop p99 feed latency — plus the `obs_overhead`
+//! section: the same unpaced workload with the observability layer on
+//! vs off, pinning tracing+metrics cost to within 2% of metrics-off
+//! throughput) so the serving-perf trajectory is tracked across PRs.
 //! `FQCONV_BENCH_SMOKE=1` shrinks the load to one short iteration.
 #[path = "common.rs"]
 mod common;
@@ -28,6 +30,7 @@ use fqconv::data::{self, Dataset as _};
 use fqconv::exec;
 use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
 use fqconv::infer::FqKwsNet;
+use fqconv::obs::ObsConfig;
 use fqconv::serve::{
     AdmissionPolicy, Backend as _, BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec,
     NativeBackend, Priority, ServeError, Server, StreamSpec,
@@ -376,6 +379,38 @@ fn main() {
     }
     server.shutdown();
 
+    // observability overhead: the identical unpaced workload with the
+    // obs layer on (tracing + metrics, the default) vs off — the
+    // acceptance bound is metrics-on throughput within 2% of metrics-off
+    println!("\n--- observability overhead (metrics+tracing on vs off) ---");
+    let obs_workers = 2usize;
+    let mut obs_rps = [0f64; 2];
+    for (k, (label, cfg)) in
+        [("on", ObsConfig::default()), ("off", ObsConfig::disabled())].into_iter().enumerate()
+    {
+        let spec = ModelSpec::new(
+            NativeBackend::factory_sharded(&net, &shape, obs_workers),
+            numel,
+            BatchPolicy::new(16, 2000),
+        )
+        .with_cost(net.cost_per_sample());
+        let server = Server::start_spec_obs(spec, obs_workers, cfg);
+        // short warm-up so replica construction is off the clock
+        for f in feats.iter().take(8) {
+            server.submit(f.clone()).recv().unwrap().unwrap();
+        }
+        let timer = Timer::start();
+        let rxs: Vec<_> = feats.iter().map(|f| server.submit(f.clone())).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        obs_rps[k] = feats.len() as f64 / timer.elapsed_s();
+        println!("obs {label:<3}: {:.0} req/s", obs_rps[k]);
+        server.shutdown();
+    }
+    let obs_overhead_pct = (obs_rps[1] - obs_rps[0]) / obs_rps[1].max(1e-9) * 100.0;
+    println!("observability overhead: {obs_overhead_pct:.2}% of metrics-off throughput");
+
     let prio_json = |p: &fqconv::serve::PriorityStats| {
         obj(vec![
             ("served", num(p.served as f64)),
@@ -430,6 +465,15 @@ fn main() {
                 ("bytes_per_session", num(sinfo.bytes_per_session as f64)),
                 ("feed_p50_us", num(feed_p50)),
                 ("feed_p99_us", num(feed_p99)),
+            ]),
+        ),
+        (
+            "obs_overhead",
+            obj(vec![
+                ("workers", num(obs_workers as f64)),
+                ("on_req_per_sec", num(obs_rps[0])),
+                ("off_req_per_sec", num(obs_rps[1])),
+                ("overhead_pct", num(obs_overhead_pct)),
             ]),
         ),
     ]);

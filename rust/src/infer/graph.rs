@@ -80,7 +80,9 @@
 //! rust/tests/parallel.rs); the 2-D stages inherit the contract from
 //! the contiguous-disjoint-row partitioning of [`crate::exec`].
 
-use crate::check::sync::Mutex;
+use crate::check::sync::{AtomicU64, Mutex};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
@@ -422,7 +424,9 @@ pub enum QuantStage {
 }
 
 impl QuantStage {
-    fn kind(&self) -> &'static str {
+    /// Stable stage-kind name (Debug rendering, per-stage timing
+    /// exposition — `fqconv_stage_us_total{stage="FqConvStack"}`).
+    pub fn kind(&self) -> &'static str {
         match self {
             QuantStage::FpEmbed(_) => "FpEmbed",
             QuantStage::FqConvStack(_) => "FqConvStack",
@@ -489,6 +493,55 @@ struct Plan {
     pooled: usize,
 }
 
+/// Cumulative wall time and call count of one executed stage, read
+/// back through [`QuantGraph::stage_times`].
+#[derive(Clone, Debug)]
+pub struct StageTime {
+    /// position in the stage list
+    pub index: usize,
+    /// stage kind name ([`QuantStage::kind`])
+    pub kind: &'static str,
+    /// times this stage has executed (== samples forwarded)
+    pub calls: u64,
+    /// cumulative wall nanoseconds across those calls
+    pub total_ns: u64,
+}
+
+/// One stage's timing cell: plain sharded-free atomics so concurrent
+/// sample-parallel forwards can record without locking.
+struct StageCell {
+    calls: AtomicU64,
+    nanos: AtomicU64,
+}
+
+/// Per-stage cumulative timing for one graph. Recording happens at
+/// stage granularity in [`QuantGraph::forward_into`] — two `fetch_add`s
+/// per stage per sample, outside the kernel inner loops — so measured
+/// per-stage cost can be compared against the static
+/// [`QuantGraph::cost_per_sample`] estimate and fed back into the
+/// serving scheduler's weights.
+struct StageTimers {
+    cells: Vec<StageCell>,
+}
+
+impl StageTimers {
+    fn new(n: usize) -> Self {
+        StageTimers {
+            cells: (0..n)
+                .map(|_| StageCell { calls: AtomicU64::new(0), nanos: AtomicU64::new(0) })
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn record(&self, si: usize, ns: u64) {
+        // Relaxed: monitoring counters — each cell is exact under RMW
+        // atomicity; readers (stage_times) make no cross-cell claim
+        self.cells[si].calls.fetch_add(1, Ordering::Relaxed);
+        self.cells[si].nanos.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
 /// A validated, executable sequence of [`QuantStage`]s.
 ///
 /// Two grammars are accepted, one per constructor (see the module doc):
@@ -510,6 +563,9 @@ pub struct QuantGraph {
     /// sequences, `h*w` for images)
     out_frames: usize,
     plan: Plan,
+    /// cumulative per-stage wall time (observability; always on — the
+    /// two timestamp reads per stage are noise next to any stage body)
+    timers: StageTimers,
 }
 
 impl std::fmt::Debug for QuantGraph {
@@ -674,7 +730,42 @@ impl QuantGraph {
         ensure!(n_stacks >= 1, "graph needs at least one FqConvStack");
         let classes = validate_tail(&mut it, channels, last_grid, &mut plan)?;
 
-        Ok(QuantGraph { stages, in_shape: vec![n_in, frames], classes, out_frames: t, plan })
+        let timers = StageTimers::new(stages.len());
+        let in_shape = vec![n_in, frames];
+        Ok(QuantGraph { stages, in_shape, classes, out_frames: t, plan, timers })
+    }
+
+    /// Per-stage cumulative wall time since construction: one entry per
+    /// stage, in execution order, naming every stage kind (the serving
+    /// layer's `fqconv_stage_us_total` exposition walks this).
+    pub fn stage_times(&self) -> Vec<StageTime> {
+        self.stages
+            .iter()
+            .zip(self.timers.cells.iter())
+            .enumerate()
+            .map(|(index, (stage, cell))| StageTime {
+                index,
+                kind: stage.kind(),
+                // Relaxed: monitoring snapshot of monotone counters
+                calls: cell.calls.load(Ordering::Relaxed),
+                total_ns: cell.nanos.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Measured mean microseconds per forwarded sample (total stage
+    /// wall time / samples), or `None` before the first forward. This
+    /// is the feedback signal the serving scheduler prefers over the
+    /// static MAC-count [`QuantGraph::cost_per_sample`] estimate.
+    pub fn measured_us_per_sample(&self) -> Option<u64> {
+        // Relaxed: monitoring snapshot; stage 0 runs once per sample
+        let samples = self.timers.cells.first()?.calls.load(Ordering::Relaxed);
+        if samples == 0 {
+            return None;
+        }
+        let cells = &self.timers.cells;
+        let total_ns: u64 = cells.iter().map(|c| c.nanos.load(Ordering::Relaxed)).sum();
+        Some((total_ns / samples / 1_000).max(1))
     }
 
     /// Validate and seal a 2-D (NCHW image) stage sequence for inputs
@@ -794,7 +885,15 @@ impl QuantGraph {
         );
         let classes = validate_tail(&mut it, channels, Some(grid), &mut plan)?;
 
-        Ok(QuantGraph { stages, in_shape: vec![c_in, h, w], classes, out_frames: hc * wc, plan })
+        let timers = StageTimers::new(stages.len());
+        Ok(QuantGraph {
+            stages,
+            in_shape: vec![c_in, h, w],
+            classes,
+            out_frames: hc * wc,
+            plan,
+            timers,
+        })
     }
 
     pub fn stages(&self) -> &[QuantStage] {
@@ -964,7 +1063,8 @@ impl QuantGraph {
         };
         // which ping-pong buffer currently holds the live codes
         let mut cur_in_a = true;
-        for stage in &self.stages {
+        for (si, stage) in self.stages.iter().enumerate() {
+            let t0 = Instant::now();
             match stage {
                 QuantStage::FpEmbed(e) => {
                     e.forward_into(x, t_cur, &mut s.a, &mut s.fa);
@@ -1033,6 +1133,9 @@ impl QuantGraph {
                 }
                 QuantStage::DenseHead(h) => h.forward_into(&s.pooled, logits),
             }
+            // one timestamp pair per *stage* (not per kernel row), so
+            // the hook cost is invisible next to the stage itself
+            self.timers.record(si, t0.elapsed().as_nanos() as u64);
         }
     }
 

@@ -33,6 +33,9 @@
 //! * [`stream`]      — streaming stateful inference: per-session ring-buffer
 //!                     conv state + overlap-save MFCC front end, bit-identical
 //!                     to the offline whole-window forward
+//! * [`obs`]         — observability: sharded metrics registry, request
+//!                     tracing rings, shared integer latency histogram,
+//!                     Prometheus/JSON exposition
 //! * [`metrics`]     — accuracy, confusion, latency histograms
 //! * [`bench`]       — micro-benchmark harness used by `cargo bench` targets
 
@@ -53,6 +56,7 @@ pub mod exp;
 pub mod infer;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -7,6 +7,8 @@
 //!   train --model <m> [--steps N] [--verbose]   run the model's GQ ladder
 //!   serve [--requests N] [--workers W]          serving demo + latency/shed stats
 //!   stream [--sessions N] [--frames F]          concurrent streaming-session demo
+//!   stats [--format prometheus|json]            observability demo: run a short
+//!                                               workload, print the metrics registry
 //!   selftest                                    quick wiring check
 //!
 //! Budgets: --budget smoke|quick|full (default quick for exp, full for train).
@@ -23,13 +25,14 @@ use fqconv::serve::{AdmissionPolicy, BatchPolicy, ModelSpec, NativeBackend, Prio
 use fqconv::util::cli::Args;
 use fqconv::util::{Rng, Timer};
 
-const USAGE: &str = "usage: fqconv <arch|plan|exp|train|serve|stream|selftest> [options]
+const USAGE: &str = "usage: fqconv <arch|plan|exp|train|serve|stream|stats|selftest> [options]
   arch <model> [--fq]
   plan --model <model> [--steps N]
   exp <table1|table2|table3|table4|table5|table6|table7|all> [--budget smoke|quick|full] [--model M] [--verbose]
   train --model <model> [--steps N] [--ckpt-dir DIR] [--verbose]
   serve [--requests N] [--workers W] [--max-batch B] [--max-wait-us U] [--deadline-us D] [--max-pending P]
   stream [--sessions N] [--frames F] [--workers W] [--max-sessions M]
+  stats [--requests N] [--workers W] [--format prometheus|json] [--trace]
   selftest";
 
 fn main() -> Result<()> {
@@ -41,6 +44,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "stream" => cmd_stream(&args),
+        "stats" => cmd_stats(&args),
         "selftest" => cmd_selftest(),
         _ => {
             eprintln!("{USAGE}");
@@ -370,6 +374,58 @@ fn cmd_stream(args: &Args) -> Result<()> {
         server.close_session(sid).expect("session is open");
     }
     server.shutdown();
+    Ok(())
+}
+
+/// Observability demo: serve a short synthetic workload with tracing
+/// and per-stage timing on, then print the metrics registry in
+/// Prometheus text (default) or JSON form. `--trace` additionally
+/// dumps the exact post-shutdown trace-event log.
+fn cmd_stats(args: &Args) -> Result<()> {
+    use fqconv::infer::graph::{synthetic_graph, SynthArch};
+    use fqconv::obs::ObsConfig;
+    use fqconv::serve::GraphBackend;
+
+    let workers = args.usize_or("workers", 2);
+    let n = args.usize_or("requests", 64);
+    let format = args.str_or("format", "prometheus");
+    let graph = std::sync::Arc::new(synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7)?);
+    let spec = ModelSpec::new(
+        GraphBackend::factory_sharded(&graph, workers),
+        graph.in_numel(),
+        BatchPolicy::new(args.usize_or("max-batch", 8), args.u64_or("max-wait-us", 500)),
+    )
+    .with_cost(graph.cost_per_sample())
+    .with_observed_graph(&graph);
+    let server = Server::start_spec_obs(spec, workers, ObsConfig::default());
+
+    let mut rng = Rng::new(13);
+    let numel = graph.in_numel();
+    let pending: Vec<_> = (0..n)
+        .map(|i| {
+            let x: Vec<f32> = (0..numel).map(|_| rng.gaussian_f32(0.0, 1.0)).collect();
+            let prio = if i % 4 == 3 { Priority::Batch } else { Priority::Interactive };
+            server.submit_with(x, prio, None)
+        })
+        .collect();
+    for rx in pending {
+        if let Err(e) = rx.recv().context("reply channel")? {
+            bail!("serving failed: {e}");
+        }
+    }
+    match format.as_str() {
+        "prometheus" => print!("{}", server.metrics_text()),
+        "json" => println!("{}", server.metrics_json()),
+        other => bail!("unknown stats format {other:?} (use prometheus|json)"),
+    }
+    if args.has("trace") {
+        for e in server.shutdown_with_traces() {
+            let kind = e.kind.as_str();
+            println!("trace {} t={}ns {kind} a={} b={}", e.trace, e.t_ns, e.a, e.b);
+        }
+    } else {
+        server.shutdown();
+    }
     Ok(())
 }
 

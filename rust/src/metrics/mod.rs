@@ -66,60 +66,15 @@ impl Confusion {
     }
 }
 
-/// Fixed-bucket latency histogram (microsecond samples, log-ish buckets).
-#[derive(Clone, Debug)]
-pub struct LatencyHist {
-    samples: Vec<f64>,
-}
+/// The shared fixed-bucket integer latency histogram — one
+/// implementation for the whole tree, owned by [`crate::obs::hist`]
+/// (the serving layer's per-model stats and the metrics registry's
+/// sharded histograms both merge into it).
+pub use crate::obs::hist::Histogram;
 
-impl Default for LatencyHist {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl LatencyHist {
-    pub fn new() -> Self {
-        LatencyHist { samples: Vec::new() }
-    }
-
-    pub fn record_us(&mut self, us: f64) {
-        self.samples.push(us);
-    }
-
-    pub fn count(&self) -> usize {
-        self.samples.len()
-    }
-
-    pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.total_cmp(b));
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
-    }
-
-    pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
-    }
-
-    pub fn summary(&self) -> String {
-        format!(
-            "n={} mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us max={:.0}us",
-            self.count(),
-            self.mean(),
-            self.percentile(50.0),
-            self.percentile(95.0),
-            self.percentile(99.0),
-            self.percentile(100.0),
-        )
-    }
-}
+/// Back-compat alias: the name this module exported before the
+/// histogram implementations were unified in `obs`.
+pub type LatencyHist = Histogram;
 
 #[cfg(test)]
 mod tests {
@@ -152,11 +107,22 @@ mod tests {
     #[test]
     fn latency_percentiles() {
         let mut h = LatencyHist::new();
-        for i in 1..=100 {
-            h.record_us(i as f64);
+        for i in 1..=100u64 {
+            h.record_us(i);
         }
-        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
-        assert!((h.percentile(99.0) - 99.0).abs() <= 1.0);
+        // percentiles carry the shared histogram's bucket tolerance
+        // (~12.5% relative); the mean is exact (sum tracked outside
+        // the buckets)
+        assert!((h.percentile(50.0) - 50.0).abs() <= 50.0 * 0.15);
+        assert!((h.percentile(99.0) - 99.0).abs() <= 99.0 * 0.15);
         assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_latency_hist_is_defined() {
+        let h = LatencyHist::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.summary().starts_with("n=0"));
     }
 }

@@ -1,0 +1,262 @@
+//! Fixed-bucket integer latency histogram — the one histogram the whole
+//! tree shares (`metrics::LatencyHist` and the serving layer's per-model
+//! latency stats are this type; the registry's sharded histograms merge
+//! into it on read).
+//!
+//! The record path is integer-only and allocation-free (pinned by the
+//! `cargo xtask lint` hot-path-float rule): values below 32us get an
+//! exact unit bucket; above that, buckets are log-spaced with 4
+//! sub-buckets per octave, so a bucket's upper edge is at most 25% above
+//! its lower edge and the midpoint estimate is within ~12.5% of any
+//! sample in it. `count`/`sum`/`min`/`max` are tracked exactly, so
+//! `mean()` has no bucketing error at all.
+
+/// Unit-bucket region: values below this are their own bucket.
+const UNIT: usize = 32;
+/// Sub-buckets per octave in the log region.
+const SUBS: usize = 4;
+/// Total buckets: 32 unit + 4 per octave for msb 5..=63.
+pub const N_BUCKETS: usize = UNIT + (64 - 6) * SUBS + SUBS;
+
+/// Bucket index for a microsecond value. Exact below [`UNIT`];
+/// log-spaced (4 sub-buckets per power of two) above.
+pub fn bucket_index(us: u64) -> usize {
+    if us < UNIT as u64 {
+        return us as usize;
+    }
+    let msb = 63 - us.leading_zeros() as usize;
+    let sub = ((us >> (msb - 2)) & 3) as usize;
+    UNIT + (msb - 5) * SUBS + sub
+}
+
+/// Representative (midpoint) microsecond value of a bucket.
+pub fn bucket_value(idx: usize) -> u64 {
+    if idx < UNIT {
+        return idx as u64;
+    }
+    let b = idx - UNIT;
+    let msb = 5 + b / SUBS;
+    let sub = (b % SUBS) as u64;
+    let lo = (4 + sub) << (msb - 2);
+    // midpoint = lo + half the bucket width; computed additively so the
+    // top octave's upper edge (2^64) never materializes
+    lo + (1u64 << (msb - 3))
+}
+
+/// Fixed-bucket integer histogram of microsecond samples.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Box<[u64; N_BUCKETS]>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: Box::new([0; N_BUCKETS]),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one microsecond sample. Integer-only: no allocation, no
+    /// float math (hot-path lint applies to this file).
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(us);
+        self.min = self.min.min(us);
+        self.max = self.max.max(us);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all recorded microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max_us(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact minimum recorded value (0 when empty).
+    pub fn min_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, &o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Fold raw per-bucket counts (a lock-free shard snapshot) into this
+    /// histogram. `sum` is the shard's exact running sum; min/max are
+    /// reconstructed from the outermost non-empty buckets (the sharded
+    /// record path has no atomic min/max — see `obs::record`).
+    pub fn merge_bucket_counts(&mut self, counts: &[u64], sum: u64) {
+        debug_assert_eq!(counts.len(), N_BUCKETS);
+        for (i, (b, &n)) in self.buckets.iter_mut().zip(counts.iter()).enumerate() {
+            if n > 0 {
+                *b += n;
+                self.count += n;
+                self.min = self.min.min(bucket_value(i));
+                self.max = self.max.max(bucket_value(i));
+            }
+        }
+        self.sum = self.sum.saturating_add(sum);
+    }
+
+    /// Value at percentile `p` (0..=100), estimated as the midpoint of
+    /// the bucket holding that rank and clamped to the exact observed
+    /// `[min, max]`. An empty histogram returns a defined 0.0 — never
+    /// NaN or a bucket-edge artifact.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if n > 0 && seen > rank {
+                return (bucket_value(i).clamp(self.min, self.max)) as f64;
+            }
+        }
+        self.max as f64
+    }
+
+    /// Exact mean (the sum is tracked outside the buckets); 0.0 when
+    /// empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// One-line human summary (the serving CLI's latency line).
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us max={:.0}us",
+            self.count,
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.max as f64,
+        )
+    }
+
+    /// Raw bucket counts (exposition walks these for the Prometheus
+    /// rendering).
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_defined_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min_us(), 0);
+        assert_eq!(h.max_us(), 0);
+        let s = h.summary();
+        assert!(s.starts_with("n=0"), "summary of empty hist: {s}");
+        assert!(!s.contains("NaN"), "summary must never render NaN: {s}");
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_tight() {
+        let mut last = usize::MAX;
+        for us in [0u64, 1, 31, 32, 33, 63, 64, 100, 1000, 123_456, u64::MAX] {
+            let idx = bucket_index(us);
+            assert!(idx < N_BUCKETS, "index {idx} for {us}");
+            if last != usize::MAX {
+                assert!(idx >= last, "bucket index regressed at {us}");
+            }
+            last = idx;
+            let rep = bucket_value(idx);
+            let err = rep.abs_diff(us) as f64 / us.max(1) as f64;
+            assert!(us >= UNIT as u64 || rep == us, "unit region must be exact for {us}");
+            if us < u64::MAX / 2 {
+                assert!(err <= 0.125 + 1e-9, "rep {rep} for {us}: rel err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_within_bucket_tolerance() {
+        let mut h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record_us(i);
+        }
+        assert!((h.percentile(50.0) - 50.0).abs() <= 50.0 * 0.15);
+        assert!((h.percentile(99.0) - 99.0).abs() <= 99.0 * 0.15);
+        assert!((h.mean() - 50.5).abs() < 1e-9, "mean is exact");
+        assert_eq!(h.max_us(), 100);
+        assert_eq!(h.min_us(), 1);
+    }
+
+    #[test]
+    fn single_sample_is_exact() {
+        let mut h = Histogram::new();
+        h.record_us(777);
+        // midpoint clamps to the exact [min, max] window
+        assert_eq!(h.percentile(0.0), 777.0);
+        assert_eq!(h.percentile(50.0), 777.0);
+        assert_eq!(h.percentile(100.0), 777.0);
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for i in 0..500u64 {
+            let us = i * 17 % 9001;
+            if i % 2 == 0 {
+                a.record_us(us);
+            } else {
+                b.record_us(us);
+            }
+            whole.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum_us(), whole.sum_us());
+        assert_eq!(a.max_us(), whole.max_us());
+        assert_eq!(a.percentile(99.0), whole.percentile(99.0));
+    }
+}

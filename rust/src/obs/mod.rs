@@ -1,0 +1,364 @@
+//! End-to-end observability layer: an exportable metrics registry,
+//! request tracing, and the exposition formats the serving stack
+//! reports through.
+//!
+//! Three sub-layers, hot-to-cold:
+//!
+//! * [`record`] — the lock-free record-path primitives: per-worker
+//!   sharded [`Counter`]s, [`Gauge`]s, sharded histograms and the
+//!   [`LogLimiter`] gate. Integer-only, allocation-free, atomics via
+//!   the `check::sync` facade (pinned by `cargo xtask lint`).
+//! * [`trace`] — fixed-size request-path events in per-worker ring
+//!   buffers ([`TraceBuf`]) behind a pluggable [`Clock`], so a seeded
+//!   chaos run is fully reconstructable from its traces
+//!   (rust/tests/obs.rs).
+//! * [`hist`] — the shared fixed-bucket integer [`Histogram`] every
+//!   latency stat in the tree now uses (`metrics::LatencyHist` is a
+//!   re-export).
+//!
+//! [`MetricsRegistry`] names the metrics: handles are pre-allocated at
+//! registration (one lock per *registration*, zero locks per *record*),
+//! and [`MetricsRegistry::snapshot`] merges the shards on read. The
+//! snapshot renders as Prometheus text ([`prometheus_text`]) or JSON
+//! ([`samples_json`]) — the `fqconv stats` subcommand and
+//! `serve::Server::metrics_text` are thin wrappers over these.
+
+pub mod hist;
+pub mod record;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use record::{Counter, Gauge, LogLimiter, ShardedHist};
+pub use trace::{Clock, EventKind, FakeClock, MonotonicClock, TraceBuf, TraceEvent};
+
+use crate::check::sync::Mutex;
+use std::sync::Arc;
+
+use crate::util::json::{num, obj, s, Json};
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// Observability configuration for a serving registry.
+#[derive(Clone)]
+pub struct ObsConfig {
+    /// Master switch: when false, trace/metric record calls are no-ops
+    /// (the bench's `obs_overhead` section measures the difference).
+    pub enabled: bool,
+    /// Trace ring capacity per writer shard (events retained).
+    pub trace_capacity: usize,
+    /// Timestamp source for trace events — inject a [`FakeClock`] for
+    /// deterministic tests.
+    pub clock: Arc<dyn Clock>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: true,
+            trace_capacity: 4096,
+            clock: Arc::new(MonotonicClock::new()),
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Everything off — the metrics-off baseline configuration.
+    pub fn disabled() -> Self {
+        ObsConfig { enabled: false, ..Default::default() }
+    }
+
+    /// Replace the trace clock (deterministic tests).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Replace the per-shard trace ring capacity.
+    pub fn with_trace_capacity(mut self, capacity: usize) -> Self {
+        self.trace_capacity = capacity;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Hist(ShardedHist),
+}
+
+struct Entry {
+    name: &'static str,
+    labels: String,
+    metric: Metric,
+}
+
+/// Named metrics, registered once and recorded lock-free.
+///
+/// Registration (`counter`/`gauge`/`histogram`) takes the registry lock
+/// and pre-allocates the shard storage; the returned handle records
+/// with atomics only, so the hot path never touches the lock, never
+/// allocates, and never sees a float. Registering the same
+/// `(name, labels)` twice returns a handle to the same storage, so
+/// independent components can share a metric by name.
+pub struct MetricsRegistry {
+    shards: usize,
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    /// A registry whose sharded metrics split across `shards` writers
+    /// (one per serve worker, typically).
+    pub fn new(shards: usize) -> Self {
+        MetricsRegistry { shards: shards.max(1), entries: Mutex::new(Vec::new()) }
+    }
+
+    fn register<T: Clone>(
+        &self,
+        name: &'static str,
+        labels: &str,
+        pick: impl Fn(&Metric) -> Option<T>,
+        make: impl FnOnce(usize) -> (Metric, T),
+    ) -> T {
+        let mut entries = self.entries.lock().unwrap();
+        for e in entries.iter() {
+            if e.name == name && e.labels == labels {
+                if let Some(h) = pick(&e.metric) {
+                    return h;
+                }
+                panic!("metric {name}{{{labels}}} re-registered as a different type");
+            }
+        }
+        let (metric, handle) = make(self.shards);
+        entries.push(Entry { name, labels: labels.to_string(), metric });
+        handle
+    }
+
+    /// Register (or look up) a sharded counter.
+    pub fn counter(&self, name: &'static str, labels: &str) -> Counter {
+        self.register(
+            name,
+            labels,
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+            |shards| {
+                let c = Counter::new(shards);
+                (Metric::Counter(c.clone()), c)
+            },
+        )
+    }
+
+    /// Register (or look up) a gauge.
+    pub fn gauge(&self, name: &'static str, labels: &str) -> Gauge {
+        self.register(
+            name,
+            labels,
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+            |_| {
+                let g = Gauge::new();
+                (Metric::Gauge(g.clone()), g)
+            },
+        )
+    }
+
+    /// Register (or look up) a sharded fixed-bucket histogram.
+    pub fn histogram(&self, name: &'static str, labels: &str) -> ShardedHist {
+        self.register(
+            name,
+            labels,
+            |m| match m {
+                Metric::Hist(h) => Some(h.clone()),
+                _ => None,
+            },
+            |shards| {
+                let h = ShardedHist::new(shards);
+                (Metric::Hist(h.clone()), h)
+            },
+        )
+    }
+
+    /// Merge-on-read snapshot of every registered metric, sorted by
+    /// `(name, labels)` so exposition is deterministic.
+    pub fn snapshot(&self) -> Vec<MetricSample> {
+        let entries = self.entries.lock().unwrap();
+        let mut out: Vec<MetricSample> = entries
+            .iter()
+            .map(|e| MetricSample {
+                name: e.name,
+                labels: e.labels.clone(),
+                value: match &e.metric {
+                    Metric::Counter(c) => SampleValue::Counter(c.total()),
+                    Metric::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Metric::Hist(h) => SampleValue::Hist(h.snapshot()),
+                },
+            })
+            .collect();
+        drop(entries);
+        out.sort_by(|a, b| (a.name, &a.labels).cmp(&(b.name, &b.labels)));
+        out
+    }
+}
+
+/// One metric's merged value at snapshot time.
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(u64),
+    Hist(Histogram),
+}
+
+/// One `(name, labels)` entry of a registry snapshot.
+pub struct MetricSample {
+    pub name: &'static str,
+    /// Pre-rendered Prometheus label pairs, e.g. `model="kws",lane="0"`
+    /// (empty for unlabelled metrics).
+    pub labels: String,
+    pub value: SampleValue,
+}
+
+// ---------------------------------------------------------------------------
+// Exposition
+// ---------------------------------------------------------------------------
+
+fn promline(out: &mut String, name: &str, suffix: &str, labels: &str, value: f64) {
+    out.push_str(name);
+    out.push_str(suffix);
+    if !labels.is_empty() {
+        out.push('{');
+        out.push_str(labels);
+        out.push('}');
+    }
+    if value.fract() == 0.0 && value.abs() < 9e15 {
+        out.push_str(&format!(" {}\n", value as i64));
+    } else {
+        out.push_str(&format!(" {value}\n"));
+    }
+}
+
+/// Render a snapshot in the Prometheus text exposition format.
+/// Histograms are summarized as `_count` / `_sum_us` / `_p50_us` /
+/// `_p99_us` / `_max_us` series (quantiles merged from the shards).
+pub fn prometheus_text(samples: &[MetricSample]) -> String {
+    let mut out = String::new();
+    let mut last_name = "";
+    for smp in samples {
+        if smp.name != last_name {
+            let ty = match smp.value {
+                SampleValue::Counter(_) => "counter",
+                SampleValue::Gauge(_) => "gauge",
+                SampleValue::Hist(_) => "summary",
+            };
+            out.push_str(&format!("# TYPE {} {ty}\n", smp.name));
+            last_name = smp.name;
+        }
+        match &smp.value {
+            SampleValue::Counter(v) | SampleValue::Gauge(v) => {
+                promline(&mut out, smp.name, "", &smp.labels, *v as f64);
+            }
+            SampleValue::Hist(h) => {
+                promline(&mut out, smp.name, "_count", &smp.labels, h.count() as f64);
+                promline(&mut out, smp.name, "_sum_us", &smp.labels, h.sum_us() as f64);
+                promline(&mut out, smp.name, "_p50_us", &smp.labels, h.percentile(50.0));
+                promline(&mut out, smp.name, "_p99_us", &smp.labels, h.percentile(99.0));
+                promline(&mut out, smp.name, "_max_us", &smp.labels, h.max_us() as f64);
+            }
+        }
+    }
+    out
+}
+
+/// Render a snapshot as a JSON array of `{name, labels, ...}` records.
+pub fn samples_json(samples: &[MetricSample]) -> Json {
+    let rows = samples
+        .iter()
+        .map(|smp| match &smp.value {
+            SampleValue::Counter(v) => obj(vec![
+                ("name", s(smp.name)),
+                ("labels", s(&smp.labels)),
+                ("type", s("counter")),
+                ("value", num(*v as f64)),
+            ]),
+            SampleValue::Gauge(v) => obj(vec![
+                ("name", s(smp.name)),
+                ("labels", s(&smp.labels)),
+                ("type", s("gauge")),
+                ("value", num(*v as f64)),
+            ]),
+            SampleValue::Hist(h) => obj(vec![
+                ("name", s(smp.name)),
+                ("labels", s(&smp.labels)),
+                ("type", s("histogram")),
+                ("count", num(h.count() as f64)),
+                ("sum_us", num(h.sum_us() as f64)),
+                ("p50_us", num(h.percentile(50.0))),
+                ("p99_us", num(h.percentile(99.0))),
+                ("max_us", num(h.max_us() as f64)),
+            ]),
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_roundtrip() {
+        let reg = MetricsRegistry::new(2);
+        let c = reg.counter("fqconv_test_total", "model=\"kws\"");
+        c.add(0, 3);
+        c.add(1, 4);
+        // same (name, labels) → same storage
+        reg.counter("fqconv_test_total", "model=\"kws\"").inc(0);
+        let g = reg.gauge("fqconv_test_depth", "");
+        g.set(9);
+        let h = reg.histogram("fqconv_test_latency", "");
+        h.record_us(0, 100);
+        h.record_us(1, 200);
+
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 3);
+        let total = snap
+            .iter()
+            .find_map(|smp| match (&smp.value, smp.name) {
+                (SampleValue::Counter(v), "fqconv_test_total") => Some(*v),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(total, 8);
+
+        let text = prometheus_text(&snap);
+        assert!(text.contains("# TYPE fqconv_test_total counter"), "{text}");
+        assert!(text.contains("fqconv_test_total{model=\"kws\"} 8"), "{text}");
+        assert!(text.contains("fqconv_test_depth 9"), "{text}");
+        assert!(text.contains("fqconv_test_latency_count 2"), "{text}");
+        assert!(text.contains("fqconv_test_latency_sum_us 300"), "{text}");
+
+        let j = samples_json(&snap).to_string();
+        assert!(j.contains("\"fqconv_test_depth\""), "{j}");
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_confusion_is_loud() {
+        let reg = MetricsRegistry::new(1);
+        let _c = reg.counter("fqconv_conflict", "");
+        let _g = reg.gauge("fqconv_conflict", "");
+    }
+
+    #[test]
+    fn disabled_config_flags_off() {
+        assert!(ObsConfig::default().enabled);
+        assert!(!ObsConfig::disabled().enabled);
+    }
+}

@@ -1,0 +1,259 @@
+//! Lock-free record-path primitives for the metrics registry: sharded
+//! counters, gauges, sharded histograms, and the rate-limited-log
+//! gate. Everything here is integer-only and allocation-free after
+//! construction (pinned by the `cargo xtask lint` hot-path-float rule)
+//! and uses only `load`/`store`/`fetch_add`/`fetch_sub` from the
+//! `check::sync` atomic facade.
+//!
+//! Soundness of the Relaxed orderings (see CONCURRENCY.md §obs): every
+//! atomic here is a *monitoring* cell — written on hot paths, read only
+//! by merge-on-read snapshots that make no cross-cell consistency
+//! claim. `fetch_add(Relaxed)` makes each individual counter exact
+//! (RMW atomicity does not depend on ordering); a snapshot may observe
+//! one counter slightly ahead of another, which exposition tolerates by
+//! construction. Exact accounting identities (served + shed + expired +
+//! failed == accepted) are asserted only after thread joins, which
+//! impose the needed happens-before.
+
+use crate::check::sync::AtomicU64;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::hist::{bucket_index, Histogram, N_BUCKETS};
+
+/// Build a shard vector of zeroed atomics (facade atomics are not
+/// `Clone`, so `vec![..; n]` cannot).
+fn zeroed(n: usize) -> Vec<AtomicU64> {
+    (0..n.max(1)).map(|_| AtomicU64::new(0)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Counter
+// ---------------------------------------------------------------------------
+
+/// Monotone counter with per-worker shards: `add(shard, n)` touches one
+/// cache line per worker, `total()` merges on read.
+#[derive(Clone)]
+pub struct Counter {
+    shards: Arc<Vec<AtomicU64>>,
+}
+
+impl Counter {
+    pub fn new(shards: usize) -> Self {
+        Counter { shards: Arc::new(zeroed(shards)) }
+    }
+
+    /// Add `n` on the caller's shard (a worker index; wrapped into
+    /// range so any caller-supplied index is safe).
+    pub fn add(&self, shard: usize, n: u64) {
+        let len = self.shards.len();
+        // Relaxed: monitoring increment, merged on read (module doc)
+        self.shards[shard % len].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `add(shard, 1)`.
+    pub fn inc(&self, shard: usize) {
+        self.add(shard, 1);
+    }
+
+    /// Merge-on-read total across shards.
+    pub fn total(&self) -> u64 {
+        // Relaxed: each shard is exact; the sum is a monitoring snapshot
+        self.shards.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gauge
+// ---------------------------------------------------------------------------
+
+/// Last-writer-wins gauge (queue depth, session count, budgets).
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicU64>,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge { cell: Arc::new(AtomicU64::new(0)) }
+    }
+
+    pub fn set(&self, v: u64) {
+        // Relaxed: monitoring store, no release obligation (module doc)
+        self.cell.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        // Relaxed: monitoring load (module doc)
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded histogram
+// ---------------------------------------------------------------------------
+
+/// One worker's histogram shard: per-bucket counters plus an exact
+/// running sum. No atomic min/max (the facade has no `fetch_max`);
+/// snapshots reconstruct min/max from the outermost non-empty buckets.
+struct HistShard {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+}
+
+/// Fixed-bucket histogram with lock-free per-worker shards, merged into
+/// a plain [`Histogram`] on read.
+#[derive(Clone)]
+pub struct ShardedHist {
+    shards: Arc<Vec<HistShard>>,
+}
+
+impl ShardedHist {
+    pub fn new(shards: usize) -> Self {
+        let shards = (0..shards.max(1))
+            .map(|_| HistShard { buckets: zeroed(N_BUCKETS), sum: AtomicU64::new(0) })
+            .collect();
+        ShardedHist { shards: Arc::new(shards) }
+    }
+
+    /// Record one microsecond sample on the caller's shard: two
+    /// `fetch_add`s, no lock, no allocation, no float.
+    pub fn record_us(&self, shard: usize, us: u64) {
+        let len = self.shards.len();
+        let sh = &self.shards[shard % len];
+        // Relaxed: per-bucket monitoring increments (module doc)
+        sh.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        sh.sum.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Merge every shard into one plain histogram.
+    pub fn snapshot(&self) -> Histogram {
+        let mut out = Histogram::new();
+        let mut counts = vec![0u64; N_BUCKETS];
+        for sh in self.shards.iter() {
+            for (c, b) in counts.iter_mut().zip(sh.buckets.iter()) {
+                // Relaxed: snapshot load of monitoring cells (module doc)
+                *c = b.load(Ordering::Relaxed);
+            }
+            out.merge_bucket_counts(&counts, sh.sum.load(Ordering::Relaxed));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LogLimiter
+// ---------------------------------------------------------------------------
+
+/// Once-per-interval gate for repeated `log::error!` sites: the first
+/// caller in each interval logs (and learns how many identical events
+/// were suppressed since the last emission); everyone else bumps the
+/// suppression counter. Under a concurrent stampede two callers can
+/// both observe a stale `last` and both log — an acceptable, bounded
+/// duplication for a rate *limiter* (the point is flood control, not
+/// exactly-once).
+pub struct LogLimiter {
+    interval_ns: u64,
+    /// ns timestamp of the last allowed log; `u64::MAX` = never logged
+    /// (so the very first event always passes, even at clock time 0)
+    last: AtomicU64,
+    suppressed: AtomicU64,
+}
+
+impl LogLimiter {
+    pub fn new(interval_ns: u64) -> Self {
+        LogLimiter {
+            interval_ns,
+            last: AtomicU64::new(u64::MAX),
+            suppressed: AtomicU64::new(0),
+        }
+    }
+
+    /// Events suppressed since the last allowed log (not yet drained).
+    pub fn suppressed(&self) -> u64 {
+        // Relaxed: monitoring load (module doc)
+        self.suppressed.load(Ordering::Relaxed)
+    }
+
+    /// Returns `Some(drained)` — the number of events suppressed since
+    /// the previous emission — when this event may log; `None` when it
+    /// is inside the quiet interval.
+    pub fn allow(&self, now_ns: u64) -> Option<u64> {
+        // Relaxed: the gate is heuristic; a stale read only causes a
+        // duplicate log line, never a lost suppression count (doc above)
+        let last = self.last.load(Ordering::Relaxed);
+        if last == u64::MAX || now_ns.saturating_sub(last) >= self.interval_ns {
+            self.last.store(now_ns, Ordering::Relaxed);
+            let drained = self.suppressed.load(Ordering::Relaxed);
+            if drained > 0 {
+                // fetch_sub (not store 0) so increments racing this
+                // drain are carried into the next interval, not lost
+                self.suppressed.fetch_sub(drained, Ordering::Relaxed);
+            }
+            Some(drained)
+        } else {
+            self.suppressed.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_merges_shards() {
+        let c = Counter::new(4);
+        c.add(0, 5);
+        c.add(1, 7);
+        c.add(9, 1); // out-of-range shard wraps, never panics
+        c.inc(3);
+        assert_eq!(c.total(), 14);
+    }
+
+    #[test]
+    fn gauge_last_writer_wins() {
+        let g = Gauge::new();
+        g.set(42);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn sharded_hist_matches_plain() {
+        let sh = ShardedHist::new(3);
+        let mut plain = Histogram::new();
+        for i in 0..300u64 {
+            let us = (i * 31) % 5000;
+            sh.record_us((i % 3) as usize, us);
+            plain.record_us(us);
+        }
+        let merged = sh.snapshot();
+        assert_eq!(merged.count(), plain.count());
+        assert_eq!(merged.sum_us(), plain.sum_us());
+        // sharded min/max are bucket midpoints, so compare at bucket
+        // tolerance rather than exactly
+        let (m, p) = (merged.percentile(50.0), plain.percentile(50.0));
+        assert!((m - p).abs() <= p * 0.25 + 1.0, "merged p50 {m} vs plain {p}");
+    }
+
+    #[test]
+    fn limiter_gates_by_interval() {
+        let l = LogLimiter::new(1_000);
+        assert_eq!(l.allow(0), Some(0), "first event always logs");
+        assert_eq!(l.allow(10), None);
+        assert_eq!(l.allow(20), None);
+        assert_eq!(l.suppressed(), 2);
+        assert_eq!(l.allow(1_000), Some(2), "interval elapsed, drains suppressed");
+        assert_eq!(l.suppressed(), 0);
+        assert_eq!(l.allow(1_500), None);
+        assert_eq!(l.allow(2_100), Some(1));
+    }
+}

@@ -1,0 +1,338 @@
+//! Request tracing: fixed-size events in lock-free per-worker ring
+//! buffers behind a pluggable monotonic clock.
+//!
+//! A `TraceId` is minted per accepted submit / session feed; every hop
+//! of the request's path through the serving stack (admit/shed →
+//! enqueue → dispatch → terminal reply) appends one [`TraceEvent`] to
+//! the recording thread's shard. The record path is three `Relaxed`
+//! stores plus one `fetch_add` — no lock, no allocation, no float
+//! (pinned by the `cargo xtask lint` hot-path-float rule).
+//!
+//! Reliability contract (documented, and weaker than the metrics
+//! counters'): each shard is a ring of `capacity` slots addressed by a
+//! monotone reservation counter, so concurrent writers on one shard
+//! never contend for a slot until the ring wraps; after a wrap, a slow
+//! writer can tear a slot a fast writer lapped. Snapshots taken while
+//! traffic is live are therefore best-effort; snapshots taken after the
+//! writing threads are joined (shutdown, or a drained test) are exact,
+//! because the join imposes the happens-before that `Relaxed` omits.
+//! The accounting tests in rust/tests/obs.rs only assert on
+//! post-quiescence snapshots.
+
+use crate::check::sync::AtomicU64;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------------
+
+/// Pluggable monotonic time source for trace timestamps, injectable so
+/// deterministic tests (fake clock) and model-check runs can assert on
+/// recorded traces.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since an arbitrary fixed epoch; monotone.
+    fn now_ns(&self) -> u64;
+}
+
+/// Wall monotonic clock: nanoseconds since construction.
+pub struct MonotonicClock {
+    epoch: Instant,
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        MonotonicClock { epoch: Instant::now() }
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+/// Settable clock for deterministic tests.
+#[derive(Default)]
+pub struct FakeClock {
+    t: AtomicU64,
+}
+
+impl FakeClock {
+    pub fn new(start_ns: u64) -> Self {
+        FakeClock { t: AtomicU64::new(start_ns) }
+    }
+
+    pub fn set(&self, t_ns: u64) {
+        // Relaxed: test-clock cell; readers only need *a* recent value
+        self.t.store(t_ns, Ordering::Relaxed);
+    }
+
+    pub fn advance(&self, d_ns: u64) {
+        // Relaxed: monotone test-clock bump (exact under RMW atomicity)
+        self.t.fetch_add(d_ns, Ordering::Relaxed);
+    }
+}
+
+impl Clock for FakeClock {
+    fn now_ns(&self) -> u64 {
+        // Relaxed: see `set`
+        self.t.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// One hop of a request's path through the serving stack. Discriminants
+/// are stable (they are packed into ring slots and exposed in JSON);
+/// the derived `Ord` follows a request's forward progression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// request accepted by `submit` (trace minted); `a` = priority lane
+    Submit = 1,
+    /// request refused with a typed error; `a` = shed reason code
+    Shed = 2,
+    /// batch formed and pushed onto the shared queue; `a` = lane
+    Enqueue = 3,
+    /// session feed parked on a busy session's backlog
+    Backlog = 4,
+    /// a worker popped the request and is about to run the backend;
+    /// `a` = worker index
+    Dispatch = 5,
+    /// batch re-queued after a worker error / bounce; `a` = worker index
+    Requeue = 6,
+    /// terminal: reply sent with logits; `a` = worker index
+    Served = 7,
+    /// terminal: reply sent as DeadlineExceeded
+    Expired = 8,
+    /// terminal: reply sent as BackendFailed; `a` = delivery attempts
+    Failed = 9,
+    /// streaming session opened; `a` = session slot index
+    SessionOpen = 10,
+    /// streaming session closed; `a` = session slot index
+    SessionClose = 11,
+    /// a replica was quarantined (not tied to one trace; trace = 0);
+    /// `a` = worker index
+    Quarantine = 12,
+}
+
+impl EventKind {
+    /// Decode a packed discriminant (see [`TraceBuf`] slot layout).
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        use EventKind::*;
+        Some(match v {
+            1 => Submit,
+            2 => Shed,
+            3 => Enqueue,
+            4 => Backlog,
+            5 => Dispatch,
+            6 => Requeue,
+            7 => Served,
+            8 => Expired,
+            9 => Failed,
+            10 => SessionOpen,
+            11 => SessionClose,
+            12 => Quarantine,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase name (exposition + logs).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Shed => "shed",
+            EventKind::Enqueue => "enqueue",
+            EventKind::Backlog => "backlog",
+            EventKind::Dispatch => "dispatch",
+            EventKind::Requeue => "requeue",
+            EventKind::Served => "served",
+            EventKind::Expired => "expired",
+            EventKind::Failed => "failed",
+            EventKind::SessionOpen => "session_open",
+            EventKind::SessionClose => "session_close",
+            EventKind::Quarantine => "quarantine",
+        }
+    }
+
+    /// True for the kinds that end a request's path (exactly one per
+    /// accepted request — the protocol invariant the tracer witnesses).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, EventKind::Served | EventKind::Expired | EventKind::Failed)
+    }
+}
+
+/// One decoded trace event.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// request trace id (0 for events not tied to one request)
+    pub trace: u64,
+    /// clock timestamp, ns
+    pub t_ns: u64,
+    pub kind: EventKind,
+    /// kind-specific detail (worker index, lane, shed reason, …)
+    pub a: u32,
+    /// kind-specific detail, 24 bits retained (batch size, slot, …)
+    pub b: u32,
+}
+
+// ---------------------------------------------------------------------------
+// Ring buffer
+// ---------------------------------------------------------------------------
+
+/// One ring slot: trace id, timestamp, and the packed kind/detail word
+/// (`kind` in bits 0..8, `a` in 8..40, `b` in 40..64).
+struct TraceSlot {
+    id: AtomicU64,
+    t: AtomicU64,
+    kw: AtomicU64,
+}
+
+/// One writer shard: a reservation counter plus `capacity` slots.
+struct TraceShard {
+    head: AtomicU64,
+    slots: Vec<TraceSlot>,
+}
+
+/// Per-worker ring buffers of fixed-size trace events. Shard 0 is the
+/// serving stack's control plane (submit/shed/enqueue, written under
+/// the registry's locks or from client threads); shard `wi + 1` belongs
+/// to worker `wi`. See the module doc for the reliability contract.
+pub struct TraceBuf {
+    shards: Vec<TraceShard>,
+    clock: Arc<dyn Clock>,
+}
+
+impl TraceBuf {
+    /// `shards` writer shards of `capacity` events each.
+    pub fn new(shards: usize, capacity: usize, clock: Arc<dyn Clock>) -> Self {
+        let cap = capacity.max(1);
+        let mk = |_: usize| TraceShard {
+            head: AtomicU64::new(0),
+            slots: (0..cap)
+                .map(|_| TraceSlot {
+                    id: AtomicU64::new(0),
+                    t: AtomicU64::new(0),
+                    kw: AtomicU64::new(0),
+                })
+                .collect(),
+        };
+        TraceBuf { shards: (0..shards.max(1)).map(mk).collect(), clock }
+    }
+
+    /// The clock events are stamped with.
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    /// Record one event on `shard` (wrapped into range). Lock-free:
+    /// reserve a slot with one `fetch_add`, then three plain stores.
+    pub fn record(&self, shard: usize, trace: u64, kind: EventKind, a: u32, b: u32) {
+        let len = self.shards.len();
+        let sh = &self.shards[shard % len];
+        // Relaxed: the reservation index only needs RMW atomicity (each
+        // writer gets a unique slot); readers order via thread join
+        let seq = sh.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &sh.slots[(seq % sh.slots.len() as u64) as usize];
+        let kw = kind as u64 | ((a as u64) << 8) | (((b as u64) & 0xff_ffff) << 40);
+        // Relaxed stores: slots are racy-by-contract for live snapshots
+        // and made visible to exact snapshots by thread join (module doc)
+        slot.id.store(trace, Ordering::Relaxed);
+        slot.t.store(self.clock.now_ns(), Ordering::Relaxed);
+        slot.kw.store(kw, Ordering::Relaxed);
+    }
+
+    /// Total events recorded across shards (including overwritten ones).
+    pub fn events_total(&self) -> u64 {
+        // Relaxed: monitoring sum
+        self.shards.iter().map(|s| s.head.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Events lost to ring wrap-around across shards.
+    pub fn dropped(&self) -> u64 {
+        self.shards
+            .iter()
+            // Relaxed: monitoring sum
+            .map(|s| s.head.load(Ordering::Relaxed).saturating_sub(s.slots.len() as u64))
+            .sum()
+    }
+
+    /// Decode every retained event, sorted by `(t_ns, trace)`. Exact
+    /// once the writers are quiescent (module doc).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            // Relaxed: snapshot loads; see the reliability contract
+            let n = sh.head.load(Ordering::Relaxed).min(sh.slots.len() as u64) as usize;
+            for slot in &sh.slots[..n] {
+                let kw = slot.kw.load(Ordering::Relaxed);
+                let Some(kind) = EventKind::from_u8((kw & 0xff) as u8) else { continue };
+                out.push(TraceEvent {
+                    trace: slot.id.load(Ordering::Relaxed),
+                    t_ns: slot.t.load(Ordering::Relaxed),
+                    kind,
+                    a: ((kw >> 8) & 0xffff_ffff) as u32,
+                    b: ((kw >> 40) & 0xff_ffff) as u32,
+                });
+            }
+        }
+        out.sort_by_key(|e| (e.t_ns, e.trace, e.kind));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_roundtrip() {
+        let clock = Arc::new(FakeClock::new(5));
+        let buf = TraceBuf::new(2, 8, clock.clone());
+        buf.record(0, 42, EventKind::Submit, 1, 0);
+        clock.advance(10);
+        buf.record(1, 42, EventKind::Dispatch, 3, 999_999);
+        let ev = buf.snapshot();
+        assert_eq!(ev.len(), 2);
+        assert_eq!((ev[0].trace, ev[0].kind, ev[0].a, ev[0].t_ns), (42, EventKind::Submit, 1, 5));
+        let d = &ev[1];
+        assert_eq!((d.kind, d.a, d.b, d.t_ns), (EventKind::Dispatch, 3, 999_999, 15));
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let buf = TraceBuf::new(1, 4, Arc::new(FakeClock::new(0)));
+        for i in 0..10u64 {
+            buf.record(0, i, EventKind::Served, 0, 0);
+        }
+        assert_eq!(buf.events_total(), 10);
+        assert_eq!(buf.dropped(), 6);
+        let ev = buf.snapshot();
+        assert_eq!(ev.len(), 4, "ring retains capacity events");
+        // retained ids are the survivors of the wrap (8, 9 lapped 4, 5 …)
+        for e in &ev {
+            assert!(e.trace >= 6, "stale event survived the wrap: {e:?}");
+        }
+    }
+
+    #[test]
+    fn kind_discriminants_are_stable() {
+        for v in 0..=20u8 {
+            if let Some(k) = EventKind::from_u8(v) {
+                assert_eq!(k as u8, v);
+            }
+        }
+        assert!(EventKind::Served.is_terminal());
+        assert!(!EventKind::Dispatch.is_terminal());
+    }
+}

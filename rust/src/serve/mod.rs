@@ -173,6 +173,10 @@ use crate::infer::graph::ScratchPool;
 use crate::infer::pipeline::{FqKwsNet, Scratch};
 use crate::infer::QuantGraph;
 use crate::metrics::LatencyHist;
+use crate::obs::{
+    prometheus_text, samples_json, Clock, Counter, EventKind, LogLimiter, MetricSample,
+    MetricsRegistry, ObsConfig, SampleValue, TraceBuf, TraceEvent,
+};
 use crate::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Executable};
 use crate::stream::{StreamScratch, StreamState, Streamer};
 
@@ -602,6 +606,103 @@ where
 }
 
 // ---------------------------------------------------------------------------
+// Observability plumbing
+// ---------------------------------------------------------------------------
+
+/// Shed reason codes carried in [`EventKind::Shed`]'s `a` detail and
+/// indexing [`ServeObs::shed`] / [`SHED_REASONS`].
+const SHED_OVERLOAD: u32 = 0;
+const SHED_INFEASIBLE: u32 = 1;
+const SHED_BACKLOG: u32 = 2;
+const SHED_SESSION_CAP: u32 = 3;
+const SHED_STALE_SESSION: u32 = 4;
+const SHED_EVICTED: u32 = 5;
+/// Stable reason labels, indexed by the `SHED_*` codes.
+pub const SHED_REASONS: [&str; 6] =
+    ["overload", "infeasible", "backlog", "session_cap", "stale_session", "evicted"];
+
+/// Minimum interval between repeats of one error-log site; suppressed
+/// repeats are counted (`fqconv_log_suppressed_total`) and summarized
+/// when the gate re-opens, so a wedged replica cannot flood the log.
+const ERROR_LOG_INTERVAL: Duration = Duration::from_secs(1);
+
+/// Observability plumbing shared by one registry: pre-registered metric
+/// handles (so the record paths never touch the metrics-registry lock),
+/// the per-worker trace rings, and the rate-limited error-log gates for
+/// the repeated worker-loop error sites. Trace shard 0 is the control
+/// plane (submit/shed/enqueue/session paths); shard `wi + 1` belongs to
+/// worker `wi`.
+struct ServeObs {
+    enabled: bool,
+    metrics: MetricsRegistry,
+    trace: TraceBuf,
+    /// one counter per shed reason, indexed by the `SHED_*` codes
+    shed: Vec<Counter>,
+    worker_errors: Counter,
+    quarantines: Counter,
+    log_suppressed: Counter,
+    err_backend: LogLimiter,
+    err_bounce: LogLimiter,
+    err_quarantine: LogLimiter,
+}
+
+impl ServeObs {
+    fn new(n_workers: usize, cfg: ObsConfig) -> Self {
+        let metrics = MetricsRegistry::new(n_workers.max(1));
+        let trace = TraceBuf::new(n_workers + 1, cfg.trace_capacity, Arc::clone(&cfg.clock));
+        let shed = SHED_REASONS
+            .iter()
+            .map(|r| metrics.counter("fqconv_shed_total", &format!("reason=\"{r}\"")))
+            .collect();
+        let interval_ns = ERROR_LOG_INTERVAL.as_nanos() as u64;
+        ServeObs {
+            enabled: cfg.enabled,
+            worker_errors: metrics.counter("fqconv_worker_errors_total", ""),
+            quarantines: metrics.counter("fqconv_quarantines_total", ""),
+            log_suppressed: metrics.counter("fqconv_log_suppressed_total", ""),
+            err_backend: LogLimiter::new(interval_ns),
+            err_bounce: LogLimiter::new(interval_ns),
+            err_quarantine: LogLimiter::new(interval_ns),
+            shed,
+            metrics,
+            trace,
+        }
+    }
+
+    /// Append one trace event (no-op when observability is disabled).
+    #[inline]
+    fn event(&self, shard: usize, trace: u64, kind: EventKind, a: u32, b: u32) {
+        if self.enabled {
+            self.trace.record(shard, trace, kind, a, b);
+        }
+    }
+
+    /// Count + trace one shed decision, reason-coded.
+    fn shed_event(&self, shard: usize, trace: u64, reason: u32) {
+        if self.enabled {
+            self.shed[reason as usize].inc(shard);
+            self.trace.record(shard, trace, EventKind::Shed, reason, 0);
+        }
+    }
+
+    /// Route one error line through a per-site rate gate: at most one
+    /// line per [`ERROR_LOG_INTERVAL`], with the suppressed-repeat
+    /// count appended when the gate re-opens. With observability
+    /// disabled every line logs (the pre-obs behavior).
+    fn limited_error(&self, gate: &LogLimiter, shard: usize, msg: impl FnOnce() -> String) {
+        if !self.enabled {
+            log::error!("{}", msg());
+            return;
+        }
+        match gate.allow(self.trace.clock().now_ns()) {
+            Some(0) => log::error!("{}", msg()),
+            Some(n) => log::error!("{} [{n} similar suppressed]", msg()),
+            None => self.log_suppressed.inc(shard),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Shared two-lane work queue
 // ---------------------------------------------------------------------------
 
@@ -622,10 +723,18 @@ struct QueuedBatch {
     session: Option<SessionId>,
 }
 
-/// DWFQ charge for one popped batch of `samples` requests: per-sample
-/// cost in kMAC units, min 1 so cost-unknown models (`cost == 0`) fall
-/// back to request-count-fair scheduling.
+/// DWFQ charge for one popped batch of `samples` requests. Prefers the
+/// *measured* per-sample wall cost from an attached observed graph's
+/// stage timers ([`QuantGraph::measured_us_per_sample`], µs); falls
+/// back to the registered static estimate in kMAC units, min 1 so
+/// cost-unknown models (`cost == 0`) schedule request-count fair. The
+/// two units are commensurable — the integer engine sustains on the
+/// order of one GMAC/s, so kMAC/1000 ≈ µs — which keeps a lane fair
+/// when only some of its models carry an observed graph.
 fn cost_weight(e: &ModelEntry) -> u64 {
+    if let Some(us) = e.observed_graph.as_ref().and_then(|g| g.measured_us_per_sample()) {
+        return us;
+    }
     (e.cost_per_sample / 1_000).max(1)
 }
 
@@ -754,7 +863,7 @@ impl SharedQueue {
         let mut st = self.state.lock().unwrap();
         if st.closed {
             drop(st);
-            fail_batch(b);
+            fail_batch(b, 0);
             return;
         }
         st.lanes[b.priority.index()].push(b);
@@ -804,6 +913,24 @@ impl SharedQueue {
         self.cv.notify_all();
     }
 
+    /// Depth snapshot per (lane, model): queued batches, queued
+    /// requests, and the model's DWFQ virtual-cost tag (its deficit
+    /// position). Exposition only — takes the queue mutex once.
+    fn depth_snapshot(&self) -> Vec<(usize, ModelId, u64, u64, u64)> {
+        let st = self.state.lock().unwrap();
+        let mut out = Vec::new();
+        for (li, lane) in st.lanes.iter().enumerate() {
+            for (id, q) in &lane.queues {
+                let reqs: usize = q.iter().map(|b| b.reqs.len()).sum();
+                let tag = lane.vcost.get(id).copied().unwrap_or(lane.vclock);
+                out.push((li, id.clone(), q.len() as u64, reqs as u64, tag));
+            }
+        }
+        drop(st);
+        out.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+        out
+    }
+
     /// Wake every waiting worker without touching queue contents — used
     /// after replica-budget or worker-liveness changes so the admission
     /// predicate in [`SharedQueue::pop`] is re-evaluated. The lock
@@ -817,11 +944,12 @@ impl SharedQueue {
 }
 
 /// Answer every member of a batch with [`ServeError::BackendFailed`].
-/// A terminal reply: releases each member's admission reservation. A
+/// A terminal reply: releases each member's admission reservation and
+/// traces one [`EventKind::Failed`] per member on `shard`. A
 /// session-feed batch additionally returns its session to idle and
 /// fails whatever backlog queued behind the doomed feed — no client may
 /// hang on a frame that can never run.
-fn fail_batch(b: QueuedBatch) {
+fn fail_batch(b: QueuedBatch, shard: usize) {
     let QueuedBatch { model, mut reqs, attempts, session, .. } = b;
     if let Some(sid) = session {
         if let Some(sm) = model.stream.as_ref() {
@@ -840,6 +968,7 @@ fn fail_batch(b: QueuedBatch) {
     model.counters.dropped.fetch_add(reqs.len() as u64, Ordering::Relaxed);
     for r in reqs {
         model.counters.pending[r.priority.index()].fetch_sub(1, Ordering::Relaxed);
+        model.obs.event(shard, r.id, EventKind::Failed, attempts as u32, 0);
         let _ = r
             .reply
             .send(Err(ServeError::BackendFailed { model: model.id.clone(), attempts }));
@@ -847,11 +976,13 @@ fn fail_batch(b: QueuedBatch) {
 }
 
 /// Answer one request with [`ServeError::DeadlineExceeded`].
-/// A terminal reply: releases the request's admission reservation.
-fn expire(r: Request, entry: &ModelEntry) {
+/// A terminal reply: releases the request's admission reservation and
+/// traces [`EventKind::Expired`] on `shard`.
+fn expire(r: Request, entry: &ModelEntry, shard: usize) {
     entry.counters.expired.fetch_add(1, Ordering::Relaxed);
     entry.counters.pending[r.priority.index()].fetch_sub(1, Ordering::Relaxed);
     let waited = (r.submitted.elapsed().as_secs_f64() * 1e6) as u64;
+    entry.obs.event(shard, r.id, EventKind::Expired, 0, 0);
     let _ = r
         .reply
         .send(Err(ServeError::DeadlineExceeded { model: entry.id.clone(), waited_us: waited }));
@@ -1082,6 +1213,10 @@ pub struct ModelSpec {
     pub admission: AdmissionPolicy,
     /// streaming-session configuration; `None` = batch-only model
     pub streaming: Option<StreamSpec>,
+    /// the graph the factory's replicas execute, attached for per-stage
+    /// timing exposition and measured-cost DWFQ feedback
+    /// ([`ModelSpec::with_observed_graph`]); `None` = static cost only
+    pub observed_graph: Option<Arc<QuantGraph>>,
 }
 
 impl ModelSpec {
@@ -1095,6 +1230,7 @@ impl ModelSpec {
             cost_per_sample: 0,
             admission: AdmissionPolicy::default(),
             streaming: None,
+            observed_graph: None,
         }
     }
 
@@ -1116,6 +1252,17 @@ impl ModelSpec {
     /// graph is validated (and its state plan built) at register time.
     pub fn with_streaming(mut self, spec: StreamSpec) -> Self {
         self.streaming = Some(spec);
+        self
+    }
+
+    /// Attach the served [`QuantGraph`] (the same `Arc` the factory's
+    /// replicas execute) so its cumulative per-stage timers show up in
+    /// the metrics exposition (`fqconv_stage_us_total{model,stage}`)
+    /// and its measured per-sample cost replaces the static MAC
+    /// estimate in the DWFQ weight once the first samples land
+    /// ([`QuantGraph::measured_us_per_sample`]).
+    pub fn with_observed_graph(mut self, graph: &Arc<QuantGraph>) -> Self {
+        self.observed_graph = Some(Arc::clone(graph));
         self
     }
 }
@@ -1195,6 +1342,12 @@ struct ModelEntry {
     /// streaming half ([`ModelSpec::with_streaming`]); `None` for
     /// batch-only models
     stream: Option<StreamModel>,
+    /// the served graph's timers ([`ModelSpec::with_observed_graph`])
+    observed_graph: Option<Arc<QuantGraph>>,
+    /// the owning registry's observability plumbing, held per entry so
+    /// the terminal-reply helpers ([`fail_batch`], [`expire`]) can
+    /// trace from any call site
+    obs: Arc<ServeObs>,
 }
 
 /// Per-worker counters (lock-free; read by [`ModelRegistry::stats`]).
@@ -1273,7 +1426,9 @@ struct RegistryInner {
     /// one registry-wide lock — writers are rare (register / evict)
     models: RwLock<HashMap<ModelId, Arc<ModelEntry>>>,
     /// Relaxed everywhere: only uniqueness of the handed-out ids is
-    /// needed, which fetch_add's atomicity alone guarantees.
+    /// needed, which fetch_add's atomicity alone guarantees. Starts at
+    /// 1: the ids double as trace ids and 0 is the tracer's
+    /// not-request-tied sentinel.
     next_req_id: AtomicU64,
     /// Relaxed everywhere: ditto — generation values are *compared*
     /// under the `models` RwLock, never used as a publication fence.
@@ -1296,6 +1451,8 @@ struct RegistryInner {
     /// re-queues first and then backs off 1 ms, so a healthy worker has
     /// ample opportunity to take the batch in between)
     max_bounces: usize,
+    /// metrics registry + trace rings + rate-limited log gates
+    obs: Arc<ServeObs>,
 }
 
 /// Multi-model serving: register/evict named models at runtime; every
@@ -1311,12 +1468,21 @@ pub struct ModelRegistry {
 impl ModelRegistry {
     /// Start a registry with `n_workers` pull-based worker threads and
     /// no models; [`ModelRegistry::register`] adds models at runtime.
+    /// Observability is on with defaults — use
+    /// [`ModelRegistry::start_with_obs`] to disable it or to inject a
+    /// deterministic trace clock.
     pub fn start(n_workers: usize) -> Self {
+        ModelRegistry::start_with_obs(n_workers, ObsConfig::default())
+    }
+
+    /// [`ModelRegistry::start`] with explicit observability
+    /// configuration (master switch, trace-ring capacity, clock).
+    pub fn start_with_obs(n_workers: usize, obs: ObsConfig) -> Self {
         assert!(n_workers >= 1, "registry needs at least one worker");
         let inner = Arc::new(RegistryInner {
             queue: SharedQueue::new(),
             models: RwLock::new(HashMap::new()),
-            next_req_id: AtomicU64::new(0),
+            next_req_id: AtomicU64::new(1),
             next_generation: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             served: AtomicU64::new(0),
@@ -1325,6 +1491,7 @@ impl ModelRegistry {
             alive: AtomicUsize::new(n_workers),
             max_attempts: n_workers + 1,
             max_bounces: 8 * n_workers,
+            obs: Arc::new(ServeObs::new(n_workers, obs)),
         });
         let workers = (0..n_workers)
             .map(|wi| {
@@ -1374,6 +1541,8 @@ impl ModelRegistry {
             ingress: Mutex::new(Some(tx)),
             counters: ModelCounters::new(),
             stream,
+            observed_graph: spec.observed_graph,
+            obs: Arc::clone(&self.inner.obs),
         });
         models.insert(id.clone(), Arc::clone(&entry));
         drop(models);
@@ -1445,17 +1614,22 @@ impl ModelRegistry {
             None => return Err(ServeError::UnknownModel(id.clone())),
         };
         assert_eq!(features.len(), entry.sample_numel, "bad feature length for model {id}");
+        // the request id doubles as its trace id: minted before the
+        // admission decision so a shed leaves a complete trace too
+        let rid = self.inner.next_req_id.fetch_add(1, Ordering::Relaxed);
+        let lane = priority.index();
+        entry.obs.event(0, rid, EventKind::Submit, lane as u32, 0);
         // admission control: reserve a pending slot before anything
         // else exists for this request. The fetch_add *is* the
         // reservation — its atomicity alone enforces the bound under
         // any interleaving; an over-the-cap reservation is rolled back
         // and the caller gets the typed shed reply right here, at
         // submit, not at its deadline.
-        let lane = priority.index();
         let held = entry.counters.pending[lane].fetch_add(1, Ordering::Relaxed);
         if held >= entry.admission.max_pending {
             entry.counters.pending[lane].fetch_sub(1, Ordering::Relaxed);
             entry.counters.shed.fetch_add(1, Ordering::Relaxed);
+            entry.obs.shed_event(0, rid, SHED_OVERLOAD);
             return Err(ServeError::Overloaded { model: id.clone(), pending: held });
         }
         // cost-based deadline feasibility: if the admitted backlog
@@ -1472,6 +1646,7 @@ impl ModelRegistry {
                     if Duration::from_micros(eta_us) > budget {
                         entry.counters.pending[lane].fetch_sub(1, Ordering::Relaxed);
                         entry.counters.shed.fetch_add(1, Ordering::Relaxed);
+                        entry.obs.shed_event(0, rid, SHED_INFEASIBLE);
                         return Err(ServeError::Overloaded {
                             model: id.clone(),
                             pending: backlog as usize,
@@ -1483,7 +1658,7 @@ impl ModelRegistry {
         let now = Instant::now();
         let (tx, rx) = mpsc::channel();
         let req = Request {
-            id: self.inner.next_req_id.fetch_add(1, Ordering::Relaxed),
+            id: rid,
             features,
             priority,
             deadline: deadline.map(|d| now + d),
@@ -1498,6 +1673,7 @@ impl ModelRegistry {
             _ => {
                 drop(ingress);
                 entry.counters.pending[lane].fetch_sub(1, Ordering::Relaxed);
+                entry.obs.shed_event(0, rid, SHED_EVICTED);
                 Err(ServeError::UnknownModel(id.clone()))
             }
         }
@@ -1536,9 +1712,12 @@ impl ModelRegistry {
         let mut tab = sm.sessions.lock().unwrap();
         if tab.live >= sm.max_sessions {
             entry.counters.shed.fetch_add(1, Ordering::Relaxed);
+            entry.obs.shed_event(0, 0, SHED_SESSION_CAP);
             return Err(ServeError::Overloaded { model: id.clone(), pending: tab.live });
         }
-        Ok(tab.open(sm.streamer.open()))
+        let sid = tab.open(sm.streamer.open());
+        entry.obs.event(0, 0, EventKind::SessionOpen, sid.slot as u32, 0);
+        Ok(sid)
     }
 
     /// Feed one frame (`stream_info().frame_dim` features) to an open
@@ -1565,9 +1744,11 @@ impl ModelRegistry {
         let sm = stream_model(&entry);
         assert_eq!(frame.len(), sm.streamer.frame_dim(), "bad frame length for model {id}");
         let now = Instant::now();
+        let rid = self.inner.next_req_id.fetch_add(1, Ordering::Relaxed);
+        entry.obs.event(0, rid, EventKind::Submit, Priority::Interactive.index() as u32, 0);
         let (tx, rx) = mpsc::channel();
         let req = Request {
-            id: self.inner.next_req_id.fetch_add(1, Ordering::Relaxed),
+            id: rid,
             features: frame,
             priority: Priority::Interactive,
             deadline: None,
@@ -1578,7 +1759,10 @@ impl ModelRegistry {
         let mut tab = sm.sessions.lock().unwrap();
         let slot = match tab.get_live(sid) {
             Some(s) if !s.pending_close => s,
-            _ => return Err(ServeError::UnknownSession { model: id.clone() }),
+            _ => {
+                entry.obs.shed_event(0, rid, SHED_STALE_SESSION);
+                return Err(ServeError::UnknownSession { model: id.clone() });
+            }
         };
         slot.last_fed = now;
         if slot.busy {
@@ -1587,6 +1771,7 @@ impl ModelRegistry {
             // putting the state back
             if slot.backlog.len() >= MAX_SESSION_BACKLOG {
                 entry.counters.shed.fetch_add(1, Ordering::Relaxed);
+                entry.obs.shed_event(0, rid, SHED_BACKLOG);
                 return Err(ServeError::Overloaded {
                     model: id.clone(),
                     pending: slot.backlog.len(),
@@ -1594,11 +1779,13 @@ impl ModelRegistry {
             }
             // admission reservation, released at the terminal reply
             entry.counters.pending[lane].fetch_add(1, Ordering::Relaxed);
+            entry.obs.event(0, rid, EventKind::Backlog, sid.slot as u32, 0);
             slot.backlog.push_back(req);
             return Ok(rx);
         }
         slot.busy = true;
         entry.counters.pending[lane].fetch_add(1, Ordering::Relaxed);
+        entry.obs.event(0, rid, EventKind::Enqueue, lane as u32, 1);
         drop(tab);
         // bypass the forming batcher: a feed is already a complete unit
         // of work, and frame latency is the product metric
@@ -1638,6 +1825,7 @@ impl ModelRegistry {
         } else {
             tab.release(sid.slot);
         }
+        entry.obs.event(0, 0, EventKind::SessionClose, sid.slot as u32, 0);
         Ok(())
     }
 
@@ -1693,11 +1881,116 @@ impl ModelRegistry {
         }
     }
 
+    /// Merge-on-read snapshot of every metric the registry exposes:
+    /// the pre-registered obs counters (sheds by reason, worker errors,
+    /// quarantines, suppressed log lines), per-model serving counters +
+    /// latency histograms, queue depth/deficit and replica-budget
+    /// gauges, session counts, per-stage timing of observed graphs, and
+    /// the trace-ring totals. Sorted by `(name, labels)`.
+    pub fn metrics_samples(&self) -> Vec<MetricSample> {
+        fn push(out: &mut Vec<MetricSample>, name: &'static str, labels: String, v: SampleValue) {
+            out.push(MetricSample { name, labels, value: v });
+        }
+        let mut out = self.inner.obs.metrics.snapshot();
+        let mut entries: Vec<Arc<ModelEntry>> =
+            self.inner.models.read().unwrap().values().cloned().collect();
+        entries.sort_by(|a, b| a.id.cmp(&b.id));
+        for e in &entries {
+            let l = format!("model=\"{}\"", e.id);
+            let c = &e.counters;
+            let served = c.served.load(Ordering::Relaxed);
+            let batches = c.batches.load(Ordering::Relaxed);
+            push(&mut out, "fqconv_served_total", l.clone(), SampleValue::Counter(served));
+            push(&mut out, "fqconv_batches_total", l.clone(), SampleValue::Counter(batches));
+            let expired = c.expired.load(Ordering::Relaxed);
+            push(&mut out, "fqconv_expired_total", l.clone(), SampleValue::Counter(expired));
+            let dropped = c.dropped.load(Ordering::Relaxed);
+            push(&mut out, "fqconv_failed_total", l.clone(), SampleValue::Counter(dropped));
+            let shed = c.shed.load(Ordering::Relaxed);
+            push(&mut out, "fqconv_model_shed_total", l.clone(), SampleValue::Counter(shed));
+            for p in Priority::ALL {
+                let pl = format!("model=\"{}\",lane=\"{}\"", e.id, p.index());
+                let pending = c.pending[p.index()].load(Ordering::Relaxed) as u64;
+                push(&mut out, "fqconv_pending", pl, SampleValue::Gauge(pending));
+            }
+            let budget = e.replica_budget.load(Ordering::Relaxed) as u64;
+            push(&mut out, "fqconv_replica_budget", l.clone(), SampleValue::Gauge(budget));
+            if let Some(sm) = e.stream.as_ref() {
+                let live = sm.sessions.lock().unwrap().live as u64;
+                push(&mut out, "fqconv_open_sessions", l.clone(), SampleValue::Gauge(live));
+            }
+            let hist = c.hist.lock().unwrap().clone();
+            push(&mut out, "fqconv_latency", l.clone(), SampleValue::Hist(hist));
+            if let Some(g) = e.observed_graph.as_ref() {
+                for st in g.stage_times() {
+                    let sl = format!(
+                        "model=\"{}\",index=\"{}\",stage=\"{}\"",
+                        e.id, st.index, st.kind
+                    );
+                    let us = st.total_ns / 1_000;
+                    push(&mut out, "fqconv_stage_us_total", sl.clone(), SampleValue::Counter(us));
+                    let calls = SampleValue::Counter(st.calls);
+                    push(&mut out, "fqconv_stage_calls_total", sl, calls);
+                }
+                if let Some(us) = g.measured_us_per_sample() {
+                    let v = SampleValue::Gauge(us);
+                    push(&mut out, "fqconv_measured_us_per_sample", l.clone(), v);
+                }
+            }
+        }
+        for (lane, id, batches, reqs, deficit) in self.inner.queue.depth_snapshot() {
+            let ql = format!("model=\"{id}\",lane=\"{lane}\"");
+            push(&mut out, "fqconv_queue_batches", ql.clone(), SampleValue::Gauge(batches));
+            push(&mut out, "fqconv_queue_requests", ql.clone(), SampleValue::Gauge(reqs));
+            push(&mut out, "fqconv_queue_deficit", ql, SampleValue::Gauge(deficit));
+        }
+        let alive = self.inner.alive.load(Ordering::Relaxed) as u64;
+        push(&mut out, "fqconv_workers_alive", String::new(), SampleValue::Gauge(alive));
+        let ev = self.inner.obs.trace.events_total();
+        push(&mut out, "fqconv_trace_events_total", String::new(), SampleValue::Counter(ev));
+        let dr = self.inner.obs.trace.dropped();
+        push(&mut out, "fqconv_trace_dropped_total", String::new(), SampleValue::Counter(dr));
+        out.sort_by(|a, b| (a.name, &a.labels).cmp(&(b.name, &b.labels)));
+        out
+    }
+
+    /// Prometheus text exposition of [`ModelRegistry::metrics_samples`].
+    pub fn metrics_text(&self) -> String {
+        prometheus_text(&self.metrics_samples())
+    }
+
+    /// JSON exposition of [`ModelRegistry::metrics_samples`].
+    pub fn metrics_json(&self) -> String {
+        samples_json(&self.metrics_samples()).to_string()
+    }
+
+    /// Best-effort live decode of the trace rings (see the reliability
+    /// contract in [`crate::obs::trace`]); use
+    /// [`ModelRegistry::shutdown_with_traces`] for an exact snapshot.
+    pub fn trace_snapshot(&self) -> Vec<TraceEvent> {
+        self.inner.obs.trace.snapshot()
+    }
+
+    /// `(events_recorded, events_lost_to_wraparound)` across the trace
+    /// rings — when the second number is 0, every recorded event is
+    /// still retained and a trace reconstruction is complete.
+    pub fn trace_counts(&self) -> (u64, u64) {
+        (self.inner.obs.trace.events_total(), self.inner.obs.trace.dropped())
+    }
+
     /// Graceful shutdown: stop every batcher, let workers drain the
     /// queue, then join all threads. Dropping the registry performs the
     /// same teardown, so an early return or panic cannot leak the pool.
     pub fn shutdown(mut self) {
         self.teardown();
+    }
+
+    /// [`ModelRegistry::shutdown`], returning the final trace snapshot.
+    /// Exact: every writer thread has been joined, so the join's
+    /// happens-before makes all `Relaxed` ring writes visible.
+    pub fn shutdown_with_traces(mut self) -> Vec<TraceEvent> {
+        self.teardown();
+        self.inner.obs.trace.snapshot()
     }
 
     /// Idempotent shutdown body, shared by [`ModelRegistry::shutdown`]
@@ -1815,7 +2108,13 @@ impl Server {
     /// [`Server::start`] with a full [`ModelSpec`] — cost estimate and
     /// admission policy included.
     pub fn start_spec(spec: ModelSpec, workers: usize) -> Self {
-        let registry = ModelRegistry::start(workers);
+        Server::start_spec_obs(spec, workers, ObsConfig::default())
+    }
+
+    /// [`Server::start_spec`] with explicit observability configuration
+    /// ([`ModelRegistry::start_with_obs`]).
+    pub fn start_spec_obs(spec: ModelSpec, workers: usize, obs: ObsConfig) -> Self {
+        let registry = ModelRegistry::start_with_obs(workers, obs);
         let model = ModelId::new("default");
         registry.register(model.clone(), spec).expect("fresh registry cannot have the id");
         Server { registry, model }
@@ -1900,9 +2199,27 @@ impl Server {
         out
     }
 
+    /// Prometheus text exposition of the full metrics snapshot
+    /// ([`ModelRegistry::metrics_text`]).
+    pub fn metrics_text(&self) -> String {
+        self.registry.metrics_text()
+    }
+
+    /// JSON exposition of the full metrics snapshot
+    /// ([`ModelRegistry::metrics_json`]).
+    pub fn metrics_json(&self) -> String {
+        self.registry.metrics_json()
+    }
+
     /// Graceful shutdown: drain, then join threads.
     pub fn shutdown(self) {
         self.registry.shutdown();
+    }
+
+    /// Shut down and return the exact final trace snapshot
+    /// ([`ModelRegistry::shutdown_with_traces`]).
+    pub fn shutdown_with_traces(self) -> Vec<TraceEvent> {
+        self.registry.shutdown_with_traces()
     }
 }
 
@@ -1941,7 +2258,7 @@ impl Drop for RetireGuard<'_> {
         if self.inner.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
             // last worker out: nothing can serve queued batches any more
             for qb in self.inner.queue.close_and_drain() {
-                fail_batch(qb);
+                fail_batch(qb, 0);
             }
         } else {
             // a worker died mid-run: wake the survivors so batches that
@@ -2017,7 +2334,7 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
         // streaming-session feed: no backend replica involved — check
         // the session state out of the table and run the stream path
         if let Some(sid) = qb.session {
-            serve_stream_feed(inner, slot, qb, sid, &mut stream_scratch, &mut feed_logits);
+            serve_stream_feed(inner, wi, slot, qb, sid, &mut stream_scratch, &mut feed_logits);
             continue;
         }
         // expire members whose deadline passed while queued
@@ -2025,7 +2342,7 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
         live.clear();
         for r in qb.reqs.drain(..) {
             if r.deadline.is_some_and(|d| now > d) {
-                expire(r, &entry);
+                expire(r, &entry, wi + 1);
             } else {
                 live.push(r);
             }
@@ -2044,14 +2361,18 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
         if quarantined.get(&entry.id) == Some(&entry.generation) {
             qb.bounces += 1;
             if qb.bounces >= inner.max_bounces {
-                log::error!(
-                    "model {}: every worker has quarantined its replica; failing a \
-                     batch of {b} after {} hand-backs",
-                    entry.id,
-                    qb.bounces
-                );
-                fail_batch(qb);
+                inner.obs.limited_error(&inner.obs.err_bounce, wi, || {
+                    format!(
+                        "model {}: every worker has quarantined its replica; failing a \
+                         batch of {b} after {} hand-backs",
+                        entry.id, qb.bounces
+                    )
+                });
+                fail_batch(qb, wi + 1);
             } else {
+                for r in &qb.reqs {
+                    inner.obs.event(wi + 1, r.id, EventKind::Requeue, wi as u32, b as u32);
+                }
                 inner.queue.push(qb);
                 thread::sleep(Duration::from_millis(1));
             }
@@ -2079,7 +2400,9 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
                     entry.sample_numel
                 );
                 quarantined.insert(entry.id.clone(), entry.generation);
-                fail_batch(qb);
+                inner.obs.quarantines.inc(wi);
+                inner.obs.event(wi + 1, 0, EventKind::Quarantine, wi as u32, 0);
+                fail_batch(qb, wi + 1);
                 continue;
             }
             if live_generation == Some(entry.generation) {
@@ -2099,6 +2422,7 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
         flat.clear();
         flat.reserve(b * entry.sample_numel);
         for r in &qb.reqs {
+            inner.obs.event(wi + 1, r.id, EventKind::Dispatch, wi as u32, b as u32);
             flat.extend_from_slice(&r.features);
         }
         let classes = backend.out_dim();
@@ -2116,7 +2440,7 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
         let infer = match infer {
             Ok(r) => r,
             Err(payload) => {
-                fail_batch(qb);
+                fail_batch(qb, wi + 1);
                 std::panic::resume_unwind(payload);
             }
         };
@@ -2143,16 +2467,19 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
                 slot.batches.fetch_add(1, Ordering::Relaxed);
                 for (i, r) in qb.reqs.drain(..).enumerate() {
                     let row = &out[i * classes..(i + 1) * classes];
-                    let lat = r.submitted.elapsed().as_secs_f64() * 1e6;
+                    let waited = r.submitted.elapsed();
+                    let lat = waited.as_secs_f64() * 1e6;
                     let pi = r.priority.index();
-                    entry.counters.hist.lock().unwrap().record_us(lat);
-                    entry.counters.prio_hist[pi].lock().unwrap().record_us(lat);
+                    entry.counters.hist.lock().unwrap().record_us(waited.as_micros() as u64);
+                    let ph = &entry.counters.prio_hist[pi];
+                    ph.lock().unwrap().record_us(waited.as_micros() as u64);
                     entry.counters.served_by_prio[pi].fetch_add(1, Ordering::Relaxed);
                     entry.counters.served.fetch_add(1, Ordering::Relaxed);
                     // terminal reply: release the admission reservation
                     entry.counters.pending[pi].fetch_sub(1, Ordering::Relaxed);
                     inner.served.fetch_add(1, Ordering::Relaxed);
                     slot.served.fetch_add(1, Ordering::Relaxed);
+                    inner.obs.event(wi + 1, r.id, EventKind::Served, wi as u32, b as u32);
                     let _ = r.reply.send(Ok(Response {
                         id: r.id,
                         model: entry.id.clone(),
@@ -2166,6 +2493,7 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
             }
             Err(e) => {
                 slot.errors.fetch_add(1, Ordering::Relaxed);
+                inner.obs.worker_errors.inc(wi);
                 let slot_errs =
                     errs.entry(entry.id.clone()).or_insert((entry.generation, 0));
                 if slot_errs.0 != entry.generation {
@@ -2175,28 +2503,37 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
                 let model_errors = slot_errs.1;
                 qb.attempts += 1;
                 if qb.attempts < inner.max_attempts {
-                    log::error!(
-                        "worker {wi} backend error on model {} (attempt {} of {}): {e:#}",
-                        entry.id,
-                        qb.attempts,
-                        inner.max_attempts
-                    );
+                    inner.obs.limited_error(&inner.obs.err_backend, wi, || {
+                        format!(
+                            "worker {wi} backend error on model {} (attempt {} of {}): {e:#}",
+                            entry.id, qb.attempts, inner.max_attempts
+                        )
+                    });
+                    for r in &qb.reqs {
+                        let kind = EventKind::Requeue;
+                        inner.obs.event(wi + 1, r.id, kind, wi as u32, b as u32);
+                    }
                     inner.queue.push(qb);
                 } else {
-                    log::error!(
-                        "worker {wi} backend error on model {}, failing batch of {b} after \
-                         {} attempts: {e:#}",
-                        entry.id,
-                        inner.max_attempts
-                    );
-                    fail_batch(qb);
+                    inner.obs.limited_error(&inner.obs.err_backend, wi, || {
+                        format!(
+                            "worker {wi} backend error on model {}, failing batch of {b} \
+                             after {} attempts: {e:#}",
+                            entry.id, inner.max_attempts
+                        )
+                    });
+                    fail_batch(qb, wi + 1);
                 }
                 if model_errors >= MAX_WORKER_ERRORS {
-                    log::error!(
-                        "worker {wi} quarantining its replica for model {} after \
-                         {model_errors} consecutive errors",
-                        entry.id
-                    );
+                    inner.obs.limited_error(&inner.obs.err_quarantine, wi, || {
+                        format!(
+                            "worker {wi} quarantining its replica for model {} after \
+                             {model_errors} consecutive errors",
+                            entry.id
+                        )
+                    });
+                    inner.obs.quarantines.inc(wi);
+                    inner.obs.event(wi + 1, 0, EventKind::Quarantine, wi as u32, 0);
                     quarantined.insert(entry.id.clone(), entry.generation);
                     // drop the cached replica only if it is the one that
                     // failed (a stale one-shot error must not evict the
@@ -2215,10 +2552,15 @@ fn worker_loop(wi: usize, inner: &RegistryInner) {
 
 /// Answer feed requests whose session vanished with the typed
 /// [`ServeError::UnknownSession`]. A terminal reply: releases each
-/// admission reservation.
-fn reply_unknown_session(entry: &ModelEntry, reqs: impl IntoIterator<Item = Request>) {
+/// admission reservation and traces [`EventKind::Failed`] on `shard`.
+fn reply_unknown_session(
+    entry: &ModelEntry,
+    shard: usize,
+    reqs: impl IntoIterator<Item = Request>,
+) {
     for r in reqs {
         entry.counters.pending[r.priority.index()].fetch_sub(1, Ordering::Relaxed);
+        entry.obs.event(shard, r.id, EventKind::Failed, 0, 0);
         let _ = r.reply.send(Err(ServeError::UnknownSession { model: entry.id.clone() }));
     }
 }
@@ -2232,6 +2574,7 @@ fn reply_unknown_session(entry: &ModelEntry, reqs: impl IntoIterator<Item = Requ
 /// put the state back (or free the slot if a close raced the feed).
 fn serve_stream_feed(
     inner: &RegistryInner,
+    wi: usize,
     wslot: &WorkerSlot,
     mut qb: QueuedBatch,
     sid: SessionId,
@@ -2242,7 +2585,7 @@ fn serve_stream_feed(
     if entry.stream.is_none() {
         // unreachable by construction (feeds only exist for streaming
         // models); degrade to a typed failure rather than a panic
-        fail_batch(qb);
+        fail_batch(qb, wi + 1);
         return;
     }
     let sm = stream_model(&entry);
@@ -2261,7 +2604,7 @@ fn serve_stream_feed(
             Some(st) => st,
             None => {
                 drop(tab);
-                reply_unknown_session(&entry, qb.reqs.drain(..));
+                reply_unknown_session(&entry, wi + 1, qb.reqs.drain(..));
                 return;
             }
         }
@@ -2273,20 +2616,24 @@ fn serve_stream_feed(
     wslot.batches.fetch_add(1, Ordering::Relaxed);
     loop {
         for r in reqs.drain(..) {
+            inner.obs.event(wi + 1, r.id, EventKind::Dispatch, wi as u32, 1);
             sm.streamer.feed(&mut state, &r.features, scr);
             logits.clear();
             logits.resize(classes, 0.0);
             let ready = sm.streamer.logits_into(&state, scr, logits);
-            let lat = r.submitted.elapsed().as_secs_f64() * 1e6;
+            let waited = r.submitted.elapsed();
+            let lat = waited.as_secs_f64() * 1e6;
             let pi = r.priority.index();
-            entry.counters.hist.lock().unwrap().record_us(lat);
-            entry.counters.prio_hist[pi].lock().unwrap().record_us(lat);
+            entry.counters.hist.lock().unwrap().record_us(waited.as_micros() as u64);
+            let ph = &entry.counters.prio_hist[pi];
+            ph.lock().unwrap().record_us(waited.as_micros() as u64);
             entry.counters.served_by_prio[pi].fetch_add(1, Ordering::Relaxed);
             entry.counters.served.fetch_add(1, Ordering::Relaxed);
             // terminal reply: release the admission reservation
             entry.counters.pending[pi].fetch_sub(1, Ordering::Relaxed);
             inner.served.fetch_add(1, Ordering::Relaxed);
             wslot.served.fetch_add(1, Ordering::Relaxed);
+            inner.obs.event(wi + 1, r.id, EventKind::Served, wi as u32, 1);
             let _ = r.reply.send(Ok(Response {
                 id: r.id,
                 model: entry.id.clone(),
@@ -2418,7 +2765,7 @@ fn batcher_loop(rx: Receiver<Request>, inner: &RegistryInner, entry: &Arc<ModelE
             let mut i = 0;
             while i < lane.len() {
                 if lane[i].deadline.is_some_and(|d| now > d) {
-                    expire(lane.remove(i), entry);
+                    expire(lane.remove(i), entry, 0);
                 } else {
                     i += 1;
                 }
@@ -2511,13 +2858,16 @@ fn dispatch(
     let mut live = Vec::with_capacity(pending.len());
     for r in pending.drain(..) {
         if r.deadline.is_some_and(|d| now > d) {
-            expire(r, entry);
+            expire(r, entry, 0);
         } else {
             live.push(r);
         }
     }
     if live.is_empty() {
         return;
+    }
+    for r in &live {
+        entry.obs.event(0, r.id, EventKind::Enqueue, prio.index() as u32, live.len() as u32);
     }
     inner.queue.push(QueuedBatch {
         model: Arc::clone(entry),

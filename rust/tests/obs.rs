@@ -1,0 +1,347 @@
+//! Observability layer: a seeded chaos run is fully reconstructable
+//! from its traces, per-stage timing names every stage, a fake clock
+//! makes traces deterministic, exposition covers every subsystem, and
+//! stats stay consistent (and panic-free) under registry churn.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fqconv::infer::graph::{synthetic_graph, Scratch, SynthArch};
+use fqconv::obs::{EventKind, FakeClock, ObsConfig, TraceEvent};
+use fqconv::serve::chaos::{chaos_factory, ChaosConfig};
+use fqconv::serve::{
+    ready, AdmissionPolicy, Backend, BatchPolicy, GraphBackend, ModelId, ModelRegistry,
+    ModelSpec, Priority, ServeError, Server,
+};
+use fqconv::util::Rng;
+
+/// Deterministic echo backend: logit 0 carries the first feature.
+struct EchoBackend {
+    shape: Vec<usize>,
+}
+
+impl Backend for EchoBackend {
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        let per = x.len() / batch.max(1);
+        out.fill(0.0);
+        for i in 0..batch {
+            out[i * 2] = x[i * per];
+        }
+        Ok(())
+    }
+
+    fn sample_shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn out_dim(&self) -> usize {
+        2
+    }
+}
+
+fn echo_factory() -> fqconv::serve::BackendFactory {
+    ready(|| EchoBackend { shape: vec![4] })
+}
+
+/// Group a post-quiescence event log by trace id (0 = not request-tied).
+fn by_trace(events: &[TraceEvent]) -> HashMap<u64, Vec<TraceEvent>> {
+    let mut m: HashMap<u64, Vec<TraceEvent>> = HashMap::new();
+    for e in events {
+        if e.trace != 0 {
+            m.entry(e.trace).or_default().push(*e);
+        }
+    }
+    m
+}
+
+#[test]
+fn chaos_run_is_fully_reconstructable_from_traces() {
+    // the acceptance pin: a seeded ChaosBackend run (transient failures,
+    // stalls, and at >=2 workers one worker panicking outright) leaves a
+    // trace log from which every accepted request's path can be
+    // reconstructed — exactly one Submit, only legal intermediate hops,
+    // and exactly one terminal reply that matches what the client saw
+    let arch = SynthArch::darknet19();
+    let dark = Arc::new(synthetic_graph(&arch, 1.0, 7.0, 7).expect("darknet19"));
+    let mut rng = Rng::new(41);
+    let n = 12usize;
+    let xs: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0f32; dark.in_numel()];
+            rng.fill_gaussian(&mut v, 0.5);
+            v
+        })
+        .collect();
+    for workers in [1usize, 2, 4] {
+        let cfg = ObsConfig::default().with_trace_capacity(16_384);
+        let registry = ModelRegistry::start_with_obs(workers, cfg);
+        let mut chaos = ChaosConfig::new(0x0B5 + workers as u64)
+            .with_failures(250)
+            .with_stalls(250, Duration::from_millis(2));
+        if workers >= 2 {
+            chaos = chaos.with_panic_on(workers - 1);
+        }
+        registry
+            .register(
+                "darknet19",
+                ModelSpec::new(
+                    chaos_factory(GraphBackend::factory_sharded(&dark, workers), chaos),
+                    dark.in_numel(),
+                    BatchPolicy::new(2, 200),
+                )
+                .with_cost(dark.cost_per_sample())
+                .with_observed_graph(&dark),
+            )
+            .expect("register darknet19");
+        let did = ModelId::new("darknet19");
+        let mut rxs = Vec::new();
+        for x in &xs {
+            let rx = registry.submit_with(&did, x.clone(), Priority::Batch, None);
+            rxs.push(rx.expect("registered"));
+        }
+        let (mut served, mut failed) = (0u64, 0u64);
+        for rx in rxs {
+            match rx.recv().expect("accepted requests reach a terminal reply") {
+                Ok(_) => served += 1,
+                Err(ServeError::BackendFailed { .. }) => failed += 1,
+                Err(e) => panic!("workers={workers}: unexpected typed error: {e}"),
+            }
+        }
+        let (recorded, dropped) = registry.trace_counts();
+        assert!(recorded > 0, "workers={workers}: the run must have traced");
+        assert_eq!(dropped, 0, "workers={workers}: a sized ring must retain every event");
+        let events = registry.shutdown_with_traces();
+        let traces = by_trace(&events);
+        assert_eq!(traces.len(), n, "workers={workers}: one trace per accepted request");
+        let (mut t_served, mut t_failed) = (0u64, 0u64);
+        for (id, t) in &traces {
+            let submits = t.iter().filter(|e| e.kind == EventKind::Submit).count();
+            assert_eq!(submits, 1, "trace {id}: exactly one submit: {t:?}");
+            let terminals: Vec<_> = t.iter().filter(|e| e.kind.is_terminal()).collect();
+            assert_eq!(terminals.len(), 1, "trace {id}: exactly one terminal: {t:?}");
+            assert!(
+                !t.iter().any(|e| e.kind == EventKind::Shed),
+                "trace {id}: unbounded admission cannot shed: {t:?}"
+            );
+            for e in t {
+                let legal = e.kind.is_terminal()
+                    || matches!(
+                        e.kind,
+                        EventKind::Submit
+                            | EventKind::Enqueue
+                            | EventKind::Dispatch
+                            | EventKind::Requeue
+                    );
+                assert!(legal, "trace {id}: illegal hop for a batch request: {e:?}");
+            }
+            match terminals[0].kind {
+                EventKind::Served => {
+                    t_served += 1;
+                    assert!(
+                        t.iter().any(|e| e.kind == EventKind::Dispatch),
+                        "trace {id}: served without a dispatch: {t:?}"
+                    );
+                }
+                EventKind::Failed => t_failed += 1,
+                k => panic!("trace {id}: batch requests cannot end in {k:?}"),
+            }
+        }
+        assert_eq!(
+            (t_served, t_failed),
+            (served, failed),
+            "workers={workers}: trace terminals must match the client-observed replies"
+        );
+    }
+}
+
+#[test]
+fn stage_timing_names_every_stage_of_resnet32_and_darknet19() {
+    for arch in [SynthArch::resnet32(), SynthArch::darknet19()] {
+        let g = synthetic_graph(&arch, 1.0, 7.0, 7).expect("synthetic graph");
+        assert!(g.stage_times().iter().all(|st| st.calls == 0), "fresh graph has run nothing");
+        assert!(g.measured_us_per_sample().is_none(), "no samples measured yet");
+        let mut s = Scratch::for_graph(&g);
+        let mut rng = Rng::new(9);
+        let mut x = vec![0f32; g.in_numel()];
+        rng.fill_gaussian(&mut x, 0.5);
+        let _ = g.forward(&x, &mut s);
+        let _ = g.forward(&x, &mut s);
+        let times = g.stage_times();
+        assert_eq!(times.len(), g.stages().len(), "every stage appears in the snapshot");
+        for (i, st) in times.iter().enumerate() {
+            assert_eq!(st.index, i);
+            assert_eq!(st.kind, g.stages()[i].kind(), "snapshot names the stage");
+            assert!(!st.kind.is_empty());
+            assert_eq!(st.calls, 2, "stage {i} ({}) runs once per forward", st.kind);
+        }
+        let kinds: Vec<&str> = times.iter().map(|st| st.kind).collect();
+        assert!(
+            kinds.contains(&"GlobalAvgPool") && kinds.contains(&"DenseHead"),
+            "structural stages missing from {kinds:?}"
+        );
+        let us = g.measured_us_per_sample().expect("two samples measured");
+        assert!(us >= 1, "measured cost is clamped to at least 1us/sample");
+    }
+}
+
+#[test]
+fn fake_clock_makes_traces_deterministic() {
+    let run = || {
+        let clock = Arc::new(FakeClock::new(7_000));
+        let cfg = ObsConfig::default().with_clock(clock.clone());
+        let registry = ModelRegistry::start_with_obs(1, cfg);
+        let spec = ModelSpec::new(echo_factory(), 4, BatchPolicy::new(1, 100));
+        registry.register("echo", spec).expect("register echo");
+        let id = ModelId::new("echo");
+        for i in 0..5u64 {
+            // each blocking infer completes while the fake time is
+            // frozen, so its whole path shares one deterministic stamp
+            clock.advance(1_000);
+            registry.infer(&id, vec![i as f32, 0.0, 0.0, 0.0]).expect("served");
+        }
+        registry
+            .shutdown_with_traces()
+            .into_iter()
+            .filter(|e| e.trace != 0)
+            .map(|e| (e.trace, e.t_ns, e.kind))
+            .collect::<Vec<_>>()
+    };
+    let (a, b) = (run(), run());
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "identical workloads on a fake clock must trace identically");
+    for &(trace, t_ns, _) in &a {
+        assert!(t_ns >= 8_000 && t_ns % 1_000 == 0, "trace {trace}: stamp {t_ns} off the grid");
+    }
+}
+
+#[test]
+fn exposition_covers_counters_stages_queues_and_traces() {
+    let g = Arc::new(synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7).expect("kws graph"));
+    let spec = ModelSpec::new(
+        GraphBackend::factory_sharded(&g, 2),
+        g.in_numel(),
+        BatchPolicy::new(4, 200),
+    )
+    .with_cost(g.cost_per_sample())
+    .with_observed_graph(&g);
+    let server = Server::start_spec_obs(spec, 2, ObsConfig::default());
+    let mut rng = Rng::new(3);
+    let rxs: Vec<_> = (0..8)
+        .map(|_| {
+            let mut x = vec![0f32; g.in_numel()];
+            rng.fill_gaussian(&mut x, 1.0);
+            server.submit(x)
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply").expect("served");
+    }
+    let text = server.metrics_text();
+    for needle in [
+        "# TYPE fqconv_served_total counter",
+        "fqconv_served_total{model=\"default\"} 8",
+        "fqconv_shed_total{reason=\"overload\"} 0",
+        "fqconv_latency_count{model=\"default\"} 8",
+        "fqconv_stage_us_total{model=\"default\",index=\"0\"",
+        "fqconv_stage_calls_total{model=\"default\"",
+        "fqconv_measured_us_per_sample{model=\"default\"}",
+        "fqconv_replica_budget{model=\"default\"}",
+        "fqconv_workers_alive 2",
+        "fqconv_trace_events_total",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in exposition:\n{text}");
+    }
+    // every stage of the observed graph is named in the exposition
+    for st in g.stage_times() {
+        let line = format!(
+            "fqconv_stage_calls_total{{model=\"default\",index=\"{}\",stage=\"{}\"}}",
+            st.index, st.kind
+        );
+        assert!(text.contains(&line), "stage missing from exposition: {line}\n{text}");
+        assert!(st.calls >= 8, "stage {} must have timed the served samples", st.index);
+    }
+    let json = server.metrics_json();
+    assert!(json.contains("\"fqconv_served_total\""), "{json}");
+    assert!(json.contains("\"counter\"") && json.contains("\"histogram\""), "{json}");
+    server.shutdown();
+}
+
+#[test]
+fn stats_stay_consistent_and_panic_free_under_churn() {
+    // concurrent register/evict churn + bounded submits + metrics
+    // scrapes: nothing may panic, and the post-quiescence accounting
+    // for the stable model must balance exactly
+    let cfg = ObsConfig::default().with_trace_capacity(1 << 15);
+    let registry = ModelRegistry::start_with_obs(2, cfg);
+    let spec = ModelSpec::new(echo_factory(), 4, BatchPolicy::new(2, 100))
+        .with_admission(AdmissionPolicy::bounded(8));
+    registry.register("stable", spec).expect("register stable");
+    let stable = ModelId::new("stable");
+    let churn = ModelId::new("churn");
+    let accepted = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        let reg = &registry;
+        let (stable, churn) = (&stable, &churn);
+        s.spawn(move || {
+            for _round in 0..20 {
+                let spec = ModelSpec::new(echo_factory(), 4, BatchPolicy::new(2, 100));
+                reg.register("churn", spec).expect("churn id was evicted last round");
+                std::thread::sleep(Duration::from_micros(200));
+                assert!(reg.evict(churn), "evicting the generation just registered");
+            }
+        });
+        for _t in 0..2 {
+            let (acc, sh) = (Arc::clone(&accepted), Arc::clone(&shed));
+            s.spawn(move || {
+                for i in 0..150u64 {
+                    match reg.submit(stable, vec![i as f32, 0.0, 0.0, 0.0]) {
+                        Ok(rx) => {
+                            acc.fetch_add(1, Ordering::SeqCst);
+                            rx.recv().expect("terminal reply").expect("echo never fails");
+                        }
+                        Err(ServeError::Overloaded { .. }) => {
+                            sh.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                    // churn-model traffic rides along; any terminal
+                    // outcome (served / typed miss) is acceptable
+                    match reg.submit(churn, vec![i as f32, 0.0, 0.0, 0.0]) {
+                        Ok(rx) => {
+                            let _ = rx.recv().expect("accepted churn requests are answered");
+                        }
+                        Err(ServeError::UnknownModel(_)) => {}
+                        Err(ServeError::Overloaded { .. }) => {}
+                        Err(e) => panic!("unexpected churn submit error: {e}"),
+                    }
+                }
+            });
+        }
+        s.spawn(move || {
+            for _ in 0..50 {
+                let text = reg.metrics_text();
+                assert!(text.contains("fqconv_served_total"), "scrape lost the registry");
+                let _ = reg.metrics_json();
+                let _ = reg.trace_snapshot();
+                let _ = reg.stats();
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        });
+    });
+    // post-quiescence: client-side accounting matches the exposition
+    let text = registry.metrics_text();
+    let acc = accepted.load(Ordering::SeqCst);
+    let served_line = format!("fqconv_served_total{{model=\"stable\"}} {acc}");
+    assert!(text.contains(&served_line), "missing {served_line:?} in:\n{text}");
+    let shed_line =
+        format!("fqconv_model_shed_total{{model=\"stable\"}} {}", shed.load(Ordering::SeqCst));
+    assert!(text.contains(&shed_line), "missing {shed_line:?} in:\n{text}");
+    for lane in 0..2 {
+        let drained = format!("fqconv_pending{{model=\"stable\",lane=\"{lane}\"}} 0");
+        assert!(text.contains(&drained), "missing {drained:?} in:\n{text}");
+    }
+    registry.shutdown();
+}

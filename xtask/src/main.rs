@@ -18,9 +18,11 @@
 //!    facade so the model checker sees it.
 //! 4. **hot-path-float** — no `f32`/`f64` tokens or float literals in
 //!    the named fn bodies of the integer kernels (`infer/gemm.rs`,
-//!    `infer/conv.rs`, `infer/conv2d.rs`, and the streaming conv
-//!    kernel `stream/state.rs`), apart from a per-file allowlist of
-//!    construction/stats fns. Known limitation: float
+//!    `infer/conv.rs`, `infer/conv2d.rs`, the streaming conv kernel
+//!    `stream/state.rs`, and the observability record paths
+//!    `obs/hist.rs`, `obs/record.rs`, `obs/trace.rs`), apart from a
+//!    per-file allowlist of construction/stats fns. Known limitation:
+//!    float
 //!    arithmetic behind type inference with no textual `f32`/`f64`/
 //!    literal (e.g. `qa.es * qw.es` on f32 fields) is invisible to a
 //!    token scan — such fns (`build_conv_lut`) sit in the allowlist as
@@ -44,6 +46,12 @@ const HOT_PATH_ALLOW: &[(&str, &[&str])] = &[
     // the per-frame streaming feed: every fn is integer-only (the f32
     // embed/GAP ends live in stream/mod.rs, which is not a hot kernel)
     ("stream/state.rs", &[]),
+    // observability record paths: counters/gauges/histogram/trace
+    // recording must stay integer-only and allocation-free; only the
+    // hist read-side summaries (quantile/mean rendering) use floats
+    ("obs/hist.rs", &["percentile", "mean", "summary"]),
+    ("obs/record.rs", &[]),
+    ("obs/trace.rs", &[]),
 ];
 
 fn main() -> ExitCode {
@@ -666,6 +674,27 @@ fn self_test() -> ExitCode {
                     let _ = s;\n}\n";
     let got = lint_hot_floats("rust/src/stream/state.rs", bad_feed, &strip(bad_feed), &[]).len();
     check("hot-float/stream-seeded", got, 2);
+    // the observability record paths are pinned under rule 4: the
+    // counter/trace files with an empty allowlist (every fn integer-
+    // only), the histogram with only its read-side summaries allowed
+    let pinned_empty =
+        |file: &str| HOT_PATH_ALLOW.iter().any(|(f, allow)| *f == file && allow.is_empty());
+    check("hot-float/obs-record-covered", usize::from(pinned_empty("obs/record.rs")), 1);
+    check("hot-float/obs-trace-covered", usize::from(pinned_empty("obs/trace.rs")), 1);
+    let covered = HOT_PATH_ALLOW
+        .iter()
+        .any(|(f, allow)| *f == "obs/hist.rs" && **allow == ["percentile", "mean", "summary"]);
+    check("hot-float/obs-hist-covered", usize::from(covered), 1);
+    let bad_record = "fn add(shard: usize, v: u64) {\n    let w = v as f64 * 0.5;\n    \
+                      let _ = w;\n}\n";
+    let got = lint_hot_floats("rust/src/obs/record.rs", bad_record, &strip(bad_record), &[]);
+    check("hot-float/obs-seeded", got.len(), 2);
+    // ...while the hist allowlist admits the float-returning quantile
+    // reader by name
+    let hist_read = "fn percentile(&self, p: f64) -> f64 {\n    p * 0.01\n}\n";
+    let allow = ["percentile", "mean", "summary"];
+    let got = lint_hot_floats("seed.rs", hist_read, &strip(hist_read), &allow).len();
+    check("hot-float/obs-hist-reader-allowed", got, 0);
 
     if failed == 0 {
         println!("xtask lint --self-test: all rules bite");
