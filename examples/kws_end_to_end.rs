@@ -17,7 +17,7 @@
 //! the default budget; set FQCONV_E2E_STEPS to shrink):
 //!     cargo run --release --example kws_end_to_end
 
-use fqconv::analog::{CrossbarKws, NoiseConfig};
+use fqconv::analog::{CrossbarSim, NoiseConfig};
 use fqconv::coordinator::{checkpoint, ParamSet, Pipeline, Schedule};
 use fqconv::data::{self, Dataset as _};
 use fqconv::infer::FqKwsNet;
@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
     println!("integer-engine validation top-1: {:.2}%", int_acc * 100.0);
 
     // --- 4. analog crossbar at a Table-7 noise point ------------------------
-    let xbar = CrossbarKws::new(&params, 1.0, 7.0, frames)?;
+    let mut xbar = CrossbarSim::from_kws_params(&params, 1.0, 7.0, frames)?;
     for noise in [
         NoiseConfig::default(),
         NoiseConfig { sigma_w: 10.0, sigma_a: 10.0, sigma_mac: 50.0 },

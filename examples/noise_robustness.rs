@@ -5,7 +5,7 @@
 //! Run: `cargo run --release --example noise_robustness`
 //! (FQCONV_NOISE_STEPS scales the training budget.)
 
-use fqconv::analog::{CrossbarKws, NoiseConfig};
+use fqconv::analog::{CrossbarSim, NoiseConfig};
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset};
 use fqconv::runtime::{hp, Engine, Manifest};
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     let fq_graph = info.fq.clone().expect("fq graph");
     let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &qat.params)?;
     let frames = info.input_shape[1];
-    let clean = CrossbarKws::new(&fq_params, 1.0, 7.0, frames)?;
+    let mut clean = CrossbarSim::from_kws_params(&fq_params, 1.0, 7.0, frames)?;
 
     // --- noise-aware fine-tune (σ via hp, inside the fq_train artifact) ----
     println!("[3/4] noise-aware fine-tune ({steps} steps @ sigma_w/a=20%, sigma_mac=100%)...");
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         nt_hp[hp::SEED] = step as f32;
         noisy.step(&b, None, &nt_hp)?;
     }
-    let hardened = CrossbarKws::new(&noisy.params, 1.0, 7.0, frames)?;
+    let mut hardened = CrossbarSim::from_kws_params(&noisy.params, 1.0, 7.0, frames)?;
 
     // --- sweep ----------------------------------------------------------------
     println!("[4/4] crossbar noise sweep (96 samples x 3 draws):\n");

@@ -17,13 +17,17 @@
 //! plan, and closed-loop p99 feed latency — plus the `obs_overhead`
 //! section: the same unpaced workload with the observability layer on
 //! vs off, pinning tracing+metrics cost to within 2% of metrics-off
-//! throughput) so the serving-perf trajectory is tracked across PRs.
+//! throughput — plus the `noise` section: the synthetic KWS graph
+//! served plain vs as an N=8 Monte-Carlo crossbar ensemble
+//! (`ModelSpec::with_noise`), reporting the ensemble throughput cost)
+//! so the serving-perf trajectory is tracked across PRs.
 //! `FQCONV_BENCH_SMOKE=1` shrinks the load to one short iteration.
 #[path = "common.rs"]
 mod common;
 
 use std::sync::Arc;
 
+use fqconv::analog::NoiseConfig;
 use fqconv::bench::{banner, bench};
 use fqconv::coordinator::{checkpoint, fq_transform, Trainer, Variant};
 use fqconv::data::{self, Dataset as _};
@@ -33,7 +37,7 @@ use fqconv::infer::FqKwsNet;
 use fqconv::obs::ObsConfig;
 use fqconv::serve::{
     AdmissionPolicy, Backend as _, BatchPolicy, GraphBackend, ModelId, ModelRegistry, ModelSpec,
-    NativeBackend, Priority, ServeError, Server, StreamSpec,
+    NativeBackend, NoiseSpec, Priority, ServeError, Server, StreamSpec, Vote,
 };
 use fqconv::util::json::{num, obj, s, Json};
 use fqconv::util::{Rng, Timer};
@@ -411,6 +415,61 @@ fn main() {
     let obs_overhead_pct = (obs_rps[1] - obs_rps[0]) / obs_rps[1].max(1e-9) * 100.0;
     println!("observability overhead: {obs_overhead_pct:.2}% of metrics-off throughput");
 
+    // noisy Monte-Carlo ensemble serving: the same synthetic KWS graph
+    // served plain (replicas = 1 delegates to the wrapped backend) and
+    // as an N=8 crossbar ensemble, measuring the throughput cost of N
+    // independent f64 noise walks per request
+    println!("\n--- noise: Monte-Carlo ensemble serving (N-replica crossbar sim) ---");
+    let noise_workers = 2usize;
+    let noise_replicas = 8usize;
+    let ngraph = Arc::new(synthetic_graph(&SynthArch::kws(), 1.0, 7.0, 7).expect("synthetic kws"));
+    let n_noise = if smoke() { 16usize } else { 96 };
+    let mut noise_rng = Rng::new(0x4015E);
+    let noise_feats: Vec<Vec<f32>> = (0..n_noise)
+        .map(|_| {
+            let mut v = vec![0f32; ngraph.in_numel()];
+            noise_rng.fill_gaussian(&mut v, 0.8);
+            v
+        })
+        .collect();
+    let mut noise_rps = [0f64; 2];
+    let mut ensemble_in_stats = 0usize;
+    for (k, replicas) in [1usize, noise_replicas].into_iter().enumerate() {
+        let spec = ModelSpec::new(
+            GraphBackend::factory_sharded(&ngraph, noise_workers),
+            ngraph.in_numel(),
+            BatchPolicy::new(8, 1000),
+        )
+        .with_cost(ngraph.cost_per_sample())
+        .with_noise(NoiseSpec {
+            graph: Arc::clone(&ngraph),
+            noise: NoiseConfig { sigma_w: 10.0, sigma_a: 10.0, sigma_mac: 50.0 },
+            replicas,
+            vote: Vote::MeanLogit,
+            seed: 42,
+        });
+        let server = Server::start_spec(spec, noise_workers);
+        for f in noise_feats.iter().take(4) {
+            server.submit(f.clone()).recv().unwrap().unwrap();
+        }
+        let timer = Timer::start();
+        let rxs: Vec<_> = noise_feats.iter().map(|f| server.submit(f.clone())).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        noise_rps[k] = noise_feats.len() as f64 / timer.elapsed_s();
+        if replicas > 1 {
+            ensemble_in_stats = server.registry().stats().models[0].ensemble;
+        }
+        println!("replicas {replicas}: {:.0} req/s", noise_rps[k]);
+        server.shutdown();
+    }
+    let noise_cost_x = noise_rps[0] / noise_rps[1].max(1e-9);
+    println!(
+        "ensemble N={noise_replicas} costs {noise_cost_x:.1}x baseline throughput \
+         (ensemble size in stats: {ensemble_in_stats})"
+    );
+
     let prio_json = |p: &fqconv::serve::PriorityStats| {
         obj(vec![
             ("served", num(p.served as f64)),
@@ -474,6 +533,18 @@ fn main() {
                 ("on_req_per_sec", num(obs_rps[0])),
                 ("off_req_per_sec", num(obs_rps[1])),
                 ("overhead_pct", num(obs_overhead_pct)),
+            ]),
+        ),
+        (
+            "noise",
+            obj(vec![
+                ("workers", num(noise_workers as f64)),
+                ("replicas", num(noise_replicas as f64)),
+                ("requests", num(n_noise as f64)),
+                ("baseline_req_per_sec", num(noise_rps[0])),
+                ("ensemble_req_per_sec", num(noise_rps[1])),
+                ("throughput_cost_x", num(noise_cost_x)),
+                ("ensemble_in_stats", num(ensemble_in_stats as f64)),
             ]),
         ),
     ]);

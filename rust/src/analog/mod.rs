@@ -1,4 +1,4 @@
-//! Analog compute-in-memory crossbar simulator (Table 7).
+//! Analog compute-in-memory crossbar simulator (Table 7) — graph-generic.
 //!
 //! Models the paper's analog accelerator target: weights stored as
 //! conductances in a crossbar array (noisy memory cells), activations
@@ -13,16 +13,35 @@
 //!   * σ_MAC on the analog sum, in % of the *output* quantizer's LSB
 //!     (ADC input-referred noise).
 //!
-//! The simulator reuses the integer KWS pipeline's structure but computes
-//! in f64 code-space so the Gaussian perturbations are exact, then bins
-//! through the same two-step (Q_out -> next-input) mapping as the
-//! deployed kernel. With all σ = 0 it reduces to the integer engine.
+//! [`CrossbarSim`] walks any [`QuantGraph`] the integer engine can run
+//! — the 1-D KWS stacks, the 2-D residual/pooled grammars (ResNet-32,
+//! DarkNet-19, fuzzed graphs) — in f64 code-space, mirroring
+//! [`QuantGraph::forward_into`] stage for stage: the FP embedding /
+//! input stem and the dense head stay digital (they are digital on the
+//! paper's target too), convolutions accumulate perturbed codes in f64,
+//! and the ADC bins each analog sum through the **same f32 prefactor
+//! the digital requant LUT was built from** ([`RequantLut::f`]), so
+//! with every σ = 0 the walk is bit-identical to the integer engine.
+//! Residual joins apply the exact tabulated [`AddLut`] on the post-ADC
+//! integer codes; max pools are order-exact on codes; the GAP sums
+//! post-ADC codes in i64 through [`QParams::dequantize_i64`] — the same
+//! wide path the digital engine uses, so an arbitrarily long time axis
+//! cannot silently truncate.
+//!
+//! [`RequantLut::f`]: crate::quant::RequantLut
+//! [`AddLut`]: crate::quant::AddLut
+//! [`QParams::dequantize_i64`]: crate::quant::QParams
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::coordinator::ParamSet;
-use crate::infer::pipeline::{FqKwsNet, Scratch};
-use crate::quant::learned_quantize;
+use crate::infer::conv::WeightKind;
+use crate::infer::graph::{QuantGraph, QuantStage, Scratch};
+use crate::infer::pipeline::kws_stages;
+use crate::infer::{QuantConv1d, QuantConv2d};
+use crate::quant::QParams;
 use crate::util::Rng;
 
 /// Table-7 noise configuration (percent of LSB).
@@ -57,146 +76,554 @@ impl NoiseConfig {
     }
 }
 
-/// Crossbar-array simulation of the KWS FQ network.
-pub struct CrossbarKws {
-    net: FqKwsNet,
-    /// float weight codes per layer (conductance programming targets),
-    /// layout (kdim, c_out)
+/// Crossbar-array simulation of any fully-quantized [`QuantGraph`].
+///
+/// Construction extracts every conv layer's integer weight codes (the
+/// conductance programming targets) in walk order — a residual block's
+/// shortcut projection before its body, matching the forward — so the
+/// per-inference noise draws perturb exactly what the hardware stores.
+/// The simulator owns reusable f64 code buffers; after the first call
+/// the analog walk performs no steady-state allocation, and the σ = 0
+/// fast path of [`CrossbarSim::forward_noisy_into`] delegates to the
+/// integer engine over the caller's [`Scratch`] without allocating at
+/// all (pinned by `Scratch::capacities` in rust/tests/analog_sim.rs).
+pub struct CrossbarSim {
+    graph: Arc<QuantGraph>,
+    /// f32 weight codes per conv layer in walk order, tap-major
+    /// `(taps, c_out)` — the same layout the kernels consume
     wcodes: Vec<Vec<f32>>,
+    /// ping-pong f64 code buffers for the analog walk
+    buf_a: Vec<f64>,
+    buf_b: Vec<f64>,
+    /// residual shortcut codes, held while the block body ping-pongs
+    buf_skip: Vec<f64>,
+    /// DAC-perturbed activation codes of the current layer
+    buf_acts: Vec<f64>,
+    /// cell-perturbed weight codes of the current layer
+    buf_w: Vec<f64>,
 }
 
-impl CrossbarKws {
-    pub fn new(params: &ParamSet, nw: f32, na: f32, frames: usize) -> Result<Self> {
-        let net = FqKwsNet::from_params(params, nw, na, frames)?;
+impl CrossbarSim {
+    /// Simulator over a shared graph (any architecture the engine runs).
+    pub fn new(graph: Arc<QuantGraph>) -> Self {
         let mut wcodes = Vec::new();
-        for (i, l) in net.layers().iter().enumerate() {
-            let w = params.get(&format!("conv{i}.w")).unwrap();
-            let kdim = l.c_in * l.ksize;
-            let mut codes = vec![0f32; kdim * l.c_out];
-            for ko in 0..l.c_out {
-                for ci in 0..l.c_in {
-                    for f in 0..l.ksize {
-                        codes[(ci * l.ksize + f) * l.c_out + ko] =
-                            l.qw.int_code(w.data()[(ko * l.c_in + ci) * l.ksize + f]) as f32;
+        for stage in graph.stages() {
+            match stage {
+                QuantStage::FqConvStack(st) => {
+                    for l in &st.layers {
+                        wcodes.push(weight_codes(&l.weights, l.c_in * l.ksize, l.c_out));
                     }
                 }
-            }
-            wcodes.push(codes);
-        }
-        Ok(CrossbarKws { net, wcodes })
-    }
-
-    pub fn net(&self) -> &FqKwsNet {
-        &self.net
-    }
-
-    /// One noisy inference of a single sample.
-    pub fn forward_noisy(&self, x: &[f32], noise: NoiseConfig, rng: &mut Rng) -> Vec<f32> {
-        if noise.silent() {
-            let mut s = Scratch::default();
-            return self.net.forward(x, &mut s);
-        }
-        let net = &self.net;
-        let t_in = net.frames;
-        // --- digital front end: embedding + input quantization -----------
-        let (dim, n_mfcc, ew, scale, shift, es) = net.embed_view();
-        let qa0 = net.layers()[0].qa;
-        let mut codes = vec![0f64; dim * t_in];
-        for k in 0..dim {
-            for t in 0..t_in {
-                let mut acc = 0f32;
-                for c in 0..n_mfcc {
-                    acc += ew[k * n_mfcc + c] * x[c * t_in + t];
+                QuantStage::FqConv2dStack(st) => {
+                    for l in &st.layers {
+                        wcodes.push(weight_codes(&l.weights, l.c_in * l.ksize * l.ksize, l.c_out));
+                    }
                 }
-                let bn = acc * scale[k] + shift[k];
-                let q = learned_quantize(bn, es, net.na, -1.0);
-                codes[k * t_in + t] = qa0.int_code(q) as f64;
+                QuantStage::Residual(r) => {
+                    // shortcut projection first: the walk stashes the
+                    // skip before running the body
+                    if let Some(d) = &r.down {
+                        wcodes.push(weight_codes(&d.weights, d.c_in * d.ksize * d.ksize, d.c_out));
+                    }
+                    for l in &r.body {
+                        wcodes.push(weight_codes(&l.weights, l.c_in * l.ksize * l.ksize, l.c_out));
+                    }
+                }
+                _ => {}
             }
         }
-        // --- analog crossbar layers ---------------------------------------
-        let mut t_cur = t_in;
-        for (li, l) in net.layers().iter().enumerate() {
-            let t_out = l.t_out(t_cur);
-            // DAC noise on activation codes
-            let acts: Vec<f64> = codes
-                .iter()
-                .map(|&c| c + rng.gaussian() * (noise.sigma_a as f64 / 100.0))
-                .collect();
-            // memory-cell noise on conductances (per inference draw)
-            let wnoisy: Vec<f64> = self.wcodes[li]
-                .iter()
-                .map(|&c| c as f64 + rng.gaussian() * (noise.sigma_w as f64 / 100.0))
-                .collect();
-            let fpre = (l.qa.es as f64 / l.qa.n as f64) * (l.qw.es as f64 / l.qw.n as f64);
-            let (mid_q, next_q) = net.layer_grids(li);
-            let mac_lsb = mid_q.es as f64 / mid_q.n as f64;
-            let mut next_codes = vec![0f64; l.c_out * t_out];
-            for t in 0..t_out {
-                for ko in 0..l.c_out {
-                    // Kirchhoff accumulation: full analog precision
-                    let mut acc = 0f64;
-                    for ci in 0..l.c_in {
-                        for f in 0..l.ksize {
-                            acc += acts[ci * t_cur + t + f * l.dilation]
-                                * wnoisy[(ci * l.ksize + f) * l.c_out + ko];
+        CrossbarSim {
+            graph,
+            wcodes,
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+            buf_skip: Vec::new(),
+            buf_acts: Vec::new(),
+            buf_w: Vec::new(),
+        }
+    }
+
+    /// Convenience constructor for the trained KWS pipeline: builds the
+    /// quantized graph from a FQ [`ParamSet`] (same stage list as
+    /// [`crate::infer::FqKwsNet::from_params`]) and wraps it.
+    pub fn from_kws_params(params: &ParamSet, nw: f32, na: f32, frames: usize) -> Result<Self> {
+        let graph = QuantGraph::new(kws_stages(params, nw, na)?, frames)?;
+        Ok(CrossbarSim::new(Arc::new(graph)))
+    }
+
+    /// The simulated graph (also the σ = 0 digital reference).
+    pub fn graph(&self) -> &Arc<QuantGraph> {
+        &self.graph
+    }
+
+    /// One noisy inference of a single sample into the caller's logit
+    /// slice. A silent config takes the integer engine's allocation-free
+    /// forward over `s`; any σ > 0 takes the analog walk
+    /// ([`CrossbarSim::forward_analog_into`]).
+    pub fn forward_noisy_into(
+        &mut self,
+        x: &[f32],
+        noise: NoiseConfig,
+        rng: &mut Rng,
+        s: &mut Scratch,
+        logits: &mut [f32],
+    ) {
+        if noise.silent() {
+            // σ = 0 fast path: the digital engine over the caller's
+            // reusable scratch — no per-call allocation (the old code
+            // built a fresh Scratch::default() per call, a hot-loop
+            // allocation under Monte-Carlo reps)
+            self.graph.forward_into(x, s, logits, 1);
+        } else {
+            self.forward_analog_into(x, noise, rng, s, logits);
+        }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`CrossbarSim::forward_noisy_into`].
+    pub fn forward_noisy(
+        &mut self,
+        x: &[f32],
+        noise: NoiseConfig,
+        rng: &mut Rng,
+        s: &mut Scratch,
+    ) -> Vec<f32> {
+        let mut logits = vec![0f32; self.graph.classes()];
+        self.forward_noisy_into(x, noise, rng, s, &mut logits);
+        logits
+    }
+
+    /// The f64 code-space walk, unconditionally — even at σ = 0, where
+    /// it must be bit-identical to [`QuantGraph::forward_into`] (the
+    /// bit-identity tests call this directly so the analog path itself
+    /// is exercised, not the silent shortcut). `s` supplies the i8/f32
+    /// staging for the digital front end, pooled features and head.
+    pub fn forward_analog_into(
+        &mut self,
+        x: &[f32],
+        noise: NoiseConfig,
+        rng: &mut Rng,
+        s: &mut Scratch,
+        logits: &mut [f32],
+    ) {
+        let g = Arc::clone(&self.graph);
+        debug_assert_eq!(x.len(), g.in_numel(), "feature buffer size");
+        assert_eq!(logits.len(), g.classes(), "logit buffer size");
+        let is_2d = g.in_shape().len() == 3;
+        let mut t_cur = g.frames();
+        let (mut h_cur, mut w_cur) =
+            if is_2d { (g.in_shape()[1], g.in_shape()[2]) } else { (0, 0) };
+        // move the reusable buffers out so the walk can borrow
+        // `self.wcodes` immutably alongside them
+        let mut a = std::mem::take(&mut self.buf_a);
+        let mut b = std::mem::take(&mut self.buf_b);
+        let mut skip = std::mem::take(&mut self.buf_skip);
+        let mut acts = std::mem::take(&mut self.buf_acts);
+        let mut wn = std::mem::take(&mut self.buf_w);
+        let mut wi = 0usize;
+        let mut cur_in_a = true;
+        for stage in g.stages() {
+            match stage {
+                QuantStage::FpEmbed(e) => {
+                    // digital-exact front end (digital on the paper's
+                    // target too), widened to f64 codes
+                    e.forward_into(x, t_cur, &mut s.a, &mut s.fa);
+                    widen(&s.a, &mut a);
+                    cur_in_a = true;
+                }
+                QuantStage::QuantStem2d(st) => {
+                    st.forward_into(x, &mut s.a);
+                    widen(&s.a, &mut a);
+                    cur_in_a = true;
+                }
+                QuantStage::FqConvStack(stack) => {
+                    for l in &stack.layers {
+                        let (input, output) =
+                            if cur_in_a { (&a, &mut b) } else { (&b, &mut a) };
+                        analog_conv1d(
+                            l,
+                            &self.wcodes[wi],
+                            input,
+                            t_cur,
+                            noise,
+                            rng,
+                            &mut acts,
+                            &mut wn,
+                            output,
+                        );
+                        wi += 1;
+                        t_cur = l.t_out(t_cur);
+                        cur_in_a = !cur_in_a;
+                    }
+                }
+                QuantStage::FqConv2dStack(stack) => {
+                    for l in &stack.layers {
+                        let (input, output) =
+                            if cur_in_a { (&a, &mut b) } else { (&b, &mut a) };
+                        analog_conv2d(
+                            l,
+                            &self.wcodes[wi],
+                            input,
+                            h_cur,
+                            w_cur,
+                            noise,
+                            rng,
+                            &mut acts,
+                            &mut wn,
+                            output,
+                        );
+                        wi += 1;
+                        let (h2, w2) = l.out_hw(h_cur, w_cur);
+                        h_cur = h2;
+                        w_cur = w2;
+                        cur_in_a = !cur_in_a;
+                    }
+                }
+                QuantStage::Residual(r) => {
+                    // stash the shortcut (identity copy or noisy analog
+                    // projection) before the body ping-pongs
+                    {
+                        let input = if cur_in_a { &a } else { &b };
+                        if let Some(d) = &r.down {
+                            analog_conv2d(
+                                d,
+                                &self.wcodes[wi],
+                                input,
+                                h_cur,
+                                w_cur,
+                                noise,
+                                rng,
+                                &mut acts,
+                                &mut wn,
+                                &mut skip,
+                            );
+                            wi += 1;
+                        } else {
+                            skip.clear();
+                            skip.extend_from_slice(input);
                         }
                     }
-                    let mut y = acc * fpre;
-                    // ADC input-referred noise
-                    y += rng.gaussian() * (noise.sigma_mac as f64 / 100.0) * mac_lsb;
-                    // ADC binning: same two-step as the digital kernel
-                    let q1 = learned_quantize(y as f32, mid_q.es, mid_q.n, mid_q.b);
-                    let code = match next_q {
-                        Some(nq) => nq.int_code(q1),
-                        None => mid_q.int_code(q1),
-                    };
-                    next_codes[ko * t_out + t] = code as f64;
+                    for l in &r.body {
+                        let (input, output) =
+                            if cur_in_a { (&a, &mut b) } else { (&b, &mut a) };
+                        analog_conv2d(
+                            l,
+                            &self.wcodes[wi],
+                            input,
+                            h_cur,
+                            w_cur,
+                            noise,
+                            rng,
+                            &mut acts,
+                            &mut wn,
+                            output,
+                        );
+                        wi += 1;
+                        let (h2, w2) = l.out_hw(h_cur, w_cur);
+                        h_cur = h2;
+                        w_cur = w2;
+                        cur_in_a = !cur_in_a;
+                    }
+                    // exact integer skip-add on the post-ADC codes (both
+                    // operands are integer-valued i8-range by
+                    // construction: int_code clamps to the grid)
+                    let cur = if cur_in_a { &mut a } else { &mut b };
+                    debug_assert_eq!(cur.len(), skip.len(), "residual join geometry");
+                    for (o, &sk) in cur.iter_mut().zip(skip.iter()) {
+                        *o = r.add.apply(*o as i8, sk as i8) as f64;
+                    }
                 }
+                QuantStage::MaxPool2d(p) => {
+                    let (input, output) = if cur_in_a { (&a, &mut b) } else { (&b, &mut a) };
+                    debug_assert_eq!(input.len() % (h_cur * w_cur), 0, "live code geometry");
+                    let channels = input.len() / (h_cur * w_cur);
+                    analog_max_pool(p, input, channels, h_cur, w_cur, output);
+                    let (h2, w2) = p.out_hw(h_cur, w_cur);
+                    h_cur = h2;
+                    w_cur = w2;
+                    cur_in_a = !cur_in_a;
+                }
+                QuantStage::GlobalAvgPool(gp) => {
+                    let codes = if cur_in_a { &a } else { &b };
+                    let t = if is_2d { h_cur * w_cur } else { t_cur };
+                    s.pooled.clear();
+                    s.pooled.resize(gp.channels, 0.0);
+                    analog_gap(codes, gp.channels, t, &gp.dq, &mut s.pooled);
+                }
+                QuantStage::DenseHead(h) => h.forward_into(&s.pooled, logits),
             }
-            codes = next_codes;
-            t_cur = t_out;
         }
-        // --- digital back end: GAP + head ----------------------------------
-        let last = net.layers().last().unwrap();
-        let dq = last.lut.out;
-        let mut pooled = vec![0f32; net.filters];
-        for (k, p) in pooled.iter_mut().enumerate() {
-            let sum: f64 = (0..t_cur).map(|t| codes[k * t_cur + t]).sum();
-            *p = dq.dequantize(sum.round() as i32) / t_cur as f32;
-        }
-        net.head_logits(&pooled)
+        self.buf_a = a;
+        self.buf_b = b;
+        self.buf_skip = skip;
+        self.buf_acts = acts;
+        self.buf_w = wn;
     }
 
     /// Accuracy over `n` validation samples at a noise point, averaged
     /// over `reps` independent noise draws (paper: 10 test repetitions).
+    /// `n` is clamped to [`crate::data::VAL_SIZE`]: the held-out set has
+    /// exactly that many ids, and the old modulo wrap silently
+    /// double-counted early samples, inflating the reported accuracy.
     pub fn evaluate_noisy(
-        &self,
+        &mut self,
         ds: &dyn crate::data::Dataset,
         n: usize,
         noise: NoiseConfig,
         reps: usize,
         seed: u64,
     ) -> f64 {
+        let n = n.clamp(1, crate::data::VAL_SIZE as usize);
+        let mut s = Scratch::for_graph(&self.graph);
+        let mut logits = vec![0f32; self.graph.classes()];
         let mut total_acc = 0.0;
         for rep in 0..reps {
             let mut rng = Rng::new(seed ^ (rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
             let mut correct = 0usize;
             for i in 0..n {
-                let (x, y) = ds.sample(i as u64 % crate::data::VAL_SIZE, None);
-                let logits = self.forward_noisy(&x, noise, &mut rng);
-                let pred = logits
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i as i32)
-                    .unwrap();
-                if pred == y {
+                let (x, y) = ds.sample(i as u64, None);
+                self.forward_noisy_into(&x, noise, &mut rng, &mut s, &mut logits);
+                if argmax(&logits) as i32 == y {
                     correct += 1;
                 }
             }
             total_acc += correct as f64 / n as f64;
         }
-        total_acc / reps as f64
+        total_acc / (reps.max(1)) as f64
+    }
+}
+
+/// Index of the largest logit (ties break low, like the digital eval).
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Integer weight codes of one conv layer as f32 conductance targets,
+/// tap-major `(taps, c_out)` — the layout the kernels consume.
+fn weight_codes(w: &WeightKind, taps: usize, c_out: usize) -> Vec<f32> {
+    let mut codes = vec![0f32; taps * c_out];
+    match w {
+        WeightKind::Dense { b } => {
+            debug_assert_eq!(b.len(), taps * c_out, "dense weight geometry");
+            for (c, &v) in codes.iter_mut().zip(b.iter()) {
+                *c = v as f32;
+            }
+        }
+        WeightKind::Ternary(t) => {
+            for ko in 0..c_out {
+                let (plus, minus) = t.col(ko);
+                for &p in plus {
+                    codes[p as usize * c_out + ko] = 1.0;
+                }
+                for &m in minus {
+                    codes[m as usize * c_out + ko] = -1.0;
+                }
+            }
+        }
+    }
+    codes
+}
+
+fn widen(codes: &[i8], out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(codes.iter().map(|&c| c as f64));
+}
+
+/// Perturb f64 activation codes with DAC noise (σ in % of one code
+/// step). σ = 0 copies exactly and draws nothing, so the silent walk
+/// stays bit-exact and cheap.
+fn perturb_acts(codes: &[f64], sigma_pct: f32, rng: &mut Rng, out: &mut Vec<f64>) {
+    out.clear();
+    if sigma_pct == 0.0 {
+        out.extend_from_slice(codes);
+    } else {
+        let s = sigma_pct as f64 / 100.0;
+        out.extend(codes.iter().map(|&c| c + rng.gaussian() * s));
+    }
+}
+
+/// Perturb programmed weight codes with memory-cell noise, drawn fresh
+/// per inference (σ in % of one code step).
+fn perturb_weights(codes: &[f32], sigma_pct: f32, rng: &mut Rng, out: &mut Vec<f64>) {
+    out.clear();
+    if sigma_pct == 0.0 {
+        out.extend(codes.iter().map(|&c| c as f64));
+    } else {
+        let s = sigma_pct as f64 / 100.0;
+        out.extend(codes.iter().map(|&c| c as f64 + rng.gaussian() * s));
+    }
+}
+
+/// ADC binning of one analog accumulator through the *same* f32
+/// prefactor the digital requant LUT was built from
+/// ([`crate::quant::RequantLut::f`]). At σ_MAC = 0 this is exactly the
+/// LUT's reference: fused layers compute
+/// `next.int_code(mid.quantize(acc as f32 * f))`, unfused
+/// `mid.int_code(acc as f32 * f)` — identical rounding on both sides,
+/// so the σ = 0 walk is bit-identical for every in-range accumulator.
+/// (Recomputing the prefactor in f64 here would differ from the LUT by
+/// ULPs and break rounding ties.)
+fn adc_bin(
+    f: f32,
+    mid: &QParams,
+    next: Option<&QParams>,
+    acc: f64,
+    sigma_mac_pct: f32,
+    mac_lsb: f64,
+    rng: &mut Rng,
+) -> i32 {
+    let mut y = (acc as f32) * f;
+    if sigma_mac_pct != 0.0 {
+        // ADC input-referred noise, in % of the output quantizer's LSB
+        y += (rng.gaussian() * (sigma_mac_pct as f64 / 100.0) * mac_lsb) as f32;
+    }
+    match next {
+        Some(nq) => nq.int_code(mid.quantize(y)),
+        None => mid.int_code(y),
+    }
+}
+
+/// One noisy 1-D analog conv layer: f64 activation codes `(c_in,
+/// t_cur)` → post-ADC integer codes `(c_out, t_out)`.
+#[allow(clippy::too_many_arguments)]
+fn analog_conv1d(
+    l: &QuantConv1d,
+    wc: &[f32],
+    input: &[f64],
+    t_cur: usize,
+    noise: NoiseConfig,
+    rng: &mut Rng,
+    acts: &mut Vec<f64>,
+    wn: &mut Vec<f64>,
+    out: &mut Vec<f64>,
+) {
+    let t_out = l.t_out(t_cur);
+    perturb_acts(input, noise.sigma_a, rng, acts);
+    perturb_weights(wc, noise.sigma_w, rng, wn);
+    let mac_lsb = l.mid.lsb() as f64;
+    out.clear();
+    out.resize(l.c_out * t_out, 0.0);
+    for t in 0..t_out {
+        for ko in 0..l.c_out {
+            // Kirchhoff accumulation: full analog precision
+            let mut acc = 0f64;
+            for ci in 0..l.c_in {
+                for f in 0..l.ksize {
+                    acc += acts[ci * t_cur + t + f * l.dilation]
+                        * wn[(ci * l.ksize + f) * l.c_out + ko];
+                }
+            }
+            let code =
+                adc_bin(l.lut.f, &l.mid, l.next.as_ref(), acc, noise.sigma_mac, mac_lsb, rng);
+            out[ko * t_out + t] = code as f64;
+        }
+    }
+}
+
+/// One noisy 2-D analog conv layer: f64 activation codes `(c_in, h,
+/// w)` → post-ADC integer codes `(c_out, h_out, w_out)`. Zero padding
+/// contributes no current and carries no DAC noise — an undriven line
+/// is exactly zero, so out-of-bounds taps are skipped.
+#[allow(clippy::too_many_arguments)]
+fn analog_conv2d(
+    l: &QuantConv2d,
+    wc: &[f32],
+    input: &[f64],
+    h_in: usize,
+    w_in: usize,
+    noise: NoiseConfig,
+    rng: &mut Rng,
+    acts: &mut Vec<f64>,
+    wn: &mut Vec<f64>,
+    out: &mut Vec<f64>,
+) {
+    let (h_out, w_out) = l.out_hw(h_in, w_in);
+    perturb_acts(input, noise.sigma_a, rng, acts);
+    perturb_weights(wc, noise.sigma_w, rng, wn);
+    let mac_lsb = l.mid.lsb() as f64;
+    let k = l.ksize;
+    out.clear();
+    out.resize(l.c_out * h_out * w_out, 0.0);
+    for oh in 0..h_out {
+        for ow in 0..w_out {
+            for ko in 0..l.c_out {
+                let mut acc = 0f64;
+                for ci in 0..l.c_in {
+                    for fh in 0..k {
+                        let ih = (oh * l.stride + fh) as isize - l.pad as isize;
+                        if ih < 0 || ih >= h_in as isize {
+                            continue;
+                        }
+                        for fw in 0..k {
+                            let iw = (ow * l.stride + fw) as isize - l.pad as isize;
+                            if iw < 0 || iw >= w_in as isize {
+                                continue;
+                            }
+                            acc += acts[(ci * h_in + ih as usize) * w_in + iw as usize]
+                                * wn[((ci * k + fh) * k + fw) * l.c_out + ko];
+                        }
+                    }
+                }
+                let code =
+                    adc_bin(l.lut.f, &l.mid, l.next.as_ref(), acc, noise.sigma_mac, mac_lsb, rng);
+                out[(ko * h_out + oh) * w_out + ow] = code as f64;
+            }
+        }
+    }
+}
+
+/// Order-exact max pool over post-ADC codes (codes are integers; every
+/// quantizer grid is monotone, so the code max is the value max —
+/// mirrors [`crate::infer::graph::MaxPool2d::forward_into`]).
+fn analog_max_pool(
+    p: &crate::infer::graph::MaxPool2d,
+    x: &[f64],
+    channels: usize,
+    h_in: usize,
+    w_in: usize,
+    out: &mut Vec<f64>,
+) {
+    let (h_out, w_out) = p.out_hw(h_in, w_in);
+    out.clear();
+    out.resize(channels * h_out * w_out, 0.0);
+    for c in 0..channels {
+        let plane = &x[c * h_in * w_in..(c + 1) * h_in * w_in];
+        let oplane = &mut out[c * h_out * w_out..(c + 1) * h_out * w_out];
+        for oh in 0..h_out {
+            for ow in 0..w_out {
+                let (h0, w0) = (oh * p.stride, ow * p.stride);
+                let mut m = f64::NEG_INFINITY;
+                for ih in h0..h0 + p.ksize {
+                    for &v in &plane[ih * w_in + w0..ih * w_in + w0 + p.ksize] {
+                        m = m.max(v);
+                    }
+                }
+                oplane[oh * w_out + ow] = m;
+            }
+        }
+    }
+}
+
+/// Analog GAP, mirroring the digital
+/// [`crate::infer::graph::global_avg_pool_into`]: post-ADC codes are
+/// exact integers, so the sum runs in i64 and dequantizes through
+/// [`QParams::dequantize_i64`]. The `sum.round() as i32` cast this
+/// replaces saturated once `t * 127` overflowed i32 — the same
+/// truncation PR 1 fixed on the digital path.
+fn analog_gap(codes: &[f64], channels: usize, t: usize, dq: &QParams, pooled: &mut [f32]) {
+    debug_assert_eq!(codes.len(), channels * t, "pooled code geometry");
+    debug_assert_eq!(pooled.len(), channels);
+    for (k, p) in pooled.iter_mut().enumerate() {
+        let mut sum = 0i64;
+        for &c in &codes[k * t..(k + 1) * t] {
+            sum += c as i64;
+        }
+        *p = dq.dequantize_i64(sum) / t as f32;
     }
 }
 
@@ -220,5 +647,35 @@ mod tests {
     fn silent_detection() {
         assert!(NoiseConfig::default().silent());
         assert!(!NoiseConfig { sigma_w: 1.0, ..Default::default() }.silent());
+    }
+
+    #[test]
+    fn analog_gap_survives_huge_time_axis() {
+        // the analog twin of the digital regression in
+        // rust/tests/parallel.rs: t large enough that a sum of
+        // max-magnitude codes overflows i32 (127 * 20e6 ≈ 2.54e9 >
+        // 2^31) — the old `sum.round() as i32` saturated here
+        let t = 20_000_000usize;
+        let codes = vec![127f64; t];
+        let dq = QParams::new(1.0, 7.0, 0.0);
+        let mut pooled = [0f32; 1];
+        analog_gap(&codes, 1, t, &dq, &mut pooled);
+        let want = (127.0f64 / 7.0) as f32; // mean code 127 exactly
+        assert!((pooled[0] - want).abs() < 1e-4, "wide sum truncated: got {}", pooled[0]);
+        assert!(pooled[0] > 0.0, "i32 saturation would pin the mean at the clamp");
+        // small in-range sums agree with the plain i32 dequantize
+        let codes = [3.0f64, -2.0, 7.0, 0.0];
+        let mut pooled = [0f32; 2];
+        analog_gap(&codes, 2, 2, &dq, &mut pooled);
+        assert_eq!(pooled[0], dq.dequantize(1) / 2.0);
+        assert_eq!(pooled[1], dq.dequantize(7) / 2.0);
+    }
+
+    #[test]
+    fn weight_code_extraction_matches_layouts() {
+        // dense: codes pass through in tap-major layout
+        let dense = WeightKind::Dense { b: vec![1i8, -2, 3, 0, 5, -6] };
+        let codes = weight_codes(&dense, 3, 2);
+        assert_eq!(codes, vec![1.0, -2.0, 3.0, 0.0, 5.0, -6.0]);
     }
 }

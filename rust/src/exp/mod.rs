@@ -7,7 +7,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::analog::{CrossbarKws, NoiseConfig};
+use crate::analog::{CrossbarSim, NoiseConfig};
 use crate::config::Budget;
 use crate::coordinator::{checkpoint, fq_transform, ParamSet, Pipeline, Schedule, Stage, TeacherPolicy, Trainer, Variant};
 use crate::data::{self, Dataset};
@@ -356,7 +356,7 @@ pub fn table7_kws(ctx: &Ctx, train_first: bool) -> Result<Vec<Table7Row>> {
     let (nw, na) = (1.0, 7.0); // FQ24: ternary weights, 4-bit acts
 
     // --- clean-trained network under noise -------------------------------
-    let xbar = CrossbarKws::new(&params, nw, na, frames)?;
+    let mut xbar = CrossbarSim::from_kws_params(&params, nw, na, frames)?;
     // --- noise-aware fine-tune (σ injected via hp during fq_train) -------
     let mut trainer = Trainer::new(ctx.engine, ctx.manifest, "kws", Variant::Fq)?;
     trainer.set_params(params.clone());
@@ -374,7 +374,7 @@ pub fn table7_kws(ctx: &Ctx, train_first: bool) -> Result<Vec<Table7Row>> {
         hpv[hp::SEED] = (step as u32).wrapping_mul(2654435761) as f32;
         trainer.step(&batch, None, &hpv)?;
     }
-    let xbar_nt = CrossbarKws::new(&trainer.params, nw, na, frames)?;
+    let mut xbar_nt = CrossbarSim::from_kws_params(&trainer.params, nw, na, frames)?;
 
     let mut rows = Vec::new();
     println!("\nTable 7 (KWS column) — ternary network under analog noise");

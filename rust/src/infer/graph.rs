@@ -447,7 +447,9 @@ impl QuantStage {
 /// Higher-precision global average pooling over final-grid codes
 /// (channels, t_cur): the sum runs in i64 so an arbitrarily long time
 /// axis cannot silently truncate (an i8-code sum overflows i32 once
-/// t_cur exceeds ~2^24 — see [`QParams::dequantize_i64`]).
+/// t_cur exceeds ~2^24 — see [`QParams::dequantize_i64`]). The analog
+/// simulator's GAP ([`crate::analog::CrossbarSim`]) mirrors this wide
+/// path on its post-ADC codes, so both engines share the regression.
 pub fn global_avg_pool_into(
     codes: &[i8],
     channels: usize,

@@ -87,6 +87,20 @@
 //! worker panics) so the degradation story above is *tested*, not
 //! asserted — see `rust/tests/serving.rs`.
 //!
+//! **Noisy Monte-Carlo ensembles** ([`ModelSpec::with_noise`]): a model
+//! may declare a [`NoiseSpec`] — the analog §4.4 noise point to
+//! simulate ([`crate::analog::CrossbarSim`]) and an ensemble size N.
+//! Its backend is then wrapped in [`NoisyBackend`]: every sample runs N
+//! independent noisy replicas (each with a deterministically derived
+//! seed from the spec seed, the sample's feature bits, and the replica
+//! index — so results are independent of batch composition and worker
+//! assignment) and the replies are combined by mean logit or majority
+//! vote ([`Vote`]). The ensemble size is surfaced in
+//! [`ModelStats::ensemble`] and the N× compute cost feeds the DWFQ
+//! scheduling weight, so a noisy model is charged fairly against its
+//! digital neighbors. Each replica draw owns its own freshly seeded
+//! [`Rng`] — no shared RNG, nothing to contend on (see CONCURRENCY.md).
+//!
 //! **Streaming sessions** ([`ModelRegistry::open_session`] /
 //! [`ModelRegistry::feed`] / [`ModelRegistry::close_session`]): a model
 //! registered with [`ModelSpec::with_streaming`] additionally serves
@@ -168,6 +182,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::analog::{CrossbarSim, NoiseConfig};
 use crate::exec;
 use crate::infer::graph::ScratchPool;
 use crate::infer::pipeline::{FqKwsNet, Scratch};
@@ -179,6 +194,7 @@ use crate::obs::{
 };
 use crate::runtime::{hp, lit_f32, lit_to_vec_f32, Engine, Executable};
 use crate::stream::{StreamScratch, StreamState, Streamer};
+use crate::util::Rng;
 
 pub use batcher::{BatchPolicy, Priority};
 
@@ -497,6 +513,155 @@ impl Backend for GraphBackend {
 
     fn out_dim(&self) -> usize {
         self.graph.classes()
+    }
+}
+
+/// How a [`NoisyBackend`] ensemble combines its N replica outputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Vote {
+    /// average the N logit vectors (soft ensemble; output logits are
+    /// the mean, so downstream argmax is the ensemble-mean class)
+    MeanLogit,
+    /// each replica casts one argmax vote; the output "logits" are the
+    /// per-class vote counts, so downstream argmax is the plurality
+    /// class
+    Majority,
+}
+
+/// Declaration of a Monte-Carlo noisy ensemble for one model
+/// ([`ModelSpec::with_noise`]): which graph to simulate on the analog
+/// crossbar, at which §4.4 noise point, with how many independent
+/// replicas per request, and how to combine them.
+#[derive(Clone)]
+pub struct NoiseSpec {
+    /// the served graph, walked in f64 code-space by
+    /// [`crate::analog::CrossbarSim`]
+    pub graph: Arc<QuantGraph>,
+    /// the Table-7 operating point; a silent config disables the
+    /// ensemble (the wrapped backend serves directly)
+    pub noise: NoiseConfig,
+    /// ensemble size N (requests cost N× in DWFQ weight)
+    pub replicas: usize,
+    pub vote: Vote,
+    /// base seed; per-sample, per-replica streams are derived from it
+    /// deterministically (same features + same spec → same reply,
+    /// independent of batching or worker placement)
+    pub seed: u64,
+}
+
+/// FNV-1a over the raw feature bits: the per-sample component of the
+/// replica seed derivation, so a sample's noise draws do not depend on
+/// where in a batch (or on which worker) it lands.
+fn hash_f32_bits(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in xs {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Monte-Carlo noisy-ensemble backend ([`ModelSpec::with_noise`]):
+/// wraps any inner backend and, per sample, runs N independent
+/// [`CrossbarSim`] walks at the declared noise point, combining the
+/// replies per [`Vote`]. With one replica or a silent noise config it
+/// delegates to the wrapped backend unchanged (so a chaos wrapper
+/// around the *outer* factory still exercises faults). Each replica's
+/// RNG is freshly seeded from (spec seed, feature-bit hash, replica
+/// index) and owned by the draw — no shared RNG state, nothing for
+/// concurrent workers to contend on.
+pub struct NoisyBackend {
+    inner: Box<dyn Backend>,
+    sim: CrossbarSim,
+    spec: NoiseSpec,
+    scratch: Scratch,
+    /// one replica's logits (reused)
+    rep_logits: Vec<f32>,
+    /// the per-sample ensemble accumulator (reused)
+    acc: Vec<f32>,
+}
+
+impl NoisyBackend {
+    pub fn new(inner: Box<dyn Backend>, spec: NoiseSpec) -> Self {
+        let sim = CrossbarSim::new(Arc::clone(&spec.graph));
+        let scratch = Scratch::for_graph(&spec.graph);
+        let classes = spec.graph.classes();
+        NoisyBackend {
+            inner,
+            sim,
+            spec,
+            scratch,
+            rep_logits: vec![0.0; classes],
+            acc: vec![0.0; classes],
+        }
+    }
+
+    /// Wrap a factory so every worker replica carries its own simulator
+    /// and scratch (used by [`ModelSpec::with_noise`]).
+    pub fn factory(inner: BackendFactory, spec: NoiseSpec) -> BackendFactory {
+        Arc::new(move |wi| {
+            Box::new(NoisyBackend::new(inner(wi), spec.clone())) as Box<dyn Backend>
+        })
+    }
+
+    /// One sample's N-replica ensemble into `out`.
+    fn ensemble_one(&mut self, xs: &[f32], out: &mut [f32]) {
+        let n = self.spec.replicas;
+        let base = self.spec.seed ^ hash_f32_bits(xs);
+        self.acc.clear();
+        self.acc.resize(out.len(), 0.0);
+        for rep in 0..n {
+            let mut rng =
+                Rng::new(base ^ (rep as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            self.sim.forward_noisy_into(
+                xs,
+                self.spec.noise,
+                &mut rng,
+                &mut self.scratch,
+                &mut self.rep_logits,
+            );
+            match self.spec.vote {
+                Vote::MeanLogit => {
+                    for (a, &l) in self.acc.iter_mut().zip(self.rep_logits.iter()) {
+                        *a += l / n as f32;
+                    }
+                }
+                Vote::Majority => {
+                    self.acc[crate::analog::argmax(&self.rep_logits)] += 1.0;
+                }
+            }
+        }
+        out.copy_from_slice(&self.acc);
+    }
+}
+
+impl Backend for NoisyBackend {
+    fn infer_into(&mut self, x: &[f32], batch: usize, out: &mut [f32]) -> Result<()> {
+        if self.spec.replicas <= 1 || self.spec.noise.silent() {
+            // degenerate ensemble: the wrapped backend serves directly
+            // (and a chaos/fault wrapper outside this factory still
+            // applies either way)
+            return self.inner.infer_into(x, batch, out);
+        }
+        let per = self.sim.graph().in_numel();
+        let classes = self.sim.graph().classes();
+        anyhow::ensure!(x.len() == batch * per, "feature geometry");
+        anyhow::ensure!(out.len() == batch * classes, "logit buffer size");
+        for i in 0..batch {
+            let (xs, o) = (&x[i * per..(i + 1) * per], &mut out[i * classes..(i + 1) * classes]);
+            self.ensemble_one(xs, o);
+        }
+        Ok(())
+    }
+
+    fn sample_shape(&self) -> &[usize] {
+        self.sim.graph().in_shape()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.sim.graph().classes()
     }
 }
 
@@ -1217,6 +1382,9 @@ pub struct ModelSpec {
     /// timing exposition and measured-cost DWFQ feedback
     /// ([`ModelSpec::with_observed_graph`]); `None` = static cost only
     pub observed_graph: Option<Arc<QuantGraph>>,
+    /// Monte-Carlo ensemble size ([`ModelSpec::with_noise`]); 1 = plain
+    /// single-shot serving. Surfaced in [`ModelStats::ensemble`].
+    pub ensemble: usize,
 }
 
 impl ModelSpec {
@@ -1231,6 +1399,7 @@ impl ModelSpec {
             admission: AdmissionPolicy::default(),
             streaming: None,
             observed_graph: None,
+            ensemble: 1,
         }
     }
 
@@ -1252,6 +1421,19 @@ impl ModelSpec {
     /// graph is validated (and its state plan built) at register time.
     pub fn with_streaming(mut self, spec: StreamSpec) -> Self {
         self.streaming = Some(spec);
+        self
+    }
+
+    /// Serve this model as an N-replica Monte-Carlo noisy ensemble: the
+    /// current factory is wrapped in [`NoisyBackend::factory`] and the
+    /// declared per-sample cost is multiplied by the ensemble size (N
+    /// crossbar walks per request is N× the compute, and DWFQ should
+    /// charge it) — so call this *after* [`ModelSpec::with_cost`].
+    pub fn with_noise(mut self, spec: NoiseSpec) -> Self {
+        let n = spec.replicas.max(1) as u64;
+        self.ensemble = spec.replicas.max(1);
+        self.cost_per_sample = self.cost_per_sample.max(1) * n;
+        self.factory = NoisyBackend::factory(self.factory, spec);
         self
     }
 
@@ -1344,6 +1526,8 @@ struct ModelEntry {
     stream: Option<StreamModel>,
     /// the served graph's timers ([`ModelSpec::with_observed_graph`])
     observed_graph: Option<Arc<QuantGraph>>,
+    /// Monte-Carlo ensemble size ([`ModelSpec::with_noise`]); 1 = plain
+    ensemble: usize,
     /// the owning registry's observability plumbing, held per entry so
     /// the terminal-reply helpers ([`fail_batch`], [`expire`]) can
     /// trace from any call site
@@ -1401,6 +1585,8 @@ pub struct ModelStats {
     pub replica_budget: usize,
     /// open streaming sessions (0 for batch-only models)
     pub sessions: u64,
+    /// Monte-Carlo ensemble size ([`ModelSpec::with_noise`]); 1 = plain
+    pub ensemble: usize,
     pub latency_summary: String,
     pub p50_us: f64,
     pub p99_us: f64,
@@ -1542,6 +1728,7 @@ impl ModelRegistry {
             counters: ModelCounters::new(),
             stream,
             observed_graph: spec.observed_graph,
+            ensemble: spec.ensemble.max(1),
             obs: Arc::clone(&self.inner.obs),
         });
         models.insert(id.clone(), Arc::clone(&entry));
@@ -2054,6 +2241,7 @@ fn model_stats(e: &ModelEntry) -> ModelStats {
             + e.counters.pending[1].load(Ordering::Relaxed)) as u64,
         replica_budget: e.replica_budget.load(Ordering::Relaxed),
         sessions: e.stream.as_ref().map_or(0, |sm| sm.sessions.lock().unwrap().live as u64),
+        ensemble: e.ensemble,
         latency_summary: hist.summary(),
         p50_us: hist.percentile(50.0),
         p99_us: hist.percentile(99.0),

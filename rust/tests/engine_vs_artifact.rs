@@ -107,18 +107,29 @@ fn analog_sim_with_zero_noise_matches_engine() {
     let fq_graph = info.fq.clone().unwrap();
     let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
 
-    let xbar =
-        fqconv::analog::CrossbarKws::new(&fq_params, 1.0, 7.0, info.input_shape[1]).unwrap();
+    let mut xbar =
+        fqconv::analog::CrossbarSim::from_kws_params(&fq_params, 1.0, 7.0, info.input_shape[1])
+            .unwrap();
+    let g = std::sync::Arc::clone(xbar.graph());
     let ds = data::for_model(&info.kind, &info.input_shape, info.num_classes);
     let mut rng = Rng::new(1);
     let mut s = fqconv::infer::pipeline::Scratch::default();
+    let mut s2 = fqconv::infer::pipeline::Scratch::default();
+    let mut clean = vec![0f32; g.classes()];
+    let mut eng = vec![0f32; g.classes()];
     for id in 0..8u64 {
         let (x, _) = ds.sample(id, None);
-        let clean = xbar.forward_noisy(&x, fqconv::analog::NoiseConfig::default(), &mut rng);
-        let eng = xbar.net().forward(&x, &mut s);
-        for (a, b) in clean.iter().zip(&eng) {
-            assert!((a - b).abs() < 1e-6, "zero-noise sim must equal engine");
-        }
+        // the always-analog walk (not the silent fast path), so the f64
+        // code-space path itself is what must reduce to the engine
+        xbar.forward_analog_into(
+            &x,
+            fqconv::analog::NoiseConfig::default(),
+            &mut rng,
+            &mut s,
+            &mut clean,
+        );
+        g.forward_into(&x, &mut s2, &mut eng, 1);
+        assert_eq!(clean, eng, "zero-noise analog walk must be bit-identical to the engine");
     }
 }
 
@@ -142,8 +153,9 @@ fn noise_degrades_monotonically_on_average() {
     }
     let fq_graph = info.fq.clone().unwrap();
     let fq_params = fq_transform::qat_to_fq(info, &fq_graph, &t.params).unwrap();
-    let xbar =
-        fqconv::analog::CrossbarKws::new(&fq_params, 1.0, 7.0, info.input_shape[1]).unwrap();
+    let mut xbar =
+        fqconv::analog::CrossbarSim::from_kws_params(&fq_params, 1.0, 7.0, info.input_shape[1])
+            .unwrap();
     let acc_low = xbar.evaluate_noisy(
         ds.as_ref(),
         48,

@@ -1160,3 +1160,201 @@ fn chaos_faults_degrade_gracefully_and_keep_healthy_models_exact() {
         registry.shutdown();
     }
 }
+
+/// A small synthetic sequence graph for the noisy-ensemble tests:
+/// analog Monte-Carlo walks are f64 code-space, so debug-mode tests
+/// keep the net small (the full-size architectures run in the
+/// release-mode `table7_noise` bench).
+fn small_noise_graph() -> Arc<fqconv::infer::QuantGraph> {
+    use fqconv::infer::graph::SeqArch;
+    let arch = SynthArch::Seq(SeqArch {
+        name: "noise-small",
+        n_in: 8,
+        frames: 40,
+        embed_dim: 16,
+        classes: 6,
+        convs: vec![(16, 3, 1), (16, 3, 2), (16, 3, 4)],
+    });
+    Arc::new(synthetic_graph(&arch, 1.0, 7.0, 13).expect("synthetic graph"))
+}
+
+#[test]
+fn noisy_backend_two_run_determinism() {
+    // an ensemble reply must be a pure function of (features, spec):
+    // per-sample noise streams are derived from the spec seed + the
+    // sample's feature bits + the replica index, so batching layout and
+    // worker placement cannot change the answer. Two registries with
+    // different worker counts / batch policies must agree bit for bit.
+    use fqconv::analog::NoiseConfig;
+    use fqconv::serve::{NoiseSpec, Vote};
+    let graph = small_noise_graph();
+    let nspec = NoiseSpec {
+        graph: Arc::clone(&graph),
+        noise: NoiseConfig { sigma_w: 10.0, sigma_a: 10.0, sigma_mac: 50.0 },
+        replicas: 4,
+        vote: Vote::MeanLogit,
+        seed: 0xD1CE,
+    };
+    let mut rng = Rng::new(77);
+    let xs: Vec<Vec<f32>> = (0..5)
+        .map(|_| {
+            let mut v = vec![0f32; graph.in_numel()];
+            rng.fill_gaussian(&mut v, 0.8);
+            v
+        })
+        .collect();
+    let run = |workers: usize, max_batch: usize| -> Vec<Vec<f32>> {
+        let registry = ModelRegistry::start(workers);
+        registry
+            .register(
+                "noisy",
+                ModelSpec::new(
+                    GraphBackend::factory_sharded(&graph, workers),
+                    graph.in_numel(),
+                    BatchPolicy::new(max_batch, 400),
+                )
+                .with_cost(graph.cost_per_sample())
+                .with_noise(nspec.clone()),
+            )
+            .expect("register noisy");
+        let id = ModelId::new("noisy");
+        let rxs: Vec<_> =
+            xs.iter().map(|x| registry.submit(&id, x.clone()).expect("registered")).collect();
+        let out: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("reply").expect("served").logits)
+            .collect();
+        registry.shutdown();
+        out
+    };
+    let a = run(1, 1);
+    let b = run(2, 4);
+    assert_eq!(a, b, "ensemble replies must not depend on workers or batch layout");
+}
+
+#[test]
+fn noisy_ensemble_size_surfaces_in_stats_and_cost() {
+    use fqconv::analog::NoiseConfig;
+    use fqconv::serve::{NoiseSpec, Vote};
+    let graph = small_noise_graph();
+    let nspec = NoiseSpec {
+        graph: Arc::clone(&graph),
+        noise: NoiseConfig { sigma_w: 5.0, sigma_a: 5.0, sigma_mac: 25.0 },
+        replicas: 8,
+        vote: Vote::Majority,
+        seed: 3,
+    };
+    let base_cost = graph.cost_per_sample();
+    let spec =
+        ModelSpec::new(GraphBackend::factory(&graph), graph.in_numel(), BatchPolicy::new(2, 200))
+            .with_cost(base_cost)
+            .with_noise(nspec);
+    assert_eq!(spec.ensemble, 8);
+    assert_eq!(spec.cost_per_sample, base_cost * 8, "DWFQ must charge N x the base weight");
+    let registry = ModelRegistry::start(1);
+    registry.register("noisy", spec).expect("register noisy");
+    registry
+        .register(
+            "plain",
+            ModelSpec::new(
+                GraphBackend::factory(&graph),
+                graph.in_numel(),
+                BatchPolicy::new(2, 200),
+            ),
+        )
+        .expect("register plain");
+    // one served request so the majority-vote output shape is exercised
+    let id = ModelId::new("noisy");
+    let mut x = vec![0f32; graph.in_numel()];
+    Rng::new(4).fill_gaussian(&mut x, 0.8);
+    let resp = registry
+        .submit(&id, x)
+        .expect("registered")
+        .recv()
+        .expect("reply")
+        .expect("served");
+    let votes: f32 = resp.logits.iter().sum();
+    assert_eq!(votes, 8.0, "majority logits are vote counts over 8 replicas");
+    let stats = registry.stats();
+    let noisy = stats.models.iter().find(|m| m.id.as_str() == "noisy").unwrap();
+    let plain = stats.models.iter().find(|m| m.id.as_str() == "plain").unwrap();
+    assert_eq!(noisy.ensemble, 8, "ensemble size must surface in per-model stats");
+    assert_eq!(plain.ensemble, 1, "plain models report a degenerate ensemble of 1");
+    registry.shutdown();
+}
+
+#[test]
+fn noisy_ensemble_exactly_one_terminal_reply_under_chaos() {
+    // the acceptance pin: an N=8 Monte-Carlo ensemble behind the chaos
+    // harness — chaos wraps *outside* the noisy factory (ModelSpec
+    // exposes the composed factory), so injected faults hit the
+    // ensemble path itself. Every accepted request must reach exactly
+    // one terminal reply: served or typed BackendFailed, never a hang
+    // or a disconnect.
+    use fqconv::analog::NoiseConfig;
+    use fqconv::serve::chaos::{chaos_factory, ChaosConfig};
+    use fqconv::serve::{NoiseSpec, Vote};
+    let graph = small_noise_graph();
+    let nspec = NoiseSpec {
+        graph: Arc::clone(&graph),
+        noise: NoiseConfig { sigma_w: 10.0, sigma_a: 10.0, sigma_mac: 50.0 },
+        replicas: 8,
+        vote: Vote::MeanLogit,
+        seed: 0xE5EB,
+    };
+    let mut rng = Rng::new(99);
+    let n = 8usize;
+    let xs: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0f32; graph.in_numel()];
+            rng.fill_gaussian(&mut v, 0.8);
+            v
+        })
+        .collect();
+    for workers in [1usize, 2] {
+        let mut spec = ModelSpec::new(
+            GraphBackend::factory_sharded(&graph, workers),
+            graph.in_numel(),
+            BatchPolicy::new(2, 200),
+        )
+        .with_cost(graph.cost_per_sample())
+        .with_noise(nspec.clone());
+        let cfg = ChaosConfig::new(0xBAD5EED + workers as u64)
+            .with_failures(300)
+            .with_stalls(300, Duration::from_millis(1));
+        spec.factory = chaos_factory(Arc::clone(&spec.factory), cfg);
+        let registry = ModelRegistry::start(workers);
+        registry.register("noisy", spec).expect("register noisy");
+        let id = ModelId::new("noisy");
+        let rxs: Vec<_> = xs
+            .iter()
+            .map(|x| {
+                registry.submit_with(&id, x.clone(), Priority::Batch, None).expect("registered")
+            })
+            .collect();
+        let (mut served, mut failed) = (0usize, 0usize);
+        for rx in rxs {
+            let reply = rx.recv().unwrap_or_else(|_| {
+                panic!("workers={workers}: accepted ensemble request silently dropped")
+            });
+            match reply {
+                Ok(resp) => {
+                    assert_eq!(resp.logits.len(), graph.classes());
+                    served += 1;
+                }
+                Err(ServeError::BackendFailed { .. }) => failed += 1,
+                Err(e) => panic!("workers={workers}: unexpected typed error: {e}"),
+            }
+        }
+        assert_eq!(
+            served + failed,
+            n,
+            "workers={workers}: every accepted ensemble request needs one terminal reply"
+        );
+        let stats = registry.stats();
+        let m = stats.models.iter().find(|m| m.id.as_str() == "noisy").unwrap();
+        assert_eq!(m.pending, 0, "workers={workers}: reservations must drain");
+        assert_eq!(m.ensemble, 8);
+        registry.shutdown();
+    }
+}

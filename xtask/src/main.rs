@@ -54,6 +54,32 @@ const HOT_PATH_ALLOW: &[(&str, &[&str])] = &[
     ("obs/trace.rs", &[]),
 ];
 
+/// Rule-4 carve-out: directories (relative to rust/src) where float
+/// arithmetic *is* the model, never an accident — the analog crossbar
+/// simulator computes in f64 code-space by design (noise draws on
+/// continuous conductances/charges), so the hot-path-float rule must
+/// never be pointed at it.
+const HOT_PATH_FLOAT_EXEMPT: &[&str] = &["analog/"];
+
+fn hot_float_exempt(rel: &str) -> bool {
+    HOT_PATH_FLOAT_EXEMPT.iter().any(|d| rel.starts_with(d))
+}
+
+/// Rule 4 behind the exemption guard: an exempt path yields no findings
+/// regardless of allowlist, everything else runs [`lint_hot_floats`].
+fn lint_hot_floats_guarded(
+    file: &str,
+    rel: &str,
+    orig: &str,
+    clean: &str,
+    allow: &[&str],
+) -> Vec<Violation> {
+    if hot_float_exempt(rel) {
+        return Vec::new();
+    }
+    lint_hot_floats(file, orig, clean, allow)
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
@@ -569,7 +595,7 @@ fn lint_tree() -> ExitCode {
         violations.extend(lint_raw_sync(label, clean));
         for (hot, allow) in HOT_PATH_ALLOW {
             if label.strip_prefix("rust/src/") == Some(*hot) {
-                violations.extend(lint_hot_floats(label, orig, clean, allow));
+                violations.extend(lint_hot_floats_guarded(label, hot, orig, clean, allow));
             }
         }
     }
@@ -695,6 +721,32 @@ fn self_test() -> ExitCode {
     let allow = ["percentile", "mean", "summary"];
     let got = lint_hot_floats("seed.rs", hist_read, &strip(hist_read), &allow).len();
     check("hot-float/obs-hist-reader-allowed", got, 0);
+    // the analog crossbar simulator is explicitly exempt from rule 4 —
+    // f64 code-space is the point of that module — and must never be
+    // pinned by an allowlist entry either
+    check("hot-float/analog-exempt", usize::from(hot_float_exempt("analog/mod.rs")), 1);
+    let pinned = HOT_PATH_ALLOW.iter().any(|(f, _)| hot_float_exempt(f));
+    check("hot-float/analog-not-allowlisted", usize::from(!pinned), 1);
+    let analog_kernel = "fn adc_bin(acc: i64) -> i32 {\n    let y = acc as f64 * 0.5;\n    y as i32\n}\n";
+    let got = lint_hot_floats_guarded(
+        "rust/src/analog/mod.rs",
+        "analog/mod.rs",
+        analog_kernel,
+        &strip(analog_kernel),
+        &[],
+    )
+    .len();
+    check("hot-float/analog-guarded", got, 0);
+    // the same float-heavy kernel through a non-exempt path still bites
+    let got = lint_hot_floats_guarded(
+        "rust/src/stream/state.rs",
+        "stream/state.rs",
+        analog_kernel,
+        &strip(analog_kernel),
+        &[],
+    )
+    .len();
+    check("hot-float/non-exempt-still-bites", got, 2);
 
     if failed == 0 {
         println!("xtask lint --self-test: all rules bite");
